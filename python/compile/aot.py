@@ -1,0 +1,73 @@
+"""AOT lowering: jax -> HLO text artifacts for the rust PJRT runtime.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (invoked by ``make artifacts``):
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing
+argument shapes/dtypes so the rust runtime (runtime/manifest.rs) can select
+and pad without re-deriving shape rules.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import variants
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function's StableHLO to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, arg_specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def build(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": []}
+    for name, fn, arg_specs, meta in variants():
+        text = lower_variant(fn, arg_specs)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": path.name,
+                "args": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)}
+                    for s in arg_specs
+                ],
+                "meta": meta,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"  {name}: {len(text)} chars")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build(pathlib.Path(args.out_dir))
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

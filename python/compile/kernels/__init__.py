@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .ewald import KTABLE, ewald
+from .gravity import INTERACTIONS, PARTS_PER_BUCKET, gravity, gravity_gather
+from .md_force import PAD_POS, PARTS_PER_PATCH, md_force
+
+__all__ = [
+    "KTABLE",
+    "INTERACTIONS",
+    "PARTS_PER_BUCKET",
+    "PARTS_PER_PATCH",
+    "PAD_POS",
+    "ewald",
+    "gravity",
+    "gravity_gather",
+    "md_force",
+]

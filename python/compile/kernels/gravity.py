@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernels for the ChaNGa-style bucket gravity force.
+
+The paper (§4.1) computes gravitational forces on *buckets* of particles:
+every particle in a bucket interacts with the same list of tree nodes and
+particles (the bucket's interaction list). The CUDA scheme (Jetley et al.)
+uses a 16x8 thread block staging bucket particles and 8 interactions at a
+time through shared memory.
+
+TPU-style rethink (DESIGN.md section "Hardware adaptation"): one Pallas grid
+step per bucket; the (P particles x I interactions) panel is the VMEM tile;
+the per-thread MAC loop becomes a lane-parallel broadcast/rsqrt/reduce
+expression. Two variants:
+
+- ``gravity``         : contiguous particle layout (B, P, 4) -- the paper's
+                        "redundant transfer, fully coalesced" configuration.
+- ``gravity_gather``  : particles fetched through an index array from a
+                        device-resident pool -- the "data reuse" path whose
+                        access locality depends on whether the indices are
+                        sorted (paper section 3.2, Fig 1 c/d).
+
+Layouts:
+  parts  (B, P, 4)  rows are [x, y, z, mass]; padding rows have mass = 0.
+  inters (B, I, 4)  interaction entries [x, y, z, mass]; padding mass = 0.
+  pool   (S, 4)     device-resident particle pool (gather variant).
+  idx    (B, P)     int32 indices into the pool (gather variant).
+  eps2   (1,)       Plummer softening squared (> 0 keeps self-terms finite).
+  out    (B, P, 4)  [ax, ay, az, potential].
+
+All kernels are lowered with interpret=True: real-TPU Pallas emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PARTS_PER_BUCKET = 16  # P: matches the paper's 16-row CUDA block
+INTERACTIONS = 128     # I: interaction-list slots per bucket (padded)
+
+
+def _bucket_force(pos, mass_src, src, eps2):
+    """Softened monopole gravity for one (P, I) panel.
+
+    pos      (P, 3) bucket particle positions
+    mass_src (I,)   interaction masses (0 = padding)
+    src      (I, 3) interaction positions
+    returns  (P, 4) [ax, ay, az, potential]
+    """
+    d = src[None, :, :] - pos[:, None, :]          # (P, I, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps2            # (P, I)
+    inv = jax.lax.rsqrt(r2)
+    inv3 = inv * inv * inv
+    w = mass_src[None, :] * inv3                   # (P, I)
+    acc = jnp.sum(w[:, :, None] * d, axis=1)       # (P, 3)
+    pot = -jnp.sum(mass_src[None, :] * inv, axis=1)
+    return jnp.concatenate([acc, pot[:, None]], axis=-1)
+
+
+def _gravity_kernel(parts_ref, inters_ref, eps2_ref, out_ref):
+    parts = parts_ref[...][0]       # (P, 4)
+    inters = inters_ref[...][0]     # (I, 4)
+    eps2 = eps2_ref[0]
+    out = _bucket_force(parts[:, :3], inters[:, 3], inters[:, :3], eps2)
+    out_ref[...] = out[None]
+
+
+def _gravity_gather_kernel(pool_ref, idx_ref, inters_ref, eps2_ref, out_ref):
+    pool = pool_ref[...]            # (S, 4)
+    idx = idx_ref[...][0]           # (P,)
+    inters = inters_ref[...][0]     # (I, 4)
+    eps2 = eps2_ref[0]
+    parts = pool[idx]               # gather: locality depends on idx order
+    out = _bucket_force(parts[:, :3], inters[:, 3], inters[:, :3], eps2)
+    out_ref[...] = out[None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gravity(parts, inters, eps2):
+    """Combined bucket-force launch: one grid step per bucket.
+
+    parts (B, P, 4), inters (B, I, 4), eps2 (1,) -> (B, P, 4)
+    """
+    b, p, _ = parts.shape
+    _, i, _ = inters.shape
+    return pl.pallas_call(
+        _gravity_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, p, 4), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, i, 4), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, p, 4), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p, 4), jnp.float32),
+        interpret=True,
+    )(parts, inters, eps2)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gravity_gather(pool, idx, inters, eps2):
+    """Reuse-path bucket force: particles gathered from the device pool.
+
+    pool (S, 4), idx (B, P) int32, inters (B, I, 4), eps2 (1,) -> (B, P, 4)
+
+    Layer-2 structure (EXPERIMENTS.md Perf): the HBM gather `pool[idx]`
+    happens *outside* the Pallas grid as a single XLA gather -- streaming
+    the whole pool through every grid step's VMEM block was the naive port
+    and cost ~1.9x on the CPU executor. The access-locality cost of the
+    gather itself (sorted vs random idx) is what the Fig 3 experiment
+    measures; it is preserved.
+    """
+    b, p = idx.shape
+    _, i, _ = inters.shape
+    parts = pool[idx]  # (B, P, 4) single gather from the device pool
+    return pl.pallas_call(
+        _gravity_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, p, 4), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, i, 4), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, p, 4), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p, 4), jnp.float32),
+        interpret=True,
+    )(parts, inters, eps2)

@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel for the 2D molecular-dynamics ``interact`` method.
+
+Paper section 4.2: the MD app partitions 2D space into patches; a *compute*
+object calculates forces between one pair of patches via the ``interact``
+entry method, implemented as a CUDA kernel in G-Charm. Here it is a Pallas
+kernel: one grid step per patch pair in the combined work request, with the
+(N x N) pair panel as the VMEM tile.
+
+Lennard-Jones with cutoff:
+  r2 < rc2:  F = 24 eps (2 (sig2/r2)^6 - (sig2/r2)^3) / r2 * d
+Self-pairs (r2 ~ 0, when a patch interacts with itself) and padding
+particles (parked at HUGE coordinates, so r2 > rc2) are masked out.
+
+Layouts:
+  pa, pb (C, N, 2)  particle positions of the two patches per pair.
+  params (3,)       [rc2, sig2, eps].
+  out    (C, N, 2)  forces on pa particles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PARTS_PER_PATCH = 64  # N: particle slots per patch (padded)
+PAD_POS = 1.0e8       # padding particles parked far outside any cutoff
+_R2_MIN = 1e-9        # masks self-pairs when pa is pb
+
+
+def _lj_panel(pa, pb, rc2, sig2, eps):
+    """pa (N,2), pb (M,2) -> forces on pa (N,2)."""
+    d = pa[:, None, :] - pb[None, :, :]            # (N, M, 2)
+    r2 = jnp.sum(d * d, axis=-1)                   # (N, M)
+    mask = (r2 < rc2) & (r2 > _R2_MIN)
+    r2s = jnp.where(mask, r2, 1.0)
+    s2 = sig2 / r2s
+    s6 = s2 * s2 * s2
+    f = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2s
+    f = jnp.where(mask, f, 0.0)
+    return jnp.sum(f[:, :, None] * d, axis=1)      # (N, 2)
+
+
+def _md_kernel(pa_ref, pb_ref, params_ref, out_ref):
+    pa = pa_ref[...][0]            # (N, 2)
+    pb = pb_ref[...][0]            # (N, 2)
+    rc2 = params_ref[0]
+    sig2 = params_ref[1]
+    eps = params_ref[2]
+    out_ref[...] = _lj_panel(pa, pb, rc2, sig2, eps)[None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def md_force(pa, pb, params):
+    """Combined patch-pair force launch: one grid step per pair.
+
+    pa (C, N, 2), pb (C, N, 2), params (3,) -> (C, N, 2)
+    """
+    c, n, _ = pa.shape
+    return pl.pallas_call(
+        _md_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, n, 2), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, n, 2), lambda g: (g, 0, 0)),
+            pl.BlockSpec((3,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n, 2), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, n, 2), jnp.float32),
+        interpret=True,
+    )(pa, pb, params)

@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel.
+
+Independent implementations (no shared helpers with the kernels): pytest
+and hypothesis compare ``kernels.*`` against these with assert_allclose.
+These are also the Layer-2 reference used by the rust integration tests'
+golden values.
+"""
+
+import jax.numpy as jnp
+
+
+def gravity_ref(parts, inters, eps2):
+    """parts (B,P,4), inters (B,I,4), eps2 (1,) -> (B,P,4)."""
+    pos = parts[:, :, None, :3]                     # (B, P, 1, 3)
+    src = inters[:, None, :, :3]                    # (B, 1, I, 3)
+    m = inters[:, None, :, 3]                       # (B, 1, I)
+    d = src - pos                                   # (B, P, I, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps2[0]
+    inv = 1.0 / jnp.sqrt(r2)
+    w = m * inv ** 3                                # (B, P, I)
+    acc = jnp.sum(w[..., None] * d, axis=2)         # (B, P, 3)
+    pot = -jnp.sum(m * inv, axis=2)                 # (B, P)
+    return jnp.concatenate([acc, pot[..., None]], axis=-1)
+
+
+def gravity_gather_ref(pool, idx, inters, eps2):
+    """pool (S,4), idx (B,P) i32, inters (B,I,4), eps2 (1,) -> (B,P,4)."""
+    parts = pool[idx]                               # (B, P, 4)
+    return gravity_ref(parts, inters, eps2)
+
+
+def ewald_ref(parts, ktab):
+    """parts (B,P,4), ktab (K,4) -> (B,P,4)."""
+    pos = parts[:, :, :3]                           # (B, P, 3)
+    mass = parts[:, :, 3]                           # (B, P)
+    kvec = ktab[:, :3]                              # (K, 3)
+    coef = ktab[:, 3]                               # (K,)
+    phase = jnp.einsum("bpd,kd->bpk", pos, kvec)    # (B, P, K)
+    force = mass[..., None] * jnp.einsum(
+        "bpk,kd->bpd", jnp.sin(phase) * coef, kvec
+    )
+    pot = mass * jnp.sum(jnp.cos(phase) * coef, axis=-1)
+    return jnp.concatenate([force, pot[..., None]], axis=-1)
+
+
+def md_force_ref(pa, pb, params):
+    """pa (C,N,2), pb (C,N,2), params (3,) -> (C,N,2)."""
+    rc2, sig2, eps = params[0], params[1], params[2]
+    d = pa[:, :, None, :] - pb[:, None, :, :]       # (C, N, N, 2)
+    r2 = jnp.sum(d * d, axis=-1)
+    mask = (r2 < rc2) & (r2 > 1e-9)
+    r2s = jnp.where(mask, r2, 1.0)
+    s6 = (sig2 / r2s) ** 3
+    f = jnp.where(mask, 24.0 * eps * (2.0 * s6 * s6 - s6) / r2s, 0.0)
+    return jnp.sum(f[..., None] * d, axis=2)

@@ -1,0 +1,112 @@
+"""Layer-2 JAX compute graphs and the AOT variant registry.
+
+Composes the Layer-1 Pallas kernels into the jitted entry points that
+``aot.py`` lowers to HLO text. Combined work-request sizes vary at runtime,
+but AOT artifacts have static shapes, so each entry point is lowered at a
+ladder of batch sizes (powers of two); the rust runtime picks the smallest
+variant that fits and pads (see rust/src/runtime/manifest.rs).
+
+Entry points (shapes per DESIGN.md section 3):
+  gravity_B{b}            parts (b,P,4), inters (b,I,4), eps2 (1,)
+  gravity_gather_B{b}_S{s} pool (s,4), idx (b,P) i32, inters (b,I,4), eps2 (1,)
+  ewald_B{b}              parts (b,P,4), ktab (K,4)
+  md_force_C{c}           pa (c,N,2), pb (c,N,2), params (3,)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    INTERACTIONS,
+    KTABLE,
+    PARTS_PER_BUCKET,
+    PARTS_PER_PATCH,
+    ewald,
+    gravity,
+    gravity_gather,
+    md_force,
+)
+
+# Batch ladders. The combiner's maxSize for the force kernel is 104 and for
+# Ewald 65 (paper section 4.3), so the ladders cover up to 128 buckets.
+GRAVITY_BATCHES = (8, 16, 32, 64, 128)
+GATHER_BATCHES = (16, 64, 128)
+POOL_SIZES = (2048, 16384)
+EWALD_BATCHES = (16, 64, 128)
+MD_BATCHES = (4, 16, 64)
+
+P = PARTS_PER_BUCKET
+I = INTERACTIONS
+K = KTABLE
+N = PARTS_PER_PATCH
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def gravity_fn(parts, inters, eps2):
+    """L2 graph: combined bucket gravity. Thin today; the seam where a
+    multipole expansion or a bwd pass would compose with the kernel."""
+    return (gravity(parts, inters, eps2),)
+
+
+def gravity_gather_fn(pool, idx, inters, eps2):
+    """L2 graph: reuse-path gravity (gather from the device pool)."""
+    return (gravity_gather(pool, idx, inters, eps2),)
+
+
+def ewald_fn(parts, ktab):
+    """L2 graph: combined Ewald k-space correction."""
+    return (ewald(parts, ktab),)
+
+
+def md_force_fn(pa, pb, params):
+    """L2 graph: combined patch-pair LJ forces."""
+    return (md_force(pa, pb, params),)
+
+
+def variants():
+    """Yield (name, fn, arg_specs, meta) for every AOT artifact.
+
+    meta is embedded in artifacts/manifest.json so the rust runtime can
+    select variants without re-deriving shape rules.
+    """
+    for b in GRAVITY_BATCHES:
+        yield (
+            f"gravity_B{b}",
+            gravity_fn,
+            (_s((b, P, 4)), _s((b, I, 4)), _s((1,))),
+            {"kernel": "gravity", "batch": b, "parts": P, "inters": I},
+        )
+    for b in GATHER_BATCHES:
+        for s in POOL_SIZES:
+            yield (
+                f"gravity_gather_B{b}_S{s}",
+                gravity_gather_fn,
+                (_s((s, 4)), _s((b, P), I32), _s((b, I, 4)), _s((1,))),
+                {
+                    "kernel": "gravity_gather",
+                    "batch": b,
+                    "pool": s,
+                    "parts": P,
+                    "inters": I,
+                },
+            )
+    for b in EWALD_BATCHES:
+        yield (
+            f"ewald_B{b}",
+            ewald_fn,
+            (_s((b, P, 4)), _s((K, 4))),
+            {"kernel": "ewald", "batch": b, "parts": P, "ktable": K},
+        )
+    for c in MD_BATCHES:
+        yield (
+            f"md_force_C{c}",
+            md_force_fn,
+            (_s((c, N, 2)), _s((c, N, 2)), _s((3,))),
+            {"kernel": "md_force", "batch": c, "parts": N},
+        )

@@ -1,0 +1,75 @@
+"""AOT pipeline: lowering, manifest integrity, variant registry."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_variant_names_unique():
+    names = [name for name, *_ in model.variants()]
+    assert len(names) == len(set(names))
+
+
+def test_variant_count():
+    entries = list(model.variants())
+    expected = (
+        len(model.GRAVITY_BATCHES)
+        + len(model.GATHER_BATCHES) * len(model.POOL_SIZES)
+        + len(model.EWALD_BATCHES)
+        + len(model.MD_BATCHES)
+    )
+    assert len(entries) == expected
+
+
+def test_lower_one_variant_produces_hlo_text():
+    name, fn, arg_specs, meta = next(model.variants())
+    text = aot.lower_variant(fn, arg_specs)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_build_writes_manifest(tmp_path):
+    # Build only the cheapest variants by monkeypatching the registry.
+    small = [v for v in model.variants()][:2]
+
+    import compile.aot as aot_mod
+
+    orig = aot_mod.variants
+    aot_mod.variants = lambda: iter(small)
+    try:
+        manifest = aot_mod.build(tmp_path)
+    finally:
+        aot_mod.variants = orig
+
+    assert (tmp_path / "manifest.json").exists()
+    loaded = json.loads((tmp_path / "manifest.json").read_text())
+    assert loaded["format"] == "hlo-text"
+    assert len(loaded["entries"]) == 2
+    for e in loaded["entries"]:
+        assert (tmp_path / e["file"]).exists()
+        assert e["sha256"]
+        assert all("shape" in a and "dtype" in a for a in e["args"])
+
+
+def test_model_entry_points_execute():
+    """The jitted L2 graphs run and return 1-tuples (return_tuple contract)."""
+    rng = np.random.default_rng(0)
+    parts = jnp.asarray(rng.uniform(-1, 1, (8, 16, 4)), jnp.float32)
+    inters = jnp.asarray(rng.uniform(-1, 1, (8, 128, 4)), jnp.float32)
+    eps2 = jnp.array([1e-2], jnp.float32)
+    out = model.gravity_fn(parts, inters, eps2)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (8, 16, 4)
+
+    ktab = jnp.asarray(rng.uniform(-1, 1, (64, 4)), jnp.float32)
+    out = model.ewald_fn(parts, ktab)
+    assert out[0].shape == (8, 16, 4)
+
+    pa = jnp.asarray(rng.uniform(0, 4, (4, 64, 2)), jnp.float32)
+    params = jnp.array([1.0, 0.04, 1.0], jnp.float32)
+    out = model.md_force_fn(pa, pa, params)
+    assert out[0].shape == (4, 64, 2)

@@ -1,0 +1,69 @@
+"""Pallas Ewald kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ewald
+from compile.kernels.ref import ewald_ref
+
+
+def _rand(rng, b, p, k):
+    pos = rng.uniform(-1.0, 1.0, size=(b, p, 3))
+    mass = rng.uniform(0.1, 2.0, size=(b, p, 1))
+    parts = jnp.asarray(np.concatenate([pos, mass], -1), jnp.float32)
+    kvec = rng.normal(0.0, 2.0, size=(k, 3))
+    coef = rng.uniform(0.0, 1.0, size=(k, 1))
+    ktab = jnp.asarray(np.concatenate([kvec, coef], -1), jnp.float32)
+    return parts, ktab
+
+
+def test_ewald_matches_ref():
+    rng = np.random.default_rng(0)
+    parts, ktab = _rand(rng, 8, 16, 64)
+    got = ewald(parts, ktab)
+    want = ewald_ref(parts, ktab)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_ewald_zero_coef_is_inert():
+    rng = np.random.default_rng(1)
+    parts, ktab = _rand(rng, 4, 16, 64)
+    zeroed = ktab.at[:, 3].set(0.0)
+    out = np.asarray(ewald(parts, zeroed))
+    assert_allclose(out, np.zeros_like(out), atol=1e-7)
+
+
+def test_ewald_zero_mass_particle_feels_nothing():
+    rng = np.random.default_rng(2)
+    parts, ktab = _rand(rng, 2, 16, 64)
+    parts = parts.at[:, :, 3].set(0.0)
+    out = np.asarray(ewald(parts, ktab))
+    assert_allclose(out, np.zeros_like(out), atol=1e-7)
+
+
+def test_ewald_particle_at_origin_pure_cos():
+    # at r = 0: sin term vanishes, potential = mass * sum(coef)
+    rng = np.random.default_rng(3)
+    _, ktab = _rand(rng, 1, 16, 64)
+    parts = jnp.zeros((1, 16, 4), jnp.float32).at[0, 0, 3].set(2.0)
+    out = np.asarray(ewald(parts, ktab))
+    assert_allclose(out[0, 0, :3], np.zeros(3), atol=1e-5)
+    assert_allclose(out[0, 0, 3], 2.0 * float(jnp.sum(ktab[:, 3])), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    p=st.sampled_from([4, 16]),
+    k=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ewald_hypothesis(b, p, k, seed):
+    rng = np.random.default_rng(seed)
+    parts, ktab = _rand(rng, b, p, k)
+    got = ewald(parts, ktab)
+    want = ewald_ref(parts, ktab)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,145 @@
+"""Pallas gravity kernels vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import gravity, gravity_gather
+from compile.kernels.ref import gravity_gather_ref, gravity_ref
+
+EPS2 = jnp.array([1e-2], dtype=jnp.float32)
+
+
+def _rand_parts(rng, b, p):
+    pos = rng.uniform(-1.0, 1.0, size=(b, p, 3))
+    mass = rng.uniform(0.1, 2.0, size=(b, p, 1))
+    return jnp.asarray(np.concatenate([pos, mass], axis=-1), jnp.float32)
+
+
+def _rand_inters(rng, b, i):
+    return _rand_parts(rng, b, i)
+
+
+def test_gravity_matches_ref():
+    rng = np.random.default_rng(0)
+    parts = _rand_parts(rng, 8, 16)
+    inters = _rand_inters(rng, 8, 128)
+    got = gravity(parts, inters, EPS2)
+    want = gravity_ref(parts, inters, EPS2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_gravity_zero_mass_interactions_are_inert():
+    rng = np.random.default_rng(1)
+    parts = _rand_parts(rng, 4, 16)
+    inters = _rand_inters(rng, 4, 128)
+    # zero out the mass of half the interaction slots (padding convention)
+    padded = inters.at[:, 64:, 3].set(0.0)
+    trimmed = gravity_ref(parts, padded[:, :64], EPS2)
+    got = gravity(parts, padded, EPS2)
+    assert_allclose(np.asarray(got), np.asarray(trimmed), rtol=2e-4, atol=2e-4)
+
+
+def test_gravity_attracts_toward_mass():
+    # single particle at origin, single far mass on +x: acceleration is +x
+    parts = jnp.zeros((1, 16, 4), jnp.float32).at[0, 0, 3].set(1.0)
+    inters = jnp.zeros((1, 128, 4), jnp.float32)
+    inters = inters.at[0, 0].set(jnp.array([2.0, 0.0, 0.0, 5.0]))
+    out = np.asarray(gravity(parts, inters, EPS2))
+    assert out[0, 0, 0] > 0.0
+    assert abs(out[0, 0, 1]) < 1e-6 and abs(out[0, 0, 2]) < 1e-6
+    assert out[0, 0, 3] < 0.0  # potential is negative
+
+
+def test_gravity_newton_pair_magnitude():
+    # two unit masses at distance r: |a| ~ 1/(r^2 + eps2)^{3/2} * r
+    r = 0.5
+    parts = jnp.zeros((1, 16, 4), jnp.float32).at[0, 0, 3].set(1.0)
+    inters = jnp.zeros((1, 128, 4), jnp.float32)
+    inters = inters.at[0, 0].set(jnp.array([r, 0.0, 0.0, 1.0]))
+    out = np.asarray(gravity(parts, inters, EPS2))
+    expect = r / (r * r + float(EPS2[0])) ** 1.5
+    assert_allclose(out[0, 0, 0], expect, rtol=1e-4)
+
+
+def test_gravity_gather_matches_ref():
+    rng = np.random.default_rng(2)
+    pool = jnp.asarray(
+        np.concatenate(
+            [
+                rng.uniform(-1, 1, size=(256, 3)),
+                rng.uniform(0.1, 2.0, size=(256, 1)),
+            ],
+            axis=-1,
+        ),
+        jnp.float32,
+    )
+    idx = jnp.asarray(rng.integers(0, 256, size=(8, 16)), jnp.int32)
+    inters = _rand_inters(rng, 8, 128)
+    got = gravity_gather(pool, idx, inters, EPS2)
+    want = gravity_gather_ref(pool, idx, inters, EPS2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_gather_equals_contiguous_when_identity_indexed():
+    """gather(pool, identity) == gravity(pool reshaped): the two code paths
+    compute the same physics -- the paper's Fig 3 compares their *speed*."""
+    rng = np.random.default_rng(3)
+    parts = _rand_parts(rng, 4, 16)
+    inters = _rand_inters(rng, 4, 128)
+    pool = parts.reshape(-1, 4)
+    idx = jnp.arange(64, dtype=jnp.int32).reshape(4, 16)
+    a = gravity(parts, inters, EPS2)
+    b = gravity_gather(pool, idx, inters, EPS2)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_gather_invariant_under_index_permutation():
+    """Sorting the access order (the paper's coalescing strategy) must not
+    change the physics, only the locality: permuting rows of idx together
+    with output rows is a no-op."""
+    rng = np.random.default_rng(4)
+    pool = jnp.asarray(rng.uniform(-1, 1, size=(128, 4)), jnp.float32)
+    idx = jnp.asarray(rng.permutation(128)[:16].reshape(1, 16), jnp.int32)
+    inters = _rand_inters(rng, 1, 128)
+    perm = np.argsort(np.asarray(idx[0]))
+    sorted_idx = idx[:, perm]
+    a = np.asarray(gravity_gather(pool, idx, inters, EPS2))
+    b = np.asarray(gravity_gather(pool, sorted_idx, inters, EPS2))
+    assert_allclose(a[0, perm], b[0], rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    p=st.sampled_from([4, 8, 16]),
+    i=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gravity_hypothesis_shapes(b, p, i, seed):
+    rng = np.random.default_rng(seed)
+    parts = _rand_parts(rng, b, p)
+    inters = _rand_inters(rng, b, i)
+    got = gravity(parts, inters, EPS2)
+    want = gravity_ref(parts, inters, EPS2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 256, 1024]),
+    b=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_hypothesis_pools(s, b, seed):
+    rng = np.random.default_rng(seed)
+    pool = jnp.asarray(rng.uniform(-1, 1, size=(s, 4)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, s, size=(b, 16)), jnp.int32)
+    inters = _rand_inters(rng, b, 32)
+    got = gravity_gather(pool, idx, inters, EPS2)
+    want = gravity_gather_ref(pool, idx, inters, EPS2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,104 @@
+"""Pallas MD force kernel vs the pure-jnp oracle, plus physics sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import PAD_POS, md_force
+from compile.kernels.ref import md_force_ref
+
+PARAMS = jnp.array([1.0, 0.04, 1.0], jnp.float32)  # rc2, sig2, eps
+
+
+def _rand_patch(rng, c, n, lo=0.0, hi=4.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=(c, n, 2)), jnp.float32)
+
+
+def test_md_matches_ref():
+    rng = np.random.default_rng(0)
+    pa = _rand_patch(rng, 4, 64)
+    pb = _rand_patch(rng, 4, 64)
+    got = md_force(pa, pb, PARAMS)
+    want = md_force_ref(pa, pb, PARAMS)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_md_padding_particles_are_inert():
+    rng = np.random.default_rng(1)
+    pa = _rand_patch(rng, 2, 64)
+    pb = _rand_patch(rng, 2, 64)
+    # park the second half of pb at PAD_POS: must not change forces on pa
+    padded = pb.at[:, 32:, :].set(PAD_POS)
+    trimmed = md_force_ref(pa, pb[:, :32], PARAMS)
+    got = md_force(pa, padded, PARAMS)
+    assert_allclose(np.asarray(got), np.asarray(trimmed), rtol=2e-4, atol=2e-4)
+
+
+def test_md_self_patch_no_self_force():
+    """Patch interacting with itself: diagonal (r=0) pairs are masked."""
+    rng = np.random.default_rng(2)
+    pa = _rand_patch(rng, 1, 64)
+    out = np.asarray(md_force(pa, pa, PARAMS))
+    assert np.all(np.isfinite(out))
+
+
+def test_md_newton_third_law():
+    """Self-patch LJ forces sum to (near) zero -- momentum conservation.
+
+    Particles on a jittered grid (min separation ~ sigma) so magnitudes stay
+    O(1-100) and f32 pairwise cancellation is visible above rounding noise.
+    """
+    rng = np.random.default_rng(3)
+    gx, gy = np.meshgrid(np.arange(8) * 0.25, np.arange(8) * 0.25)
+    grid = np.stack([gx.ravel(), gy.ravel()], axis=-1)
+    grid += rng.uniform(-0.02, 0.02, size=grid.shape)
+    pa = jnp.asarray(grid[None], jnp.float32)
+    out = np.asarray(md_force(pa, pa, PARAMS))
+    scale = np.abs(out).max()
+    assert_allclose(out.sum(axis=(0, 1)) / scale, np.zeros(2), atol=1e-3)
+
+
+def test_md_repulsive_at_short_range():
+    # two particles closer than sigma: force on a points away from b
+    pa = jnp.zeros((1, 64, 2), jnp.float32) + PAD_POS
+    pb = jnp.zeros((1, 64, 2), jnp.float32) + PAD_POS
+    pa = pa.at[0, 0].set(jnp.array([0.0, 0.0]))
+    pb = pb.at[0, 0].set(jnp.array([0.1, 0.0]))
+    out = np.asarray(md_force(pa, pb, PARAMS))
+    assert out[0, 0, 0] < 0.0  # pushed in -x, away from the neighbor
+
+
+def test_md_attractive_in_well():
+    # separation between sigma (0.2) and cutoff: attraction
+    pa = jnp.zeros((1, 64, 2), jnp.float32) + PAD_POS
+    pb = jnp.zeros((1, 64, 2), jnp.float32) + PAD_POS
+    pa = pa.at[0, 0].set(jnp.array([0.0, 0.0]))
+    pb = pb.at[0, 0].set(jnp.array([0.4, 0.0]))
+    out = np.asarray(md_force(pa, pb, PARAMS))
+    assert out[0, 0, 0] > 0.0  # pulled in +x, toward the neighbor
+
+
+def test_md_beyond_cutoff_zero():
+    pa = jnp.zeros((1, 64, 2), jnp.float32) + PAD_POS
+    pb = jnp.zeros((1, 64, 2), jnp.float32) + PAD_POS
+    pa = pa.at[0, 0].set(jnp.array([0.0, 0.0]))
+    pb = pb.at[0, 0].set(jnp.array([3.0, 0.0]))  # rc = 1.0
+    out = np.asarray(md_force(pa, pb, PARAMS))
+    assert_allclose(out, np.zeros_like(out), atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.sampled_from([1, 4, 16]),
+    n=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_md_hypothesis(c, n, seed):
+    rng = np.random.default_rng(seed)
+    pa = _rand_patch(rng, c, n)
+    pb = _rand_patch(rng, c, n)
+    got = md_force(pa, pb, PARAMS)
+    want = md_force_ref(pa, pb, PARAMS)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)

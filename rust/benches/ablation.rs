@@ -1,0 +1,11 @@
+//! Ablation bench over the adaptive combiner's design parameters
+//! (occupancy-derived combine target). See DESIGN.md section 4.
+
+fn main() {
+    let scale = if std::env::var("GCHARM_BENCH_FULL").is_ok() {
+        gcharm::bench::Scale::full()
+    } else {
+        gcharm::bench::Scale::quick()
+    };
+    gcharm::bench::run_ablation(&scale);
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Figure 2: dynamic vs static combining strategies for
+//! the small (cube300-like) and large (lambs-like) ChaNGa datasets.
+//! Set GCHARM_BENCH_FULL=1 for the full-scale run (slower).
+
+fn main() {
+    let scale = if std::env::var("GCHARM_BENCH_FULL").is_ok() {
+        gcharm::bench::Scale::full()
+    } else {
+        gcharm::bench::Scale::quick()
+    };
+    gcharm::bench::print_occupancy_table();
+    gcharm::bench::run_fig2(&scale);
+}

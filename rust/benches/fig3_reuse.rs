@@ -1,0 +1,12 @@
+//! Regenerates paper Figure 3: GPU kernel and data-transfer times under
+//! no-reuse / reuse / reuse+sorted-coalescing for the large dataset.
+//! Set GCHARM_BENCH_FULL=1 for the full-scale run.
+
+fn main() {
+    let scale = if std::env::var("GCHARM_BENCH_FULL").is_ok() {
+        gcharm::bench::Scale::full()
+    } else {
+        gcharm::bench::Scale::quick()
+    };
+    gcharm::bench::run_fig3(&scale);
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Figure 4: adaptive strategies vs static strategies vs
+//! the hand-tuned hybrid code vs CPU-only, across 1-8 PEs.
+//! Set GCHARM_BENCH_FULL=1 for the full-scale run.
+
+fn main() {
+    let scale = if std::env::var("GCHARM_BENCH_FULL").is_ok() {
+        gcharm::bench::Scale::full()
+    } else {
+        gcharm::bench::Scale::quick()
+    };
+    gcharm::bench::run_fig4(&scale);
+}

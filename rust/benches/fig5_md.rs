@@ -1,0 +1,12 @@
+//! Regenerates paper Figure 5: MD total execution times with static vs
+//! adaptive dynamic scheduling, over a particle-count sweep.
+//! Set GCHARM_BENCH_FULL=1 for the full-scale run.
+
+fn main() {
+    let scale = if std::env::var("GCHARM_BENCH_FULL").is_ok() {
+        gcharm::bench::Scale::full()
+    } else {
+        gcharm::bench::Scale::quick()
+    };
+    gcharm::bench::run_fig5(&scale);
+}

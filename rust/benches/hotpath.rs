@@ -1,0 +1,102 @@
+//! Micro-benchmarks of the coordinator hot paths (the L3 perf targets of
+//! EXPERIMENTS.md section Perf): combiner insert (sorted and FIFO), chare-table
+//! staging, hybrid queue split, manifest JSON parse.
+
+use gcharm::bench::bench_ns;
+use gcharm::coordinator::{
+    ChareId, ChareTable, CombinePolicy, Combiner, HybridScheduler, Pending,
+    SplitPolicy, WorkKind, WorkRequest, WrPayload,
+};
+use gcharm::runtime::shapes::{PARTICLE_W, PARTS_PER_BUCKET};
+use gcharm::util::json::Json;
+use gcharm::util::Rng;
+
+fn pending(id: u64, slot: Option<u32>) -> Pending {
+    Pending {
+        wr: WorkRequest {
+            id,
+            chare: ChareId::new(0, 0),
+            kind: WorkKind::Force,
+            buffer: Some(id),
+            data_items: 64,
+            tag: id,
+            arrival: 0.0,
+            payload: WrPayload::Ewald { parts: vec![] },
+        },
+        slot,
+        staged_bytes: 0,
+    }
+}
+
+fn main() {
+    println!("hot-path micro-benchmarks (median ns/op)");
+
+    // combiner insert at a steady queue depth of ~104 (the force maxSize)
+    {
+        let mut rng = Rng::new(1);
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 104, true);
+        let mut i = 0u64;
+        bench_ns("combiner insert (slot-sorted, depth<=104)", 4096, 9, || {
+            c.insert(pending(i, Some(rng.below(16_384) as u32)), i as f64 * 1e-6);
+            i += 1;
+            if c.len() >= 104 {
+                c.force_flush();
+            }
+        });
+    }
+    {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 104, false);
+        let mut i = 0u64;
+        bench_ns("combiner insert (fifo, depth<=104)", 4096, 9, || {
+            c.insert(pending(i, None), i as f64 * 1e-6);
+            i += 1;
+            if c.len() >= 104 {
+                c.force_flush();
+            }
+        });
+    }
+
+    // chare-table staging: miss-heavy and hit-heavy
+    {
+        let mut t = ChareTable::new(1024);
+        let buf = vec![1.0f32; PARTS_PER_BUCKET * PARTICLE_W];
+        let mut i = 0u64;
+        bench_ns("chare-table stage (miss-heavy)", 2048, 9, || {
+            let s = t.stage_pinned(i % 4096, &buf).unwrap();
+            let _ = s;
+            t.release(i % 4096);
+            i += 1;
+        });
+        let mut j = 0u64;
+        bench_ns("chare-table stage (hit-heavy)", 2048, 9, || {
+            let s = t.stage_pinned(j % 64, &buf).unwrap();
+            let _ = s;
+            t.release(j % 64);
+            j += 1;
+        });
+    }
+
+    // hybrid split of a 512-request queue
+    {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        h.record_cpu(100, 0.010);
+        h.record_gpu(100, 0.002);
+        bench_ns("hybrid split (512 requests)", 256, 9, || {
+            let q: Vec<Pending> = (0..512).map(|i| pending(i, None)).collect();
+            let (c, g) = h.split(q);
+            std::hint::black_box((c.len(), g.len()));
+        });
+    }
+
+    // manifest JSON parse
+    {
+        let dir = gcharm::runtime::default_artifacts_dir();
+        if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
+            bench_ns("manifest.json parse", 256, 9, || {
+                std::hint::black_box(Json::parse(&text).unwrap());
+            });
+        }
+    }
+
+    println!("done");
+}

@@ -1,0 +1,13 @@
+//! 2D molecular dynamics mini-app (paper section 4.2).
+//!
+//! Space is partitioned into patches owning their particles; compute
+//! objects (patch-pair work requests) evaluate LJ cutoff forces; particles
+//! migrate between patches after integration. MdInteract requests have
+//! both CPU and GPU kernels, so this is the app that exercises dynamic
+//! hybrid scheduling (Fig 5).
+
+pub mod patch;
+pub mod sim;
+
+pub use patch::{MdParticle, Patch, PatchParams};
+pub use sim::{run, run_single_core_cpu, MdConfig, MdResult, MD_COLLECTION};

@@ -1,0 +1,456 @@
+//! Patch chares for the 2D molecular dynamics app (paper section 4.2).
+//!
+//! The 2D box is partitioned into patches; each patch owns the particles in
+//! its region. Per timestep a patch: (1) shares its particle coordinates
+//! with its 8 neighbors (torus topology), (2) submits one MdInteract work
+//! request per (my-chunk x their-chunk) pair as buffers arrive -- the
+//! *compute object* of the Charm++/NAMD scheme, (3) folds returned forces,
+//! integrates, and (4) migrates departing particles to neighbors, then
+//! contributes kinetic energy to the step reduction.
+//!
+//! Patch populations vary (clustered initialization) and chunking makes
+//! request workloads uneven -- the irregularity Fig 5's adaptive hybrid
+//! scheduling exploits.
+
+use std::sync::Arc;
+
+use crate::coordinator::{
+    Chare, ChareId, Ctx, Msg, WorkDraft, WorkKind, WrPayload, WrResult,
+    METHOD_RESULT,
+};
+use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
+
+/// Entry methods.
+pub const METHOD_STEP: u32 = 1;
+pub const METHOD_SHARE: u32 = 2;
+pub const METHOD_MIGRATE: u32 = 3;
+
+/// One MD particle (host state in f64).
+#[derive(Debug, Clone, Copy)]
+pub struct MdParticle {
+    pub pos: [f64; 2],
+    pub vel: [f64; 2],
+}
+
+/// Driver -> patch: begin one timestep.
+pub struct StepMsg {
+    pub dt: f64,
+}
+
+/// Patch -> patch: padded particle chunks for force computation.
+pub struct ShareMsg {
+    pub from: u32,
+    /// Padded f32 chunks (PARTS_PER_PATCH x 2 each).
+    pub chunks: Arc<Vec<Vec<f32>>>,
+}
+
+/// Patch -> patch: particles that crossed into the receiver's region.
+pub struct MigrateMsg {
+    pub parts: Vec<MdParticle>,
+}
+
+/// Static patch geometry/physics.
+#[derive(Debug, Clone, Copy)]
+pub struct PatchParams {
+    pub grid: usize,
+    pub box_l: f64,
+}
+
+/// The Patch chare.
+pub struct Patch {
+    id: ChareId,
+    gx: usize,
+    gy: usize,
+    p: PatchParams,
+    particles: Vec<MdParticle>,
+
+    // per-step state
+    started: bool,
+    dt: f64,
+    my_chunks: Arc<Vec<Vec<f32>>>,
+    chunk_counts: Vec<usize>,
+    forces: Vec<[f64; 2]>,
+    shares_received: usize,
+    early_shares: Vec<ShareMsg>,
+    expected_results: usize,
+    received_results: usize,
+    integrated: bool,
+    migrations_received: usize,
+    arrivals: Vec<MdParticle>,
+}
+
+impl Patch {
+    pub fn new(
+        id: ChareId,
+        gx: usize,
+        gy: usize,
+        p: PatchParams,
+        particles: Vec<MdParticle>,
+    ) -> Patch {
+        Patch {
+            id,
+            gx,
+            gy,
+            p,
+            particles,
+            started: false,
+            dt: 0.0,
+            my_chunks: Arc::new(Vec::new()),
+            chunk_counts: Vec::new(),
+            forces: Vec::new(),
+            shares_received: 0,
+            early_shares: Vec::new(),
+            expected_results: 0,
+            received_results: 0,
+            integrated: false,
+            migrations_received: 0,
+            arrivals: Vec::new(),
+        }
+    }
+
+    fn neighbor_ids(&self) -> Vec<(ChareId, i32, i32)> {
+        let g = self.p.grid as i32;
+        let mut out = Vec::with_capacity(8);
+        for dy in -1..=1 {
+            for dx in -1..=1 {
+                if dx == 0 && dy == 0 {
+                    continue;
+                }
+                let nx = (self.gx as i32 + dx).rem_euclid(g);
+                let ny = (self.gy as i32 + dy).rem_euclid(g);
+                out.push((
+                    ChareId::new(
+                        self.id.collection,
+                        (ny * g + nx) as u32,
+                    ),
+                    dx,
+                    dy,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Pad this patch's particles into PARTS_PER_PATCH-sized f32 chunks.
+    fn build_chunks(&mut self) {
+        let mut chunks = Vec::new();
+        self.chunk_counts.clear();
+        for group in self.particles.chunks(PARTS_PER_PATCH) {
+            let mut c = vec![MD_PAD_POS; PARTS_PER_PATCH * MD_W];
+            for (j, q) in group.iter().enumerate() {
+                c[j * MD_W] = q.pos[0] as f32;
+                c[j * MD_W + 1] = q.pos[1] as f32;
+            }
+            chunks.push(c);
+            self.chunk_counts.push(group.len());
+        }
+        self.my_chunks = Arc::new(chunks);
+    }
+
+    fn on_step(&mut self, m: StepMsg, ctx: &mut Ctx) {
+        assert!(!self.started, "step already in flight");
+        self.started = true;
+        self.dt = m.dt;
+        self.forces = vec![[0.0; 2]; self.particles.len()];
+        self.build_chunks();
+
+        // broadcast my chunks to the 8 neighbors
+        for (nid, _, _) in self.neighbor_ids() {
+            ctx.send(
+                nid,
+                Msg::new(
+                    METHOD_SHARE,
+                    ShareMsg {
+                        from: self.id.index,
+                        chunks: self.my_chunks.clone(),
+                    },
+                ),
+            );
+        }
+
+        // self-interaction counts as the 9th share
+        let self_share =
+            ShareMsg { from: self.id.index, chunks: self.my_chunks.clone() };
+        self.process_share(self_share, ctx);
+
+        // replay shares that arrived before our STEP
+        let early = std::mem::take(&mut self.early_shares);
+        for s in early {
+            self.process_share(s, ctx);
+        }
+        self.maybe_finish(ctx);
+    }
+
+    /// Wrap-shift for a sender at grid delta (their frame -> mine).
+    fn wrap_shift(&self, from: u32) -> (f32, f32) {
+        let g = self.p.grid as i32;
+        let fx = (from as i32) % g;
+        let fy = (from as i32) / g;
+        let l = self.p.box_l as f32;
+        let d = |a: i32, b: i32| -> f32 {
+            let raw = a - b;
+            if raw > 1 {
+                -l // sender wrapped around the high edge
+            } else if raw < -1 {
+                l
+            } else {
+                0.0
+            }
+        };
+        (d(fx, self.gx as i32), d(fy, self.gy as i32))
+    }
+
+    fn process_share(&mut self, s: ShareMsg, ctx: &mut Ctx) {
+        self.shares_received += 1;
+        if self.my_chunks.is_empty() || s.chunks.is_empty() {
+            return;
+        }
+        let (sx, sy) = if s.from == self.id.index {
+            (0.0, 0.0)
+        } else {
+            self.wrap_shift(s.from)
+        };
+        for (ci, mine) in self.my_chunks.iter().enumerate() {
+            let my_count = self.chunk_counts[ci];
+            for theirs in s.chunks.iter() {
+                let mut pb = theirs.clone();
+                if sx != 0.0 || sy != 0.0 {
+                    for r in 0..PARTS_PER_PATCH {
+                        if pb[r * MD_W] < MD_PAD_POS / 2.0 {
+                            pb[r * MD_W] += sx;
+                            pb[r * MD_W + 1] += sy;
+                        }
+                    }
+                }
+                let their_count =
+                    pb.chunks(MD_W).filter(|r| r[0] < MD_PAD_POS / 2.0).count();
+                // Workload model (section 3.3): the pairwise interact cost
+                // scales with the *product* of the two particle counts --
+                // this is the per-request weight the adaptive split uses
+                // and the static count-split ignores.
+                ctx.submit(WorkDraft {
+                    chare: self.id,
+                    kind: WorkKind::MdInteract,
+                    buffer: None,
+                    data_items: (my_count * their_count).max(1),
+                    tag: ci as u64,
+                    payload: WrPayload::MdPair { pa: mine.clone(), pb },
+                });
+                self.expected_results += 1;
+            }
+        }
+    }
+
+    fn on_result(&mut self, r: WrResult, ctx: &mut Ctx) {
+        let ci = r.tag as usize;
+        let base = ci * PARTS_PER_PATCH;
+        for j in 0..self.chunk_counts[ci] {
+            self.forces[base + j][0] += r.out[j * MD_W] as f64;
+            self.forces[base + j][1] += r.out[j * MD_W + 1] as f64;
+        }
+        self.received_results += 1;
+        self.maybe_finish(ctx);
+    }
+
+    /// Integrate + start migration once all shares and results are in.
+    fn maybe_finish(&mut self, ctx: &mut Ctx) {
+        if !self.started
+            || self.integrated
+            || self.shares_received < 9
+            || self.received_results < self.expected_results
+        {
+            return;
+        }
+        self.integrated = true;
+
+        // velocity Verlet (single-force variant): v += f dt; x += v dt
+        let l = self.p.box_l;
+        for (q, f) in self.particles.iter_mut().zip(&self.forces) {
+            q.vel[0] += f[0] * self.dt;
+            q.vel[1] += f[1] * self.dt;
+            q.pos[0] = (q.pos[0] + q.vel[0] * self.dt).rem_euclid(l);
+            q.pos[1] = (q.pos[1] + q.vel[1] * self.dt).rem_euclid(l);
+        }
+
+        // partition stayers vs leavers
+        let g = self.p.grid;
+        let patch_l = l / g as f64;
+        let mut out: Vec<Vec<MdParticle>> = vec![Vec::new(); 8];
+        let neighbors = self.neighbor_ids();
+        let mut staying = Vec::with_capacity(self.particles.len());
+        for q in self.particles.drain(..) {
+            let tx = ((q.pos[0] / patch_l) as usize).min(g - 1);
+            let ty = ((q.pos[1] / patch_l) as usize).min(g - 1);
+            if tx == self.gx && ty == self.gy {
+                staying.push(q);
+            } else {
+                // direction sign picks the neighbor slot
+                let slot = neighbors
+                    .iter()
+                    .position(|&(nid, _, _)| {
+                        let ngx = (nid.index as usize) % g;
+                        let ngy = (nid.index as usize) / g;
+                        ngx == tx && ngy == ty
+                    })
+                    .unwrap_or_else(|| {
+                        // crossed more than one patch in a step (dt too
+                        // large): hand to the nearest neighbor in that
+                        // direction, it will forward next step
+                        let dxs = wrap_dir(self.gx, tx, g);
+                        let dys = wrap_dir(self.gy, ty, g);
+                        neighbors
+                            .iter()
+                            .position(|&(_, dx, dy)| dx == dxs && dy == dys)
+                            .expect("direction neighbor exists")
+                    });
+                out[slot].push(q);
+            }
+        }
+        self.particles = staying;
+        for ((nid, _, _), parts) in neighbors.into_iter().zip(out) {
+            ctx.send(nid, Msg::new(METHOD_MIGRATE, MigrateMsg { parts }));
+        }
+        self.maybe_contribute(ctx);
+    }
+
+    fn on_migrate(&mut self, m: MigrateMsg, ctx: &mut Ctx) {
+        self.migrations_received += 1;
+        self.arrivals.extend(m.parts);
+        self.maybe_contribute(ctx);
+    }
+
+    /// Step is complete when we integrated and heard from all 8 neighbors.
+    fn maybe_contribute(&mut self, ctx: &mut Ctx) {
+        if !self.integrated || self.migrations_received < 8 {
+            return;
+        }
+        self.particles.append(&mut self.arrivals);
+        let ke: f64 = self
+            .particles
+            .iter()
+            .map(|q| 0.5 * (q.vel[0] * q.vel[0] + q.vel[1] * q.vel[1]))
+            .sum();
+        // reset per-step state
+        self.started = false;
+        self.integrated = false;
+        self.shares_received = 0;
+        self.expected_results = 0;
+        self.received_results = 0;
+        self.migrations_received = 0;
+        ctx.contribute(ke);
+    }
+}
+
+fn wrap_dir(from: usize, to: usize, g: usize) -> i32 {
+    let raw = to as i32 - from as i32;
+    if raw == 0 {
+        0
+    } else if raw.rem_euclid(g as i32) <= g as i32 / 2 {
+        1
+    } else {
+        -1
+    }
+}
+
+impl Chare for Patch {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_STEP => {
+                let m: StepMsg = msg.take();
+                self.on_step(m, ctx);
+            }
+            METHOD_SHARE => {
+                let m: ShareMsg = msg.take();
+                if self.started {
+                    self.process_share(m, ctx);
+                    self.maybe_finish(ctx);
+                } else {
+                    self.early_shares.push(m);
+                }
+            }
+            METHOD_MIGRATE => {
+                let m: MigrateMsg = msg.take();
+                self.on_migrate(m, ctx);
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                self.on_result(r, ctx);
+            }
+            other => panic!("Patch: unknown method {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn patch(gx: usize, gy: usize, grid: usize) -> Patch {
+        Patch::new(
+            ChareId::new(2, (gy * grid + gx) as u32),
+            gx,
+            gy,
+            PatchParams { grid, box_l: 8.0 },
+            Vec::new(),
+        )
+    }
+
+    #[test]
+    fn eight_distinct_neighbors() {
+        let p = patch(1, 1, 4);
+        let ns = p.neighbor_ids();
+        assert_eq!(ns.len(), 8);
+        let mut ids: Vec<u32> = ns.iter().map(|&(n, _, _)| n.index).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8);
+    }
+
+    #[test]
+    fn corner_patch_wraps_torus() {
+        let p = patch(0, 0, 4);
+        let ns = p.neighbor_ids();
+        // the (-1,-1) neighbor of (0,0) is (3,3) = index 15
+        assert!(ns.iter().any(|&(n, dx, dy)| dx == -1 && dy == -1 && n.index == 15));
+    }
+
+    #[test]
+    fn wrap_shift_signs() {
+        let g = 4;
+        let me = patch(3, 0, g); // high-x edge
+        // neighbor at gx = 0 (wrapped +x side): its coords must shift +L
+        let from = 0u32; // (0, 0)
+        let (sx, sy) = me.wrap_shift(from);
+        assert_eq!(sx, 8.0);
+        assert_eq!(sy, 0.0);
+        // interior neighbor (2, 0): no shift
+        let (sx, _) = me.wrap_shift(2);
+        assert_eq!(sx, 0.0);
+    }
+
+    #[test]
+    fn chunking_pads_and_counts() {
+        let mut p = patch(0, 0, 4);
+        p.particles = (0..70)
+            .map(|i| MdParticle {
+                pos: [i as f64 * 0.01, 0.5],
+                vel: [0.0, 0.0],
+            })
+            .collect();
+        p.build_chunks();
+        assert_eq!(p.my_chunks.len(), 2);
+        assert_eq!(p.chunk_counts, vec![PARTS_PER_PATCH, 6]);
+        // padding rows parked far away
+        let c1 = &p.my_chunks[1];
+        assert_eq!(c1[6 * MD_W], MD_PAD_POS);
+    }
+
+    #[test]
+    fn wrap_dir_chooses_shortest_way() {
+        assert_eq!(wrap_dir(0, 1, 8), 1);
+        assert_eq!(wrap_dir(1, 0, 8), -1);
+        assert_eq!(wrap_dir(0, 7, 8), -1); // wrap back
+        assert_eq!(wrap_dir(7, 0, 8), 1); // wrap forward
+        assert_eq!(wrap_dir(3, 3, 8), 0);
+    }
+}

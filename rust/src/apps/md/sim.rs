@@ -1,0 +1,337 @@
+//! MD simulation drivers (paper sections 4.2, 4.6 / Fig 5).
+//!
+//! [`run`] executes the patch-chare simulation on the G-Charm runtime with
+//! hybrid CPU+GPU scheduling (the Fig 5 experiment: static count-split vs
+//! adaptive data-item split). [`run_single_core_cpu`] is the paper's
+//! "single-core CPU implementation" baseline: the same physics, straight
+//! nested loops on one thread.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::cpu_kernels::cpu_md_interact;
+use crate::coordinator::{ChareId, Config, GCharm, Msg, Report};
+use crate::runtime::executor::ExecutorConfig;
+use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
+use crate::util::Rng;
+
+use super::patch::{
+    MdParticle, Patch, PatchParams, StepMsg, METHOD_STEP,
+};
+
+/// Chare collection id of Patches.
+pub const MD_COLLECTION: u32 = 2;
+
+/// MD experiment configuration.
+#[derive(Debug, Clone)]
+pub struct MdConfig {
+    pub n_particles: usize,
+    /// Patch grid is `grid x grid`.
+    pub grid: usize,
+    pub box_l: f64,
+    pub steps: usize,
+    pub dt: f64,
+    /// LJ cutoff radius; patch side must be >= rc.
+    pub rc: f64,
+    pub sigma: f64,
+    pub eps_lj: f64,
+    /// Gaussian-blob initialization (irregular patch populations).
+    pub clustered: bool,
+    pub seed: u64,
+    pub runtime: Config,
+}
+
+impl MdConfig {
+    /// Box and grid auto-scale with `n_particles` to keep the mean density
+    /// near 8 particles per unit area (typical spacing ~0.35 > sigma, so
+    /// the LJ dynamics stay stable) with patch side 2.0 >= cutoff.
+    pub fn new(n_particles: usize) -> MdConfig {
+        let target_box = (n_particles as f64 / 8.0).sqrt().max(8.0);
+        let grid = ((target_box / 2.0).floor() as usize).max(4);
+        MdConfig {
+            n_particles,
+            grid,
+            box_l: grid as f64 * 2.0,
+            steps: 10,
+            dt: 2e-4,
+            rc: 1.0,
+            sigma: 0.2,
+            eps_lj: 1.0,
+            clustered: true,
+            seed: 42,
+            runtime: Config::default(),
+        }
+    }
+
+    pub fn md_params(&self) -> [f32; 3] {
+        [
+            (self.rc * self.rc) as f32,
+            (self.sigma * self.sigma) as f32,
+            self.eps_lj as f32,
+        ]
+    }
+
+    /// Initial particle set.
+    pub fn generate(&self) -> Vec<MdParticle> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(self.n_particles);
+        if !self.clustered {
+            for _ in 0..self.n_particles {
+                out.push(MdParticle {
+                    pos: [
+                        rng.range(0.0, self.box_l),
+                        rng.range(0.0, self.box_l),
+                    ],
+                    vel: [rng.normal() * 0.05, rng.normal() * 0.05],
+                });
+            }
+            return out;
+        }
+        // Gaussian blobs with uneven populations
+        let nblobs = 6;
+        let centers: Vec<[f64; 2]> = (0..nblobs)
+            .map(|_| {
+                [
+                    rng.range(0.15, 0.85) * self.box_l,
+                    rng.range(0.15, 0.85) * self.box_l,
+                ]
+            })
+            .collect();
+        for i in 0..self.n_particles {
+            let c = centers[(i * i + i / 3) % nblobs];
+            let spread = self.box_l * 0.08;
+            out.push(MdParticle {
+                pos: [
+                    (c[0] + rng.normal() * spread).rem_euclid(self.box_l),
+                    (c[1] + rng.normal() * spread).rem_euclid(self.box_l),
+                ],
+                vel: [rng.normal() * 0.05, rng.normal() * 0.05],
+            });
+        }
+        out
+    }
+}
+
+/// Outcome of an MD run.
+#[derive(Debug)]
+pub struct MdResult {
+    pub report: Report,
+    pub wall: f64,
+    /// Kinetic energy per step (reduction values).
+    pub energies: Vec<f64>,
+    pub patches: usize,
+}
+
+/// Assign particles to their owning patch.
+fn bin_particles(
+    parts: Vec<MdParticle>,
+    grid: usize,
+    box_l: f64,
+) -> Vec<Vec<MdParticle>> {
+    let mut bins = vec![Vec::new(); grid * grid];
+    let patch_l = box_l / grid as f64;
+    for q in parts {
+        let gx = ((q.pos[0] / patch_l) as usize).min(grid - 1);
+        let gy = ((q.pos[1] / patch_l) as usize).min(grid - 1);
+        bins[gy * grid + gx].push(q);
+    }
+    bins
+}
+
+/// Run the MD simulation on the G-Charm runtime.
+pub fn run(cfg: &MdConfig) -> Result<MdResult> {
+    anyhow::ensure!(
+        cfg.box_l / cfg.grid as f64 >= cfg.rc,
+        "patch side must be >= cutoff"
+    );
+    let bins = bin_particles(cfg.generate(), cfg.grid, cfg.box_l);
+    let npatches = cfg.grid * cfg.grid;
+
+    let mut rt = GCharm::new(Config {
+        executor: ExecutorConfig {
+            md_params: cfg.md_params(),
+            ..ExecutorConfig::default()
+        },
+        ..cfg.runtime.clone()
+    });
+    let params = PatchParams { grid: cfg.grid, box_l: cfg.box_l };
+    for (i, bin) in bins.into_iter().enumerate() {
+        let id = ChareId::new(MD_COLLECTION, i as u32);
+        let gx = i % cfg.grid;
+        let gy = i / cfg.grid;
+        rt.register(
+            id,
+            i % cfg.runtime.pes,
+            Box::new(Patch::new(id, gx, gy, params, bin)),
+        );
+    }
+    rt.start()?;
+
+    let t0 = Instant::now();
+    let mut energies = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        for i in 0..npatches {
+            rt.send(
+                ChareId::new(MD_COLLECTION, i as u32),
+                Msg::new(METHOD_STEP, StepMsg { dt: cfg.dt }),
+            );
+        }
+        energies.push(rt.await_reduction(npatches as u64));
+        rt.await_quiescence();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut report = rt.shutdown();
+    report.total_wall = wall;
+    Ok(MdResult { report, wall, energies, patches: npatches })
+}
+
+/// Single-core CPU baseline: same physics, plain loops, one thread.
+pub fn run_single_core_cpu(cfg: &MdConfig) -> MdResult {
+    let grid = cfg.grid;
+    let mut bins = bin_particles(cfg.generate(), grid, cfg.box_l);
+    let params = cfg.md_params();
+    let patch_l = cfg.box_l / grid as f64;
+
+    let pad = |bin: &[MdParticle]| -> Vec<Vec<f32>> {
+        bin.chunks(PARTS_PER_PATCH)
+            .map(|group| {
+                let mut c = vec![MD_PAD_POS; PARTS_PER_PATCH * MD_W];
+                for (j, q) in group.iter().enumerate() {
+                    c[j * MD_W] = q.pos[0] as f32;
+                    c[j * MD_W + 1] = q.pos[1] as f32;
+                }
+                c
+            })
+            .collect()
+    };
+
+    let t0 = Instant::now();
+    let mut energies = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        let chunks: Vec<Vec<Vec<f32>>> = bins.iter().map(|b| pad(b)).collect();
+        let mut forces: Vec<Vec<[f64; 2]>> =
+            bins.iter().map(|b| vec![[0.0; 2]; b.len()]).collect();
+
+        for gy in 0..grid {
+            for gx in 0..grid {
+                let me = gy * grid + gx;
+                for dy in -1i32..=1 {
+                    for dx in -1i32..=1 {
+                        let nx = (gx as i32 + dx).rem_euclid(grid as i32) as usize;
+                        let ny = (gy as i32 + dy).rem_euclid(grid as i32) as usize;
+                        let nb = ny * grid + nx;
+                        let (sx, sy) = (
+                            if gx as i32 + dx < 0 {
+                                -cfg.box_l as f32
+                            } else if gx as i32 + dx >= grid as i32 {
+                                cfg.box_l as f32
+                            } else {
+                                0.0
+                            },
+                            if gy as i32 + dy < 0 {
+                                -cfg.box_l as f32
+                            } else if gy as i32 + dy >= grid as i32 {
+                                cfg.box_l as f32
+                            } else {
+                                0.0
+                            },
+                        );
+                        for (ci, mine) in chunks[me].iter().enumerate() {
+                            for theirs in &chunks[nb] {
+                                let mut pb = theirs.clone();
+                                if sx != 0.0 || sy != 0.0 {
+                                    for r in 0..PARTS_PER_PATCH {
+                                        if pb[r * MD_W] < MD_PAD_POS / 2.0 {
+                                            pb[r * MD_W] += sx;
+                                            pb[r * MD_W + 1] += sy;
+                                        }
+                                    }
+                                }
+                                let out = cpu_md_interact(mine, &pb, params);
+                                let base = ci * PARTS_PER_PATCH;
+                                let count = bins[me]
+                                    .len()
+                                    .saturating_sub(base)
+                                    .min(PARTS_PER_PATCH);
+                                for j in 0..count {
+                                    forces[me][base + j][0] +=
+                                        out[j * MD_W] as f64;
+                                    forces[me][base + j][1] +=
+                                        out[j * MD_W + 1] as f64;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // integrate + rebin
+        let mut ke = 0.0f64;
+        let mut all = Vec::new();
+        for (bin, fs) in bins.iter_mut().zip(&forces) {
+            for (q, f) in bin.iter_mut().zip(fs) {
+                q.vel[0] += f[0] * cfg.dt;
+                q.vel[1] += f[1] * cfg.dt;
+                q.pos[0] = (q.pos[0] + q.vel[0] * cfg.dt).rem_euclid(cfg.box_l);
+                q.pos[1] = (q.pos[1] + q.vel[1] * cfg.dt).rem_euclid(cfg.box_l);
+                ke += 0.5 * (q.vel[0] * q.vel[0] + q.vel[1] * q.vel[1]);
+            }
+            all.append(bin);
+        }
+        let _ = patch_l;
+        bins = bin_particles(all, grid, cfg.box_l);
+        energies.push(ke);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut report = Report::default();
+    report.total_wall = wall;
+    MdResult { report, wall, energies, patches: grid * grid }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binning_conserves_particles() {
+        let cfg = MdConfig::new(1000);
+        let bins = bin_particles(cfg.generate(), cfg.grid, cfg.box_l);
+        let total: usize = bins.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn clustered_bins_are_uneven() {
+        let cfg = MdConfig::new(2000);
+        let bins = bin_particles(cfg.generate(), cfg.grid, cfg.box_l);
+        let max = bins.iter().map(|b| b.len()).max().unwrap();
+        let mean = 2000 / bins.len();
+        assert!(max > 2 * mean, "clustering should overload some patches");
+    }
+
+    #[test]
+    fn uniform_bins_are_even_ish() {
+        let cfg = MdConfig { clustered: false, ..MdConfig::new(6400) };
+        let bins = bin_particles(cfg.generate(), cfg.grid, cfg.box_l);
+        let max = bins.iter().map(|b| b.len()).max().unwrap();
+        let mean = 6400 / bins.len();
+        assert!(max < 2 * mean);
+    }
+
+    #[test]
+    fn single_core_baseline_runs_and_conserves_count() {
+        let cfg = MdConfig {
+            n_particles: 200,
+            steps: 3,
+            grid: 4,
+            box_l: 8.0,
+            ..MdConfig::new(200)
+        };
+        let r = run_single_core_cpu(&cfg);
+        assert_eq!(r.energies.len(), 3);
+        assert!(r.energies.iter().all(|e| e.is_finite()));
+        assert!(r.wall > 0.0);
+    }
+}

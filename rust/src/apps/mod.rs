@@ -1,0 +1,4 @@
+//! The paper's two evaluation applications, built on the G-Charm runtime.
+
+pub mod md;
+pub mod nbody;

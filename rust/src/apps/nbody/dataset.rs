@@ -1,0 +1,229 @@
+//! Synthetic cosmology datasets for the ChaNGa-style N-Body app.
+//!
+//! The paper evaluates on `cube300` (48^3 particles, 300 Mpc box, 128
+//! iterations) and `lambs` (144^3 particles, 71 Mpc box, 10 iterations),
+//! both "moderately clustered on small scales, uniform at large scales"
+//! (section 4.1). Those proprietary snapshot files are not available, so we
+//! generate matching *statistical* equivalents: Plummer-profile clusters
+//! whose centers are uniform in the box (DESIGN.md section 2 substitution
+//! table). The irregularity the strategies exploit -- widely varying
+//! interaction-list lengths and task arrival times -- comes from exactly
+//! this clustering.
+
+use crate::util::{Rng, Vec3};
+
+use super::tree::Particle;
+
+/// A named dataset recipe.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Particle count.
+    pub n: usize,
+    /// Number of Plummer clusters (0 = uniform).
+    pub clusters: usize,
+    /// Box side length (code units).
+    pub box_size: f64,
+    /// Plummer scale radius as a fraction of the box.
+    pub scale: f64,
+    /// Default iteration count in the paper's experiment.
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// cube300 analog, full scale: 48^3 particles.
+    pub fn cube300() -> DatasetSpec {
+        DatasetSpec {
+            name: "cube300",
+            n: 48 * 48 * 48,
+            clusters: 64,
+            box_size: 300.0,
+            scale: 0.02,
+            iters: 128,
+            seed: 300,
+        }
+    }
+
+    /// lambs analog, full scale: 144^3 particles.
+    pub fn lambs() -> DatasetSpec {
+        DatasetSpec {
+            name: "lambs",
+            n: 144 * 144 * 144,
+            clusters: 256,
+            box_size: 71.0,
+            scale: 0.015,
+            iters: 10,
+            seed: 71,
+        }
+    }
+
+    /// Reduced cube300: same clustering statistics, fewer particles --
+    /// the "small dataset" rows of Fig 2/4 at bench scale.
+    pub fn small() -> DatasetSpec {
+        DatasetSpec { n: 16 * 1024, clusters: 24, ..DatasetSpec::cube300() }
+    }
+
+    /// Reduced lambs: the "large dataset" rows at bench scale.
+    pub fn large() -> DatasetSpec {
+        DatasetSpec { n: 48 * 1024, clusters: 64, ..DatasetSpec::lambs() }
+    }
+
+    /// Tiny spec for unit/integration tests.
+    pub fn tiny() -> DatasetSpec {
+        DatasetSpec {
+            name: "tiny",
+            n: 512,
+            clusters: 4,
+            box_size: 10.0,
+            scale: 0.05,
+            iters: 2,
+            seed: 7,
+        }
+    }
+
+    /// Generate the particle set.
+    pub fn generate(&self) -> Vec<Particle> {
+        let mut rng = Rng::new(self.seed);
+        let mut parts = Vec::with_capacity(self.n);
+        let mass = 1.0 / self.n as f64;
+        if self.clusters == 0 {
+            for _ in 0..self.n {
+                let pos = Vec3::new(
+                    rng.range(0.0, self.box_size),
+                    rng.range(0.0, self.box_size),
+                    rng.range(0.0, self.box_size),
+                );
+                parts.push(Particle::at_rest(pos, mass));
+            }
+            return parts;
+        }
+
+        // Cluster centers uniform in the box; populations drawn with a
+        // heavy tail so piece workloads differ (irregularity).
+        let centers: Vec<Vec3> = (0..self.clusters)
+            .map(|_| {
+                Vec3::new(
+                    rng.range(0.1, 0.9) * self.box_size,
+                    rng.range(0.1, 0.9) * self.box_size,
+                    rng.range(0.1, 0.9) * self.box_size,
+                )
+            })
+            .collect();
+        let mut weights: Vec<f64> =
+            (0..self.clusters).map(|_| rng.exponential(1.0) + 0.1).collect();
+        let wsum: f64 = weights.iter().sum();
+        weights.iter_mut().for_each(|w| *w /= wsum);
+
+        let a = self.scale * self.box_size; // Plummer scale radius
+        for c in 0..self.clusters {
+            let count = if c + 1 == self.clusters {
+                self.n - parts.len()
+            } else {
+                (weights[c] * self.n as f64).round() as usize
+            };
+            for _ in 0..count.min(self.n - parts.len()) {
+                let pos = centers[c] + plummer_offset(&mut rng, a);
+                let pos = Vec3::new(
+                    pos.x.clamp(0.0, self.box_size),
+                    pos.y.clamp(0.0, self.box_size),
+                    pos.z.clamp(0.0, self.box_size),
+                );
+                parts.push(Particle::at_rest(pos, mass));
+            }
+        }
+        // Top up if rounding lost a few.
+        while parts.len() < self.n {
+            let pos = Vec3::new(
+                rng.range(0.0, self.box_size),
+                rng.range(0.0, self.box_size),
+                rng.range(0.0, self.box_size),
+            );
+            parts.push(Particle::at_rest(pos, mass));
+        }
+        parts
+    }
+}
+
+/// Sample an isotropic offset with a Plummer radial profile
+/// (r = a / sqrt(u^{-2/3} - 1)).
+fn plummer_offset(rng: &mut Rng, a: f64) -> Vec3 {
+    let u = rng.f64().max(1e-9);
+    let r = a / (u.powf(-2.0 / 3.0) - 1.0).max(1e-12).sqrt();
+    let r = r.min(20.0 * a); // clip the tail
+    // uniform direction
+    let z = rng.range(-1.0, 1.0);
+    let phi = rng.range(0.0, std::f64::consts::TAU);
+    let s = (1.0 - z * z).sqrt();
+    Vec3::new(r * s * phi.cos(), r * s * phi.sin(), r * z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count() {
+        let spec = DatasetSpec::tiny();
+        let parts = spec.generate();
+        assert_eq!(parts.len(), spec.n);
+    }
+
+    #[test]
+    fn particles_inside_box() {
+        let spec = DatasetSpec::tiny();
+        for p in spec.generate() {
+            for v in [p.pos.x, p.pos.y, p.pos.z] {
+                assert!((0.0..=spec.box_size).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn total_mass_normalized() {
+        let spec = DatasetSpec::tiny();
+        let m: f64 = spec.generate().iter().map(|p| p.mass).sum();
+        assert!((m - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = DatasetSpec::tiny().generate();
+        let b = DatasetSpec::tiny().generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pos, y.pos);
+        }
+    }
+
+    #[test]
+    fn clustered_is_clumpier_than_uniform() {
+        // variance of per-cell counts on a coarse grid is much higher for
+        // the clustered dataset
+        let clustered = DatasetSpec::tiny().generate();
+        let uniform =
+            DatasetSpec { clusters: 0, ..DatasetSpec::tiny() }.generate();
+        let var = |parts: &[Particle]| {
+            let g = 4usize;
+            let mut counts = vec![0f64; g * g * g];
+            for p in parts {
+                let f = |v: f64| {
+                    ((v / 10.0 * g as f64) as usize).min(g - 1)
+                };
+                counts[f(p.pos.x) * g * g + f(p.pos.y) * g + f(p.pos.z)] += 1.0;
+            }
+            let m = counts.iter().sum::<f64>() / counts.len() as f64;
+            counts.iter().map(|c| (c - m) * (c - m)).sum::<f64>()
+                / counts.len() as f64
+        };
+        assert!(var(&clustered) > 4.0 * var(&uniform));
+    }
+
+    #[test]
+    fn paper_scale_specs() {
+        assert_eq!(DatasetSpec::cube300().n, 110_592);
+        assert_eq!(DatasetSpec::lambs().n, 2_985_984);
+        assert_eq!(DatasetSpec::cube300().iters, 128);
+        assert_eq!(DatasetSpec::lambs().iters, 10);
+    }
+}

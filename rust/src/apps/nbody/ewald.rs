@@ -1,0 +1,100 @@
+//! Ewald summation k-table for periodic boundary conditions.
+//!
+//! ChaNGa applies force corrections for periodic images via Ewald
+//! summation, executed as a separate GPU kernel (paper sections 4.1, 4.3:
+//! 31% occupancy, maxSize 65). We precompute the reciprocal-space table --
+//! the `KTABLE` lowest non-zero k-vectors of the box with Gaussian-damped
+//! coefficients -- once per run; the kernel evaluates the sinusoid sums per
+//! particle.
+
+use crate::runtime::shapes::{KTAB_W, KTABLE};
+
+/// Build the k-table for a cubic box of side `l` with splitting parameter
+/// `alpha`. Returns KTABLE x 4 row-major [kx, ky, kz, coef]; rows beyond
+/// the available vectors carry coef = 0 (inert padding).
+pub fn ktable(l: f64, alpha: f64) -> Vec<f32> {
+    let two_pi = std::f64::consts::TAU;
+    let kunit = two_pi / l;
+    // enumerate integer triples by |k|^2, skip 0
+    let range = 3i64;
+    let mut ks: Vec<(i64, [i64; 3])> = Vec::new();
+    for ix in -range..=range {
+        for iy in -range..=range {
+            for iz in -range..=range {
+                let n2 = ix * ix + iy * iy + iz * iz;
+                if n2 > 0 {
+                    ks.push((n2, [ix, iy, iz]));
+                }
+            }
+        }
+    }
+    ks.sort_by_key(|&(n2, v)| (n2, v));
+    let vol = l * l * l;
+    let mut out = vec![0.0f32; KTABLE * KTAB_W];
+    for (row, &(n2, v)) in ks.iter().take(KTABLE).enumerate() {
+        let k2 = n2 as f64 * kunit * kunit;
+        let coef = (4.0 * std::f64::consts::PI / vol)
+            * (-k2 / (4.0 * alpha * alpha)).exp()
+            / k2;
+        out[row * KTAB_W] = (v[0] as f64 * kunit) as f32;
+        out[row * KTAB_W + 1] = (v[1] as f64 * kunit) as f32;
+        out[row * KTAB_W + 2] = (v[2] as f64 * kunit) as f32;
+        out[row * KTAB_W + 3] = coef as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_ktable_rows() {
+        let t = ktable(10.0, 0.5);
+        assert_eq!(t.len(), KTABLE * KTAB_W);
+    }
+
+    #[test]
+    fn coefficients_decay_with_k() {
+        let t = ktable(10.0, 0.5);
+        let first = t[3];
+        let last_active = (0..KTABLE)
+            .rev()
+            .find(|&r| t[r * KTAB_W + 3] != 0.0)
+            .unwrap();
+        assert!(first > t[last_active * KTAB_W + 3]);
+    }
+
+    #[test]
+    fn all_coefficients_nonnegative_and_finite() {
+        let t = ktable(300.0, 2.0 / 300.0);
+        for r in 0..KTABLE {
+            let c = t[r * KTAB_W + 3];
+            assert!(c.is_finite() && c >= 0.0);
+        }
+    }
+
+    #[test]
+    fn k_vectors_are_multiples_of_kunit() {
+        let l = 10.0f64;
+        let t = ktable(l, 0.5);
+        let kunit = std::f64::consts::TAU / l;
+        for r in 0..4 {
+            for c in 0..3 {
+                let v = t[r * KTAB_W + c] as f64 / kunit;
+                assert!((v - v.round()).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn no_zero_vector_included() {
+        let t = ktable(10.0, 0.5);
+        for r in 0..KTABLE {
+            if t[r * KTAB_W + 3] != 0.0 {
+                let n: f32 = (0..3).map(|c| t[r * KTAB_W + c].abs()).sum();
+                assert!(n > 0.0, "row {r} is the zero vector");
+            }
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! ChaNGa-style N-Body simulation on the G-Charm runtime (paper section 4.1).
+//!
+//! Per iteration: (domain decomposition +) tree construction, per-bucket
+//! tree walks producing interaction lists, gravitational force work
+//! requests, Ewald periodic corrections, integration. The walk/submit/
+//! accumulate cycle runs message-driven across TreePiece chares; force and
+//! Ewald kernels execute on the (simulated) GPU through the runtime's
+//! combining/reuse/coalescing strategies.
+//!
+//! Three drivers back the Fig 2/3/4 experiments:
+//!   - [`run`]            : the G-Charm path (configurable strategies)
+//!   - [`run_cpu_only`]   : multi-core CPU baseline (forces inline on PEs)
+//!   - [`handtuned::run_handtuned`] : Jetley-et-al-style hand-tuned GPU
+//!     driver that bypasses the runtime entirely.
+
+pub mod dataset;
+pub mod ewald;
+pub mod handtuned;
+pub mod tree;
+pub mod treepiece;
+pub mod walk;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{ChareId, Config, GCharm, Msg, Report};
+use crate::runtime::executor::ExecutorConfig;
+
+use dataset::DatasetSpec;
+use tree::{Particle, Tree};
+use treepiece::{StartMsg, TreePiece, METHOD_START};
+
+/// Chare collection id of TreePieces.
+pub const NBODY_COLLECTION: u32 = 1;
+
+/// N-Body experiment configuration.
+#[derive(Debug, Clone)]
+pub struct NbodyConfig {
+    pub dataset: DatasetSpec,
+    /// Chares per PE (over-decomposition factor; Charm++ style).
+    pub pieces_per_pe: usize,
+    pub iters: usize,
+    /// Barnes-Hut opening angle.
+    pub theta: f64,
+    pub dt: f64,
+    pub do_ewald: bool,
+    /// Ewald splitting parameter (1/box units scale).
+    pub alpha: f64,
+    pub eps2: f32,
+    /// Runtime configuration (PEs, combining, data policy, ...).
+    pub runtime: Config,
+}
+
+impl NbodyConfig {
+    pub fn new(dataset: DatasetSpec) -> NbodyConfig {
+        let iters = dataset.iters.min(8);
+        NbodyConfig {
+            dataset,
+            pieces_per_pe: 4,
+            iters,
+            theta: 0.7,
+            dt: 1e-3,
+            do_ewald: true,
+            alpha: 2.0,
+            eps2: 1e-2,
+            runtime: Config::default(),
+        }
+    }
+
+    fn executor_config(&self) -> ExecutorConfig {
+        ExecutorConfig {
+            eps2: self.eps2,
+            ktab: ewald::ktable(self.dataset.box_size, self.alpha / self.dataset.box_size),
+            md_params: ExecutorConfig::default().md_params,
+        }
+    }
+}
+
+/// Outcome of an N-Body run.
+#[derive(Debug)]
+pub struct NbodyResult {
+    pub report: Report,
+    /// End-to-end wall seconds (all iterations, including tree builds).
+    pub wall: f64,
+    /// Total energy (kinetic + potential/2) per iteration.
+    pub energies: Vec<f64>,
+    /// Buckets in the final tree.
+    pub buckets: usize,
+}
+
+/// Assign buckets to pieces in contiguous Morton blocks (spatial locality,
+/// like ChaNGa's space-filling-curve decomposition).
+fn assign_buckets(nbuckets: usize, pieces: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); pieces];
+    let per = nbuckets.div_ceil(pieces.max(1));
+    for b in 0..nbuckets {
+        out[(b / per).min(pieces - 1)].push(b);
+    }
+    out
+}
+
+fn run_inner(cfg: &NbodyConfig, cpu_only: bool) -> Result<NbodyResult> {
+    let particles = cfg.dataset.generate();
+    let master = Arc::new(Mutex::new(particles));
+    let ktab = Arc::new(cfg.executor_config().ktab.clone());
+
+    let pes = cfg.runtime.pes;
+    let npieces = (pes * cfg.pieces_per_pe).max(1);
+    let mut rt = GCharm::new(Config {
+        executor: cfg.executor_config(),
+        ..cfg.runtime.clone()
+    });
+    for i in 0..npieces {
+        let id = ChareId::new(NBODY_COLLECTION, i as u32);
+        rt.register(id, i % pes, Box::new(TreePiece::new(id)));
+    }
+    rt.start()?;
+
+    let t0 = Instant::now();
+    let mut energies = Vec::with_capacity(cfg.iters);
+    let mut buckets = 0usize;
+    for _ in 0..cfg.iters {
+        let snapshot: Arc<Vec<Particle>> =
+            Arc::new(master.lock().unwrap().clone());
+        let tree = Tree::build(&snapshot);
+        buckets = tree.buckets.len();
+        let assignment = assign_buckets(buckets, npieces);
+        for (i, bucket_ids) in assignment.into_iter().enumerate() {
+            rt.send(
+                ChareId::new(NBODY_COLLECTION, i as u32),
+                Msg::new(
+                    METHOD_START,
+                    StartMsg {
+                        tree: tree.clone(),
+                        snapshot: snapshot.clone(),
+                        master: master.clone(),
+                        buckets: bucket_ids,
+                        theta: cfg.theta,
+                        dt: cfg.dt,
+                        do_ewald: cfg.do_ewald,
+                        cpu_only,
+                        eps2: cfg.eps2,
+                        ktab: ktab.clone(),
+                    },
+                ),
+            );
+        }
+        energies.push(rt.await_reduction(npieces as u64));
+        rt.await_quiescence();
+        // positions changed: device-resident buffers are stale
+        rt.invalidate_device_buffers();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut report = rt.shutdown();
+    report.total_wall = wall;
+    Ok(NbodyResult { report, wall, energies, buckets })
+}
+
+/// Run on the G-Charm runtime (GPU path with the configured strategies).
+pub fn run(cfg: &NbodyConfig) -> Result<NbodyResult> {
+    run_inner(cfg, false)
+}
+
+/// Multi-core CPU baseline: same chare structure, forces computed inline
+/// on the PEs (no work requests, no GPU). The Fig 4 "CPU" series.
+pub fn run_cpu_only(cfg: &NbodyConfig) -> Result<NbodyResult> {
+    run_inner(cfg, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_assignment_partitions() {
+        let a = assign_buckets(10, 3);
+        assert_eq!(a.len(), 3);
+        let all: Vec<usize> = a.iter().flatten().copied().collect();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bucket_assignment_more_pieces_than_buckets() {
+        let a = assign_buckets(2, 5);
+        let total: usize = a.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 2);
+    }
+}

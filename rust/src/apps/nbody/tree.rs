@@ -1,0 +1,313 @@
+//! Barnes-Hut octree over the particle set.
+//!
+//! ChaNGa divides particles among TreePiece chares, each holding part of
+//! the global tree; particles are grouped into *buckets* and all particles
+//! in a bucket interact with the same nodes/particles (paper section 4.1).
+//! Here the tree is built once per iteration from the master particle
+//! array (Morton-sorted, recursive spatial split) and shared read-only
+//! with every TreePiece; buckets are the leaves, capped at
+//! `PARTS_PER_BUCKET` particles so one bucket = one work request = one
+//! "CUDA block" (section 4.3).
+
+use std::sync::Arc;
+
+use crate::runtime::shapes::PARTS_PER_BUCKET;
+use crate::util::{morton, Vec3};
+
+/// One body. Host physics state is f64; kernels see f32 projections.
+#[derive(Debug, Clone, Copy)]
+pub struct Particle {
+    pub pos: Vec3,
+    pub vel: Vec3,
+    pub mass: f64,
+    pub acc: Vec3,
+    pub pot: f64,
+}
+
+impl Particle {
+    pub fn at_rest(pos: Vec3, mass: f64) -> Particle {
+        Particle { pos, vel: Vec3::ZERO, mass, acc: Vec3::ZERO, pot: 0.0 }
+    }
+}
+
+/// Tree node: a cubic cell.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub center: Vec3,
+    /// Half side length of the cell.
+    pub half: f64,
+    /// Center of mass and total mass of the subtree.
+    pub com: Vec3,
+    pub mass: f64,
+    /// Child node indices (-1 = absent).
+    pub children: [i32; 8],
+    /// Bucket index if this is a leaf, else -1.
+    pub bucket: i32,
+    /// Particles in the subtree.
+    pub count: usize,
+    /// Range into `Tree::order`.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Leaf bucket: a contiguous Morton-order range of particles.
+#[derive(Debug, Clone, Copy)]
+pub struct Bucket {
+    pub start: usize,
+    pub end: usize,
+    pub node: usize,
+}
+
+impl Bucket {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// The global Barnes-Hut tree for one iteration.
+#[derive(Debug)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    /// Particle indices in Morton order.
+    pub order: Vec<u32>,
+    pub buckets: Vec<Bucket>,
+    pub lo: Vec3,
+    pub hi: Vec3,
+}
+
+const MAX_DEPTH: usize = 24;
+
+impl Tree {
+    /// Build from the particle array. O(n log n).
+    pub fn build(parts: &[Particle]) -> Arc<Tree> {
+        assert!(!parts.is_empty());
+        let mut lo = parts[0].pos;
+        let mut hi = parts[0].pos;
+        for p in parts {
+            lo = lo.min(p.pos);
+            hi = hi.max(p.pos);
+        }
+        // pad so nothing sits exactly on the boundary
+        let span = (hi - lo).max_component().max(1e-9);
+        let pad = span * 1e-6;
+        lo = lo - Vec3::new(pad, pad, pad);
+        hi = hi + Vec3::new(pad, pad, pad);
+        let side = (hi - lo).max_component();
+        let lof = lo;
+
+        let mut keyed: Vec<(u64, u32)> = parts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let rel = p.pos - lof;
+                (
+                    morton::from_position(
+                        [rel.x, rel.y, rel.z],
+                        0.0,
+                        side.max(1e-12),
+                    ),
+                    i as u32,
+                )
+            })
+            .collect();
+        keyed.sort_unstable_by_key(|&(k, _)| k);
+        let order: Vec<u32> = keyed.iter().map(|&(_, i)| i).collect();
+
+        let mut tree = Tree {
+            nodes: Vec::with_capacity(parts.len() / 4),
+            order,
+            buckets: Vec::new(),
+            lo,
+            hi,
+        };
+        let center = lo + Vec3::new(side / 2.0, side / 2.0, side / 2.0);
+        tree.build_node(parts, 0, parts.len(), center, side / 2.0, 0);
+        Arc::new(tree)
+    }
+
+    /// Recursively build the node covering order[start..end]; returns index.
+    fn build_node(
+        &mut self,
+        parts: &[Particle],
+        start: usize,
+        end: usize,
+        center: Vec3,
+        half: f64,
+        depth: usize,
+    ) -> i32 {
+        if start == end {
+            return -1;
+        }
+        let idx = self.nodes.len();
+        self.nodes.push(Node {
+            center,
+            half,
+            com: Vec3::ZERO,
+            mass: 0.0,
+            children: [-1; 8],
+            bucket: -1,
+            count: end - start,
+            start,
+            end,
+        });
+
+        if end - start <= PARTS_PER_BUCKET || depth >= MAX_DEPTH {
+            let b = self.buckets.len();
+            self.buckets.push(Bucket { start, end, node: idx });
+            self.nodes[idx].bucket = b as i32;
+        } else {
+            // Partition the range into octants around the center. The range
+            // is Morton-sorted, so each octant is a contiguous subrange; a
+            // simple stable partition by octant id keeps it correct even
+            // with duplicate positions.
+            let mut groups: [Vec<u32>; 8] = Default::default();
+            for &pi in &self.order[start..end] {
+                let p = parts[pi as usize].pos;
+                let o = ((p.x >= center.x) as usize)
+                    | (((p.y >= center.y) as usize) << 1)
+                    | (((p.z >= center.z) as usize) << 2);
+                groups[o].push(pi);
+            }
+            let mut cursor = start;
+            let q = half / 2.0;
+            for (o, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let cstart = cursor;
+                for (j, &pi) in group.iter().enumerate() {
+                    self.order[cstart + j] = pi;
+                }
+                cursor += group.len();
+                let ccenter = center
+                    + Vec3::new(
+                        if o & 1 != 0 { q } else { -q },
+                        if o & 2 != 0 { q } else { -q },
+                        if o & 4 != 0 { q } else { -q },
+                    );
+                let child = self.build_node(
+                    parts, cstart, cursor, ccenter, q, depth + 1,
+                );
+                self.nodes[idx].children[o] = child;
+            }
+        }
+
+        // center of mass bottom-up
+        let (mut m, mut com) = (0.0f64, Vec3::ZERO);
+        for &pi in &self.order[start..end] {
+            let p = &parts[pi as usize];
+            m += p.mass;
+            com += p.pos * p.mass;
+        }
+        self.nodes[idx].mass = m;
+        self.nodes[idx].com = if m > 0.0 { com / m } else { center };
+        idx as i32
+    }
+
+    pub fn root(&self) -> &Node {
+        &self.nodes[0]
+    }
+
+    /// Particle indices of a bucket.
+    pub fn bucket_particles(&self, b: usize) -> &[u32] {
+        let bk = &self.buckets[b];
+        &self.order[bk.start..bk.end]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::nbody::dataset::DatasetSpec;
+
+    fn parts() -> Vec<Particle> {
+        DatasetSpec::tiny().generate()
+    }
+
+    #[test]
+    fn buckets_partition_particles() {
+        let ps = parts();
+        let tree = Tree::build(&ps);
+        let mut seen = vec![false; ps.len()];
+        for b in 0..tree.buckets.len() {
+            for &pi in tree.bucket_particles(b) {
+                assert!(!seen[pi as usize], "particle in two buckets");
+                seen[pi as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "particle missing from buckets");
+    }
+
+    #[test]
+    fn bucket_sizes_capped() {
+        let tree = Tree::build(&parts());
+        for b in &tree.buckets {
+            assert!(b.len() <= PARTS_PER_BUCKET);
+            assert!(!b.is_empty());
+        }
+    }
+
+    #[test]
+    fn root_mass_is_total() {
+        let ps = parts();
+        let tree = Tree::build(&ps);
+        let total: f64 = ps.iter().map(|p| p.mass).sum();
+        assert!((tree.root().mass - total).abs() < 1e-9);
+        assert_eq!(tree.root().count, ps.len());
+    }
+
+    #[test]
+    fn node_ranges_nest() {
+        let ps = parts();
+        let tree = Tree::build(&ps);
+        for n in &tree.nodes {
+            let mut child_count = 0usize;
+            for &c in &n.children {
+                if c >= 0 {
+                    let ch = &tree.nodes[c as usize];
+                    assert!(ch.start >= n.start && ch.end <= n.end);
+                    child_count += ch.count;
+                }
+            }
+            if n.bucket < 0 {
+                assert_eq!(child_count, n.count, "internal node loses bodies");
+            }
+        }
+    }
+
+    #[test]
+    fn particles_inside_their_cells() {
+        let ps = parts();
+        let tree = Tree::build(&ps);
+        for n in &tree.nodes {
+            // COM must lie within the cell (sanity of the split)
+            let d = n.com - n.center;
+            let eps = n.half * 1.01 + 1e-9;
+            assert!(
+                d.x.abs() <= eps && d.y.abs() <= eps && d.z.abs() <= eps,
+                "com escapes cell"
+            );
+        }
+    }
+
+    #[test]
+    fn single_particle_tree() {
+        let ps = vec![Particle::at_rest(Vec3::new(1.0, 2.0, 3.0), 5.0)];
+        let tree = Tree::build(&ps);
+        assert_eq!(tree.buckets.len(), 1);
+        assert_eq!(tree.root().mass, 5.0);
+    }
+
+    #[test]
+    fn coincident_particles_terminate() {
+        // identical positions would recurse forever without the depth cap
+        let ps = vec![Particle::at_rest(Vec3::new(1.0, 1.0, 1.0), 1.0); 40];
+        let tree = Tree::build(&ps);
+        let total: usize = tree.buckets.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 40);
+    }
+}

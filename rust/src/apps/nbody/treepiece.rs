@@ -1,0 +1,258 @@
+//! TreePiece chares: the message-driven unit of the ChaNGa-style app.
+//!
+//! Each TreePiece owns a contiguous Morton range of buckets (paper section
+//! 4.1: "particles are divided among TreePiece chares"). Per iteration a
+//! piece receives START, walks the (shared, read-only) tree for each of its
+//! buckets, and submits one Force work request per 128-entry chunk of the
+//! interaction list plus one Ewald request per bucket. Results stream back
+//! via METHOD_RESULT; once all expected results arrived the piece
+//! integrates its particles (leapfrog), writes them back to the master
+//! array, and contributes to the iteration reduction.
+//!
+//! Chunked lists are where *data reuse* comes from: every chunk of a bucket
+//! rereads the same particle buffer, so with the chare table enabled only
+//! the first chunk transfers it (section 3.2).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{
+    Chare, ChareId, Ctx, Msg, WorkDraft, WorkKind, WrPayload, WrResult,
+    METHOD_RESULT,
+};
+use crate::runtime::shapes::{
+    INTERACTIONS, INTER_W, OUT_W, PARTICLE_W, PARTS_PER_BUCKET,
+};
+use crate::util::Vec3;
+
+use super::tree::{Particle, Tree};
+use super::walk::interaction_list_ids;
+
+/// Entry method id: begin one iteration.
+pub const METHOD_START: u32 = 1;
+
+/// START payload: everything a piece needs for one iteration.
+pub struct StartMsg {
+    pub tree: Arc<Tree>,
+    /// Read-only particle snapshot the tree was built from.
+    pub snapshot: Arc<Vec<Particle>>,
+    /// Master array to write integrated state back into.
+    pub master: Arc<Mutex<Vec<Particle>>>,
+    /// Bucket ids assigned to this piece.
+    pub buckets: Vec<usize>,
+    pub theta: f64,
+    pub dt: f64,
+    pub do_ewald: bool,
+    /// Skip the runtime: compute forces inline on the PE (the multi-core
+    /// CPU baseline of Fig 4).
+    pub cpu_only: bool,
+    /// Gravity softening (squared), matching the executor's kernels.
+    pub eps2: f32,
+    /// Ewald k-table (read in cpu_only mode; the GPU path uses the
+    /// executor's copy).
+    pub ktab: Arc<Vec<f32>>,
+}
+
+/// Per-particle force accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+struct Accum {
+    acc: Vec3,
+    pot: f64,
+}
+
+/// The TreePiece chare. Knows its own ChareId so work-request results route
+/// back to it.
+pub struct TreePiece {
+    id: ChareId,
+    expected: usize,
+    received: usize,
+    /// particle index -> accumulated acceleration/potential
+    accum: HashMap<u32, Accum>,
+    /// bucket tag -> particle ids (in kernel row order)
+    rows: HashMap<u64, Vec<u32>>,
+    iter_state: Option<IterState>,
+}
+
+struct IterState {
+    master: Arc<Mutex<Vec<Particle>>>,
+    snapshot: Arc<Vec<Particle>>,
+    dt: f64,
+}
+
+impl TreePiece {
+    pub fn new(id: ChareId) -> TreePiece {
+        TreePiece {
+            id,
+            expected: 0,
+            received: 0,
+            accum: HashMap::new(),
+            rows: HashMap::new(),
+            iter_state: None,
+        }
+    }
+
+    fn on_start(&mut self, m: StartMsg, ctx: &mut Ctx) {
+        self.expected = 0;
+        self.received = 0;
+        self.accum.clear();
+        self.rows.clear();
+
+        let parts = &*m.snapshot;
+        let mut kinetic = 0.0f64;
+
+        for &b in &m.buckets {
+            let pids = m.tree.bucket_particles(b).to_vec();
+            // padded particle buffer for this bucket (the reusable unit)
+            let mut pbuf = vec![0.0f32; PARTS_PER_BUCKET * PARTICLE_W];
+            for (j, &pi) in pids.iter().enumerate() {
+                let p = &parts[pi as usize];
+                pbuf[j * PARTICLE_W] = p.pos.x as f32;
+                pbuf[j * PARTICLE_W + 1] = p.pos.y as f32;
+                pbuf[j * PARTICLE_W + 2] = p.pos.z as f32;
+                pbuf[j * PARTICLE_W + 3] = p.mass as f32;
+            }
+            self.rows.insert(b as u64, pids.clone());
+            for &pi in &pids {
+                self.accum.insert(pi, Accum::default());
+                let p = &parts[pi as usize];
+                kinetic += 0.5 * p.mass * p.vel.norm2();
+            }
+
+            let (list, list_ids, _) =
+                interaction_list_ids(&m.tree, parts, b, m.theta);
+
+            if m.cpu_only {
+                // Fig 4 CPU baseline: compute inline on the PE, no runtime.
+                let mut inters = vec![0.0f32; list.len() * INTER_W];
+                for (k, e) in list.iter().enumerate() {
+                    inters[k * INTER_W..k * INTER_W + 4].copy_from_slice(e);
+                }
+                let real = &pbuf[..pids.len() * PARTICLE_W];
+                let out = crate::coordinator::cpu_kernels::cpu_gravity(
+                    real, &inters, m.eps2,
+                );
+                self.fold_rows(&pids, &out);
+                if m.do_ewald {
+                    let out = crate::coordinator::cpu_kernels::cpu_ewald(
+                        real, &m.ktab,
+                    );
+                    self.fold_rows(&pids, &out);
+                }
+                continue;
+            }
+
+            // chunk the interaction list into I-entry work requests
+            for (chunk, ids) in
+                list.chunks(INTERACTIONS).zip(list_ids.chunks(INTERACTIONS))
+            {
+                let mut inters = vec![0.0f32; INTERACTIONS * INTER_W];
+                for (k, e) in chunk.iter().enumerate() {
+                    inters[k * INTER_W..k * INTER_W + 4].copy_from_slice(e);
+                }
+                ctx.submit(WorkDraft {
+                    chare: self.id,
+                    kind: WorkKind::Force,
+                    buffer: Some(b as u64),
+                    data_items: chunk.len(),
+                    tag: b as u64,
+                    payload: WrPayload::Force {
+                        parts: pbuf.clone(),
+                        inters,
+                        inter_ids: ids.to_vec(),
+                    },
+                });
+                self.expected += 1;
+            }
+            if m.do_ewald {
+                ctx.submit(WorkDraft {
+                    chare: self.id,
+                    kind: WorkKind::Ewald,
+                    buffer: Some(b as u64),
+                    data_items: pids.len(),
+                    tag: b as u64,
+                    payload: WrPayload::Ewald { parts: pbuf.clone() },
+                });
+                self.expected += 1;
+            }
+        }
+
+        self.iter_state = Some(IterState {
+            master: m.master,
+            snapshot: m.snapshot.clone(),
+            dt: m.dt,
+        });
+        if m.cpu_only || self.expected == 0 {
+            // everything computed inline: integrate immediately
+            self.integrate_and_contribute(ctx, kinetic);
+        }
+    }
+
+    fn fold_rows(&mut self, pids: &[u32], out: &[f32]) {
+        for (j, &pi) in pids.iter().enumerate() {
+            let a = self.accum.get_mut(&pi).expect("accumulator exists");
+            a.acc += Vec3::new(
+                out[j * OUT_W] as f64,
+                out[j * OUT_W + 1] as f64,
+                out[j * OUT_W + 2] as f64,
+            );
+            a.pot += out[j * OUT_W + 3] as f64;
+        }
+    }
+
+    fn on_result(&mut self, r: WrResult, ctx: &mut Ctx) {
+        let pids = self
+            .rows
+            .get(&r.tag)
+            .expect("result for unknown bucket")
+            .clone();
+        self.fold_rows(&pids, &r.out);
+        self.received += 1;
+        if self.received == self.expected {
+            let st = self.iter_state.as_ref().expect("iteration in flight");
+            let kinetic: f64 = self
+                .accum
+                .keys()
+                .map(|&pi| {
+                    let p = &st.snapshot[pi as usize];
+                    0.5 * p.mass * p.vel.norm2()
+                })
+                .sum();
+            self.integrate_and_contribute(ctx, kinetic);
+        }
+    }
+
+    /// Leapfrog kick+drift, write back to the master array, contribute
+    /// kinetic + 1/2 potential (this piece's share of total energy).
+    fn integrate_and_contribute(&mut self, ctx: &mut Ctx, kinetic: f64) {
+        let st = self.iter_state.take().expect("iteration in flight");
+        let mut potential = 0.0f64;
+        {
+            let mut master = st.master.lock().unwrap();
+            for (&pi, a) in &self.accum {
+                let p = &mut master[pi as usize];
+                p.acc = a.acc;
+                p.pot = a.pot;
+                potential += 0.5 * p.mass * a.pot;
+                p.vel += a.acc * st.dt;
+                p.pos += p.vel * st.dt;
+            }
+        }
+        ctx.contribute(kinetic + potential);
+    }
+}
+
+impl Chare for TreePiece {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_START => {
+                let m: StartMsg = msg.take();
+                self.on_start(m, ctx);
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                self.on_result(r, ctx);
+            }
+            other => panic!("TreePiece: unknown method {other}"),
+        }
+    }
+}

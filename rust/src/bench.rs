@@ -1,0 +1,471 @@
+//! Figure-regeneration harness and micro-bench helpers.
+//!
+//! Every table/figure of the paper's evaluation section has a `run_figN`
+//! function here that executes the relevant configurations and prints the
+//! same series the paper plots, with the paper's claimed deltas alongside
+//! ours. `cargo bench` binaries (rust/benches/) and the `gcharm figures`
+//! CLI both call these. See DESIGN.md section 4 for the experiment index.
+//!
+//! Absolute numbers differ from the paper (CPU PJRT executor instead of a
+//! Kepler K20): the reproduction targets are the *orderings and ratios*.
+//! Modeled-K20 times (runtime::device_sim) are printed next to measured
+//! wall clock.
+
+use std::time::Instant;
+
+use crate::apps::md::{self, MdConfig};
+use crate::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
+use crate::coordinator::{CombinePolicy, Config, DataPolicy, SplitPolicy};
+
+/// Plain-text table printer.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let s: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", s.join("  "));
+        };
+        line(&self.headers);
+        println!(
+            "  {}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Micro-benchmark: median ns/op over `reps` timed batches of `batch` calls.
+pub fn bench_ns<F: FnMut()>(name: &str, batch: usize, reps: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..batch {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    println!("  {name:<44} {med:>12.1} ns/op  (n={batch}x{reps})");
+    med
+}
+
+fn pct(better: f64, worse: f64) -> f64 {
+    (worse - better) / worse * 100.0
+}
+
+/// Scale iteration counts / particle counts down for quick runs.
+pub struct Scale {
+    pub small_n: usize,
+    pub large_n: usize,
+    pub small_iters: usize,
+    pub large_iters: usize,
+}
+
+impl Scale {
+    pub fn quick() -> Scale {
+        Scale { small_n: 4096, large_n: 12_288, small_iters: 2, large_iters: 2 }
+    }
+
+    pub fn full() -> Scale {
+        Scale {
+            small_n: 16 * 1024,
+            large_n: 48 * 1024,
+            small_iters: 6,
+            large_iters: 3,
+        }
+    }
+}
+
+fn nbody_cfg(
+    n: usize,
+    iters: usize,
+    base: &DatasetSpec,
+    pes: usize,
+    combine: CombinePolicy,
+    data: DataPolicy,
+) -> NbodyConfig {
+    let mut cfg = NbodyConfig::new(DatasetSpec { n, ..base.clone() });
+    cfg.iters = iters;
+    cfg.runtime = Config {
+        pes,
+        combine,
+        data_policy: data,
+        ..Config::default()
+    };
+    cfg
+}
+
+/// Fig 2: dynamic vs static combining, small and large datasets.
+/// Paper: dynamic is 8-38% faster (small), ~19% (large).
+pub fn run_fig2(scale: &Scale) {
+    println!("\n### Figure 2: dynamic vs static combining strategies (ChaNGa)");
+    println!("paper claim: adaptive 8-38% faster on cube300, ~19% on lambs");
+    let mut t = Table::new(
+        "Fig 2",
+        &[
+            "dataset", "strategy", "wall(s)", "modeledK20(s)", "launches",
+            "avg batch", "idle flushes",
+        ],
+    );
+    for (label, base, n, iters) in [
+        ("small(cube300~)", DatasetSpec::cube300(), scale.small_n, scale.small_iters),
+        ("large(lambs~)", DatasetSpec::lambs(), scale.large_n, scale.large_iters),
+    ] {
+        let mut walls = Vec::new();
+        for (name, combine) in [
+            ("static(100)", CombinePolicy::StaticEvery(100)),
+            ("adaptive", CombinePolicy::Adaptive),
+        ] {
+            let cfg = nbody_cfg(
+                n,
+                iters,
+                &base,
+                4,
+                combine,
+                DataPolicy::ReuseSorted,
+            );
+            let r = nbody::run(&cfg).expect("nbody run");
+            walls.push(r.wall);
+            t.row(vec![
+                label.to_string(),
+                name.to_string(),
+                format!("{:.3}", r.wall),
+                format!("{:.3}", r.report.modeled_total()),
+                r.report.launches.to_string(),
+                format!("{:.1}", r.report.avg_batch()),
+                r.report.flush_idle.to_string(),
+            ]);
+        }
+        let delta = pct(walls[1], walls[0]);
+        println!(
+            "  -> {label}: adaptive vs static = {delta:+.1}% reduction \
+             (paper: 8-38% small / ~19% large)"
+        );
+    }
+    t.print();
+}
+
+/// Fig 3: GPU kernel + transfer times for no-reuse / reuse / reuse+sort.
+/// Paper: reuse cuts transfers 62% but inflates kernel 49%; sorting
+/// recovers ~10% of kernel time; reuse+sort beats no-reuse by ~12% total.
+pub fn run_fig3(scale: &Scale) {
+    println!("\n### Figure 3: data reuse + coalescing (large dataset, 8 cores)");
+    println!(
+        "paper claim: reuse -62% transfer, +49% kernel; reuse+sort -12% total \
+         vs no-reuse, kernel -10% vs reuse-only"
+    );
+    let mut t = Table::new(
+        "Fig 3",
+        &[
+            "policy", "kernel wall(s)", "kernel K20(s)", "xfer K20(s)",
+            "xfer MiB", "hit rate", "total K20(s)",
+        ],
+    );
+    let base = DatasetSpec::lambs();
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for (name, policy) in [
+        ("no-reuse", DataPolicy::NoReuse),
+        ("reuse", DataPolicy::Reuse),
+        ("reuse+sort", DataPolicy::ReuseSorted),
+    ] {
+        let mut cfg = nbody_cfg(
+            scale.large_n,
+            scale.large_iters,
+            &base,
+            8,
+            CombinePolicy::Adaptive,
+            policy,
+        );
+        // Fig 3 isolates the force kernel (the reuse strategy's target);
+        // Ewald launches are always contiguous and would dilute the series.
+        cfg.do_ewald = false;
+        let r = nbody::run(&cfg).expect("nbody run");
+        let rep = &r.report;
+        rows.push((
+            name.to_string(),
+            rep.kernel_wall,
+            rep.kernel_modeled,
+            rep.transfer_modeled,
+        ));
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}", rep.kernel_wall),
+            format!("{:.3}", rep.kernel_modeled),
+            format!("{:.3}", rep.transfer_modeled),
+            format!("{:.1}", rep.transfer_bytes as f64 / (1 << 20) as f64),
+            format!("{:.0}%", rep.hit_rate() * 100.0),
+            format!("{:.3}", rep.modeled_total()),
+        ]);
+    }
+    t.print();
+    let (k0, x0) = (rows[0].2, rows[0].3);
+    let (k1, x1) = (rows[1].2, rows[1].3);
+    let (k2, _) = (rows[2].2, rows[2].3);
+    println!(
+        "  -> transfer: reuse vs no-reuse = {:+.0}% (paper -62%)",
+        -pct(x1, x0)
+    );
+    println!(
+        "  -> kernel (modeled): reuse vs no-reuse = {:+.0}% (paper +49%)",
+        (k1 - k0) / k0 * 100.0
+    );
+    println!(
+        "  -> kernel (modeled): reuse+sort vs reuse = {:+.0}% (paper ~-10%)",
+        (k2 - k1) / k1 * 100.0
+    );
+    println!(
+        "  -> total (modeled): reuse+sort vs no-reuse = {:+.0}% (paper ~-12%)",
+        (rows[2].2 + rows[2].3 - k0 - x0) / (k0 + x0) * 100.0
+    );
+}
+
+/// Fig 4: adaptive vs static vs hand-tuned vs CPU-only across core counts.
+pub fn run_fig4(scale: &Scale) {
+    println!("\n### Figure 4: comparison with static strategies and hand-tuned code");
+    println!(
+        "paper claim: adaptive < static; hand-tuned fastest; similar scaling"
+    );
+    let mut t = Table::new(
+        "Fig 4 (wall seconds, large dataset)",
+        &["pes", "cpu-only", "gcharm-static", "gcharm-adaptive", "hand-tuned"],
+    );
+    let base = DatasetSpec::lambs();
+    for pes in [1usize, 2, 4, 8] {
+        let cpu = nbody::run_cpu_only(&nbody_cfg(
+            scale.large_n,
+            scale.large_iters,
+            &base,
+            pes,
+            CombinePolicy::Adaptive,
+            DataPolicy::NoReuse,
+        ))
+        .expect("cpu run");
+        let stat = nbody::run(&nbody_cfg(
+            scale.large_n,
+            scale.large_iters,
+            &base,
+            pes,
+            CombinePolicy::StaticEvery(100),
+            DataPolicy::Reuse,
+        ))
+        .expect("static run");
+        let adapt = nbody::run(&nbody_cfg(
+            scale.large_n,
+            scale.large_iters,
+            &base,
+            pes,
+            CombinePolicy::Adaptive,
+            DataPolicy::ReuseSorted,
+        ))
+        .expect("adaptive run");
+        let hand = nbody::handtuned::run_handtuned(&nbody_cfg(
+            scale.large_n,
+            scale.large_iters,
+            &base,
+            pes,
+            CombinePolicy::Adaptive,
+            DataPolicy::NoReuse,
+        ))
+        .expect("handtuned run");
+        t.row(vec![
+            pes.to_string(),
+            format!("{:.3}", cpu.wall),
+            format!("{:.3}", stat.wall),
+            format!("{:.3}", adapt.wall),
+            format!("{:.3}", hand.wall),
+        ]);
+        if pes == 8 {
+            println!(
+                "  -> 8 pes: adaptive vs static {:+.1}%; adaptive vs cpu-only \
+                 {:+.1}% (paper: ~62% over CPU for lambs)",
+                pct(adapt.wall, stat.wall),
+                pct(adapt.wall, cpu.wall),
+            );
+        }
+    }
+    t.print();
+}
+
+/// Fig 5: MD total times, static vs adaptive hybrid scheduling.
+/// Paper: adaptive 10-15% faster; ~22% over single-core CPU.
+pub fn run_fig5(scale: &Scale) {
+    println!("\n### Figure 5: MD simulations, dynamic scheduling");
+    println!("paper claim: adaptive split 10-15% faster than static; ~22% over 1-core CPU");
+    let mut t = Table::new(
+        "Fig 5 (wall seconds)",
+        &[
+            "particles", "1-core cpu", "static split", "adaptive split",
+            "cpu/gpu items (adaptive)",
+        ],
+    );
+    let sizes: Vec<usize> = if scale.large_n <= 16_384 {
+        vec![2_048, 4_096, 8_192]
+    } else {
+        vec![4_096, 8_192, 16_384, 32_768]
+    };
+    for n in sizes {
+        let mk = |split: SplitPolicy| {
+            let mut cfg = MdConfig::new(n); // box/grid auto-scale with n
+            cfg.steps = scale.small_iters.max(2) * 3;
+            cfg.runtime = Config {
+                pes: 4,
+                split,
+                hybrid_md: true,
+                ..Config::default()
+            };
+            cfg
+        };
+        let sc_cfg = mk(SplitPolicy::AdaptiveItems);
+        let sc = md::run_single_core_cpu(&sc_cfg);
+        let stat = md::run(&mk(SplitPolicy::StaticCount)).expect("static md");
+        let adapt =
+            md::run(&mk(SplitPolicy::AdaptiveItems)).expect("adaptive md");
+        t.row(vec![
+            n.to_string(),
+            format!("{:.3}", sc.wall),
+            format!("{:.3}", stat.wall),
+            format!("{:.3}", adapt.wall),
+            format!(
+                "{}/{}",
+                adapt.report.cpu_items, adapt.report.gpu_items
+            ),
+        ]);
+        println!(
+            "  -> n={n}: adaptive vs static {:+.1}% (paper 10-15%); vs 1-core \
+             {:+.1}% (paper ~22%)",
+            pct(adapt.wall, stat.wall),
+            pct(adapt.wall, sc.wall),
+        );
+    }
+    t.print();
+}
+
+/// Ablations over the adaptive combiner's two design parameters
+/// (DESIGN.md section 4): the occupancy-derived maxSize (what if we combined
+/// fewer/more than the occupancy calculator says?) and the idle-flush
+/// threshold multiplier (the paper's 2 x maxInterval).
+pub fn run_ablation(scale: &Scale) {
+    println!("\n### Ablation: combiner design choices (small dataset)");
+    let base = DatasetSpec::cube300();
+
+    let mut t = Table::new(
+        "maxSize ablation (static flush target via StaticEvery)",
+        &["combine target", "wall(s)", "launches", "avg batch"],
+    );
+    for period in [13usize, 26, 52, 104, 208] {
+        let cfg = nbody_cfg(
+            scale.small_n,
+            scale.small_iters,
+            &base,
+            4,
+            CombinePolicy::StaticEvery(period),
+            DataPolicy::ReuseSorted,
+        );
+        let r = nbody::run(&cfg).expect("nbody run");
+        t.row(vec![
+            period.to_string(),
+            format!("{:.3}", r.wall),
+            r.report.launches.to_string(),
+            format!("{:.1}", r.report.avg_batch()),
+        ]);
+    }
+    t.print();
+    println!(
+        "  (on a real GPU the occupancy-derived 104 sits at the minimum: \
+         smaller targets under-fill the SMs, larger ones add batching \
+         latency. On the CPU PJRT executor launch cost scales with batch \
+         compute, so the left side of the curve flattens -- the sweep \
+         documents the tradeoff the occupancy model resolves.)"
+    );
+}
+
+/// Section 4.3's occupancy table (validates the combiner's maxSize inputs).
+pub fn print_occupancy_table() {
+    use crate::runtime::{occupancy, GpuSpec, KernelResources};
+    let spec = GpuSpec::kepler_k20();
+    let mut t = Table::new(
+        "Occupancy model (paper section 4.3)",
+        &["kernel", "occupancy", "blocks/SM", "maxSize", "paper maxSize"],
+    );
+    for (name, k, paper) in [
+        ("force", KernelResources::force_kernel(), "104"),
+        ("ewald", KernelResources::ewald_kernel(), "65"),
+        ("md", KernelResources::md_kernel(), "-"),
+    ] {
+        let o = occupancy(&spec, &k);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}%", o.occupancy * 100.0),
+            o.blocks_per_sm.to_string(),
+            o.max_size.to_string(),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn pct_math() {
+        assert!((pct(80.0, 100.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_ns_returns_positive() {
+        let mut x = 0u64;
+        let ns = bench_ns("noop", 100, 3, || x = x.wrapping_add(1));
+        assert!(ns >= 0.0);
+        assert!(x > 0);
+    }
+}

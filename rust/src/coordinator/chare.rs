@@ -1,0 +1,163 @@
+//! Chares: message-driven objects with entry methods (paper section 2.1).
+//!
+//! A parallel application divides its data among arrays of chares; entry
+//! methods are invoked by messages from chares on the same or other PEs.
+//! The runtime over-decomposes: many more chares than PEs. Chares here are
+//! `Box<dyn Chare>` owned by one PE thread; messages carry a method id and
+//! an `Any` payload (apps downcast to their message types).
+
+use std::any::Any;
+
+use super::work_request::{WorkKind, WrPayload, WrResult};
+use crate::runtime::memory::BufferId;
+
+/// Identity of a chare: (collection, index) -- like a Charm++ chare-array
+/// element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChareId {
+    pub collection: u32,
+    pub index: u32,
+}
+
+impl ChareId {
+    pub fn new(collection: u32, index: u32) -> ChareId {
+        ChareId { collection, index }
+    }
+}
+
+/// Reserved method id: delivery of a work-request result. Apps must route
+/// this to their result handling.
+pub const METHOD_RESULT: u32 = u32::MAX;
+
+/// A message to a chare entry method.
+pub struct Msg {
+    pub method: u32,
+    pub payload: Box<dyn Any + Send>,
+}
+
+impl Msg {
+    pub fn new<T: Any + Send>(method: u32, payload: T) -> Msg {
+        Msg { method, payload: Box::new(payload) }
+    }
+
+    /// Downcast the payload, panicking with a useful message on mismatch
+    /// (a mismatch is always an app bug).
+    pub fn take<T: Any>(self) -> T {
+        *self
+            .payload
+            .downcast::<T>()
+            .unwrap_or_else(|_| panic!("message payload type mismatch"))
+    }
+}
+
+impl std::fmt::Debug for Msg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Msg").field("method", &self.method).finish()
+    }
+}
+
+/// Draft of a work request an entry method submits; the runtime assigns the
+/// id and arrival timestamp.
+#[derive(Debug, Clone)]
+pub struct WorkDraft {
+    pub chare: ChareId,
+    pub kind: WorkKind,
+    pub buffer: Option<BufferId>,
+    pub data_items: usize,
+    /// Correlation tag echoed in the result (e.g. bucket index).
+    pub tag: u64,
+    pub payload: WrPayload,
+}
+
+/// Effects an entry method can produce. Collected by the context during
+/// `receive` and dispatched by the PE loop afterwards (so entry methods
+/// never block).
+pub enum Effect {
+    /// Send a message to another chare.
+    Send(ChareId, Msg),
+    /// Submit a work request to the runtime scheduler.
+    Work(WorkDraft),
+    /// Contribute to the current reduction (quiescence/iteration barrier).
+    Contribute(f64),
+}
+
+/// Execution context handed to entry methods.
+pub struct Ctx {
+    pub pe: usize,
+    pub(crate) effects: Vec<Effect>,
+}
+
+impl Ctx {
+    pub(crate) fn new(pe: usize) -> Ctx {
+        Ctx { pe, effects: Vec::new() }
+    }
+
+    /// Invoke an entry method on another chare (asynchronous).
+    pub fn send(&mut self, to: ChareId, msg: Msg) {
+        self.effects.push(Effect::Send(to, msg));
+    }
+
+    /// Submit GPU/hybrid work to the runtime (G-Charm's
+    /// `gcharm_insert_request`).
+    pub fn submit(&mut self, draft: WorkDraft) {
+        self.effects.push(Effect::Work(draft));
+    }
+
+    /// Contribute `value` to the run's reduction; the driver's
+    /// `await_reduction(n)` completes after n contributions.
+    pub fn contribute(&mut self, value: f64) {
+        self.effects.push(Effect::Contribute(value));
+    }
+
+    pub(crate) fn drain(&mut self) -> Vec<Effect> {
+        std::mem::take(&mut self.effects)
+    }
+}
+
+/// A message-driven object. `receive` must not block; long-running work
+/// belongs in work requests.
+pub trait Chare: Send {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx);
+}
+
+/// Convenience: the payload type of METHOD_RESULT messages.
+pub type ResultMsg = WrResult;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = Msg::new(3, vec![1u32, 2, 3]);
+        assert_eq!(m.method, 3);
+        let v: Vec<u32> = m.take();
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "type mismatch")]
+    fn msg_wrong_type_panics() {
+        let m = Msg::new(0, 42u32);
+        let _: String = m.take();
+    }
+
+    #[test]
+    fn ctx_collects_effects_in_order() {
+        let mut ctx = Ctx::new(2);
+        ctx.send(ChareId::new(0, 1), Msg::new(0, ()));
+        ctx.contribute(1.5);
+        let effects = ctx.drain();
+        assert_eq!(effects.len(), 2);
+        assert!(matches!(effects[0], Effect::Send(..)));
+        assert!(matches!(effects[1], Effect::Contribute(v) if v == 1.5));
+        assert!(ctx.drain().is_empty());
+    }
+
+    #[test]
+    fn chare_id_ordering() {
+        let a = ChareId::new(0, 5);
+        let b = ChareId::new(1, 0);
+        assert!(a < b);
+    }
+}

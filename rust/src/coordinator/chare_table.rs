@@ -1,0 +1,215 @@
+//! The chare table: chare buffer -> device slot mapping and reuse decisions.
+//!
+//! G-Charm "keeps track of the mapping of chare buffers to slots in the
+//! device memory using a chare table" (paper section 3.2): on work-request
+//! creation, the buffer indices are looked up, already-resident buffers are
+//! not re-transferred, and missing buffers are staged into free slots.
+//!
+//! Here the device pool is mirrored on the host (`pool`): on a miss the
+//! buffer payload is written into the mirror at the assigned slot and the
+//! transferred byte count grows; on a hit no bytes move. The mirror is what
+//! the gather kernels receive as their `pool` argument -- physically the
+//! whole mirror accompanies each PJRT call (the CPU client is the simulated
+//! device), but the *accounted* PCIe bytes follow the paper's model.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::memory::{BufferId, DeviceMemory};
+use crate::runtime::shapes::{PARTICLE_W, PARTS_PER_BUCKET};
+
+/// Chare-buffer residency manager over the simulated device pool.
+#[derive(Debug)]
+pub struct ChareTable {
+    mem: DeviceMemory,
+    /// Host mirror of the device particle pool:
+    /// capacity * PARTS_PER_BUCKET rows of PARTICLE_W floats. Shared (Arc)
+    /// with in-flight launches; staging uses copy-on-write so a launch
+    /// never copies the pool unless one is concurrently in flight.
+    pool: std::sync::Arc<Vec<f32>>,
+    /// Accounted PCIe bytes actually transferred (misses).
+    transferred: u64,
+    /// Accounted PCIe bytes saved by reuse (hits).
+    saved: u64,
+}
+
+/// Result of staging one buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Staged {
+    /// Device slot holding the buffer.
+    pub slot: u32,
+    /// Bytes that crossed the (modeled) bus for this staging (0 on a hit).
+    pub bytes: u64,
+}
+
+impl ChareTable {
+    /// `slots`: device pool capacity in bucket-buffer slots.
+    pub fn new(slots: usize) -> ChareTable {
+        ChareTable {
+            mem: DeviceMemory::new(slots),
+            pool: std::sync::Arc::new(vec![
+                0.0;
+                slots * PARTS_PER_BUCKET * PARTICLE_W
+            ]),
+            transferred: 0,
+            saved: 0,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.mem.capacity()
+    }
+
+    /// Pool rows (particles) in the mirror.
+    pub fn pool_rows(&self) -> usize {
+        self.mem.capacity() * PARTS_PER_BUCKET
+    }
+
+    pub fn pool(&self) -> &[f32] {
+        &self.pool
+    }
+
+    /// Shared handle to the mirror (zero-copy launch argument).
+    pub fn pool_arc(&self) -> std::sync::Arc<Vec<f32>> {
+        self.pool.clone()
+    }
+
+    /// Stage `data` (one bucket buffer, P x 4 floats) for `id` and pin its
+    /// slot until `release` -- pending combined launches must not lose
+    /// their slots to eviction.
+    pub fn stage_pinned(&mut self, id: BufferId, data: &[f32]) -> Result<Staged> {
+        let slot_floats = PARTS_PER_BUCKET * PARTICLE_W;
+        if data.len() != slot_floats {
+            bail!("buffer {id}: expected {slot_floats} floats, got {}", data.len());
+        }
+        let Some(res) = self.mem.acquire(id) else {
+            bail!("device pool exhausted: all {} slots pinned", self.mem.capacity());
+        };
+        let slot = res.slot();
+        let bytes = if res.is_hit() {
+            self.saved += (data.len() * 4) as u64;
+            0
+        } else {
+            let off = slot * slot_floats;
+            let pool = std::sync::Arc::make_mut(&mut self.pool);
+            pool[off..off + slot_floats].copy_from_slice(data);
+            let b = (data.len() * 4) as u64;
+            self.transferred += b;
+            b
+        };
+        self.mem.pin(id);
+        Ok(Staged { slot: slot as u32, bytes })
+    }
+
+    /// Release the pin taken by `stage_pinned`.
+    pub fn release(&mut self, id: BufferId) {
+        self.mem.unpin(id);
+    }
+
+    /// Invalidate one buffer (its chare rewrote the data).
+    pub fn invalidate(&mut self, id: BufferId) {
+        self.mem.invalidate(id);
+    }
+
+    /// Invalidate everything (iteration boundary with full rewrites).
+    pub fn invalidate_all(&mut self) {
+        self.mem.invalidate_all();
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.mem.hits()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.mem.misses()
+    }
+
+    pub fn transferred_bytes(&self) -> u64 {
+        self.transferred
+    }
+
+    pub fn saved_bytes(&self) -> u64 {
+        self.saved
+    }
+
+    /// Hit rate over all stagings so far (0 if none).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.mem.hits() + self.mem.misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.mem.hits() as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(v: f32) -> Vec<f32> {
+        vec![v; PARTS_PER_BUCKET * PARTICLE_W]
+    }
+
+    #[test]
+    fn miss_then_hit_accounting() {
+        let mut t = ChareTable::new(8);
+        let a = t.stage_pinned(1, &buf(1.0)).unwrap();
+        assert!(a.bytes > 0);
+        t.release(1);
+        let b = t.stage_pinned(1, &buf(1.0)).unwrap();
+        assert_eq!(b.bytes, 0);
+        assert_eq!(a.slot, b.slot);
+        assert_eq!(t.hits(), 1);
+        assert_eq!(t.misses(), 1);
+        assert_eq!(t.saved_bytes(), a.bytes);
+        assert_eq!(t.transferred_bytes(), a.bytes);
+        t.release(1);
+    }
+
+    #[test]
+    fn pool_mirror_holds_staged_data() {
+        let mut t = ChareTable::new(4);
+        let s = t.stage_pinned(9, &buf(3.5)).unwrap();
+        let off = s.slot as usize * PARTS_PER_BUCKET * PARTICLE_W;
+        assert!(t.pool()[off..off + 4].iter().all(|&x| x == 3.5));
+        t.release(9);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let mut t = ChareTable::new(4);
+        assert!(t.stage_pinned(1, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn exhaustion_when_all_pinned() {
+        let mut t = ChareTable::new(2);
+        t.stage_pinned(1, &buf(1.0)).unwrap();
+        t.stage_pinned(2, &buf(2.0)).unwrap();
+        assert!(t.stage_pinned(3, &buf(3.0)).is_err());
+        t.release(1);
+        assert!(t.stage_pinned(3, &buf(3.0)).is_ok());
+    }
+
+    #[test]
+    fn invalidate_forces_retransfer() {
+        let mut t = ChareTable::new(4);
+        t.stage_pinned(5, &buf(1.0)).unwrap();
+        t.release(5);
+        t.invalidate(5);
+        let s = t.stage_pinned(5, &buf(2.0)).unwrap();
+        assert!(s.bytes > 0, "invalidated buffer must re-transfer");
+        t.release(5);
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut t = ChareTable::new(4);
+        assert_eq!(t.hit_rate(), 0.0);
+        t.stage_pinned(1, &buf(1.0)).unwrap();
+        t.release(1);
+        t.stage_pinned(1, &buf(1.0)).unwrap();
+        t.release(1);
+        assert!((t.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

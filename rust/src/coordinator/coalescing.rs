@@ -1,0 +1,180 @@
+//! Sorted-index maintenance for coalesced gather access (paper section 3.2).
+//!
+//! Data reuse leaves a combined kernel's inputs scattered across device
+//! slots (Fig 1c). The paper's fix: keep the slot indices *sorted* so
+//! consecutive thread blocks touch nearby memory (Fig 1d). Sorting after
+//! combining would cost O(N log N) per flush; instead each index is
+//! binary-search-inserted at `gcharm_insert_request()` time, for a total of
+//! O(log 1) + O(log 2) + ... + O(log N) = O(log N!).
+//!
+//! `SortedPending` keeps (slot, wr-position) pairs ordered by slot and
+//! reports a *locality score* -- the fraction of consecutive launch slots
+//! that land on adjacent device rows -- which the Fig 3 bench prints
+//! alongside the timing deltas.
+
+/// Pending combined-launch membership ordered by device slot.
+#[derive(Debug, Default, Clone)]
+pub struct SortedPending {
+    /// (device slot, submitter token) sorted ascending by slot; ties keep
+    /// insertion order (stable for equal slots).
+    entries: Vec<(u32, u64)>,
+    /// Total binary-search probe count, to validate the O(log N!) claim.
+    probes: u64,
+}
+
+impl SortedPending {
+    pub fn new() -> SortedPending {
+        SortedPending::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn probes(&self) -> u64 {
+        self.probes
+    }
+
+    /// Binary-search-insert, keeping entries sorted by slot.
+    pub fn insert(&mut self, slot: u32, token: u64) {
+        // Find the end of the run of equal slots (stable insert).
+        let mut lo = 0usize;
+        let mut hi = self.entries.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            self.probes += 1;
+            if self.entries[mid].0 <= slot {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        self.entries.insert(lo, (slot, token));
+    }
+
+    /// Drain up to `n` entries in slot order.
+    pub fn drain(&mut self, n: usize) -> Vec<(u32, u64)> {
+        let n = n.min(self.entries.len());
+        self.entries.drain(..n).collect()
+    }
+
+    /// Drain everything in slot order.
+    pub fn drain_all(&mut self) -> Vec<(u32, u64)> {
+        std::mem::take(&mut self.entries)
+    }
+
+    /// Current slots, in order.
+    pub fn slots(&self) -> Vec<u32> {
+        self.entries.iter().map(|&(s, _)| s).collect()
+    }
+}
+
+/// Fraction of consecutive positions whose slots are adjacent
+/// (slot[i+1] == slot[i] + 1) -- local coalesced runs (Fig 1d). 1.0 for a
+/// fully contiguous layout, ~0 for random placement in a large pool.
+pub fn locality_score(slots: &[u32]) -> f64 {
+    if slots.len() < 2 {
+        return 1.0;
+    }
+    let adjacent = slots
+        .windows(2)
+        .filter(|w| w[1] == w[0].wrapping_add(1))
+        .count();
+    adjacent as f64 / (slots.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn inserts_keep_sorted_order() {
+        let mut sp = SortedPending::new();
+        for &s in &[5u32, 1, 9, 3, 7, 2, 8, 0, 6, 4] {
+            sp.insert(s, s as u64);
+        }
+        assert_eq!(sp.slots(), (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn random_inserts_stay_sorted() {
+        let mut rng = Rng::new(23);
+        let mut sp = SortedPending::new();
+        for i in 0..500 {
+            sp.insert(rng.below(10_000) as u32, i);
+        }
+        let slots = sp.slots();
+        assert!(slots.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(sp.len(), 500);
+    }
+
+    #[test]
+    fn equal_slots_keep_insertion_order() {
+        let mut sp = SortedPending::new();
+        sp.insert(3, 100);
+        sp.insert(3, 101);
+        sp.insert(3, 102);
+        let drained = sp.drain_all();
+        assert_eq!(
+            drained.iter().map(|&(_, t)| t).collect::<Vec<_>>(),
+            vec![100, 101, 102]
+        );
+    }
+
+    #[test]
+    fn drain_takes_prefix_in_slot_order() {
+        let mut sp = SortedPending::new();
+        for &s in &[9u32, 1, 5, 3] {
+            sp.insert(s, s as u64);
+        }
+        let first = sp.drain(2);
+        assert_eq!(first.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(sp.slots(), vec![5, 9]);
+    }
+
+    #[test]
+    fn probe_count_is_log_factorial_not_quadratic() {
+        // O(log N!) = O(N log N) probes; check we are well under N^2/4
+        // and within a small constant of N log2 N.
+        let mut rng = Rng::new(31);
+        let n = 4_096usize;
+        let mut sp = SortedPending::new();
+        for i in 0..n {
+            sp.insert(rng.next_u64() as u32, i as u64);
+        }
+        let probes = sp.probes() as f64;
+        let nlogn = (n as f64) * (n as f64).log2();
+        assert!(probes < 2.0 * nlogn, "probes = {probes}, n log n = {nlogn}");
+        assert!(probes > 0.5 * nlogn, "suspiciously few probes: {probes}");
+    }
+
+    #[test]
+    fn locality_scores() {
+        assert_eq!(locality_score(&[]), 1.0);
+        assert_eq!(locality_score(&[7]), 1.0);
+        assert_eq!(locality_score(&[0, 1, 2, 3]), 1.0);
+        assert_eq!(locality_score(&[3, 2, 1, 0]), 0.0);
+        // half the steps adjacent
+        assert!((locality_score(&[0, 1, 5, 6]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_beats_arrival_order_on_locality() {
+        let mut rng = Rng::new(37);
+        // arrival order: random slots from a small pool with clusters
+        let mut arrival: Vec<u32> = (0..64u32).collect();
+        rng.shuffle(&mut arrival);
+        let mut sp = SortedPending::new();
+        for (i, &s) in arrival.iter().enumerate() {
+            sp.insert(s, i as u64);
+        }
+        let sorted = sp.slots();
+        assert!(locality_score(&sorted) > locality_score(&arrival));
+        assert_eq!(locality_score(&sorted), 1.0); // dense slot set
+    }
+}

@@ -1,0 +1,348 @@
+//! Kernel combining: aggregate small work requests into one GPU launch.
+//!
+//! Paper section 3.1. Combining kernels reduces launch count and raises GPU
+//! occupancy, but waiting too long idles the GPU when arrivals are
+//! irregular. The *adaptive* policy combines up to `maxSize` requests
+//! (occupancy-derived: blocks/SM from the occupancy calculator x SM count)
+//! and flushes early when the gap since the last arrival exceeds
+//! `2 x maxInterval`, where `maxInterval` is the running maximum of
+//! inter-arrival gaps. The *static* baseline (the regular-application
+//! strategy from the earlier G-Charm paper) flushes whatever is available
+//! after every `period` arrivals.
+
+use std::collections::VecDeque;
+
+use super::work_request::WorkRequest;
+
+/// Combining policy for one workGroupList.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CombinePolicy {
+    /// Occupancy + inter-arrival adaptive strategy (section 3.1).
+    Adaptive,
+    /// Flush available requests after every `period` arrivals (the paper's
+    /// static baseline uses 100).
+    StaticEvery(usize),
+}
+
+/// Why a batch was flushed (recorded for the figure benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FlushReason {
+    /// maxSize requests were available (full-occupancy launch).
+    Full,
+    /// Idle gap exceeded 2 x maxInterval.
+    IdleTimeout,
+    /// Static policy period elapsed.
+    StaticPeriod,
+    /// Forced drain (end of iteration / shutdown).
+    Forced,
+}
+
+/// A pending work request plus the device slot its buffer was staged into
+/// (None when the data policy is NoReuse).
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub wr: WorkRequest,
+    pub slot: Option<u32>,
+    /// Bytes the staging transferred (0 on a residency hit or NoReuse).
+    pub staged_bytes: u64,
+}
+
+/// One flushed batch, ready to become a combined launch.
+#[derive(Debug)]
+pub struct Batch {
+    pub items: Vec<Pending>,
+    pub reason: FlushReason,
+}
+
+/// One workGroupList with its combining policy.
+#[derive(Debug)]
+pub struct Combiner {
+    policy: CombinePolicy,
+    /// Occupancy-derived combine target (section 4.3: 104 force, 65 Ewald).
+    max_size: usize,
+    /// Keep pending requests sorted by device slot (binary insert at
+    /// insert-request time -- the coalescing strategy of section 3.2).
+    sort_by_slot: bool,
+    queue: VecDeque<Pending>,
+    last_arrival: Option<f64>,
+    max_interval: f64,
+    arrivals_since_flush: usize,
+    flushes: Vec<(FlushReason, usize)>,
+    probes: u64,
+}
+
+/// Floor for maxInterval before two arrivals have been seen; prevents the
+/// adaptive policy from flushing single requests during warm-up.
+const MIN_INTERVAL: f64 = 100e-6;
+
+impl Combiner {
+    pub fn new(policy: CombinePolicy, max_size: usize, sort_by_slot: bool) -> Combiner {
+        assert!(max_size > 0);
+        Combiner {
+            policy,
+            max_size,
+            sort_by_slot,
+            queue: VecDeque::new(),
+            last_arrival: None,
+            max_interval: MIN_INTERVAL,
+            arrivals_since_flush: 0,
+            flushes: Vec::new(),
+            probes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    /// Running maximum inter-arrival gap observed so far.
+    pub fn max_interval(&self) -> f64 {
+        self.max_interval
+    }
+
+    /// Timeline time of the most recent arrival.
+    pub fn last_arrival(&self) -> Option<f64> {
+        self.last_arrival
+    }
+
+    /// Total binary-search probes spent keeping the queue slot-sorted.
+    pub fn probes(&self) -> u64 {
+        self.probes
+    }
+
+    /// Flush history: (reason, batch size) per flush.
+    pub fn flush_log(&self) -> &[(FlushReason, usize)] {
+        &self.flushes
+    }
+
+    /// `gcharm_insert_request`: add a work request at time `now`, updating
+    /// the inter-arrival maximum; if slot-sorting is on, binary-insert by
+    /// device slot (section 3.2's O(log N!) incremental sort).
+    pub fn insert(&mut self, item: Pending, now: f64) {
+        if let Some(last) = self.last_arrival {
+            let gap = (now - last).max(0.0);
+            if gap > self.max_interval {
+                self.max_interval = gap;
+            }
+        }
+        self.last_arrival = Some(now);
+        self.arrivals_since_flush += 1;
+
+        if self.sort_by_slot {
+            let key = item.slot.unwrap_or(u32::MAX);
+            // Upper-bound binary search over the VecDeque (stable).
+            let mut lo = 0usize;
+            let mut hi = self.queue.len();
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                self.probes += 1;
+                if self.queue[mid].slot.unwrap_or(u32::MAX) <= key {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            self.queue.insert(lo, item);
+        } else {
+            self.queue.push_back(item);
+        }
+    }
+
+    /// The periodic *combine* routine: decide whether to flush now.
+    pub fn poll(&mut self, now: f64) -> Option<Batch> {
+        match self.policy {
+            CombinePolicy::Adaptive => {
+                if self.queue.len() >= self.max_size {
+                    return Some(self.take(self.max_size, FlushReason::Full));
+                }
+                if !self.queue.is_empty() {
+                    let last = self.last_arrival.unwrap_or(now);
+                    if now - last > 2.0 * self.max_interval {
+                        let n = self.queue.len();
+                        return Some(self.take(n, FlushReason::IdleTimeout));
+                    }
+                }
+                None
+            }
+            CombinePolicy::StaticEvery(period) => {
+                if self.arrivals_since_flush >= period && !self.queue.is_empty() {
+                    let n = self.queue.len().min(self.max_size);
+                    return Some(self.take(n, FlushReason::StaticPeriod));
+                }
+                None
+            }
+        }
+    }
+
+    /// Forced drain of everything pending (iteration end / shutdown).
+    /// Batches are capped at max_size; call until `None`.
+    pub fn force_flush(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_size);
+        Some(self.take(n, FlushReason::Forced))
+    }
+
+    fn take(&mut self, n: usize, reason: FlushReason) -> Batch {
+        let items: Vec<Pending> = self.queue.drain(..n).collect();
+        self.arrivals_since_flush = 0;
+        self.flushes.push((reason, items.len()));
+        Batch { items, reason }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::chare::ChareId;
+    use crate::coordinator::work_request::{WorkKind, WrPayload};
+
+    fn wr(id: u64, arrival: f64) -> WorkRequest {
+        WorkRequest {
+            id,
+            chare: ChareId::new(0, id as u32),
+            kind: WorkKind::Force,
+            buffer: Some(id),
+            data_items: 10,
+            tag: 0,
+            arrival,
+            payload: WrPayload::Ewald { parts: vec![] },
+        }
+    }
+
+    fn pending(id: u64, arrival: f64, slot: Option<u32>) -> Pending {
+        Pending { wr: wr(id, arrival), slot, staged_bytes: 0 }
+    }
+
+    #[test]
+    fn adaptive_flushes_at_max_size() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        for i in 0..3 {
+            c.insert(pending(i, i as f64 * 0.001, None), i as f64 * 0.001);
+            assert!(c.poll(i as f64 * 0.001).is_none());
+        }
+        c.insert(pending(3, 0.003, None), 0.003);
+        let b = c.poll(0.003).expect("flush at max size");
+        assert_eq!(b.reason, FlushReason::Full);
+        assert_eq!(b.items.len(), 4);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn adaptive_takes_exactly_max_size_leaving_rest() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        for i in 0..6 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.poll(0.0).unwrap();
+        assert_eq!(b.items.len(), 4);
+        assert_eq!(c.len(), 2);
+        let ids: Vec<u64> = b.items.iter().map(|p| p.wr.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]); // FIFO order preserved
+    }
+
+    #[test]
+    fn adaptive_idle_timeout_uses_twice_max_interval() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 100, false);
+        // arrivals at t=0 and t=0.01: maxInterval = 0.01
+        c.insert(pending(0, 0.0, None), 0.0);
+        c.insert(pending(1, 0.01, None), 0.01);
+        assert!((c.max_interval() - 0.01).abs() < 1e-12);
+        // gap of 0.015 < 2 x 0.01: hold
+        assert!(c.poll(0.025).is_none());
+        // gap of 0.021 > 2 x 0.01: flush all available
+        let b = c.poll(0.0311).expect("idle flush");
+        assert_eq!(b.reason, FlushReason::IdleTimeout);
+        assert_eq!(b.items.len(), 2);
+    }
+
+    #[test]
+    fn adaptive_empty_never_flushes() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        assert!(c.poll(100.0).is_none());
+    }
+
+    #[test]
+    fn static_flushes_on_period() {
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(3), 100, false);
+        c.insert(pending(0, 0.0, None), 0.0);
+        c.insert(pending(1, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none());
+        c.insert(pending(2, 0.0, None), 0.0);
+        let b = c.poll(0.0).expect("static flush");
+        assert_eq!(b.reason, FlushReason::StaticPeriod);
+        assert_eq!(b.items.len(), 3);
+        // counter reset
+        c.insert(pending(3, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none());
+    }
+
+    #[test]
+    fn static_batch_capped_at_max_size() {
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(8), 4, false);
+        for i in 0..8 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.poll(0.0).unwrap();
+        assert_eq!(b.items.len(), 4);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn force_flush_drains_in_caps() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        for i in 0..10 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let mut sizes = Vec::new();
+        while let Some(b) = c.force_flush() {
+            assert_eq!(b.reason, FlushReason::Forced);
+            sizes.push(b.items.len());
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn slot_sorted_insert_orders_batch_by_slot() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 8, true);
+        for (i, &s) in [7u32, 2, 9, 4, 0, 5].iter().enumerate() {
+            c.insert(pending(i as u64, 0.0, Some(s)), 0.0);
+        }
+        let mut drained = Vec::new();
+        while let Some(b) = c.force_flush() {
+            drained.extend(b.items.into_iter().map(|p| p.slot.unwrap()));
+        }
+        assert_eq!(drained, vec![0, 2, 4, 5, 7, 9]);
+        assert!(c.probes() > 0);
+    }
+
+    #[test]
+    fn unsorted_keeps_arrival_order() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 8, false);
+        for (i, &s) in [7u32, 2, 9].iter().enumerate() {
+            c.insert(pending(i as u64, 0.0, Some(s)), 0.0);
+        }
+        let b = c.force_flush().unwrap();
+        let slots: Vec<u32> = b.items.iter().map(|p| p.slot.unwrap()).collect();
+        assert_eq!(slots, vec![7, 2, 9]);
+    }
+
+    #[test]
+    fn max_interval_is_running_max() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 100, false);
+        c.insert(pending(0, 0.0, None), 0.0);
+        c.insert(pending(1, 0.005, None), 0.005);
+        c.insert(pending(2, 0.006, None), 0.006); // smaller gap: no change
+        assert!((c.max_interval() - 0.005).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,196 @@
+//! Native CPU kernels for hybrid execution and CPU-only baselines.
+//!
+//! G-Charm schedules a task on CPU or GPU only when "kernel functions exist
+//! for both CPU and GPU" (paper section 3.3). These are the CPU-side
+//! implementations, numerically matching the Pallas kernels (same f32
+//! arithmetic and masking rules) so hybrid execution is bit-compatible
+//! with pure-GPU execution to f32 tolerance.
+
+use crate::runtime::shapes::{
+    INTER_W, MD_W, OUT_W, PARTICLE_W,
+};
+
+/// CPU bucket gravity: `parts` (P x 4), `inters` (I x 4) -> (P x 4)
+/// [ax, ay, az, pot]. Mirrors `kernels/gravity.py`.
+pub fn cpu_gravity(parts: &[f32], inters: &[f32], eps2: f32) -> Vec<f32> {
+    let p = parts.len() / PARTICLE_W;
+    let n = inters.len() / INTER_W;
+    let mut out = vec![0.0f32; p * OUT_W];
+    for i in 0..p {
+        let px = parts[i * PARTICLE_W];
+        let py = parts[i * PARTICLE_W + 1];
+        let pz = parts[i * PARTICLE_W + 2];
+        let (mut ax, mut ay, mut az, mut pot) = (0.0f32, 0.0, 0.0, 0.0);
+        for j in 0..n {
+            let dx = inters[j * INTER_W] - px;
+            let dy = inters[j * INTER_W + 1] - py;
+            let dz = inters[j * INTER_W + 2] - pz;
+            let m = inters[j * INTER_W + 3];
+            let r2 = dx * dx + dy * dy + dz * dz + eps2;
+            let inv = 1.0 / r2.sqrt();
+            let inv3 = inv * inv * inv;
+            let w = m * inv3;
+            ax += w * dx;
+            ay += w * dy;
+            az += w * dz;
+            pot -= m * inv;
+        }
+        out[i * OUT_W] = ax;
+        out[i * OUT_W + 1] = ay;
+        out[i * OUT_W + 2] = az;
+        out[i * OUT_W + 3] = pot;
+    }
+    out
+}
+
+/// CPU Ewald k-space correction: `parts` (P x 4), `ktab` (K x 4) ->
+/// (P x 4) [fx, fy, fz, pot]. Mirrors `kernels/ewald.py`.
+pub fn cpu_ewald(parts: &[f32], ktab: &[f32]) -> Vec<f32> {
+    let p = parts.len() / PARTICLE_W;
+    let k = ktab.len() / 4;
+    let mut out = vec![0.0f32; p * OUT_W];
+    for i in 0..p {
+        let px = parts[i * PARTICLE_W];
+        let py = parts[i * PARTICLE_W + 1];
+        let pz = parts[i * PARTICLE_W + 2];
+        let mass = parts[i * PARTICLE_W + 3];
+        let (mut fx, mut fy, mut fz, mut pot) = (0.0f32, 0.0, 0.0, 0.0);
+        for j in 0..k {
+            let kx = ktab[j * 4];
+            let ky = ktab[j * 4 + 1];
+            let kz = ktab[j * 4 + 2];
+            let coef = ktab[j * 4 + 3];
+            let phase = px * kx + py * ky + pz * kz;
+            let s = coef * phase.sin();
+            let c = coef * phase.cos();
+            fx += s * kx;
+            fy += s * ky;
+            fz += s * kz;
+            pot += c;
+        }
+        out[i * OUT_W] = mass * fx;
+        out[i * OUT_W + 1] = mass * fy;
+        out[i * OUT_W + 2] = mass * fz;
+        out[i * OUT_W + 3] = mass * pot;
+    }
+    out
+}
+
+/// CPU MD patch-pair LJ force: `pa`, `pb` (N x 2) -> forces on `pa` (N x 2).
+/// Mirrors `kernels/md_force.py` including the self-pair mask.
+pub fn cpu_md_interact(pa: &[f32], pb: &[f32], params: [f32; 3]) -> Vec<f32> {
+    let [rc2, sig2, eps] = params;
+    let n = pa.len() / MD_W;
+    let m = pb.len() / MD_W;
+    let mut out = vec![0.0f32; n * MD_W];
+    for i in 0..n {
+        let xi = pa[i * MD_W];
+        let yi = pa[i * MD_W + 1];
+        let (mut fx, mut fy) = (0.0f32, 0.0f32);
+        for j in 0..m {
+            let dx = xi - pb[j * MD_W];
+            let dy = yi - pb[j * MD_W + 1];
+            let r2 = dx * dx + dy * dy;
+            if r2 < rc2 && r2 > 1e-9 {
+                let s2 = sig2 / r2;
+                let s6 = s2 * s2 * s2;
+                let f = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2;
+                fx += f * dx;
+                fy += f * dy;
+            }
+        }
+        out[i * MD_W] = fx;
+        out[i * MD_W + 1] = fy;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gravity_single_pair_analytic() {
+        // unit mass at distance r on x: a_x = m r / (r^2+eps2)^{3/2}
+        let parts = vec![0.0, 0.0, 0.0, 1.0];
+        let inters = vec![2.0, 0.0, 0.0, 3.0];
+        let eps2 = 0.01f32;
+        let out = cpu_gravity(&parts, &inters, eps2);
+        let want = 3.0 * 2.0 / (4.0f32 + eps2).powf(1.5);
+        assert!((out[0] - want).abs() < 1e-6);
+        assert_eq!(out[1], 0.0);
+        assert!(out[3] < 0.0);
+    }
+
+    #[test]
+    fn gravity_zero_mass_inert() {
+        let parts = vec![0.5, 0.5, 0.5, 1.0];
+        let inters = vec![1.0, 2.0, 3.0, 0.0];
+        let out = cpu_gravity(&parts, &inters, 0.01);
+        assert_eq!(&out[..3], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ewald_single_k_analytic() {
+        // particle mass 2 at x = pi/2 with k = (1,0,0), coef = 0.5:
+        // fx = 2 * 0.5 * sin(pi/2) = 1, pot = 2 * 0.5 * cos(pi/2) = 0
+        let parts = vec![std::f32::consts::FRAC_PI_2, 0.0, 0.0, 2.0];
+        let ktab = vec![1.0, 0.0, 0.0, 0.5];
+        let out = cpu_ewald(&parts, &ktab);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!(out[3].abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewald_zero_mass_inert() {
+        let parts = vec![1.0, 2.0, 3.0, 0.0];
+        let ktab = vec![1.0, 1.0, 1.0, 1.0];
+        let out = cpu_ewald(&parts, &ktab);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn md_short_range_repulsion_and_symmetry() {
+        let params = [1.0, 0.04, 1.0];
+        let pa = vec![0.0, 0.0];
+        let pb = vec![0.1, 0.0];
+        let fa = cpu_md_interact(&pa, &pb, params);
+        let fb = cpu_md_interact(&pb, &pa, params);
+        assert!(fa[0] < 0.0, "repelled in -x");
+        // Newton's third law between the two single-particle patches
+        assert!((fa[0] + fb[0]).abs() < 1e-3 * fa[0].abs());
+        assert!((fa[1] + fb[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn md_beyond_cutoff_zero() {
+        let params = [1.0, 0.04, 1.0];
+        let pa = vec![0.0, 0.0];
+        let pb = vec![5.0, 0.0];
+        let f = cpu_md_interact(&pa, &pb, params);
+        assert_eq!(f, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn md_self_pair_masked() {
+        let params = [1.0, 0.04, 1.0];
+        let pa = vec![1.0, 1.0, 1.3, 1.0];
+        let f = cpu_md_interact(&pa, &pa, params);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn md_many_body_finite_and_nontrivial() {
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let mut pa = Vec::with_capacity(n * 2);
+        for _ in 0..n * 2 {
+            pa.push(rng.range(0.0, 2.0) as f32);
+        }
+        let f = cpu_md_interact(&pa, &pa, [1.0, 0.04, 1.0]);
+        assert_eq!(f.len(), n * 2);
+        assert!(f.iter().all(|x| x.is_finite()));
+        assert!(f.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,228 @@
+//! Dynamic hybrid CPU/GPU scheduling (paper section 3.3).
+//!
+//! For kinds with both CPU and GPU kernels (MD interact), the runtime
+//! executes initial tasks on both devices, maintains *running averages of
+//! the time per input data item* on each, and splits the work-request queue
+//! by the resulting performance ratio: the queue is scanned front to back,
+//! accumulating data items, and cut where the cumulative sum crosses the
+//! CPU's share. The static baseline splits by request *count* only,
+//! ignoring per-request workloads.
+
+use crate::util::RunningAverage;
+
+use super::combiner::Pending;
+
+/// Queue-splitting policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// Split by request count only (regular-application baseline).
+    StaticCount,
+    /// Split by cumulative data items using the measured per-item
+    /// performance ratio (section 3.3).
+    AdaptiveItems,
+}
+
+/// Per-device running averages and the splitting logic.
+#[derive(Debug)]
+pub struct HybridScheduler {
+    policy: SplitPolicy,
+    cpu_per_item: RunningAverage,
+    gpu_per_item: RunningAverage,
+    /// Bootstrap split until both devices have at least one sample.
+    bootstrap_cpu_share: f64,
+}
+
+impl HybridScheduler {
+    pub fn new(policy: SplitPolicy) -> HybridScheduler {
+        HybridScheduler {
+            policy,
+            cpu_per_item: RunningAverage::new(),
+            gpu_per_item: RunningAverage::new(),
+            bootstrap_cpu_share: 0.5,
+        }
+    }
+
+    pub fn policy(&self) -> SplitPolicy {
+        self.policy
+    }
+
+    /// Record a CPU execution: `items` data items in `secs` seconds.
+    pub fn record_cpu(&mut self, items: usize, secs: f64) {
+        if items > 0 {
+            self.cpu_per_item.update(secs / items as f64);
+        }
+    }
+
+    /// Record a GPU execution (kernel time for the combined batch).
+    pub fn record_gpu(&mut self, items: usize, secs: f64) {
+        if items > 0 {
+            self.gpu_per_item.update(secs / items as f64);
+        }
+    }
+
+    /// CPU time-per-item / GPU time-per-item, once both are measured.
+    pub fn perf_ratio(&self) -> Option<f64> {
+        match (self.cpu_per_item.mean(), self.gpu_per_item.mean()) {
+            (Some(c), Some(g)) if g > 0.0 => Some(c / g),
+            _ => None,
+        }
+    }
+
+    /// Fraction of total work the CPU should take: share = (1/c)/(1/c+1/g)
+    /// = g / (c + g). Falls back to the bootstrap share before both
+    /// devices have samples (paper: run initial tasks on both).
+    pub fn cpu_share(&self) -> f64 {
+        match (self.cpu_per_item.mean(), self.gpu_per_item.mean()) {
+            (Some(c), Some(g)) if c + g > 0.0 => g / (c + g),
+            _ => self.bootstrap_cpu_share,
+        }
+    }
+
+    /// Split a drained queue into (cpu, gpu) sets per the policy. Order is
+    /// preserved: the CPU takes a prefix, the GPU the suffix (the paper
+    /// scans from the queue head, cutting at the cumulative-sum crossing).
+    pub fn split(&self, queue: Vec<Pending>) -> (Vec<Pending>, Vec<Pending>) {
+        if queue.is_empty() {
+            return (Vec::new(), Vec::new());
+        }
+        let share = self.cpu_share();
+        let cut = match self.policy {
+            SplitPolicy::StaticCount => {
+                // count-based: first share-of-count requests to CPU
+                (queue.len() as f64 * share).round() as usize
+            }
+            SplitPolicy::AdaptiveItems => {
+                let total: usize = queue.iter().map(|p| p.wr.data_items).sum();
+                let cpu_target = total as f64 * share;
+                let mut cum = 0usize;
+                let mut cut = 0usize;
+                for (i, p) in queue.iter().enumerate() {
+                    if (cum + p.wr.data_items) as f64 > cpu_target {
+                        cut = i;
+                        break;
+                    }
+                    cum += p.wr.data_items;
+                    cut = i + 1;
+                }
+                cut
+            }
+        };
+        let mut queue = queue;
+        let gpu = queue.split_off(cut.min(queue.len()));
+        (queue, gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::chare::ChareId;
+    use crate::coordinator::work_request::{WorkKind, WorkRequest, WrPayload};
+
+    fn pending(id: u64, items: usize) -> Pending {
+        Pending {
+            wr: WorkRequest {
+                id,
+                chare: ChareId::new(0, id as u32),
+                kind: WorkKind::MdInteract,
+                buffer: None,
+                data_items: items,
+                tag: 0,
+                arrival: 0.0,
+                payload: WrPayload::MdPair { pa: vec![], pb: vec![] },
+            },
+            slot: None,
+            staged_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn bootstrap_splits_half() {
+        let h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        assert_eq!(h.cpu_share(), 0.5);
+        let q: Vec<Pending> = (0..4).map(|i| pending(i, 10)).collect();
+        let (cpu, gpu) = h.split(q);
+        assert_eq!(cpu.len(), 2);
+        assert_eq!(gpu.len(), 2);
+    }
+
+    #[test]
+    fn ratio_tracks_running_averages() {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        h.record_cpu(100, 0.4); // 4 ms/item
+        h.record_gpu(100, 0.1); // 1 ms/item
+        assert!((h.perf_ratio().unwrap() - 4.0).abs() < 1e-9);
+        // gpu 4x faster: cpu takes 1/(1+4) = 20%
+        assert!((h.cpu_share() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn averages_fold_multiple_samples() {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        h.record_cpu(10, 0.02); // 2 ms/item
+        h.record_cpu(10, 0.04); // 4 ms/item -> mean 3 ms
+        h.record_gpu(10, 0.01); // 1 ms/item
+        assert!((h.perf_ratio().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_split_follows_data_items_not_count() {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        h.record_cpu(10, 0.01);
+        h.record_gpu(10, 0.01); // equal speed: 50% of items each
+        // queue: one huge request then many small
+        let mut q = vec![pending(0, 90)];
+        q.extend((1..11).map(|i| pending(i, 1)));
+        let (cpu, gpu) = h.split(q);
+        // 100 items total, cpu target 50: the huge request alone would
+        // overshoot, so the cut lands before it
+        let cpu_items: usize = cpu.iter().map(|p| p.wr.data_items).sum();
+        assert!(cpu_items <= 50, "cpu got {cpu_items} items");
+        assert_eq!(cpu.len() + gpu.len(), 11);
+    }
+
+    #[test]
+    fn static_split_ignores_item_weights() {
+        let mut h = HybridScheduler::new(SplitPolicy::StaticCount);
+        h.record_cpu(10, 0.01);
+        h.record_gpu(10, 0.01);
+        let mut q = vec![pending(0, 90)];
+        q.extend((1..11).map(|i| pending(i, 1)));
+        let (cpu, gpu) = h.split(q);
+        // count split: ~half the requests regardless of weight, so the
+        // huge request (at the head) goes to the CPU
+        assert!((5..=6).contains(&cpu.len()));
+        let cpu_items: usize = cpu.iter().map(|p| p.wr.data_items).sum();
+        assert!(cpu_items >= 90, "static split should take the heavy head");
+        assert_eq!(cpu.len() + gpu.len(), 11);
+    }
+
+    #[test]
+    fn split_conserves_requests_and_order() {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        h.record_cpu(10, 0.03);
+        h.record_gpu(10, 0.01);
+        let q: Vec<Pending> = (0..20).map(|i| pending(i, (i % 5 + 1) as usize)).collect();
+        let (cpu, gpu) = h.split(q);
+        let ids: Vec<u64> = cpu.iter().chain(&gpu).map(|p| p.wr.id).collect();
+        assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn all_to_gpu_when_cpu_is_hopeless() {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        h.record_cpu(1, 1.0); // 1 s/item
+        h.record_gpu(1000, 0.001); // 1 us/item
+        let q: Vec<Pending> = (0..10).map(|i| pending(i, 10)).collect();
+        let (cpu, gpu) = h.split(q);
+        assert!(cpu.len() <= 1);
+        assert!(gpu.len() >= 9);
+    }
+
+    #[test]
+    fn empty_queue_splits_empty() {
+        let h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        let (cpu, gpu) = h.split(Vec::new());
+        assert!(cpu.is_empty() && gpu.is_empty());
+    }
+}

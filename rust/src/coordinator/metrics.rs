@@ -1,0 +1,171 @@
+//! Run metrics: what the figure benches and EXPERIMENTS.md report.
+//!
+//! Aggregates the quantities the paper plots: GPU kernel time and CPU-GPU
+//! data-transfer time (Fig 3), combined-launch counts and sizes (Fig 2),
+//! and the CPU/GPU split of hybrid executions (Fig 5). Both measured wall
+//! clock (CPU PJRT executor) and modeled-K20 times are kept side by side
+//! (DESIGN.md section 2).
+
+use super::combiner::FlushReason;
+
+/// Aggregated statistics of one run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Combined kernel launches submitted to the device.
+    pub launches: u64,
+    /// Work requests that went to the GPU.
+    pub gpu_requests: u64,
+    /// Work requests executed on CPU workers (hybrid path).
+    pub cpu_requests: u64,
+    /// Measured wall seconds inside PJRT execute calls.
+    pub kernel_wall: f64,
+    /// Modeled-K20 kernel seconds.
+    pub kernel_modeled: f64,
+    /// Accounted PCIe bytes host->device.
+    pub transfer_bytes: u64,
+    /// Modeled-K20 transfer seconds.
+    pub transfer_modeled: f64,
+    /// Chare-table residency hits / misses.
+    pub table_hits: u64,
+    pub table_misses: u64,
+    /// Bytes saved by reuse.
+    pub saved_bytes: u64,
+    /// Flush counts by reason.
+    pub flush_full: u64,
+    pub flush_idle: u64,
+    pub flush_static: u64,
+    pub flush_forced: u64,
+    /// Sum of flushed batch sizes (for the average).
+    pub flushed_requests: u64,
+    /// CPU-side task wall seconds (hybrid path).
+    pub cpu_task_wall: f64,
+    /// Data items executed on each device (hybrid accounting).
+    pub cpu_items: u64,
+    pub gpu_items: u64,
+    /// End-to-end wall seconds of the run (driver-measured).
+    pub total_wall: f64,
+}
+
+impl Report {
+    /// Record one flush event.
+    pub fn record_flush(&mut self, reason: FlushReason, size: usize) {
+        match reason {
+            FlushReason::Full => self.flush_full += 1,
+            FlushReason::IdleTimeout => self.flush_idle += 1,
+            FlushReason::StaticPeriod => self.flush_static += 1,
+            FlushReason::Forced => self.flush_forced += 1,
+        }
+        self.flushed_requests += size as u64;
+    }
+
+    /// Total flush count.
+    pub fn flushes(&self) -> u64 {
+        self.flush_full + self.flush_idle + self.flush_static + self.flush_forced
+    }
+
+    /// Mean combined-batch size (0 if nothing flushed).
+    pub fn avg_batch(&self) -> f64 {
+        if self.flushes() == 0 {
+            0.0
+        } else {
+            self.flushed_requests as f64 / self.flushes() as f64
+        }
+    }
+
+    /// Residency hit rate.
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.table_hits + self.table_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.table_hits as f64 / t as f64
+        }
+    }
+
+    /// Modeled device-side total (kernel + transfer).
+    pub fn modeled_total(&self) -> f64 {
+        self.kernel_modeled + self.transfer_modeled
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "launches            {}", self.launches)?;
+        writeln!(
+            f,
+            "requests            gpu {} / cpu {}",
+            self.gpu_requests, self.cpu_requests
+        )?;
+        writeln!(
+            f,
+            "flushes             full {} / idle {} / static {} / forced {} (avg batch {:.1})",
+            self.flush_full,
+            self.flush_idle,
+            self.flush_static,
+            self.flush_forced,
+            self.avg_batch()
+        )?;
+        writeln!(
+            f,
+            "kernel time         wall {:.4}s   modeled-K20 {:.4}s",
+            self.kernel_wall, self.kernel_modeled
+        )?;
+        writeln!(
+            f,
+            "transfers           {:.2} MiB   modeled-K20 {:.4}s   saved {:.2} MiB",
+            self.transfer_bytes as f64 / (1 << 20) as f64,
+            self.transfer_modeled,
+            self.saved_bytes as f64 / (1 << 20) as f64
+        )?;
+        writeln!(
+            f,
+            "chare table         {} hits / {} misses ({:.0}% hit rate)",
+            self.table_hits,
+            self.table_misses,
+            self.hit_rate() * 100.0
+        )?;
+        writeln!(
+            f,
+            "hybrid              cpu {:.4}s task wall; items cpu {} / gpu {}",
+            self.cpu_task_wall, self.cpu_items, self.gpu_items
+        )?;
+        write!(f, "total wall          {:.4}s", self.total_wall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_accounting() {
+        let mut r = Report::default();
+        r.record_flush(FlushReason::Full, 104);
+        r.record_flush(FlushReason::IdleTimeout, 10);
+        r.record_flush(FlushReason::Forced, 6);
+        assert_eq!(r.flushes(), 3);
+        assert_eq!(r.flush_full, 1);
+        assert!((r.avg_batch() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rates_handle_zero() {
+        let r = Report::default();
+        assert_eq!(r.avg_batch(), 0.0);
+        assert_eq!(r.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn hit_rate() {
+        let r = Report { table_hits: 3, table_misses: 1, ..Default::default() };
+        assert!((r.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_renders() {
+        let r = Report::default();
+        let s = format!("{r}");
+        assert!(s.contains("launches"));
+        assert!(s.contains("total wall"));
+    }
+}

@@ -1,0 +1,769 @@
+//! Layer-3 coordinator: the G-Charm runtime system.
+//!
+//! Wires together the message-driven substrate (PEs + chares), the three
+//! paper strategies (adaptive combining section 3.1, data reuse + coalescing
+//! section 3.2, dynamic hybrid scheduling section 3.3), and the GPU service.
+//!
+//! Thread topology:
+//!
+//! ```text
+//!   driver (main)      PE threads (chares)        coordinator thread
+//!      |  send/await      |  entry methods            |  combiners,
+//!      v                  v  -> effects               v  chare table,
+//!   [Router] ---Msg---> [PE queues]                [Coord queue]
+//!      |                   \--WorkDraft-------------> |
+//!      |                    <--CpuBatch-------------- |   hybrid split
+//!      |                                              |--LaunchSpec--> GPU
+//!      |                    <---METHOD_RESULT-------- | <--Completion--service
+//! ```
+//!
+//! Python never appears: the GPU service executes AOT artifacts via PJRT.
+
+pub mod chare;
+pub mod chare_table;
+pub mod coalescing;
+pub mod combiner;
+pub mod cpu_kernels;
+pub mod hybrid;
+pub mod metrics;
+pub mod scheduler;
+pub mod work_request;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::device_sim::CoalescingClass;
+use crate::runtime::executor::{
+    Completion, ExecutorConfig, GpuService, LaunchSpec, Payload,
+};
+use crate::runtime::shapes::{
+    INTERACTIONS, INTER_W, OUT_W, PARTICLE_W, PARTS_PER_BUCKET,
+    PARTS_PER_PATCH, MD_W,
+};
+use crate::runtime::{occupancy, GpuSpec, KernelResources};
+
+pub use chare::{Chare, ChareId, Ctx, Msg, WorkDraft, METHOD_RESULT};
+pub use chare_table::ChareTable;
+pub use combiner::{Batch, CombinePolicy, Combiner, FlushReason, Pending};
+pub use hybrid::{HybridScheduler, SplitPolicy};
+pub use metrics::Report;
+pub use scheduler::Shared;
+pub use work_request::{WorkKind, WorkRequest, WrPayload, WrResult};
+
+use scheduler::{pe_loop, CoordMsg, PeMsg, Router};
+
+/// Data-movement policy (paper section 3.2 / Fig 1 / Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPolicy {
+    /// Redundant transfers, fully coalesced contiguous packing (Fig 1b).
+    NoReuse,
+    /// Reuse resident buffers; arrival-order gather (uncoalesced, Fig 1c).
+    Reuse,
+    /// Reuse + slot-sorted insertion for local coalescing (Fig 1d).
+    ReuseSorted,
+}
+
+/// Full runtime configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of PE worker threads.
+    pub pes: usize,
+    pub combine: CombinePolicy,
+    pub data_policy: DataPolicy,
+    pub split: SplitPolicy,
+    /// Enable CPU+GPU hybrid execution for MD interact requests.
+    pub hybrid_md: bool,
+    /// Device pool capacity in bucket-buffer slots.
+    pub table_slots: usize,
+    /// Device-resident interaction-entry cache capacity (tree moments /
+    /// particle entries, 16 B each). Models ChaNGa's GPU-resident moments
+    /// and particle arrays.
+    pub node_slots: usize,
+    pub executor: ExecutorConfig,
+    pub artifacts: PathBuf,
+    /// Safety drain: force-flush a combiner whose newest request has waited
+    /// this long (rescues the static policy at iteration tails).
+    pub idle_drain: f64,
+    /// Coordinator tick (recv timeout driving combiner polls).
+    pub tick: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            pes: 4,
+            combine: CombinePolicy::Adaptive,
+            data_policy: DataPolicy::ReuseSorted,
+            split: SplitPolicy::AdaptiveItems,
+            hybrid_md: true,
+            table_slots: 1024,
+            node_slots: 1 << 17,
+            executor: ExecutorConfig::default(),
+            artifacts: crate::runtime::default_artifacts_dir(),
+            idle_drain: 2e-3,
+            tick: Duration::from_micros(200),
+        }
+    }
+}
+
+/// One work request recorded inside an in-flight launch.
+struct LaunchItem {
+    wr_id: u64,
+    tag: u64,
+    chare: ChareId,
+    kind: WorkKind,
+    data_items: usize,
+    buffer: Option<u64>,
+}
+
+struct LaunchInfo {
+    items: Vec<LaunchItem>,
+    transfer_bytes: u64,
+}
+
+/// The coordinator thread's state.
+struct Coord {
+    cfg: Config,
+    router: Router,
+    table: ChareTable,
+    /// Residency of interaction entries (tree moments / cached particles),
+    /// 16 bytes each. Accounting-level model of the GPU-resident arrays
+    /// the interaction lists reference.
+    node_table: crate::runtime::DeviceMemory,
+    node_saved: u64,
+    force: Combiner,
+    ewald: Combiner,
+    md: Combiner,
+    hybrid: HybridScheduler,
+    report: Report,
+    launches: HashMap<u64, LaunchInfo>,
+    gpu: GpuService,
+    next_wr: u64,
+    next_launch: u64,
+    rr_pe: usize,
+}
+
+impl Coord {
+    fn new(cfg: Config, router: Router, done_tx: Sender<Result<Completion>>) -> Result<Coord> {
+        let spec = GpuSpec::kepler_k20();
+        let force_max = occupancy(&spec, &KernelResources::force_kernel()).max_size as usize;
+        let ewald_max = occupancy(&spec, &KernelResources::ewald_kernel()).max_size as usize;
+        let md_max = occupancy(&spec, &KernelResources::md_kernel()).max_size as usize;
+        let sort = cfg.data_policy == DataPolicy::ReuseSorted;
+        let gpu = GpuService::spawn(&cfg.artifacts, cfg.executor.clone(), done_tx)?;
+        Ok(Coord {
+            table: ChareTable::new(cfg.table_slots),
+            node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
+            node_saved: 0,
+            force: Combiner::new(cfg.combine, force_max, sort),
+            ewald: Combiner::new(cfg.combine, ewald_max, false),
+            md: Combiner::new(cfg.combine, md_max, false),
+            hybrid: HybridScheduler::new(cfg.split),
+            report: Report::default(),
+            launches: HashMap::new(),
+            gpu,
+            next_wr: 0,
+            next_launch: 0,
+            rr_pe: 0,
+            cfg,
+            router,
+        })
+    }
+
+    fn now(&self) -> f64 {
+        self.router.shared.timeline.now()
+    }
+
+    /// Handle one submitted work request: stage for reuse if configured,
+    /// then insert into the matching combiner.
+    fn on_submit(&mut self, draft: WorkDraft) {
+        let now = self.now();
+        let id = self.next_wr;
+        self.next_wr += 1;
+        let wr = WorkRequest {
+            id,
+            chare: draft.chare,
+            kind: draft.kind,
+            buffer: draft.buffer,
+            data_items: draft.data_items,
+            tag: draft.tag,
+            arrival: now,
+            payload: draft.payload,
+        };
+
+        // Reuse staging applies to Force requests with a declared buffer;
+        // Ewald uses the contiguous path (no gather variant) and MD patch
+        // data changes every step.
+        let mut slot = None;
+        let mut staged_bytes = 0;
+        if self.cfg.data_policy != DataPolicy::NoReuse
+            && wr.kind == WorkKind::Force
+        {
+            if let (Some(buf), WrPayload::Force { parts, .. }) =
+                (wr.buffer, &wr.payload)
+            {
+                match self.table.stage_pinned(buf, parts) {
+                    Ok(staged) => {
+                        slot = Some(staged.slot);
+                        staged_bytes = staged.bytes;
+                    }
+                    Err(_) => {
+                        // Pool exhausted by pinned pending launches: fall
+                        // back to contiguous transfer for this request.
+                        slot = None;
+                    }
+                }
+            }
+        }
+
+        let pending = Pending { wr, slot, staged_bytes };
+        match pending.wr.kind {
+            WorkKind::Force => self.force.insert(pending, now),
+            WorkKind::Ewald => self.ewald.insert(pending, now),
+            WorkKind::MdInteract => self.md.insert(pending, now),
+        }
+        self.poll_combiners();
+    }
+
+    /// Poll every combiner; dispatch flushed batches.
+    fn poll_combiners(&mut self) {
+        let now = self.now();
+        while let Some(batch) = self.force.poll(now) {
+            self.dispatch_force(batch);
+        }
+        while let Some(batch) = self.ewald.poll(now) {
+            self.dispatch_ewald(batch);
+        }
+        while let Some(batch) = self.md.poll(now) {
+            self.dispatch_md(batch);
+        }
+        self.idle_drain(now);
+    }
+
+    /// Safety drain (see Config::idle_drain).
+    fn idle_drain(&mut self, now: f64) {
+        let d = self.cfg.idle_drain;
+        if d <= 0.0 {
+            return;
+        }
+        if !self.force.is_empty() && now - self.force.last_arrival().unwrap_or(now) > d {
+            while let Some(b) = self.force.force_flush() {
+                self.dispatch_force(b);
+            }
+        }
+        if !self.ewald.is_empty() && now - self.ewald.last_arrival().unwrap_or(now) > d {
+            while let Some(b) = self.ewald.force_flush() {
+                self.dispatch_ewald(b);
+            }
+        }
+        if !self.md.is_empty() && now - self.md.last_arrival().unwrap_or(now) > d {
+            while let Some(b) = self.md.force_flush() {
+                self.dispatch_md(b);
+            }
+        }
+    }
+
+    /// Force-flush everything (shutdown path).
+    fn drain_all(&mut self) {
+        while let Some(b) = self.force.force_flush() {
+            self.dispatch_force(b);
+        }
+        while let Some(b) = self.ewald.force_flush() {
+            self.dispatch_ewald(b);
+        }
+        while let Some(b) = self.md.force_flush() {
+            self.dispatch_md(b);
+        }
+    }
+
+    /// Build and submit the combined force launch for a flushed batch.
+    fn dispatch_force(&mut self, batch: Batch) {
+        self.report.record_flush(batch.reason, batch.items.len());
+        let n = batch.items.len();
+        if n == 0 {
+            return;
+        }
+        let all_staged = batch.items.iter().all(|p| p.slot.is_some());
+        let use_gather = self.cfg.data_policy != DataPolicy::NoReuse && all_staged;
+
+        let mut inters = Vec::with_capacity(n * INTERACTIONS * INTER_W);
+        let mut transfer = 0u64;
+        const ENTRY_BYTES: u64 = (INTER_W * 4) as u64;
+        for p in &batch.items {
+            let WrPayload::Force { inters: i, inter_ids, .. } = &p.wr.payload
+            else {
+                unreachable!("force combiner holds only Force requests")
+            };
+            inters.extend_from_slice(i);
+            if self.cfg.data_policy == DataPolicy::NoReuse {
+                transfer += (i.len() * 4) as u64;
+            } else {
+                // interaction entries (moments/particles) are resident on
+                // the device from prior kernels: transfer only the misses
+                for &eid in inter_ids {
+                    match self.node_table.acquire(eid as u64) {
+                        Some(r) if r.is_hit() => {
+                            self.node_saved += ENTRY_BYTES;
+                        }
+                        _ => transfer += ENTRY_BYTES,
+                    }
+                }
+            }
+        }
+
+        let (payload, pattern) = if use_gather {
+            let mut idx = Vec::with_capacity(n * PARTS_PER_BUCKET);
+            for p in &batch.items {
+                let base = p.slot.unwrap() as i32 * PARTS_PER_BUCKET as i32;
+                idx.extend((0..PARTS_PER_BUCKET as i32).map(|j| base + j));
+                transfer += p.staged_bytes;
+            }
+            transfer += (idx.len() * 4) as u64; // the index buffer itself
+            let pattern = match self.cfg.data_policy {
+                DataPolicy::ReuseSorted => CoalescingClass::SortedGather,
+                _ => CoalescingClass::RandomGather,
+            };
+            (
+                Payload::GravityGather {
+                    pool: self.table.pool_arc(),
+                    idx,
+                    inters,
+                    batch: n,
+                },
+                pattern,
+            )
+        } else {
+            let mut parts = Vec::with_capacity(n * PARTS_PER_BUCKET * PARTICLE_W);
+            for p in &batch.items {
+                let WrPayload::Force { parts: pp, .. } = &p.wr.payload else {
+                    unreachable!()
+                };
+                parts.extend_from_slice(pp);
+                transfer += (pp.len() * 4) as u64;
+            }
+            (
+                Payload::Gravity { parts, inters, batch: n },
+                CoalescingClass::Contiguous,
+            )
+        };
+        self.submit_launch(batch.items, payload, transfer, pattern);
+    }
+
+    fn dispatch_ewald(&mut self, batch: Batch) {
+        self.report.record_flush(batch.reason, batch.items.len());
+        let n = batch.items.len();
+        if n == 0 {
+            return;
+        }
+        let mut parts = Vec::with_capacity(n * PARTS_PER_BUCKET * PARTICLE_W);
+        let mut transfer = 0u64;
+        for p in &batch.items {
+            let WrPayload::Ewald { parts: pp } = &p.wr.payload else {
+                unreachable!("ewald combiner holds only Ewald requests")
+            };
+            parts.extend_from_slice(pp);
+            transfer += (pp.len() * 4) as u64;
+        }
+        self.submit_launch(
+            batch.items,
+            Payload::Ewald { parts, batch: n },
+            transfer,
+            CoalescingClass::Contiguous,
+        );
+    }
+
+    /// MD: hybrid-split the flushed batch, CPU prefix to a PE, GPU suffix
+    /// to a combined launch.
+    fn dispatch_md(&mut self, batch: Batch) {
+        self.report.record_flush(batch.reason, batch.items.len());
+        if batch.items.is_empty() {
+            return;
+        }
+        let (cpu, gpu) = if self.cfg.hybrid_md {
+            self.hybrid.split(batch.items)
+        } else {
+            (Vec::new(), batch.items)
+        };
+
+        if !cpu.is_empty() {
+            self.report.cpu_items +=
+                cpu.iter().map(|p| p.wr.data_items as u64).sum::<u64>();
+            // Scatter the CPU portion across PEs (asynchronous executions
+            // on all CPU cores, section 3.3), interleaved so each PE gets
+            // a similar item load.
+            let npes = self.router.pes.len();
+            let mut per_pe: Vec<Vec<Pending>> =
+                (0..npes).map(|_| Vec::new()).collect();
+            for (i, p) in cpu.into_iter().enumerate() {
+                per_pe[(self.rr_pe + i) % npes].push(p);
+            }
+            self.rr_pe += 1;
+            for (pe, batch) in per_pe.into_iter().enumerate() {
+                if batch.is_empty() {
+                    continue;
+                }
+                // +1 for the CpuBatch message itself.
+                self.router.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+                self.router.pes[pe]
+                    .send(PeMsg::CpuBatch(batch))
+                    .expect("pe thread is down");
+            }
+        }
+
+        let n = gpu.len();
+        if n == 0 {
+            return;
+        }
+        let mut pa = Vec::with_capacity(n * PARTS_PER_PATCH * MD_W);
+        let mut pb = Vec::with_capacity(n * PARTS_PER_PATCH * MD_W);
+        let mut transfer = 0u64;
+        for p in &gpu {
+            let WrPayload::MdPair { pa: a, pb: b } = &p.wr.payload else {
+                unreachable!("md combiner holds only MdPair requests")
+            };
+            pa.extend_from_slice(a);
+            pb.extend_from_slice(b);
+            transfer += ((a.len() + b.len()) * 4) as u64;
+        }
+        self.submit_launch(
+            gpu,
+            Payload::MdForce { pa, pb, batch: n },
+            transfer,
+            CoalescingClass::Contiguous,
+        );
+    }
+
+    fn submit_launch(
+        &mut self,
+        items: Vec<Pending>,
+        payload: Payload,
+        transfer_bytes: u64,
+        pattern: CoalescingClass,
+    ) {
+        let id = self.next_launch;
+        self.next_launch += 1;
+        let info = LaunchInfo {
+            items: items
+                .iter()
+                .map(|p| LaunchItem {
+                    wr_id: p.wr.id,
+                    tag: p.wr.tag,
+                    chare: p.wr.chare,
+                    kind: p.wr.kind,
+                    data_items: p.wr.data_items,
+                    buffer: if p.slot.is_some() { p.wr.buffer } else { None },
+                })
+                .collect(),
+            transfer_bytes,
+        };
+        self.launches.insert(id, info);
+        self.gpu
+            .submit(LaunchSpec { id, payload, transfer_bytes, pattern })
+            .expect("gpu service is down");
+    }
+
+    /// Scatter a completed launch's outputs back to the owning chares.
+    fn on_gpu_done(&mut self, completion: Result<Completion>) {
+        let c = completion.expect("GPU launch failed");
+        let info = self
+            .launches
+            .remove(&c.id)
+            .expect("completion for unknown launch");
+
+        self.report.launches += 1;
+        self.report.gpu_requests += info.items.len() as u64;
+        self.report.kernel_wall += c.wall;
+        self.report.kernel_modeled += c.modeled.kernel;
+        self.report.transfer_modeled += c.modeled.transfer;
+        self.report.transfer_bytes += info.transfer_bytes;
+        self.router.shared.timeline.record(
+            crate::util::timeline::SpanKind::Kernel,
+            "combined-kernel",
+            self.now() - c.wall,
+            c.wall,
+            c.modeled.kernel,
+            info.items.len() as u64,
+        );
+
+        let slot_len = match info.items.first().map(|i| i.kind) {
+            Some(WorkKind::MdInteract) => PARTS_PER_PATCH * MD_W,
+            _ => PARTS_PER_BUCKET * OUT_W,
+        };
+
+        let mut gpu_items = 0u64;
+        for (i, item) in info.items.iter().enumerate() {
+            gpu_items += item.data_items as u64;
+            let out = c.out[i * slot_len..(i + 1) * slot_len].to_vec();
+            self.router.send_msg(
+                item.chare,
+                Msg::new(
+                    METHOD_RESULT,
+                    WrResult {
+                        wr_id: item.wr_id,
+                        tag: item.tag,
+                        kind: item.kind,
+                        out,
+                    },
+                ),
+            );
+            if let Some(buf) = item.buffer {
+                self.table.release(buf);
+            }
+        }
+        self.report.gpu_items += gpu_items;
+        if matches!(
+            info.items.first().map(|i| i.kind),
+            Some(WorkKind::MdInteract)
+        ) {
+            self.hybrid.record_gpu(gpu_items as usize, c.wall);
+        }
+
+        // Release the work-request holds.
+        self.router
+            .shared
+            .outstanding
+            .fetch_sub(info.items.len() as i64, Ordering::SeqCst);
+    }
+
+    fn on_cpu_done(
+        &mut self,
+        items: usize,
+        secs: f64,
+        results: Vec<(ChareId, WrResult)>,
+    ) {
+        self.hybrid.record_cpu(items, secs);
+        self.report.cpu_task_wall += secs;
+        self.report.cpu_requests += results.len() as u64;
+        let n = results.len() as i64;
+        for (chare, res) in results {
+            self.router
+                .send_msg(chare, Msg::new(METHOD_RESULT, res));
+        }
+        // Release the work-request holds, then the CpuDone hold.
+        self.router
+            .shared
+            .outstanding
+            .fetch_sub(n + 1, Ordering::SeqCst);
+    }
+
+    /// The coordinator event loop.
+    fn run(mut self, rx: Receiver<CoordMsg>) -> Report {
+        loop {
+            match rx.recv_timeout(self.cfg.tick) {
+                Ok(CoordMsg::Submit(draft)) => self.on_submit(draft),
+                Ok(CoordMsg::GpuDone(c)) => {
+                    self.on_gpu_done(c);
+                    self.poll_combiners();
+                }
+                Ok(CoordMsg::CpuDone { items, secs, results }) => {
+                    self.on_cpu_done(items, secs, results);
+                    self.poll_combiners();
+                }
+                Ok(CoordMsg::InvalidateAll) => {
+                    self.table.invalidate_all();
+                    self.node_table.invalidate_all();
+                }
+                Ok(CoordMsg::Stop) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    self.poll_combiners();
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        self.drain_all();
+        // Wait for in-flight launches so their holds are released and the
+        // final stats are complete.
+        // (Completions still arrive on rx via the forwarder.)
+        while !self.launches.is_empty() {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(CoordMsg::GpuDone(c)) => self.on_gpu_done(c),
+                Ok(CoordMsg::CpuDone { items, secs, results }) => {
+                    self.on_cpu_done(items, secs, results)
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        self.report.table_hits = self.table.hits() + self.node_table.hits();
+        self.report.table_misses =
+            self.table.misses() + self.node_table.misses();
+        self.report.saved_bytes = self.table.saved_bytes() + self.node_saved;
+        self.report
+    }
+}
+
+/// The user-facing runtime: build, register chares, start, drive, shutdown.
+pub struct GCharm {
+    cfg: Config,
+    placement: HashMap<ChareId, usize>,
+    registry: Vec<HashMap<ChareId, Box<dyn Chare>>>,
+    running: Option<RunningState>,
+}
+
+struct RunningState {
+    router: Router,
+    pe_handles: Vec<JoinHandle<()>>,
+    coord_handle: JoinHandle<Report>,
+    forwarder: JoinHandle<()>,
+}
+
+impl GCharm {
+    pub fn new(cfg: Config) -> GCharm {
+        let pes = cfg.pes.max(1);
+        GCharm {
+            cfg: Config { pes, ..cfg },
+            placement: HashMap::new(),
+            registry: (0..pes).map(|_| HashMap::new()).collect(),
+            running: None,
+        }
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Register a chare on a PE (must happen before `start`).
+    pub fn register(&mut self, id: ChareId, pe: usize, chare: Box<dyn Chare>) {
+        assert!(self.running.is_none(), "register before start");
+        let pe = pe % self.cfg.pes;
+        let prev = self.placement.insert(id, pe);
+        assert!(prev.is_none(), "chare {id:?} registered twice");
+        self.registry[pe].insert(id, chare);
+    }
+
+    /// Spawn PE threads, the coordinator, and the GPU service.
+    pub fn start(&mut self) -> Result<()> {
+        anyhow::ensure!(self.running.is_none(), "already started");
+        let shared = Shared::new();
+        let (coord_tx, coord_rx) = channel::<CoordMsg>();
+        let mut pe_txs = Vec::new();
+        let mut pe_rxs = Vec::new();
+        for _ in 0..self.cfg.pes {
+            let (tx, rx) = channel::<PeMsg>();
+            pe_txs.push(tx);
+            pe_rxs.push(rx);
+        }
+        let router = Router {
+            pes: pe_txs,
+            coord: coord_tx.clone(),
+            placement: Arc::new(std::mem::take(&mut self.placement)),
+            shared: shared.clone(),
+        };
+
+        // GPU completion forwarder: GpuService -> coordinator queue.
+        let (done_tx, done_rx) = channel::<Result<Completion>>();
+        let fwd_coord = coord_tx.clone();
+        let forwarder = std::thread::Builder::new()
+            .name("gpu-forwarder".into())
+            .spawn(move || {
+                while let Ok(c) = done_rx.recv() {
+                    if fwd_coord.send(CoordMsg::GpuDone(c)).is_err() {
+                        break;
+                    }
+                }
+            })?;
+
+        let coord = Coord::new(self.cfg.clone(), router.clone(), done_tx)
+            .context("starting coordinator")?;
+        let coord_handle = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || coord.run(coord_rx))?;
+
+        let mut pe_handles = Vec::new();
+        for (pe, rx) in pe_rxs.into_iter().enumerate() {
+            let chares = std::mem::take(&mut self.registry[pe]);
+            let r = router.clone();
+            let exec_cfg = self.cfg.executor.clone();
+            pe_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pe-{pe}"))
+                    .spawn(move || pe_loop(pe, rx, chares, r, exec_cfg))?,
+            );
+        }
+
+        self.running = Some(RunningState {
+            router,
+            pe_handles,
+            coord_handle,
+            forwarder,
+        });
+        Ok(())
+    }
+
+    fn running(&self) -> &RunningState {
+        self.running.as_ref().expect("runtime not started")
+    }
+
+    /// Driver-side message send.
+    pub fn send(&self, to: ChareId, msg: Msg) {
+        self.running().router.send_msg(to, msg);
+    }
+
+    /// Timeline seconds since start.
+    pub fn now(&self) -> f64 {
+        self.running().router.shared.timeline.now()
+    }
+
+    pub fn shared(&self) -> Arc<Shared> {
+        self.running().router.shared.clone()
+    }
+
+    /// Block until the system is quiescent: no queued messages, no pending
+    /// or in-flight work requests.
+    pub fn await_quiescence(&self) {
+        let shared = &self.running().router.shared;
+        loop {
+            if shared.outstanding.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+
+    /// Block until `n` contributions have arrived; returns their sum and
+    /// resets the reduction.
+    pub fn await_reduction(&self, n: u64) -> f64 {
+        let shared = &self.running().router.shared;
+        let mut guard = shared.reduction.lock().unwrap();
+        while guard.count < n {
+            guard = shared.reduction_cv.wait(guard).unwrap();
+        }
+        let sum = guard.sum;
+        guard.count = 0;
+        guard.sum = 0.0;
+        sum
+    }
+
+    /// Invalidate all device-resident buffers. Call only at quiescence
+    /// (iteration boundary): pinned slots back in-flight launches.
+    pub fn invalidate_device_buffers(&self) {
+        self.running()
+            .router
+            .coord
+            .send(CoordMsg::InvalidateAll)
+            .expect("coordinator is down");
+    }
+
+    /// Stop all threads and return the run report.
+    pub fn shutdown(mut self) -> Report {
+        let state = self.running.take().expect("runtime not started");
+        state.router.coord.send(CoordMsg::Stop).ok();
+        let report = state.coord_handle.join().expect("coordinator panicked");
+        for tx in &state.router.pes {
+            tx.send(PeMsg::Stop).ok();
+        }
+        for h in state.pe_handles {
+            h.join().expect("pe panicked");
+        }
+        drop(state.router); // closes the forwarder's target
+        state.forwarder.join().ok();
+        report
+    }
+}

@@ -1,0 +1,174 @@
+//! Work requests: the unit of GPU work a chare submits to the runtime.
+//!
+//! When a chare needs a kernel, it creates a `WorkRequest` and hands it to
+//! the runtime scheduler (paper section 2.2). The runtime combines several
+//! into one `CombinedLaunch` (section 3.1), decides the data-movement policy
+//! (section 3.2), or routes them to CPU workers (section 3.3).
+
+use crate::runtime::memory::BufferId;
+use crate::runtime::shapes::{
+    INTERACTIONS, INTER_W, MD_W, PARTICLE_W, PARTS_PER_BUCKET,
+    PARTS_PER_PATCH,
+};
+
+use super::chare::ChareId;
+
+/// Which kernel family a work request belongs to. Each family has its own
+/// workGroupList/combiner because occupancy-derived maxSize differs
+/// (section 4.3: force 104, Ewald 65).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkKind {
+    /// Bucket gravity force (N-Body).
+    Force,
+    /// Ewald periodic correction (N-Body).
+    Ewald,
+    /// Patch-pair interaction (MD). Has both CPU and GPU kernels, so it is
+    /// eligible for hybrid scheduling.
+    MdInteract,
+}
+
+/// Kernel input data carried by one work request.
+#[derive(Debug, Clone)]
+pub enum WrPayload {
+    /// Bucket particles (P x 4) + interaction list (I x 4, zero-padded).
+    /// `inter_ids` are the stable ids of the *real* (unpadded) entries;
+    /// the runtime keys interaction-data residency on them (section 3.2:
+    /// moments/particle data resident on the device from prior kernels).
+    Force { parts: Vec<f32>, inters: Vec<f32>, inter_ids: Vec<u32> },
+    /// Bucket particles (P x 4).
+    Ewald { parts: Vec<f32> },
+    /// Two patch particle sets (N x 2 each).
+    MdPair { pa: Vec<f32>, pb: Vec<f32> },
+}
+
+impl WrPayload {
+    /// Validate buffer lengths against the canonical tile shapes.
+    pub fn check(&self) -> bool {
+        match self {
+            WrPayload::Force { parts, inters, inter_ids } => {
+                parts.len() == PARTS_PER_BUCKET * PARTICLE_W
+                    && inters.len() == INTERACTIONS * INTER_W
+                    && inter_ids.len() <= INTERACTIONS
+            }
+            WrPayload::Ewald { parts } => {
+                parts.len() == PARTS_PER_BUCKET * PARTICLE_W
+            }
+            WrPayload::MdPair { pa, pb } => {
+                pa.len() == PARTS_PER_PATCH * MD_W
+                    && pb.len() == PARTS_PER_PATCH * MD_W
+            }
+        }
+    }
+}
+
+/// One unit of device work, created by a chare entry method.
+#[derive(Debug, Clone)]
+pub struct WorkRequest {
+    /// Unique id assigned by the runtime at submission.
+    pub id: u64,
+    /// Chare to notify with the results.
+    pub chare: ChareId,
+    pub kind: WorkKind,
+    /// Chare data buffer this request reads; the chare table uses it for
+    /// residency/reuse decisions (section 3.2). `None` for payloads with no
+    /// reusable buffer.
+    pub buffer: Option<BufferId>,
+    /// Workload model: number of input data items (section 3.3 models a
+    /// request's cost by the amount of input data it accesses).
+    pub data_items: usize,
+    /// Opaque correlation tag chosen by the submitting chare, echoed in
+    /// `WrResult` (e.g. the bucket index the request belongs to).
+    pub tag: u64,
+    /// Timeline seconds when the request reached the runtime.
+    pub arrival: f64,
+    pub payload: WrPayload,
+}
+
+impl WorkRequest {
+    /// Payload bytes that would cross PCIe if nothing were resident.
+    pub fn payload_bytes(&self) -> u64 {
+        let floats = match &self.payload {
+            WrPayload::Force { parts, inters, .. } => {
+                parts.len() + inters.len()
+            }
+            WrPayload::Ewald { parts } => parts.len(),
+            WrPayload::MdPair { pa, pb } => pa.len() + pb.len(),
+        };
+        (floats * 4) as u64
+    }
+
+    /// Bytes of the reusable buffer (the part residency can save).
+    pub fn reusable_bytes(&self) -> u64 {
+        let floats = match &self.payload {
+            WrPayload::Force { parts, .. } => parts.len(),
+            WrPayload::Ewald { parts } => parts.len(),
+            WrPayload::MdPair { .. } => 0,
+        };
+        (floats * 4) as u64
+    }
+}
+
+/// Results scattered back to one chare after a combined launch completes.
+#[derive(Debug, Clone)]
+pub struct WrResult {
+    pub wr_id: u64,
+    /// The submitting chare's correlation tag.
+    pub tag: u64,
+    pub kind: WorkKind,
+    /// Output rows for this request's slot (P x 4 for gravity/Ewald,
+    /// N x 2 for MD).
+    pub out: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn force_wr() -> WorkRequest {
+        WorkRequest {
+            id: 1,
+            chare: ChareId::new(0, 0),
+            kind: WorkKind::Force,
+            buffer: Some(42),
+            data_items: 128,
+            tag: 0,
+            arrival: 0.0,
+            payload: WrPayload::Force {
+                parts: vec![0.0; PARTS_PER_BUCKET * PARTICLE_W],
+                inters: vec![0.0; INTERACTIONS * INTER_W],
+                inter_ids: vec![0; 8],
+            },
+        }
+    }
+
+    #[test]
+    fn payload_check_accepts_canonical_shapes() {
+        assert!(force_wr().payload.check());
+        let e = WrPayload::Ewald { parts: vec![0.0; PARTS_PER_BUCKET * PARTICLE_W] };
+        assert!(e.check());
+        let m = WrPayload::MdPair {
+            pa: vec![0.0; PARTS_PER_PATCH * MD_W],
+            pb: vec![0.0; PARTS_PER_PATCH * MD_W],
+        };
+        assert!(m.check());
+    }
+
+    #[test]
+    fn payload_check_rejects_wrong_shapes() {
+        let bad = WrPayload::Force {
+            parts: vec![0.0; 3],
+            inters: vec![],
+            inter_ids: vec![],
+        };
+        assert!(!bad.check());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let wr = force_wr();
+        let parts_bytes = (PARTS_PER_BUCKET * PARTICLE_W * 4) as u64;
+        let inter_bytes = (INTERACTIONS * INTER_W * 4) as u64;
+        assert_eq!(wr.payload_bytes(), parts_bytes + inter_bytes);
+        assert_eq!(wr.reusable_bytes(), parts_bytes);
+    }
+}

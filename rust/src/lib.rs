@@ -1,0 +1,23 @@
+//! # G-Charm-RS
+//!
+//! Reproduction of *Strategies for Efficient Executions of Irregular
+//! Message-Driven Parallel Applications on GPU Systems* (Rengasamy &
+//! Vadhiyar, 2020) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **Layer 3** (`coordinator`): the G-Charm runtime -- message-driven
+//!   chares over PE worker threads, adaptive kernel combining, data reuse
+//!   with sorted-index coalescing, and dynamic CPU/GPU hybrid scheduling.
+//! - **Layer 2/1** (`python/compile`): JAX graphs calling Pallas kernels,
+//!   AOT-lowered to HLO text once at build time (`make artifacts`).
+//! - **Runtime bridge** (`runtime`): PJRT CPU client executing the AOT
+//!   artifacts (the simulated GPU device) plus the analytic Kepler K20
+//!   occupancy/cost model.
+//!
+//! Applications (`apps`): a ChaNGa-style Barnes-Hut N-Body simulation and
+//! a 2D molecular dynamics mini-app -- the paper's two evaluation
+//! workloads. See DESIGN.md for the experiment index.
+pub mod apps;
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+pub mod util;

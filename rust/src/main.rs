@@ -1,0 +1,205 @@
+//! `gcharm` CLI: run the paper's applications and regenerate its figures.
+//!
+//! Subcommands (hand-rolled parsing; the vendored crate set has no clap):
+//!
+//! ```text
+//! gcharm info                       occupancy/model tables
+//! gcharm nbody [opts]               ChaNGa-style N-Body run
+//!   --dataset tiny|small|large      (default small)
+//!   --pes N --iters N --pieces N    (defaults 4 / 3 / 4 per pe)
+//!   --combine adaptive|static[:P]   (default adaptive)
+//!   --data noreuse|reuse|sorted     (default sorted)
+//!   --mode gcharm|cpu|handtuned     (default gcharm)
+//! gcharm md [opts]                  2D molecular dynamics run
+//!   --particles N --steps N --grid G --pes N
+//!   --split static|adaptive         (default adaptive)
+//!   --mode gcharm|cpu1              (default gcharm)
+//! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use gcharm::apps::md::{self, MdConfig};
+use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
+use gcharm::bench;
+use gcharm::coordinator::{CombinePolicy, Config, DataPolicy, SplitPolicy};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn get<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn combine_policy(s: &str) -> Result<CombinePolicy> {
+    if s == "adaptive" {
+        Ok(CombinePolicy::Adaptive)
+    } else if s == "static" {
+        Ok(CombinePolicy::StaticEvery(100))
+    } else if let Some(p) = s.strip_prefix("static:") {
+        Ok(CombinePolicy::StaticEvery(p.parse()?))
+    } else {
+        bail!("unknown combine policy {s}")
+    }
+}
+
+fn data_policy(s: &str) -> Result<DataPolicy> {
+    match s {
+        "noreuse" => Ok(DataPolicy::NoReuse),
+        "reuse" => Ok(DataPolicy::Reuse),
+        "sorted" => Ok(DataPolicy::ReuseSorted),
+        _ => bail!("unknown data policy {s}"),
+    }
+}
+
+fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
+    let dataset = match flags.get("dataset").map(|s| s.as_str()) {
+        None | Some("small") => DatasetSpec::small(),
+        Some("tiny") => DatasetSpec::tiny(),
+        Some("large") => DatasetSpec::large(),
+        Some("cube300") => DatasetSpec::cube300(),
+        Some("lambs") => DatasetSpec::lambs(),
+        Some(other) => bail!("unknown dataset {other}"),
+    };
+    let pes: usize = get(&flags, "pes", 4);
+    let mut cfg = NbodyConfig::new(dataset);
+    cfg.iters = get(&flags, "iters", 3);
+    cfg.pieces_per_pe = get(&flags, "pieces", 4);
+    cfg.runtime = Config {
+        pes,
+        combine: combine_policy(
+            flags.get("combine").map(|s| s.as_str()).unwrap_or("adaptive"),
+        )?,
+        data_policy: data_policy(
+            flags.get("data").map(|s| s.as_str()).unwrap_or("sorted"),
+        )?,
+        ..Config::default()
+    };
+
+    let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");
+    println!(
+        "nbody: dataset={} n={} iters={} pes={} mode={mode}",
+        cfg.dataset.name, cfg.dataset.n, cfg.iters, pes
+    );
+    let r = match mode {
+        "gcharm" => nbody::run(&cfg)?,
+        "cpu" => nbody::run_cpu_only(&cfg)?,
+        "handtuned" => nbody::handtuned::run_handtuned(&cfg)?,
+        other => bail!("unknown mode {other}"),
+    };
+    println!("buckets: {}", r.buckets);
+    println!(
+        "energy: start {:.6e} end {:.6e}",
+        r.energies.first().unwrap_or(&0.0),
+        r.energies.last().unwrap_or(&0.0)
+    );
+    println!("{}", r.report);
+    Ok(())
+}
+
+fn cmd_md(flags: HashMap<String, String>) -> Result<()> {
+    let mut cfg = MdConfig::new(get(&flags, "particles", 4096));
+    cfg.steps = get(&flags, "steps", 5);
+    if let Some(g) = flags.get("grid").and_then(|v| v.parse().ok()) {
+        cfg.grid = g;
+        cfg.box_l = cfg.grid as f64 * 2.0;
+    }
+    cfg.runtime = Config {
+        pes: get(&flags, "pes", 4),
+        split: match flags.get("split").map(|s| s.as_str()) {
+            None | Some("adaptive") => SplitPolicy::AdaptiveItems,
+            Some("static") => SplitPolicy::StaticCount,
+            Some(other) => bail!("unknown split {other}"),
+        },
+        hybrid_md: true,
+        ..Config::default()
+    };
+    let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");
+    println!(
+        "md: n={} steps={} grid={} pes={} mode={mode}",
+        cfg.n_particles, cfg.steps, cfg.grid, cfg.runtime.pes
+    );
+    let r = match mode {
+        "gcharm" => md::run(&cfg)?,
+        "cpu1" => md::run_single_core_cpu(&cfg),
+        other => bail!("unknown mode {other}"),
+    };
+    println!(
+        "kinetic energy: start {:.4} end {:.4}",
+        r.energies.first().unwrap_or(&0.0),
+        r.energies.last().unwrap_or(&0.0)
+    );
+    println!("{}", r.report);
+    Ok(())
+}
+
+fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
+    let scale = if flags.contains_key("full") {
+        bench::Scale::full()
+    } else {
+        bench::Scale::quick()
+    };
+    let which = flags.get("fig").map(|s| s.as_str()).unwrap_or("all");
+    bench::print_occupancy_table();
+    match which {
+        "2" => bench::run_fig2(&scale),
+        "3" => bench::run_fig3(&scale),
+        "4" => bench::run_fig4(&scale),
+        "5" => bench::run_fig5(&scale),
+        "ablation" => bench::run_ablation(&scale),
+        "all" => {
+            bench::run_fig2(&scale);
+            bench::run_fig3(&scale);
+            bench::run_fig4(&scale);
+            bench::run_fig5(&scale);
+        }
+        other => bail!("unknown figure {other}"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "info" => {
+            bench::print_occupancy_table();
+            Ok(())
+        }
+        "nbody" => cmd_nbody(flags),
+        "md" => cmd_md(flags),
+        "figures" => cmd_figures(flags),
+        _ => {
+            println!(
+                "usage: gcharm <info|nbody|md|figures> [--flags]\n\
+                 see rust/src/main.rs header for options"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Analytic GPU device model: Kepler occupancy calculator + cost model.
+//!
+//! The paper's combiner (section 3.1) asks the *CUDA occupancy calculator* for
+//! the maximum number of thread blocks per SM, and multiplies by the SM
+//! count to get `maxSize` -- the number of work requests worth combining
+//! into one kernel. No CUDA here, so this module reimplements the occupancy
+//! arithmetic for the paper's NVIDIA Kepler K20 (section 4.3: force kernel
+//! 50% occupancy -> 8 blocks/SM -> maxSize 104 = 8 x 13 SMs; Ewald 31% ->
+//! maxSize 65).
+//!
+//! The same module provides the *cost model* used to report modeled-K20
+//! kernel and transfer times next to measured wall clock in the figure
+//! benches (DESIGN.md section 2 substitution table).
+
+/// Static resources of one GPU (Kepler K20 defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub sms: u32,
+    pub max_threads_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    pub regs_per_sm: u32,
+    pub smem_per_sm: u32,
+    pub warp_size: u32,
+    /// Register allocation granularity (regs rounded up per warp).
+    pub reg_granularity: u32,
+    /// Shared-memory allocation granularity in bytes.
+    pub smem_granularity: u32,
+    /// Sustained PCIe bandwidth, bytes/second (Gen2 x16 practical).
+    pub pcie_bytes_per_sec: f64,
+    /// Per-transfer latency, seconds.
+    pub pcie_latency: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Per-SM throughput for the interaction inner loop,
+    /// particle-interactions per second at full occupancy.
+    pub interactions_per_sm_per_sec: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA Kepler K20c (the paper's testbed GPU).
+    pub fn kepler_k20() -> GpuSpec {
+        GpuSpec {
+            name: "Kepler K20",
+            sms: 13,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 16,
+            regs_per_sm: 65_536,
+            smem_per_sm: 49_152,
+            warp_size: 32,
+            reg_granularity: 256,
+            smem_granularity: 256,
+            pcie_bytes_per_sec: 6.0e9,
+            pcie_latency: 10.0e-6,
+            launch_overhead: 5.0e-6,
+            // ~3.5 TFLOPs peak / ~26 flops per interaction / 13 SMs,
+            // derated to a realistic 40% of peak for this kernel class.
+            interactions_per_sm_per_sec: 4.1e9,
+        }
+    }
+}
+
+/// Per-kernel resource usage, as the CUDA compiler would report.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelResources {
+    pub threads_per_block: u32,
+    pub regs_per_thread: u32,
+    pub smem_per_block: u32,
+}
+
+impl KernelResources {
+    /// ChaNGa force-computation kernel: 16x8 = 128-thread blocks. Register
+    /// pressure (64/thread) limits residency to 8 blocks/SM on Kepler ->
+    /// 50% occupancy, matching the paper's section 4.3.
+    pub fn force_kernel() -> KernelResources {
+        KernelResources {
+            threads_per_block: 128,
+            regs_per_thread: 64,
+            smem_per_block: 4_096,
+        }
+    }
+
+    /// Ewald summation kernel: heavier register use (96/thread) limits
+    /// residency to 5 blocks/SM -> 31% occupancy, maxSize 65 (section 4.3).
+    pub fn ewald_kernel() -> KernelResources {
+        KernelResources {
+            threads_per_block: 128,
+            regs_per_thread: 96,
+            smem_per_block: 2_048,
+        }
+    }
+
+    /// MD pairwise interaction kernel (one block per patch pair).
+    pub fn md_kernel() -> KernelResources {
+        KernelResources {
+            threads_per_block: 64,
+            regs_per_thread: 48,
+            smem_per_block: 2_048,
+        }
+    }
+}
+
+/// Output of the occupancy calculation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Resident blocks per SM, after all limiters.
+    pub blocks_per_sm: u32,
+    /// Fraction of max resident threads (0..=1).
+    pub occupancy: f64,
+    /// blocks_per_sm x SM count: the combiner's maxSize.
+    pub max_size: u32,
+    /// Which resource limited residency.
+    pub limiter: Limiter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    Blocks,
+    Threads,
+    Registers,
+    SharedMemory,
+}
+
+fn round_up(v: u32, granularity: u32) -> u32 {
+    v.div_ceil(granularity) * granularity
+}
+
+/// The occupancy calculator: blocks/SM under the four Kepler limits.
+pub fn occupancy(spec: &GpuSpec, k: &KernelResources) -> Occupancy {
+    let by_blocks = spec.max_blocks_per_sm;
+    let by_threads = spec.max_threads_per_sm / k.threads_per_block;
+
+    // Registers are allocated per warp with granularity.
+    let warps = k.threads_per_block.div_ceil(spec.warp_size);
+    let regs_per_block =
+        round_up(k.regs_per_thread * spec.warp_size, spec.reg_granularity)
+            * warps;
+    let by_regs = if regs_per_block == 0 {
+        u32::MAX
+    } else {
+        spec.regs_per_sm / regs_per_block
+    };
+
+    let smem = round_up(k.smem_per_block.max(1), spec.smem_granularity);
+    let by_smem = spec.smem_per_sm / smem;
+
+    let (blocks, limiter) = [
+        (by_blocks, Limiter::Blocks),
+        (by_threads, Limiter::Threads),
+        (by_regs, Limiter::Registers),
+        (by_smem, Limiter::SharedMemory),
+    ]
+    .into_iter()
+    .min_by_key(|&(b, _)| b)
+    .unwrap();
+
+    let occ = (blocks * k.threads_per_block) as f64
+        / spec.max_threads_per_sm as f64;
+    Occupancy {
+        blocks_per_sm: blocks,
+        occupancy: occ,
+        max_size: blocks * spec.sms,
+        limiter,
+    }
+}
+
+/// Memory-access pattern class of a combined kernel (paper Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoalescingClass {
+    /// Freshly packed contiguous buffers: fully coalesced (Fig 1b).
+    Contiguous,
+    /// Data reuse with sorted index array: local coalesced runs (Fig 1d).
+    SortedGather,
+    /// Data reuse with unsorted indices: uncoalesced (Fig 1c).
+    RandomGather,
+}
+
+impl CoalescingClass {
+    /// Multiplier on kernel memory time. Calibrated so the modeled Fig 3
+    /// deltas land near the paper's: random gather costs ~1.49x kernel time
+    /// vs contiguous (paper: +49%), sorted gather recovers ~10% of that.
+    pub fn kernel_time_factor(self) -> f64 {
+        match self {
+            CoalescingClass::Contiguous => 1.0,
+            CoalescingClass::SortedGather => 1.34,
+            CoalescingClass::RandomGather => 1.49,
+        }
+    }
+
+    /// Gather variants read the index buffer from global memory too
+    /// (the paper notes reuse "doubles the number of accesses").
+    pub fn extra_index_reads(self) -> bool {
+        !matches!(self, CoalescingClass::Contiguous)
+    }
+}
+
+/// Modeled timings for one combined kernel launch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModeledCost {
+    /// Host->device transfer seconds (PCIe model).
+    pub transfer: f64,
+    /// Kernel execution seconds on the modeled device.
+    pub kernel: f64,
+}
+
+/// Device cost model: combines the occupancy, PCIe, and coalescing models.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub spec: GpuSpec,
+}
+
+impl DeviceModel {
+    pub fn new(spec: GpuSpec) -> DeviceModel {
+        DeviceModel { spec }
+    }
+
+    pub fn kepler_k20() -> DeviceModel {
+        DeviceModel::new(GpuSpec::kepler_k20())
+    }
+
+    /// Modeled host->device transfer time for `bytes` payload bytes.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.spec.pcie_latency + bytes as f64 / self.spec.pcie_bytes_per_sec
+    }
+
+    /// Modeled kernel time: `blocks` work requests of `interactions`
+    /// particle-interactions each, with the given residency and access
+    /// pattern.
+    pub fn kernel_time(
+        &self,
+        k: &KernelResources,
+        blocks: u64,
+        interactions_per_block: u64,
+        pattern: CoalescingClass,
+    ) -> f64 {
+        let occ = occupancy(&self.spec, k);
+        // Waves of resident blocks across the whole chip.
+        let wave_size = occ.max_size.max(1) as u64;
+        let waves = blocks.div_ceil(wave_size).max(1);
+        let per_wave = interactions_per_block as f64
+            / (self.spec.interactions_per_sm_per_sec
+                * occ.occupancy.max(1e-3));
+        let mut t = self.spec.launch_overhead + waves as f64 * per_wave;
+        t *= pattern.kernel_time_factor();
+        if pattern.extra_index_reads() {
+            t *= 1.08; // index-buffer reads from global memory
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_kernel_matches_paper_numbers() {
+        // Paper section 4.3: 50% occupancy, 8 blocks/SM, maxSize = 104.
+        let occ = occupancy(&GpuSpec::kepler_k20(), &KernelResources::force_kernel());
+        assert_eq!(occ.blocks_per_sm, 8);
+        assert!((occ.occupancy - 0.50).abs() < 1e-9);
+        assert_eq!(occ.max_size, 104);
+        assert_eq!(occ.limiter, Limiter::Registers);
+    }
+
+    #[test]
+    fn ewald_kernel_matches_paper_numbers() {
+        // Paper section 4.3: 31% occupancy, maxSize = 65.
+        let occ = occupancy(&GpuSpec::kepler_k20(), &KernelResources::ewald_kernel());
+        assert_eq!(occ.blocks_per_sm, 5);
+        assert!((occ.occupancy - 0.3125).abs() < 1e-9);
+        assert_eq!(occ.max_size, 65);
+    }
+
+    #[test]
+    fn occupancy_limited_by_block_cap_for_tiny_kernels() {
+        let spec = GpuSpec::kepler_k20();
+        let k = KernelResources {
+            threads_per_block: 32,
+            regs_per_thread: 8,
+            smem_per_block: 64,
+        };
+        let occ = occupancy(&spec, &k);
+        assert_eq!(occ.blocks_per_sm, 16);
+        assert_eq!(occ.limiter, Limiter::Blocks);
+    }
+
+    #[test]
+    fn occupancy_limited_by_threads_for_huge_blocks() {
+        let spec = GpuSpec::kepler_k20();
+        let k = KernelResources {
+            threads_per_block: 1024,
+            regs_per_thread: 8,
+            smem_per_block: 64,
+        };
+        let occ = occupancy(&spec, &k);
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert_eq!(occ.limiter, Limiter::Threads);
+    }
+
+    #[test]
+    fn occupancy_limited_by_smem() {
+        let spec = GpuSpec::kepler_k20();
+        let k = KernelResources {
+            threads_per_block: 64,
+            regs_per_thread: 8,
+            smem_per_block: 16_384,
+        };
+        let occ = occupancy(&spec, &k);
+        assert_eq!(occ.blocks_per_sm, 3);
+        assert_eq!(occ.limiter, Limiter::SharedMemory);
+    }
+
+    #[test]
+    fn transfer_time_monotonic_in_bytes() {
+        let m = DeviceModel::kepler_k20();
+        assert_eq!(m.transfer_time(0), 0.0);
+        let small = m.transfer_time(1024);
+        let big = m.transfer_time(1 << 24);
+        assert!(small > 0.0 && big > small);
+        // 16 MiB at 6 GB/s is about 2.8 ms
+        assert!((big - 2.8e-3).abs() < 0.5e-3, "big = {big}");
+    }
+
+    #[test]
+    fn kernel_time_orders_by_coalescing_class() {
+        let m = DeviceModel::kepler_k20();
+        let k = KernelResources::force_kernel();
+        let c = m.kernel_time(&k, 104, 16 * 128, CoalescingClass::Contiguous);
+        let s = m.kernel_time(&k, 104, 16 * 128, CoalescingClass::SortedGather);
+        let r = m.kernel_time(&k, 104, 16 * 128, CoalescingClass::RandomGather);
+        assert!(c < s && s < r);
+        // paper Fig 3: random gather ~ +49% kernel time (x the index reads)
+        let ratio = r / c;
+        assert!((1.45..1.75).contains(&ratio), "ratio = {ratio}");
+    }
+
+    #[test]
+    fn kernel_time_scales_with_waves() {
+        let m = DeviceModel::kepler_k20();
+        let k = KernelResources::force_kernel();
+        let one = m.kernel_time(&k, 104, 2048, CoalescingClass::Contiguous);
+        let two = m.kernel_time(&k, 208, 2048, CoalescingClass::Contiguous);
+        assert!(two > one);
+        let overhead = m.spec.launch_overhead;
+        let ratio = (two - overhead) / (one - overhead);
+        assert!((ratio - 2.0).abs() < 1e-6, "ratio = {ratio}");
+    }
+}

@@ -1,0 +1,441 @@
+//! The GPU service: owns the PJRT engine and executes combined kernels.
+//!
+//! In G-Charm the runtime transfers data to the GPU, invokes kernels,
+//! monitors completion, and invokes callbacks (paper section 2.2). Here a
+//! dedicated *GPU service thread* owns the `Engine`; processing elements
+//! submit `LaunchSpec`s over a channel and receive `Completion`s back.
+//! A synchronous `Executor` is also exposed for examples, tests, and the
+//! figure benches.
+//!
+//! Responsibilities:
+//!   - select the smallest AOT variant that fits a combined launch and
+//!     zero/inert-pad the payload to its static shape,
+//!   - split launches that exceed the largest compiled batch,
+//!   - measure wall-clock execution and compute the modeled-K20 cost
+//!     (transfer + kernel) for the figure benches.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::device_sim::{
+    CoalescingClass, DeviceModel, KernelResources, ModeledCost,
+};
+use super::pjrt::{Engine, HostArg};
+use super::shapes::{
+    INTERACTIONS, INTER_W, KTABLE, KTAB_W, MD_PAD_POS, MD_W, OUT_W,
+    PARTICLE_W, PARTS_PER_BUCKET, PARTS_PER_PATCH,
+};
+
+/// Physics constants baked per run (not per launch).
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    /// Plummer softening squared for gravity kernels.
+    pub eps2: f32,
+    /// Ewald k-table, KTABLE x 4 row-major [kx, ky, kz, coef].
+    pub ktab: Vec<f32>,
+    /// MD LJ parameters [cutoff^2, sigma^2, epsilon].
+    pub md_params: [f32; 3],
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            eps2: 1e-2,
+            ktab: vec![0.0; KTABLE * KTAB_W],
+            md_params: [1.0, 0.04, 1.0],
+        }
+    }
+}
+
+/// Host payload of one combined kernel launch.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Contiguous bucket gravity: parts (n,P,4), inters (n,I,4).
+    Gravity { parts: Vec<f32>, inters: Vec<f32>, batch: usize },
+    /// Reuse-path gravity: pool (rows,4), idx (n,P), inters (n,I,4).
+    /// The pool is shared (Arc) with the chare table's host mirror so a
+    /// launch does not copy the whole device pool (EXPERIMENTS.md Perf).
+    GravityGather {
+        pool: std::sync::Arc<Vec<f32>>,
+        idx: Vec<i32>,
+        inters: Vec<f32>,
+        batch: usize,
+    },
+    /// Ewald correction: parts (n,P,4).
+    Ewald { parts: Vec<f32>, batch: usize },
+    /// MD patch pairs: pa (n,N,2), pb (n,N,2).
+    MdForce { pa: Vec<f32>, pb: Vec<f32>, batch: usize },
+}
+
+impl Payload {
+    pub fn batch(&self) -> usize {
+        match self {
+            Payload::Gravity { batch, .. }
+            | Payload::GravityGather { batch, .. }
+            | Payload::Ewald { batch, .. }
+            | Payload::MdForce { batch, .. } => *batch,
+        }
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            Payload::Gravity { .. } => "gravity",
+            Payload::GravityGather { .. } => "gravity_gather",
+            Payload::Ewald { .. } => "ewald",
+            Payload::MdForce { .. } => "md_force",
+        }
+    }
+
+    /// Kernel resource descriptor for the occupancy/cost model.
+    pub fn resources(&self) -> KernelResources {
+        match self {
+            Payload::Gravity { .. } | Payload::GravityGather { .. } => {
+                KernelResources::force_kernel()
+            }
+            Payload::Ewald { .. } => KernelResources::ewald_kernel(),
+            Payload::MdForce { .. } => KernelResources::md_kernel(),
+        }
+    }
+
+    /// Particle-interactions per combined slot, for the cost model.
+    pub fn interactions_per_block(&self) -> u64 {
+        match self {
+            Payload::Gravity { .. } | Payload::GravityGather { .. } => {
+                (PARTS_PER_BUCKET * INTERACTIONS) as u64
+            }
+            Payload::Ewald { .. } => (PARTS_PER_BUCKET * KTABLE) as u64,
+            Payload::MdForce { .. } => {
+                (PARTS_PER_PATCH * PARTS_PER_PATCH) as u64
+            }
+        }
+    }
+
+    fn out_row_w(&self) -> usize {
+        match self {
+            Payload::MdForce { .. } => MD_W,
+            _ => OUT_W,
+        }
+    }
+
+    fn out_rows_per_slot(&self) -> usize {
+        match self {
+            Payload::MdForce { .. } => PARTS_PER_PATCH,
+            _ => PARTS_PER_BUCKET,
+        }
+    }
+}
+
+/// One combined launch submitted to the GPU service.
+#[derive(Debug, Clone)]
+pub struct LaunchSpec {
+    /// Correlation id chosen by the submitter.
+    pub id: u64,
+    pub payload: Payload,
+    /// Bytes that must cross the (modeled) PCIe bus for this launch --
+    /// the coordinator has already subtracted reused-resident bytes.
+    pub transfer_bytes: u64,
+    /// Access-pattern class for the coalescing cost model.
+    pub pattern: CoalescingClass,
+}
+
+/// Result of a combined launch.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// Output rows for the *unpadded* batch, row-major
+    /// (batch x rows_per_slot x out_w).
+    pub out: Vec<f32>,
+    pub batch: usize,
+    /// Measured wall-clock seconds of the PJRT execute call(s).
+    pub wall: f64,
+    /// Modeled-K20 cost (DESIGN.md section 2).
+    pub modeled: ModeledCost,
+}
+
+/// Synchronous executor: pad, select variant, run, slice.
+pub struct Executor {
+    engine: Engine,
+    model: DeviceModel,
+    config: ExecutorConfig,
+    launches: u64,
+}
+
+impl Executor {
+    pub fn new(artifacts: &Path, config: ExecutorConfig) -> Result<Executor> {
+        let engine = Engine::load(artifacts)?;
+        // Fail fast if the Python-side tile constants drifted.
+        let v = engine
+            .manifest()
+            .select("gravity", 1, 0)
+            .context("no gravity variants in manifest")?;
+        anyhow::ensure!(
+            v.args[0].shape[1] == PARTS_PER_BUCKET
+                && v.args[1].shape[1] == INTERACTIONS,
+            "artifact shapes {:?} disagree with runtime::shapes",
+            v.args[0].shape
+        );
+        anyhow::ensure!(
+            config.ktab.len() == KTABLE * KTAB_W,
+            "ktab must be {} floats",
+            KTABLE * KTAB_W
+        );
+        Ok(Executor {
+            engine,
+            model: DeviceModel::kepler_k20(),
+            config,
+            launches: 0,
+        })
+    }
+
+    pub fn model(&self) -> &DeviceModel {
+        &self.model
+    }
+
+    pub fn config(&self) -> &ExecutorConfig {
+        &self.config
+    }
+
+    pub fn launches(&self) -> u64 {
+        self.launches
+    }
+
+    /// Execute one combined launch synchronously.
+    pub fn run(&mut self, spec: LaunchSpec) -> Result<Completion> {
+        let batch = spec.payload.batch();
+        anyhow::ensure!(batch > 0, "empty launch");
+        let kernel = spec.payload.kernel_name();
+        let max_batch = self
+            .engine
+            .manifest()
+            .max_batch(kernel)
+            .with_context(|| format!("no variants for kernel {kernel}"))?;
+
+        let out_slot = spec.payload.out_rows_per_slot() * spec.payload.out_row_w();
+        let mut out = Vec::with_capacity(batch * out_slot);
+        let mut wall = 0.0;
+        let mut modeled_kernel = 0.0;
+
+        let mut start = 0;
+        while start < batch {
+            let n = (batch - start).min(max_batch);
+            let (name, args_owned) = self.pad_chunk(&spec.payload, start, n)?;
+            let args: Vec<HostArg> = args_owned.iter().map(OwnedArg::borrow).collect();
+            let t0 = Instant::now();
+            let full = self.engine.execute(&name, &args)?;
+            wall += t0.elapsed().as_secs_f64();
+            self.launches += 1;
+            out.extend_from_slice(&full[..n * out_slot]);
+
+            modeled_kernel += self.model.kernel_time(
+                &spec.payload.resources(),
+                n as u64,
+                spec.payload.interactions_per_block(),
+                spec.pattern,
+            );
+            start += n;
+        }
+
+        let modeled = ModeledCost {
+            transfer: self.model.transfer_time(spec.transfer_bytes),
+            kernel: modeled_kernel,
+        };
+        Ok(Completion { id: spec.id, out, batch, wall, modeled })
+    }
+
+    /// Build padded argument buffers for slots [start, start+n).
+    fn pad_chunk(
+        &self,
+        payload: &Payload,
+        start: usize,
+        n: usize,
+    ) -> Result<(String, Vec<OwnedArg>)> {
+        let manifest = self.engine.manifest();
+        match payload {
+            Payload::Gravity { parts, inters, .. } => {
+                let v = manifest.select("gravity", n, 0).unwrap();
+                let b = v.batch;
+                let mut p = vec![0.0f32; b * PARTS_PER_BUCKET * PARTICLE_W];
+                let mut i = vec![0.0f32; b * INTERACTIONS * INTER_W];
+                copy_slots(&mut p, parts, start, n, PARTS_PER_BUCKET * PARTICLE_W);
+                copy_slots(&mut i, inters, start, n, INTERACTIONS * INTER_W);
+                Ok((
+                    v.name.clone(),
+                    vec![
+                        OwnedArg::F32(p),
+                        OwnedArg::F32(i),
+                        OwnedArg::F32(vec![self.config.eps2]),
+                    ],
+                ))
+            }
+            Payload::GravityGather { pool, idx, inters, .. } => {
+                let rows = pool.len() / PARTICLE_W;
+                let v = manifest
+                    .select("gravity_gather", n, rows)
+                    .context("no gather variant fits pool")?;
+                anyhow::ensure!(
+                    v.pool >= rows,
+                    "pool of {rows} rows exceeds largest gather variant ({})",
+                    v.pool
+                );
+                let b = v.batch;
+                // zero-copy when the mirror exactly matches the variant
+                let pool_arg = if rows == v.pool {
+                    OwnedArg::SharedF32(pool.clone())
+                } else {
+                    let mut pl = vec![0.0f32; v.pool * PARTICLE_W];
+                    pl[..pool.len()].copy_from_slice(pool);
+                    OwnedArg::F32(pl)
+                };
+                let mut ix = vec![0i32; b * PARTS_PER_BUCKET];
+                copy_slots(&mut ix, idx, start, n, PARTS_PER_BUCKET);
+                let mut it = vec![0.0f32; b * INTERACTIONS * INTER_W];
+                copy_slots(&mut it, inters, start, n, INTERACTIONS * INTER_W);
+                Ok((
+                    v.name.clone(),
+                    vec![
+                        pool_arg,
+                        OwnedArg::I32(ix),
+                        OwnedArg::F32(it),
+                        OwnedArg::F32(vec![self.config.eps2]),
+                    ],
+                ))
+            }
+            Payload::Ewald { parts, .. } => {
+                let v = manifest.select("ewald", n, 0).unwrap();
+                let b = v.batch;
+                let mut p = vec![0.0f32; b * PARTS_PER_BUCKET * PARTICLE_W];
+                copy_slots(&mut p, parts, start, n, PARTS_PER_BUCKET * PARTICLE_W);
+                Ok((
+                    v.name.clone(),
+                    vec![OwnedArg::F32(p), OwnedArg::F32(self.config.ktab.clone())],
+                ))
+            }
+            Payload::MdForce { pa, pb, .. } => {
+                let v = manifest.select("md_force", n, 0).unwrap();
+                let b = v.batch;
+                let slot = PARTS_PER_PATCH * MD_W;
+                let mut a = vec![MD_PAD_POS; b * slot];
+                let mut bb = vec![MD_PAD_POS; b * slot];
+                copy_slots(&mut a, pa, start, n, slot);
+                copy_slots(&mut bb, pb, start, n, slot);
+                Ok((
+                    v.name.clone(),
+                    vec![
+                        OwnedArg::F32(a),
+                        OwnedArg::F32(bb),
+                        OwnedArg::F32(self.config.md_params.to_vec()),
+                    ],
+                ))
+            }
+        }
+    }
+}
+
+/// Owned argument buffer (borrowed as HostArg at execute time).
+enum OwnedArg {
+    F32(Vec<f32>),
+    SharedF32(std::sync::Arc<Vec<f32>>),
+    I32(Vec<i32>),
+}
+
+impl OwnedArg {
+    fn borrow(&self) -> HostArg<'_> {
+        match self {
+            OwnedArg::F32(v) => HostArg::F32(v),
+            OwnedArg::SharedF32(v) => HostArg::F32(v),
+            OwnedArg::I32(v) => HostArg::I32(v),
+        }
+    }
+}
+
+fn copy_slots<T: Copy>(
+    dst: &mut [T],
+    src: &[T],
+    start_slot: usize,
+    n_slots: usize,
+    slot_len: usize,
+) {
+    let src_off = start_slot * slot_len;
+    dst[..n_slots * slot_len]
+        .copy_from_slice(&src[src_off..src_off + n_slots * slot_len]);
+}
+
+/// Handle to the GPU service thread.
+pub struct GpuService {
+    tx: Sender<LaunchSpec>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl GpuService {
+    /// Spawn the service thread. Completions (and errors) are delivered to
+    /// `done`.
+    pub fn spawn(
+        artifacts: &Path,
+        config: ExecutorConfig,
+        done: Sender<Result<Completion>>,
+    ) -> Result<GpuService> {
+        let (tx, rx): (Sender<LaunchSpec>, Receiver<LaunchSpec>) = channel();
+        let artifacts = artifacts.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("gpu-service".into())
+            .spawn(move || -> Result<()> {
+                let mut exec = Executor::new(&artifacts, config)?;
+                while let Ok(spec) = rx.recv() {
+                    let res = exec.run(spec);
+                    if done.send(res).is_err() {
+                        break; // coordinator went away
+                    }
+                }
+                Ok(())
+            })?;
+        Ok(GpuService { tx, handle: Some(handle) })
+    }
+
+    /// Submit a launch; completion arrives on the `done` channel.
+    pub fn submit(&self, spec: LaunchSpec) -> Result<()> {
+        self.tx
+            .send(spec)
+            .map_err(|_| anyhow::anyhow!("gpu service is down"))
+    }
+}
+
+impl Drop for GpuService {
+    fn drop(&mut self) {
+        // Closing the sender ends the service loop.
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_slots_copies_window() {
+        let src: Vec<i32> = (0..12).collect();
+        let mut dst = vec![0i32; 8];
+        copy_slots(&mut dst, &src, 1, 2, 3); // slots 1..3 of width 3
+        assert_eq!(&dst[..6], &[3, 4, 5, 6, 7, 8]);
+        assert_eq!(&dst[6..], &[0, 0]);
+    }
+
+    #[test]
+    fn payload_accessors() {
+        let p = Payload::Gravity { parts: vec![], inters: vec![], batch: 7 };
+        assert_eq!(p.batch(), 7);
+        assert_eq!(p.kernel_name(), "gravity");
+        assert_eq!(p.interactions_per_block(), (16 * 128) as u64);
+        let m = Payload::MdForce { pa: vec![], pb: vec![], batch: 3 };
+        assert_eq!(m.kernel_name(), "md_force");
+        assert_eq!(m.out_row_w(), MD_W);
+        assert_eq!(m.out_rows_per_slot(), PARTS_PER_PATCH);
+    }
+}

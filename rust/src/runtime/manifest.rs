@@ -1,0 +1,254 @@
+//! Loader for `artifacts/manifest.json` and AOT variant selection.
+//!
+//! The Python AOT pipeline (python/compile/aot.py) lowers every Layer-2
+//! entry point at a ladder of static batch sizes. At runtime the executor
+//! must pick, for a combined work request of `n` items, the smallest
+//! compiled variant with batch >= n, then zero-pad to its shape. This
+//! module parses the manifest and answers those queries.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of one AOT argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One argument slot of a compiled variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact (an HLO text file plus its calling convention).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub path: PathBuf,
+    pub args: Vec<ArgSpec>,
+    /// Which Layer-1 kernel this lowers ("gravity", "gravity_gather",
+    /// "ewald", "md_force").
+    pub kernel: String,
+    /// Number of combined work-request slots (buckets / patch pairs).
+    pub batch: usize,
+    /// Pool rows for gather variants (0 otherwise).
+    pub pool: usize,
+}
+
+/// Parsed manifest with variant lookup.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    variants: Vec<Variant>,
+    /// kernel name -> indices into `variants`, sorted by (batch, pool).
+    by_kernel: BTreeMap<String, Vec<usize>>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact paths resolve relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = Json::parse(text).context("parsing manifest.json")?;
+        match doc.get("format").and_then(Json::as_str) {
+            Some("hlo-text") => {}
+            other => bail!("unsupported manifest format: {other:?}"),
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest has no entries array")?;
+
+        let mut variants = Vec::with_capacity(entries.len());
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .context("entry missing name")?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .context("entry missing file")?;
+            let meta = e.get("meta").context("entry missing meta")?;
+            let kernel = meta
+                .get("kernel")
+                .and_then(Json::as_str)
+                .context("meta missing kernel")?
+                .to_string();
+            let batch = meta
+                .get("batch")
+                .and_then(Json::as_usize)
+                .context("meta missing batch")?;
+            let pool = meta.get("pool").and_then(Json::as_usize).unwrap_or(0);
+
+            let mut args = Vec::new();
+            for a in e
+                .get("args")
+                .and_then(Json::as_arr)
+                .context("entry missing args")?
+            {
+                let shape = a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("arg missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = match a.get("dtype").and_then(Json::as_str) {
+                    Some("float32") => DType::F32,
+                    Some("int32") => DType::I32,
+                    other => bail!("unsupported dtype {other:?}"),
+                };
+                args.push(ArgSpec { shape, dtype });
+            }
+            variants.push(Variant {
+                name,
+                path: dir.join(file),
+                args,
+                kernel,
+                batch,
+                pool,
+            });
+        }
+
+        let mut by_kernel: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, v) in variants.iter().enumerate() {
+            by_kernel.entry(v.kernel.clone()).or_default().push(i);
+        }
+        for idx in by_kernel.values_mut() {
+            idx.sort_by_key(|&i| (variants[i].batch, variants[i].pool));
+        }
+        Ok(Manifest { variants, by_kernel })
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Smallest variant of `kernel` with batch >= `n` (and pool >= `pool`
+    /// for gather kernels). Falls back to the largest available batch if
+    /// `n` exceeds every ladder rung (caller then splits the launch).
+    pub fn select(&self, kernel: &str, n: usize, pool: usize) -> Option<&Variant> {
+        let idx = self.by_kernel.get(kernel)?;
+        idx.iter()
+            .map(|&i| &self.variants[i])
+            .filter(|v| v.pool >= pool || v.pool == 0)
+            .find(|v| v.batch >= n)
+            .or_else(|| {
+                idx.iter()
+                    .map(|&i| &self.variants[i])
+                    .filter(|v| v.pool >= pool || v.pool == 0)
+                    .last()
+            })
+    }
+
+    /// Largest batch size available for a kernel (launch-splitting bound).
+    pub fn max_batch(&self, kernel: &str) -> Option<usize> {
+        self.by_kernel.get(kernel).map(|idx| {
+            idx.iter().map(|&i| self.variants[i].batch).max().unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "return_tuple": true,
+      "entries": [
+        {"name": "gravity_B8", "file": "gravity_B8.hlo.txt",
+         "args": [{"shape": [8, 16, 4], "dtype": "float32"},
+                  {"shape": [8, 128, 4], "dtype": "float32"},
+                  {"shape": [1], "dtype": "float32"}],
+         "meta": {"kernel": "gravity", "batch": 8},
+         "sha256": "x"},
+        {"name": "gravity_B32", "file": "gravity_B32.hlo.txt",
+         "args": [{"shape": [32, 16, 4], "dtype": "float32"},
+                  {"shape": [32, 128, 4], "dtype": "float32"},
+                  {"shape": [1], "dtype": "float32"}],
+         "meta": {"kernel": "gravity", "batch": 32},
+         "sha256": "x"},
+        {"name": "gravity_gather_B16_S2048", "file": "gg.hlo.txt",
+         "args": [{"shape": [2048, 4], "dtype": "float32"},
+                  {"shape": [16, 16], "dtype": "int32"},
+                  {"shape": [16, 128, 4], "dtype": "float32"},
+                  {"shape": [1], "dtype": "float32"}],
+         "meta": {"kernel": "gravity_gather", "batch": 16, "pool": 2048},
+         "sha256": "x"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.variants().len(), 3);
+        let v = &m.variants()[0];
+        assert_eq!(v.kernel, "gravity");
+        assert_eq!(v.batch, 8);
+        assert_eq!(v.args[0].shape, vec![8, 16, 4]);
+        assert_eq!(v.args[1].dtype, DType::F32);
+        assert_eq!(m.variants()[2].args[1].dtype, DType::I32);
+        assert_eq!(m.variants()[2].pool, 2048);
+        assert!(v.path.ends_with("gravity_B8.hlo.txt"));
+    }
+
+    #[test]
+    fn select_picks_smallest_fitting_batch() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.select("gravity", 5, 0).unwrap().batch, 8);
+        assert_eq!(m.select("gravity", 8, 0).unwrap().batch, 8);
+        assert_eq!(m.select("gravity", 9, 0).unwrap().batch, 32);
+    }
+
+    #[test]
+    fn select_overflow_falls_back_to_largest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.select("gravity", 1000, 0).unwrap().batch, 32);
+        assert_eq!(m.max_batch("gravity"), Some(32));
+    }
+
+    #[test]
+    fn select_unknown_kernel_is_none() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.select("nope", 1, 0).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = r#"{"format": "protobuf", "entries": []}"#;
+        assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.select("gravity", 104, 0).is_some());
+            assert!(m.select("ewald", 65, 0).is_some());
+            assert!(m.select("md_force", 10, 0).is_some());
+            assert!(m.select("gravity_gather", 64, 1024).is_some());
+        }
+    }
+}

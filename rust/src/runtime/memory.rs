@@ -1,0 +1,288 @@
+//! Simulated GPU device-memory slot allocator.
+//!
+//! G-Charm tracks which chare buffers are resident in GPU memory so kernel
+//! launches can skip redundant PCIe transfers (paper section 3.2). Device
+//! memory is modeled as a pool of fixed-size *slots* (one chare buffer --
+//! e.g. one bucket of particles -- per slot). The allocator hands out slot
+//! indices, reclaims via LRU when full, and reports hit/miss statistics.
+//!
+//! The *positions* handed out here are what makes reuse uncoalesced: a
+//! combined kernel's buffers end up scattered across slot indices, and the
+//! coalescing module (coordinator/coalescing.rs) measures how sorted-index
+//! access restores locality.
+
+use std::collections::HashMap;
+
+/// Identifies one chare data buffer in the application domain.
+pub type BufferId = u64;
+
+/// Result of requesting residency for a buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Buffer already resident in this slot: no transfer needed.
+    Hit(usize),
+    /// Buffer placed into this slot: transfer required.
+    Miss(usize),
+}
+
+impl Residency {
+    pub fn slot(&self) -> usize {
+        match *self {
+            Residency::Hit(s) | Residency::Miss(s) => s,
+        }
+    }
+
+    pub fn is_hit(&self) -> bool {
+        matches!(self, Residency::Hit(_))
+    }
+}
+
+/// LRU slot allocator over a fixed-capacity device pool.
+#[derive(Debug)]
+pub struct DeviceMemory {
+    capacity: usize,
+    /// slot -> resident buffer (None = free).
+    slots: Vec<Option<BufferId>>,
+    /// buffer -> slot for residents.
+    resident: HashMap<BufferId, usize>,
+    /// slot -> last-touch tick, for LRU eviction.
+    last_touch: Vec<u64>,
+    free: Vec<usize>,
+    /// Pin counts per slot; pinned slots are never evicted (they back
+    /// pending combined launches).
+    pins: Vec<u32>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl DeviceMemory {
+    /// `capacity`: number of buffer slots the device pool holds.
+    pub fn new(capacity: usize) -> DeviceMemory {
+        assert!(capacity > 0, "DeviceMemory capacity must be > 0");
+        DeviceMemory {
+            capacity,
+            slots: vec![None; capacity],
+            resident: HashMap::new(),
+            last_touch: vec![0; capacity],
+            free: (0..capacity).rev().collect(),
+            pins: vec![0; capacity],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Is this buffer currently resident (without touching LRU state)?
+    pub fn peek(&self, id: BufferId) -> Option<usize> {
+        self.resident.get(&id).copied()
+    }
+
+    /// Ensure `id` is resident; returns Hit(slot) or Miss(slot). On miss the
+    /// least-recently-used *unpinned* slot is evicted if the pool is full;
+    /// `None` if every slot is pinned (caller must flush pending launches
+    /// first).
+    pub fn acquire(&mut self, id: BufferId) -> Option<Residency> {
+        self.tick += 1;
+        if let Some(&slot) = self.resident.get(&id) {
+            self.last_touch[slot] = self.tick;
+            self.hits += 1;
+            return Some(Residency::Hit(slot));
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let victim = self.lru_slot()?;
+                let old = self.slots[victim].take().expect("occupied");
+                self.resident.remove(&old);
+                self.evictions += 1;
+                victim
+            }
+        };
+        self.misses += 1;
+        self.slots[slot] = Some(id);
+        self.resident.insert(id, slot);
+        self.last_touch[slot] = self.tick;
+        Some(Residency::Miss(slot))
+    }
+
+    /// Pin a resident buffer's slot (no-op if absent). Pins nest.
+    pub fn pin(&mut self, id: BufferId) {
+        if let Some(&slot) = self.resident.get(&id) {
+            self.pins[slot] += 1;
+        }
+    }
+
+    /// Release one pin on a buffer's slot.
+    pub fn unpin(&mut self, id: BufferId) {
+        if let Some(&slot) = self.resident.get(&id) {
+            self.pins[slot] = self.pins[slot].saturating_sub(1);
+        }
+    }
+
+    /// Number of currently pinned slots.
+    pub fn pinned_count(&self) -> usize {
+        self.pins.iter().filter(|&&p| p > 0).count()
+    }
+
+    /// Drop a buffer from the pool (e.g. chare data invalidated by an
+    /// iteration update).
+    pub fn invalidate(&mut self, id: BufferId) {
+        if let Some(slot) = self.resident.remove(&id) {
+            self.slots[slot] = None;
+            self.pins[slot] = 0;
+            self.free.push(slot);
+        }
+    }
+
+    /// Drop everything (new iteration with fully rewritten data).
+    pub fn invalidate_all(&mut self) {
+        self.resident.clear();
+        self.slots.iter_mut().for_each(|s| *s = None);
+        self.pins.iter_mut().for_each(|p| *p = 0);
+        self.free = (0..self.capacity).rev().collect();
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    fn lru_slot(&self) -> Option<usize> {
+        (0..self.capacity)
+            .filter(|&s| self.slots[s].is_some() && self.pins[s] == 0)
+            .min_by_key(|&s| self.last_touch[s])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_acquire_is_miss_second_is_hit() {
+        let mut m = DeviceMemory::new(4);
+        let r1 = m.acquire(7).unwrap();
+        assert!(!r1.is_hit());
+        let r2 = m.acquire(7).unwrap();
+        assert!(r2.is_hit());
+        assert_eq!(r1.slot(), r2.slot());
+        assert_eq!(m.hits(), 1);
+        assert_eq!(m.misses(), 1);
+    }
+
+    #[test]
+    fn distinct_buffers_get_distinct_slots() {
+        let mut m = DeviceMemory::new(4);
+        let s: Vec<usize> =
+            (0..4).map(|i| m.acquire(i).unwrap().slot()).collect();
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+    }
+
+    #[test]
+    fn lru_eviction_picks_least_recently_used() {
+        let mut m = DeviceMemory::new(2);
+        let s0 = m.acquire(0).unwrap().slot();
+        let _s1 = m.acquire(1).unwrap().slot();
+        m.acquire(1); // touch 1; 0 is now LRU
+        let s2 = m.acquire(2).unwrap(); // evicts 0
+        assert_eq!(s2.slot(), s0);
+        assert!(m.peek(0).is_none());
+        assert!(m.peek(1).is_some());
+        assert_eq!(m.evictions(), 1);
+    }
+
+    #[test]
+    fn invalidate_frees_slot() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0);
+        m.acquire(1);
+        m.invalidate(0);
+        assert_eq!(m.resident_count(), 1);
+        let r = m.acquire(2).unwrap(); // must not evict 1
+        assert!(!r.is_hit());
+        assert!(m.peek(1).is_some());
+        assert_eq!(m.evictions(), 0);
+    }
+
+    #[test]
+    fn invalidate_all_resets() {
+        let mut m = DeviceMemory::new(3);
+        for i in 0..3 {
+            m.acquire(i);
+        }
+        m.invalidate_all();
+        assert_eq!(m.resident_count(), 0);
+        for i in 10..13 {
+            assert!(!m.acquire(i).unwrap().is_hit());
+        }
+    }
+
+    #[test]
+    fn capacity_respected_under_thrash() {
+        let mut m = DeviceMemory::new(8);
+        for i in 0..1_000u64 {
+            m.acquire(i % 17).unwrap();
+            assert!(m.resident_count() <= 8);
+        }
+    }
+
+    #[test]
+    fn pinned_slots_survive_eviction_pressure() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0).unwrap();
+        m.pin(0);
+        m.acquire(1).unwrap();
+        // 0 is LRU but pinned: 1 must be evicted instead
+        let r = m.acquire(2).unwrap();
+        assert!(m.peek(0).is_some());
+        assert!(m.peek(1).is_none());
+        assert!(!r.is_hit());
+    }
+
+    #[test]
+    fn all_pinned_returns_none() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0).unwrap();
+        m.acquire(1).unwrap();
+        m.pin(0);
+        m.pin(1);
+        assert!(m.acquire(2).is_none());
+        m.unpin(0);
+        assert!(m.acquire(2).is_some());
+        assert!(m.peek(0).is_none()); // 0 was the only evictable slot
+    }
+
+    #[test]
+    fn pins_nest() {
+        let mut m = DeviceMemory::new(1);
+        m.acquire(0).unwrap();
+        m.pin(0);
+        m.pin(0);
+        m.unpin(0);
+        assert!(m.acquire(1).is_none()); // still pinned once
+        m.unpin(0);
+        assert!(m.acquire(1).is_some());
+        assert_eq!(m.pinned_count(), 0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Runtime layer: PJRT engine, GPU service, device model, device memory.
+//!
+//! This is the boundary between the rust coordinator (Layer 3) and the
+//! AOT-compiled XLA computations (Layers 1-2). The "GPU" of the paper is
+//! realized as the CPU PJRT client executing Pallas-lowered HLO, plus an
+//! analytic Kepler K20 model for occupancy and modeled timings
+//! (DESIGN.md section 2, substitution table).
+
+pub mod device_sim;
+pub mod executor;
+pub mod manifest;
+pub mod memory;
+pub mod pjrt;
+pub mod shapes;
+
+pub use device_sim::{
+    occupancy, CoalescingClass, DeviceModel, GpuSpec, KernelResources,
+    ModeledCost, Occupancy,
+};
+pub use executor::{
+    Completion, Executor, ExecutorConfig, GpuService, LaunchSpec, Payload,
+};
+pub use manifest::Manifest;
+pub use memory::{BufferId, DeviceMemory, Residency};
+pub use pjrt::{Engine, HostArg};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$GCHARM_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("GCHARM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,193 @@
+//! PJRT engine: loads AOT HLO-text artifacts and executes them on the CPU
+//! PJRT client (the simulated "GPU device" -- DESIGN.md section 2).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`. Variants
+//! are compiled lazily on first launch and cached for the lifetime of the
+//! engine (compilation is the expensive step; execution is the hot path).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, Manifest, Variant};
+
+/// One host-side argument for a launch; must match the variant's ArgSpec.
+#[derive(Debug, Clone, Copy)]
+pub enum HostArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl HostArg<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            HostArg::F32(s) => s.len(),
+            HostArg::I32(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostArg::F32(_) => DType::F32,
+            HostArg::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// PJRT client + compiled-executable cache for the artifact set.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over the artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Engine { client, manifest, executables: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) the named variant.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let variant = self
+            .manifest
+            .variants()
+            .iter()
+            .find(|v| v.name == name)
+            .with_context(|| format!("unknown variant {name}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&variant.path)
+            .map_err(|e| {
+                anyhow::anyhow!("loading {}: {e}", variant.path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of variants compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Execute a variant with validated host arguments; returns the first
+    /// (and only) output buffer as f32 (return_tuple=True convention).
+    pub fn execute(&mut self, name: &str, args: &[HostArg]) -> Result<Vec<f32>> {
+        self.ensure_compiled(name)?;
+        let variant = self
+            .manifest
+            .variants()
+            .iter()
+            .find(|v| v.name == name)
+            .unwrap()
+            .clone();
+        self.validate(&variant, args)?;
+
+        // Single-copy literal creation (perf: `vec1(..).reshape(..)` copies
+        // the payload twice; `create_from_shape_and_untyped_data` once --
+        // see EXPERIMENTS.md section Perf).
+        let literals = args
+            .iter()
+            .zip(&variant.args)
+            .map(|(arg, spec)| {
+                let (ty, bytes): (xla::ElementType, &[u8]) = match arg {
+                    HostArg::F32(data) => {
+                        (xla::ElementType::F32, bytes_of(data))
+                    }
+                    HostArg::I32(data) => {
+                        (xla::ElementType::S32, bytes_of(data))
+                    }
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    ty,
+                    &spec.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal {name}: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1 {name}: {e}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec {name}: {e}"))
+    }
+
+    fn validate(&self, variant: &Variant, args: &[HostArg]) -> Result<()> {
+        if args.len() != variant.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                variant.name,
+                variant.args.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, spec)) in args.iter().zip(&variant.args).enumerate() {
+            if arg.len() != spec.elements() {
+                bail!(
+                    "{} arg {i}: expected {} elements for shape {:?}, got {}",
+                    variant.name,
+                    spec.elements(),
+                    spec.shape,
+                    arg.len()
+                );
+            }
+            if arg.dtype() != spec.dtype {
+                bail!("{} arg {i}: dtype mismatch", variant.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reinterpret a typed slice as raw bytes (for literal creation).
+fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+    // SAFETY: T is a plain Copy scalar (f32/i32); size and alignment of the
+    // byte view are trivially valid.
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("variants", &self.manifest.variants().len())
+            .field("compiled", &self.executables.len())
+            .finish()
+    }
+}

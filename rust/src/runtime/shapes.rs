@@ -1,0 +1,39 @@
+//! Canonical kernel tile shapes shared between the Python AOT pipeline and
+//! the rust runtime.
+//!
+//! These constants mirror `python/compile/kernels/*.py`
+//! (PARTS_PER_BUCKET / INTERACTIONS / KTABLE / PARTS_PER_PATCH) and are
+//! validated against `artifacts/manifest.json` at engine startup
+//! (`Executor::new`), so a drifting Python constant fails fast instead of
+//! producing shape errors mid-run.
+
+/// Particles per bucket (P). Matches the paper's 16-row CUDA block.
+pub const PARTS_PER_BUCKET: usize = 16;
+
+/// Interaction-list slots per bucket (I); padding entries carry mass 0.
+pub const INTERACTIONS: usize = 128;
+
+/// Ewald k-vector table rows (K); padding entries carry coef 0.
+pub const KTABLE: usize = 64;
+
+/// Particle slots per MD patch (N); padding parked at `MD_PAD_POS`.
+pub const PARTS_PER_PATCH: usize = 64;
+
+/// Where padding particles are parked (outside any cutoff).
+pub const MD_PAD_POS: f32 = 1.0e8;
+
+/// Row widths.
+pub const PARTICLE_W: usize = 4; // [x, y, z, mass]
+pub const INTER_W: usize = 4; // [x, y, z, mass]
+pub const KTAB_W: usize = 4; // [kx, ky, kz, coef]
+pub const MD_W: usize = 2; // [x, y]
+pub const OUT_W: usize = 4; // [ax, ay, az, pot]
+
+/// Bytes of one bucket particle buffer (a chare-table slot's payload).
+pub const BUCKET_BYTES: u64 = (PARTS_PER_BUCKET * PARTICLE_W * 4) as u64;
+
+/// Bytes of one bucket interaction list.
+pub const INTER_BYTES: u64 = (INTERACTIONS * INTER_W * 4) as u64;
+
+/// Bytes of one MD patch buffer.
+pub const PATCH_BYTES: u64 = (PARTS_PER_PATCH * MD_W * 4) as u64;

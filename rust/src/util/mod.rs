@@ -1,0 +1,17 @@
+//! Shared utilities: minimal JSON, deterministic RNG, statistics, Morton
+//! codes, 3-vectors, and a wall-clock timeline recorder.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no serde / rand / criterion / proptest), so this module provides the
+//! minimal self-contained equivalents the rest of the crate needs.
+
+pub mod json;
+pub mod morton;
+pub mod rng;
+pub mod stats;
+pub mod timeline;
+pub mod vec3;
+
+pub use rng::Rng;
+pub use stats::RunningAverage;
+pub use vec3::Vec3;

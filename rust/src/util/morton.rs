@@ -1,0 +1,109 @@
+//! 3D Morton (Z-order) codes for Barnes-Hut domain decomposition.
+//!
+//! ChaNGa decomposes particle space with a space-filling curve and assigns
+//! contiguous key ranges to TreePiece chares (paper section 4.1). We use
+//! 21-bits-per-axis Morton keys (63-bit codes), which is what the tree
+//! construction in `apps/nbody/tree.rs` sorts by.
+
+/// Spread the low 21 bits of `v` so there are two zero bits between each.
+fn spread(v: u64) -> u64 {
+    let mut x = v & 0x1F_FFFF; // 21 bits
+    x = (x | (x << 32)) & 0x1F00000000FFFF;
+    x = (x | (x << 16)) & 0x1F0000FF0000FF;
+    x = (x | (x << 8)) & 0x100F00F00F00F00F;
+    x = (x | (x << 4)) & 0x10C30C30C30C30C3;
+    x = (x | (x << 2)) & 0x1249249249249249;
+    x
+}
+
+/// Inverse of `spread`.
+fn compact(v: u64) -> u64 {
+    let mut x = v & 0x1249249249249249;
+    x = (x ^ (x >> 2)) & 0x10C30C30C30C30C3;
+    x = (x ^ (x >> 4)) & 0x100F00F00F00F00F;
+    x = (x ^ (x >> 8)) & 0x1F0000FF0000FF;
+    x = (x ^ (x >> 16)) & 0x1F00000000FFFF;
+    x = (x ^ (x >> 32)) & 0x1F_FFFF;
+    x
+}
+
+/// Interleave three 21-bit coordinates into a 63-bit Morton code.
+pub fn encode(ix: u64, iy: u64, iz: u64) -> u64 {
+    spread(ix) | (spread(iy) << 1) | (spread(iz) << 2)
+}
+
+/// Recover the three 21-bit coordinates.
+pub fn decode(code: u64) -> (u64, u64, u64) {
+    (compact(code), compact(code >> 1), compact(code >> 2))
+}
+
+/// Quantize a position in `[lo, hi)^3` to a Morton code.
+pub fn from_position(p: [f64; 3], lo: f64, hi: f64) -> u64 {
+    let scale = (1u64 << 21) as f64;
+    let q = |v: f64| -> u64 {
+        let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0 - 1e-12);
+        (t * scale) as u64
+    };
+    encode(q(p[0]), q(p[1]), q(p[2]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_corners() {
+        for &(x, y, z) in &[
+            (0, 0, 0),
+            (1, 0, 0),
+            (0, 1, 0),
+            (0, 0, 1),
+            (0x1F_FFFF, 0x1F_FFFF, 0x1F_FFFF),
+        ] {
+            assert_eq!(decode(encode(x, y, z)), (x, y, z));
+        }
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(17);
+        for _ in 0..1_000 {
+            let x = rng.next_u64() & 0x1F_FFFF;
+            let y = rng.next_u64() & 0x1F_FFFF;
+            let z = rng.next_u64() & 0x1F_FFFF;
+            assert_eq!(decode(encode(x, y, z)), (x, y, z));
+        }
+    }
+
+    #[test]
+    fn encoding_is_injective_on_sample() {
+        let mut rng = Rng::new(19);
+        let mut codes = std::collections::HashSet::new();
+        for _ in 0..1_000 {
+            let x = rng.next_u64() & 0xFFFF;
+            let y = rng.next_u64() & 0xFFFF;
+            let z = rng.next_u64() & 0xFFFF;
+            codes.insert(encode(x, y, z));
+        }
+        // collisions would indicate a broken spread
+        assert!(codes.len() > 990);
+    }
+
+    #[test]
+    fn locality_of_neighbors() {
+        // adjacent cells differ in few high bits: codes of close points are
+        // closer than codes of far points (weak but useful sanity check)
+        let near = encode(100, 100, 100) ^ encode(101, 100, 100);
+        let far = encode(100, 100, 100) ^ encode(100_000, 100, 100);
+        assert!(near < far);
+    }
+
+    #[test]
+    fn from_position_clamps_and_orders() {
+        let a = from_position([-10.0, 0.0, 0.0], 0.0, 1.0); // clamped to lo
+        let b = from_position([0.5, 0.0, 0.0], 0.0, 1.0);
+        let c = from_position([10.0, 0.0, 0.0], 0.0, 1.0); // clamped to hi
+        assert!(a < b && b < c);
+    }
+}

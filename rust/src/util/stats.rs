@@ -1,0 +1,167 @@
+//! Running statistics used by the adaptive strategies.
+//!
+//! The paper's dynamic scheduler (section 3.3) maintains *running averages* of
+//! per-data-item execution times, and the adaptive combiner (section 3.1)
+//! maintains a *running maximum* of work-request inter-arrival intervals.
+
+/// Incremental arithmetic mean (Welford-style, no stored samples).
+#[derive(Debug, Clone, Default)]
+pub struct RunningAverage {
+    count: u64,
+    mean: f64,
+}
+
+impl RunningAverage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one observation into the mean.
+    pub fn update(&mut self, x: f64) {
+        self.count += 1;
+        self.mean += (x - self.mean) / self.count as f64;
+    }
+
+    /// Current mean; `None` before the first observation.
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.mean)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Exponentially-weighted moving average, for signals that drift (the MD
+/// workload changes as particles cluster).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Summary statistics over a sample set (used by the bench harness).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from a sample slice. Panics on empty input.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            median,
+            max: sorted[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_average_matches_batch_mean() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut ra = RunningAverage::new();
+        for &x in &xs {
+            ra.update(x);
+        }
+        assert!((ra.mean().unwrap() - 4.0).abs() < 1e-12);
+        assert_eq!(ra.count(), 5);
+    }
+
+    #[test]
+    fn running_average_empty_is_none() {
+        assert_eq!(RunningAverage::new().mean(), None);
+    }
+
+    #[test]
+    fn ewma_first_value_passthrough() {
+        let mut e = Ewma::new(0.25);
+        assert_eq!(e.value(), None);
+        e.update(8.0);
+        assert_eq!(e.value(), Some(8.0));
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_signal() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..64 {
+            e.update(3.0);
+        }
+        assert!((e.value().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_tracks_shift_faster_than_mean() {
+        let mut e = Ewma::new(0.5);
+        let mut ra = RunningAverage::new();
+        for _ in 0..100 {
+            e.update(1.0);
+            ra.update(1.0);
+        }
+        for _ in 0..10 {
+            e.update(10.0);
+            ra.update(10.0);
+        }
+        assert!(e.value().unwrap() > ra.mean().unwrap());
+    }
+
+    #[test]
+    fn summary_odd_and_even_median() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        let s = Summary::of(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn summary_std_of_constant_is_zero() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.mean, 5.0);
+    }
+}

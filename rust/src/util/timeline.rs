@@ -1,0 +1,148 @@
+//! Event timeline recorder for runtime introspection.
+//!
+//! The coordinator and the GPU service record begin/end spans (kernel
+//! launches, transfers, combines, scheduling decisions). Timelines feed the
+//! metrics printed by `gcharm figures` and the EXPERIMENTS.md numbers.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Category of a recorded span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// GPU kernel execution (PJRT execute call).
+    Kernel,
+    /// Host to device transfer (modeled PCIe cost + real staging).
+    Transfer,
+    /// Combiner flush: workRequests -> CombinedWorkRequest.
+    Combine,
+    /// CPU-side task execution (hybrid scheduling path).
+    CpuTask,
+    /// Scheduler decision point.
+    Schedule,
+    /// Everything else (app phases etc.).
+    Other,
+}
+
+/// One closed span.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub label: &'static str,
+    /// Seconds since the timeline epoch.
+    pub start: f64,
+    /// Span duration in seconds (wall clock).
+    pub wall: f64,
+    /// Modeled device time in seconds (0 if not applicable). See
+    /// `runtime::device_sim` for the cost model.
+    pub modeled: f64,
+    /// Work items covered by this span (buckets, pairs, bytes...).
+    pub items: u64,
+}
+
+/// Thread-safe append-only timeline.
+#[derive(Debug)]
+pub struct Timeline {
+    epoch: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline { epoch: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    /// Seconds since timeline creation.
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a closed span.
+    pub fn record(
+        &self,
+        kind: SpanKind,
+        label: &'static str,
+        start: f64,
+        wall: f64,
+        modeled: f64,
+        items: u64,
+    ) {
+        self.spans.lock().unwrap().push(Span {
+            kind,
+            label,
+            start,
+            wall,
+            modeled,
+            items,
+        });
+    }
+
+    /// Snapshot of all spans recorded so far.
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Total wall time of spans of one kind.
+    pub fn total_wall(&self, kind: SpanKind) -> f64 {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.wall)
+            .sum()
+    }
+
+    /// Total modeled device time of spans of one kind.
+    pub fn total_modeled(&self, kind: SpanKind) -> f64 {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.modeled)
+            .sum()
+    }
+
+    /// Count of spans of one kind.
+    pub fn count(&self, kind: SpanKind) -> usize {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.kind == kind)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let tl = Timeline::new();
+        tl.record(SpanKind::Kernel, "force", 0.0, 0.5, 0.1, 104);
+        tl.record(SpanKind::Kernel, "ewald", 0.6, 0.25, 0.05, 65);
+        tl.record(SpanKind::Transfer, "h2d", 0.0, 0.1, 0.2, 4096);
+        assert_eq!(tl.count(SpanKind::Kernel), 2);
+        assert!((tl.total_wall(SpanKind::Kernel) - 0.75).abs() < 1e-12);
+        assert!((tl.total_modeled(SpanKind::Kernel) - 0.15).abs() < 1e-12);
+        assert!((tl.total_wall(SpanKind::Transfer) - 0.1).abs() < 1e-12);
+        assert_eq!(tl.count(SpanKind::Combine), 0);
+    }
+
+    #[test]
+    fn now_is_monotonic() {
+        let tl = Timeline::new();
+        let a = tl.now();
+        let b = tl.now();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,182 @@
+//! End-to-end integration: full applications over the complete stack
+//! (chares -> coordinator -> combiner/chare-table/hybrid -> PJRT kernels).
+
+use gcharm::apps::md::{self, MdConfig};
+use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
+use gcharm::coordinator::{
+    CombinePolicy, Config, DataPolicy, SplitPolicy,
+};
+
+fn tiny_nbody(policy: DataPolicy, combine: CombinePolicy) -> NbodyConfig {
+    let mut cfg = NbodyConfig::new(DatasetSpec::tiny());
+    cfg.iters = 2;
+    cfg.runtime = Config {
+        pes: 2,
+        combine,
+        data_policy: policy,
+        table_slots: 256,
+        ..Config::default()
+    };
+    cfg.pieces_per_pe = 2;
+    cfg
+}
+
+#[test]
+fn nbody_runs_adaptive_reuse_sorted() {
+    let cfg = tiny_nbody(DataPolicy::ReuseSorted, CombinePolicy::Adaptive);
+    let r = nbody::run(&cfg).unwrap();
+    assert_eq!(r.energies.len(), 2);
+    assert!(r.energies.iter().all(|e| e.is_finite()));
+    assert!(r.report.launches > 0, "no combined launches happened");
+    assert!(r.report.gpu_requests > 0);
+    // chunked walks produce reuse hits
+    assert!(
+        r.report.table_hits > 0,
+        "expected residency hits from chunked interaction lists"
+    );
+    assert!(r.buckets > 4);
+}
+
+#[test]
+fn nbody_runs_no_reuse() {
+    let cfg = tiny_nbody(DataPolicy::NoReuse, CombinePolicy::Adaptive);
+    let r = nbody::run(&cfg).unwrap();
+    assert!(r.energies.iter().all(|e| e.is_finite()));
+    assert_eq!(r.report.table_hits, 0, "NoReuse must not touch the table");
+    assert_eq!(r.report.saved_bytes, 0);
+}
+
+#[test]
+fn nbody_runs_static_combining() {
+    let cfg = tiny_nbody(DataPolicy::Reuse, CombinePolicy::StaticEvery(100));
+    let r = nbody::run(&cfg).unwrap();
+    assert!(r.energies.iter().all(|e| e.is_finite()));
+    assert!(r.report.launches > 0);
+}
+
+#[test]
+fn nbody_policies_agree_on_physics() {
+    // The three data policies are performance strategies: the energies
+    // they produce must match to f32 kernel tolerance.
+    let a = nbody::run(&tiny_nbody(DataPolicy::NoReuse, CombinePolicy::Adaptive))
+        .unwrap();
+    let b = nbody::run(&tiny_nbody(DataPolicy::Reuse, CombinePolicy::Adaptive))
+        .unwrap();
+    let c = nbody::run(&tiny_nbody(
+        DataPolicy::ReuseSorted,
+        CombinePolicy::Adaptive,
+    ))
+    .unwrap();
+    for i in 0..a.energies.len() {
+        let scale = a.energies[i].abs().max(1e-9);
+        assert!(
+            (a.energies[i] - b.energies[i]).abs() / scale < 1e-3,
+            "NoReuse vs Reuse energy mismatch at iter {i}: {} vs {}",
+            a.energies[i],
+            b.energies[i]
+        );
+        assert!(
+            (a.energies[i] - c.energies[i]).abs() / scale < 1e-3,
+            "NoReuse vs ReuseSorted energy mismatch at iter {i}"
+        );
+    }
+}
+
+#[test]
+fn nbody_cpu_only_matches_gpu_physics() {
+    let cfg = tiny_nbody(DataPolicy::NoReuse, CombinePolicy::Adaptive);
+    let gpu = nbody::run(&cfg).unwrap();
+    let cpu = nbody::run_cpu_only(&cfg).unwrap();
+    assert_eq!(cpu.report.launches, 0, "cpu-only must not launch kernels");
+    for i in 0..gpu.energies.len() {
+        let scale = gpu.energies[i].abs().max(1e-9);
+        assert!(
+            (gpu.energies[i] - cpu.energies[i]).abs() / scale < 1e-3,
+            "cpu vs gpu energy mismatch at iter {i}: {} vs {}",
+            cpu.energies[i],
+            gpu.energies[i]
+        );
+    }
+}
+
+#[test]
+fn nbody_handtuned_matches_physics() {
+    let cfg = tiny_nbody(DataPolicy::NoReuse, CombinePolicy::Adaptive);
+    let rt = nbody::run(&cfg).unwrap();
+    let ht = nbody::handtuned::run_handtuned(&cfg).unwrap();
+    assert!(ht.report.launches > 0);
+    for i in 0..rt.energies.len() {
+        let scale = rt.energies[i].abs().max(1e-9);
+        assert!(
+            (rt.energies[i] - ht.energies[i]).abs() / scale < 1e-3,
+            "handtuned energy mismatch at iter {i}"
+        );
+    }
+}
+
+#[test]
+fn nbody_energy_roughly_conserved() {
+    // with a small dt, total energy drifts slowly
+    let mut cfg = tiny_nbody(DataPolicy::ReuseSorted, CombinePolicy::Adaptive);
+    cfg.dt = 1e-4;
+    cfg.iters = 4;
+    let r = nbody::run(&cfg).unwrap();
+    let e0 = r.energies[0];
+    let e_last = *r.energies.last().unwrap();
+    let drift = (e_last - e0).abs() / e0.abs().max(1e-12);
+    assert!(drift < 0.2, "energy drift {drift} too large");
+}
+
+fn tiny_md(split: SplitPolicy, hybrid: bool) -> MdConfig {
+    let mut cfg = MdConfig::new(600);
+    cfg.grid = 4;
+    cfg.box_l = 8.0;
+    cfg.steps = 3;
+    cfg.runtime = Config {
+        pes: 2,
+        split,
+        hybrid_md: hybrid,
+        ..Config::default()
+    };
+    cfg
+}
+
+#[test]
+fn md_runs_hybrid_adaptive() {
+    let r = md::run(&tiny_md(SplitPolicy::AdaptiveItems, true)).unwrap();
+    assert_eq!(r.energies.len(), 3);
+    assert!(r.energies.iter().all(|e| e.is_finite() && *e > 0.0));
+    // hybrid: both devices did work
+    assert!(r.report.cpu_requests > 0, "cpu side never used");
+    assert!(r.report.gpu_requests > 0, "gpu side never used");
+}
+
+#[test]
+fn md_runs_static_split() {
+    let r = md::run(&tiny_md(SplitPolicy::StaticCount, true)).unwrap();
+    assert!(r.energies.iter().all(|e| e.is_finite()));
+    assert!(r.report.cpu_requests > 0);
+}
+
+#[test]
+fn md_gpu_only_mode() {
+    let r = md::run(&tiny_md(SplitPolicy::AdaptiveItems, false)).unwrap();
+    assert_eq!(r.report.cpu_requests, 0);
+    assert!(r.report.gpu_requests > 0);
+}
+
+#[test]
+fn md_matches_single_core_physics() {
+    let cfg = tiny_md(SplitPolicy::AdaptiveItems, true);
+    let rt = md::run(&cfg).unwrap();
+    let sc = md::run_single_core_cpu(&cfg);
+    for i in 0..rt.energies.len() {
+        let scale = sc.energies[i].abs().max(1e-9);
+        assert!(
+            (rt.energies[i] - sc.energies[i]).abs() / scale < 1e-2,
+            "step {i}: runtime KE {} vs single-core KE {}",
+            rt.energies[i],
+            sc.energies[i]
+        );
+    }
+}

@@ -1,0 +1,264 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The vendored crate set has no proptest, so properties are driven by the
+//! crate's own deterministic RNG over many random cases; failures print the
+//! seed for replay. Invariants covered:
+//!   - the combiner never exceeds maxSize, never drops or duplicates a
+//!     request, preserves per-policy ordering;
+//!   - the slot-sorted queue is always sorted and a permutation of inserts;
+//!   - the hybrid split conserves requests and respects the ratio bound;
+//!   - the device memory allocator never double-assigns a slot and honors
+//!     pins;
+//!   - occupancy results respect the hardware limits for arbitrary kernel
+//!     resource descriptors.
+
+use gcharm::coordinator::{
+    Batch, ChareId, CombinePolicy, Combiner, HybridScheduler, Pending,
+    SplitPolicy, WorkKind, WorkRequest, WrPayload,
+};
+use gcharm::runtime::memory::DeviceMemory;
+use gcharm::runtime::{occupancy, GpuSpec, KernelResources};
+use gcharm::util::Rng;
+
+fn wr(id: u64, items: usize) -> WorkRequest {
+    WorkRequest {
+        id,
+        chare: ChareId::new(0, id as u32),
+        kind: WorkKind::Force,
+        buffer: Some(id),
+        data_items: items,
+        tag: id,
+        arrival: 0.0,
+        payload: WrPayload::Ewald { parts: vec![] },
+    }
+}
+
+fn pending(id: u64, slot: Option<u32>, items: usize) -> Pending {
+    Pending { wr: wr(id, items), slot, staged_bytes: 0 }
+}
+
+/// Run one randomized combiner scenario; return all flushed batches.
+fn combiner_scenario(seed: u64, policy: CombinePolicy, sort: bool) -> (Vec<Batch>, usize) {
+    let mut rng = Rng::new(seed);
+    let max_size = 1 + rng.below(32);
+    let mut c = Combiner::new(policy, max_size, sort);
+    let n = 1 + rng.below(300);
+    let mut now = 0.0f64;
+    let mut batches = Vec::new();
+    for i in 0..n {
+        now += rng.exponential(0.001);
+        let slot = sort.then(|| rng.below(10_000) as u32);
+        c.insert(pending(i as u64, slot, 1 + rng.below(100)), now);
+        // random extra polls at random times
+        if rng.below(3) == 0 {
+            now += rng.exponential(0.002);
+        }
+        while let Some(b) = c.poll(now) {
+            batches.push(b);
+        }
+    }
+    while let Some(b) = c.force_flush() {
+        batches.push(b);
+    }
+    assert!(c.is_empty());
+    (batches, max_size)
+}
+
+#[test]
+fn prop_combiner_conserves_and_caps_adaptive() {
+    for seed in 0..60u64 {
+        let (batches, max_size) =
+            combiner_scenario(seed, CombinePolicy::Adaptive, false);
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.items.iter().map(|p| p.wr.id))
+            .collect();
+        let total = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "seed {seed}: duplicated request");
+        assert_eq!(
+            ids,
+            (0..total as u64).collect::<Vec<_>>(),
+            "seed {seed}: dropped request"
+        );
+        for b in &batches {
+            assert!(
+                b.items.len() <= max_size,
+                "seed {seed}: batch {} > maxSize {max_size}",
+                b.items.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_combiner_conserves_static() {
+    for seed in 100..140u64 {
+        let (batches, max_size) =
+            combiner_scenario(seed, CombinePolicy::StaticEvery(17), false);
+        let total: usize = batches.iter().map(|b| b.items.len()).sum();
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.items.iter().map(|p| p.wr.id))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "seed {seed}");
+        for b in &batches {
+            assert!(b.items.len() <= max_size);
+        }
+    }
+}
+
+#[test]
+fn prop_sorted_combiner_batches_are_slot_sorted() {
+    for seed in 200..240u64 {
+        let (batches, _) =
+            combiner_scenario(seed, CombinePolicy::Adaptive, true);
+        for b in &batches {
+            let slots: Vec<u32> =
+                b.items.iter().map(|p| p.slot.unwrap()).collect();
+            assert!(
+                slots.windows(2).all(|w| w[0] <= w[1]),
+                "seed {seed}: unsorted batch {slots:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_unsorted_adaptive_preserves_fifo() {
+    for seed in 300..330u64 {
+        let (batches, _) =
+            combiner_scenario(seed, CombinePolicy::Adaptive, false);
+        let ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.items.iter().map(|p| p.wr.id))
+            .collect();
+        assert!(
+            ids.windows(2).all(|w| w[0] < w[1]),
+            "seed {seed}: arrival order violated"
+        );
+    }
+}
+
+#[test]
+fn prop_hybrid_split_conserves_and_bounds() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let policy = if rng.below(2) == 0 {
+            SplitPolicy::StaticCount
+        } else {
+            SplitPolicy::AdaptiveItems
+        };
+        let mut h = HybridScheduler::new(policy);
+        if rng.below(4) != 0 {
+            h.record_cpu(1 + rng.below(100), rng.f64() + 1e-6);
+            h.record_gpu(1 + rng.below(100), rng.f64() + 1e-6);
+        }
+        let n = 1 + rng.below(100);
+        let q: Vec<Pending> = (0..n)
+            .map(|i| pending(i as u64, None, 1 + rng.below(200)))
+            .collect();
+        let total_items: usize = q.iter().map(|p| p.wr.data_items).sum();
+        let (cpu, gpu) = h.split(q);
+        assert_eq!(cpu.len() + gpu.len(), n, "seed {seed}: lost requests");
+        // order preserved
+        let ids: Vec<u64> = cpu.iter().chain(&gpu).map(|p| p.wr.id).collect();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "seed {seed}");
+        // adaptive: cpu items never exceed target by more than one request
+        if policy == SplitPolicy::AdaptiveItems {
+            let cpu_items: usize = cpu.iter().map(|p| p.wr.data_items).sum();
+            let target = total_items as f64 * h.cpu_share();
+            assert!(
+                cpu_items as f64 <= target + 1.0 + 200.0,
+                "seed {seed}: cpu overloaded {cpu_items} vs target {target}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_memory_never_double_assigns() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let cap = 1 + rng.below(32);
+        let mut m = DeviceMemory::new(cap);
+        let mut pinned: Vec<u64> = Vec::new();
+        for step in 0..500 {
+            let id = rng.below(cap * 3) as u64;
+            match rng.below(10) {
+                0..=6 => {
+                    if let Some(r) = m.acquire(id) {
+                        let slot = r.slot();
+                        assert!(slot < cap, "seed {seed} step {step}");
+                    } else {
+                        // every slot pinned: legal only if pins >= cap
+                        assert!(pinned.len() >= cap, "seed {seed} step {step}");
+                    }
+                }
+                7..=8 => {
+                    if m.peek(id).is_some() {
+                        m.pin(id);
+                        pinned.push(id);
+                    }
+                }
+                _ => {
+                    if let Some(pos) = pinned.iter().position(|&p| p == id) {
+                        m.unpin(id);
+                        pinned.swap_remove(pos);
+                    }
+                }
+            }
+            assert!(m.resident_count() <= cap);
+        }
+    }
+}
+
+#[test]
+fn prop_occupancy_respects_limits() {
+    let spec = GpuSpec::kepler_k20();
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let k = KernelResources {
+            threads_per_block: 32 * (1 + rng.below(32) as u32),
+            regs_per_thread: 1 + rng.below(255) as u32,
+            smem_per_block: rng.below(48 * 1024) as u32,
+        };
+        if k.threads_per_block > spec.max_threads_per_sm {
+            continue;
+        }
+        let occ = occupancy(&spec, &k);
+        assert!(occ.blocks_per_sm <= spec.max_blocks_per_sm);
+        assert!(
+            occ.blocks_per_sm * k.threads_per_block
+                <= spec.max_threads_per_sm,
+            "seed {seed}: thread limit violated"
+        );
+        assert!(occ.occupancy <= 1.0 && occ.occupancy >= 0.0);
+        assert_eq!(occ.max_size, occ.blocks_per_sm * spec.sms);
+    }
+}
+
+#[test]
+fn prop_combiner_idle_timeout_respects_max_interval() {
+    // after any sequence of arrivals, a poll at last_arrival + gap flushes
+    // iff gap > 2 * max_interval
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x1234);
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 1000, false);
+        let mut now = 0.0;
+        let n = 2 + rng.below(50);
+        for i in 0..n {
+            now += rng.exponential(0.003);
+            c.insert(pending(i as u64, None, 1), now);
+        }
+        let mi = c.max_interval();
+        assert!(c.poll(now + 1.99 * mi).is_none(), "seed {seed}: early flush");
+        assert!(
+            c.poll(now + 2.01 * mi + 1e-9).is_some(),
+            "seed {seed}: missed idle flush"
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Integration: AOT artifacts -> PJRT engine -> numerics.
+//!
+//! Loads the real artifacts built by `make artifacts`, executes the
+//! compiled kernels from rust with hand-computable inputs, and checks the
+//! physics -- proving the python-AOT -> rust-load bridge end to end.
+
+use gcharm::runtime::{
+    default_artifacts_dir, CoalescingClass, Executor, ExecutorConfig,
+    LaunchSpec, Payload,
+};
+use gcharm::runtime::shapes::{
+    INTERACTIONS, INTER_W, KTAB_W, KTABLE, MD_PAD_POS, MD_W, OUT_W,
+    PARTICLE_W, PARTS_PER_BUCKET, PARTS_PER_PATCH,
+};
+
+const EPS2: f32 = 1e-2;
+
+fn executor() -> Executor {
+    let mut config = ExecutorConfig { eps2: EPS2, ..Default::default() };
+    // one active k-vector: k = (1, 0, 0), coef = 0.5
+    config.ktab[0] = 1.0;
+    config.ktab[3] = 0.5;
+    Executor::new(&default_artifacts_dir(), config)
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn gravity_payload(batch: usize) -> Payload {
+    // bucket b: particle 0 at origin mass 1; interaction 0 at (1+b, 0, 0)
+    // with mass 2. Everything else is massless padding.
+    let mut parts = vec![0.0f32; batch * PARTS_PER_BUCKET * PARTICLE_W];
+    let mut inters = vec![0.0f32; batch * INTERACTIONS * INTER_W];
+    for b in 0..batch {
+        parts[b * PARTS_PER_BUCKET * PARTICLE_W + 3] = 1.0; // mass
+        let o = b * INTERACTIONS * INTER_W;
+        inters[o] = 1.0 + b as f32;
+        inters[o + 3] = 2.0;
+    }
+    Payload::Gravity { parts, inters, batch }
+}
+
+fn expected_ax(r: f32) -> f32 {
+    // a_x = m * r / (r^2 + eps2)^{3/2}
+    2.0 * r / (r * r + EPS2).powf(1.5)
+}
+
+#[test]
+fn gravity_kernel_numerics() {
+    let mut ex = executor();
+    let done = ex
+        .run(LaunchSpec {
+            id: 1,
+            payload: gravity_payload(3),
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    assert_eq!(done.batch, 3);
+    assert_eq!(done.out.len(), 3 * PARTS_PER_BUCKET * OUT_W);
+    for b in 0..3 {
+        let o = b * PARTS_PER_BUCKET * OUT_W;
+        let want = expected_ax(1.0 + b as f32);
+        let got = done.out[o];
+        assert!(
+            (got - want).abs() < 1e-4 * want.max(1.0),
+            "bucket {b}: ax = {got}, want {want}"
+        );
+        // no force off-axis
+        assert!(done.out[o + 1].abs() < 1e-6);
+        assert!(done.out[o + 2].abs() < 1e-6);
+        // potential is negative
+        assert!(done.out[o + 3] < 0.0);
+        // padding particles' rows are finite
+        assert!(done.out[o + 4].is_finite());
+    }
+}
+
+#[test]
+fn gravity_batch_exceeding_ladder_splits() {
+    // largest gravity variant is B128; 150 forces a split launch
+    let mut ex = executor();
+    let done = ex
+        .run(LaunchSpec {
+            id: 2,
+            payload: gravity_payload(150),
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    assert_eq!(done.batch, 150);
+    assert_eq!(done.out.len(), 150 * PARTS_PER_BUCKET * OUT_W);
+    // bucket 149: interaction at distance 150
+    let o = 149 * PARTS_PER_BUCKET * OUT_W;
+    let want = expected_ax(150.0);
+    assert!((done.out[o] - want).abs() < 1e-4 * want.max(1e-6));
+    assert!(ex.launches() >= 2, "expected a split launch");
+}
+
+#[test]
+fn gather_kernel_matches_contiguous() {
+    let mut ex = executor();
+    let batch = 4;
+
+    // Build a pool holding each bucket's particles at scattered rows, and
+    // an index array pointing at them; physics must equal the contiguous
+    // layout's.
+    let contiguous = gravity_payload(batch);
+    let (parts, inters) = match &contiguous {
+        Payload::Gravity { parts, inters, .. } => (parts.clone(), inters.clone()),
+        _ => unreachable!(),
+    };
+
+    let rows = 512;
+    let mut pool = vec![0.0f32; rows * PARTICLE_W];
+    let mut idx = vec![0i32; batch * PARTS_PER_BUCKET];
+    // scatter with a stride that shuffles order
+    for (i, chunk) in parts.chunks(PARTICLE_W).enumerate() {
+        let row = (i * 37 + 11) % rows;
+        pool[row * PARTICLE_W..row * PARTICLE_W + PARTICLE_W]
+            .copy_from_slice(chunk);
+        idx[i] = row as i32;
+    }
+
+    let a = ex
+        .run(LaunchSpec {
+            id: 3,
+            payload: contiguous,
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    let b = ex
+        .run(LaunchSpec {
+            id: 4,
+            payload: Payload::GravityGather {
+                pool: std::sync::Arc::new(pool),
+                idx,
+                inters,
+                batch,
+            },
+            transfer_bytes: 0,
+            pattern: CoalescingClass::RandomGather,
+        })
+        .unwrap();
+    assert_eq!(a.out.len(), b.out.len());
+    for (x, y) in a.out.iter().zip(&b.out) {
+        assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+    }
+    // modeled kernel time must be strictly larger for the gather pattern
+    assert!(b.modeled.kernel > a.modeled.kernel);
+}
+
+#[test]
+fn ewald_kernel_numerics() {
+    let mut ex = executor();
+    // particle at x = pi/2, mass 3: force_x = m * coef * sin(k.x) * kx
+    //                               pot = m * coef * cos(k.x)
+    let batch = 1;
+    let mut parts = vec![0.0f32; PARTS_PER_BUCKET * PARTICLE_W];
+    parts[0] = std::f32::consts::FRAC_PI_2;
+    parts[3] = 3.0;
+    let done = ex
+        .run(LaunchSpec {
+            id: 5,
+            payload: Payload::Ewald { parts, batch },
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    let fx = done.out[0];
+    let pot = done.out[3];
+    assert!((fx - 3.0 * 0.5).abs() < 1e-4, "fx = {fx}");
+    assert!(pot.abs() < 1e-4, "pot = {pot}");
+}
+
+#[test]
+fn md_kernel_numerics() {
+    let mut ex = executor();
+    // two particles at distance 0.4 with sigma^2 = 0.04, eps = 1:
+    // s6 = (0.04/0.16)^3, F = 24*(2*s6^2 - s6)/0.16 * dx
+    let n = PARTS_PER_PATCH;
+    let mut pa = vec![MD_PAD_POS; n * MD_W];
+    let mut pb = vec![MD_PAD_POS; n * MD_W];
+    pa[0] = 0.0;
+    pa[1] = 0.0;
+    pb[0] = 0.4;
+    pb[1] = 0.0;
+    let done = ex
+        .run(LaunchSpec {
+            id: 6,
+            payload: Payload::MdForce { pa, pb, batch: 1 },
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    let s6 = (0.04f32 / 0.16).powi(3);
+    let f = 24.0 * (2.0 * s6 * s6 - s6) / 0.16;
+    let want_fx = f * (0.0 - 0.4);
+    let got = done.out[0];
+    assert!(
+        (got - want_fx).abs() < 1e-3 * want_fx.abs(),
+        "fx = {got}, want {want_fx}"
+    );
+    assert!(got > 0.0, "LJ well at 2*sigma is attractive: fx should be +");
+    // padding rows feel nothing
+    assert!(done.out[MD_W].abs() < 1e-6);
+}
+
+#[test]
+fn modeled_costs_populate() {
+    let mut ex = executor();
+    let done = ex
+        .run(LaunchSpec {
+            id: 7,
+            payload: gravity_payload(104),
+            transfer_bytes: 104 * 1024,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    assert!(done.modeled.transfer > 0.0);
+    assert!(done.modeled.kernel > 0.0);
+    assert!(done.wall > 0.0);
+}
+
+#[test]
+fn ktab_constants_have_expected_layout() {
+    // guard: test assumptions about KTABLE layout used in executor()
+    assert_eq!(KTABLE * KTAB_W, 256);
+    assert_eq!(INTERACTIONS, 128);
+    assert_eq!(PARTS_PER_BUCKET, 16);
+}
+
+#[test]
+fn gpu_service_roundtrip() {
+    use std::sync::mpsc::channel;
+    let (done_tx, done_rx) = channel();
+    let svc = gcharm::runtime::GpuService::spawn(
+        &default_artifacts_dir(),
+        ExecutorConfig { eps2: EPS2, ..Default::default() },
+        done_tx,
+    )
+    .unwrap();
+    for id in 0..4u64 {
+        svc.submit(LaunchSpec {
+            id,
+            payload: gravity_payload(2),
+            transfer_bytes: 1024,
+            pattern: CoalescingClass::Contiguous,
+        })
+        .unwrap();
+    }
+    let mut seen = Vec::new();
+    for _ in 0..4 {
+        let c = done_rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("completion")
+            .expect("launch ok");
+        assert_eq!(c.batch, 2);
+        seen.push(c.id);
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 1, 2, 3]);
+}
