@@ -1,15 +1,62 @@
 //! Micro-benchmarks of the coordinator hot paths (the L3 perf targets of
-//! EXPERIMENTS.md section Perf): combiner insert (sorted and FIFO), chare-table
-//! staging, hybrid queue split, manifest JSON parse.
+//! EXPERIMENTS.md section Perf): staging arena vs per-launch allocation,
+//! combiner insert (sorted and FIFO), chare-table staging, hybrid queue
+//! split, manifest JSON parse.
+//!
+//! The binary installs a counting global allocator so the arena-vs-naive
+//! comparison reports heap allocations and allocated bytes per staged
+//! chunk next to ns/op (see PERF.md).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use gcharm::bench::bench_ns;
 use gcharm::coordinator::{
-    ChareId, ChareTable, CombinePolicy, Combiner, HybridScheduler, Pending,
-    SplitPolicy, WorkKind, WorkRequest, WrPayload,
+    chunk_by_items, ChareId, ChareTable, CombinePolicy, Combiner,
+    HybridScheduler, Pending, SplitPolicy, WorkKind, WorkRequest, WrPayload,
 };
-use gcharm::runtime::shapes::{PARTICLE_W, PARTS_PER_BUCKET};
+use gcharm::runtime::shapes::{
+    INTERACTIONS, INTER_W, PARTICLE_W, PARTS_PER_BUCKET,
+};
+use gcharm::runtime::{
+    default_artifacts_dir, ExecutorConfig, Manifest, Payload, StagingArena,
+};
 use gcharm::util::json::Json;
 use gcharm::util::Rng;
+
+/// System allocator wrapper counting allocations and allocated bytes.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates verbatim to `System`; the counters are lock-free.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` `iters` times; report (allocations, bytes) per call.
+fn allocs_per_op<F: FnMut()>(iters: u64, mut f: F) -> (f64, f64) {
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        f();
+    }
+    let a = ALLOCS.load(Ordering::Relaxed) - a0;
+    let b = ALLOC_BYTES.load(Ordering::Relaxed) - b0;
+    (a as f64 / iters as f64, b as f64 / iters as f64)
+}
 
 fn pending(id: u64, slot: Option<u32>) -> Pending {
     Pending {
@@ -28,8 +75,117 @@ fn pending(id: u64, slot: Option<u32>) -> Pending {
     }
 }
 
+/// The pre-arena staging path: fresh zero-filled buffers, a cloned
+/// constant arg, and a variant select + name clone per chunk.
+fn naive_stage(
+    manifest: &Manifest,
+    cfg: &ExecutorConfig,
+    parts: &[f32],
+    inters: &[f32],
+    n: usize,
+) -> (String, Vec<Vec<f32>>) {
+    let v = manifest.select("gravity", n, 0).unwrap();
+    let b = v.batch;
+    let ps = PARTS_PER_BUCKET * PARTICLE_W;
+    let is = INTERACTIONS * INTER_W;
+    let mut p = vec![0.0f32; b * ps];
+    let mut i = vec![0.0f32; b * is];
+    p[..n * ps].copy_from_slice(&parts[..n * ps]);
+    i[..n * is].copy_from_slice(&inters[..n * is]);
+    (v.name.clone(), vec![p, i, vec![cfg.eps2]])
+}
+
+/// Arena vs per-launch allocation for the gravity staging hot path.
+fn staging_comparison() {
+    println!("\nstaging: arena vs per-launch allocation (gravity, n=104)");
+    let cfg = ExecutorConfig::default();
+    let (manifest, _) =
+        Manifest::load_or_synthetic(&default_artifacts_dir()).unwrap();
+    let n = 104; // the force kernel's occupancy-derived maxSize
+    let payload = Payload::Gravity {
+        parts: vec![0.5f32; n * PARTS_PER_BUCKET * PARTICLE_W],
+        inters: vec![0.5f32; n * INTERACTIONS * INTER_W],
+        batch: n,
+    };
+    let (parts, inters) = match &payload {
+        Payload::Gravity { parts, inters, .. } => {
+            (parts.clone(), inters.clone())
+        }
+        _ => unreachable!(),
+    };
+
+    let mut arena = StagingArena::new(&cfg);
+    // warm the arena so the comparison shows the steady state
+    let c = arena
+        .stage_chunk(&manifest, &payload, 0, n, &mut None)
+        .unwrap();
+    arena.recycle(c);
+
+    let arena_ns = bench_ns("arena stage_chunk (steady state)", 512, 9, || {
+        let c = arena
+            .stage_chunk(&manifest, &payload, 0, n, &mut None)
+            .unwrap();
+        std::hint::black_box(&c);
+        arena.recycle(c);
+    });
+    let (arena_allocs, arena_bytes) = allocs_per_op(512, || {
+        let c = arena
+            .stage_chunk(&manifest, &payload, 0, n, &mut None)
+            .unwrap();
+        std::hint::black_box(&c);
+        arena.recycle(c);
+    });
+
+    let naive_ns = bench_ns("per-launch alloc staging (old path)", 512, 9, || {
+        let staged = naive_stage(&manifest, &cfg, &parts, &inters, n);
+        std::hint::black_box(&staged);
+    });
+    let (naive_allocs, naive_bytes) = allocs_per_op(512, || {
+        let staged = naive_stage(&manifest, &cfg, &parts, &inters, n);
+        std::hint::black_box(&staged);
+    });
+
+    println!(
+        "  {:<24} {:>12} {:>14} {:>16} {:>16}",
+        "path", "ns/op", "stagings/s", "allocs/op", "alloc bytes/op"
+    );
+    for (name, ns, a, b) in [
+        ("arena", arena_ns, arena_allocs, arena_bytes),
+        ("per-launch alloc", naive_ns, naive_allocs, naive_bytes),
+    ] {
+        println!(
+            "  {:<24} {:>12.1} {:>14.0} {:>16.2} {:>16.0}",
+            name,
+            ns,
+            1e9 / ns.max(1e-9),
+            a,
+            b
+        );
+    }
+    println!(
+        "  -> arena saves {:.2} allocs and {:.0} heap bytes per staged \
+         chunk ({:+.1}% staging time)",
+        naive_allocs - arena_allocs,
+        naive_bytes - arena_bytes,
+        (arena_ns - naive_ns) / naive_ns * 100.0
+    );
+    let s = arena.stats();
+    println!(
+        "  arena stats: {} checkouts, {} allocs, {} reuses, {} repadded \
+         elems, {} variant lookups / {} memo hits",
+        s.checkouts,
+        s.buffer_allocs,
+        s.buffer_reuses,
+        s.repadded_elems,
+        s.variant_lookups,
+        s.variant_hits
+    );
+}
+
 fn main() {
     println!("hot-path micro-benchmarks (median ns/op)");
+
+    staging_comparison();
 
     // combiner insert at a steady queue depth of ~104 (the force maxSize)
     {
@@ -88,9 +244,22 @@ fn main() {
         });
     }
 
+    // cpu-pool chunking of a 512-request queue across 4 workers. The
+    // batch is built once; each op splits it and regroups the chunks
+    // (pointer moves only), so the timing tracks the split itself
+    // rather than test-data construction.
+    {
+        let mut q: Vec<Pending> = (0..512).map(|i| pending(i, None)).collect();
+        bench_ns("cpu-pool chunk+regroup (512 reqs, 4 workers)", 256, 9, || {
+            let chunks = chunk_by_items(std::mem::take(&mut q), 4);
+            std::hint::black_box(chunks.len());
+            q = chunks.into_iter().flatten().collect();
+        });
+    }
+
     // manifest JSON parse
     {
-        let dir = gcharm::runtime::default_artifacts_dir();
+        let dir = default_artifacts_dir();
         if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
             bench_ns("manifest.json parse", 256, 9, || {
                 std::hint::black_box(Json::parse(&text).unwrap());

@@ -344,6 +344,11 @@ pub fn run_fig5(scale: &Scale) {
     } else {
         vec![4_096, 8_192, 16_384, 32_768]
     };
+    // The hybrid CPU half runs on the coordinator's worker pool
+    // (coordinator::cpu_pool), chunked by data_items; size it like the
+    // PE count so the split ratio is comparable across rows.
+    let cpu_workers = 4;
+    println!("hybrid CPU pool: {cpu_workers} workers (chunked by data items)");
     for n in sizes {
         let mk = |split: SplitPolicy| {
             let mut cfg = MdConfig::new(n); // box/grid auto-scale with n
@@ -352,6 +357,7 @@ pub fn run_fig5(scale: &Scale) {
                 pes: 4,
                 split,
                 hybrid_md: true,
+                cpu_workers,
                 ..Config::default()
             };
             cfg

@@ -67,6 +67,10 @@ pub struct Combiner {
     last_arrival: Option<f64>,
     max_interval: f64,
     arrivals_since_flush: usize,
+    /// Static policy: a period flush was capped at `max_size` and left
+    /// requests behind; drain them on subsequent polls instead of letting
+    /// them sit until the next full period (or the idle-drain rescue).
+    residual: bool,
     flushes: Vec<(FlushReason, usize)>,
     probes: u64,
 }
@@ -86,6 +90,7 @@ impl Combiner {
             last_arrival: None,
             max_interval: MIN_INTERVAL,
             arrivals_since_flush: 0,
+            residual: false,
             flushes: Vec::new(),
             probes: 0,
         }
@@ -173,7 +178,9 @@ impl Combiner {
                 None
             }
             CombinePolicy::StaticEvery(period) => {
-                if self.arrivals_since_flush >= period && !self.queue.is_empty() {
+                if (self.arrivals_since_flush >= period || self.residual)
+                    && !self.queue.is_empty()
+                {
                     let n = self.queue.len().min(self.max_size);
                     return Some(self.take(n, FlushReason::StaticPeriod));
                 }
@@ -195,6 +202,10 @@ impl Combiner {
     fn take(&mut self, n: usize, reason: FlushReason) -> Batch {
         let items: Vec<Pending> = self.queue.drain(..n).collect();
         self.arrivals_since_flush = 0;
+        // A capped period flush leaves residuals that must not wait a
+        // whole further period; any other flush clears the debt.
+        self.residual =
+            reason == FlushReason::StaticPeriod && !self.queue.is_empty();
         self.flushes.push((reason, items.len()));
         Batch { items, reason }
     }
@@ -295,6 +306,40 @@ mod tests {
         let b = c.poll(0.0).unwrap();
         assert_eq!(b.items.len(), 4);
         assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn static_residual_drains_on_subsequent_polls() {
+        // period flush capped at max_size must not strand the leftovers
+        // until the next full period
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(8), 3, false);
+        for i in 0..8 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.poll(0.0).expect("period flush");
+        assert_eq!(b.items.len(), 3);
+        // residuals drain immediately, still capped at max_size
+        let b2 = c.poll(0.0).expect("residual flush");
+        assert_eq!(b2.reason, FlushReason::StaticPeriod);
+        assert_eq!(b2.items.len(), 3);
+        let b3 = c.poll(0.0).expect("residual flush");
+        assert_eq!(b3.items.len(), 2);
+        assert!(c.is_empty());
+        // debt cleared: the next arrival does not trigger an early flush
+        c.insert(pending(8, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none());
+    }
+
+    #[test]
+    fn static_uncapped_flush_leaves_no_residual_debt() {
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(3), 100, false);
+        for i in 0..3 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        assert!(c.poll(0.0).is_some());
+        assert!(c.is_empty());
+        c.insert(pending(3, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none(), "no residual debt after full drain");
     }
 
     #[test]

@@ -1,109 +1,12 @@
 //! Native CPU kernels for hybrid execution and CPU-only baselines.
 //!
 //! G-Charm schedules a task on CPU or GPU only when "kernel functions exist
-//! for both CPU and GPU" (paper section 3.3). These are the CPU-side
-//! implementations, numerically matching the Pallas kernels (same f32
-//! arithmetic and masking rules) so hybrid execution is bit-compatible
-//! with pure-GPU execution to f32 tolerance.
+//! for both CPU and GPU" (paper section 3.3). The implementations live in
+//! `runtime::native` so the sim GPU backend interprets the *same* f32
+//! arithmetic and masking rules -- hybrid execution is bit-compatible with
+//! pure-GPU execution to f32 tolerance (bitwise on the sim backend).
 
-use crate::runtime::shapes::{
-    INTER_W, MD_W, OUT_W, PARTICLE_W,
-};
-
-/// CPU bucket gravity: `parts` (P x 4), `inters` (I x 4) -> (P x 4)
-/// [ax, ay, az, pot]. Mirrors `kernels/gravity.py`.
-pub fn cpu_gravity(parts: &[f32], inters: &[f32], eps2: f32) -> Vec<f32> {
-    let p = parts.len() / PARTICLE_W;
-    let n = inters.len() / INTER_W;
-    let mut out = vec![0.0f32; p * OUT_W];
-    for i in 0..p {
-        let px = parts[i * PARTICLE_W];
-        let py = parts[i * PARTICLE_W + 1];
-        let pz = parts[i * PARTICLE_W + 2];
-        let (mut ax, mut ay, mut az, mut pot) = (0.0f32, 0.0, 0.0, 0.0);
-        for j in 0..n {
-            let dx = inters[j * INTER_W] - px;
-            let dy = inters[j * INTER_W + 1] - py;
-            let dz = inters[j * INTER_W + 2] - pz;
-            let m = inters[j * INTER_W + 3];
-            let r2 = dx * dx + dy * dy + dz * dz + eps2;
-            let inv = 1.0 / r2.sqrt();
-            let inv3 = inv * inv * inv;
-            let w = m * inv3;
-            ax += w * dx;
-            ay += w * dy;
-            az += w * dz;
-            pot -= m * inv;
-        }
-        out[i * OUT_W] = ax;
-        out[i * OUT_W + 1] = ay;
-        out[i * OUT_W + 2] = az;
-        out[i * OUT_W + 3] = pot;
-    }
-    out
-}
-
-/// CPU Ewald k-space correction: `parts` (P x 4), `ktab` (K x 4) ->
-/// (P x 4) [fx, fy, fz, pot]. Mirrors `kernels/ewald.py`.
-pub fn cpu_ewald(parts: &[f32], ktab: &[f32]) -> Vec<f32> {
-    let p = parts.len() / PARTICLE_W;
-    let k = ktab.len() / 4;
-    let mut out = vec![0.0f32; p * OUT_W];
-    for i in 0..p {
-        let px = parts[i * PARTICLE_W];
-        let py = parts[i * PARTICLE_W + 1];
-        let pz = parts[i * PARTICLE_W + 2];
-        let mass = parts[i * PARTICLE_W + 3];
-        let (mut fx, mut fy, mut fz, mut pot) = (0.0f32, 0.0, 0.0, 0.0);
-        for j in 0..k {
-            let kx = ktab[j * 4];
-            let ky = ktab[j * 4 + 1];
-            let kz = ktab[j * 4 + 2];
-            let coef = ktab[j * 4 + 3];
-            let phase = px * kx + py * ky + pz * kz;
-            let s = coef * phase.sin();
-            let c = coef * phase.cos();
-            fx += s * kx;
-            fy += s * ky;
-            fz += s * kz;
-            pot += c;
-        }
-        out[i * OUT_W] = mass * fx;
-        out[i * OUT_W + 1] = mass * fy;
-        out[i * OUT_W + 2] = mass * fz;
-        out[i * OUT_W + 3] = mass * pot;
-    }
-    out
-}
-
-/// CPU MD patch-pair LJ force: `pa`, `pb` (N x 2) -> forces on `pa` (N x 2).
-/// Mirrors `kernels/md_force.py` including the self-pair mask.
-pub fn cpu_md_interact(pa: &[f32], pb: &[f32], params: [f32; 3]) -> Vec<f32> {
-    let [rc2, sig2, eps] = params;
-    let n = pa.len() / MD_W;
-    let m = pb.len() / MD_W;
-    let mut out = vec![0.0f32; n * MD_W];
-    for i in 0..n {
-        let xi = pa[i * MD_W];
-        let yi = pa[i * MD_W + 1];
-        let (mut fx, mut fy) = (0.0f32, 0.0f32);
-        for j in 0..m {
-            let dx = xi - pb[j * MD_W];
-            let dy = yi - pb[j * MD_W + 1];
-            let r2 = dx * dx + dy * dy;
-            if r2 < rc2 && r2 > 1e-9 {
-                let s2 = sig2 / r2;
-                let s6 = s2 * s2 * s2;
-                let f = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2;
-                fx += f * dx;
-                fy += f * dy;
-            }
-        }
-        out[i * MD_W] = fx;
-        out[i * MD_W + 1] = fy;
-    }
-    out
-}
+pub use crate::runtime::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,347 @@
+//! CPU worker pool for the hybrid split (paper section 3.3).
+//!
+//! The CPU half of a hybrid MD split used to ride on the PE threads,
+//! serialized behind whatever chare messages each PE was already
+//! processing. This pool gives the CPU side its own small set of worker
+//! threads: a flushed batch's CPU prefix is chunked by cumulative
+//! `data_items` (the paper's workload model) into at most one chunk per
+//! worker, the chunks execute concurrently, and each worker reports its
+//! own timing back to the coordinator. The coordinator folds the
+//! per-worker timings into one `HybridScheduler::record_cpu` observation
+//! per batch -- total items over the batch *makespan* -- so the adaptive
+//! split sees the pool's true per-item rate (W workers make the pool ~W
+//! times faster per item than one worker; recording per-chunk rates would
+//! report the single-worker rate instead).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::executor::ExecutorConfig;
+use crate::util::timeline::SpanKind;
+
+use super::combiner::Pending;
+use super::cpu_kernels::{cpu_ewald, cpu_gravity, cpu_md_interact};
+use super::scheduler::{CoordMsg, Shared};
+use super::work_request::{WrPayload, WrResult};
+use super::ChareId;
+
+/// Messages a pool worker consumes.
+enum PoolMsg {
+    /// Execute one chunk of a hybrid batch.
+    Chunk { batch: u64, items: Vec<Pending> },
+    Stop,
+}
+
+/// Execute a slice of pending work requests with the native CPU kernels.
+/// Returns (total data items, per-request results).
+pub(crate) fn execute_pending(
+    batch: &[Pending],
+    cfg: &ExecutorConfig,
+) -> (usize, Vec<(ChareId, WrResult)>) {
+    let mut items = 0usize;
+    let mut results = Vec::with_capacity(batch.len());
+    for p in batch {
+        items += p.wr.data_items;
+        let out = match &p.wr.payload {
+            WrPayload::MdPair { pa, pb } => {
+                cpu_md_interact(pa, pb, cfg.md_params)
+            }
+            WrPayload::Force { parts, inters, .. } => {
+                cpu_gravity(parts, inters, cfg.eps2)
+            }
+            WrPayload::Ewald { parts } => cpu_ewald(parts, &cfg.ktab),
+        };
+        results.push((
+            p.wr.chare,
+            WrResult {
+                wr_id: p.wr.id,
+                tag: p.wr.tag,
+                kind: p.wr.kind,
+                out,
+            },
+        ));
+    }
+    (items, results)
+}
+
+/// Split a batch into at most `parts` contiguous chunks with roughly equal
+/// cumulative `data_items` (order preserved; chunks are non-empty).
+pub fn chunk_by_items(batch: Vec<Pending>, parts: usize) -> Vec<Vec<Pending>> {
+    let parts = parts.max(1);
+    if batch.is_empty() {
+        return Vec::new();
+    }
+    let total: usize = batch.iter().map(|p| p.wr.data_items).sum();
+    let mut chunks: Vec<Vec<Pending>> = Vec::with_capacity(parts);
+    let mut cur: Vec<Pending> = Vec::new();
+    let mut cum = 0usize;
+    for p in batch {
+        cum += p.wr.data_items;
+        cur.push(p);
+        // Cut once the cumulative sum crosses the next even share, while
+        // later requests still have a chunk to land in.
+        if chunks.len() + 1 < parts && cum * parts >= total * (chunks.len() + 1)
+        {
+            chunks.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        chunks.push(cur);
+    }
+    chunks
+}
+
+/// Handle to the worker threads. Owned by the coordinator; workers send
+/// `CoordMsg::CpuChunk` results straight to the coordinator queue.
+pub(crate) struct CpuPool {
+    txs: Vec<Sender<PoolMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    next_batch: u64,
+    rr: usize,
+}
+
+impl CpuPool {
+    pub(crate) fn spawn(
+        workers: usize,
+        coord: Sender<CoordMsg>,
+        shared: Arc<Shared>,
+        cfg: ExecutorConfig,
+    ) -> Result<CpuPool> {
+        let workers = workers.max(1);
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<PoolMsg>();
+            let coord = coord.clone();
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("cpu-pool-{w}"))
+                    .spawn(move || worker_loop(rx, coord, shared, cfg))?,
+            );
+            txs.push(tx);
+        }
+        Ok(CpuPool { txs, handles, shared, next_batch: 0, rr: 0 })
+    }
+
+    /// Fan a batch out across the workers. Returns the batch id and the
+    /// number of chunks submitted; the coordinator folds that many
+    /// `CpuChunk` messages back into one hybrid observation. Each chunk
+    /// holds +1 on `outstanding` until its result message is processed.
+    pub(crate) fn submit(&mut self, batch: Vec<Pending>) -> (u64, usize) {
+        let id = self.next_batch;
+        self.next_batch += 1;
+        let chunks = chunk_by_items(batch, self.txs.len());
+        let n = chunks.len();
+        self.shared
+            .outstanding
+            .fetch_add(n as i64, Ordering::SeqCst);
+        for chunk in chunks {
+            let w = self.rr % self.txs.len();
+            self.rr += 1;
+            self.txs[w]
+                .send(PoolMsg::Chunk { batch: id, items: chunk })
+                .expect("cpu pool worker is down");
+        }
+        (id, n)
+    }
+}
+
+impl Drop for CpuPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(PoolMsg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<PoolMsg>,
+    coord: Sender<CoordMsg>,
+    shared: Arc<Shared>,
+    cfg: ExecutorConfig,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            PoolMsg::Chunk { batch, items } => {
+                let t0 = Instant::now();
+                let (n_items, results) = execute_pending(&items, &cfg);
+                let secs = t0.elapsed().as_secs_f64();
+                shared.timeline.record(
+                    SpanKind::CpuTask,
+                    "cpu-pool-chunk",
+                    shared.timeline.now() - secs,
+                    secs,
+                    0.0,
+                    n_items as u64,
+                );
+                // The chunk's +1 hold rides along with this message and is
+                // released by the coordinator.
+                if coord
+                    .send(CoordMsg::CpuChunk {
+                        batch,
+                        items: n_items,
+                        secs,
+                        results,
+                    })
+                    .is_err()
+                {
+                    break; // coordinator went away
+                }
+            }
+            PoolMsg::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::work_request::{WorkKind, WorkRequest};
+    use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
+
+    fn md_pending(id: u64, items: usize) -> Pending {
+        let mut pa = vec![MD_PAD_POS; PARTS_PER_PATCH * MD_W];
+        let mut pb = vec![MD_PAD_POS; PARTS_PER_PATCH * MD_W];
+        pa[0] = 0.0;
+        pa[1] = 0.0;
+        pb[0] = 0.1;
+        pb[1] = 0.0;
+        Pending {
+            wr: WorkRequest {
+                id,
+                chare: ChareId::new(0, id as u32),
+                kind: WorkKind::MdInteract,
+                buffer: None,
+                data_items: items,
+                tag: id,
+                arrival: 0.0,
+                payload: WrPayload::MdPair { pa, pb },
+            },
+            slot: None,
+            staged_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn chunks_balance_by_items_and_preserve_order() {
+        let batch: Vec<Pending> =
+            (0..10).map(|i| md_pending(i, 10)).collect();
+        let chunks = chunk_by_items(batch, 2);
+        assert_eq!(chunks.len(), 2);
+        let a: usize =
+            chunks[0].iter().map(|p| p.wr.data_items).sum();
+        let b: usize =
+            chunks[1].iter().map(|p| p.wr.data_items).sum();
+        assert_eq!(a, 50);
+        assert_eq!(b, 50);
+        let ids: Vec<u64> = chunks
+            .iter()
+            .flatten()
+            .map(|p| p.wr.id)
+            .collect();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn chunks_follow_item_weights_not_counts() {
+        // one heavy head + many light: the heavy request fills chunk 0
+        let mut batch = vec![md_pending(0, 90)];
+        batch.extend((1..10).map(|i| md_pending(i, 1)));
+        let chunks = chunk_by_items(batch, 3);
+        assert!(chunks.len() <= 3);
+        assert_eq!(chunks[0].len(), 1, "heavy head is its own chunk");
+    }
+
+    #[test]
+    fn fewer_requests_than_workers() {
+        let chunks = chunk_by_items(vec![md_pending(0, 5)], 4);
+        assert_eq!(chunks.len(), 1);
+        assert!(chunk_by_items(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn pool_executes_chunks_on_two_workers() {
+        let (coord_tx, coord_rx) = channel::<CoordMsg>();
+        let shared = Shared::new();
+        let mut pool = CpuPool::spawn(
+            2,
+            coord_tx,
+            shared.clone(),
+            ExecutorConfig::default(),
+        )
+        .unwrap();
+
+        let batch: Vec<Pending> =
+            (0..8).map(|i| md_pending(i, 4)).collect();
+        let (id, chunks) = pool.submit(batch);
+        assert_eq!(chunks, 2, "8 equal requests split across both workers");
+        assert_eq!(shared.outstanding(), 2, "one hold per chunk");
+
+        let mut got_items = 0usize;
+        let mut got_results = Vec::new();
+        for _ in 0..chunks {
+            match coord_rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("chunk result")
+            {
+                CoordMsg::CpuChunk { batch, items, secs, results } => {
+                    assert_eq!(batch, id);
+                    assert!(secs >= 0.0);
+                    got_items += items;
+                    got_results.extend(results);
+                }
+                _ => panic!("expected CpuChunk"),
+            }
+        }
+        assert_eq!(got_items, 32);
+        assert_eq!(got_results.len(), 8);
+        // every request computed the same single-pair repulsion
+        for (_, r) in &got_results {
+            assert!(r.out[0] < 0.0, "repelled in -x");
+        }
+    }
+
+    #[test]
+    fn pool_batches_correlate_by_id() {
+        let (coord_tx, coord_rx) = channel::<CoordMsg>();
+        let shared = Shared::new();
+        let mut pool = CpuPool::spawn(
+            3,
+            coord_tx,
+            shared.clone(),
+            ExecutorConfig::default(),
+        )
+        .unwrap();
+        let (id_a, n_a) =
+            pool.submit((0..6).map(|i| md_pending(i, 2)).collect());
+        let (id_b, n_b) =
+            pool.submit((6..12).map(|i| md_pending(i, 2)).collect());
+        assert_ne!(id_a, id_b);
+        let mut per_batch = std::collections::HashMap::new();
+        for _ in 0..n_a + n_b {
+            match coord_rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap()
+            {
+                CoordMsg::CpuChunk { batch, results, .. } => {
+                    *per_batch.entry(batch).or_insert(0usize) +=
+                        results.len();
+                }
+                _ => panic!("expected CpuChunk"),
+            }
+        }
+        assert_eq!(per_batch.get(&id_a), Some(&6));
+        assert_eq!(per_batch.get(&id_b), Some(&6));
+    }
+}

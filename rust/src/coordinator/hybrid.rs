@@ -47,6 +47,11 @@ impl HybridScheduler {
     }
 
     /// Record a CPU execution: `items` data items in `secs` seconds.
+    ///
+    /// The coordinator folds a worker-pool batch into a single
+    /// observation -- total items over the batch *makespan* (longest
+    /// chunk) -- so with W concurrent workers the learned per-item rate
+    /// reflects the pool's true throughput, not a single worker's.
     pub fn record_cpu(&mut self, items: usize, secs: f64) {
         if items > 0 {
             self.cpu_per_item.update(secs / items as f64);
@@ -144,6 +149,24 @@ mod tests {
         let (cpu, gpu) = h.split(q);
         assert_eq!(cpu.len(), 2);
         assert_eq!(gpu.len(), 2);
+    }
+
+    #[test]
+    fn pool_makespan_fold_learns_pool_rate() {
+        // 2 workers, 100 items each, 0.1 s concurrently: the fold records
+        // (200 items, 0.1 s makespan) -> 0.5 ms/item, half the per-worker
+        // rate. Per-chunk recording would have learned 1 ms/item.
+        let mut pooled = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        pooled.record_cpu(200, 0.1);
+        let mut per_chunk = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        per_chunk.record_cpu(100, 0.1);
+        per_chunk.record_cpu(100, 0.1);
+        pooled.record_gpu(100, 0.05);
+        per_chunk.record_gpu(100, 0.05);
+        assert!((pooled.perf_ratio().unwrap() - 1.0).abs() < 1e-9);
+        assert!((per_chunk.perf_ratio().unwrap() - 2.0).abs() < 1e-9);
+        // the pool-aware fold hands the CPU a larger share
+        assert!(pooled.cpu_share() > per_chunk.cpu_share());
     }
 
     #[test]

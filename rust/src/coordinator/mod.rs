@@ -24,6 +24,7 @@ pub mod chare_table;
 pub mod coalescing;
 pub mod combiner;
 pub mod cpu_kernels;
+pub mod cpu_pool;
 pub mod hybrid;
 pub mod metrics;
 pub mod scheduler;
@@ -52,6 +53,7 @@ use crate::runtime::{occupancy, GpuSpec, KernelResources};
 pub use chare::{Chare, ChareId, Ctx, Msg, WorkDraft, METHOD_RESULT};
 pub use chare_table::ChareTable;
 pub use combiner::{Batch, CombinePolicy, Combiner, FlushReason, Pending};
+pub use cpu_pool::chunk_by_items;
 pub use hybrid::{HybridScheduler, SplitPolicy};
 pub use metrics::Report;
 pub use scheduler::Shared;
@@ -80,6 +82,10 @@ pub struct Config {
     pub split: SplitPolicy,
     /// Enable CPU+GPU hybrid execution for MD interact requests.
     pub hybrid_md: bool,
+    /// CPU worker-pool size for the hybrid split's CPU batches
+    /// (0 = match `pes`). Batches are chunked by `data_items` across the
+    /// pool; per-worker timings fold into the hybrid scheduler.
+    pub cpu_workers: usize,
     /// Device pool capacity in bucket-buffer slots.
     pub table_slots: usize,
     /// Device-resident interaction-entry cache capacity (tree moments /
@@ -103,6 +109,7 @@ impl Default for Config {
             data_policy: DataPolicy::ReuseSorted,
             split: SplitPolicy::AdaptiveItems,
             hybrid_md: true,
+            cpu_workers: 0,
             table_slots: 1024,
             node_slots: 1 << 17,
             executor: ExecutorConfig::default(),
@@ -128,6 +135,19 @@ struct LaunchInfo {
     transfer_bytes: u64,
 }
 
+/// Accumulator folding a hybrid batch's CPU-pool chunk *timings* back
+/// together. Results are scattered per chunk as they arrive (no added
+/// latency); only the hybrid-rate observation waits for the batch.
+struct CpuBatchAcc {
+    chunks_left: usize,
+    items: usize,
+    /// Longest single chunk: the batch makespan (chunks start together),
+    /// i.e. the pool's true wall time for the batch.
+    max_secs: f64,
+    /// Summed per-worker busy time (report accounting).
+    sum_secs: f64,
+}
+
 /// The coordinator thread's state.
 struct Coord {
     cfg: Config,
@@ -145,9 +165,14 @@ struct Coord {
     report: Report,
     launches: HashMap<u64, LaunchInfo>,
     gpu: GpuService,
+    /// Hybrid CPU worker pool, spawned lazily on the first CPU split so
+    /// GPU-only workloads (all N-body runs, `hybrid_md: false`) never
+    /// carry idle worker threads.
+    cpu_pool: Option<cpu_pool::CpuPool>,
+    cpu_workers: usize,
+    cpu_batches: HashMap<u64, CpuBatchAcc>,
     next_wr: u64,
     next_launch: u64,
-    rr_pe: usize,
 }
 
 impl Coord {
@@ -158,6 +183,8 @@ impl Coord {
         let md_max = occupancy(&spec, &KernelResources::md_kernel()).max_size as usize;
         let sort = cfg.data_policy == DataPolicy::ReuseSorted;
         let gpu = GpuService::spawn(&cfg.artifacts, cfg.executor.clone(), done_tx)?;
+        let cpu_workers =
+            if cfg.cpu_workers == 0 { cfg.pes } else { cfg.cpu_workers };
         Ok(Coord {
             table: ChareTable::new(cfg.table_slots),
             node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
@@ -169,9 +196,11 @@ impl Coord {
             report: Report::default(),
             launches: HashMap::new(),
             gpu,
+            cpu_pool: None,
+            cpu_workers,
+            cpu_batches: HashMap::new(),
             next_wr: 0,
             next_launch: 0,
-            rr_pe: 0,
             cfg,
             router,
         })
@@ -379,8 +408,8 @@ impl Coord {
         );
     }
 
-    /// MD: hybrid-split the flushed batch, CPU prefix to a PE, GPU suffix
-    /// to a combined launch.
+    /// MD: hybrid-split the flushed batch, CPU prefix to the worker pool,
+    /// GPU suffix to a combined launch.
     fn dispatch_md(&mut self, batch: Batch) {
         self.report.record_flush(batch.reason, batch.items.len());
         if batch.items.is_empty() {
@@ -393,28 +422,33 @@ impl Coord {
         };
 
         if !cpu.is_empty() {
-            self.report.cpu_items +=
-                cpu.iter().map(|p| p.wr.data_items as u64).sum::<u64>();
-            // Scatter the CPU portion across PEs (asynchronous executions
-            // on all CPU cores, section 3.3), interleaved so each PE gets
-            // a similar item load.
-            let npes = self.router.pes.len();
-            let mut per_pe: Vec<Vec<Pending>> =
-                (0..npes).map(|_| Vec::new()).collect();
-            for (i, p) in cpu.into_iter().enumerate() {
-                per_pe[(self.rr_pe + i) % npes].push(p);
+            let total: usize =
+                cpu.iter().map(|p| p.wr.data_items).sum();
+            self.report.cpu_items += total as u64;
+            // Fan the CPU portion across the worker pool (asynchronous
+            // executions on all CPU cores, section 3.3), chunked by
+            // data_items so each worker gets a similar item load.
+            if self.cpu_pool.is_none() {
+                let pool = cpu_pool::CpuPool::spawn(
+                    self.cpu_workers,
+                    self.router.coord.clone(),
+                    self.router.shared.clone(),
+                    self.cfg.executor.clone(),
+                )
+                .expect("spawning cpu pool");
+                self.cpu_pool = Some(pool);
             }
-            self.rr_pe += 1;
-            for (pe, batch) in per_pe.into_iter().enumerate() {
-                if batch.is_empty() {
-                    continue;
-                }
-                // +1 for the CpuBatch message itself.
-                self.router.shared.outstanding.fetch_add(1, Ordering::SeqCst);
-                self.router.pes[pe]
-                    .send(PeMsg::CpuBatch(batch))
-                    .expect("pe thread is down");
-            }
+            let pool = self.cpu_pool.as_mut().expect("cpu pool just spawned");
+            let (batch_id, chunks) = pool.submit(cpu);
+            self.cpu_batches.insert(
+                batch_id,
+                CpuBatchAcc {
+                    chunks_left: chunks,
+                    items: 0,
+                    max_secs: 0.0,
+                    sum_secs: 0.0,
+                },
+            );
         }
 
         let n = gpu.len();
@@ -532,6 +566,46 @@ impl Coord {
             .fetch_sub(info.items.len() as i64, Ordering::SeqCst);
     }
 
+    /// Scatter one CPU-pool chunk's results immediately (a slow sibling
+    /// chunk must not delay finished work), and fold its timing into the
+    /// batch accumulator; when the last chunk lands, record the batch
+    /// makespan with the hybrid scheduler (total items over the longest
+    /// chunk: the pool's true per-item rate).
+    fn on_cpu_chunk(
+        &mut self,
+        batch: u64,
+        items: usize,
+        secs: f64,
+        results: Vec<(ChareId, WrResult)>,
+    ) {
+        let acc = self
+            .cpu_batches
+            .get_mut(&batch)
+            .expect("chunk for unknown cpu batch");
+        acc.chunks_left -= 1;
+        acc.items += items;
+        acc.max_secs = acc.max_secs.max(secs);
+        acc.sum_secs += secs;
+        let batch_done = acc.chunks_left == 0;
+
+        self.report.cpu_requests += results.len() as u64;
+        let n = results.len() as i64;
+        for (chare, res) in results {
+            self.router.send_msg(chare, Msg::new(METHOD_RESULT, res));
+        }
+        // Release this chunk's work-request holds, then the chunk hold.
+        self.router
+            .shared
+            .outstanding
+            .fetch_sub(n + 1, Ordering::SeqCst);
+
+        if batch_done {
+            let acc = self.cpu_batches.remove(&batch).unwrap();
+            self.hybrid.record_cpu(acc.items, acc.max_secs);
+            self.report.cpu_task_wall += acc.sum_secs;
+        }
+    }
+
     fn on_cpu_done(
         &mut self,
         items: usize,
@@ -566,6 +640,10 @@ impl Coord {
                     self.on_cpu_done(items, secs, results);
                     self.poll_combiners();
                 }
+                Ok(CoordMsg::CpuChunk { batch, items, secs, results }) => {
+                    self.on_cpu_chunk(batch, items, secs, results);
+                    self.poll_combiners();
+                }
                 Ok(CoordMsg::InvalidateAll) => {
                     self.table.invalidate_all();
                     self.node_table.invalidate_all();
@@ -578,14 +656,17 @@ impl Coord {
             }
         }
         self.drain_all();
-        // Wait for in-flight launches so their holds are released and the
-        // final stats are complete.
+        // Wait for in-flight launches and CPU-pool batches so their holds
+        // are released and the final stats are complete.
         // (Completions still arrive on rx via the forwarder.)
-        while !self.launches.is_empty() {
+        while !self.launches.is_empty() || !self.cpu_batches.is_empty() {
             match rx.recv_timeout(Duration::from_secs(30)) {
                 Ok(CoordMsg::GpuDone(c)) => self.on_gpu_done(c),
                 Ok(CoordMsg::CpuDone { items, secs, results }) => {
                     self.on_cpu_done(items, secs, results)
+                }
+                Ok(CoordMsg::CpuChunk { batch, items, secs, results }) => {
+                    self.on_cpu_chunk(batch, items, secs, results)
                 }
                 Ok(_) => {}
                 Err(_) => break,

@@ -23,8 +23,7 @@ use crate::util::timeline::Timeline;
 
 use super::chare::{Chare, ChareId, Ctx, Effect, Msg, WorkDraft};
 use super::combiner::Pending;
-use super::cpu_kernels::{cpu_ewald, cpu_gravity, cpu_md_interact};
-use super::work_request::{WrPayload, WrResult};
+use super::work_request::WrResult;
 
 /// Messages a PE thread consumes.
 pub(crate) enum PeMsg {
@@ -43,6 +42,14 @@ pub(crate) enum CoordMsg {
     GpuDone(anyhow::Result<crate::runtime::executor::Completion>),
     /// A PE finished a CPU batch: measured seconds, data items, results.
     CpuDone { items: usize, secs: f64, results: Vec<(ChareId, WrResult)> },
+    /// A CPU-pool worker finished one chunk of hybrid batch `batch`; the
+    /// coordinator folds the chunks back into one hybrid observation.
+    CpuChunk {
+        batch: u64,
+        items: usize,
+        secs: f64,
+        results: Vec<(ChareId, WrResult)>,
+    },
     /// Invalidate all device-resident buffers (iteration boundary).
     InvalidateAll,
     Stop,
@@ -153,31 +160,8 @@ pub(crate) fn pe_loop(
             }
             PeMsg::CpuBatch(batch) => {
                 let t0 = Instant::now();
-                let mut items = 0usize;
-                let mut results = Vec::with_capacity(batch.len());
-                for p in &batch {
-                    items += p.wr.data_items;
-                    let out = match &p.wr.payload {
-                        WrPayload::MdPair { pa, pb } => {
-                            cpu_md_interact(pa, pb, exec_cfg.md_params)
-                        }
-                        WrPayload::Force { parts, inters, .. } => {
-                            cpu_gravity(parts, inters, exec_cfg.eps2)
-                        }
-                        WrPayload::Ewald { parts } => {
-                            cpu_ewald(parts, &exec_cfg.ktab)
-                        }
-                    };
-                    results.push((
-                        p.wr.chare,
-                        WrResult {
-                            wr_id: p.wr.id,
-                            tag: p.wr.tag,
-                            kind: p.wr.kind,
-                            out,
-                        },
-                    ));
-                }
+                let (items, results) =
+                    super::cpu_pool::execute_pending(&batch, &exec_cfg);
                 let secs = t0.elapsed().as_secs_f64();
                 router.shared.timeline.record(
                     crate::util::timeline::SpanKind::CpuTask,
@@ -282,7 +266,9 @@ mod tests {
 
     #[test]
     fn cpu_batch_computes_and_reports() {
-        use crate::coordinator::work_request::{WorkKind, WorkRequest};
+        use crate::coordinator::work_request::{
+            WorkKind, WorkRequest, WrPayload,
+        };
         let (router, crx, mut prx) = harness(1);
         let rx = prx.pop().unwrap();
         let batch = vec![Pending {

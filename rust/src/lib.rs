@@ -9,9 +9,12 @@
 //!   with sorted-index coalescing, and dynamic CPU/GPU hybrid scheduling.
 //! - **Layer 2/1** (`python/compile`): JAX graphs calling Pallas kernels,
 //!   AOT-lowered to HLO text once at build time (`make artifacts`).
-//! - **Runtime bridge** (`runtime`): PJRT CPU client executing the AOT
-//!   artifacts (the simulated GPU device) plus the analytic Kepler K20
-//!   occupancy/cost model.
+//! - **Runtime bridge** (`runtime`): the simulated GPU device -- a native
+//!   sim backend by default, or the PJRT CPU client executing the AOT
+//!   artifacts with `--features pjrt` -- plus the analytic Kepler K20
+//!   occupancy/cost model. The launch hot path stages through a
+//!   zero-allocation arena and pipelines staging against execution
+//!   (`runtime::staging`, PERF.md).
 //!
 //! Applications (`apps`): a ChaNGa-style Barnes-Hut N-Body simulation and
 //! a 2D molecular dynamics mini-app -- the paper's two evaluation

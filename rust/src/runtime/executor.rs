@@ -1,13 +1,23 @@
-//! The GPU service: owns the PJRT engine and executes combined kernels.
+//! The GPU service: owns the engine and executes combined kernels.
 //!
 //! In G-Charm the runtime transfers data to the GPU, invokes kernels,
 //! monitors completion, and invokes callbacks (paper section 2.2). Here a
-//! dedicated *GPU service thread* owns the `Engine`; processing elements
-//! submit `LaunchSpec`s over a channel and receive `Completion`s back.
-//! A synchronous `Executor` is also exposed for examples, tests, and the
-//! figure benches.
+//! *GPU service* owns the engine; processing elements submit `LaunchSpec`s
+//! over a channel and receive `Completion`s back. A synchronous `Executor`
+//! is also exposed for examples, tests, and the figure benches.
 //!
-//! Responsibilities:
+//! Launch hot path (see `runtime::staging` and PERF.md):
+//!
+//! - padded argument buffers come from a reusable `StagingArena` instead of
+//!   per-chunk allocation + zero-fill; constant args are built once and
+//!   shared; variant selection is memoized per `(kernel, n, pool)`;
+//! - split launches run a two-stage pipeline: chunk *k+1* is padded by a
+//!   stager thread while chunk *k* executes;
+//! - `GpuService` splits staging and execution onto two threads, so the
+//!   next queued `LaunchSpec` is staged while the engine is busy with the
+//!   current one.
+//!
+//! Responsibilities preserved from the original synchronous design:
 //!   - select the smallest AOT variant that fits a combined launch and
 //!     zero/inert-pad the payload to its static shape,
 //!   - split launches that exceed the largest compiled batch,
@@ -15,7 +25,9 @@
 //!     (transfer + kernel) for the figure benches.
 
 use std::path::Path;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender,
+};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -24,11 +36,17 @@ use anyhow::{Context, Result};
 use super::device_sim::{
     CoalescingClass, DeviceModel, KernelResources, ModeledCost,
 };
+use super::manifest::Manifest;
 use super::pjrt::{Engine, HostArg};
 use super::shapes::{
-    INTERACTIONS, INTER_W, KTABLE, KTAB_W, MD_PAD_POS, MD_W, OUT_W,
-    PARTICLE_W, PARTS_PER_BUCKET, PARTS_PER_PATCH,
+    INTERACTIONS, KTABLE, KTAB_W, MD_W, OUT_W, PARTS_PER_BUCKET,
+    PARTS_PER_PATCH,
 };
+use super::staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};
+
+/// Staged-chunk queue depth: double buffering, bounded so the stager can
+/// run at most this far ahead of the engine.
+const PIPELINE_DEPTH: usize = 2;
 
 /// Physics constants baked per run (not per launch).
 #[derive(Debug, Clone)]
@@ -127,6 +145,11 @@ impl Payload {
             _ => PARTS_PER_BUCKET,
         }
     }
+
+    /// Output floats per combined slot.
+    pub fn out_slot_len(&self) -> usize {
+        self.out_rows_per_slot() * self.out_row_w()
+    }
 }
 
 /// One combined launch submitted to the GPU service.
@@ -150,43 +173,57 @@ pub struct Completion {
     /// (batch x rows_per_slot x out_w).
     pub out: Vec<f32>,
     pub batch: usize,
-    /// Measured wall-clock seconds of the PJRT execute call(s).
+    /// Measured wall-clock seconds of the engine execute call(s).
     pub wall: f64,
     /// Modeled-K20 cost (DESIGN.md section 2).
     pub modeled: ModeledCost,
 }
 
-/// Synchronous executor: pad, select variant, run, slice.
+/// Validate the artifact set and config against the canonical tile shapes
+/// (fail fast if the Python-side constants drifted).
+fn validate_setup(manifest: &Manifest, config: &ExecutorConfig) -> Result<()> {
+    let v = manifest
+        .select("gravity", 1, 0)
+        .context("no gravity variants in manifest")?;
+    anyhow::ensure!(
+        v.args[0].shape[1] == PARTS_PER_BUCKET
+            && v.args[1].shape[1] == INTERACTIONS,
+        "artifact shapes {:?} disagree with runtime::shapes",
+        v.args[0].shape
+    );
+    anyhow::ensure!(
+        config.ktab.len() == KTABLE * KTAB_W,
+        "ktab must be {} floats",
+        KTABLE * KTAB_W
+    );
+    Ok(())
+}
+
+/// Synchronous executor: stage through the arena, select variant, run,
+/// slice. Split launches pipeline staging against execution.
 pub struct Executor {
     engine: Engine,
+    /// Own copy of the manifest so staging can borrow it while the engine
+    /// is mutably borrowed by an execute call on another pipeline stage.
+    manifest: Manifest,
     model: DeviceModel,
     config: ExecutorConfig,
+    arena: StagingArena,
     launches: u64,
 }
 
 impl Executor {
     pub fn new(artifacts: &Path, config: ExecutorConfig) -> Result<Executor> {
-        let engine = Engine::load(artifacts)?;
-        // Fail fast if the Python-side tile constants drifted.
-        let v = engine
-            .manifest()
-            .select("gravity", 1, 0)
-            .context("no gravity variants in manifest")?;
-        anyhow::ensure!(
-            v.args[0].shape[1] == PARTS_PER_BUCKET
-                && v.args[1].shape[1] == INTERACTIONS,
-            "artifact shapes {:?} disagree with runtime::shapes",
-            v.args[0].shape
-        );
-        anyhow::ensure!(
-            config.ktab.len() == KTABLE * KTAB_W,
-            "ktab must be {} floats",
-            KTABLE * KTAB_W
-        );
+        let (manifest, real) = Manifest::load_or_synthetic(artifacts)?;
+        validate_setup(&manifest, &config)?;
+        let engine = Engine::with_manifest(manifest.clone(), real)?;
+        let arena = StagingArena::new(&config);
         Ok(Executor {
             engine,
+            manifest,
             model: DeviceModel::kepler_k20(),
             config,
+            arena,
             launches: 0,
         })
     }
@@ -203,41 +240,31 @@ impl Executor {
         self.launches
     }
 
+    /// Staging-arena counters (reuse, padding, variant-memo hits).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
     /// Execute one combined launch synchronously.
     pub fn run(&mut self, spec: LaunchSpec) -> Result<Completion> {
         let batch = spec.payload.batch();
         anyhow::ensure!(batch > 0, "empty launch");
         let kernel = spec.payload.kernel_name();
         let max_batch = self
-            .engine
-            .manifest()
+            .manifest
             .max_batch(kernel)
             .with_context(|| format!("no variants for kernel {kernel}"))?;
+        let out_slot = spec.payload.out_slot_len();
 
-        let out_slot = spec.payload.out_rows_per_slot() * spec.payload.out_row_w();
-        let mut out = Vec::with_capacity(batch * out_slot);
-        let mut wall = 0.0;
-        let mut modeled_kernel = 0.0;
-
-        let mut start = 0;
-        while start < batch {
-            let n = (batch - start).min(max_batch);
-            let (name, args_owned) = self.pad_chunk(&spec.payload, start, n)?;
-            let args: Vec<HostArg> = args_owned.iter().map(OwnedArg::borrow).collect();
-            let t0 = Instant::now();
-            let full = self.engine.execute(&name, &args)?;
-            wall += t0.elapsed().as_secs_f64();
-            self.launches += 1;
-            out.extend_from_slice(&full[..n * out_slot]);
-
-            modeled_kernel += self.model.kernel_time(
-                &spec.payload.resources(),
-                n as u64,
-                spec.payload.interactions_per_block(),
-                spec.pattern,
-            );
-            start += n;
-        }
+        let (out, wall, modeled_kernel) = if batch <= max_batch {
+            self.run_single(&spec, batch, out_slot)?
+        } else {
+            self.run_pipelined(&spec, batch, max_batch, out_slot)?
+        };
 
         let modeled = ModeledCost {
             transfer: self.model.transfer_time(spec.transfer_bytes),
@@ -246,153 +273,193 @@ impl Executor {
         Ok(Completion { id: spec.id, out, batch, wall, modeled })
     }
 
-    /// Build padded argument buffers for slots [start, start+n).
-    fn pad_chunk(
-        &self,
-        payload: &Payload,
-        start: usize,
-        n: usize,
-    ) -> Result<(String, Vec<OwnedArg>)> {
-        let manifest = self.engine.manifest();
-        match payload {
-            Payload::Gravity { parts, inters, .. } => {
-                let v = manifest.select("gravity", n, 0).unwrap();
-                let b = v.batch;
-                let mut p = vec![0.0f32; b * PARTS_PER_BUCKET * PARTICLE_W];
-                let mut i = vec![0.0f32; b * INTERACTIONS * INTER_W];
-                copy_slots(&mut p, parts, start, n, PARTS_PER_BUCKET * PARTICLE_W);
-                copy_slots(&mut i, inters, start, n, INTERACTIONS * INTER_W);
-                Ok((
-                    v.name.clone(),
-                    vec![
-                        OwnedArg::F32(p),
-                        OwnedArg::F32(i),
-                        OwnedArg::F32(vec![self.config.eps2]),
-                    ],
-                ))
+    /// Unsplit launch: stage and execute inline (no pipeline threads).
+    fn run_single(
+        &mut self,
+        spec: &LaunchSpec,
+        batch: usize,
+        out_slot: usize,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        let staged = self.arena.stage_chunk(
+            &self.manifest,
+            &spec.payload,
+            0,
+            batch,
+            &mut None,
+        )?;
+        let args: Vec<HostArg> =
+            staged.args.iter().map(ArenaArg::as_host_arg).collect();
+        let t0 = Instant::now();
+        let mut out = self.engine.execute(&staged.name, &args)?;
+        let wall = t0.elapsed().as_secs_f64();
+        drop(args);
+        self.launches += 1;
+        self.arena.recycle(staged);
+
+        // Keep the engine's own buffer; just drop the padded tail.
+        out.truncate(batch * out_slot);
+        let modeled_kernel = self.model.kernel_time(
+            &spec.payload.resources(),
+            batch as u64,
+            spec.payload.interactions_per_block(),
+            spec.pattern,
+        );
+        Ok((out, wall, modeled_kernel))
+    }
+
+    /// Split launch: a scoped stager thread pads chunk k+1 (and recycles
+    /// executed buffers) while the engine executes chunk k.
+    ///
+    /// The stager thread is spawned per split launch. That lifecycle cost
+    /// (~tens of us) is paid only when a launch exceeds `max_batch` and
+    /// is dwarfed by the multi-chunk execute time it overlaps; sustained
+    /// launch streams should go through `GpuService`, whose stager thread
+    /// is persistent.
+    fn run_pipelined(
+        &mut self,
+        spec: &LaunchSpec,
+        batch: usize,
+        max_batch: usize,
+        out_slot: usize,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        let Executor { engine, manifest, model, arena, launches, .. } = self;
+        let manifest: &Manifest = manifest;
+        let payload = &spec.payload;
+        let resources = payload.resources();
+        let ipb = payload.interactions_per_block();
+        let pattern = spec.pattern;
+
+        let mut out = Vec::with_capacity(batch * out_slot);
+        let mut wall = 0.0f64;
+        let mut modeled_kernel = 0.0f64;
+
+        std::thread::scope(|s| -> Result<()> {
+            // The receiving/sending ends this body owns are dropped on
+            // every exit path (including `?` on a failed execute), which
+            // unblocks the stager before the scope joins it.
+            let (staged_tx, staged_rx) =
+                sync_channel::<Result<StagedChunk>>(PIPELINE_DEPTH);
+            let (ret_tx, ret_rx) = channel::<StagedChunk>();
+            s.spawn(move || {
+                let mut pool_cache = None;
+                let mut start = 0usize;
+                while start < batch {
+                    let n = (batch - start).min(max_batch);
+                    while let Ok(used) = ret_rx.try_recv() {
+                        arena.recycle(used);
+                    }
+                    let staged = arena.stage_chunk(
+                        manifest,
+                        payload,
+                        start,
+                        n,
+                        &mut pool_cache,
+                    );
+                    let failed = staged.is_err();
+                    if staged_tx.send(staged).is_err() || failed {
+                        break;
+                    }
+                    start += n;
+                }
+                // Keep recycling executed chunks so their buffers are
+                // pooled for the next launch.
+                while let Ok(used) = ret_rx.recv() {
+                    arena.recycle(used);
+                }
+            });
+
+            let mut start = 0usize;
+            while start < batch {
+                let n = (batch - start).min(max_batch);
+                let staged = staged_rx.recv().map_err(|_| {
+                    anyhow::anyhow!("staging pipeline closed early")
+                })??;
+                debug_assert_eq!(staged.n, n);
+                let args: Vec<HostArg> =
+                    staged.args.iter().map(ArenaArg::as_host_arg).collect();
+                let t0 = Instant::now();
+                let full = engine.execute(&staged.name, &args)?;
+                wall += t0.elapsed().as_secs_f64();
+                drop(args);
+                *launches += 1;
+                out.extend_from_slice(&full[..n * out_slot]);
+                modeled_kernel +=
+                    model.kernel_time(&resources, n as u64, ipb, pattern);
+                let _ = ret_tx.send(staged);
+                start += n;
             }
-            Payload::GravityGather { pool, idx, inters, .. } => {
-                let rows = pool.len() / PARTICLE_W;
-                let v = manifest
-                    .select("gravity_gather", n, rows)
-                    .context("no gather variant fits pool")?;
-                anyhow::ensure!(
-                    v.pool >= rows,
-                    "pool of {rows} rows exceeds largest gather variant ({})",
-                    v.pool
-                );
-                let b = v.batch;
-                // zero-copy when the mirror exactly matches the variant
-                let pool_arg = if rows == v.pool {
-                    OwnedArg::SharedF32(pool.clone())
-                } else {
-                    let mut pl = vec![0.0f32; v.pool * PARTICLE_W];
-                    pl[..pool.len()].copy_from_slice(pool);
-                    OwnedArg::F32(pl)
-                };
-                let mut ix = vec![0i32; b * PARTS_PER_BUCKET];
-                copy_slots(&mut ix, idx, start, n, PARTS_PER_BUCKET);
-                let mut it = vec![0.0f32; b * INTERACTIONS * INTER_W];
-                copy_slots(&mut it, inters, start, n, INTERACTIONS * INTER_W);
-                Ok((
-                    v.name.clone(),
-                    vec![
-                        pool_arg,
-                        OwnedArg::I32(ix),
-                        OwnedArg::F32(it),
-                        OwnedArg::F32(vec![self.config.eps2]),
-                    ],
-                ))
-            }
-            Payload::Ewald { parts, .. } => {
-                let v = manifest.select("ewald", n, 0).unwrap();
-                let b = v.batch;
-                let mut p = vec![0.0f32; b * PARTS_PER_BUCKET * PARTICLE_W];
-                copy_slots(&mut p, parts, start, n, PARTS_PER_BUCKET * PARTICLE_W);
-                Ok((
-                    v.name.clone(),
-                    vec![OwnedArg::F32(p), OwnedArg::F32(self.config.ktab.clone())],
-                ))
-            }
-            Payload::MdForce { pa, pb, .. } => {
-                let v = manifest.select("md_force", n, 0).unwrap();
-                let b = v.batch;
-                let slot = PARTS_PER_PATCH * MD_W;
-                let mut a = vec![MD_PAD_POS; b * slot];
-                let mut bb = vec![MD_PAD_POS; b * slot];
-                copy_slots(&mut a, pa, start, n, slot);
-                copy_slots(&mut bb, pb, start, n, slot);
-                Ok((
-                    v.name.clone(),
-                    vec![
-                        OwnedArg::F32(a),
-                        OwnedArg::F32(bb),
-                        OwnedArg::F32(self.config.md_params.to_vec()),
-                    ],
-                ))
-            }
+            drop(ret_tx); // ends the stager's recycle drain
+            Ok(())
+        })?;
+        Ok((out, wall, modeled_kernel))
+    }
+}
+
+/// Per-launch constants a staged chunk carries to the engine thread.
+#[derive(Debug, Clone, Copy)]
+struct LaunchMeta {
+    id: u64,
+    batch: usize,
+    transfer_bytes: u64,
+    pattern: CoalescingClass,
+    resources: KernelResources,
+    interactions_per_block: u64,
+    out_slot: usize,
+}
+
+impl LaunchMeta {
+    fn of(spec: &LaunchSpec) -> LaunchMeta {
+        LaunchMeta {
+            id: spec.id,
+            batch: spec.payload.batch(),
+            transfer_bytes: spec.transfer_bytes,
+            pattern: spec.pattern,
+            resources: spec.payload.resources(),
+            interactions_per_block: spec.payload.interactions_per_block(),
+            out_slot: spec.payload.out_slot_len(),
         }
     }
 }
 
-/// Owned argument buffer (borrowed as HostArg at execute time).
-enum OwnedArg {
-    F32(Vec<f32>),
-    SharedF32(std::sync::Arc<Vec<f32>>),
-    I32(Vec<i32>),
+/// Stager -> engine-thread messages.
+enum ChunkMsg {
+    Chunk { meta: LaunchMeta, staged: StagedChunk, last: bool },
+    Abort { id: u64, error: anyhow::Error },
 }
 
-impl OwnedArg {
-    fn borrow(&self) -> HostArg<'_> {
-        match self {
-            OwnedArg::F32(v) => HostArg::F32(v),
-            OwnedArg::SharedF32(v) => HostArg::F32(v),
-            OwnedArg::I32(v) => HostArg::I32(v),
-        }
-    }
-}
-
-fn copy_slots<T: Copy>(
-    dst: &mut [T],
-    src: &[T],
-    start_slot: usize,
-    n_slots: usize,
-    slot_len: usize,
-) {
-    let src_off = start_slot * slot_len;
-    dst[..n_slots * slot_len]
-        .copy_from_slice(&src[src_off..src_off + n_slots * slot_len]);
-}
-
-/// Handle to the GPU service thread.
+/// Handle to the pipelined GPU service: a stager thread padding launches
+/// through the arena, feeding an engine thread over a bounded queue.
 pub struct GpuService {
     tx: Sender<LaunchSpec>,
-    handle: Option<JoinHandle<Result<()>>>,
+    stager: Option<JoinHandle<()>>,
+    engine: Option<JoinHandle<Result<()>>>,
 }
 
 impl GpuService {
-    /// Spawn the service thread. Completions (and errors) are delivered to
-    /// `done`.
+    /// Spawn the service threads. Completions (and errors) are delivered
+    /// to `done` in submission order.
     pub fn spawn(
         artifacts: &Path,
         config: ExecutorConfig,
         done: Sender<Result<Completion>>,
     ) -> Result<GpuService> {
-        let (tx, rx): (Sender<LaunchSpec>, Receiver<LaunchSpec>) = channel();
-        let artifacts = artifacts.to_path_buf();
-        let handle = std::thread::Builder::new()
-            .name("gpu-service".into())
-            .spawn(move || -> Result<()> {
-                let mut exec = Executor::new(&artifacts, config)?;
-                while let Ok(spec) = rx.recv() {
-                    let res = exec.run(spec);
-                    if done.send(res).is_err() {
-                        break; // coordinator went away
-                    }
-                }
-                Ok(())
+        let (manifest, real) = Manifest::load_or_synthetic(artifacts)?;
+        validate_setup(&manifest, &config)?;
+
+        let (tx, rx) = channel::<LaunchSpec>();
+        let (chunk_tx, chunk_rx) = sync_channel::<ChunkMsg>(PIPELINE_DEPTH);
+        let (ret_tx, ret_rx) = channel::<StagedChunk>();
+
+        let stage_manifest = manifest.clone();
+        let stager = std::thread::Builder::new()
+            .name("gpu-stager".into())
+            .spawn(move || {
+                stager_loop(stage_manifest, config, rx, chunk_tx, ret_rx)
             })?;
-        Ok(GpuService { tx, handle: Some(handle) })
+        let engine = std::thread::Builder::new()
+            .name("gpu-service".into())
+            .spawn(move || engine_loop(manifest, real, chunk_rx, ret_tx, done))?;
+        Ok(GpuService { tx, stager: Some(stager), engine: Some(engine) })
     }
 
     /// Submit a launch; completion arrives on the `done` channel.
@@ -405,27 +472,193 @@ impl GpuService {
 
 impl Drop for GpuService {
     fn drop(&mut self) {
-        // Closing the sender ends the service loop.
+        // Closing the sender ends the stager, which closes the chunk
+        // queue, which ends the engine thread.
         let (dead_tx, _) = channel();
         self.tx = dead_tx;
-        if let Some(h) = self.handle.take() {
+        if let Some(h) = self.stager.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
             let _ = h.join();
         }
     }
 }
 
+/// Stager thread: pads queued launches chunk by chunk while the engine
+/// thread executes earlier ones; recycles executed buffers.
+fn stager_loop(
+    manifest: Manifest,
+    config: ExecutorConfig,
+    rx: Receiver<LaunchSpec>,
+    chunk_tx: SyncSender<ChunkMsg>,
+    ret_rx: Receiver<StagedChunk>,
+) {
+    let mut arena = StagingArena::new(&config);
+    'specs: while let Ok(spec) = rx.recv() {
+        let meta = LaunchMeta::of(&spec);
+        let abort = |e: anyhow::Error| ChunkMsg::Abort { id: meta.id, error: e };
+        if meta.batch == 0 {
+            if chunk_tx.send(abort(anyhow::anyhow!("empty launch"))).is_err() {
+                break 'specs;
+            }
+            continue 'specs;
+        }
+        let kernel = spec.payload.kernel_name();
+        let Some(max_batch) = manifest.max_batch(kernel) else {
+            let e = anyhow::anyhow!("no variants for kernel {kernel}");
+            if chunk_tx.send(abort(e)).is_err() {
+                break 'specs;
+            }
+            continue 'specs;
+        };
+        let mut pool_cache = None;
+        let mut start = 0usize;
+        while start < meta.batch {
+            let n = (meta.batch - start).min(max_batch);
+            while let Ok(used) = ret_rx.try_recv() {
+                arena.recycle(used);
+            }
+            match arena.stage_chunk(
+                &manifest,
+                &spec.payload,
+                start,
+                n,
+                &mut pool_cache,
+            ) {
+                Ok(staged) => {
+                    let last = start + n >= meta.batch;
+                    let msg = ChunkMsg::Chunk { meta, staged, last };
+                    if chunk_tx.send(msg).is_err() {
+                        break 'specs;
+                    }
+                }
+                Err(e) => {
+                    if chunk_tx.send(abort(e)).is_err() {
+                        break 'specs;
+                    }
+                    continue 'specs;
+                }
+            }
+            start += n;
+        }
+    }
+}
+
+/// Engine thread: executes staged chunks, assembles per-launch outputs and
+/// wall/modeled accounting, and emits completions.
+fn engine_loop(
+    manifest: Manifest,
+    artifacts_on_disk: bool,
+    chunk_rx: Receiver<ChunkMsg>,
+    ret_tx: Sender<StagedChunk>,
+    done: Sender<Result<Completion>>,
+) -> Result<()> {
+    struct InFlight {
+        meta: LaunchMeta,
+        out: Vec<f32>,
+        wall: f64,
+        modeled_kernel: f64,
+    }
+
+    let mut engine = Engine::with_manifest(manifest, artifacts_on_disk)?;
+    let model = DeviceModel::kepler_k20();
+    let mut cur: Option<InFlight> = None;
+    // Launch whose remaining chunks are dropped after a failed execute.
+    let mut skip: Option<u64> = None;
+
+    while let Ok(msg) = chunk_rx.recv() {
+        match msg {
+            ChunkMsg::Chunk { meta, staged, last } => {
+                if skip == Some(meta.id) {
+                    let _ = ret_tx.send(staged);
+                    if last {
+                        skip = None;
+                    }
+                    continue;
+                }
+                // A chunk of a new launch: any stale skip (its launch was
+                // abandoned by the stager) is over.
+                skip = None;
+                if cur.is_none() {
+                    cur = Some(InFlight {
+                        meta,
+                        out: Vec::with_capacity(meta.batch * meta.out_slot),
+                        wall: 0.0,
+                        modeled_kernel: 0.0,
+                    });
+                }
+                let args: Vec<HostArg> =
+                    staged.args.iter().map(ArenaArg::as_host_arg).collect();
+                let t0 = Instant::now();
+                let res = engine.execute(&staged.name, &args);
+                let dt = t0.elapsed().as_secs_f64();
+                drop(args);
+                let n = staged.n;
+                let _ = ret_tx.send(staged);
+                match res {
+                    Ok(full) => {
+                        let st = cur.as_mut().expect("in-flight launch");
+                        debug_assert_eq!(st.meta.id, meta.id);
+                        st.wall += dt;
+                        st.out.extend_from_slice(&full[..n * meta.out_slot]);
+                        st.modeled_kernel += model.kernel_time(
+                            &meta.resources,
+                            n as u64,
+                            meta.interactions_per_block,
+                            meta.pattern,
+                        );
+                        if last {
+                            let st = cur.take().expect("in-flight launch");
+                            let completion = Completion {
+                                id: st.meta.id,
+                                out: st.out,
+                                batch: st.meta.batch,
+                                wall: st.wall,
+                                modeled: ModeledCost {
+                                    transfer: model
+                                        .transfer_time(st.meta.transfer_bytes),
+                                    kernel: st.modeled_kernel,
+                                },
+                            };
+                            if done.send(Ok(completion)).is_err() {
+                                break; // coordinator went away
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        cur = None;
+                        if !last {
+                            skip = Some(meta.id);
+                        }
+                        if done.send(Err(e)).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            ChunkMsg::Abort { id, error } => {
+                if skip == Some(id) {
+                    // This launch already reported an execute error; the
+                    // stager abandoning it is not a second failure.
+                    skip = None;
+                    continue;
+                }
+                if cur.as_ref().map(|c| c.meta.id) == Some(id) {
+                    cur = None;
+                }
+                if done.send(Err(error)).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn copy_slots_copies_window() {
-        let src: Vec<i32> = (0..12).collect();
-        let mut dst = vec![0i32; 8];
-        copy_slots(&mut dst, &src, 1, 2, 3); // slots 1..3 of width 3
-        assert_eq!(&dst[..6], &[3, 4, 5, 6, 7, 8]);
-        assert_eq!(&dst[6..], &[0, 0]);
-    }
 
     #[test]
     fn payload_accessors() {
@@ -437,5 +670,60 @@ mod tests {
         assert_eq!(m.kernel_name(), "md_force");
         assert_eq!(m.out_row_w(), MD_W);
         assert_eq!(m.out_rows_per_slot(), PARTS_PER_PATCH);
+        assert_eq!(m.out_slot_len(), PARTS_PER_PATCH * MD_W);
+    }
+
+    #[test]
+    fn validate_setup_rejects_bad_ktab() {
+        let m = Manifest::synthetic(Path::new("/tmp/none"));
+        let bad = ExecutorConfig { ktab: vec![0.0; 3], ..Default::default() };
+        assert!(validate_setup(&m, &bad).is_err());
+        assert!(validate_setup(&m, &ExecutorConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn split_launch_reuses_arena_buffers() {
+        let mut ex = Executor::new(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            ExecutorConfig::default(),
+        )
+        .unwrap();
+        let batch = 300; // > max gravity batch (128): 128 + 128 + 44
+        let spec = |id| LaunchSpec {
+            id,
+            payload: Payload::Gravity {
+                parts: vec![0.0; batch * PARTS_PER_BUCKET * 4],
+                inters: vec![0.0; batch * INTERACTIONS * 4],
+                batch,
+            },
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        };
+        let c = ex.run(spec(1)).unwrap();
+        assert_eq!(c.batch, batch);
+        assert_eq!(ex.launches(), 3);
+
+        // The pool grows to the pipeline's high-water mark (at most a few
+        // buffer sets per variant, regardless of launch count), then
+        // every further launch is allocation-free. Warm for a few
+        // launches, then assert the plateau.
+        for id in 2..6 {
+            let ci = ex.run(spec(id)).unwrap();
+            assert_eq!(ci.out.len(), c.out.len());
+        }
+        let warm = ex.arena_stats();
+        for id in 6..10 {
+            ex.run(spec(id)).unwrap();
+        }
+        let steady = ex.arena_stats();
+        assert_eq!(
+            steady.buffer_allocs, warm.buffer_allocs,
+            "steady-state launches must not allocate"
+        );
+        assert!(steady.buffer_reuses > warm.buffer_reuses);
+        // variant selection memoized across chunks and launches:
+        // only (gravity, 128) and (gravity, 44) ever hit the manifest
+        assert_eq!(steady.variant_lookups, 2);
+        assert!(steady.variant_hits >= 16);
     }
 }

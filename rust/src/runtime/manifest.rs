@@ -65,6 +65,97 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Load real artifacts if `<dir>/manifest.json` exists, otherwise fall
+    /// back to the built-in synthetic ladder (served by the sim backend).
+    /// The bool reports whether real artifacts back the manifest.
+    pub fn load_or_synthetic(dir: &Path) -> Result<(Manifest, bool)> {
+        if dir.join("manifest.json").exists() {
+            Ok((Self::load(dir)?, true))
+        } else {
+            Ok((Self::synthetic(dir), false))
+        }
+    }
+
+    /// Built-in variant ladder mirroring what `python/compile/aot.py`
+    /// emits, for environments without the AOT artifacts. The referenced
+    /// HLO files do not exist; only the sim backend may execute these.
+    pub fn synthetic(dir: &Path) -> Manifest {
+        use crate::runtime::shapes::{
+            INTERACTIONS, INTER_W, KTABLE, KTAB_W, MD_W, PARTICLE_W,
+            PARTS_PER_BUCKET, PARTS_PER_PATCH,
+        };
+        const BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+        const GATHER_BATCHES: [usize; 3] = [16, 64, 128];
+        const POOLS: [usize; 7] =
+            [1024, 2048, 4096, 8192, 16_384, 32_768, 65_536];
+
+        let f32s = |shape: Vec<usize>| ArgSpec { shape, dtype: DType::F32 };
+        let i32s = |shape: Vec<usize>| ArgSpec { shape, dtype: DType::I32 };
+        let mut variants = Vec::new();
+        let mut push = |name: String, kernel: &str, batch, pool, args| {
+            variants.push(Variant {
+                path: dir.join(format!("{name}.hlo.txt")),
+                name,
+                args,
+                kernel: kernel.to_string(),
+                batch,
+                pool,
+            });
+        };
+
+        for b in BATCHES {
+            push(
+                format!("gravity_B{b}"),
+                "gravity",
+                b,
+                0,
+                vec![
+                    f32s(vec![b, PARTS_PER_BUCKET, PARTICLE_W]),
+                    f32s(vec![b, INTERACTIONS, INTER_W]),
+                    f32s(vec![1]),
+                ],
+            );
+            push(
+                format!("ewald_B{b}"),
+                "ewald",
+                b,
+                0,
+                vec![
+                    f32s(vec![b, PARTS_PER_BUCKET, PARTICLE_W]),
+                    f32s(vec![KTABLE, KTAB_W]),
+                ],
+            );
+            push(
+                format!("md_force_B{b}"),
+                "md_force",
+                b,
+                0,
+                vec![
+                    f32s(vec![b, PARTS_PER_PATCH, MD_W]),
+                    f32s(vec![b, PARTS_PER_PATCH, MD_W]),
+                    f32s(vec![3]),
+                ],
+            );
+        }
+        for b in GATHER_BATCHES {
+            for s in POOLS {
+                push(
+                    format!("gravity_gather_B{b}_S{s}"),
+                    "gravity_gather",
+                    b,
+                    s,
+                    vec![
+                        f32s(vec![s, PARTICLE_W]),
+                        i32s(vec![b, PARTS_PER_BUCKET]),
+                        f32s(vec![b, INTERACTIONS, INTER_W]),
+                        f32s(vec![1]),
+                    ],
+                );
+            }
+        }
+        Self::index(variants)
+    }
+
     /// Parse manifest text; artifact paths resolve relative to `dir`.
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
         let doc = Json::parse(text).context("parsing manifest.json")?;
@@ -130,6 +221,11 @@ impl Manifest {
             });
         }
 
+        Ok(Self::index(variants))
+    }
+
+    /// Build the per-kernel (batch, pool)-sorted lookup index.
+    fn index(variants: Vec<Variant>) -> Manifest {
         let mut by_kernel: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         for (i, v) in variants.iter().enumerate() {
             by_kernel.entry(v.kernel.clone()).or_default().push(i);
@@ -137,7 +233,7 @@ impl Manifest {
         for idx in by_kernel.values_mut() {
             idx.sort_by_key(|&i| (variants[i].batch, variants[i].pool));
         }
-        Ok(Manifest { variants, by_kernel })
+        Manifest { variants, by_kernel }
     }
 
     pub fn variants(&self) -> &[Variant] {
@@ -238,6 +334,26 @@ mod tests {
     fn rejects_bad_format() {
         let bad = r#"{"format": "protobuf", "entries": []}"#;
         assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn synthetic_ladder_serves_all_kernels() {
+        let m = Manifest::synthetic(Path::new("/tmp/none"));
+        assert_eq!(m.select("gravity", 104, 0).unwrap().batch, 128);
+        assert_eq!(m.max_batch("gravity"), Some(128));
+        assert!(m.select("ewald", 65, 0).is_some());
+        assert!(m.select("md_force", 10, 0).is_some());
+        let g = m.select("gravity_gather", 64, 16_384).unwrap();
+        assert!(g.pool >= 16_384);
+        assert_eq!(g.args[1].dtype, DType::I32);
+    }
+
+    #[test]
+    fn load_or_synthetic_falls_back_when_missing() {
+        let dir = Path::new("/tmp/gcharm-definitely-missing-artifacts");
+        let (m, real) = Manifest::load_or_synthetic(dir).unwrap();
+        assert!(!real);
+        assert!(!m.variants().is_empty());
     }
 
     #[test]

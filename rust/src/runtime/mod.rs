@@ -10,8 +10,10 @@ pub mod device_sim;
 pub mod executor;
 pub mod manifest;
 pub mod memory;
+pub mod native;
 pub mod pjrt;
 pub mod shapes;
+pub mod staging;
 
 pub use device_sim::{
     occupancy, CoalescingClass, DeviceModel, GpuSpec, KernelResources,
@@ -23,6 +25,7 @@ pub use executor::{
 pub use manifest::Manifest;
 pub use memory::{BufferId, DeviceMemory, Residency};
 pub use pjrt::{Engine, HostArg};
+pub use staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};
 
 use std::path::PathBuf;
 

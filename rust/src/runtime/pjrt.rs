@@ -1,17 +1,32 @@
-//! PJRT engine: loads AOT HLO-text artifacts and executes them on the CPU
-//! PJRT client (the simulated "GPU device" -- DESIGN.md section 2).
+//! Execution engine: native sim backend + optional PJRT backend.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`. Variants
-//! are compiled lazily on first launch and cached for the lifetime of the
-//! engine (compilation is the expensive step; execution is the hot path).
+//! The engine executes combined-kernel variants against one of two
+//! backends:
+//!
+//! - **Sim** (default): a native interpreter of the four kernel families
+//!   (`runtime::native`), using the same f32 arithmetic and masking rules
+//!   as the Pallas kernels. It serves the synthetic manifest when the AOT
+//!   artifacts are absent, so the full stack runs hermetically.
+//! - **Pjrt** (`--features pjrt`): loads AOT HLO-text artifacts and
+//!   executes them on the CPU PJRT client (the simulated "GPU device" --
+//!   DESIGN.md section 2). Pattern follows /opt/xla-example/load_hlo:
+//!   `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//!   `client.compile` -> `execute`. Variants compile lazily on first
+//!   launch and are cached (compilation is the expensive step; execution
+//!   is the hot path).
+//!
+//! Backend selection: PJRT is used when the feature is compiled in, real
+//! artifacts are on disk, and `GCHARM_ENGINE` is not set to `sim`;
+//! otherwise the sim backend serves every launch.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use super::manifest::{DType, Manifest, Variant};
+use super::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
+use super::shapes::{MD_W, OUT_W, PARTICLE_W};
 
 /// One host-side argument for a launch; must match the variant's ArgSpec.
 #[derive(Debug, Clone, Copy)]
@@ -38,22 +53,78 @@ impl HostArg<'_> {
             HostArg::I32(_) => DType::I32,
         }
     }
+
+    fn as_f32(&self) -> &[f32] {
+        match self {
+            HostArg::F32(s) => s,
+            HostArg::I32(_) => &[],
+        }
+    }
+
+    fn as_i32(&self) -> &[i32] {
+        match self {
+            HostArg::I32(s) => s,
+            HostArg::F32(_) => &[],
+        }
+    }
 }
 
-/// PJRT client + compiled-executable cache for the artifact set.
+enum Backend {
+    /// Native interpreter of the four kernel families.
+    Sim,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt_backend::PjrtBackend),
+}
+
+/// Variant-executing engine over a manifest (sim or PJRT backend).
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    backend: Backend,
+    /// Variant names prepared so far (PJRT: compiled executables).
+    compiled: HashSet<String>,
 }
 
 impl Engine {
-    /// Create a CPU-PJRT engine over the artifacts in `dir`.
+    /// Create an engine over the artifacts in `dir`; falls back to the
+    /// synthetic manifest + sim backend when no artifacts are present.
     pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
-        Ok(Engine { client, manifest, executables: HashMap::new() })
+        let (manifest, real) = Manifest::load_or_synthetic(dir)?;
+        Engine::with_manifest(manifest, real)
+    }
+
+    /// Build an engine from an already-loaded manifest. `artifacts_on_disk`
+    /// gates the PJRT backend (the sim backend never reads HLO files).
+    pub fn with_manifest(
+        manifest: Manifest,
+        artifacts_on_disk: bool,
+    ) -> Result<Engine> {
+        let force_sim = std::env::var("GCHARM_ENGINE")
+            .map(|v| v == "sim")
+            .unwrap_or(false);
+        #[cfg(feature = "pjrt")]
+        if artifacts_on_disk && !force_sim {
+            match pjrt_backend::PjrtBackend::new() {
+                Ok(b) => {
+                    return Ok(Engine {
+                        manifest,
+                        backend: Backend::Pjrt(b),
+                        compiled: HashSet::new(),
+                    })
+                }
+                Err(e) => {
+                    eprintln!(
+                        "gcharm: PJRT client unavailable ({e}); \
+                         falling back to the sim backend"
+                    );
+                }
+            }
+        }
+        let _ = (artifacts_on_disk, force_sim);
+        Ok(Engine {
+            manifest,
+            backend: Backend::Sim,
+            compiled: HashSet::new(),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -61,133 +132,365 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Sim => "sim-native".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.platform(),
+        }
     }
 
-    /// Compile (and cache) the named variant.
+    /// Prepare (PJRT: compile and cache) the named variant.
     pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
+        if self.compiled.contains(name) {
             return Ok(());
         }
-        let variant = self
-            .manifest
-            .variants()
-            .iter()
-            .find(|v| v.name == name)
-            .with_context(|| format!("unknown variant {name}"))?;
-        let proto = xla::HloModuleProto::from_text_file(&variant.path)
-            .map_err(|e| {
-                anyhow::anyhow!("loading {}: {e}", variant.path.display())
-            })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-        self.executables.insert(name.to_string(), exe);
+        match &mut self.backend {
+            Backend::Sim => {
+                self.manifest
+                    .variants()
+                    .iter()
+                    .find(|v| v.name == name)
+                    .with_context(|| format!("unknown variant {name}"))?;
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => {
+                let variant = self
+                    .manifest
+                    .variants()
+                    .iter()
+                    .find(|v| v.name == name)
+                    .with_context(|| format!("unknown variant {name}"))?;
+                b.compile(variant)?;
+            }
+        }
+        self.compiled.insert(name.to_string());
         Ok(())
     }
 
-    /// Number of variants compiled so far.
+    /// Number of variants prepared so far.
     pub fn compiled_count(&self) -> usize {
-        self.executables.len()
+        self.compiled.len()
     }
 
     /// Execute a variant with validated host arguments; returns the first
     /// (and only) output buffer as f32 (return_tuple=True convention).
     pub fn execute(&mut self, name: &str, args: &[HostArg]) -> Result<Vec<f32>> {
         self.ensure_compiled(name)?;
+        // Direct field borrow (not a &self helper) so the variant stays
+        // borrowed from `self.manifest` while `self.backend` is mutably
+        // borrowed below -- avoids deep-cloning the Variant per chunk.
         let variant = self
             .manifest
             .variants()
             .iter()
             .find(|v| v.name == name)
-            .unwrap()
-            .clone();
-        self.validate(&variant, args)?;
-
-        // Single-copy literal creation (perf: `vec1(..).reshape(..)` copies
-        // the payload twice; `create_from_shape_and_untyped_data` once --
-        // see EXPERIMENTS.md section Perf).
-        let literals = args
-            .iter()
-            .zip(&variant.args)
-            .map(|(arg, spec)| {
-                let (ty, bytes): (xla::ElementType, &[u8]) = match arg {
-                    HostArg::F32(data) => {
-                        (xla::ElementType::F32, bytes_of(data))
-                    }
-                    HostArg::I32(data) => {
-                        (xla::ElementType::S32, bytes_of(data))
-                    }
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    ty,
-                    &spec.shape,
-                    bytes,
-                )
-                .map_err(|e| anyhow::anyhow!("literal {name}: {e}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-
-        let exe = self.executables.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e}"))?
-            .to_tuple1()
-            .map_err(|e| anyhow::anyhow!("to_tuple1 {name}: {e}"))?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec {name}: {e}"))
-    }
-
-    fn validate(&self, variant: &Variant, args: &[HostArg]) -> Result<()> {
-        if args.len() != variant.args.len() {
-            bail!(
-                "{}: expected {} args, got {}",
-                variant.name,
-                variant.args.len(),
-                args.len()
-            );
+            .with_context(|| format!("unknown variant {name}"))?;
+        validate(variant, args)?;
+        match &mut self.backend {
+            Backend::Sim => sim_execute(variant, args),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.execute(variant, args),
         }
-        for (i, (arg, spec)) in args.iter().zip(&variant.args).enumerate() {
-            if arg.len() != spec.elements() {
-                bail!(
-                    "{} arg {i}: expected {} elements for shape {:?}, got {}",
-                    variant.name,
-                    spec.elements(),
-                    spec.shape,
-                    arg.len()
-                );
-            }
-            if arg.dtype() != spec.dtype {
-                bail!("{} arg {i}: dtype mismatch", variant.name);
-            }
-        }
-        Ok(())
     }
 }
 
-/// Reinterpret a typed slice as raw bytes (for literal creation).
-fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
-    // SAFETY: T is a plain Copy scalar (f32/i32); size and alignment of the
-    // byte view are trivially valid.
-    unsafe {
-        std::slice::from_raw_parts(
-            data.as_ptr() as *const u8,
-            std::mem::size_of_val(data),
-        )
+fn validate(variant: &Variant, args: &[HostArg]) -> Result<()> {
+    if args.len() != variant.args.len() {
+        bail!(
+            "{}: expected {} args, got {}",
+            variant.name,
+            variant.args.len(),
+            args.len()
+        );
+    }
+    for (i, (arg, spec)) in args.iter().zip(&variant.args).enumerate() {
+        if arg.len() != spec.elements() {
+            bail!(
+                "{} arg {i}: expected {} elements for shape {:?}, got {}",
+                variant.name,
+                spec.elements(),
+                spec.shape,
+                arg.len()
+            );
+        }
+        if arg.dtype() != spec.dtype {
+            bail!("{} arg {i}: dtype mismatch", variant.name);
+        }
+    }
+    Ok(())
+}
+
+/// Interpret one combined launch natively (the sim backend).
+fn sim_execute(variant: &Variant, args: &[HostArg]) -> Result<Vec<f32>> {
+    let b = variant.batch;
+    match variant.kernel.as_str() {
+        "gravity" => {
+            let parts = args[0].as_f32();
+            let inters = args[1].as_f32();
+            let eps2 = args[2].as_f32()[0];
+            let p_slot = parts.len() / b;
+            let i_slot = inters.len() / b;
+            let mut out = Vec::with_capacity(b * (p_slot / PARTICLE_W) * OUT_W);
+            for s in 0..b {
+                out.extend(cpu_gravity(
+                    &parts[s * p_slot..(s + 1) * p_slot],
+                    &inters[s * i_slot..(s + 1) * i_slot],
+                    eps2,
+                ));
+            }
+            Ok(out)
+        }
+        "gravity_gather" => {
+            let pool = args[0].as_f32();
+            let idx = args[1].as_i32();
+            let inters = args[2].as_f32();
+            let eps2 = args[3].as_f32()[0];
+            let rows = pool.len() / PARTICLE_W;
+            let p_slot = idx.len() / b; // particles per slot
+            let i_slot = inters.len() / b;
+            let mut parts = vec![0.0f32; p_slot * PARTICLE_W];
+            let mut out =
+                Vec::with_capacity(b * p_slot * OUT_W);
+            for s in 0..b {
+                for (j, &row) in idx[s * p_slot..(s + 1) * p_slot]
+                    .iter()
+                    .enumerate()
+                {
+                    let row = row as usize;
+                    anyhow::ensure!(
+                        row < rows,
+                        "{}: gather index {row} out of pool ({rows} rows)",
+                        variant.name
+                    );
+                    parts[j * PARTICLE_W..(j + 1) * PARTICLE_W]
+                        .copy_from_slice(
+                            &pool[row * PARTICLE_W..(row + 1) * PARTICLE_W],
+                        );
+                }
+                out.extend(cpu_gravity(
+                    &parts,
+                    &inters[s * i_slot..(s + 1) * i_slot],
+                    eps2,
+                ));
+            }
+            Ok(out)
+        }
+        "ewald" => {
+            let parts = args[0].as_f32();
+            let ktab = args[1].as_f32();
+            let p_slot = parts.len() / b;
+            let mut out = Vec::with_capacity(b * (p_slot / PARTICLE_W) * OUT_W);
+            for s in 0..b {
+                out.extend(cpu_ewald(
+                    &parts[s * p_slot..(s + 1) * p_slot],
+                    ktab,
+                ));
+            }
+            Ok(out)
+        }
+        "md_force" => {
+            let pa = args[0].as_f32();
+            let pb = args[1].as_f32();
+            let pr = args[2].as_f32();
+            let params = [pr[0], pr[1], pr[2]];
+            let slot = pa.len() / b;
+            let mut out = Vec::with_capacity(b * (slot / MD_W) * MD_W);
+            for s in 0..b {
+                out.extend(cpu_md_interact(
+                    &pa[s * slot..(s + 1) * slot],
+                    &pb[s * slot..(s + 1) * slot],
+                    params,
+                ));
+            }
+            Ok(out)
+        }
+        other => bail!("sim backend: unknown kernel family {other}"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    //! The real PJRT CPU client over AOT HLO-text artifacts.
+
+    use std::collections::HashMap;
+
+    use anyhow::Result;
+
+    use super::super::manifest::Variant;
+    use super::HostArg;
+
+    pub struct PjrtBackend {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl PjrtBackend {
+        pub fn new() -> Result<PjrtBackend> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
+            Ok(PjrtBackend { client, executables: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn compile(&mut self, variant: &Variant) -> Result<()> {
+            if self.executables.contains_key(&variant.name) {
+                return Ok(());
+            }
+            let proto = xla::HloModuleProto::from_text_file(&variant.path)
+                .map_err(|e| {
+                    anyhow::anyhow!("loading {}: {e}", variant.path.display())
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| {
+                anyhow::anyhow!("compiling {}: {e}", variant.name)
+            })?;
+            self.executables.insert(variant.name.clone(), exe);
+            Ok(())
+        }
+
+        pub fn execute(
+            &mut self,
+            variant: &Variant,
+            args: &[HostArg],
+        ) -> Result<Vec<f32>> {
+            self.compile(variant)?;
+            let name = &variant.name;
+            // Single-copy literal creation (perf: `vec1(..).reshape(..)`
+            // copies the payload twice; this path once -- see
+            // EXPERIMENTS.md section Perf).
+            let literals = args
+                .iter()
+                .zip(&variant.args)
+                .map(|(arg, spec)| {
+                    let (ty, bytes): (xla::ElementType, &[u8]) = match arg {
+                        HostArg::F32(data) => {
+                            (xla::ElementType::F32, bytes_of(data))
+                        }
+                        HostArg::I32(data) => {
+                            (xla::ElementType::S32, bytes_of(data))
+                        }
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        ty,
+                        &spec.shape,
+                        bytes,
+                    )
+                    .map_err(|e| anyhow::anyhow!("literal {name}: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+
+            let exe = self.executables.get(name.as_str()).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal {name}: {e}"))?
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("to_tuple1 {name}: {e}"))?;
+            out.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec {name}: {e}"))
+        }
+    }
+
+    /// Reinterpret a typed slice as raw bytes (for literal creation).
+    fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+        // SAFETY: T is a plain Copy scalar (f32/i32); size and alignment
+        // of the byte view are trivially valid.
+        unsafe {
+            std::slice::from_raw_parts(
+                data.as_ptr() as *const u8,
+                std::mem::size_of_val(data),
+            )
+        }
     }
 }
 
 impl std::fmt::Debug for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Engine")
-            .field("platform", &self.client.platform_name())
+            .field("platform", &self.platform())
             .field("variants", &self.manifest.variants().len())
-            .field("compiled", &self.executables.len())
+            .field("compiled", &self.compiled.len())
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::shapes::{INTERACTIONS, INTER_W, PARTS_PER_BUCKET};
+
+    fn sim_engine() -> Engine {
+        let m = Manifest::synthetic(Path::new("/tmp/none"));
+        Engine::with_manifest(m, false).unwrap()
+    }
+
+    #[test]
+    fn sim_gravity_matches_native_kernel() {
+        let mut e = sim_engine();
+        let b = 2;
+        let mut parts = vec![0.0f32; b * PARTS_PER_BUCKET * PARTICLE_W];
+        let mut inters = vec![0.0f32; b * INTERACTIONS * INTER_W];
+        parts[3] = 1.0; // slot 0 particle 0: mass 1 at origin
+        inters[0] = 2.0; // slot 0 interaction 0: mass 3 at (2,0,0)
+        inters[3] = 3.0;
+        let out = e
+            .execute(
+                "gravity_B2",
+                &[
+                    HostArg::F32(&parts),
+                    HostArg::F32(&inters),
+                    HostArg::F32(&[0.01]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), b * PARTS_PER_BUCKET * OUT_W);
+        let native = cpu_gravity(
+            &parts[..PARTS_PER_BUCKET * PARTICLE_W],
+            &inters[..INTERACTIONS * INTER_W],
+            0.01,
+        );
+        assert_eq!(&out[..PARTS_PER_BUCKET * OUT_W], &native[..]);
+        // slot 1 is all padding: zero output
+        assert!(out[PARTS_PER_BUCKET * OUT_W..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sim_rejects_shape_mismatch() {
+        let mut e = sim_engine();
+        let r = e.execute("gravity_B1", &[HostArg::F32(&[0.0])]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sim_gather_rejects_out_of_pool_index() {
+        let mut e = sim_engine();
+        let pool = vec![0.0f32; 1024 * PARTICLE_W];
+        let idx = vec![5000i32; 16 * PARTS_PER_BUCKET];
+        let inters = vec![0.0f32; 16 * INTERACTIONS * INTER_W];
+        let r = e.execute(
+            "gravity_gather_B16_S1024",
+            &[
+                HostArg::F32(&pool),
+                HostArg::I32(&idx),
+                HostArg::F32(&inters),
+                HostArg::F32(&[0.01]),
+            ],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn compiled_count_tracks_prepared_variants() {
+        let mut e = sim_engine();
+        assert_eq!(e.compiled_count(), 0);
+        e.ensure_compiled("ewald_B1").unwrap();
+        e.ensure_compiled("ewald_B1").unwrap();
+        assert_eq!(e.compiled_count(), 1);
+        assert!(e.ensure_compiled("nope").is_err());
     }
 }

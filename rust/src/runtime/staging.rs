@@ -1,0 +1,539 @@
+//! Zero-allocation staging arena for padded launch arguments.
+//!
+//! The launch hot path used to re-allocate and zero-fill every padded
+//! argument buffer per chunk, clone the constant args (`eps2`, `ktab`,
+//! `md_params`) per launch, and redo variant selection (`manifest.select`
+//! plus a `String` clone of the variant name) for every chunk of a split
+//! launch. This module removes all three costs:
+//!
+//! - **Buffer pool**: padded argument buffers are pooled per
+//!   `(variant, arg-slot)` and checked out per chunk. A checked-out buffer
+//!   is overwritten only on its live slots; the pad tail is already inert
+//!   from allocation time, so only the *dirty* tail a smaller batch leaves
+//!   behind is re-padded (`live` slot watermark per buffer).
+//! - **Constant args**: built once from `ExecutorConfig` and shared
+//!   (`Arc`) into every launch instead of cloned.
+//! - **Variant memo**: `(kernel, n, pool)` -> selected variant name/batch,
+//!   so repeated chunk sizes of split launches skip `manifest.select` and
+//!   the name clone entirely.
+//!
+//! Both the synchronous `Executor` and the pipelined `GpuService` stage
+//! through this arena, which is what makes their outputs bitwise
+//! identical: the padded bytes handed to the engine are produced by the
+//! same code in both paths.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::executor::{ExecutorConfig, Payload};
+use super::manifest::Manifest;
+use super::pjrt::HostArg;
+use super::shapes::{
+    INTERACTIONS, INTER_W, MD_PAD_POS, MD_W, PARTICLE_W, PARTS_PER_BUCKET,
+    PARTS_PER_PATCH,
+};
+
+/// Copy `n_slots` slots of width `slot_len` from `src[start_slot..]` to the
+/// head of `dst`.
+pub(crate) fn copy_slots<T: Copy>(
+    dst: &mut [T],
+    src: &[T],
+    start_slot: usize,
+    n_slots: usize,
+    slot_len: usize,
+) {
+    let src_off = start_slot * slot_len;
+    dst[..n_slots * slot_len]
+        .copy_from_slice(&src[src_off..src_off + n_slots * slot_len]);
+}
+
+/// Pool key: variant name + argument slot index.
+type BufKey = (Arc<str>, usize);
+
+#[derive(Debug)]
+enum BufData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types the arena can pool, with their `BufData` plumbing (keeps
+/// `checkout` a single implementation for f32 and i32 buffers).
+trait PadElem: Copy {
+    fn wrap(v: Vec<Self>) -> BufData
+    where
+        Self: Sized;
+    fn slice_mut(data: &mut BufData) -> &mut [Self]
+    where
+        Self: Sized;
+}
+
+impl PadElem for f32 {
+    fn wrap(v: Vec<f32>) -> BufData {
+        BufData::F32(v)
+    }
+
+    fn slice_mut(data: &mut BufData) -> &mut [f32] {
+        match data {
+            BufData::F32(v) => v,
+            BufData::I32(_) => unreachable!("f32 buffer expected"),
+        }
+    }
+}
+
+impl PadElem for i32 {
+    fn wrap(v: Vec<i32>) -> BufData {
+        BufData::I32(v)
+    }
+
+    fn slice_mut(data: &mut BufData) -> &mut [i32] {
+        match data {
+            BufData::I32(v) => v,
+            BufData::F32(_) => unreachable!("i32 buffer expected"),
+        }
+    }
+}
+
+/// One pooled padded buffer, plus the slot watermark that is dirty with
+/// live data from its last use (everything past it is pristine pad).
+#[derive(Debug)]
+pub struct ArenaBuf {
+    key: BufKey,
+    data: BufData,
+    /// Slots `[0, live)` hold (or will hold) live data.
+    live: usize,
+}
+
+impl ArenaBuf {
+    fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            BufData::F32(v) => v,
+            BufData::I32(_) => unreachable!("f32 buffer expected"),
+        }
+    }
+
+    fn as_i32_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            BufData::I32(v) => v,
+            BufData::F32(_) => unreachable!("i32 buffer expected"),
+        }
+    }
+}
+
+/// One staged launch argument: a pooled padded buffer, or a shared
+/// (constant / zero-copy) buffer.
+#[derive(Debug)]
+pub enum ArenaArg {
+    Owned(ArenaBuf),
+    Shared(Arc<Vec<f32>>),
+}
+
+impl ArenaArg {
+    pub fn as_host_arg(&self) -> HostArg<'_> {
+        match self {
+            ArenaArg::Owned(b) => match &b.data {
+                BufData::F32(v) => HostArg::F32(v),
+                BufData::I32(v) => HostArg::I32(v),
+            },
+            ArenaArg::Shared(v) => HostArg::F32(v),
+        }
+    }
+}
+
+/// One padded chunk, ready to execute: variant name + argument buffers.
+#[derive(Debug)]
+pub struct StagedChunk {
+    pub name: Arc<str>,
+    /// Live (unpadded) slots in this chunk.
+    pub n: usize,
+    pub args: Vec<ArenaArg>,
+}
+
+/// Memoized variant selection for one `(kernel, n, pool)` query.
+#[derive(Debug, Clone)]
+struct CachedVariant {
+    name: Arc<str>,
+    batch: usize,
+    pool: usize,
+}
+
+/// Arena counters (the hotpath bench and the memoization tests read them).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers checked out of the arena.
+    pub checkouts: u64,
+    /// Checkouts that allocated a fresh buffer (arena misses).
+    pub buffer_allocs: u64,
+    /// Checkouts served from the pool.
+    pub buffer_reuses: u64,
+    /// Elements re-padded on reuse (dirty tails of smaller batches).
+    pub repadded_elems: u64,
+    /// `manifest.select` calls actually performed.
+    pub variant_lookups: u64,
+    /// Variant queries answered from the memo.
+    pub variant_hits: u64,
+}
+
+/// Reusable staging state: buffer pools, constant args, variant memo.
+#[derive(Debug)]
+pub struct StagingArena {
+    pools: HashMap<BufKey, Vec<ArenaBuf>>,
+    variants: HashMap<(&'static str, usize, usize), CachedVariant>,
+    /// Constant launch args, built once per run (not per launch).
+    eps2: Arc<Vec<f32>>,
+    ktab: Arc<Vec<f32>>,
+    md_params: Arc<Vec<f32>>,
+    stats: ArenaStats,
+}
+
+impl StagingArena {
+    pub fn new(config: &ExecutorConfig) -> StagingArena {
+        StagingArena {
+            pools: HashMap::new(),
+            variants: HashMap::new(),
+            eps2: Arc::new(vec![config.eps2]),
+            ktab: Arc::new(config.ktab.clone()),
+            md_params: Arc::new(config.md_params.to_vec()),
+            stats: ArenaStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Memoized `manifest.select` for `(kernel, n, pool)`.
+    fn variant(
+        &mut self,
+        manifest: &Manifest,
+        kernel: &'static str,
+        n: usize,
+        pool: usize,
+    ) -> Result<CachedVariant> {
+        if let Some(v) = self.variants.get(&(kernel, n, pool)) {
+            self.stats.variant_hits += 1;
+            return Ok(v.clone());
+        }
+        self.stats.variant_lookups += 1;
+        let v = manifest
+            .select(kernel, n, pool)
+            .with_context(|| format!("no variant for kernel {kernel}"))?;
+        let cached = CachedVariant {
+            name: Arc::from(v.name.as_str()),
+            batch: v.batch,
+            pool: v.pool,
+        };
+        self.variants
+            .insert((kernel, n, pool), cached.clone());
+        Ok(cached)
+    }
+
+    /// Check a padded buffer out of the pool: slots `[0, n)` are about
+    /// to be overwritten by the caller; the rest is guaranteed `pad`.
+    /// A reused buffer has only its dirty tail (`[n, live)` slots of the
+    /// previous use) re-padded.
+    fn checkout<T: PadElem>(
+        &mut self,
+        name: &Arc<str>,
+        arg: usize,
+        batch: usize,
+        slot_len: usize,
+        n: usize,
+        pad: T,
+    ) -> ArenaBuf {
+        self.stats.checkouts += 1;
+        let key = (name.clone(), arg);
+        if let Some(mut buf) = self.pools.get_mut(&key).and_then(|p| p.pop()) {
+            self.stats.buffer_reuses += 1;
+            if buf.live > n {
+                let (a, b) = (n * slot_len, buf.live * slot_len);
+                T::slice_mut(&mut buf.data)[a..b].fill(pad);
+                self.stats.repadded_elems += (b - a) as u64;
+            }
+            buf.live = n;
+            return buf;
+        }
+        self.stats.buffer_allocs += 1;
+        ArenaBuf {
+            key,
+            data: T::wrap(vec![pad; batch * slot_len]),
+            live: n,
+        }
+    }
+
+    /// Return a chunk's pooled buffers for reuse by later chunks.
+    pub fn recycle(&mut self, chunk: StagedChunk) {
+        for arg in chunk.args {
+            if let ArenaArg::Owned(buf) = arg {
+                self.pools.entry(buf.key.clone()).or_default().push(buf);
+            }
+        }
+    }
+
+    /// Stage payload slots `[start, start + n)` into padded buffers for
+    /// the selected variant.
+    ///
+    /// `pool_cache` is a per-launch memo of the padded gather pool: the
+    /// chare-table mirror is pool-wide and identical across the chunks of
+    /// one launch, so it is padded at most once per launch instead of once
+    /// per chunk. Callers must pass a fresh `None` per launch (the mirror
+    /// is copy-on-write and may be rewritten between launches).
+    pub fn stage_chunk(
+        &mut self,
+        manifest: &Manifest,
+        payload: &Payload,
+        start: usize,
+        n: usize,
+        pool_cache: &mut Option<(usize, Arc<Vec<f32>>)>,
+    ) -> Result<StagedChunk> {
+        match payload {
+            Payload::Gravity { parts, inters, .. } => {
+                let v = self.variant(manifest, "gravity", n, 0)?;
+                let ps = PARTS_PER_BUCKET * PARTICLE_W;
+                let is = INTERACTIONS * INTER_W;
+                let mut p =
+                    self.checkout(&v.name, 0, v.batch, ps, n, 0.0f32);
+                copy_slots(p.as_f32_mut(), parts, start, n, ps);
+                let mut i =
+                    self.checkout(&v.name, 1, v.batch, is, n, 0.0f32);
+                copy_slots(i.as_f32_mut(), inters, start, n, is);
+                Ok(StagedChunk {
+                    name: v.name,
+                    n,
+                    args: vec![
+                        ArenaArg::Owned(p),
+                        ArenaArg::Owned(i),
+                        ArenaArg::Shared(self.eps2.clone()),
+                    ],
+                })
+            }
+            Payload::GravityGather { pool, idx, inters, .. } => {
+                let rows = pool.len() / PARTICLE_W;
+                let v =
+                    self.variant(manifest, "gravity_gather", n, rows)?;
+                anyhow::ensure!(
+                    v.pool >= rows,
+                    "pool of {rows} rows exceeds largest gather variant ({})",
+                    v.pool
+                );
+                // zero-copy when the mirror exactly matches the variant;
+                // otherwise pad once per launch and share across chunks
+                let pool_arg = if rows == v.pool {
+                    ArenaArg::Shared(pool.clone())
+                } else {
+                    match pool_cache {
+                        Some((vp, padded)) if *vp == v.pool => {
+                            ArenaArg::Shared(padded.clone())
+                        }
+                        _ => {
+                            let mut pl = vec![0.0f32; v.pool * PARTICLE_W];
+                            pl[..pool.len()].copy_from_slice(pool);
+                            let padded = Arc::new(pl);
+                            *pool_cache = Some((v.pool, padded.clone()));
+                            ArenaArg::Shared(padded)
+                        }
+                    }
+                };
+                let mut ix = self.checkout(
+                    &v.name,
+                    1,
+                    v.batch,
+                    PARTS_PER_BUCKET,
+                    n,
+                    0i32,
+                );
+                copy_slots(ix.as_i32_mut(), idx, start, n, PARTS_PER_BUCKET);
+                let is = INTERACTIONS * INTER_W;
+                let mut it =
+                    self.checkout(&v.name, 2, v.batch, is, n, 0.0f32);
+                copy_slots(it.as_f32_mut(), inters, start, n, is);
+                Ok(StagedChunk {
+                    name: v.name,
+                    n,
+                    args: vec![
+                        pool_arg,
+                        ArenaArg::Owned(ix),
+                        ArenaArg::Owned(it),
+                        ArenaArg::Shared(self.eps2.clone()),
+                    ],
+                })
+            }
+            Payload::Ewald { parts, .. } => {
+                let v = self.variant(manifest, "ewald", n, 0)?;
+                let ps = PARTS_PER_BUCKET * PARTICLE_W;
+                let mut p =
+                    self.checkout(&v.name, 0, v.batch, ps, n, 0.0f32);
+                copy_slots(p.as_f32_mut(), parts, start, n, ps);
+                Ok(StagedChunk {
+                    name: v.name,
+                    n,
+                    args: vec![
+                        ArenaArg::Owned(p),
+                        ArenaArg::Shared(self.ktab.clone()),
+                    ],
+                })
+            }
+            Payload::MdForce { pa, pb, .. } => {
+                let v = self.variant(manifest, "md_force", n, 0)?;
+                let slot = PARTS_PER_PATCH * MD_W;
+                let mut a = self
+                    .checkout(&v.name, 0, v.batch, slot, n, MD_PAD_POS);
+                copy_slots(a.as_f32_mut(), pa, start, n, slot);
+                let mut b = self
+                    .checkout(&v.name, 1, v.batch, slot, n, MD_PAD_POS);
+                copy_slots(b.as_f32_mut(), pb, start, n, slot);
+                Ok(StagedChunk {
+                    name: v.name,
+                    n,
+                    args: vec![
+                        ArenaArg::Owned(a),
+                        ArenaArg::Owned(b),
+                        ArenaArg::Shared(self.md_params.clone()),
+                    ],
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn arena() -> (StagingArena, Manifest) {
+        let cfg = ExecutorConfig::default();
+        (StagingArena::new(&cfg), Manifest::synthetic(Path::new("/tmp/x")))
+    }
+
+    fn gravity_payload(batch: usize, fill: f32) -> Payload {
+        Payload::Gravity {
+            parts: vec![fill; batch * PARTS_PER_BUCKET * PARTICLE_W],
+            inters: vec![fill; batch * INTERACTIONS * INTER_W],
+            batch,
+        }
+    }
+
+    #[test]
+    fn copy_slots_copies_window() {
+        let src: Vec<i32> = (0..12).collect();
+        let mut dst = vec![0i32; 8];
+        copy_slots(&mut dst, &src, 1, 2, 3); // slots 1..3 of width 3
+        assert_eq!(&dst[..6], &[3, 4, 5, 6, 7, 8]);
+        assert_eq!(&dst[6..], &[0, 0]);
+    }
+
+    #[test]
+    fn checkout_reuses_and_repads_dirty_tail() {
+        let (mut a, m) = arena();
+        // n=4 and n=3 both select the B4 variant: same pool key
+        let p = gravity_payload(4, 7.0);
+        let c = a.stage_chunk(&m, &p, 0, 4, &mut None).unwrap();
+        assert_eq!(a.stats().buffer_allocs, 2);
+        a.recycle(c);
+
+        let q = gravity_payload(3, 2.0);
+        let c2 = a.stage_chunk(&m, &q, 0, 3, &mut None).unwrap();
+        let s = a.stats();
+        assert_eq!(s.buffer_allocs, 2, "no new allocations");
+        assert_eq!(s.buffer_reuses, 2);
+        assert!(s.repadded_elems > 0, "dirty slot [3, 4) must be re-padded");
+        match c2.args[0].as_host_arg() {
+            HostArg::F32(buf) => {
+                let slot = PARTS_PER_BUCKET * PARTICLE_W;
+                assert!(buf[..3 * slot].iter().all(|&x| x == 2.0));
+                assert!(
+                    buf[3 * slot..].iter().all(|&x| x == 0.0),
+                    "stale slot must be re-padded"
+                );
+            }
+            _ => panic!("f32 arg expected"),
+        }
+        a.recycle(c2);
+    }
+
+    #[test]
+    fn growing_batch_needs_no_repad() {
+        let (mut a, m) = arena();
+        let c = a
+            .stage_chunk(&m, &gravity_payload(3, 1.0), 0, 3, &mut None)
+            .unwrap();
+        a.recycle(c);
+        // n=4 reuses the B4 buffers; the grown live region is overwritten
+        let c2 = a
+            .stage_chunk(&m, &gravity_payload(4, 3.0), 0, 4, &mut None)
+            .unwrap();
+        let s = a.stats();
+        assert_eq!(s.buffer_reuses, 2);
+        assert_eq!(s.repadded_elems, 0);
+        match c2.args[0].as_host_arg() {
+            HostArg::F32(buf) => {
+                let slot = PARTS_PER_BUCKET * PARTICLE_W;
+                assert!(buf[..4 * slot].iter().all(|&x| x == 3.0));
+            }
+            _ => panic!("f32 arg expected"),
+        }
+    }
+
+    #[test]
+    fn variant_selection_is_memoized() {
+        let (mut a, m) = arena();
+        for _ in 0..5 {
+            let c = a
+                .stage_chunk(&m, &gravity_payload(3, 0.5), 0, 3, &mut None)
+                .unwrap();
+            a.recycle(c);
+        }
+        let s = a.stats();
+        assert_eq!(s.variant_lookups, 1, "one real select per (kernel, n)");
+        assert_eq!(s.variant_hits, 4);
+    }
+
+    #[test]
+    fn md_pad_uses_parked_position() {
+        let (mut a, m) = arena();
+        // batch 3 selects the B4 variant: slot 3 is a pad slot
+        let p = Payload::MdForce {
+            pa: vec![0.25; 3 * PARTS_PER_PATCH * MD_W],
+            pb: vec![0.75; 3 * PARTS_PER_PATCH * MD_W],
+            batch: 3,
+        };
+        let c = a.stage_chunk(&m, &p, 0, 3, &mut None).unwrap();
+        match c.args[0].as_host_arg() {
+            HostArg::F32(buf) => {
+                let slot = PARTS_PER_PATCH * MD_W;
+                assert_eq!(buf.len(), 4 * slot);
+                assert!(buf[..3 * slot].iter().all(|&x| x == 0.25));
+                assert!(
+                    buf[3 * slot..].iter().all(|&x| x == MD_PAD_POS),
+                    "MD pad slots must park at MD_PAD_POS, not zero"
+                );
+            }
+            _ => panic!("f32 arg expected"),
+        }
+    }
+
+    #[test]
+    fn gather_pool_padded_once_per_launch() {
+        let (mut a, m) = arena();
+        let rows = 512; // smaller than every ladder pool: forces padding
+        let pool = Arc::new(vec![1.5f32; rows * PARTICLE_W]);
+        let batch = 4;
+        let p = Payload::GravityGather {
+            pool: pool.clone(),
+            idx: vec![0; batch * PARTS_PER_BUCKET],
+            inters: vec![0.0; batch * INTERACTIONS * INTER_W],
+            batch,
+        };
+        let mut cache = None;
+        let c1 = a.stage_chunk(&m, &p, 0, 2, &mut cache).unwrap();
+        let c2 = a.stage_chunk(&m, &p, 2, 2, &mut cache).unwrap();
+        let (p1, p2) = match (&c1.args[0], &c2.args[0]) {
+            (ArenaArg::Shared(x), ArenaArg::Shared(y)) => (x, y),
+            _ => panic!("shared pool args expected"),
+        };
+        assert!(Arc::ptr_eq(p1, p2), "pool padded once, shared by chunks");
+        assert!(!Arc::ptr_eq(p1, &pool), "padded copy, not the mirror");
+    }
+}

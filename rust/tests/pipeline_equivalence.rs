@@ -1,0 +1,231 @@
+//! Pipelined GpuService vs synchronous Executor: bitwise equivalence.
+//!
+//! The pipelined service stages launches on a dedicated thread through the
+//! staging arena while the engine executes; the synchronous executor
+//! pipelines only within a split launch. Both must produce *bitwise
+//! identical* `Completion::out` for every payload kind -- including
+//! launches that split across `max_batch` -- because padding, chunking,
+//! and kernel arithmetic are shared code.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gcharm::runtime::shapes::{
+    INTERACTIONS, INTER_W, KTAB_W, KTABLE, MD_PAD_POS, MD_W, PARTICLE_W,
+    PARTS_PER_BUCKET, PARTS_PER_PATCH,
+};
+use gcharm::runtime::{
+    default_artifacts_dir, CoalescingClass, Completion, Executor,
+    ExecutorConfig, GpuService, LaunchSpec, Payload,
+};
+use gcharm::util::Rng;
+
+fn config() -> ExecutorConfig {
+    let mut config = ExecutorConfig { eps2: 1e-2, ..Default::default() };
+    // a few active k-vectors so Ewald outputs are nontrivial
+    for (i, row) in [
+        [1.0, 0.0, 0.0, 0.5],
+        [0.0, 1.0, 0.0, 0.25],
+        [1.0, 1.0, 0.0, 0.125],
+    ]
+    .iter()
+    .enumerate()
+    {
+        config.ktab[i * KTAB_W..(i + 1) * KTAB_W].copy_from_slice(row);
+    }
+    assert_eq!(config.ktab.len(), KTABLE * KTAB_W);
+    config
+}
+
+fn gravity_payload(rng: &mut Rng, batch: usize) -> Payload {
+    let mut parts = vec![0.0f32; batch * PARTS_PER_BUCKET * PARTICLE_W];
+    let mut inters = vec![0.0f32; batch * INTERACTIONS * INTER_W];
+    for v in parts.iter_mut().chain(inters.iter_mut()) {
+        *v = rng.range(-1.0, 1.0) as f32;
+    }
+    Payload::Gravity { parts, inters, batch }
+}
+
+fn gather_payload(rng: &mut Rng, batch: usize, rows: usize) -> Payload {
+    let mut pool = vec![0.0f32; rows * PARTICLE_W];
+    for v in pool.iter_mut() {
+        *v = rng.range(-1.0, 1.0) as f32;
+    }
+    let idx: Vec<i32> = (0..batch * PARTS_PER_BUCKET)
+        .map(|_| rng.below(rows) as i32)
+        .collect();
+    let mut inters = vec![0.0f32; batch * INTERACTIONS * INTER_W];
+    for v in inters.iter_mut() {
+        *v = rng.range(-1.0, 1.0) as f32;
+    }
+    Payload::GravityGather { pool: Arc::new(pool), idx, inters, batch }
+}
+
+fn ewald_payload(rng: &mut Rng, batch: usize) -> Payload {
+    let mut parts = vec![0.0f32; batch * PARTS_PER_BUCKET * PARTICLE_W];
+    for v in parts.iter_mut() {
+        *v = rng.range(-2.0, 2.0) as f32;
+    }
+    Payload::Ewald { parts, batch }
+}
+
+fn md_payload(rng: &mut Rng, batch: usize) -> Payload {
+    let mut pa = vec![MD_PAD_POS; batch * PARTS_PER_PATCH * MD_W];
+    let mut pb = vec![MD_PAD_POS; batch * PARTS_PER_PATCH * MD_W];
+    // half the slots filled with live particles in a dense box
+    for slot in 0..batch {
+        for j in 0..PARTS_PER_PATCH / 2 {
+            let o = (slot * PARTS_PER_PATCH + j) * MD_W;
+            pa[o] = rng.range(0.0, 2.0) as f32;
+            pa[o + 1] = rng.range(0.0, 2.0) as f32;
+            pb[o] = rng.range(0.0, 2.0) as f32;
+            pb[o + 1] = rng.range(0.0, 2.0) as f32;
+        }
+    }
+    Payload::MdForce { pa, pb, batch }
+}
+
+fn payloads() -> Vec<(&'static str, Payload, CoalescingClass)> {
+    let mut rng = Rng::new(42);
+    vec![
+        // unsplit launches
+        ("gravity small", gravity_payload(&mut rng, 5), CoalescingClass::Contiguous),
+        ("gather small", gather_payload(&mut rng, 7, 512), CoalescingClass::RandomGather),
+        ("ewald small", ewald_payload(&mut rng, 9), CoalescingClass::Contiguous),
+        ("md small", md_payload(&mut rng, 6), CoalescingClass::Contiguous),
+        // launches splitting across max_batch (128 on the synthetic ladder)
+        ("gravity split", gravity_payload(&mut rng, 150), CoalescingClass::Contiguous),
+        ("gather split", gather_payload(&mut rng, 140, 1024), CoalescingClass::SortedGather),
+        ("ewald split", ewald_payload(&mut rng, 200), CoalescingClass::Contiguous),
+        ("md split", md_payload(&mut rng, 130), CoalescingClass::Contiguous),
+    ]
+}
+
+#[test]
+fn pipelined_service_matches_sync_executor_bitwise() {
+    let specs: Vec<(&str, LaunchSpec)> = payloads()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (label, payload, pattern))| {
+            (
+                label,
+                LaunchSpec {
+                    id: i as u64,
+                    payload,
+                    transfer_bytes: 4096,
+                    pattern,
+                },
+            )
+        })
+        .collect();
+
+    // Synchronous reference.
+    let mut sync =
+        Executor::new(&default_artifacts_dir(), config()).expect("executor");
+    let reference: Vec<Completion> = specs
+        .iter()
+        .map(|(label, s)| {
+            sync.run(s.clone()).unwrap_or_else(|e| panic!("{label}: {e}"))
+        })
+        .collect();
+
+    // Pipelined service.
+    let (done_tx, done_rx) = channel();
+    let svc = GpuService::spawn(&default_artifacts_dir(), config(), done_tx)
+        .expect("gpu service");
+    for (_, s) in &specs {
+        svc.submit(s.clone()).expect("submit");
+    }
+    let mut piped: Vec<Completion> = Vec::new();
+    for _ in 0..specs.len() {
+        piped.push(
+            done_rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("completion")
+                .expect("launch ok"),
+        );
+    }
+    piped.sort_by_key(|c| c.id);
+
+    for ((label, _), (want, got)) in
+        specs.iter().zip(reference.iter().zip(&piped))
+    {
+        assert_eq!(want.id, got.id);
+        assert_eq!(want.batch, got.batch, "{label}: batch mismatch");
+        assert_eq!(
+            want.out.len(),
+            got.out.len(),
+            "{label}: output length mismatch"
+        );
+        for (k, (a, b)) in want.out.iter().zip(&got.out).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: element {k} differs: {a} vs {b}"
+            );
+        }
+        // modeled costs are derived from the same chunking: identical too
+        assert_eq!(
+            want.modeled.kernel.to_bits(),
+            got.modeled.kernel.to_bits(),
+            "{label}: modeled kernel cost differs"
+        );
+        assert_eq!(
+            want.modeled.transfer.to_bits(),
+            got.modeled.transfer.to_bits(),
+            "{label}: modeled transfer cost differs"
+        );
+    }
+}
+
+#[test]
+fn pipelined_service_interleaves_distinct_kernels() {
+    // Back-to-back launches of different kinds exercise arena pools for
+    // several variants at once; outputs must still match the sync path.
+    let mut rng = Rng::new(7);
+    let specs: Vec<LaunchSpec> = (0..12)
+        .map(|i| {
+            let payload = match i % 4 {
+                0 => gravity_payload(&mut rng, 130),
+                1 => ewald_payload(&mut rng, 40),
+                2 => md_payload(&mut rng, 33),
+                _ => gather_payload(&mut rng, 20, 256),
+            };
+            LaunchSpec {
+                id: i,
+                payload,
+                transfer_bytes: 0,
+                pattern: CoalescingClass::Contiguous,
+            }
+        })
+        .collect();
+
+    let mut sync =
+        Executor::new(&default_artifacts_dir(), config()).expect("executor");
+    let reference: Vec<Completion> =
+        specs.iter().map(|s| sync.run(s.clone()).unwrap()).collect();
+
+    let (done_tx, done_rx) = channel();
+    let svc = GpuService::spawn(&default_artifacts_dir(), config(), done_tx)
+        .expect("gpu service");
+    for s in &specs {
+        svc.submit(s.clone()).unwrap();
+    }
+    let mut piped: Vec<Completion> = (0..specs.len())
+        .map(|_| {
+            done_rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("completion")
+                .expect("launch ok")
+        })
+        .collect();
+    piped.sort_by_key(|c| c.id);
+    for (want, got) in reference.iter().zip(&piped) {
+        assert_eq!(want.id, got.id);
+        let bits_a: Vec<u32> =
+            want.out.iter().map(|x| x.to_bits()).collect();
+        let bits_b: Vec<u32> = got.out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "launch {} differs", want.id);
+    }
+}
