@@ -11,7 +11,7 @@
 //! ```
 
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
-use gcharm::coordinator::{CombinePolicy, Config, DataPolicy};
+use gcharm::coordinator::{CombinePolicy, Config, DataPolicy, RoutePolicy};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = NbodyConfig::new(DatasetSpec::small());
@@ -20,12 +20,21 @@ fn main() -> anyhow::Result<()> {
         pes: 4,
         combine: CombinePolicy::Adaptive,
         data_policy: DataPolicy::ReuseSorted,
+        // Sharded GPU pool: 2 simulated devices, chare-affinity routing
+        // with idle-steal rebalancing. `devices: 1` reproduces the
+        // single-device runtime; the report breaks out per-device stats.
+        devices: 2,
+        route: RoutePolicy::AffinitySteal,
         ..Config::default()
     };
 
     println!(
-        "N-Body: {} particles ({} clusters), {} iterations, {} PEs",
-        cfg.dataset.n, cfg.dataset.clusters, cfg.iters, cfg.runtime.pes
+        "N-Body: {} particles ({} clusters), {} iterations, {} PEs, {} devices",
+        cfg.dataset.n,
+        cfg.dataset.clusters,
+        cfg.iters,
+        cfg.runtime.pes,
+        cfg.runtime.devices
     );
     let r = nbody::run(&cfg)?;
 

@@ -35,6 +35,8 @@ pub enum FlushReason {
     StaticPeriod,
     /// Forced drain (end of iteration / shutdown).
     Forced,
+    /// Drained for migration to an idle device (steal rebalancing).
+    Stolen,
 }
 
 /// A pending work request plus the device slot its buffer was staged into
@@ -199,13 +201,35 @@ impl Combiner {
         Some(self.take(n, FlushReason::Forced))
     }
 
+    /// Drain one batch (capped at max_size) for migration to another
+    /// device. Unlike `force_flush` the reason is `Stolen`, and an
+    /// in-progress residual drain (static policy) survives the steal.
+    pub fn steal_flush(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_size);
+        Some(self.take(n, FlushReason::Stolen))
+    }
+
     fn take(&mut self, n: usize, reason: FlushReason) -> Batch {
         let items: Vec<Pending> = self.queue.drain(..n).collect();
-        self.arrivals_since_flush = 0;
+        // A steal is not this queue's own flush cycle: the victim's
+        // arrival debt (static policy) keeps counting toward its next
+        // period flush so the leftovers are not stalled a full period.
+        if reason != FlushReason::Stolen {
+            self.arrivals_since_flush = 0;
+        }
         // A capped period flush leaves residuals that must not wait a
-        // whole further period; any other flush clears the debt.
-        self.residual =
-            reason == FlushReason::StaticPeriod && !self.queue.is_empty();
+        // whole further period. A steal neither creates nor clears that
+        // debt (the leftovers it skips still must drain promptly); any
+        // other flush clears it.
+        self.residual = !self.queue.is_empty()
+            && match reason {
+                FlushReason::StaticPeriod => true,
+                FlushReason::Stolen => self.residual,
+                _ => false,
+            };
         self.flushes.push((reason, items.len()));
         Batch { items, reason }
     }
@@ -328,6 +352,80 @@ mod tests {
         // debt cleared: the next arrival does not trigger an early flush
         c.insert(pending(8, 0.0, None), 0.0);
         assert!(c.poll(0.0).is_none());
+    }
+
+    #[test]
+    fn static_residual_drains_next_poll_despite_subperiod_arrivals() {
+        // Regression for the StaticEvery residual stall: a period flush
+        // capped at max_size must drain its leftovers on the very next
+        // poll — not after another full period of arrivals, and new
+        // sub-period arrivals must not postpone the drain.
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(10), 4, false);
+        for i in 0..10 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.poll(0.0).expect("period flush");
+        assert_eq!(b.items.len(), 4);
+        assert_eq!(c.len(), 6, "6 leftovers stranded by the cap");
+        // one new arrival: far below the period of 10, yet the residual
+        // debt must still drain now
+        c.insert(pending(10, 0.001, None), 0.001);
+        let b2 = c.poll(0.001).expect("residual drains on next poll");
+        assert_eq!(b2.reason, FlushReason::StaticPeriod);
+        assert_eq!(b2.items.len(), 4);
+        let b3 = c.poll(0.001).expect("remaining residual drains");
+        assert_eq!(b3.items.len(), 3);
+        assert!(c.is_empty());
+        // debt fully cleared: sub-period arrivals hold again
+        c.insert(pending(11, 0.002, None), 0.002);
+        assert!(c.poll(0.002).is_none());
+    }
+
+    #[test]
+    fn steal_flush_caps_and_reports_stolen() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        for i in 0..6 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.steal_flush().expect("steal");
+        assert_eq!(b.reason, FlushReason::Stolen);
+        assert_eq!(b.items.len(), 4, "stolen batches capped at max_size");
+        assert_eq!(c.len(), 2, "rest stays with the victim");
+        assert!(c.steal_flush().is_some());
+        assert!(c.steal_flush().is_none());
+    }
+
+    #[test]
+    fn steal_does_not_reset_static_arrival_debt() {
+        // A steal is the thief's launch, not the victim's flush: the
+        // victim's arrival count keeps building toward its period so the
+        // leftovers are not stalled a full fresh period.
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(3), 10, false);
+        c.insert(pending(0, 0.0, None), 0.0);
+        c.insert(pending(1, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none(), "2 of 3 arrivals");
+        assert_eq!(c.steal_flush().unwrap().items.len(), 2);
+        // one more arrival completes the original period
+        c.insert(pending(2, 0.0, None), 0.0);
+        let b = c.poll(0.0).expect("period completes despite the steal");
+        assert_eq!(b.reason, FlushReason::StaticPeriod);
+        assert_eq!(b.items.len(), 1);
+    }
+
+    #[test]
+    fn steal_preserves_residual_debt() {
+        // period flush capped -> residual debt; a steal takes some of the
+        // leftovers but must not cancel the prompt drain of the rest
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(8), 3, false);
+        for i in 0..8 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        assert_eq!(c.poll(0.0).unwrap().items.len(), 3);
+        assert_eq!(c.steal_flush().unwrap().items.len(), 3);
+        assert_eq!(c.len(), 2);
+        let b = c.poll(0.0).expect("residual still drains after steal");
+        assert_eq!(b.reason, FlushReason::StaticPeriod);
+        assert_eq!(b.items.len(), 2);
     }
 
     #[test]

@@ -23,27 +23,46 @@ pub enum SplitPolicy {
 }
 
 /// Per-device running averages and the splitting logic.
+///
+/// Two observation streams fold into this scheduler: the CPU/GPU split
+/// (`record_cpu` / `record_gpu`, MD interact only — the one kind with
+/// kernels on both sides) and the per-GPU-device rates (`record_device`,
+/// every completed launch on every device). The second stream is what the
+/// sharded pool's steal rebalancer weighs pending depths by, so the
+/// hybrid split and the device shares come from the same measurements.
 #[derive(Debug)]
 pub struct HybridScheduler {
     policy: SplitPolicy,
     cpu_per_item: RunningAverage,
     gpu_per_item: RunningAverage,
+    /// Per-GPU-device seconds-per-item averages (all kernel kinds).
+    device_per_item: Vec<RunningAverage>,
     /// Bootstrap split until both devices have at least one sample.
     bootstrap_cpu_share: f64,
 }
 
 impl HybridScheduler {
     pub fn new(policy: SplitPolicy) -> HybridScheduler {
+        HybridScheduler::with_devices(policy, 1)
+    }
+
+    /// Scheduler aware of `devices` GPU devices (clamped to >= 1).
+    pub fn with_devices(policy: SplitPolicy, devices: usize) -> HybridScheduler {
         HybridScheduler {
             policy,
             cpu_per_item: RunningAverage::new(),
             gpu_per_item: RunningAverage::new(),
+            device_per_item: vec![RunningAverage::new(); devices.max(1)],
             bootstrap_cpu_share: 0.5,
         }
     }
 
     pub fn policy(&self) -> SplitPolicy {
         self.policy
+    }
+
+    pub fn devices(&self) -> usize {
+        self.device_per_item.len()
     }
 
     /// Record a CPU execution: `items` data items in `secs` seconds.
@@ -63,6 +82,44 @@ impl HybridScheduler {
         if items > 0 {
             self.gpu_per_item.update(secs / items as f64);
         }
+    }
+
+    /// Record a completed launch on one GPU device (any kernel kind).
+    /// Feeds the per-device rate the steal rebalancer weighs by; does not
+    /// touch the CPU/GPU split averages.
+    pub fn record_device(&mut self, device: usize, items: usize, secs: f64) {
+        if items > 0 {
+            if let Some(avg) = self.device_per_item.get_mut(device) {
+                avg.update(secs / items as f64);
+            }
+        }
+    }
+
+    /// Measured seconds-per-item on one device, if observed.
+    pub fn device_rate(&self, device: usize) -> Option<f64> {
+        self.device_per_item.get(device).and_then(|a| a.mean())
+    }
+
+    /// Per-device work shares from the measured rates: share_d is
+    /// proportional to 1/rate_d. Devices without samples yet assume the
+    /// mean measured rate (uniform shares before any observation), so the
+    /// shares always sum to 1 and never zero out an unmeasured device.
+    pub fn device_shares(&self) -> Vec<f64> {
+        let n = self.device_per_item.len();
+        let rates: Vec<Option<f64>> = self
+            .device_per_item
+            .iter()
+            .map(|a| a.mean().filter(|&m| m > 0.0))
+            .collect();
+        let measured: Vec<f64> = rates.iter().filter_map(|r| *r).collect();
+        if measured.is_empty() {
+            return vec![1.0 / n as f64; n];
+        }
+        let fallback = measured.iter().sum::<f64>() / measured.len() as f64;
+        let speeds: Vec<f64> =
+            rates.iter().map(|r| 1.0 / r.unwrap_or(fallback)).collect();
+        let total: f64 = speeds.iter().sum();
+        speeds.iter().map(|s| s / total).collect()
     }
 
     /// CPU time-per-item / GPU time-per-item, once both are measured.
@@ -247,5 +304,56 @@ mod tests {
         let h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
         let (cpu, gpu) = h.split(Vec::new());
         assert!(cpu.is_empty() && gpu.is_empty());
+    }
+
+    #[test]
+    fn device_shares_uniform_before_observations() {
+        let h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 4);
+        let s = h.device_shares();
+        assert_eq!(s.len(), 4);
+        for v in &s {
+            assert!((v - 0.25).abs() < 1e-12);
+        }
+        assert!(h.device_rate(0).is_none());
+    }
+
+    #[test]
+    fn device_shares_follow_measured_speeds() {
+        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 2);
+        h.record_device(0, 100, 0.1); // 1 ms/item
+        h.record_device(1, 100, 0.3); // 3 ms/item: 3x slower
+        let s = h.device_shares();
+        assert!((s[0] - 0.75).abs() < 1e-9, "fast device takes 3/4");
+        assert!((s[1] - 0.25).abs() < 1e-9);
+        assert!((s[0] + s[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unmeasured_device_assumes_mean_rate() {
+        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 3);
+        h.record_device(0, 10, 0.01);
+        h.record_device(1, 10, 0.01);
+        let s = h.device_shares();
+        // device 2 is unmeasured: assumes the 1 ms/item mean, so thirds
+        for v in &s {
+            assert!((v - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn device_stream_does_not_touch_split_averages() {
+        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 2);
+        h.record_device(0, 100, 0.5);
+        h.record_device(1, 100, 0.5);
+        assert!(h.perf_ratio().is_none(), "split averages still unsampled");
+        assert_eq!(h.cpu_share(), 0.5, "bootstrap split unchanged");
+    }
+
+    #[test]
+    fn out_of_range_device_record_is_ignored() {
+        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 2);
+        h.record_device(7, 100, 0.5);
+        assert!(h.device_rate(0).is_none());
+        assert!(h.device_rate(7).is_none());
     }
 }

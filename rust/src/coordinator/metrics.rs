@@ -8,6 +8,48 @@
 
 use super::combiner::FlushReason;
 
+/// Per-device breakdown of the sharded GPU pool.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    /// Combined launches executed on this device.
+    pub launches: u64,
+    /// Work requests those launches carried.
+    pub requests: u64,
+    /// Data items those launches carried.
+    pub items: u64,
+    /// Residency hits / misses in this device's chare + node tables.
+    pub hits: u64,
+    pub misses: u64,
+    /// Batches this device stole from overloaded peers.
+    pub steals_in: u64,
+    /// Batches idle peers stole from this device.
+    pub steals_out: u64,
+    /// Measured wall seconds this device's engine spent executing.
+    pub busy_wall: f64,
+    /// Modeled-K20 seconds (kernel + transfer) of this device's launches.
+    pub busy_modeled: f64,
+}
+
+impl DeviceStats {
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+
+    /// Busy fraction of the run (modeled occupancy) given its wall time.
+    pub fn occupancy(&self, total_wall: f64) -> f64 {
+        if total_wall <= 0.0 {
+            0.0
+        } else {
+            (self.busy_modeled / total_wall).min(1.0)
+        }
+    }
+}
+
 /// Aggregated statistics of one run.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
@@ -35,6 +77,7 @@ pub struct Report {
     pub flush_idle: u64,
     pub flush_static: u64,
     pub flush_forced: u64,
+    pub flush_stolen: u64,
     /// Sum of flushed batch sizes (for the average).
     pub flushed_requests: u64,
     /// CPU-side task wall seconds (hybrid path).
@@ -44,6 +87,15 @@ pub struct Report {
     pub gpu_items: u64,
     /// End-to-end wall seconds of the run (driver-measured).
     pub total_wall: f64,
+    /// Idle-steal migrations between devices (batches moved).
+    pub steals: u64,
+    /// Work requests those stolen batches carried.
+    pub migrated_requests: u64,
+    /// Bytes re-transferred to restage migrated buffers on their new
+    /// device (the explicit migration cost in the reuse model).
+    pub migrated_bytes: u64,
+    /// Per-device breakdown; one entry per pool device.
+    pub device_stats: Vec<DeviceStats>,
 }
 
 impl Report {
@@ -54,13 +106,40 @@ impl Report {
             FlushReason::IdleTimeout => self.flush_idle += 1,
             FlushReason::StaticPeriod => self.flush_static += 1,
             FlushReason::Forced => self.flush_forced += 1,
+            FlushReason::Stolen => self.flush_stolen += 1,
         }
         self.flushed_requests += size as u64;
     }
 
     /// Total flush count.
     pub fn flushes(&self) -> u64 {
-        self.flush_full + self.flush_idle + self.flush_static + self.flush_forced
+        self.flush_full
+            + self.flush_idle
+            + self.flush_static
+            + self.flush_forced
+            + self.flush_stolen
+    }
+
+    /// Mutable per-device entry, growing the vec on demand.
+    pub fn device_mut(&mut self, device: usize) -> &mut DeviceStats {
+        if self.device_stats.len() <= device {
+            self.device_stats.resize(device + 1, DeviceStats::default());
+        }
+        &mut self.device_stats[device]
+    }
+
+    /// Modeled makespan of the device pool: the busiest device's modeled
+    /// seconds (devices run concurrently, so the busiest one bounds the
+    /// pool). Falls back to the aggregate modeled total for single-device
+    /// runs with no breakdown recorded.
+    pub fn device_makespan(&self) -> f64 {
+        if self.device_stats.is_empty() {
+            return self.modeled_total();
+        }
+        self.device_stats
+            .iter()
+            .map(|d| d.busy_modeled)
+            .fold(0.0, f64::max)
     }
 
     /// Mean combined-batch size (0 if nothing flushed).
@@ -98,11 +177,12 @@ impl std::fmt::Display for Report {
         )?;
         writeln!(
             f,
-            "flushes             full {} / idle {} / static {} / forced {} (avg batch {:.1})",
+            "flushes             full {} / idle {} / static {} / forced {} / stolen {} (avg batch {:.1})",
             self.flush_full,
             self.flush_idle,
             self.flush_static,
             self.flush_forced,
+            self.flush_stolen,
             self.avg_batch()
         )?;
         writeln!(
@@ -129,6 +209,32 @@ impl std::fmt::Display for Report {
             "hybrid              cpu {:.4}s task wall; items cpu {} / gpu {}",
             self.cpu_task_wall, self.cpu_items, self.gpu_items
         )?;
+        if self.device_stats.len() > 1 {
+            writeln!(
+                f,
+                "device pool         {} devices; {} steals ({} requests, {:.2} MiB restaged); modeled makespan {:.4}s",
+                self.device_stats.len(),
+                self.steals,
+                self.migrated_requests,
+                self.migrated_bytes as f64 / (1 << 20) as f64,
+                self.device_makespan()
+            )?;
+            for (d, s) in self.device_stats.iter().enumerate() {
+                writeln!(
+                    f,
+                    "  dev{d}              {} launches / {} reqs; {} hits / {} misses ({:.0}%); steals in {} out {}; busy wall {:.4}s modeled {:.4}s",
+                    s.launches,
+                    s.requests,
+                    s.hits,
+                    s.misses,
+                    s.hit_rate() * 100.0,
+                    s.steals_in,
+                    s.steals_out,
+                    s.busy_wall,
+                    s.busy_modeled
+                )?;
+            }
+        }
         write!(f, "total wall          {:.4}s", self.total_wall)
     }
 }
@@ -167,5 +273,50 @@ mod tests {
         let s = format!("{r}");
         assert!(s.contains("launches"));
         assert!(s.contains("total wall"));
+    }
+
+    #[test]
+    fn stolen_flushes_counted() {
+        let mut r = Report::default();
+        r.record_flush(FlushReason::Stolen, 12);
+        assert_eq!(r.flush_stolen, 1);
+        assert_eq!(r.flushes(), 1);
+        assert!((r.avg_batch() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_mut_grows_and_makespan_is_max() {
+        let mut r = Report::default();
+        r.device_mut(2).busy_modeled = 0.5;
+        r.device_mut(0).busy_modeled = 0.2;
+        assert_eq!(r.device_stats.len(), 3);
+        assert!((r.device_makespan() - 0.5).abs() < 1e-12);
+        // no breakdown: falls back to aggregate modeled total
+        let agg = Report { kernel_modeled: 0.3, ..Default::default() };
+        assert!((agg.device_makespan() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_stats_rates() {
+        let d = DeviceStats {
+            hits: 3,
+            misses: 1,
+            busy_modeled: 0.5,
+            ..Default::default()
+        };
+        assert!((d.hit_rate() - 0.75).abs() < 1e-12);
+        assert!((d.occupancy(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(d.occupancy(0.0), 0.0);
+    }
+
+    #[test]
+    fn display_renders_device_rows() {
+        let mut r = Report::default();
+        r.device_mut(0).launches = 1;
+        r.device_mut(1).launches = 2;
+        r.steals = 3;
+        let s = format!("{r}");
+        assert!(s.contains("device pool"));
+        assert!(s.contains("dev1"));
     }
 }

@@ -42,8 +42,9 @@ use anyhow::{Context, Result};
 
 use crate::runtime::device_sim::CoalescingClass;
 use crate::runtime::executor::{
-    Completion, ExecutorConfig, GpuService, LaunchSpec, Payload,
+    Completion, ExecutorConfig, LaunchSpec, Payload,
 };
+use crate::runtime::pool::DevicePool;
 use crate::runtime::shapes::{
     INTERACTIONS, INTER_W, OUT_W, PARTICLE_W, PARTS_PER_BUCKET,
     PARTS_PER_PATCH, MD_W,
@@ -55,8 +56,8 @@ pub use chare_table::ChareTable;
 pub use combiner::{Batch, CombinePolicy, Combiner, FlushReason, Pending};
 pub use cpu_pool::chunk_by_items;
 pub use hybrid::{HybridScheduler, SplitPolicy};
-pub use metrics::Report;
-pub use scheduler::Shared;
+pub use metrics::{DeviceStats, Report};
+pub use scheduler::{DeviceRouter, RoutePolicy, Shared};
 pub use work_request::{WorkKind, WorkRequest, WrPayload, WrResult};
 
 use scheduler::{pe_loop, CoordMsg, PeMsg, Router};
@@ -86,9 +87,20 @@ pub struct Config {
     /// (0 = match `pes`). Batches are chunked by `data_items` across the
     /// pool; per-worker timings fold into the hybrid scheduler.
     pub cpu_workers: usize,
-    /// Device pool capacity in bucket-buffer slots.
+    /// Number of simulated GPU devices in the sharded pool. Each device
+    /// gets its own `GpuService` (stager+engine thread pair and staging
+    /// arena), chare table, node cache, and combiner set. `1` reproduces
+    /// the single-device runtime bitwise.
+    pub devices: usize,
+    /// Chare -> device routing policy (ignored when `devices == 1`).
+    pub route: RoutePolicy,
+    /// Steal when some device's pending depth is below this...
+    pub steal_low: usize,
+    /// ...while another's is at or above this.
+    pub steal_high: usize,
+    /// Per-device pool capacity in bucket-buffer slots.
     pub table_slots: usize,
-    /// Device-resident interaction-entry cache capacity (tree moments /
+    /// Per-device interaction-entry cache capacity (tree moments /
     /// particle entries, 16 B each). Models ChaNGa's GPU-resident moments
     /// and particle arrays.
     pub node_slots: usize,
@@ -110,6 +122,10 @@ impl Default for Config {
             split: SplitPolicy::AdaptiveItems,
             hybrid_md: true,
             cpu_workers: 0,
+            devices: 1,
+            route: RoutePolicy::AffinitySteal,
+            steal_low: 4,
+            steal_high: 16,
             table_slots: 1024,
             node_slots: 1 << 17,
             executor: ExecutorConfig::default(),
@@ -133,6 +149,8 @@ struct LaunchItem {
 struct LaunchInfo {
     items: Vec<LaunchItem>,
     transfer_bytes: u64,
+    /// Pool device the launch was submitted to.
+    device: usize,
 }
 
 /// Accumulator folding a hybrid batch's CPU-pool chunk *timings* back
@@ -148,10 +166,10 @@ struct CpuBatchAcc {
     sum_secs: f64,
 }
 
-/// The coordinator thread's state.
-struct Coord {
-    cfg: Config,
-    router: Router,
+/// Per-device coordinator-side state: residency tables and combiners.
+/// One instance per pool device, so reuse decisions and combining are
+/// local to the device the requests will execute on.
+struct DeviceState {
     table: ChareTable,
     /// Residency of interaction entries (tree moments / cached particles),
     /// 16 bytes each. Accounting-level model of the GPU-resident arrays
@@ -161,10 +179,20 @@ struct Coord {
     force: Combiner,
     ewald: Combiner,
     md: Combiner,
+}
+
+/// The coordinator thread's state.
+struct Coord {
+    cfg: Config,
+    router: Router,
+    /// Per-device residency + combiner shards (length = pool devices).
+    devices: Vec<DeviceState>,
+    /// Chare -> device affinity routing and steal accounting.
+    dev_router: DeviceRouter,
     hybrid: HybridScheduler,
     report: Report,
     launches: HashMap<u64, LaunchInfo>,
-    gpu: GpuService,
+    gpu: DevicePool,
     /// Hybrid CPU worker pool, spawned lazily on the first CPU split so
     /// GPU-only workloads (all N-body runs, `hybrid_md: false`) never
     /// carry idle worker threads.
@@ -182,18 +210,35 @@ impl Coord {
         let ewald_max = occupancy(&spec, &KernelResources::ewald_kernel()).max_size as usize;
         let md_max = occupancy(&spec, &KernelResources::md_kernel()).max_size as usize;
         let sort = cfg.data_policy == DataPolicy::ReuseSorted;
-        let gpu = GpuService::spawn(&cfg.artifacts, cfg.executor.clone(), done_tx)?;
+        let ndev = cfg.devices.max(1);
+        let gpu =
+            DevicePool::spawn(&cfg.artifacts, cfg.executor.clone(), ndev, done_tx)?;
+        let devices = (0..ndev)
+            .map(|_| DeviceState {
+                table: ChareTable::new(cfg.table_slots),
+                node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
+                node_saved: 0,
+                force: Combiner::new(cfg.combine, force_max, sort),
+                ewald: Combiner::new(cfg.combine, ewald_max, false),
+                md: Combiner::new(cfg.combine, md_max, false),
+            })
+            .collect();
         let cpu_workers =
             if cfg.cpu_workers == 0 { cfg.pes } else { cfg.cpu_workers };
+        let report = Report {
+            device_stats: vec![DeviceStats::default(); ndev],
+            ..Report::default()
+        };
         Ok(Coord {
-            table: ChareTable::new(cfg.table_slots),
-            node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
-            node_saved: 0,
-            force: Combiner::new(cfg.combine, force_max, sort),
-            ewald: Combiner::new(cfg.combine, ewald_max, false),
-            md: Combiner::new(cfg.combine, md_max, false),
-            hybrid: HybridScheduler::new(cfg.split),
-            report: Report::default(),
+            devices,
+            dev_router: DeviceRouter::new(
+                cfg.route,
+                ndev,
+                cfg.steal_low,
+                cfg.steal_high,
+            ),
+            hybrid: HybridScheduler::with_devices(cfg.split, ndev),
+            report,
             launches: HashMap::new(),
             gpu,
             cpu_pool: None,
@@ -210,12 +255,14 @@ impl Coord {
         self.router.shared.timeline.now()
     }
 
-    /// Handle one submitted work request: stage for reuse if configured,
-    /// then insert into the matching combiner.
+    /// Handle one submitted work request: route it to a device by the
+    /// chare affinity map, stage for reuse on that device if configured,
+    /// then insert into the device's matching combiner.
     fn on_submit(&mut self, draft: WorkDraft) {
         let now = self.now();
         let id = self.next_wr;
         self.next_wr += 1;
+        let device = self.dev_router.route(draft.chare);
         let wr = WorkRequest {
             id,
             chare: draft.chare,
@@ -238,7 +285,7 @@ impl Coord {
             if let (Some(buf), WrPayload::Force { parts, .. }) =
                 (wr.buffer, &wr.payload)
             {
-                match self.table.stage_pinned(buf, parts) {
+                match self.devices[device].table.stage_pinned(buf, parts) {
                     Ok(staged) => {
                         slot = Some(staged.slot);
                         staged_bytes = staged.bytes;
@@ -253,67 +300,187 @@ impl Coord {
         }
 
         let pending = Pending { wr, slot, staged_bytes };
+        let st = &mut self.devices[device];
         match pending.wr.kind {
-            WorkKind::Force => self.force.insert(pending, now),
-            WorkKind::Ewald => self.ewald.insert(pending, now),
-            WorkKind::MdInteract => self.md.insert(pending, now),
+            WorkKind::Force => st.force.insert(pending, now),
+            WorkKind::Ewald => st.ewald.insert(pending, now),
+            WorkKind::MdInteract => st.md.insert(pending, now),
         }
+        self.dev_router.note_enqueued(device, 1);
         self.poll_combiners();
     }
 
-    /// Poll every combiner; dispatch flushed batches.
+    /// Poll every device's combiners; dispatch flushed batches, then run
+    /// the idle-steal rebalancer.
     fn poll_combiners(&mut self) {
         let now = self.now();
-        while let Some(batch) = self.force.poll(now) {
-            self.dispatch_force(batch);
-        }
-        while let Some(batch) = self.ewald.poll(now) {
-            self.dispatch_ewald(batch);
-        }
-        while let Some(batch) = self.md.poll(now) {
-            self.dispatch_md(batch);
+        for d in 0..self.devices.len() {
+            while let Some(batch) = self.devices[d].force.poll(now) {
+                self.dispatch_force(batch, d);
+            }
+            while let Some(batch) = self.devices[d].ewald.poll(now) {
+                self.dispatch_ewald(batch, d);
+            }
+            while let Some(batch) = self.devices[d].md.poll(now) {
+                self.dispatch_md(batch, d);
+            }
         }
         self.idle_drain(now);
+        self.try_steal();
     }
 
     /// Safety drain (see Config::idle_drain).
     fn idle_drain(&mut self, now: f64) {
-        let d = self.cfg.idle_drain;
-        if d <= 0.0 {
+        let gap = self.cfg.idle_drain;
+        if gap <= 0.0 {
             return;
         }
-        if !self.force.is_empty() && now - self.force.last_arrival().unwrap_or(now) > d {
-            while let Some(b) = self.force.force_flush() {
-                self.dispatch_force(b);
+        for d in 0..self.devices.len() {
+            let st = &mut self.devices[d];
+            if !st.force.is_empty()
+                && now - st.force.last_arrival().unwrap_or(now) > gap
+            {
+                while let Some(b) = self.devices[d].force.force_flush() {
+                    self.dispatch_force(b, d);
+                }
             }
-        }
-        if !self.ewald.is_empty() && now - self.ewald.last_arrival().unwrap_or(now) > d {
-            while let Some(b) = self.ewald.force_flush() {
-                self.dispatch_ewald(b);
+            let st = &mut self.devices[d];
+            if !st.ewald.is_empty()
+                && now - st.ewald.last_arrival().unwrap_or(now) > gap
+            {
+                while let Some(b) = self.devices[d].ewald.force_flush() {
+                    self.dispatch_ewald(b, d);
+                }
             }
-        }
-        if !self.md.is_empty() && now - self.md.last_arrival().unwrap_or(now) > d {
-            while let Some(b) = self.md.force_flush() {
-                self.dispatch_md(b);
+            let st = &mut self.devices[d];
+            if !st.md.is_empty()
+                && now - st.md.last_arrival().unwrap_or(now) > gap
+            {
+                while let Some(b) = self.devices[d].md.force_flush() {
+                    self.dispatch_md(b, d);
+                }
             }
         }
     }
 
     /// Force-flush everything (shutdown path).
     fn drain_all(&mut self) {
-        while let Some(b) = self.force.force_flush() {
-            self.dispatch_force(b);
-        }
-        while let Some(b) = self.ewald.force_flush() {
-            self.dispatch_ewald(b);
-        }
-        while let Some(b) = self.md.force_flush() {
-            self.dispatch_md(b);
+        for d in 0..self.devices.len() {
+            while let Some(b) = self.devices[d].force.force_flush() {
+                self.dispatch_force(b, d);
+            }
+            while let Some(b) = self.devices[d].ewald.force_flush() {
+                self.dispatch_ewald(b, d);
+            }
+            while let Some(b) = self.devices[d].md.force_flush() {
+                self.dispatch_md(b, d);
+            }
         }
     }
 
-    /// Build and submit the combined force launch for a flushed batch.
-    fn dispatch_force(&mut self, batch: Batch) {
+    /// Idle-steal rebalancer (section 3.3's adaptive split at device
+    /// granularity): while one device's pending depth sits below the low
+    /// watermark and another's at or above the high one, migrate a whole
+    /// pending batch from the loaded device and dispatch it on the idle
+    /// one immediately, paying the restage/transfer cost in the reuse
+    /// model. Depths are weighted by the hybrid scheduler's measured
+    /// per-device speeds, so a fast idle device pulls work sooner.
+    fn try_steal(&mut self) {
+        // Allocation-free precondition first: poll_combiners runs per
+        // submitted request, and device_shares() allocates.
+        if self.cfg.route != RoutePolicy::AffinitySteal
+            || !self.dev_router.watermarks_crossed()
+        {
+            return;
+        }
+        let shares = self.hybrid.device_shares();
+        // Bounded per poll: each iteration moves one batch; stop when the
+        // watermarks are satisfied or the loaded device has nothing
+        // pending (its depth is all in-flight work).
+        for _ in 0..self.devices.len() {
+            let Some((from, to)) = self.dev_router.steal_candidate(&shares)
+            else {
+                break;
+            };
+            let Some((batch, kind)) = self.steal_batch(from) else {
+                break;
+            };
+            let n = batch.items.len();
+            self.dev_router.note_stolen(from, to, n);
+            self.report.device_mut(from).steals_out += 1;
+            self.report.device_mut(to).steals_in += 1;
+            let batch = self.migrate_batch(batch, from, to);
+            match kind {
+                WorkKind::Force => self.dispatch_force(batch, to),
+                WorkKind::Ewald => self.dispatch_ewald(batch, to),
+                WorkKind::MdInteract => self.dispatch_md(batch, to),
+            }
+        }
+    }
+
+    /// Drain one batch from the loaded device's longest pending queue.
+    fn steal_batch(&mut self, from: usize) -> Option<(Batch, WorkKind)> {
+        let st = &mut self.devices[from];
+        let (lf, le, lm) = (st.force.len(), st.ewald.len(), st.md.len());
+        if lf == 0 && le == 0 && lm == 0 {
+            return None;
+        }
+        if lf >= le && lf >= lm {
+            st.force.steal_flush().map(|b| (b, WorkKind::Force))
+        } else if le >= lm {
+            st.ewald.steal_flush().map(|b| (b, WorkKind::Ewald))
+        } else {
+            st.md.steal_flush().map(|b| (b, WorkKind::MdInteract))
+        }
+    }
+
+    /// Move a stolen batch's residency from `from` to `to`: release the
+    /// source pins, restage into the destination's chare table (a miss
+    /// there re-transfers the buffer — the explicit migration cost), and
+    /// re-home the chares so their future requests follow the data.
+    fn migrate_batch(&mut self, mut batch: Batch, from: usize, to: usize) -> Batch {
+        for p in &mut batch.items {
+            self.dev_router.rehome(p.wr.chare, to);
+            if p.slot.is_none() {
+                continue;
+            }
+            let Some(buf) = p.wr.buffer else { continue };
+            self.devices[from].table.release(buf);
+            // Bytes staged to the source device were spent whether or not
+            // the launch runs there: a migrated launch keeps carrying
+            // them, plus whatever the destination restage costs.
+            let src_bytes = p.staged_bytes;
+            p.slot = None;
+            p.staged_bytes = 0;
+            let WrPayload::Force { parts, .. } = &p.wr.payload else {
+                continue;
+            };
+            match self.devices[to].table.stage_pinned(buf, parts) {
+                Ok(staged) => {
+                    p.slot = Some(staged.slot);
+                    p.staged_bytes = src_bytes + staged.bytes;
+                    self.report.migrated_bytes += staged.bytes;
+                }
+                Err(_) => {
+                    // Destination pool exhausted: contiguous fallback
+                    // (the full payload is charged at dispatch).
+                }
+            }
+        }
+        // The batch was slot-sorted for the *source* pool; restaging
+        // scrambled that. Re-sort on the destination slots so the
+        // coalescing model's SortedGather claim stays honest.
+        if self.cfg.data_policy == DataPolicy::ReuseSorted {
+            batch
+                .items
+                .sort_by_key(|p| p.slot.unwrap_or(u32::MAX));
+        }
+        batch
+    }
+
+    /// Build and submit the combined force launch for a flushed batch on
+    /// one device.
+    fn dispatch_force(&mut self, batch: Batch, device: usize) {
         self.report.record_flush(batch.reason, batch.items.len());
         let n = batch.items.len();
         if n == 0 {
@@ -336,10 +503,11 @@ impl Coord {
             } else {
                 // interaction entries (moments/particles) are resident on
                 // the device from prior kernels: transfer only the misses
+                let st = &mut self.devices[device];
                 for &eid in inter_ids {
-                    match self.node_table.acquire(eid as u64) {
+                    match st.node_table.acquire(eid as u64) {
                         Some(r) if r.is_hit() => {
-                            self.node_saved += ENTRY_BYTES;
+                            st.node_saved += ENTRY_BYTES;
                         }
                         _ => transfer += ENTRY_BYTES,
                     }
@@ -361,7 +529,7 @@ impl Coord {
             };
             (
                 Payload::GravityGather {
-                    pool: self.table.pool_arc(),
+                    pool: self.devices[device].table.pool_arc(),
                     idx,
                     inters,
                     batch: n,
@@ -382,10 +550,10 @@ impl Coord {
                 CoalescingClass::Contiguous,
             )
         };
-        self.submit_launch(batch.items, payload, transfer, pattern);
+        self.submit_launch(batch.items, payload, transfer, pattern, device);
     }
 
-    fn dispatch_ewald(&mut self, batch: Batch) {
+    fn dispatch_ewald(&mut self, batch: Batch, device: usize) {
         self.report.record_flush(batch.reason, batch.items.len());
         let n = batch.items.len();
         if n == 0 {
@@ -405,12 +573,13 @@ impl Coord {
             Payload::Ewald { parts, batch: n },
             transfer,
             CoalescingClass::Contiguous,
+            device,
         );
     }
 
     /// MD: hybrid-split the flushed batch, CPU prefix to the worker pool,
-    /// GPU suffix to a combined launch.
-    fn dispatch_md(&mut self, batch: Batch) {
+    /// GPU suffix to a combined launch on `device`.
+    fn dispatch_md(&mut self, batch: Batch, device: usize) {
         self.report.record_flush(batch.reason, batch.items.len());
         if batch.items.is_empty() {
             return;
@@ -422,6 +591,8 @@ impl Coord {
         };
 
         if !cpu.is_empty() {
+            // The CPU prefix leaves this device's pending queue.
+            self.dev_router.note_completed(device, cpu.len());
             let total: usize =
                 cpu.iter().map(|p| p.wr.data_items).sum();
             self.report.cpu_items += total as u64;
@@ -471,6 +642,7 @@ impl Coord {
             Payload::MdForce { pa, pb, batch: n },
             transfer,
             CoalescingClass::Contiguous,
+            device,
         );
     }
 
@@ -480,6 +652,7 @@ impl Coord {
         payload: Payload,
         transfer_bytes: u64,
         pattern: CoalescingClass,
+        device: usize,
     ) {
         let id = self.next_launch;
         self.next_launch += 1;
@@ -496,10 +669,11 @@ impl Coord {
                 })
                 .collect(),
             transfer_bytes,
+            device,
         };
         self.launches.insert(id, info);
         self.gpu
-            .submit(LaunchSpec { id, payload, transfer_bytes, pattern })
+            .submit(device, LaunchSpec { id, payload, transfer_bytes, pattern })
             .expect("gpu service is down");
     }
 
@@ -510,6 +684,8 @@ impl Coord {
             .launches
             .remove(&c.id)
             .expect("completion for unknown launch");
+        let device = info.device;
+        debug_assert_eq!(c.device, device, "completion from wrong device");
 
         self.report.launches += 1;
         self.report.gpu_requests += info.items.len() as u64;
@@ -548,10 +724,21 @@ impl Coord {
                 ),
             );
             if let Some(buf) = item.buffer {
-                self.table.release(buf);
+                self.devices[device].table.release(buf);
             }
         }
         self.report.gpu_items += gpu_items;
+        {
+            let dev = self.report.device_mut(device);
+            dev.launches += 1;
+            dev.requests += info.items.len() as u64;
+            dev.items += gpu_items;
+            dev.busy_wall += c.wall;
+            dev.busy_modeled += c.modeled.kernel + c.modeled.transfer;
+        }
+        self.dev_router.note_completed(device, info.items.len());
+        // Per-device rate (all kinds): the steal rebalancer's weights.
+        self.hybrid.record_device(device, gpu_items as usize, c.wall);
         if matches!(
             info.items.first().map(|i| i.kind),
             Some(WorkKind::MdInteract)
@@ -645,8 +832,10 @@ impl Coord {
                     self.poll_combiners();
                 }
                 Ok(CoordMsg::InvalidateAll) => {
-                    self.table.invalidate_all();
-                    self.node_table.invalidate_all();
+                    for st in &mut self.devices {
+                        st.table.invalidate_all();
+                        st.node_table.invalidate_all();
+                    }
                 }
                 Ok(CoordMsg::Stop) => break,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
@@ -672,10 +861,25 @@ impl Coord {
                 Err(_) => break,
             }
         }
-        self.report.table_hits = self.table.hits() + self.node_table.hits();
-        self.report.table_misses =
-            self.table.misses() + self.node_table.misses();
-        self.report.saved_bytes = self.table.saved_bytes() + self.node_saved;
+        self.report.steals = self.dev_router.steals();
+        self.report.migrated_requests = self.dev_router.migrated_requests();
+        self.report.table_hits = 0;
+        self.report.table_misses = 0;
+        self.report.saved_bytes = 0;
+        for d in 0..self.devices.len() {
+            let hits =
+                self.devices[d].table.hits() + self.devices[d].node_table.hits();
+            let misses = self.devices[d].table.misses()
+                + self.devices[d].node_table.misses();
+            let saved =
+                self.devices[d].table.saved_bytes() + self.devices[d].node_saved;
+            self.report.table_hits += hits;
+            self.report.table_misses += misses;
+            self.report.saved_bytes += saved;
+            let dev = self.report.device_mut(d);
+            dev.hits = hits;
+            dev.misses = misses;
+        }
         self.report
     }
 }

@@ -55,6 +55,171 @@ pub(crate) enum CoordMsg {
     Stop,
 }
 
+/// Chare -> device routing policy for the sharded GPU pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Static round-robin over devices per submitted request (the static
+    /// baseline: ignores residency and load).
+    RoundRobin,
+    /// Rendezvous-hash-seeded chare affinity (maximizes per-device reuse
+    /// hits) plus idle-steal rebalancing between the watermarks — the
+    /// paper's section 3.3 idle-minimization re-instantiated at device
+    /// granularity.
+    AffinitySteal,
+}
+
+/// Routes work requests to pool devices and tracks per-device pending
+/// depth for the idle-steal rebalancer.
+#[derive(Debug)]
+pub struct DeviceRouter {
+    policy: RoutePolicy,
+    /// Chare -> device affinity. Seeded by rendezvous hash on first
+    /// sight; rewritten when a steal migrates the chare's pending work
+    /// (reuse-driven: future requests follow the chare's resident data).
+    affinity: HashMap<ChareId, usize>,
+    rr: usize,
+    /// Per-device pending depth: requests queued in combiners plus
+    /// requests in flight on the device.
+    depth: Vec<usize>,
+    /// Steal when some device's depth is below `low` while another's is
+    /// at or above `high`.
+    low: usize,
+    high: usize,
+    steals: u64,
+    migrated_requests: u64,
+}
+
+impl DeviceRouter {
+    pub fn new(
+        policy: RoutePolicy,
+        devices: usize,
+        low: usize,
+        high: usize,
+    ) -> DeviceRouter {
+        DeviceRouter {
+            policy,
+            affinity: HashMap::new(),
+            rr: 0,
+            depth: vec![0; devices.max(1)],
+            low,
+            high,
+            steals: 0,
+            migrated_requests: 0,
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.depth.len()
+    }
+
+    pub fn depth(&self, device: usize) -> usize {
+        self.depth[device]
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    pub fn migrated_requests(&self) -> u64 {
+        self.migrated_requests
+    }
+
+    /// Route one request to a device per the policy.
+    pub fn route(&mut self, chare: ChareId) -> usize {
+        let n = self.depth.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let d = self.rr % n;
+                self.rr += 1;
+                d
+            }
+            RoutePolicy::AffinitySteal => *self
+                .affinity
+                .entry(chare)
+                .or_insert_with(|| rendezvous_device(chare, n)),
+        }
+    }
+
+    /// Re-home a chare after its pending batch migrated: subsequent
+    /// requests follow the data to the new device.
+    pub fn rehome(&mut self, chare: ChareId, device: usize) {
+        if self.policy == RoutePolicy::AffinitySteal {
+            self.affinity.insert(chare, device);
+        }
+    }
+
+    pub fn note_enqueued(&mut self, device: usize, n: usize) {
+        self.depth[device] += n;
+    }
+
+    pub fn note_completed(&mut self, device: usize, n: usize) {
+        self.depth[device] = self.depth[device].saturating_sub(n);
+    }
+
+    /// Account a stolen batch of `n` requests moving `from` -> `to`.
+    pub fn note_stolen(&mut self, from: usize, to: usize, n: usize) {
+        self.depth[from] = self.depth[from].saturating_sub(n);
+        self.depth[to] += n;
+        self.steals += 1;
+        self.migrated_requests += n as u64;
+    }
+
+    /// Cheap allocation-free precondition for `steal_candidate`: is some
+    /// device below the low watermark while another is at or above the
+    /// high one? Callers use this to skip computing device shares on the
+    /// per-request hot path when no steal is possible.
+    pub fn watermarks_crossed(&self) -> bool {
+        self.policy == RoutePolicy::AffinitySteal
+            && self.depth.len() >= 2
+            && self.depth.iter().any(|&d| d < self.low)
+            && self.depth.iter().any(|&d| d >= self.high)
+    }
+
+    /// Steal decision: among the devices below the low watermark pick the
+    /// idlest by share-weighted depth (`shares` are the hybrid
+    /// scheduler's measured per-device speed shares — a fast idle device
+    /// pulls first; uniform when unmeasured), among those at or above
+    /// the high watermark pick the most loaded, and return `(from, to)`.
+    pub fn steal_candidate(&self, shares: &[f64]) -> Option<(usize, usize)> {
+        let n = self.depth.len();
+        if self.policy != RoutePolicy::AffinitySteal || n < 2 {
+            return None;
+        }
+        let weighted = |d: usize| {
+            let s = shares.get(d).copied().unwrap_or(1.0 / n as f64);
+            self.depth[d] as f64 / s.max(1e-9)
+        };
+        let to = (0..n).filter(|&d| self.depth[d] < self.low).min_by(
+            |&a, &b| weighted(a).partial_cmp(&weighted(b)).unwrap(),
+        )?;
+        let from = (0..n).filter(|&d| self.depth[d] >= self.high).max_by(
+            |&a, &b| weighted(a).partial_cmp(&weighted(b)).unwrap(),
+        )?;
+        (from != to).then_some((from, to))
+    }
+}
+
+/// Rendezvous (highest-random-weight) hash of a chare over `n` devices:
+/// stable per chare, uniform across chares, no coordination needed.
+fn rendezvous_device(chare: ChareId, n: usize) -> usize {
+    let key = ((chare.collection as u64) << 32) | chare.index as u64;
+    (0..n)
+        .max_by_key(|&d| splitmix64(key ^ (0x9e37_79b9_7f4a_7c15u64
+            .wrapping_mul(d as u64 + 1))))
+        .unwrap_or(0)
+}
+
+/// SplitMix64 finalizer: cheap, well-mixed 64-bit hash.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
 /// Reduction accumulator (Charm++-style `contribute`).
 #[derive(Debug, Default)]
 pub(crate) struct ReductionState {
@@ -262,6 +427,121 @@ mod tests {
         let r = router.shared.reduction.lock().unwrap();
         assert_eq!(r.count, 2);
         assert_eq!(r.sum, 5.0);
+    }
+
+    #[test]
+    fn router_single_device_always_zero() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 1, 1, 4);
+        for i in 0..10 {
+            assert_eq!(r.route(ChareId::new(0, i)), 0);
+        }
+        let mut rr = DeviceRouter::new(RoutePolicy::RoundRobin, 1, 1, 4);
+        assert_eq!(rr.route(ChareId::new(0, 0)), 0);
+    }
+
+    #[test]
+    fn round_robin_cycles_devices() {
+        let mut r = DeviceRouter::new(RoutePolicy::RoundRobin, 3, 1, 4);
+        let seq: Vec<usize> =
+            (0..6).map(|i| r.route(ChareId::new(0, i))).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn affinity_is_stable_and_spreads() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 4, 1, 4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            let c = ChareId::new(1, i);
+            let d = r.route(c);
+            assert!(d < 4);
+            assert_eq!(r.route(c), d, "affinity must be stable");
+            seen.insert(d);
+        }
+        assert!(
+            seen.len() >= 3,
+            "rendezvous hash must spread 64 chares over the devices, got {seen:?}"
+        );
+    }
+
+    #[test]
+    fn rehome_redirects_future_requests() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 4, 1, 4);
+        let c = ChareId::new(0, 9);
+        let d0 = r.route(c);
+        let d1 = (d0 + 1) % 4;
+        r.rehome(c, d1);
+        assert_eq!(r.route(c), d1);
+    }
+
+    #[test]
+    fn steal_candidate_respects_watermarks() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 2, 2, 6);
+        let shares = vec![0.5, 0.5];
+        assert!(r.steal_candidate(&shares).is_none(), "both idle: no steal");
+        r.note_enqueued(0, 6);
+        assert_eq!(
+            r.steal_candidate(&shares),
+            Some((0, 1)),
+            "0 loaded, 1 idle"
+        );
+        // destination fills past the low watermark: no steal
+        r.note_enqueued(1, 2);
+        assert!(r.steal_candidate(&shares).is_none());
+        // completions drain the destination below the watermark again
+        r.note_completed(1, 1);
+        assert_eq!(r.steal_candidate(&shares), Some((0, 1)));
+        // accounting moves depth with the stolen batch
+        r.note_stolen(0, 1, 4);
+        assert_eq!(r.depth(0), 2);
+        assert_eq!(r.depth(1), 5);
+        assert_eq!(r.steals(), 1);
+        assert_eq!(r.migrated_requests(), 4);
+        assert!(r.steal_candidate(&shares).is_none());
+    }
+
+    #[test]
+    fn round_robin_never_steals() {
+        let mut r = DeviceRouter::new(RoutePolicy::RoundRobin, 2, 2, 4);
+        r.note_enqueued(0, 100);
+        assert!(!r.watermarks_crossed());
+        assert!(r.steal_candidate(&[0.5, 0.5]).is_none());
+    }
+
+    #[test]
+    fn watermarks_crossed_tracks_candidate_existence() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 2, 2, 6);
+        assert!(!r.watermarks_crossed(), "both idle");
+        r.note_enqueued(0, 6);
+        assert!(r.watermarks_crossed());
+        r.note_enqueued(1, 2);
+        assert!(!r.watermarks_crossed(), "no device below the low mark");
+    }
+
+    #[test]
+    fn weighted_steal_prefers_fast_idle_device() {
+        // devices 0 and 1 both idle (depth 1 < low), device 2 loaded;
+        // device 1 is much faster (share 0.8), so equal raw depth weighs
+        // lighter on it and it pulls the stolen batch first
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 3, 2, 8);
+        r.note_enqueued(0, 1);
+        r.note_enqueued(1, 1);
+        r.note_enqueued(2, 10);
+        let got = r.steal_candidate(&[0.1, 0.8, 0.1]);
+        assert_eq!(got, Some((2, 1)));
+    }
+
+    #[test]
+    fn watermark_eligibility_overrides_weighting() {
+        // share-weighting must only rank *eligible* devices: device 1 has
+        // the lightest weighted depth but is not below the low mark, so
+        // the truly idle device 0 is the destination
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 3, 4, 16);
+        r.note_enqueued(0, 2);
+        r.note_enqueued(1, 6);
+        r.note_enqueued(2, 30);
+        let got = r.steal_candidate(&[0.05, 0.9, 0.05]);
+        assert_eq!(got, Some((2, 0)));
     }
 
     #[test]

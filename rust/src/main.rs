@@ -9,10 +9,12 @@
 //!   --pes N --iters N --pieces N    (defaults 4 / 3 / 4 per pe)
 //!   --combine adaptive|static[:P]   (default adaptive)
 //!   --data noreuse|reuse|sorted     (default sorted)
+//!   --devices N --route affinity|rr (default 1 / affinity)
 //!   --mode gcharm|cpu|handtuned     (default gcharm)
 //! gcharm md [opts]                  2D molecular dynamics run
 //!   --particles N --steps N --grid G --pes N
 //!   --split static|adaptive         (default adaptive)
+//!   --devices N --route affinity|rr (default 1 / affinity)
 //!   --mode gcharm|cpu1              (default gcharm)
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
 //! ```
@@ -24,7 +26,9 @@ use anyhow::{bail, Result};
 use gcharm::apps::md::{self, MdConfig};
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::bench;
-use gcharm::coordinator::{CombinePolicy, Config, DataPolicy, SplitPolicy};
+use gcharm::coordinator::{
+    CombinePolicy, Config, DataPolicy, RoutePolicy, SplitPolicy,
+};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
@@ -76,6 +80,14 @@ fn data_policy(s: &str) -> Result<DataPolicy> {
     }
 }
 
+fn route_policy(s: &str) -> Result<RoutePolicy> {
+    match s {
+        "affinity" => Ok(RoutePolicy::AffinitySteal),
+        "rr" | "roundrobin" => Ok(RoutePolicy::RoundRobin),
+        _ => bail!("unknown route policy {s}"),
+    }
+}
+
 fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
     let dataset = match flags.get("dataset").map(|s| s.as_str()) {
         None | Some("small") => DatasetSpec::small(),
@@ -97,13 +109,17 @@ fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
         data_policy: data_policy(
             flags.get("data").map(|s| s.as_str()).unwrap_or("sorted"),
         )?,
+        devices: get(&flags, "devices", 1),
+        route: route_policy(
+            flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
+        )?,
         ..Config::default()
     };
 
     let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");
     println!(
-        "nbody: dataset={} n={} iters={} pes={} mode={mode}",
-        cfg.dataset.name, cfg.dataset.n, cfg.iters, pes
+        "nbody: dataset={} n={} iters={} pes={} devices={} mode={mode}",
+        cfg.dataset.name, cfg.dataset.n, cfg.iters, pes, cfg.runtime.devices
     );
     let r = match mode {
         "gcharm" => nbody::run(&cfg)?,
@@ -136,6 +152,10 @@ fn cmd_md(flags: HashMap<String, String>) -> Result<()> {
             Some(other) => bail!("unknown split {other}"),
         },
         hybrid_md: true,
+        devices: get(&flags, "devices", 1),
+        route: route_policy(
+            flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
+        )?,
         ..Config::default()
     };
     let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");

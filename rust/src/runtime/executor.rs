@@ -169,6 +169,11 @@ pub struct LaunchSpec {
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
+    /// Index of the (simulated) device that executed the launch; 0 for the
+    /// synchronous `Executor` and single-service setups. `DevicePool`
+    /// routes completions from all devices onto one channel, so consumers
+    /// correlate by this tag.
+    pub device: usize,
     /// Output rows for the *unpadded* batch, row-major
     /// (batch x rows_per_slot x out_w).
     pub out: Vec<f32>,
@@ -270,7 +275,7 @@ impl Executor {
             transfer: self.model.transfer_time(spec.transfer_bytes),
             kernel: modeled_kernel,
         };
-        Ok(Completion { id: spec.id, out, batch, wall, modeled })
+        Ok(Completion { id: spec.id, device: 0, out, batch, wall, modeled })
     }
 
     /// Unsplit launch: stage and execute inline (no pipeline threads).
@@ -436,11 +441,24 @@ pub struct GpuService {
 }
 
 impl GpuService {
-    /// Spawn the service threads. Completions (and errors) are delivered
-    /// to `done` in submission order.
+    /// Spawn the service threads for device 0. Completions (and errors)
+    /// are delivered to `done` in submission order.
     pub fn spawn(
         artifacts: &Path,
         config: ExecutorConfig,
+        done: Sender<Result<Completion>>,
+    ) -> Result<GpuService> {
+        GpuService::spawn_on(artifacts, config, 0, done)
+    }
+
+    /// Spawn the service threads for simulated device `device`; every
+    /// `Completion` this service emits carries that tag. Each service owns
+    /// its own stager+engine thread pair and staging arena, so a pool of
+    /// services shares nothing but the completion channel.
+    pub fn spawn_on(
+        artifacts: &Path,
+        config: ExecutorConfig,
+        device: usize,
         done: Sender<Result<Completion>>,
     ) -> Result<GpuService> {
         let (manifest, real) = Manifest::load_or_synthetic(artifacts)?;
@@ -452,13 +470,15 @@ impl GpuService {
 
         let stage_manifest = manifest.clone();
         let stager = std::thread::Builder::new()
-            .name("gpu-stager".into())
+            .name(format!("gpu-stager-{device}"))
             .spawn(move || {
                 stager_loop(stage_manifest, config, rx, chunk_tx, ret_rx)
             })?;
         let engine = std::thread::Builder::new()
-            .name("gpu-service".into())
-            .spawn(move || engine_loop(manifest, real, chunk_rx, ret_tx, done))?;
+            .name(format!("gpu-service-{device}"))
+            .spawn(move || {
+                engine_loop(manifest, real, device, chunk_rx, ret_tx, done)
+            })?;
         Ok(GpuService { tx, stager: Some(stager), engine: Some(engine) })
     }
 
@@ -550,6 +570,7 @@ fn stager_loop(
 fn engine_loop(
     manifest: Manifest,
     artifacts_on_disk: bool,
+    device: usize,
     chunk_rx: Receiver<ChunkMsg>,
     ret_tx: Sender<StagedChunk>,
     done: Sender<Result<Completion>>,
@@ -612,6 +633,7 @@ fn engine_loop(
                             let st = cur.take().expect("in-flight launch");
                             let completion = Completion {
                                 id: st.meta.id,
+                                device,
                                 out: st.out,
                                 batch: st.meta.batch,
                                 wall: st.wall,

@@ -137,16 +137,34 @@ impl DeviceMemory {
 
     /// Drop a buffer from the pool (e.g. chare data invalidated by an
     /// iteration update).
+    ///
+    /// A pinned slot backs a pending combined launch: invalidating it is a
+    /// caller bug (the launch would read a slot the allocator may hand
+    /// out again). Debug builds assert; release builds drop the pin so
+    /// the pool does not leak slots permanently.
     pub fn invalidate(&mut self, id: BufferId) {
         if let Some(slot) = self.resident.remove(&id) {
+            debug_assert_eq!(
+                self.pins[slot], 0,
+                "invalidating pinned slot {slot} (buffer {id}): \
+                 it backs a pending launch"
+            );
             self.slots[slot] = None;
             self.pins[slot] = 0;
             self.free.push(slot);
         }
     }
 
-    /// Drop everything (new iteration with fully rewritten data).
+    /// Drop everything (new iteration with fully rewritten data). Must be
+    /// called at quiescence: see `invalidate` for the pinned-slot contract.
     pub fn invalidate_all(&mut self) {
+        debug_assert_eq!(
+            self.pinned_count(),
+            0,
+            "invalidate_all with {} pinned slot(s): they back pending \
+             launches",
+            self.pinned_count()
+        );
         self.resident.clear();
         self.slots.iter_mut().for_each(|s| *s = None);
         self.pins.iter_mut().for_each(|p| *p = 0);
@@ -271,6 +289,37 @@ mod tests {
         m.unpin(0);
         assert!(m.acquire(2).is_some());
         assert!(m.peek(0).is_none()); // 0 was the only evictable slot
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "backs a pending launch")]
+    fn invalidate_pinned_slot_asserts() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0).unwrap();
+        m.pin(0);
+        m.invalidate(0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "pending")]
+    fn invalidate_all_with_pins_asserts() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0).unwrap();
+        m.pin(0);
+        m.invalidate_all();
+    }
+
+    #[test]
+    fn invalidate_unpinned_after_release_is_fine() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0).unwrap();
+        m.pin(0);
+        m.unpin(0);
+        m.invalidate(0);
+        assert!(m.peek(0).is_none());
+        assert_eq!(m.pinned_count(), 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod manifest;
 pub mod memory;
 pub mod native;
 pub mod pjrt;
+pub mod pool;
 pub mod shapes;
 pub mod staging;
 
@@ -25,6 +26,7 @@ pub use executor::{
 pub use manifest::Manifest;
 pub use memory::{BufferId, DeviceMemory, Residency};
 pub use pjrt::{Engine, HostArg};
+pub use pool::DevicePool;
 pub use staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};
 
 use std::path::PathBuf;

@@ -1,0 +1,164 @@
+//! Sharded GPU pool: N `GpuService` instances behind one submit API.
+//!
+//! The runtime used to assume exactly one GPU — one service, one device
+//! memory, one staging arena. `DevicePool` owns N services (each keeping
+//! its own stager+engine thread pair and staging arena), exposes a single
+//! `submit(device, spec)` entry point, and funnels every device's
+//! completions onto one channel with `Completion::device` tagging the
+//! origin. Per-device *memory* (chare tables, node residency) lives with
+//! the coordinator, which decides routing; the pool is purely the
+//! execution fabric.
+//!
+//! `devices = 1` is exactly the old single-service path: one service, the
+//! same threads, the same completion stream.
+
+use std::path::Path;
+use std::sync::mpsc::Sender;
+
+use anyhow::Result;
+
+use super::executor::{Completion, ExecutorConfig, GpuService, LaunchSpec};
+
+/// A pool of N simulated GPU devices, each a full `GpuService`.
+pub struct DevicePool {
+    services: Vec<GpuService>,
+}
+
+impl DevicePool {
+    /// Spawn `devices` (clamped to >= 1) services over the same artifact
+    /// set. Completions from every device arrive on `done`, tagged with
+    /// their device index; per-device ordering follows submission order,
+    /// cross-device ordering is whatever the engines produce.
+    pub fn spawn(
+        artifacts: &Path,
+        config: ExecutorConfig,
+        devices: usize,
+        done: Sender<Result<Completion>>,
+    ) -> Result<DevicePool> {
+        let devices = devices.max(1);
+        let services = (0..devices)
+            .map(|d| {
+                GpuService::spawn_on(artifacts, config.clone(), d, done.clone())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DevicePool { services })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.services.len()
+    }
+
+    /// Submit a launch to one device; its completion arrives on the pool's
+    /// `done` channel tagged with `device`.
+    pub fn submit(&self, device: usize, spec: LaunchSpec) -> Result<()> {
+        let svc = self.services.get(device).ok_or_else(|| {
+            anyhow::anyhow!(
+                "device {device} out of range (pool has {})",
+                self.services.len()
+            )
+        })?;
+        svc.submit(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::device_sim::CoalescingClass;
+    use crate::runtime::executor::Payload;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, PARTICLE_W, PARTS_PER_BUCKET,
+    };
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn gravity_spec(id: u64, batch: usize, fill: f32) -> LaunchSpec {
+        LaunchSpec {
+            id,
+            payload: Payload::Gravity {
+                parts: vec![fill; batch * PARTS_PER_BUCKET * PARTICLE_W],
+                inters: vec![fill; batch * INTERACTIONS * INTER_W],
+                batch,
+            },
+            transfer_bytes: 0,
+            pattern: CoalescingClass::Contiguous,
+        }
+    }
+
+    #[test]
+    fn completions_carry_device_tags() {
+        let (tx, rx) = channel();
+        let pool = DevicePool::spawn(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            ExecutorConfig::default(),
+            3,
+            tx,
+        )
+        .unwrap();
+        assert_eq!(pool.devices(), 3);
+        for d in 0..3 {
+            pool.submit(d, gravity_spec(d as u64, 2, 0.5)).unwrap();
+        }
+        let mut seen = [false; 3];
+        for _ in 0..3 {
+            let c = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("completion")
+                .expect("launch ok");
+            assert_eq!(c.id as usize, c.device, "routed to the device asked");
+            seen[c.device] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every device executed");
+    }
+
+    #[test]
+    fn devices_produce_identical_outputs_for_identical_launches() {
+        let (tx, rx) = channel();
+        let pool = DevicePool::spawn(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            ExecutorConfig::default(),
+            2,
+            tx,
+        )
+        .unwrap();
+        pool.submit(0, gravity_spec(0, 3, 0.25)).unwrap();
+        pool.submit(1, gravity_spec(1, 3, 0.25)).unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> = (0..2)
+            .map(|_| {
+                let c = rx
+                    .recv_timeout(Duration::from_secs(60))
+                    .unwrap()
+                    .unwrap();
+                (c.device, c.out.iter().map(|x| x.to_bits()).collect())
+            })
+            .collect();
+        outs.sort_by_key(|(d, _)| *d);
+        assert_eq!(outs[0].1, outs[1].1, "devices run the same engine code");
+    }
+
+    #[test]
+    fn out_of_range_device_is_rejected() {
+        let (tx, _rx) = channel();
+        let pool = DevicePool::spawn(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            ExecutorConfig::default(),
+            2,
+            tx,
+        )
+        .unwrap();
+        assert!(pool.submit(2, gravity_spec(0, 1, 0.0)).is_err());
+    }
+
+    #[test]
+    fn zero_devices_clamps_to_one() {
+        let (tx, _rx) = channel();
+        let pool = DevicePool::spawn(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            ExecutorConfig::default(),
+            0,
+            tx,
+        )
+        .unwrap();
+        assert_eq!(pool.devices(), 1);
+    }
+}

@@ -4,7 +4,7 @@
 use gcharm::apps::md::{self, MdConfig};
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::coordinator::{
-    CombinePolicy, Config, DataPolicy, SplitPolicy,
+    CombinePolicy, Config, DataPolicy, RoutePolicy, SplitPolicy,
 };
 
 fn tiny_nbody(policy: DataPolicy, combine: CombinePolicy) -> NbodyConfig {
@@ -125,6 +125,71 @@ fn nbody_energy_roughly_conserved() {
     let e_last = *r.energies.last().unwrap();
     let drift = (e_last - e0).abs() / e0.abs().max(1e-12);
     assert!(drift < 0.2, "energy drift {drift} too large");
+}
+
+#[test]
+fn nbody_sharded_pool_matches_physics() {
+    // 4-device pool with affinity+steal routing: same physics as the
+    // single-device run, and the per-device breakdown must account for
+    // every launch.
+    let single = tiny_nbody(DataPolicy::ReuseSorted, CombinePolicy::Adaptive);
+    let mut sharded =
+        tiny_nbody(DataPolicy::ReuseSorted, CombinePolicy::Adaptive);
+    sharded.runtime.devices = 4;
+    sharded.runtime.route = RoutePolicy::AffinitySteal;
+    let a = nbody::run(&single).unwrap();
+    let b = nbody::run(&sharded).unwrap();
+    for i in 0..a.energies.len() {
+        let scale = a.energies[i].abs().max(1e-9);
+        assert!(
+            (a.energies[i] - b.energies[i]).abs() / scale < 1e-3,
+            "sharded energy mismatch at iter {i}: {} vs {}",
+            a.energies[i],
+            b.energies[i]
+        );
+    }
+    assert_eq!(b.report.device_stats.len(), 4);
+    let dev_launches: u64 =
+        b.report.device_stats.iter().map(|d| d.launches).sum();
+    assert_eq!(dev_launches, b.report.launches, "device breakdown accounts");
+    let dev_requests: u64 =
+        b.report.device_stats.iter().map(|d| d.requests).sum();
+    assert_eq!(dev_requests, b.report.gpu_requests);
+    assert!(
+        b.report.device_stats.iter().filter(|d| d.launches > 0).count() > 1,
+        "work must spread over more than one device"
+    );
+}
+
+#[test]
+fn nbody_round_robin_routing_runs() {
+    let mut cfg = tiny_nbody(DataPolicy::ReuseSorted, CombinePolicy::Adaptive);
+    cfg.runtime.devices = 2;
+    cfg.runtime.route = RoutePolicy::RoundRobin;
+    let r = nbody::run(&cfg).unwrap();
+    assert!(r.energies.iter().all(|e| e.is_finite()));
+    assert_eq!(r.report.steals, 0, "round-robin must never steal");
+    assert!(
+        r.report.device_stats.iter().all(|d| d.launches > 0),
+        "round-robin spreads launches over both devices"
+    );
+}
+
+#[test]
+fn md_sharded_pool_matches_physics() {
+    let single = tiny_md(SplitPolicy::AdaptiveItems, true);
+    let mut sharded = tiny_md(SplitPolicy::AdaptiveItems, true);
+    sharded.runtime.devices = 2;
+    let a = md::run(&single).unwrap();
+    let b = md::run(&sharded).unwrap();
+    for i in 0..a.energies.len() {
+        let scale = a.energies[i].abs().max(1e-9);
+        assert!(
+            (a.energies[i] - b.energies[i]).abs() / scale < 1e-2,
+            "sharded MD energy mismatch at step {i}"
+        );
+    }
+    assert_eq!(b.report.device_stats.len(), 2);
 }
 
 fn tiny_md(split: SplitPolicy, hybrid: bool) -> MdConfig {

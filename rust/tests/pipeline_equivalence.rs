@@ -16,7 +16,7 @@ use gcharm::runtime::shapes::{
     PARTS_PER_BUCKET, PARTS_PER_PATCH,
 };
 use gcharm::runtime::{
-    default_artifacts_dir, CoalescingClass, Completion, Executor,
+    default_artifacts_dir, CoalescingClass, Completion, DevicePool, Executor,
     ExecutorConfig, GpuService, LaunchSpec, Payload,
 };
 use gcharm::util::Rng;
@@ -176,6 +176,128 @@ fn pipelined_service_matches_sync_executor_bitwise() {
             got.modeled.transfer.to_bits(),
             "{label}: modeled transfer cost differs"
         );
+    }
+}
+
+/// All-payload spec set shared by the device-pool equivalence tests.
+fn pool_specs() -> Vec<(&'static str, LaunchSpec)> {
+    payloads()
+        .into_iter()
+        .enumerate()
+        .map(|(i, (label, payload, pattern))| {
+            (
+                label,
+                LaunchSpec {
+                    id: i as u64,
+                    payload,
+                    transfer_bytes: 4096,
+                    pattern,
+                },
+            )
+        })
+        .collect()
+}
+
+/// Run the spec set through a pool of `devices`, assigning launch i to
+/// device i % devices; completions sorted by id.
+fn run_pool(devices: usize, specs: &[(&str, LaunchSpec)]) -> Vec<Completion> {
+    let (done_tx, done_rx) = channel();
+    let pool =
+        DevicePool::spawn(&default_artifacts_dir(), config(), devices, done_tx)
+            .expect("device pool");
+    for (i, (_, s)) in specs.iter().enumerate() {
+        pool.submit(i % devices, s.clone()).expect("submit");
+    }
+    let mut out: Vec<Completion> = (0..specs.len())
+        .map(|_| {
+            done_rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("completion")
+                .expect("launch ok")
+        })
+        .collect();
+    out.sort_by_key(|c| c.id);
+    out
+}
+
+#[test]
+fn device_pool_single_device_matches_sync_executor_bitwise() {
+    // `devices = 1` must reproduce the pre-pool single-service path
+    // bitwise: the sync Executor is the unchanged reference.
+    let specs = pool_specs();
+    let mut sync =
+        Executor::new(&default_artifacts_dir(), config()).expect("executor");
+    let reference: Vec<Completion> = specs
+        .iter()
+        .map(|(label, s)| {
+            sync.run(s.clone()).unwrap_or_else(|e| panic!("{label}: {e}"))
+        })
+        .collect();
+
+    let pooled = run_pool(1, &specs);
+    for ((label, _), (want, got)) in
+        specs.iter().zip(reference.iter().zip(&pooled))
+    {
+        assert_eq!(got.device, 0, "{label}: single-device tag");
+        assert_eq!(want.batch, got.batch, "{label}: batch mismatch");
+        let bits_a: Vec<u32> = want.out.iter().map(|x| x.to_bits()).collect();
+        let bits_b: Vec<u32> = got.out.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "{label}: outputs differ");
+        assert_eq!(
+            want.modeled.kernel.to_bits(),
+            got.modeled.kernel.to_bits(),
+            "{label}: modeled kernel cost differs"
+        );
+        assert_eq!(
+            want.modeled.transfer.to_bits(),
+            got.modeled.transfer.to_bits(),
+            "{label}: modeled transfer cost differs"
+        );
+    }
+}
+
+#[test]
+fn device_pool_sharded_deterministic_across_runs() {
+    // devices in {2, 4}: for every payload kind (incl. split launches),
+    // two identical runs with identical device assignment must produce
+    // bitwise-identical completions, each tagged with its device.
+    for devices in [2usize, 4] {
+        let specs = pool_specs();
+        let a = run_pool(devices, &specs);
+        let b = run_pool(devices, &specs);
+        for (i, ((label, _), (ca, cb))) in
+            specs.iter().zip(a.iter().zip(&b)).enumerate()
+        {
+            assert_eq!(ca.device, i % devices, "{label}: device assignment");
+            assert_eq!(cb.device, i % devices);
+            assert_eq!(ca.batch, cb.batch, "{label}: batch mismatch");
+            let bits_a: Vec<u32> =
+                ca.out.iter().map(|x| x.to_bits()).collect();
+            let bits_b: Vec<u32> =
+                cb.out.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                bits_a, bits_b,
+                "{label}: {devices}-device run not deterministic"
+            );
+            assert_eq!(
+                ca.modeled.kernel.to_bits(),
+                cb.modeled.kernel.to_bits(),
+                "{label}: modeled kernel cost not deterministic"
+            );
+        }
+        // sharded outputs also match the single-device reference bitwise
+        let single = run_pool(1, &specs);
+        for ((label, _), (cs, cp)) in specs.iter().zip(single.iter().zip(&a))
+        {
+            let bits_s: Vec<u32> =
+                cs.out.iter().map(|x| x.to_bits()).collect();
+            let bits_p: Vec<u32> =
+                cp.out.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                bits_s, bits_p,
+                "{label}: {devices}-device outputs drift from single device"
+            );
+        }
     }
 }
 
