@@ -15,7 +15,7 @@ fn run_one(split: SplitPolicy, label: &str) -> anyhow::Result<f64> {
     cfg.steps = 6;
     cfg.clustered = true; // uneven patch populations = irregular workloads
     cfg.runtime =
-        Config { pes: 4, split, hybrid_md: true, ..Config::default() };
+        Config { pes: 4, split, hybrid: true, ..Config::default() };
     let r = md::run(&cfg)?;
     let total = (r.report.cpu_items + r.report.gpu_items).max(1);
     println!(

@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     cfg.runtime = Config {
         pes: 4,
         split: SplitPolicy::AdaptiveItems,
-        hybrid_md: true,
+        hybrid: true,
         ..Config::default()
     };
 

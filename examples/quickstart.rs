@@ -1,16 +1,17 @@
-//! Quickstart: the G-Charm public API in ~80 lines.
+//! Quickstart: the G-Charm public API in ~90 lines.
 //!
-//! Defines one custom chare that submits a gravity work request to the
-//! runtime, receives the result through its entry method, and contributes
-//! to a reduction the driver waits on. Run with:
+//! Registers the built-in gravity kernel family through the open kernel
+//! registry, defines one custom chare that submits a shape-checked tile
+//! work request, receives the result through its entry method, and
+//! contributes to a reduction the driver waits on. Run with:
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
 use gcharm::coordinator::{
-    Chare, ChareId, Config, Ctx, GCharm, Msg, WorkDraft, WorkKind, WrPayload,
-    WrResult, METHOD_RESULT,
+    force_descriptor, Chare, ChareId, Config, Ctx, GCharm, KernelKindId,
+    Msg, Tile, WorkDraft, WrResult, METHOD_RESULT,
 };
 use gcharm::runtime::shapes::{
     INTERACTIONS, INTER_W, PARTICLE_W, PARTS_PER_BUCKET,
@@ -22,6 +23,7 @@ const METHOD_GO: u32 = 1;
 /// single mass-2 attractor at x = 2.
 struct MyBucket {
     id: ChareId,
+    force_kind: KernelKindId,
 }
 
 impl Chare for MyBucket {
@@ -37,16 +39,16 @@ impl Chare for MyBucket {
                 inters[3] = 2.0; // with mass 2
                 ctx.submit(WorkDraft {
                     chare: self.id,
-                    kind: WorkKind::Force,
+                    kind: self.force_kind,
                     buffer: Some(0),
                     data_items: 1,
                     tag: 7,
-                    payload: WrPayload::Force {
-                        parts,
-                        inters,
-                        inter_ids: vec![0],
-                    },
-                });
+                    payload: Tile::with_entries(
+                        vec![parts, inters],
+                        vec![0],
+                    ),
+                })
+                .expect("canonical tile shapes");
             }
             METHOD_RESULT => {
                 let r: WrResult = msg.take();
@@ -65,16 +67,20 @@ impl Chare for MyBucket {
 
 fn main() -> anyhow::Result<()> {
     // 1. configure the runtime (defaults: adaptive combining, sorted reuse)
-    let mut rt = GCharm::new(Config { pes: 2, ..Config::default() });
+    let mut rt = GCharm::new(Config { pes: 2, ..Config::default() })?;
 
-    // 2. register chares before start
+    // 2. register the kernel families the app uses (here: the built-in
+    //    gravity descriptor with softening eps2 = 0.01)
+    let force_kind = rt.register_kernel(force_descriptor(1e-2))?;
+
+    // 3. register chares before start
     let id = ChareId::new(0, 0);
-    rt.register(id, 0, Box::new(MyBucket { id }));
+    rt.register(id, 0, Box::new(MyBucket { id, force_kind }));
 
-    // 3. start PEs + coordinator + GPU service (loads AOT artifacts)
+    // 4. start PEs + coordinator + GPU service (loads AOT artifacts)
     rt.start()?;
 
-    // 4. drive: send a message, await the reduction
+    // 5. drive: send a message, await the reduction
     rt.send(id, Msg::new(METHOD_GO, ()));
     let ax = rt.await_reduction(1);
     println!("reduction value (ax) = {ax:.4}");
@@ -82,7 +88,7 @@ fn main() -> anyhow::Result<()> {
     // expected: a_x = m*r/(r^2+eps2)^1.5 = 2*2/(4.01)^1.5 ~ 0.4981
     assert!((ax - 0.4981).abs() < 1e-3);
 
-    // 5. shutdown returns the run report
+    // 6. shutdown returns the run report
     let report = rt.shutdown();
     println!("\n{report}");
     Ok(())

@@ -1,7 +1,8 @@
 //! Micro-benchmarks of the coordinator hot paths (the L3 perf targets of
 //! EXPERIMENTS.md section Perf): staging arena vs per-launch allocation,
-//! combiner insert (sorted and FIFO), chare-table staging, hybrid queue
-//! split, manifest JSON parse.
+//! registry dispatch vs a hardcoded enum match, combiner insert (sorted
+//! and FIFO), chare-table staging, hybrid queue split, manifest JSON
+//! parse, device-pool makespan scaling (N-Body + SpMV).
 //!
 //! The binary installs a counting global allocator so the arena-vs-naive
 //! comparison reports heap allocations and allocated bytes per staged
@@ -9,20 +10,21 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
+use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench::bench_ns;
 use gcharm::coordinator::{
-    chunk_by_items, ChareId, ChareTable, CombinePolicy, Combiner, Config,
-    DeviceRouter, HybridScheduler, Pending, RoutePolicy, SplitPolicy,
-    WorkKind, WorkRequest, WrPayload,
+    builtin_registry, chunk_by_items, ChareId, ChareTable, CombinePolicy,
+    Combiner, Config, DeviceRouter, HybridScheduler, KernelKindId, Pending,
+    RoutePolicy, SplitPolicy, Tile, WorkRequest,
 };
+use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::shapes::{
     INTERACTIONS, INTER_W, PARTICLE_W, PARTS_PER_BUCKET,
 };
-use gcharm::runtime::{
-    default_artifacts_dir, ExecutorConfig, Manifest, Payload, StagingArena,
-};
+use gcharm::runtime::{default_artifacts_dir, Manifest, Payload, StagingArena};
 use gcharm::util::json::Json;
 use gcharm::util::Rng;
 
@@ -65,12 +67,12 @@ fn pending(id: u64, slot: Option<u32>) -> Pending {
         wr: WorkRequest {
             id,
             chare: ChareId::new(0, 0),
-            kind: WorkKind::Force,
+            kind: KernelKindId(0),
             buffer: Some(id),
             data_items: 64,
             tag: id,
             arrival: 0.0,
-            payload: WrPayload::Ewald { parts: vec![] },
+            payload: Tile::default(),
         },
         slot,
         staged_bytes: 0,
@@ -81,7 +83,7 @@ fn pending(id: u64, slot: Option<u32>) -> Pending {
 /// constant arg, and a variant select + name clone per chunk.
 fn naive_stage(
     manifest: &Manifest,
-    cfg: &ExecutorConfig,
+    eps2: f32,
     parts: &[f32],
     inters: &[f32],
     n: usize,
@@ -94,29 +96,30 @@ fn naive_stage(
     let mut i = vec![0.0f32; b * is];
     p[..n * ps].copy_from_slice(&parts[..n * ps]);
     i[..n * is].copy_from_slice(&inters[..n * is]);
-    (v.name.clone(), vec![p, i, vec![cfg.eps2]])
+    (v.name.clone(), vec![p, i, vec![eps2]])
 }
 
 /// Arena vs per-launch allocation for the gravity staging hot path.
 fn staging_comparison() {
     println!("\nstaging: arena vs per-launch allocation (gravity, n=104)");
-    let cfg = ExecutorConfig::default();
+    let kernel = Arc::new(TileKernel::gravity(1e-2));
     let (manifest, _) =
         Manifest::load_or_synthetic(&default_artifacts_dir()).unwrap();
     let n = 104; // the force kernel's occupancy-derived maxSize
-    let payload = Payload::Gravity {
-        parts: vec![0.5f32; n * PARTS_PER_BUCKET * PARTICLE_W],
-        inters: vec![0.5f32; n * INTERACTIONS * INTER_W],
+    let payload = Payload::Tile {
+        kernel: kernel.clone(),
+        bufs: vec![
+            vec![0.5f32; n * PARTS_PER_BUCKET * PARTICLE_W],
+            vec![0.5f32; n * INTERACTIONS * INTER_W],
+        ],
         batch: n,
     };
     let (parts, inters) = match &payload {
-        Payload::Gravity { parts, inters, .. } => {
-            (parts.clone(), inters.clone())
-        }
+        Payload::Tile { bufs, .. } => (bufs[0].clone(), bufs[1].clone()),
         _ => unreachable!(),
     };
 
-    let mut arena = StagingArena::new(&cfg);
+    let mut arena = StagingArena::new();
     // warm the arena so the comparison shows the steady state
     let c = arena
         .stage_chunk(&manifest, &payload, 0, n, &mut None)
@@ -139,11 +142,11 @@ fn staging_comparison() {
     });
 
     let naive_ns = bench_ns("per-launch alloc staging (old path)", 512, 9, || {
-        let staged = naive_stage(&manifest, &cfg, &parts, &inters, n);
+        let staged = naive_stage(&manifest, 1e-2, &parts, &inters, n);
         std::hint::black_box(&staged);
     });
     let (naive_allocs, naive_bytes) = allocs_per_op(512, || {
-        let staged = naive_stage(&manifest, &cfg, &parts, &inters, n);
+        let staged = naive_stage(&manifest, 1e-2, &parts, &inters, n);
         std::hint::black_box(&staged);
     });
 
@@ -184,6 +187,62 @@ fn staging_comparison() {
     );
 }
 
+/// A closed three-variant enum standing in for the pre-redesign
+/// `WorkKind` match: the baseline the registry's table dispatch is
+/// measured against.
+#[derive(Clone, Copy)]
+enum OldKind {
+    Force,
+    Ewald,
+    Md,
+}
+
+/// Registry table dispatch vs the old hardcoded enum match. The hot-path
+/// question: does going through `registry.get(kind)` (a Vec index + Arc
+/// deref) cost more than matching a closed enum? Target: <= 1% of the
+/// launch hot path, i.e. nanoseconds.
+fn registry_dispatch_comparison() {
+    println!("\nregistry dispatch: table-driven vs closed enum match");
+    let registry = builtin_registry(
+        1e-2,
+        vec![0.0; gcharm::runtime::shapes::KTABLE * gcharm::runtime::shapes::KTAB_W],
+        [1.0, 0.04, 1.0],
+    );
+    let kinds = [KernelKindId(0), KernelKindId(1), KernelKindId(2)];
+    let mut i = 0usize;
+    let table_ns = bench_ns("registry table dispatch", 65536, 9, || {
+        let kind = kinds[i % 3];
+        i += 1;
+        let d = registry.get(kind);
+        // the fields dispatch actually reads per batch
+        std::hint::black_box((
+            d.kernel.max_combine(),
+            d.kernel.out_slot_len(),
+            d.cpu_fallback,
+            d.kernel.reuse_arg,
+        ));
+    });
+    let old = [OldKind::Force, OldKind::Ewald, OldKind::Md];
+    let mut j = 0usize;
+    let match_ns = bench_ns("closed enum match (old path)", 65536, 9, || {
+        let k = old[j % 3];
+        j += 1;
+        let (max, out_slot, hybrid, reuse): (usize, usize, bool, Option<usize>) =
+            match k {
+                OldKind::Force => (104, 64, false, Some(0)),
+                OldKind::Ewald => (65, 64, false, None),
+                OldKind::Md => (208, 128, true, None),
+            };
+        std::hint::black_box((max, out_slot, hybrid, reuse));
+    });
+    println!(
+        "  -> table dispatch {table_ns:.1} ns vs enum match {match_ns:.1} ns \
+         ({:+.1} ns/launch; launch hot path is ~microseconds, so the \
+         indirection is <=1%)",
+        table_ns - match_ns
+    );
+}
+
 /// Device-pool scaling on the N-Body workload: adaptive affinity+steal
 /// routing vs static round-robin device assignment at 1/2/4 simulated
 /// devices. The figure of merit is the *modeled makespan* — the busiest
@@ -191,7 +250,8 @@ fn staging_comparison() {
 /// concurrently. Affinity maximizes per-device residency hits (fewer
 /// transfer bytes); the idle-steal rebalancer shaves the depth imbalance
 /// the rendezvous seeding leaves behind. Round-robin balances counts but
-/// scatters every chare's reuse across all devices.
+/// scatters every chare's reuse across all devices. The SpMV rows drive
+/// the same table through the registry-only workload.
 fn device_pool_scaling() {
     println!("\ndevice pool: N-Body modeled makespan, adaptive vs static routing");
     println!(
@@ -245,12 +305,35 @@ fn device_pool_scaling() {
             );
         }
     }
+
+    println!("\ndevice pool: SpMV (registry-only workload) modeled makespan");
+    println!(
+        "  {:<8} {:>12} {:>10} {:>12} {:>14}",
+        "devices", "makespan s", "launches", "residual^2", "cpu/gpu items"
+    );
+    for devices in [1usize, 2, 4] {
+        let mut cfg = SpmvConfig::new(2048);
+        cfg.iters = 3;
+        cfg.runtime = Config { pes: 4, devices, ..Config::default() };
+        let r = spmv::run(&cfg).expect("spmv run");
+        println!(
+            "  {:<8} {:>12.5} {:>10} {:>12.3e} {:>7}/{}",
+            devices,
+            r.report.device_makespan(),
+            r.report.launches,
+            r.residuals.last().copied().unwrap_or(0.0),
+            r.report.cpu_items,
+            r.report.gpu_items
+        );
+    }
 }
 
 fn main() {
     println!("hot-path micro-benchmarks (median ns/op)");
 
     staging_comparison();
+
+    registry_dispatch_comparison();
 
     device_pool_scaling();
 
@@ -295,8 +378,9 @@ fn main() {
 
     // chare-table staging: miss-heavy and hit-heavy
     {
-        let mut t = ChareTable::new(1024);
-        let buf = vec![1.0f32; PARTS_PER_BUCKET * PARTICLE_W];
+        let slot = PARTS_PER_BUCKET * PARTICLE_W;
+        let mut t = ChareTable::new(1024, slot);
+        let buf = vec![1.0f32; slot];
         let mut i = 0u64;
         bench_ns("chare-table stage (miss-heavy)", 2048, 9, || {
             let s = t.stage_pinned(i % 4096, &buf).unwrap();
@@ -315,12 +399,13 @@ fn main() {
 
     // hybrid split of a 512-request queue
     {
+        let k0 = KernelKindId(0);
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        h.record_cpu(100, 0.010);
-        h.record_gpu(100, 0.002);
+        h.record_cpu(k0, 100, 0.010);
+        h.record_gpu(k0, 100, 0.002);
         bench_ns("hybrid split (512 requests)", 256, 9, || {
             let q: Vec<Pending> = (0..512).map(|i| pending(i, None)).collect();
-            let (c, g) = h.split(q);
+            let (c, g) = h.split(k0, q);
             std::hint::black_box((c.len(), g.len()));
         });
     }

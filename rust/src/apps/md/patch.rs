@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::{
-    Chare, ChareId, Ctx, Msg, WorkDraft, WorkKind, WrPayload, WrResult,
+    Chare, ChareId, Ctx, KernelKindId, Msg, Tile, WorkDraft, WrResult,
     METHOD_RESULT,
 };
 use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
@@ -62,6 +62,9 @@ pub struct Patch {
     gx: usize,
     gy: usize,
     p: PatchParams,
+    /// Registered MD interact kernel kind (from
+    /// `GCharm::register_kernel`).
+    md_kind: KernelKindId,
     particles: Vec<MdParticle>,
 
     // per-step state
@@ -85,6 +88,7 @@ impl Patch {
         gx: usize,
         gy: usize,
         p: PatchParams,
+        md_kind: KernelKindId,
         particles: Vec<MdParticle>,
     ) -> Patch {
         Patch {
@@ -92,6 +96,7 @@ impl Patch {
             gx,
             gy,
             p,
+            md_kind,
             particles,
             started: false,
             dt: 0.0,
@@ -230,12 +235,13 @@ impl Patch {
                 // and the static count-split ignores.
                 ctx.submit(WorkDraft {
                     chare: self.id,
-                    kind: WorkKind::MdInteract,
+                    kind: self.md_kind,
                     buffer: None,
                     data_items: (my_count * their_count).max(1),
                     tag: ci as u64,
-                    payload: WrPayload::MdPair { pa: mine.clone(), pb },
-                });
+                    payload: Tile::new(vec![mine.clone(), pb]),
+                })
+                .expect("canonical md tile shapes");
                 self.expected_results += 1;
             }
         }
@@ -391,6 +397,7 @@ mod tests {
             gx,
             gy,
             PatchParams { grid, box_l: 8.0 },
+            KernelKindId(0),
             Vec::new(),
         )
     }

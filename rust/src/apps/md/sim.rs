@@ -11,8 +11,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::cpu_kernels::cpu_md_interact;
-use crate::coordinator::{ChareId, Config, GCharm, Msg, Report};
-use crate::runtime::executor::ExecutorConfig;
+use crate::coordinator::{
+    md_descriptor, ChareId, Config, GCharm, Msg, Report,
+};
 use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
 use crate::util::Rng;
 
@@ -148,13 +149,8 @@ pub fn run(cfg: &MdConfig) -> Result<MdResult> {
     let bins = bin_particles(cfg.generate(), cfg.grid, cfg.box_l);
     let npatches = cfg.grid * cfg.grid;
 
-    let mut rt = GCharm::new(Config {
-        executor: ExecutorConfig {
-            md_params: cfg.md_params(),
-            ..ExecutorConfig::default()
-        },
-        ..cfg.runtime.clone()
-    });
+    let mut rt = GCharm::new(cfg.runtime.clone())?;
+    let md_kind = rt.register_kernel(md_descriptor(cfg.md_params()))?;
     let params = PatchParams { grid: cfg.grid, box_l: cfg.box_l };
     for (i, bin) in bins.into_iter().enumerate() {
         let id = ChareId::new(MD_COLLECTION, i as u32);
@@ -163,7 +159,7 @@ pub fn run(cfg: &MdConfig) -> Result<MdResult> {
         rt.register(
             id,
             i % cfg.runtime.pes,
-            Box::new(Patch::new(id, gx, gy, params, bin)),
+            Box::new(Patch::new(id, gx, gy, params, md_kind, bin)),
         );
     }
     rt.start()?;

@@ -1,4 +1,7 @@
-//! The paper's two evaluation applications, built on the G-Charm runtime.
+//! Applications built on the G-Charm runtime: the paper's two evaluation
+//! workloads (N-Body, MD) plus an SpMV-style sparse neighbor-update
+//! mini-app registered purely through the open kernel-registry API.
 
 pub mod md;
 pub mod nbody;
+pub mod spmv;

@@ -23,10 +23,10 @@ use anyhow::Result;
 use crate::coordinator::Report;
 use crate::runtime::device_sim::CoalescingClass;
 use crate::runtime::executor::{Executor, LaunchSpec, Payload};
+use crate::runtime::kernel::TileKernel;
 use crate::runtime::shapes::{
     INTERACTIONS, INTER_W, OUT_W, PARTICLE_W, PARTS_PER_BUCKET,
 };
-use crate::runtime::{occupancy, GpuSpec, KernelResources};
 use crate::util::Vec3;
 
 use super::tree::Tree;
@@ -43,13 +43,14 @@ struct Unit {
 /// Run the hand-tuned driver.
 pub fn run_handtuned(cfg: &NbodyConfig) -> Result<NbodyResult> {
     let mut particles = cfg.dataset.generate();
-    let mut exec =
-        Executor::new(&cfg.runtime.artifacts, cfg.executor_config_pub())?;
-    let spec = GpuSpec::kepler_k20();
-    let force_max =
-        occupancy(&spec, &KernelResources::force_kernel()).max_size as usize;
-    let ewald_max =
-        occupancy(&spec, &KernelResources::ewald_kernel()).max_size as usize;
+    let gravity = Arc::new(TileKernel::gravity(cfg.eps2));
+    let ewald = Arc::new(TileKernel::ewald(cfg.ktable()));
+    let mut exec = Executor::new(
+        &cfg.runtime.artifacts,
+        vec![gravity.clone(), ewald.clone()],
+    )?;
+    let force_max = gravity.max_combine();
+    let ewald_max = ewald.max_combine();
 
     let t0 = Instant::now();
     let mut energies = Vec::with_capacity(cfg.iters);
@@ -124,7 +125,11 @@ pub fn run_handtuned(cfg: &NbodyConfig) -> Result<NbodyResult> {
             }
             let done = exec.run(LaunchSpec {
                 id: launch_id,
-                payload: Payload::Gravity { parts, inters, batch: n },
+                payload: Payload::Tile {
+                    kernel: gravity.clone(),
+                    bufs: vec![parts, inters],
+                    batch: n,
+                },
                 transfer_bytes: bytes,
                 pattern: CoalescingClass::Contiguous,
             })?;
@@ -167,7 +172,11 @@ pub fn run_handtuned(cfg: &NbodyConfig) -> Result<NbodyResult> {
                 }
                 let done = exec.run(LaunchSpec {
                     id: launch_id,
-                    payload: Payload::Ewald { parts, batch: n },
+                    payload: Payload::Tile {
+                        kernel: ewald.clone(),
+                        bufs: vec![parts],
+                        batch: n,
+                    },
                     transfer_bytes: bytes,
                     pattern: CoalescingClass::Contiguous,
                 })?;
@@ -218,21 +227,5 @@ fn fold(tree: &Tree, bucket: usize, out: &[f32], acc: &mut [(Vec3, f64)]) {
             out[j * OUT_W + 2] as f64,
         );
         slot.1 += out[j * OUT_W + 3] as f64;
-    }
-}
-
-impl NbodyConfig {
-    /// Public accessor for the executor config (used by the hand-tuned
-    /// driver and the Fig benches).
-    pub fn executor_config_pub(&self) -> crate::runtime::executor::ExecutorConfig {
-        crate::runtime::executor::ExecutorConfig {
-            eps2: self.eps2,
-            ktab: super::ewald::ktable(
-                self.dataset.box_size,
-                self.alpha / self.dataset.box_size,
-            ),
-            md_params: crate::runtime::executor::ExecutorConfig::default()
-                .md_params,
-        }
     }
 }

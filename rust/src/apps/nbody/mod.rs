@@ -25,8 +25,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::{ChareId, Config, GCharm, Msg, Report};
-use crate::runtime::executor::ExecutorConfig;
+use crate::coordinator::{
+    ewald_descriptor, force_descriptor, ChareId, Config, GCharm, Msg, Report,
+};
 
 use dataset::DatasetSpec;
 use tree::{Particle, Tree};
@@ -69,12 +70,12 @@ impl NbodyConfig {
         }
     }
 
-    fn executor_config(&self) -> ExecutorConfig {
-        ExecutorConfig {
-            eps2: self.eps2,
-            ktab: ewald::ktable(self.dataset.box_size, self.alpha / self.dataset.box_size),
-            md_params: ExecutorConfig::default().md_params,
-        }
+    /// The Ewald k-vector table for this configuration.
+    pub fn ktable(&self) -> Vec<f32> {
+        ewald::ktable(
+            self.dataset.box_size,
+            self.alpha / self.dataset.box_size,
+        )
     }
 }
 
@@ -104,14 +105,16 @@ fn assign_buckets(nbuckets: usize, pieces: usize) -> Vec<Vec<usize>> {
 fn run_inner(cfg: &NbodyConfig, cpu_only: bool) -> Result<NbodyResult> {
     let particles = cfg.dataset.generate();
     let master = Arc::new(Mutex::new(particles));
-    let ktab = Arc::new(cfg.executor_config().ktab.clone());
+    let ktab = Arc::new(cfg.ktable());
 
     let pes = cfg.runtime.pes;
     let npieces = (pes * cfg.pieces_per_pe).max(1);
-    let mut rt = GCharm::new(Config {
-        executor: cfg.executor_config(),
-        ..cfg.runtime.clone()
-    });
+    let mut rt = GCharm::new(cfg.runtime.clone())?;
+    // Register the app's kernel families: this is the whole GPU surface
+    // the app needs — the runtime learns the shapes, occupancy, and reuse
+    // wiring from the descriptors.
+    let force_kind = rt.register_kernel(force_descriptor(cfg.eps2))?;
+    let ewald_kind = rt.register_kernel(ewald_descriptor(ktab.to_vec()))?;
     for i in 0..npieces {
         let id = ChareId::new(NBODY_COLLECTION, i as u32);
         rt.register(id, i % pes, Box::new(TreePiece::new(id)));
@@ -137,6 +140,8 @@ fn run_inner(cfg: &NbodyConfig, cpu_only: bool) -> Result<NbodyResult> {
                         snapshot: snapshot.clone(),
                         master: master.clone(),
                         buckets: bucket_ids,
+                        force_kind,
+                        ewald_kind,
                         theta: cfg.theta,
                         dt: cfg.dt,
                         do_ewald: cfg.do_ewald,

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{
-    Chare, ChareId, Ctx, Msg, WorkDraft, WorkKind, WrPayload, WrResult,
+    Chare, ChareId, Ctx, KernelKindId, Msg, Tile, WorkDraft, WrResult,
     METHOD_RESULT,
 };
 use crate::runtime::shapes::{
@@ -40,6 +40,10 @@ pub struct StartMsg {
     pub master: Arc<Mutex<Vec<Particle>>>,
     /// Bucket ids assigned to this piece.
     pub buckets: Vec<usize>,
+    /// Registered kernel kinds (from `GCharm::register_kernel`) the piece
+    /// tags its force and Ewald work requests with.
+    pub force_kind: KernelKindId,
+    pub ewald_kind: KernelKindId,
     pub theta: f64,
     pub dt: f64,
     pub do_ewald: bool,
@@ -151,27 +155,28 @@ impl TreePiece {
                 }
                 ctx.submit(WorkDraft {
                     chare: self.id,
-                    kind: WorkKind::Force,
+                    kind: m.force_kind,
                     buffer: Some(b as u64),
                     data_items: chunk.len(),
                     tag: b as u64,
-                    payload: WrPayload::Force {
-                        parts: pbuf.clone(),
-                        inters,
-                        inter_ids: ids.to_vec(),
-                    },
-                });
+                    payload: Tile::with_entries(
+                        vec![pbuf.clone(), inters],
+                        ids.to_vec(),
+                    ),
+                })
+                .expect("canonical force tile shapes");
                 self.expected += 1;
             }
             if m.do_ewald {
                 ctx.submit(WorkDraft {
                     chare: self.id,
-                    kind: WorkKind::Ewald,
-                    buffer: Some(b as u64),
+                    kind: m.ewald_kind,
+                    buffer: None,
                     data_items: pids.len(),
                     tag: b as u64,
-                    payload: WrPayload::Ewald { parts: pbuf.clone() },
-                });
+                    payload: Tile::new(vec![pbuf.clone()]),
+                })
+                .expect("canonical ewald tile shape");
                 self.expected += 1;
             }
         }

@@ -356,7 +356,7 @@ pub fn run_fig5(scale: &Scale) {
             cfg.runtime = Config {
                 pes: 4,
                 split,
-                hybrid_md: true,
+                hybrid: true,
                 cpu_workers,
                 ..Config::default()
             };

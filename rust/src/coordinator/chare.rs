@@ -7,8 +7,10 @@
 //! an `Any` payload (apps downcast to their message types).
 
 use std::any::Any;
+use std::sync::Arc;
 
-use super::work_request::{WorkKind, WrPayload, WrResult};
+use super::registry::{KernelKindId, KernelRegistry, ShapeError};
+use super::work_request::{Tile, WrResult};
 use crate::runtime::memory::BufferId;
 
 /// Identity of a chare: (collection, index) -- like a Charm++ chare-array
@@ -61,12 +63,13 @@ impl std::fmt::Debug for Msg {
 #[derive(Debug, Clone)]
 pub struct WorkDraft {
     pub chare: ChareId,
-    pub kind: WorkKind,
+    /// Registered kernel family (from `GCharm::register_kernel`).
+    pub kind: KernelKindId,
     pub buffer: Option<BufferId>,
     pub data_items: usize,
     /// Correlation tag echoed in the result (e.g. bucket index).
     pub tag: u64,
-    pub payload: WrPayload,
+    pub payload: Tile,
 }
 
 /// Effects an entry method can produce. Collected by the context during
@@ -84,12 +87,18 @@ pub enum Effect {
 /// Execution context handed to entry methods.
 pub struct Ctx {
     pub pe: usize,
+    registry: Arc<KernelRegistry>,
     pub(crate) effects: Vec<Effect>,
 }
 
 impl Ctx {
-    pub(crate) fn new(pe: usize) -> Ctx {
-        Ctx { pe, effects: Vec::new() }
+    pub(crate) fn new(pe: usize, registry: Arc<KernelRegistry>) -> Ctx {
+        Ctx { pe, registry, effects: Vec::new() }
+    }
+
+    /// The frozen kernel registry (shape lookups, name -> kind).
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
     }
 
     /// Invoke an entry method on another chare (asynchronous).
@@ -98,9 +107,14 @@ impl Ctx {
     }
 
     /// Submit GPU/hybrid work to the runtime (G-Charm's
-    /// `gcharm_insert_request`).
-    pub fn submit(&mut self, draft: WorkDraft) {
+    /// `gcharm_insert_request`). The payload is validated against the
+    /// registered tile shapes here, so a malformed buffer is rejected at
+    /// the submission site — with the offending argument named — instead
+    /// of corrupting a combined launch downstream.
+    pub fn submit(&mut self, draft: WorkDraft) -> Result<(), ShapeError> {
+        self.registry.check(draft.kind, &draft.payload)?;
         self.effects.push(Effect::Work(draft));
+        Ok(())
     }
 
     /// Contribute `value` to the run's reduction; the driver's
@@ -126,6 +140,19 @@ pub type ResultMsg = WrResult;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::registry::builtin_registry;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, KTABLE, KTAB_W, PARTICLE_W, PARTS_PER_BUCKET,
+    };
+
+    fn ctx(pe: usize) -> Ctx {
+        let reg = builtin_registry(
+            1e-2,
+            vec![0.0; KTABLE * KTAB_W],
+            [1.0, 0.04, 1.0],
+        );
+        Ctx::new(pe, Arc::new(reg))
+    }
 
     #[test]
     fn msg_roundtrip() {
@@ -144,7 +171,7 @@ mod tests {
 
     #[test]
     fn ctx_collects_effects_in_order() {
-        let mut ctx = Ctx::new(2);
+        let mut ctx = ctx(2);
         ctx.send(ChareId::new(0, 1), Msg::new(0, ()));
         ctx.contribute(1.5);
         let effects = ctx.drain();
@@ -152,6 +179,35 @@ mod tests {
         assert!(matches!(effects[0], Effect::Send(..)));
         assert!(matches!(effects[1], Effect::Contribute(v) if v == 1.5));
         assert!(ctx.drain().is_empty());
+    }
+
+    #[test]
+    fn submit_validates_shapes_at_the_submission_site() {
+        let mut ctx = ctx(0);
+        let good = WorkDraft {
+            chare: ChareId::new(0, 0),
+            kind: KernelKindId(0),
+            buffer: None,
+            data_items: 1,
+            tag: 0,
+            payload: Tile::new(vec![
+                vec![0.0; PARTS_PER_BUCKET * PARTICLE_W],
+                vec![0.0; INTERACTIONS * INTER_W],
+            ]),
+        };
+        assert!(ctx.submit(good).is_ok());
+        let bad = WorkDraft {
+            chare: ChareId::new(0, 0),
+            kind: KernelKindId(0),
+            buffer: None,
+            data_items: 1,
+            tag: 0,
+            payload: Tile::new(vec![vec![0.0; 5], vec![]]),
+        };
+        let e = ctx.submit(bad).unwrap_err();
+        assert_eq!(e.arg, "parts");
+        // only the valid draft became an effect
+        assert_eq!(ctx.drain().len(), 1);
     }
 
     #[test]

@@ -11,20 +11,25 @@
 //! the gather kernels receive as their `pool` argument -- physically the
 //! whole mirror accompanies each PJRT call (the CPU client is the simulated
 //! device), but the *accounted* PCIe bytes follow the paper's model.
+//!
+//! Slot size is per table: each registered kernel family with a reuse arg
+//! gets tables shaped to that arg's `rows * width` tile, so the table
+//! serves any registered family, not just bucket buffers.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::memory::{BufferId, DeviceMemory};
-use crate::runtime::shapes::{PARTICLE_W, PARTS_PER_BUCKET};
 
 /// Chare-buffer residency manager over the simulated device pool.
 #[derive(Debug)]
 pub struct ChareTable {
     mem: DeviceMemory,
-    /// Host mirror of the device particle pool:
-    /// capacity * PARTS_PER_BUCKET rows of PARTICLE_W floats. Shared (Arc)
-    /// with in-flight launches; staging uses copy-on-write so a launch
-    /// never copies the pool unless one is concurrently in flight.
+    /// Floats per slot (the registered reuse tile's `rows * width`).
+    slot_floats: usize,
+    /// Host mirror of the device pool: `slots * slot_floats` floats.
+    /// Shared (Arc) with in-flight launches; staging uses copy-on-write so
+    /// a launch never copies the pool unless one is concurrently in
+    /// flight.
     pool: std::sync::Arc<Vec<f32>>,
     /// Accounted PCIe bytes actually transferred (misses).
     transferred: u64,
@@ -42,14 +47,13 @@ pub struct Staged {
 }
 
 impl ChareTable {
-    /// `slots`: device pool capacity in bucket-buffer slots.
-    pub fn new(slots: usize) -> ChareTable {
+    /// `slots`: device pool capacity in buffer slots; `slot_floats`: the
+    /// float count of one buffer (one reuse-arg tile).
+    pub fn new(slots: usize, slot_floats: usize) -> ChareTable {
         ChareTable {
             mem: DeviceMemory::new(slots),
-            pool: std::sync::Arc::new(vec![
-                0.0;
-                slots * PARTS_PER_BUCKET * PARTICLE_W
-            ]),
+            slot_floats,
+            pool: std::sync::Arc::new(vec![0.0; slots * slot_floats]),
             transferred: 0,
             saved: 0,
         }
@@ -59,9 +63,9 @@ impl ChareTable {
         self.mem.capacity()
     }
 
-    /// Pool rows (particles) in the mirror.
-    pub fn pool_rows(&self) -> usize {
-        self.mem.capacity() * PARTS_PER_BUCKET
+    /// Floats in one slot of this table.
+    pub fn slot_floats(&self) -> usize {
+        self.slot_floats
     }
 
     pub fn pool(&self) -> &[f32] {
@@ -73,11 +77,11 @@ impl ChareTable {
         self.pool.clone()
     }
 
-    /// Stage `data` (one bucket buffer, P x 4 floats) for `id` and pin its
+    /// Stage `data` (one buffer, `slot_floats` floats) for `id` and pin its
     /// slot until `release` -- pending combined launches must not lose
     /// their slots to eviction.
     pub fn stage_pinned(&mut self, id: BufferId, data: &[f32]) -> Result<Staged> {
-        let slot_floats = PARTS_PER_BUCKET * PARTICLE_W;
+        let slot_floats = self.slot_floats;
         if data.len() != slot_floats {
             bail!("buffer {id}: expected {slot_floats} floats, got {}", data.len());
         }
@@ -145,14 +149,21 @@ impl ChareTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::shapes::{PARTICLE_W, PARTS_PER_BUCKET};
+
+    const SLOT: usize = PARTS_PER_BUCKET * PARTICLE_W;
 
     fn buf(v: f32) -> Vec<f32> {
-        vec![v; PARTS_PER_BUCKET * PARTICLE_W]
+        vec![v; SLOT]
+    }
+
+    fn table(slots: usize) -> ChareTable {
+        ChareTable::new(slots, SLOT)
     }
 
     #[test]
     fn miss_then_hit_accounting() {
-        let mut t = ChareTable::new(8);
+        let mut t = table(8);
         let a = t.stage_pinned(1, &buf(1.0)).unwrap();
         assert!(a.bytes > 0);
         t.release(1);
@@ -168,22 +179,32 @@ mod tests {
 
     #[test]
     fn pool_mirror_holds_staged_data() {
-        let mut t = ChareTable::new(4);
+        let mut t = table(4);
         let s = t.stage_pinned(9, &buf(3.5)).unwrap();
-        let off = s.slot as usize * PARTS_PER_BUCKET * PARTICLE_W;
+        let off = s.slot as usize * SLOT;
         assert!(t.pool()[off..off + 4].iter().all(|&x| x == 3.5));
         t.release(9);
     }
 
     #[test]
     fn wrong_size_rejected() {
-        let mut t = ChareTable::new(4);
+        let mut t = table(4);
         assert!(t.stage_pinned(1, &[0.0; 3]).is_err());
     }
 
     #[test]
+    fn custom_slot_size_is_respected() {
+        // a 3x2-tile family gets a 6-float slot table
+        let mut t = ChareTable::new(4, 6);
+        assert_eq!(t.slot_floats(), 6);
+        assert_eq!(t.pool().len(), 24);
+        assert!(t.stage_pinned(1, &[1.0; 6]).is_ok());
+        assert!(t.stage_pinned(2, &[1.0; SLOT]).is_err());
+    }
+
+    #[test]
     fn exhaustion_when_all_pinned() {
-        let mut t = ChareTable::new(2);
+        let mut t = table(2);
         t.stage_pinned(1, &buf(1.0)).unwrap();
         t.stage_pinned(2, &buf(2.0)).unwrap();
         assert!(t.stage_pinned(3, &buf(3.0)).is_err());
@@ -193,7 +214,7 @@ mod tests {
 
     #[test]
     fn invalidate_forces_retransfer() {
-        let mut t = ChareTable::new(4);
+        let mut t = table(4);
         t.stage_pinned(5, &buf(1.0)).unwrap();
         t.release(5);
         t.invalidate(5);
@@ -204,7 +225,7 @@ mod tests {
 
     #[test]
     fn hit_rate_tracks() {
-        let mut t = ChareTable::new(4);
+        let mut t = table(4);
         assert_eq!(t.hit_rate(), 0.0);
         t.stage_pinned(1, &buf(1.0)).unwrap();
         t.release(1);

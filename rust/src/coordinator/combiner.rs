@@ -239,18 +239,19 @@ impl Combiner {
 mod tests {
     use super::*;
     use crate::coordinator::chare::ChareId;
-    use crate::coordinator::work_request::{WorkKind, WrPayload};
+    use crate::coordinator::registry::KernelKindId;
+    use crate::coordinator::work_request::Tile;
 
     fn wr(id: u64, arrival: f64) -> WorkRequest {
         WorkRequest {
             id,
             chare: ChareId::new(0, id as u32),
-            kind: WorkKind::Force,
+            kind: KernelKindId(0),
             buffer: Some(id),
             data_items: 10,
             tag: 0,
             arrival,
-            payload: WrPayload::Ewald { parts: vec![] },
+            payload: Tile::default(),
         }
     }
 

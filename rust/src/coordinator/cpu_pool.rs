@@ -1,6 +1,6 @@
 //! CPU worker pool for the hybrid split (paper section 3.3).
 //!
-//! The CPU half of a hybrid MD split used to ride on the PE threads,
+//! The CPU half of a hybrid split used to ride on the PE threads,
 //! serialized behind whatever chare messages each PE was already
 //! processing. This pool gives the CPU side its own small set of worker
 //! threads: a flushed batch's CPU prefix is chunked by cumulative
@@ -12,6 +12,10 @@
 //! split sees the pool's true per-item rate (W workers make the pool ~W
 //! times faster per item than one worker; recording per-chunk rates would
 //! report the single-worker rate instead).
+//!
+//! Execution is table-driven: each request's registered family provides
+//! the native `slot_fn` and constant, so any family with
+//! `cpu_fallback: true` runs here without pool changes.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -21,13 +25,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::executor::ExecutorConfig;
 use crate::util::timeline::SpanKind;
 
 use super::combiner::Pending;
-use super::cpu_kernels::{cpu_ewald, cpu_gravity, cpu_md_interact};
+use super::registry::KernelRegistry;
 use super::scheduler::{CoordMsg, Shared};
-use super::work_request::{WrPayload, WrResult};
+use super::work_request::WrResult;
 use super::ChareId;
 
 /// Messages a pool worker consumes.
@@ -37,25 +40,20 @@ enum PoolMsg {
     Stop,
 }
 
-/// Execute a slice of pending work requests with the native CPU kernels.
-/// Returns (total data items, per-request results).
+/// Execute a slice of pending work requests with their families' native
+/// slot functions. Returns (total data items, per-request results).
 pub(crate) fn execute_pending(
+    registry: &KernelRegistry,
     batch: &[Pending],
-    cfg: &ExecutorConfig,
 ) -> (usize, Vec<(ChareId, WrResult)>) {
     let mut items = 0usize;
     let mut results = Vec::with_capacity(batch.len());
     for p in batch {
         items += p.wr.data_items;
-        let out = match &p.wr.payload {
-            WrPayload::MdPair { pa, pb } => {
-                cpu_md_interact(pa, pb, cfg.md_params)
-            }
-            WrPayload::Force { parts, inters, .. } => {
-                cpu_gravity(parts, inters, cfg.eps2)
-            }
-            WrPayload::Ewald { parts } => cpu_ewald(parts, &cfg.ktab),
-        };
+        let kernel = registry.kernel(p.wr.kind);
+        let slices: Vec<&[f32]> =
+            p.wr.payload.bufs.iter().map(Vec::as_slice).collect();
+        let out = (kernel.slot_fn)(&slices, &kernel.constant);
         results.push((
             p.wr.chare,
             WrResult {
@@ -111,7 +109,7 @@ impl CpuPool {
         workers: usize,
         coord: Sender<CoordMsg>,
         shared: Arc<Shared>,
-        cfg: ExecutorConfig,
+        registry: Arc<KernelRegistry>,
     ) -> Result<CpuPool> {
         let workers = workers.max(1);
         let mut txs = Vec::with_capacity(workers);
@@ -120,11 +118,11 @@ impl CpuPool {
             let (tx, rx) = channel::<PoolMsg>();
             let coord = coord.clone();
             let shared = shared.clone();
-            let cfg = cfg.clone();
+            let registry = registry.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("cpu-pool-{w}"))
-                    .spawn(move || worker_loop(rx, coord, shared, cfg))?,
+                    .spawn(move || worker_loop(rx, coord, shared, registry))?,
             );
             txs.push(tx);
         }
@@ -169,13 +167,13 @@ fn worker_loop(
     rx: Receiver<PoolMsg>,
     coord: Sender<CoordMsg>,
     shared: Arc<Shared>,
-    cfg: ExecutorConfig,
+    registry: Arc<KernelRegistry>,
 ) {
     while let Ok(msg) = rx.recv() {
         match msg {
             PoolMsg::Chunk { batch, items } => {
                 let t0 = Instant::now();
-                let (n_items, results) = execute_pending(&items, &cfg);
+                let (n_items, results) = execute_pending(&registry, &items);
                 let secs = t0.elapsed().as_secs_f64();
                 shared.timeline.record(
                     SpanKind::CpuTask,
@@ -207,8 +205,17 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::work_request::{WorkKind, WorkRequest};
+    use crate::coordinator::registry::{
+        md_descriptor, KernelKindId, KernelRegistry,
+    };
+    use crate::coordinator::work_request::{Tile, WorkRequest};
     use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
+
+    fn md_registry() -> Arc<KernelRegistry> {
+        let mut reg = KernelRegistry::new();
+        reg.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
+        Arc::new(reg)
+    }
 
     fn md_pending(id: u64, items: usize) -> Pending {
         let mut pa = vec![MD_PAD_POS; PARTS_PER_PATCH * MD_W];
@@ -221,12 +228,12 @@ mod tests {
             wr: WorkRequest {
                 id,
                 chare: ChareId::new(0, id as u32),
-                kind: WorkKind::MdInteract,
+                kind: KernelKindId(0),
                 buffer: None,
                 data_items: items,
                 tag: id,
                 arrival: 0.0,
-                payload: WrPayload::MdPair { pa, pb },
+                payload: Tile::new(vec![pa, pb]),
             },
             slot: None,
             staged_bytes: 0,
@@ -271,16 +278,22 @@ mod tests {
     }
 
     #[test]
+    fn execute_pending_runs_registered_slot_fn() {
+        let reg = md_registry();
+        let (items, results) = execute_pending(&reg, &[md_pending(5, 2)]);
+        assert_eq!(items, 2);
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].1.wr_id, 5);
+        assert!(results[0].1.out[0] < 0.0, "repelled in -x");
+    }
+
+    #[test]
     fn pool_executes_chunks_on_two_workers() {
         let (coord_tx, coord_rx) = channel::<CoordMsg>();
         let shared = Shared::new();
-        let mut pool = CpuPool::spawn(
-            2,
-            coord_tx,
-            shared.clone(),
-            ExecutorConfig::default(),
-        )
-        .unwrap();
+        let mut pool =
+            CpuPool::spawn(2, coord_tx, shared.clone(), md_registry())
+                .unwrap();
 
         let batch: Vec<Pending> =
             (0..8).map(|i| md_pending(i, 4)).collect();
@@ -316,13 +329,9 @@ mod tests {
     fn pool_batches_correlate_by_id() {
         let (coord_tx, coord_rx) = channel::<CoordMsg>();
         let shared = Shared::new();
-        let mut pool = CpuPool::spawn(
-            3,
-            coord_tx,
-            shared.clone(),
-            ExecutorConfig::default(),
-        )
-        .unwrap();
+        let mut pool =
+            CpuPool::spawn(3, coord_tx, shared.clone(), md_registry())
+                .unwrap();
         let (id_a, n_a) =
             pool.submit((0..6).map(|i| md_pending(i, 2)).collect());
         let (id_b, n_b) =

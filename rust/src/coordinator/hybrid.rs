@@ -1,16 +1,19 @@
 //! Dynamic hybrid CPU/GPU scheduling (paper section 3.3).
 //!
-//! For kinds with both CPU and GPU kernels (MD interact), the runtime
-//! executes initial tasks on both devices, maintains *running averages of
-//! the time per input data item* on each, and splits the work-request queue
-//! by the resulting performance ratio: the queue is scanned front to back,
-//! accumulating data items, and cut where the cumulative sum crosses the
-//! CPU's share. The static baseline splits by request *count* only,
+//! For registered kernel families with both CPU and GPU kernels
+//! (`KernelDescriptor::cpu_fallback`), the runtime executes initial tasks
+//! on both devices, maintains *running averages of the time per input
+//! data item* on each — per family, so an MD pair item and a sparse-row
+//! item never pollute each other's model — and splits the work-request
+//! queue by the resulting performance ratio: the queue is scanned front to
+//! back, accumulating data items, and cut where the cumulative sum crosses
+//! the CPU's share. The static baseline splits by request *count* only,
 //! ignoring per-request workloads.
 
 use crate::util::RunningAverage;
 
 use super::combiner::Pending;
+use super::registry::KernelKindId;
 
 /// Queue-splitting policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,19 +25,21 @@ pub enum SplitPolicy {
     AdaptiveItems,
 }
 
-/// Per-device running averages and the splitting logic.
+/// Per-kind, per-device running averages and the splitting logic.
 ///
-/// Two observation streams fold into this scheduler: the CPU/GPU split
-/// (`record_cpu` / `record_gpu`, MD interact only — the one kind with
-/// kernels on both sides) and the per-GPU-device rates (`record_device`,
-/// every completed launch on every device). The second stream is what the
+/// Two observation streams fold into this scheduler: the per-family
+/// CPU/GPU split rates (`record_cpu` / `record_gpu`, hybrid-eligible
+/// kinds only) and the per-GPU-device rates (`record_device`, every
+/// completed launch on every device). The second stream is what the
 /// sharded pool's steal rebalancer weighs pending depths by, so the
 /// hybrid split and the device shares come from the same measurements.
 #[derive(Debug)]
 pub struct HybridScheduler {
     policy: SplitPolicy,
-    cpu_per_item: RunningAverage,
-    gpu_per_item: RunningAverage,
+    /// Per-kind CPU seconds-per-item averages.
+    cpu_per_item: Vec<RunningAverage>,
+    /// Per-kind GPU seconds-per-item averages.
+    gpu_per_item: Vec<RunningAverage>,
     /// Per-GPU-device seconds-per-item averages (all kernel kinds).
     device_per_item: Vec<RunningAverage>,
     /// Bootstrap split until both devices have at least one sample.
@@ -42,16 +47,22 @@ pub struct HybridScheduler {
 }
 
 impl HybridScheduler {
+    /// Single-kind, single-device scheduler (unit tests / simple setups).
     pub fn new(policy: SplitPolicy) -> HybridScheduler {
-        HybridScheduler::with_devices(policy, 1)
+        HybridScheduler::with_kinds(policy, 1, 1)
     }
 
-    /// Scheduler aware of `devices` GPU devices (clamped to >= 1).
-    pub fn with_devices(policy: SplitPolicy, devices: usize) -> HybridScheduler {
+    /// Scheduler over `kinds` registered families and `devices` GPU
+    /// devices (both clamped to >= 1).
+    pub fn with_kinds(
+        policy: SplitPolicy,
+        kinds: usize,
+        devices: usize,
+    ) -> HybridScheduler {
         HybridScheduler {
             policy,
-            cpu_per_item: RunningAverage::new(),
-            gpu_per_item: RunningAverage::new(),
+            cpu_per_item: vec![RunningAverage::new(); kinds.max(1)],
+            gpu_per_item: vec![RunningAverage::new(); kinds.max(1)],
             device_per_item: vec![RunningAverage::new(); devices.max(1)],
             bootstrap_cpu_share: 0.5,
         }
@@ -65,22 +76,33 @@ impl HybridScheduler {
         self.device_per_item.len()
     }
 
-    /// Record a CPU execution: `items` data items in `secs` seconds.
+    /// Registered kinds this scheduler models.
+    pub fn kinds(&self) -> usize {
+        self.cpu_per_item.len()
+    }
+
+    /// Record a CPU execution of one family: `items` data items in `secs`
+    /// seconds.
     ///
     /// The coordinator folds a worker-pool batch into a single
     /// observation -- total items over the batch *makespan* (longest
     /// chunk) -- so with W concurrent workers the learned per-item rate
     /// reflects the pool's true throughput, not a single worker's.
-    pub fn record_cpu(&mut self, items: usize, secs: f64) {
+    pub fn record_cpu(&mut self, kind: KernelKindId, items: usize, secs: f64) {
         if items > 0 {
-            self.cpu_per_item.update(secs / items as f64);
+            if let Some(avg) = self.cpu_per_item.get_mut(kind.0) {
+                avg.update(secs / items as f64);
+            }
         }
     }
 
-    /// Record a GPU execution (kernel time for the combined batch).
-    pub fn record_gpu(&mut self, items: usize, secs: f64) {
+    /// Record a GPU execution of one family (kernel time for the combined
+    /// batch).
+    pub fn record_gpu(&mut self, kind: KernelKindId, items: usize, secs: f64) {
         if items > 0 {
-            self.gpu_per_item.update(secs / items as f64);
+            if let Some(avg) = self.gpu_per_item.get_mut(kind.0) {
+                avg.update(secs / items as f64);
+            }
         }
     }
 
@@ -122,32 +144,43 @@ impl HybridScheduler {
         speeds.iter().map(|s| s / total).collect()
     }
 
-    /// CPU time-per-item / GPU time-per-item, once both are measured.
-    pub fn perf_ratio(&self) -> Option<f64> {
-        match (self.cpu_per_item.mean(), self.gpu_per_item.mean()) {
+    /// CPU time-per-item / GPU time-per-item for one family, once both
+    /// are measured.
+    pub fn perf_ratio(&self, kind: KernelKindId) -> Option<f64> {
+        let c = self.cpu_per_item.get(kind.0).and_then(|a| a.mean());
+        let g = self.gpu_per_item.get(kind.0).and_then(|a| a.mean());
+        match (c, g) {
             (Some(c), Some(g)) if g > 0.0 => Some(c / g),
             _ => None,
         }
     }
 
-    /// Fraction of total work the CPU should take: share = (1/c)/(1/c+1/g)
-    /// = g / (c + g). Falls back to the bootstrap share before both
-    /// devices have samples (paper: run initial tasks on both).
-    pub fn cpu_share(&self) -> f64 {
-        match (self.cpu_per_item.mean(), self.gpu_per_item.mean()) {
+    /// Fraction of one family's work the CPU should take:
+    /// share = (1/c)/(1/c+1/g) = g / (c + g). Falls back to the bootstrap
+    /// share before both devices have samples (paper: run initial tasks on
+    /// both).
+    pub fn cpu_share(&self, kind: KernelKindId) -> f64 {
+        let c = self.cpu_per_item.get(kind.0).and_then(|a| a.mean());
+        let g = self.gpu_per_item.get(kind.0).and_then(|a| a.mean());
+        match (c, g) {
             (Some(c), Some(g)) if c + g > 0.0 => g / (c + g),
             _ => self.bootstrap_cpu_share,
         }
     }
 
-    /// Split a drained queue into (cpu, gpu) sets per the policy. Order is
-    /// preserved: the CPU takes a prefix, the GPU the suffix (the paper
-    /// scans from the queue head, cutting at the cumulative-sum crossing).
-    pub fn split(&self, queue: Vec<Pending>) -> (Vec<Pending>, Vec<Pending>) {
+    /// Split one family's drained queue into (cpu, gpu) sets per the
+    /// policy. Order is preserved: the CPU takes a prefix, the GPU the
+    /// suffix (the paper scans from the queue head, cutting at the
+    /// cumulative-sum crossing).
+    pub fn split(
+        &self,
+        kind: KernelKindId,
+        queue: Vec<Pending>,
+    ) -> (Vec<Pending>, Vec<Pending>) {
         if queue.is_empty() {
             return (Vec::new(), Vec::new());
         }
-        let share = self.cpu_share();
+        let share = self.cpu_share(kind);
         let cut = match self.policy {
             SplitPolicy::StaticCount => {
                 // count-based: first share-of-count requests to CPU
@@ -179,19 +212,21 @@ impl HybridScheduler {
 mod tests {
     use super::*;
     use crate::coordinator::chare::ChareId;
-    use crate::coordinator::work_request::{WorkKind, WorkRequest, WrPayload};
+    use crate::coordinator::work_request::{Tile, WorkRequest};
+
+    const K0: KernelKindId = KernelKindId(0);
 
     fn pending(id: u64, items: usize) -> Pending {
         Pending {
             wr: WorkRequest {
                 id,
                 chare: ChareId::new(0, id as u32),
-                kind: WorkKind::MdInteract,
+                kind: K0,
                 buffer: None,
                 data_items: items,
                 tag: 0,
                 arrival: 0.0,
-                payload: WrPayload::MdPair { pa: vec![], pb: vec![] },
+                payload: Tile::default(),
             },
             slot: None,
             staged_bytes: 0,
@@ -201,9 +236,9 @@ mod tests {
     #[test]
     fn bootstrap_splits_half() {
         let h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        assert_eq!(h.cpu_share(), 0.5);
+        assert_eq!(h.cpu_share(K0), 0.5);
         let q: Vec<Pending> = (0..4).map(|i| pending(i, 10)).collect();
-        let (cpu, gpu) = h.split(q);
+        let (cpu, gpu) = h.split(K0, q);
         assert_eq!(cpu.len(), 2);
         assert_eq!(gpu.len(), 2);
     }
@@ -214,46 +249,62 @@ mod tests {
         // (200 items, 0.1 s makespan) -> 0.5 ms/item, half the per-worker
         // rate. Per-chunk recording would have learned 1 ms/item.
         let mut pooled = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        pooled.record_cpu(200, 0.1);
+        pooled.record_cpu(K0, 200, 0.1);
         let mut per_chunk = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        per_chunk.record_cpu(100, 0.1);
-        per_chunk.record_cpu(100, 0.1);
-        pooled.record_gpu(100, 0.05);
-        per_chunk.record_gpu(100, 0.05);
-        assert!((pooled.perf_ratio().unwrap() - 1.0).abs() < 1e-9);
-        assert!((per_chunk.perf_ratio().unwrap() - 2.0).abs() < 1e-9);
+        per_chunk.record_cpu(K0, 100, 0.1);
+        per_chunk.record_cpu(K0, 100, 0.1);
+        pooled.record_gpu(K0, 100, 0.05);
+        per_chunk.record_gpu(K0, 100, 0.05);
+        assert!((pooled.perf_ratio(K0).unwrap() - 1.0).abs() < 1e-9);
+        assert!((per_chunk.perf_ratio(K0).unwrap() - 2.0).abs() < 1e-9);
         // the pool-aware fold hands the CPU a larger share
-        assert!(pooled.cpu_share() > per_chunk.cpu_share());
+        assert!(pooled.cpu_share(K0) > per_chunk.cpu_share(K0));
     }
 
     #[test]
     fn ratio_tracks_running_averages() {
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        h.record_cpu(100, 0.4); // 4 ms/item
-        h.record_gpu(100, 0.1); // 1 ms/item
-        assert!((h.perf_ratio().unwrap() - 4.0).abs() < 1e-9);
+        h.record_cpu(K0, 100, 0.4); // 4 ms/item
+        h.record_gpu(K0, 100, 0.1); // 1 ms/item
+        assert!((h.perf_ratio(K0).unwrap() - 4.0).abs() < 1e-9);
         // gpu 4x faster: cpu takes 1/(1+4) = 20%
-        assert!((h.cpu_share() - 0.2).abs() < 1e-9);
+        assert!((h.cpu_share(K0) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kinds_keep_independent_rate_models() {
+        let k1 = KernelKindId(1);
+        let mut h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 2, 1);
+        // kind 0: CPU hopeless; kind 1: CPU competitive
+        h.record_cpu(K0, 10, 1.0);
+        h.record_gpu(K0, 10, 0.001);
+        h.record_cpu(k1, 10, 0.01);
+        h.record_gpu(k1, 10, 0.01);
+        assert!(h.cpu_share(K0) < 0.01);
+        assert!((h.cpu_share(k1) - 0.5).abs() < 1e-9);
+        // out-of-range kind records are ignored, shares fall back
+        h.record_cpu(KernelKindId(9), 10, 0.01);
+        assert_eq!(h.cpu_share(KernelKindId(9)), 0.5);
     }
 
     #[test]
     fn averages_fold_multiple_samples() {
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        h.record_cpu(10, 0.02); // 2 ms/item
-        h.record_cpu(10, 0.04); // 4 ms/item -> mean 3 ms
-        h.record_gpu(10, 0.01); // 1 ms/item
-        assert!((h.perf_ratio().unwrap() - 3.0).abs() < 1e-9);
+        h.record_cpu(K0, 10, 0.02); // 2 ms/item
+        h.record_cpu(K0, 10, 0.04); // 4 ms/item -> mean 3 ms
+        h.record_gpu(K0, 10, 0.01); // 1 ms/item
+        assert!((h.perf_ratio(K0).unwrap() - 3.0).abs() < 1e-9);
     }
 
     #[test]
     fn adaptive_split_follows_data_items_not_count() {
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        h.record_cpu(10, 0.01);
-        h.record_gpu(10, 0.01); // equal speed: 50% of items each
+        h.record_cpu(K0, 10, 0.01);
+        h.record_gpu(K0, 10, 0.01); // equal speed: 50% of items each
         // queue: one huge request then many small
         let mut q = vec![pending(0, 90)];
         q.extend((1..11).map(|i| pending(i, 1)));
-        let (cpu, gpu) = h.split(q);
+        let (cpu, gpu) = h.split(K0, q);
         // 100 items total, cpu target 50: the huge request alone would
         // overshoot, so the cut lands before it
         let cpu_items: usize = cpu.iter().map(|p| p.wr.data_items).sum();
@@ -264,11 +315,11 @@ mod tests {
     #[test]
     fn static_split_ignores_item_weights() {
         let mut h = HybridScheduler::new(SplitPolicy::StaticCount);
-        h.record_cpu(10, 0.01);
-        h.record_gpu(10, 0.01);
+        h.record_cpu(K0, 10, 0.01);
+        h.record_gpu(K0, 10, 0.01);
         let mut q = vec![pending(0, 90)];
         q.extend((1..11).map(|i| pending(i, 1)));
-        let (cpu, gpu) = h.split(q);
+        let (cpu, gpu) = h.split(K0, q);
         // count split: ~half the requests regardless of weight, so the
         // huge request (at the head) goes to the CPU
         assert!((5..=6).contains(&cpu.len()));
@@ -280,10 +331,11 @@ mod tests {
     #[test]
     fn split_conserves_requests_and_order() {
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        h.record_cpu(10, 0.03);
-        h.record_gpu(10, 0.01);
-        let q: Vec<Pending> = (0..20).map(|i| pending(i, (i % 5 + 1) as usize)).collect();
-        let (cpu, gpu) = h.split(q);
+        h.record_cpu(K0, 10, 0.03);
+        h.record_gpu(K0, 10, 0.01);
+        let q: Vec<Pending> =
+            (0..20).map(|i| pending(i, (i % 5 + 1) as usize)).collect();
+        let (cpu, gpu) = h.split(K0, q);
         let ids: Vec<u64> = cpu.iter().chain(&gpu).map(|p| p.wr.id).collect();
         assert_eq!(ids, (0..20).collect::<Vec<u64>>());
     }
@@ -291,10 +343,10 @@ mod tests {
     #[test]
     fn all_to_gpu_when_cpu_is_hopeless() {
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        h.record_cpu(1, 1.0); // 1 s/item
-        h.record_gpu(1000, 0.001); // 1 us/item
+        h.record_cpu(K0, 1, 1.0); // 1 s/item
+        h.record_gpu(K0, 1000, 0.001); // 1 us/item
         let q: Vec<Pending> = (0..10).map(|i| pending(i, 10)).collect();
-        let (cpu, gpu) = h.split(q);
+        let (cpu, gpu) = h.split(K0, q);
         assert!(cpu.len() <= 1);
         assert!(gpu.len() >= 9);
     }
@@ -302,13 +354,13 @@ mod tests {
     #[test]
     fn empty_queue_splits_empty() {
         let h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
-        let (cpu, gpu) = h.split(Vec::new());
+        let (cpu, gpu) = h.split(K0, Vec::new());
         assert!(cpu.is_empty() && gpu.is_empty());
     }
 
     #[test]
     fn device_shares_uniform_before_observations() {
-        let h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 4);
+        let h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 1, 4);
         let s = h.device_shares();
         assert_eq!(s.len(), 4);
         for v in &s {
@@ -319,7 +371,7 @@ mod tests {
 
     #[test]
     fn device_shares_follow_measured_speeds() {
-        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 2);
+        let mut h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 1, 2);
         h.record_device(0, 100, 0.1); // 1 ms/item
         h.record_device(1, 100, 0.3); // 3 ms/item: 3x slower
         let s = h.device_shares();
@@ -330,7 +382,7 @@ mod tests {
 
     #[test]
     fn unmeasured_device_assumes_mean_rate() {
-        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 3);
+        let mut h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 1, 3);
         h.record_device(0, 10, 0.01);
         h.record_device(1, 10, 0.01);
         let s = h.device_shares();
@@ -342,16 +394,16 @@ mod tests {
 
     #[test]
     fn device_stream_does_not_touch_split_averages() {
-        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 2);
+        let mut h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 1, 2);
         h.record_device(0, 100, 0.5);
         h.record_device(1, 100, 0.5);
-        assert!(h.perf_ratio().is_none(), "split averages still unsampled");
-        assert_eq!(h.cpu_share(), 0.5, "bootstrap split unchanged");
+        assert!(h.perf_ratio(K0).is_none(), "split averages still unsampled");
+        assert_eq!(h.cpu_share(K0), 0.5, "bootstrap split unchanged");
     }
 
     #[test]
     fn out_of_range_device_record_is_ignored() {
-        let mut h = HybridScheduler::with_devices(SplitPolicy::AdaptiveItems, 2);
+        let mut h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 1, 2);
         h.record_device(7, 100, 0.5);
         assert!(h.device_rate(0).is_none());
         assert!(h.device_rate(7).is_none());

@@ -30,6 +30,35 @@ pub struct DeviceStats {
     pub busy_modeled: f64,
 }
 
+/// Per-registered-kernel-family breakdown, keyed by the family's
+/// registered name (`KernelRegistry` kind order).
+#[derive(Debug, Clone, Default)]
+pub struct KindStats {
+    /// Registered family name.
+    pub name: String,
+    /// Combined launches of this family.
+    pub launches: u64,
+    /// Work requests of this family that executed on the GPU / on the
+    /// hybrid CPU pool.
+    pub gpu_requests: u64,
+    pub cpu_requests: u64,
+    /// Data items of this family on each side of the hybrid split.
+    pub gpu_items: u64,
+    pub cpu_items: u64,
+}
+
+impl KindStats {
+    /// Fraction of this family's data items the CPU side took.
+    pub fn cpu_item_share(&self) -> f64 {
+        let t = self.cpu_items + self.gpu_items;
+        if t == 0 {
+            0.0
+        } else {
+            self.cpu_items as f64 / t as f64
+        }
+    }
+}
+
 impl DeviceStats {
     pub fn hit_rate(&self) -> f64 {
         let t = self.hits + self.misses;
@@ -96,6 +125,9 @@ pub struct Report {
     pub migrated_bytes: u64,
     /// Per-device breakdown; one entry per pool device.
     pub device_stats: Vec<DeviceStats>,
+    /// Per-kernel-family breakdown; one entry per registered kind, in
+    /// registry order.
+    pub kind_stats: Vec<KindStats>,
 }
 
 impl Report {
@@ -126,6 +158,20 @@ impl Report {
             self.device_stats.resize(device + 1, DeviceStats::default());
         }
         &mut self.device_stats[device]
+    }
+
+    /// Mutable per-kind entry, growing the vec on demand (entries created
+    /// this way carry an empty name until the coordinator labels them).
+    pub fn kind_mut(&mut self, kind: usize) -> &mut KindStats {
+        if self.kind_stats.len() <= kind {
+            self.kind_stats.resize(kind + 1, KindStats::default());
+        }
+        &mut self.kind_stats[kind]
+    }
+
+    /// Per-kind entry by registered family name.
+    pub fn kind(&self, name: &str) -> Option<&KindStats> {
+        self.kind_stats.iter().find(|k| k.name == name)
     }
 
     /// Modeled makespan of the device pool: the busiest device's modeled
@@ -209,6 +255,21 @@ impl std::fmt::Display for Report {
             "hybrid              cpu {:.4}s task wall; items cpu {} / gpu {}",
             self.cpu_task_wall, self.cpu_items, self.gpu_items
         )?;
+        if !self.kind_stats.is_empty() {
+            for k in &self.kind_stats {
+                writeln!(
+                    f,
+                    "  kind {:<12} {} launches; reqs gpu {} / cpu {}; items gpu {} / cpu {} ({:.0}% cpu)",
+                    k.name,
+                    k.launches,
+                    k.gpu_requests,
+                    k.cpu_requests,
+                    k.gpu_items,
+                    k.cpu_items,
+                    k.cpu_item_share() * 100.0
+                )?;
+            }
+        }
         if self.device_stats.len() > 1 {
             writeln!(
                 f,
@@ -307,6 +368,20 @@ mod tests {
         assert!((d.hit_rate() - 0.75).abs() < 1e-12);
         assert!((d.occupancy(1.0) - 0.5).abs() < 1e-12);
         assert_eq!(d.occupancy(0.0), 0.0);
+    }
+
+    #[test]
+    fn kind_stats_grow_and_lookup_by_name() {
+        let mut r = Report::default();
+        r.kind_mut(1).name = "spmv_row".to_string();
+        r.kind_mut(1).cpu_items = 30;
+        r.kind_mut(1).gpu_items = 70;
+        assert_eq!(r.kind_stats.len(), 2);
+        let k = r.kind("spmv_row").unwrap();
+        assert!((k.cpu_item_share() - 0.3).abs() < 1e-12);
+        assert!(r.kind("nope").is_none());
+        let s = format!("{r}");
+        assert!(s.contains("spmv_row"));
     }
 
     #[test]

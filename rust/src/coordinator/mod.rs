@@ -4,6 +4,13 @@
 //! paper strategies (adaptive combining section 3.1, data reuse + coalescing
 //! section 3.2, dynamic hybrid scheduling section 3.3), and the GPU service.
 //!
+//! The kernel surface is *open*: apps register kernel families at startup
+//! (`GCharm::register_kernel`) and submit shape-checked `Tile` payloads
+//! tagged with the returned `KernelKindId`. Every scheduling layer —
+//! per-device combiner tables, reuse staging, hybrid CPU/GPU rate models,
+//! the steal rebalancer, per-kind metrics — is table-driven off the
+//! registry; no coordinator code matches on a kernel family.
+//!
 //! Thread topology:
 //!
 //! ```text
@@ -27,6 +34,7 @@ pub mod cpu_kernels;
 pub mod cpu_pool;
 pub mod hybrid;
 pub mod metrics;
+pub mod registry;
 pub mod scheduler;
 pub mod work_request;
 
@@ -41,25 +49,23 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::runtime::device_sim::CoalescingClass;
-use crate::runtime::executor::{
-    Completion, ExecutorConfig, LaunchSpec, Payload,
-};
+use crate::runtime::executor::{Completion, LaunchSpec, Payload};
 use crate::runtime::pool::DevicePool;
-use crate::runtime::shapes::{
-    INTERACTIONS, INTER_W, OUT_W, PARTICLE_W, PARTS_PER_BUCKET,
-    PARTS_PER_PATCH, MD_W,
-};
-use crate::runtime::{occupancy, GpuSpec, KernelResources};
 
 pub use chare::{Chare, ChareId, Ctx, Msg, WorkDraft, METHOD_RESULT};
 pub use chare_table::ChareTable;
 pub use combiner::{Batch, CombinePolicy, Combiner, FlushReason, Pending};
 pub use cpu_pool::chunk_by_items;
 pub use hybrid::{HybridScheduler, SplitPolicy};
-pub use metrics::{DeviceStats, Report};
+pub use metrics::{DeviceStats, KindStats, Report};
+pub use registry::{
+    builtin_registry, ewald_descriptor, force_descriptor, md_descriptor,
+    KernelDescriptor, KernelKindId, KernelRegistry, ShapeError,
+};
 pub use scheduler::{DeviceRouter, RoutePolicy, Shared};
-pub use work_request::{WorkKind, WorkRequest, WrPayload, WrResult};
+pub use work_request::{Tile, WorkRequest, WrResult};
 
+use registry::KernelRegistry as Registry;
 use scheduler::{pe_loop, CoordMsg, PeMsg, Router};
 
 /// Data-movement policy (paper section 3.2 / Fig 1 / Fig 3).
@@ -81,30 +87,30 @@ pub struct Config {
     pub combine: CombinePolicy,
     pub data_policy: DataPolicy,
     pub split: SplitPolicy,
-    /// Enable CPU+GPU hybrid execution for MD interact requests.
-    pub hybrid_md: bool,
-    /// CPU worker-pool size for the hybrid split's CPU batches
-    /// (0 = match `pes`). Batches are chunked by `data_items` across the
-    /// pool; per-worker timings fold into the hybrid scheduler.
+    /// Enable CPU+GPU hybrid execution for registered families with a CPU
+    /// fallback (`KernelDescriptor::cpu_fallback`).
+    pub hybrid: bool,
+    /// CPU worker-pool size for the hybrid split's CPU batches (>= 1).
+    /// Batches are chunked by `data_items` across the pool; per-worker
+    /// timings fold into the hybrid scheduler.
     pub cpu_workers: usize,
-    /// Number of simulated GPU devices in the sharded pool. Each device
-    /// gets its own `GpuService` (stager+engine thread pair and staging
-    /// arena), chare table, node cache, and combiner set. `1` reproduces
-    /// the single-device runtime bitwise.
+    /// Number of simulated GPU devices in the sharded pool (>= 1). Each
+    /// device gets its own `GpuService` (stager+engine thread pair and
+    /// staging arena), chare tables, node cache, and combiner set. `1`
+    /// reproduces the single-device runtime bitwise.
     pub devices: usize,
     /// Chare -> device routing policy (ignored when `devices == 1`).
     pub route: RoutePolicy,
     /// Steal when some device's pending depth is below this...
     pub steal_low: usize,
-    /// ...while another's is at or above this.
+    /// ...while another's is at or above this (must exceed `steal_low`).
     pub steal_high: usize,
-    /// Per-device pool capacity in bucket-buffer slots.
+    /// Per-device, per-reuse-family pool capacity in buffer slots.
     pub table_slots: usize,
     /// Per-device interaction-entry cache capacity (tree moments /
     /// particle entries, 16 B each). Models ChaNGa's GPU-resident moments
     /// and particle arrays.
     pub node_slots: usize,
-    pub executor: ExecutorConfig,
     pub artifacts: PathBuf,
     /// Safety drain: force-flush a combiner whose newest request has waited
     /// this long (rescues the static policy at iteration tails).
@@ -120,19 +126,42 @@ impl Default for Config {
             combine: CombinePolicy::Adaptive,
             data_policy: DataPolicy::ReuseSorted,
             split: SplitPolicy::AdaptiveItems,
-            hybrid_md: true,
-            cpu_workers: 0,
+            hybrid: true,
+            cpu_workers: 4,
             devices: 1,
             route: RoutePolicy::AffinitySteal,
             steal_low: 4,
             steal_high: 16,
             table_slots: 1024,
             node_slots: 1 << 17,
-            executor: ExecutorConfig::default(),
             artifacts: crate::runtime::default_artifacts_dir(),
             idle_drain: 2e-3,
             tick: Duration::from_micros(200),
         }
+    }
+}
+
+impl Config {
+    /// Reject configurations that would previously have panicked deep in
+    /// the pool. Called by `GCharm::new`, so CLI flags and programmatic
+    /// configs fail fast with a descriptive error.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.devices >= 1,
+            "config: devices must be >= 1 (got {})",
+            self.devices
+        );
+        anyhow::ensure!(
+            self.steal_low < self.steal_high,
+            "config: steal_low ({}) must be below steal_high ({})",
+            self.steal_low,
+            self.steal_high
+        );
+        anyhow::ensure!(
+            self.cpu_workers >= 1,
+            "config: cpu_workers must be >= 1 (got 0)"
+        );
+        Ok(())
     }
 }
 
@@ -141,7 +170,7 @@ struct LaunchItem {
     wr_id: u64,
     tag: u64,
     chare: ChareId,
-    kind: WorkKind,
+    kind: KernelKindId,
     data_items: usize,
     buffer: Option<u64>,
 }
@@ -151,12 +180,17 @@ struct LaunchInfo {
     transfer_bytes: u64,
     /// Pool device the launch was submitted to.
     device: usize,
+    /// Registered family the launch belongs to.
+    kind: KernelKindId,
+    /// Output floats per request slot (from the family's registration).
+    out_slot: usize,
 }
 
 /// Accumulator folding a hybrid batch's CPU-pool chunk *timings* back
 /// together. Results are scattered per chunk as they arrive (no added
 /// latency); only the hybrid-rate observation waits for the batch.
 struct CpuBatchAcc {
+    kind: KernelKindId,
     chunks_left: usize,
     items: usize,
     /// Longest single chunk: the batch makespan (chunks start together),
@@ -166,24 +200,25 @@ struct CpuBatchAcc {
     sum_secs: f64,
 }
 
-/// Per-device coordinator-side state: residency tables and combiners.
-/// One instance per pool device, so reuse decisions and combining are
-/// local to the device the requests will execute on.
+/// Per-device coordinator-side state: residency tables and combiners,
+/// one entry per registered kind.
 struct DeviceState {
-    table: ChareTable,
+    /// Reuse-buffer tables, indexed by kind; `None` for families without
+    /// a reuse arg.
+    tables: Vec<Option<ChareTable>>,
     /// Residency of interaction entries (tree moments / cached particles),
     /// 16 bytes each. Accounting-level model of the GPU-resident arrays
     /// the interaction lists reference.
     node_table: crate::runtime::DeviceMemory,
     node_saved: u64,
-    force: Combiner,
-    ewald: Combiner,
-    md: Combiner,
+    /// One workGroupList per registered kind, in registry order.
+    combiners: Vec<Combiner>,
 }
 
 /// The coordinator thread's state.
 struct Coord {
     cfg: Config,
+    registry: Arc<Registry>,
     router: Router,
     /// Per-device residency + combiner shards (length = pool devices).
     devices: Vec<DeviceState>,
@@ -194,8 +229,7 @@ struct Coord {
     launches: HashMap<u64, LaunchInfo>,
     gpu: DevicePool,
     /// Hybrid CPU worker pool, spawned lazily on the first CPU split so
-    /// GPU-only workloads (all N-body runs, `hybrid_md: false`) never
-    /// carry idle worker threads.
+    /// GPU-only workloads never carry idle worker threads.
     cpu_pool: Option<cpu_pool::CpuPool>,
     cpu_workers: usize,
     cpu_batches: HashMap<u64, CpuBatchAcc>,
@@ -204,31 +238,56 @@ struct Coord {
 }
 
 impl Coord {
-    fn new(cfg: Config, router: Router, done_tx: Sender<Result<Completion>>) -> Result<Coord> {
-        let spec = GpuSpec::kepler_k20();
-        let force_max = occupancy(&spec, &KernelResources::force_kernel()).max_size as usize;
-        let ewald_max = occupancy(&spec, &KernelResources::ewald_kernel()).max_size as usize;
-        let md_max = occupancy(&spec, &KernelResources::md_kernel()).max_size as usize;
-        let sort = cfg.data_policy == DataPolicy::ReuseSorted;
+    fn new(
+        cfg: Config,
+        router: Router,
+        done_tx: Sender<Result<Completion>>,
+    ) -> Result<Coord> {
+        let registry = router.registry.clone();
         let ndev = cfg.devices.max(1);
-        let gpu =
-            DevicePool::spawn(&cfg.artifacts, cfg.executor.clone(), ndev, done_tx)?;
+        let gpu = DevicePool::spawn(
+            &cfg.artifacts,
+            registry.kernels(),
+            ndev,
+            done_tx,
+        )?;
         let devices = (0..ndev)
             .map(|_| DeviceState {
-                table: ChareTable::new(cfg.table_slots),
+                tables: registry
+                    .descriptors()
+                    .iter()
+                    .map(|d| {
+                        d.kernel.reuse_arg.map(|ra| {
+                            ChareTable::new(
+                                cfg.table_slots,
+                                d.kernel.args[ra].slot_len(),
+                            )
+                        })
+                    })
+                    .collect(),
                 node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
                 node_saved: 0,
-                force: Combiner::new(cfg.combine, force_max, sort),
-                ewald: Combiner::new(cfg.combine, ewald_max, false),
-                md: Combiner::new(cfg.combine, md_max, false),
+                combiners: registry
+                    .descriptors()
+                    .iter()
+                    .map(|d| {
+                        Combiner::new(
+                            d.combine.unwrap_or(cfg.combine),
+                            d.kernel.max_combine(),
+                            d.sort_by_slot
+                                && cfg.data_policy == DataPolicy::ReuseSorted,
+                        )
+                    })
+                    .collect(),
             })
             .collect();
-        let cpu_workers =
-            if cfg.cpu_workers == 0 { cfg.pes } else { cfg.cpu_workers };
-        let report = Report {
+        let mut report = Report {
             device_stats: vec![DeviceStats::default(); ndev],
             ..Report::default()
         };
+        for (i, d) in registry.descriptors().iter().enumerate() {
+            report.kind_mut(i).name = d.kernel.name.to_string();
+        }
         Ok(Coord {
             devices,
             dev_router: DeviceRouter::new(
@@ -237,16 +296,21 @@ impl Coord {
                 cfg.steal_low,
                 cfg.steal_high,
             ),
-            hybrid: HybridScheduler::with_devices(cfg.split, ndev),
+            hybrid: HybridScheduler::with_kinds(
+                cfg.split,
+                registry.len(),
+                ndev,
+            ),
             report,
             launches: HashMap::new(),
             gpu,
             cpu_pool: None,
-            cpu_workers,
+            cpu_workers: cfg.cpu_workers.max(1),
             cpu_batches: HashMap::new(),
             next_wr: 0,
             next_launch: 0,
             cfg,
+            registry,
             router,
         })
     }
@@ -256,17 +320,21 @@ impl Coord {
     }
 
     /// Handle one submitted work request: route it to a device by the
-    /// chare affinity map, stage for reuse on that device if configured,
-    /// then insert into the device's matching combiner.
+    /// chare affinity map, stage its reuse buffer on that device if the
+    /// family declares one, then insert into the device's combiner for
+    /// that kind.
     fn on_submit(&mut self, draft: WorkDraft) {
         let now = self.now();
         let id = self.next_wr;
         self.next_wr += 1;
         let device = self.dev_router.route(draft.chare);
+        let kind = draft.kind;
+        let registry = self.registry.clone();
+        let desc = registry.get(kind);
         let wr = WorkRequest {
             id,
             chare: draft.chare,
-            kind: draft.kind,
+            kind,
             buffer: draft.buffer,
             data_items: draft.data_items,
             tag: draft.tag,
@@ -274,18 +342,17 @@ impl Coord {
             payload: draft.payload,
         };
 
-        // Reuse staging applies to Force requests with a declared buffer;
-        // Ewald uses the contiguous path (no gather variant) and MD patch
-        // data changes every step.
+        // Reuse staging applies to families with a registered reuse arg
+        // and requests that declare a buffer id.
         let mut slot = None;
         let mut staged_bytes = 0;
-        if self.cfg.data_policy != DataPolicy::NoReuse
-            && wr.kind == WorkKind::Force
-        {
-            if let (Some(buf), WrPayload::Force { parts, .. }) =
-                (wr.buffer, &wr.payload)
+        if self.cfg.data_policy != DataPolicy::NoReuse {
+            if let (Some(ra), Some(buf)) = (desc.kernel.reuse_arg, wr.buffer)
             {
-                match self.devices[device].table.stage_pinned(buf, parts) {
+                let table = self.devices[device].tables[kind.0]
+                    .as_mut()
+                    .expect("reuse family has a table");
+                match table.stage_pinned(buf, &wr.payload.bufs[ra]) {
                     Ok(staged) => {
                         slot = Some(staged.slot);
                         staged_bytes = staged.bytes;
@@ -300,12 +367,7 @@ impl Coord {
         }
 
         let pending = Pending { wr, slot, staged_bytes };
-        let st = &mut self.devices[device];
-        match pending.wr.kind {
-            WorkKind::Force => st.force.insert(pending, now),
-            WorkKind::Ewald => st.ewald.insert(pending, now),
-            WorkKind::MdInteract => st.md.insert(pending, now),
-        }
+        self.devices[device].combiners[kind.0].insert(pending, now);
         self.dev_router.note_enqueued(device, 1);
         self.poll_combiners();
     }
@@ -315,14 +377,11 @@ impl Coord {
     fn poll_combiners(&mut self) {
         let now = self.now();
         for d in 0..self.devices.len() {
-            while let Some(batch) = self.devices[d].force.poll(now) {
-                self.dispatch_force(batch, d);
-            }
-            while let Some(batch) = self.devices[d].ewald.poll(now) {
-                self.dispatch_ewald(batch, d);
-            }
-            while let Some(batch) = self.devices[d].md.poll(now) {
-                self.dispatch_md(batch, d);
+            for k in 0..self.devices[d].combiners.len() {
+                while let Some(batch) = self.devices[d].combiners[k].poll(now)
+                {
+                    self.dispatch(batch, KernelKindId(k), d);
+                }
             }
         }
         self.idle_drain(now);
@@ -336,28 +395,15 @@ impl Coord {
             return;
         }
         for d in 0..self.devices.len() {
-            let st = &mut self.devices[d];
-            if !st.force.is_empty()
-                && now - st.force.last_arrival().unwrap_or(now) > gap
-            {
-                while let Some(b) = self.devices[d].force.force_flush() {
-                    self.dispatch_force(b, d);
-                }
-            }
-            let st = &mut self.devices[d];
-            if !st.ewald.is_empty()
-                && now - st.ewald.last_arrival().unwrap_or(now) > gap
-            {
-                while let Some(b) = self.devices[d].ewald.force_flush() {
-                    self.dispatch_ewald(b, d);
-                }
-            }
-            let st = &mut self.devices[d];
-            if !st.md.is_empty()
-                && now - st.md.last_arrival().unwrap_or(now) > gap
-            {
-                while let Some(b) = self.devices[d].md.force_flush() {
-                    self.dispatch_md(b, d);
+            for k in 0..self.devices[d].combiners.len() {
+                let c = &self.devices[d].combiners[k];
+                if !c.is_empty() && now - c.last_arrival().unwrap_or(now) > gap
+                {
+                    while let Some(b) =
+                        self.devices[d].combiners[k].force_flush()
+                    {
+                        self.dispatch(b, KernelKindId(k), d);
+                    }
                 }
             }
         }
@@ -366,14 +412,11 @@ impl Coord {
     /// Force-flush everything (shutdown path).
     fn drain_all(&mut self) {
         for d in 0..self.devices.len() {
-            while let Some(b) = self.devices[d].force.force_flush() {
-                self.dispatch_force(b, d);
-            }
-            while let Some(b) = self.devices[d].ewald.force_flush() {
-                self.dispatch_ewald(b, d);
-            }
-            while let Some(b) = self.devices[d].md.force_flush() {
-                self.dispatch_md(b, d);
+            for k in 0..self.devices[d].combiners.len() {
+                while let Some(b) = self.devices[d].combiners[k].force_flush()
+                {
+                    self.dispatch(b, KernelKindId(k), d);
+                }
             }
         }
     }
@@ -409,53 +452,64 @@ impl Coord {
             self.dev_router.note_stolen(from, to, n);
             self.report.device_mut(from).steals_out += 1;
             self.report.device_mut(to).steals_in += 1;
-            let batch = self.migrate_batch(batch, from, to);
-            match kind {
-                WorkKind::Force => self.dispatch_force(batch, to),
-                WorkKind::Ewald => self.dispatch_ewald(batch, to),
-                WorkKind::MdInteract => self.dispatch_md(batch, to),
-            }
+            let batch = self.migrate_batch(batch, kind, from, to);
+            self.dispatch(batch, kind, to);
         }
     }
 
     /// Drain one batch from the loaded device's longest pending queue.
-    fn steal_batch(&mut self, from: usize) -> Option<(Batch, WorkKind)> {
+    fn steal_batch(&mut self, from: usize) -> Option<(Batch, KernelKindId)> {
         let st = &mut self.devices[from];
-        let (lf, le, lm) = (st.force.len(), st.ewald.len(), st.md.len());
-        if lf == 0 && le == 0 && lm == 0 {
+        if st.combiners.is_empty() {
             return None;
         }
-        if lf >= le && lf >= lm {
-            st.force.steal_flush().map(|b| (b, WorkKind::Force))
-        } else if le >= lm {
-            st.ewald.steal_flush().map(|b| (b, WorkKind::Ewald))
-        } else {
-            st.md.steal_flush().map(|b| (b, WorkKind::MdInteract))
+        // First-registered kind wins ties (stable victim selection).
+        let mut k = 0usize;
+        for i in 1..st.combiners.len() {
+            if st.combiners[i].len() > st.combiners[k].len() {
+                k = i;
+            }
         }
+        if st.combiners[k].is_empty() {
+            return None;
+        }
+        st.combiners[k].steal_flush().map(|b| (b, KernelKindId(k)))
     }
 
     /// Move a stolen batch's residency from `from` to `to`: release the
-    /// source pins, restage into the destination's chare table (a miss
-    /// there re-transfers the buffer — the explicit migration cost), and
+    /// source pins, restage into the destination's table (a miss there
+    /// re-transfers the buffer — the explicit migration cost), and
     /// re-home the chares so their future requests follow the data.
-    fn migrate_batch(&mut self, mut batch: Batch, from: usize, to: usize) -> Batch {
+    fn migrate_batch(
+        &mut self,
+        mut batch: Batch,
+        kind: KernelKindId,
+        from: usize,
+        to: usize,
+    ) -> Batch {
+        let registry = self.registry.clone();
+        let reuse_arg = registry.get(kind).kernel.reuse_arg;
         for p in &mut batch.items {
             self.dev_router.rehome(p.wr.chare, to);
             if p.slot.is_none() {
                 continue;
             }
             let Some(buf) = p.wr.buffer else { continue };
-            self.devices[from].table.release(buf);
+            let Some(ra) = reuse_arg else { continue };
+            self.devices[from].tables[kind.0]
+                .as_mut()
+                .expect("reuse family has a table")
+                .release(buf);
             // Bytes staged to the source device were spent whether or not
             // the launch runs there: a migrated launch keeps carrying
             // them, plus whatever the destination restage costs.
             let src_bytes = p.staged_bytes;
             p.slot = None;
             p.staged_bytes = 0;
-            let WrPayload::Force { parts, .. } = &p.wr.payload else {
-                continue;
-            };
-            match self.devices[to].table.stage_pinned(buf, parts) {
+            let dst = self.devices[to].tables[kind.0]
+                .as_mut()
+                .expect("reuse family has a table");
+            match dst.stage_pinned(buf, &p.wr.payload.bufs[ra]) {
                 Ok(staged) => {
                     p.slot = Some(staged.slot);
                     p.staged_bytes = src_bytes + staged.bytes;
@@ -470,7 +524,9 @@ impl Coord {
         // The batch was slot-sorted for the *source* pool; restaging
         // scrambled that. Re-sort on the destination slots so the
         // coalescing model's SortedGather claim stays honest.
-        if self.cfg.data_policy == DataPolicy::ReuseSorted {
+        if self.cfg.data_policy == DataPolicy::ReuseSorted
+            && registry.get(kind).sort_by_slot
+        {
             batch
                 .items
                 .sort_by_key(|p| p.slot.unwrap_or(u32::MAX));
@@ -478,124 +534,48 @@ impl Coord {
         batch
     }
 
-    /// Build and submit the combined force launch for a flushed batch on
-    /// one device.
-    fn dispatch_force(&mut self, batch: Batch, device: usize) {
-        self.report.record_flush(batch.reason, batch.items.len());
-        let n = batch.items.len();
-        if n == 0 {
-            return;
-        }
-        let all_staged = batch.items.iter().all(|p| p.slot.is_some());
-        let use_gather = self.cfg.data_policy != DataPolicy::NoReuse && all_staged;
-
-        let mut inters = Vec::with_capacity(n * INTERACTIONS * INTER_W);
-        let mut transfer = 0u64;
-        const ENTRY_BYTES: u64 = (INTER_W * 4) as u64;
-        for p in &batch.items {
-            let WrPayload::Force { inters: i, inter_ids, .. } = &p.wr.payload
-            else {
-                unreachable!("force combiner holds only Force requests")
-            };
-            inters.extend_from_slice(i);
-            if self.cfg.data_policy == DataPolicy::NoReuse {
-                transfer += (i.len() * 4) as u64;
-            } else {
-                // interaction entries (moments/particles) are resident on
-                // the device from prior kernels: transfer only the misses
-                let st = &mut self.devices[device];
-                for &eid in inter_ids {
-                    match st.node_table.acquire(eid as u64) {
-                        Some(r) if r.is_hit() => {
-                            st.node_saved += ENTRY_BYTES;
-                        }
-                        _ => transfer += ENTRY_BYTES,
-                    }
-                }
-            }
-        }
-
-        let (payload, pattern) = if use_gather {
-            let mut idx = Vec::with_capacity(n * PARTS_PER_BUCKET);
-            for p in &batch.items {
-                let base = p.slot.unwrap() as i32 * PARTS_PER_BUCKET as i32;
-                idx.extend((0..PARTS_PER_BUCKET as i32).map(|j| base + j));
-                transfer += p.staged_bytes;
-            }
-            transfer += (idx.len() * 4) as u64; // the index buffer itself
-            let pattern = match self.cfg.data_policy {
-                DataPolicy::ReuseSorted => CoalescingClass::SortedGather,
-                _ => CoalescingClass::RandomGather,
-            };
-            (
-                Payload::GravityGather {
-                    pool: self.devices[device].table.pool_arc(),
-                    idx,
-                    inters,
-                    batch: n,
-                },
-                pattern,
-            )
-        } else {
-            let mut parts = Vec::with_capacity(n * PARTS_PER_BUCKET * PARTICLE_W);
-            for p in &batch.items {
-                let WrPayload::Force { parts: pp, .. } = &p.wr.payload else {
-                    unreachable!()
-                };
-                parts.extend_from_slice(pp);
-                transfer += (pp.len() * 4) as u64;
-            }
-            (
-                Payload::Gravity { parts, inters, batch: n },
-                CoalescingClass::Contiguous,
-            )
-        };
-        self.submit_launch(batch.items, payload, transfer, pattern, device);
-    }
-
-    fn dispatch_ewald(&mut self, batch: Batch, device: usize) {
-        self.report.record_flush(batch.reason, batch.items.len());
-        let n = batch.items.len();
-        if n == 0 {
-            return;
-        }
-        let mut parts = Vec::with_capacity(n * PARTS_PER_BUCKET * PARTICLE_W);
-        let mut transfer = 0u64;
-        for p in &batch.items {
-            let WrPayload::Ewald { parts: pp } = &p.wr.payload else {
-                unreachable!("ewald combiner holds only Ewald requests")
-            };
-            parts.extend_from_slice(pp);
-            transfer += (pp.len() * 4) as u64;
-        }
-        self.submit_launch(
-            batch.items,
-            Payload::Ewald { parts, batch: n },
-            transfer,
-            CoalescingClass::Contiguous,
-            device,
-        );
-    }
-
-    /// MD: hybrid-split the flushed batch, CPU prefix to the worker pool,
-    /// GPU suffix to a combined launch on `device`.
-    fn dispatch_md(&mut self, batch: Batch, device: usize) {
+    /// Build and submit the combined launch for a flushed batch of one
+    /// registered kind on one device: hybrid-split if the family has a
+    /// CPU fallback, account transfers per the data policy (entry-cache
+    /// hits, staged reuse, contiguous payloads), and pick the gather or
+    /// contiguous payload form.
+    fn dispatch(&mut self, batch: Batch, kind: KernelKindId, device: usize) {
         self.report.record_flush(batch.reason, batch.items.len());
         if batch.items.is_empty() {
             return;
         }
-        let (cpu, gpu) = if self.cfg.hybrid_md {
-            self.hybrid.split(batch.items)
+        let registry = self.registry.clone();
+        let desc = registry.get(kind);
+        let kernel = &desc.kernel;
+
+        let (cpu, gpu) = if desc.cpu_fallback && self.cfg.hybrid {
+            self.hybrid.split(kind, batch.items)
         } else {
             (Vec::new(), batch.items)
         };
 
         if !cpu.is_empty() {
-            // The CPU prefix leaves this device's pending queue.
+            // The CPU prefix leaves this device's pending queue. Any slots
+            // its requests pinned at submission must be released here: the
+            // CPU completion path never touches the chare table, so a
+            // reuse+hybrid family would otherwise leak pins until the
+            // pool is exhausted.
+            if kernel.reuse_arg.is_some() {
+                let table = self.devices[device].tables[kind.0]
+                    .as_mut()
+                    .expect("reuse family has a table");
+                for p in &cpu {
+                    if p.slot.is_some() {
+                        if let Some(buf) = p.wr.buffer {
+                            table.release(buf);
+                        }
+                    }
+                }
+            }
             self.dev_router.note_completed(device, cpu.len());
-            let total: usize =
-                cpu.iter().map(|p| p.wr.data_items).sum();
+            let total: usize = cpu.iter().map(|p| p.wr.data_items).sum();
             self.report.cpu_items += total as u64;
+            self.report.kind_mut(kind.0).cpu_items += total as u64;
             // Fan the CPU portion across the worker pool (asynchronous
             // executions on all CPU cores, section 3.3), chunked by
             // data_items so each worker gets a similar item load.
@@ -604,7 +584,7 @@ impl Coord {
                     self.cpu_workers,
                     self.router.coord.clone(),
                     self.router.shared.clone(),
-                    self.cfg.executor.clone(),
+                    self.registry.clone(),
                 )
                 .expect("spawning cpu pool");
                 self.cpu_pool = Some(pool);
@@ -614,6 +594,7 @@ impl Coord {
             self.cpu_batches.insert(
                 batch_id,
                 CpuBatchAcc {
+                    kind,
                     chunks_left: chunks,
                     items: 0,
                     max_secs: 0.0,
@@ -626,29 +607,106 @@ impl Coord {
         if n == 0 {
             return;
         }
-        let mut pa = Vec::with_capacity(n * PARTS_PER_PATCH * MD_W);
-        let mut pb = Vec::with_capacity(n * PARTS_PER_PATCH * MD_W);
+
         let mut transfer = 0u64;
-        for p in &gpu {
-            let WrPayload::MdPair { pa: a, pb: b } = &p.wr.payload else {
-                unreachable!("md combiner holds only MdPair requests")
-            };
-            pa.extend_from_slice(a);
-            pb.extend_from_slice(b);
-            transfer += ((a.len() + b.len()) * 4) as u64;
+
+        // Entry-cache accounting: the family's entry arg is either fully
+        // transferred (NoReuse) or charged per *real* entry against the
+        // device-resident entry cache (section 3.2: moments/particle data
+        // resident from prior kernels — transfer only the misses).
+        if let Some(ea) = kernel.entry_arg {
+            let entry_bytes = (kernel.args[ea].width * 4) as u64;
+            for p in &gpu {
+                if self.cfg.data_policy == DataPolicy::NoReuse {
+                    transfer += (p.wr.payload.bufs[ea].len() * 4) as u64;
+                } else {
+                    let st = &mut self.devices[device];
+                    for &eid in &p.wr.payload.entry_ids {
+                        match st.node_table.acquire(eid as u64) {
+                            Some(r) if r.is_hit() => {
+                                st.node_saved += entry_bytes;
+                            }
+                            _ => transfer += entry_bytes,
+                        }
+                    }
+                }
+            }
         }
-        self.submit_launch(
-            gpu,
-            Payload::MdForce { pa, pb, batch: n },
-            transfer,
-            CoalescingClass::Contiguous,
-            device,
-        );
+
+        let use_gather = kernel.reuse_arg.is_some()
+            && self.cfg.data_policy != DataPolicy::NoReuse
+            && gpu.iter().all(|p| p.slot.is_some());
+
+        let (payload, pattern) = if use_gather {
+            let ra = kernel.reuse_arg.expect("gather requires a reuse arg");
+            let rows = kernel.args[ra].rows;
+            let mut idx = Vec::with_capacity(n * rows);
+            for p in &gpu {
+                let base = p.slot.expect("all staged") as i32 * rows as i32;
+                idx.extend((0..rows as i32).map(|j| base + j));
+                transfer += p.staged_bytes;
+            }
+            transfer += (idx.len() * 4) as u64; // the index buffer itself
+            let mut bufs = Vec::with_capacity(kernel.args.len() - 1);
+            for (i, spec) in kernel.args.iter().enumerate() {
+                if i == ra {
+                    continue; // resident: addressed through the gather
+                }
+                let mut v = Vec::with_capacity(n * spec.slot_len());
+                for p in &gpu {
+                    v.extend_from_slice(&p.wr.payload.bufs[i]);
+                    // the entry arg's transfer was charged per real entry
+                    // against the entry cache above
+                    if Some(i) != kernel.entry_arg {
+                        transfer += (p.wr.payload.bufs[i].len() * 4) as u64;
+                    }
+                }
+                bufs.push(v);
+            }
+            let pattern = match self.cfg.data_policy {
+                DataPolicy::ReuseSorted if desc.sort_by_slot => {
+                    CoalescingClass::SortedGather
+                }
+                _ => CoalescingClass::RandomGather,
+            };
+            let pool = self.devices[device].tables[kind.0]
+                .as_ref()
+                .expect("reuse family has a table")
+                .pool_arc();
+            (
+                Payload::TileGather {
+                    kernel: kernel.clone(),
+                    pool,
+                    idx,
+                    bufs,
+                    batch: n,
+                },
+                pattern,
+            )
+        } else {
+            let mut bufs = Vec::with_capacity(kernel.args.len());
+            for (i, spec) in kernel.args.iter().enumerate() {
+                let mut v = Vec::with_capacity(n * spec.slot_len());
+                for p in &gpu {
+                    v.extend_from_slice(&p.wr.payload.bufs[i]);
+                    if Some(i) != kernel.entry_arg {
+                        transfer += (p.wr.payload.bufs[i].len() * 4) as u64;
+                    }
+                }
+                bufs.push(v);
+            }
+            (
+                Payload::Tile { kernel: kernel.clone(), bufs, batch: n },
+                CoalescingClass::Contiguous,
+            )
+        };
+        self.submit_launch(gpu, kind, payload, transfer, pattern, device);
     }
 
     fn submit_launch(
         &mut self,
         items: Vec<Pending>,
+        kind: KernelKindId,
         payload: Payload,
         transfer_bytes: u64,
         pattern: CoalescingClass,
@@ -670,6 +728,8 @@ impl Coord {
                 .collect(),
             transfer_bytes,
             device,
+            kind,
+            out_slot: self.registry.kernel(kind).out_slot_len(),
         };
         self.launches.insert(id, info);
         self.gpu
@@ -685,6 +745,7 @@ impl Coord {
             .remove(&c.id)
             .expect("completion for unknown launch");
         let device = info.device;
+        let kind = info.kind;
         debug_assert_eq!(c.device, device, "completion from wrong device");
 
         self.report.launches += 1;
@@ -702,11 +763,7 @@ impl Coord {
             info.items.len() as u64,
         );
 
-        let slot_len = match info.items.first().map(|i| i.kind) {
-            Some(WorkKind::MdInteract) => PARTS_PER_PATCH * MD_W,
-            _ => PARTS_PER_BUCKET * OUT_W,
-        };
-
+        let slot_len = info.out_slot;
         let mut gpu_items = 0u64;
         for (i, item) in info.items.iter().enumerate() {
             gpu_items += item.data_items as u64;
@@ -724,10 +781,23 @@ impl Coord {
                 ),
             );
             if let Some(buf) = item.buffer {
-                self.devices[device].table.release(buf);
+                // item.buffer is only retained when the request was staged
+                // (slot.is_some()), which implies the family has a table;
+                // stay graceful regardless.
+                if let Some(table) =
+                    self.devices[device].tables[kind.0].as_mut()
+                {
+                    table.release(buf);
+                }
             }
         }
         self.report.gpu_items += gpu_items;
+        {
+            let ks = self.report.kind_mut(kind.0);
+            ks.launches += 1;
+            ks.gpu_requests += info.items.len() as u64;
+            ks.gpu_items += gpu_items;
+        }
         {
             let dev = self.report.device_mut(device);
             dev.launches += 1;
@@ -739,11 +809,8 @@ impl Coord {
         self.dev_router.note_completed(device, info.items.len());
         // Per-device rate (all kinds): the steal rebalancer's weights.
         self.hybrid.record_device(device, gpu_items as usize, c.wall);
-        if matches!(
-            info.items.first().map(|i| i.kind),
-            Some(WorkKind::MdInteract)
-        ) {
-            self.hybrid.record_gpu(gpu_items as usize, c.wall);
+        if self.registry.get(kind).cpu_fallback {
+            self.hybrid.record_gpu(kind, gpu_items as usize, c.wall);
         }
 
         // Release the work-request holds.
@@ -773,9 +840,11 @@ impl Coord {
         acc.items += items;
         acc.max_secs = acc.max_secs.max(secs);
         acc.sum_secs += secs;
+        let kind = acc.kind;
         let batch_done = acc.chunks_left == 0;
 
         self.report.cpu_requests += results.len() as u64;
+        self.report.kind_mut(kind.0).cpu_requests += results.len() as u64;
         let n = results.len() as i64;
         for (chare, res) in results {
             self.router.send_msg(chare, Msg::new(METHOD_RESULT, res));
@@ -788,7 +857,7 @@ impl Coord {
 
         if batch_done {
             let acc = self.cpu_batches.remove(&batch).unwrap();
-            self.hybrid.record_cpu(acc.items, acc.max_secs);
+            self.hybrid.record_cpu(kind, acc.items, acc.max_secs);
             self.report.cpu_task_wall += acc.sum_secs;
         }
     }
@@ -799,7 +868,11 @@ impl Coord {
         secs: f64,
         results: Vec<(ChareId, WrResult)>,
     ) {
-        self.hybrid.record_cpu(items, secs);
+        if let Some(kind) = results.first().map(|(_, r)| r.kind) {
+            self.hybrid.record_cpu(kind, items, secs);
+            self.report.kind_mut(kind.0).cpu_requests +=
+                results.len() as u64;
+        }
         self.report.cpu_task_wall += secs;
         self.report.cpu_requests += results.len() as u64;
         let n = results.len() as i64;
@@ -833,7 +906,9 @@ impl Coord {
                 }
                 Ok(CoordMsg::InvalidateAll) => {
                     for st in &mut self.devices {
-                        st.table.invalidate_all();
+                        for t in st.tables.iter_mut().flatten() {
+                            t.invalidate_all();
+                        }
                         st.node_table.invalidate_all();
                     }
                 }
@@ -867,12 +942,15 @@ impl Coord {
         self.report.table_misses = 0;
         self.report.saved_bytes = 0;
         for d in 0..self.devices.len() {
-            let hits =
-                self.devices[d].table.hits() + self.devices[d].node_table.hits();
-            let misses = self.devices[d].table.misses()
-                + self.devices[d].node_table.misses();
-            let saved =
-                self.devices[d].table.saved_bytes() + self.devices[d].node_saved;
+            let st = &self.devices[d];
+            let mut hits = st.node_table.hits();
+            let mut misses = st.node_table.misses();
+            let mut saved = st.node_saved;
+            for t in st.tables.iter().flatten() {
+                hits += t.hits();
+                misses += t.misses();
+                saved += t.saved_bytes();
+            }
             self.report.table_hits += hits;
             self.report.table_misses += misses;
             self.report.saved_bytes += saved;
@@ -884,11 +962,13 @@ impl Coord {
     }
 }
 
-/// The user-facing runtime: build, register chares, start, drive, shutdown.
+/// The user-facing runtime: build, register kernels and chares, start,
+/// drive, shutdown.
 pub struct GCharm {
     cfg: Config,
+    kernels: Registry,
     placement: HashMap<ChareId, usize>,
-    registry: Vec<HashMap<ChareId, Box<dyn Chare>>>,
+    chares: Vec<HashMap<ChareId, Box<dyn Chare>>>,
     running: Option<RunningState>,
 }
 
@@ -900,18 +980,43 @@ struct RunningState {
 }
 
 impl GCharm {
-    pub fn new(cfg: Config) -> GCharm {
+    /// Build a runtime over a validated configuration (see
+    /// [`Config::validate`] for what is rejected).
+    pub fn new(cfg: Config) -> Result<GCharm> {
+        cfg.validate()?;
         let pes = cfg.pes.max(1);
-        GCharm {
+        Ok(GCharm {
             cfg: Config { pes, ..cfg },
+            kernels: Registry::new(),
             placement: HashMap::new(),
-            registry: (0..pes).map(|_| HashMap::new()).collect(),
+            chares: (0..pes).map(|_| HashMap::new()).collect(),
             running: None,
-        }
+        })
     }
 
     pub fn config(&self) -> &Config {
         &self.cfg
+    }
+
+    /// Register a kernel family (must happen before `start`). Returns the
+    /// kind id work drafts are tagged with. The paper's built-in families
+    /// are available as [`force_descriptor`], [`ewald_descriptor`], and
+    /// [`md_descriptor`]; new workloads register their own descriptors
+    /// through this same call — see PERF.md, "Adding a workload".
+    pub fn register_kernel(
+        &mut self,
+        desc: KernelDescriptor,
+    ) -> Result<KernelKindId> {
+        anyhow::ensure!(
+            self.running.is_none(),
+            "register kernels before start"
+        );
+        self.kernels.register(desc)
+    }
+
+    /// The registered kernel families so far.
+    pub fn kernel_registry(&self) -> &KernelRegistry {
+        &self.kernels
     }
 
     /// Register a chare on a PE (must happen before `start`).
@@ -920,13 +1025,14 @@ impl GCharm {
         let pe = pe % self.cfg.pes;
         let prev = self.placement.insert(id, pe);
         assert!(prev.is_none(), "chare {id:?} registered twice");
-        self.registry[pe].insert(id, chare);
+        self.chares[pe].insert(id, chare);
     }
 
     /// Spawn PE threads, the coordinator, and the GPU service.
     pub fn start(&mut self) -> Result<()> {
         anyhow::ensure!(self.running.is_none(), "already started");
         let shared = Shared::new();
+        let registry = Arc::new(self.kernels.clone());
         let (coord_tx, coord_rx) = channel::<CoordMsg>();
         let mut pe_txs = Vec::new();
         let mut pe_rxs = Vec::new();
@@ -940,6 +1046,7 @@ impl GCharm {
             coord: coord_tx.clone(),
             placement: Arc::new(std::mem::take(&mut self.placement)),
             shared: shared.clone(),
+            registry,
         };
 
         // GPU completion forwarder: GpuService -> coordinator queue.
@@ -963,13 +1070,12 @@ impl GCharm {
 
         let mut pe_handles = Vec::new();
         for (pe, rx) in pe_rxs.into_iter().enumerate() {
-            let chares = std::mem::take(&mut self.registry[pe]);
+            let chares = std::mem::take(&mut self.chares[pe]);
             let r = router.clone();
-            let exec_cfg = self.cfg.executor.clone();
             pe_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pe-{pe}"))
-                    .spawn(move || pe_loop(pe, rx, chares, r, exec_cfg))?,
+                    .spawn(move || pe_loop(pe, rx, chares, r))?,
             );
         }
 

@@ -1,0 +1,388 @@
+//! The open kernel registry: apps register kernel families at startup.
+//!
+//! The runtime used to hardcode exactly three kernel families as closed
+//! enums (`WorkKind::{Force, Ewald, MdInteract}`) threaded through every
+//! layer. This module replaces that surface: an app calls
+//! [`crate::coordinator::GCharm::register_kernel`] with a
+//! [`KernelDescriptor`] — the runtime half ([`TileKernel`]: tile shapes,
+//! constants, occupancy resources, native slot function) plus the
+//! scheduling policy half (combine override, slot-sorted insertion,
+//! hybrid CPU fallback) — and receives a [`KernelKindId`]. Work requests
+//! carry a shape-checked [`Tile`] payload tagged with that id, and every
+//! layer (combiners, hybrid scheduler, staging pools, manifest ladders,
+//! metrics) is table-driven off the registry.
+//!
+//! The paper's three families are provided as ready-made descriptors
+//! ([`force_descriptor`], [`ewald_descriptor`], [`md_descriptor`]); apps
+//! register them like any other family.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::kernel::TileKernel;
+
+use super::combiner::CombinePolicy;
+use super::work_request::Tile;
+
+/// Registry handle of one registered kernel family. The wrapped index is
+/// the family's position in registration order; it indexes the per-device
+/// combiner tables and the per-kind statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelKindId(pub usize);
+
+/// A tile buffer whose length disagrees with the registered shape,
+/// reported with the offending argument and both lengths.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeError {
+    /// Registered family name.
+    pub kernel: String,
+    /// Offending argument (a registered tile name, or a synthetic label
+    /// like `<arg count>` / `<entry ids>`).
+    pub arg: String,
+    /// Expected length (floats, or count for the synthetic labels).
+    pub expected: usize,
+    /// Actual length found in the submitted payload.
+    pub actual: usize,
+}
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kernel {}: arg {} expects {} elements, got {}",
+            self.kernel, self.arg, self.expected, self.actual
+        )
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+/// Everything the runtime needs to schedule and execute one registered
+/// kernel family.
+#[derive(Debug, Clone)]
+pub struct KernelDescriptor {
+    /// The runtime half: tile shapes/widths, constant arg, occupancy
+    /// resources (-> combiner maxSize), reuse/gather/entry-cache wiring,
+    /// and the native per-slot implementation.
+    pub kernel: Arc<TileKernel>,
+    /// Per-family combining-policy override (`None` = the runtime
+    /// config's policy).
+    pub combine: Option<CombinePolicy>,
+    /// Keep this family's pending queue sorted by device slot (the
+    /// coalescing strategy of paper section 3.2; requires a reuse arg and
+    /// takes effect under `DataPolicy::ReuseSorted`).
+    pub sort_by_slot: bool,
+    /// The family's `slot_fn` also serves as a CPU kernel, making it
+    /// eligible for dynamic hybrid CPU/GPU scheduling (section 3.3).
+    pub cpu_fallback: bool,
+}
+
+impl KernelDescriptor {
+    /// Descriptor with default policy (runtime combine policy, no
+    /// slot-sorting, GPU-only) around a runtime kernel.
+    pub fn new(kernel: TileKernel) -> KernelDescriptor {
+        KernelDescriptor {
+            kernel: Arc::new(kernel),
+            combine: None,
+            sort_by_slot: false,
+            cpu_fallback: false,
+        }
+    }
+
+    /// Validate a submitted tile payload against the registered shapes.
+    pub fn check(&self, tile: &Tile) -> Result<(), ShapeError> {
+        let k = &self.kernel;
+        if tile.bufs.len() != k.args.len() {
+            return Err(ShapeError {
+                kernel: k.name.to_string(),
+                arg: "<arg count>".to_string(),
+                expected: k.args.len(),
+                actual: tile.bufs.len(),
+            });
+        }
+        for (spec, buf) in k.args.iter().zip(&tile.bufs) {
+            if buf.len() != spec.slot_len() {
+                return Err(ShapeError {
+                    kernel: k.name.to_string(),
+                    arg: spec.name.to_string(),
+                    expected: spec.slot_len(),
+                    actual: buf.len(),
+                });
+            }
+        }
+        match k.entry_arg {
+            Some(ea) => {
+                let cap = k.args[ea].rows;
+                if tile.entry_ids.len() > cap {
+                    return Err(ShapeError {
+                        kernel: k.name.to_string(),
+                        arg: "<entry ids>".to_string(),
+                        expected: cap,
+                        actual: tile.entry_ids.len(),
+                    });
+                }
+            }
+            None => {
+                if !tile.entry_ids.is_empty() {
+                    return Err(ShapeError {
+                        kernel: k.name.to_string(),
+                        arg: "<entry ids>".to_string(),
+                        expected: 0,
+                        actual: tile.entry_ids.len(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The registered kernel families of one runtime instance. Frozen
+/// (`Arc`-shared) at `GCharm::start`; every layer reads it, none matches
+/// on a family.
+#[derive(Debug, Clone, Default)]
+pub struct KernelRegistry {
+    descs: Vec<KernelDescriptor>,
+}
+
+impl KernelRegistry {
+    pub fn new() -> KernelRegistry {
+        KernelRegistry::default()
+    }
+
+    /// Register a family; returns its kind id. Rejects duplicate names
+    /// and internally inconsistent descriptors.
+    pub fn register(&mut self, desc: KernelDescriptor) -> Result<KernelKindId> {
+        let k = &desc.kernel;
+        if k.args.is_empty() {
+            bail!("kernel {}: a family needs at least one tile arg", k.name);
+        }
+        if k.out_slot_len() == 0 {
+            bail!("kernel {}: output slot must be non-empty", k.name);
+        }
+        if let Some(ra) = k.reuse_arg {
+            if ra >= k.args.len() {
+                bail!("kernel {}: reuse arg {ra} out of range", k.name);
+            }
+            if k.gather_name.is_none() {
+                bail!("kernel {}: a reuse arg needs a gather family", k.name);
+            }
+        } else if k.gather_name.is_some() {
+            bail!("kernel {}: a gather family needs a reuse arg", k.name);
+        }
+        if let Some(ea) = k.entry_arg {
+            if ea >= k.args.len() {
+                bail!("kernel {}: entry arg {ea} out of range", k.name);
+            }
+        }
+        if desc.sort_by_slot && k.reuse_arg.is_none() {
+            bail!(
+                "kernel {}: slot-sorted combining needs a reuse arg",
+                k.name
+            );
+        }
+        if self.find(&k.name).is_some() {
+            bail!("kernel {} already registered", k.name);
+        }
+        self.descs.push(desc);
+        Ok(KernelKindId(self.descs.len() - 1))
+    }
+
+    /// Number of registered families.
+    pub fn len(&self) -> usize {
+        self.descs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.descs.is_empty()
+    }
+
+    /// The descriptor of one registered family. Panics on a foreign id (a
+    /// kind id is only obtainable from this registry's `register`).
+    pub fn get(&self, id: KernelKindId) -> &KernelDescriptor {
+        &self.descs[id.0]
+    }
+
+    /// The runtime kernel of one registered family.
+    pub fn kernel(&self, id: KernelKindId) -> &Arc<TileKernel> {
+        &self.get(id).kernel
+    }
+
+    /// Look a family up by registered name.
+    pub fn find(&self, name: &str) -> Option<KernelKindId> {
+        self.descs
+            .iter()
+            .position(|d| &*d.kernel.name == name)
+            .map(KernelKindId)
+    }
+
+    /// All registered descriptors, in kind order.
+    pub fn descriptors(&self) -> &[KernelDescriptor] {
+        &self.descs
+    }
+
+    /// The runtime kernels, in kind order (what the device pool serves).
+    pub fn kernels(&self) -> Vec<Arc<TileKernel>> {
+        self.descs.iter().map(|d| d.kernel.clone()).collect()
+    }
+
+    /// Kind ids, in registration order.
+    pub fn ids(&self) -> impl Iterator<Item = KernelKindId> {
+        (0..self.descs.len()).map(KernelKindId)
+    }
+
+    /// Validate a payload against one family's registered shapes.
+    pub fn check(&self, id: KernelKindId, tile: &Tile) -> Result<(), ShapeError> {
+        match self.descs.get(id.0) {
+            Some(d) => d.check(tile),
+            None => Err(ShapeError {
+                kernel: format!("<unregistered kind {}>", id.0),
+                arg: "<kind>".to_string(),
+                expected: self.descs.len(),
+                actual: id.0,
+            }),
+        }
+    }
+}
+
+/// The N-Body bucket gravity family (paper section 4.1): slot-sorted
+/// combining, particle-buffer reuse with a gather variant, entry-cache
+/// accounting of the interaction list. GPU-only.
+pub fn force_descriptor(eps2: f32) -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel::gravity(eps2)),
+        combine: None,
+        sort_by_slot: true,
+        cpu_fallback: false,
+    }
+}
+
+/// The N-Body Ewald periodic-correction family: contiguous transfers (no
+/// gather variant), GPU-only.
+pub fn ewald_descriptor(ktab: Vec<f32>) -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel::ewald(ktab)),
+        combine: None,
+        sort_by_slot: false,
+        cpu_fallback: false,
+    }
+}
+
+/// The MD patch-pair family (paper section 4.2): has kernels on both
+/// devices, so it is eligible for dynamic hybrid scheduling (Fig 5).
+pub fn md_descriptor(params: [f32; 3]) -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel::md_force(params)),
+        combine: None,
+        sort_by_slot: false,
+        cpu_fallback: true,
+    }
+}
+
+/// Registry holding the paper's three built-in families, in
+/// (force, ewald, md) kind order. Tests and benches share this set.
+pub fn builtin_registry(
+    eps2: f32,
+    ktab: Vec<f32>,
+    md_params: [f32; 3],
+) -> KernelRegistry {
+    let mut reg = KernelRegistry::new();
+    reg.register(force_descriptor(eps2)).expect("force registers");
+    reg.register(ewald_descriptor(ktab)).expect("ewald registers");
+    reg.register(md_descriptor(md_params)).expect("md registers");
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, KTABLE, KTAB_W, PARTICLE_W, PARTS_PER_BUCKET,
+    };
+
+    fn builtins() -> KernelRegistry {
+        builtin_registry(1e-2, vec![0.0; KTABLE * KTAB_W], [1.0, 0.04, 1.0])
+    }
+
+    #[test]
+    fn registration_assigns_sequential_ids() {
+        let reg = builtins();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.find("gravity"), Some(KernelKindId(0)));
+        assert_eq!(reg.find("ewald"), Some(KernelKindId(1)));
+        assert_eq!(reg.find("md_force"), Some(KernelKindId(2)));
+        assert_eq!(reg.kernel(KernelKindId(0)).max_combine(), 104);
+        assert_eq!(reg.kernel(KernelKindId(1)).max_combine(), 65);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut reg = builtins();
+        assert!(reg.register(force_descriptor(0.5)).is_err());
+    }
+
+    #[test]
+    fn inconsistent_descriptors_rejected() {
+        let mut reg = KernelRegistry::new();
+        // slot-sorting without a reuse arg
+        let mut d = ewald_descriptor(vec![0.0; KTABLE * KTAB_W]);
+        d.sort_by_slot = true;
+        assert!(reg.register(d).is_err());
+    }
+
+    #[test]
+    fn check_accepts_canonical_shapes() {
+        let reg = builtins();
+        let tile = Tile::with_entries(
+            vec![
+                vec![0.0; PARTS_PER_BUCKET * PARTICLE_W],
+                vec![0.0; INTERACTIONS * INTER_W],
+            ],
+            vec![0; 8],
+        );
+        assert!(reg.check(KernelKindId(0), &tile).is_ok());
+    }
+
+    #[test]
+    fn check_names_offending_dimension() {
+        let reg = builtins();
+        let tile = Tile::new(vec![
+            vec![0.0; 3],
+            vec![0.0; INTERACTIONS * INTER_W],
+        ]);
+        let e = reg.check(KernelKindId(0), &tile).unwrap_err();
+        assert_eq!(e.arg, "parts");
+        assert_eq!(e.expected, PARTS_PER_BUCKET * PARTICLE_W);
+        assert_eq!(e.actual, 3);
+        let msg = e.to_string();
+        assert!(msg.contains("gravity") && msg.contains("parts"));
+    }
+
+    #[test]
+    fn check_rejects_wrong_arg_count_and_excess_entries() {
+        let reg = builtins();
+        let e = reg
+            .check(KernelKindId(0), &Tile::new(vec![vec![]]))
+            .unwrap_err();
+        assert_eq!(e.arg, "<arg count>");
+        // too many entry ids for the interaction list
+        let tile = Tile::with_entries(
+            vec![
+                vec![0.0; PARTS_PER_BUCKET * PARTICLE_W],
+                vec![0.0; INTERACTIONS * INTER_W],
+            ],
+            vec![0; INTERACTIONS + 1],
+        );
+        let e = reg.check(KernelKindId(0), &tile).unwrap_err();
+        assert_eq!(e.arg, "<entry ids>");
+        // entry ids on a family without an entry cache
+        let tile = Tile::with_entries(
+            vec![vec![0.0; PARTS_PER_BUCKET * PARTICLE_W]],
+            vec![1],
+        );
+        assert!(reg.check(KernelKindId(1), &tile).is_err());
+        // unregistered kind id
+        assert!(reg.check(KernelKindId(9), &Tile::default()).is_err());
+    }
+}

@@ -18,11 +18,11 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::runtime::executor::ExecutorConfig;
 use crate::util::timeline::Timeline;
 
 use super::chare::{Chare, ChareId, Ctx, Effect, Msg, WorkDraft};
 use super::combiner::Pending;
+use super::registry::KernelRegistry;
 use super::work_request::WrResult;
 
 /// Messages a PE thread consumes.
@@ -258,6 +258,10 @@ pub(crate) struct Router {
     pub coord: Sender<CoordMsg>,
     pub placement: Arc<HashMap<ChareId, usize>>,
     pub shared: Arc<Shared>,
+    /// The frozen kernel registry: entry-method contexts validate
+    /// submissions against it, and the PE CpuBatch path executes through
+    /// its slot functions.
+    pub registry: Arc<KernelRegistry>,
 }
 
 impl Router {
@@ -309,7 +313,6 @@ pub(crate) fn pe_loop(
     rx: Receiver<PeMsg>,
     mut chares: HashMap<ChareId, Box<dyn Chare>>,
     router: Router,
-    exec_cfg: ExecutorConfig,
 ) {
     while let Ok(m) = rx.recv() {
         match m {
@@ -317,7 +320,7 @@ pub(crate) fn pe_loop(
                 let mut chare = chares
                     .remove(&to)
                     .unwrap_or_else(|| panic!("chare {to:?} not on pe {pe}"));
-                let mut ctx = Ctx::new(pe);
+                let mut ctx = Ctx::new(pe, router.registry.clone());
                 chare.receive(msg, &mut ctx);
                 chares.insert(to, chare);
                 router.dispatch(ctx.drain());
@@ -326,7 +329,7 @@ pub(crate) fn pe_loop(
             PeMsg::CpuBatch(batch) => {
                 let t0 = Instant::now();
                 let (items, results) =
-                    super::cpu_pool::execute_pending(&batch, &exec_cfg);
+                    super::cpu_pool::execute_pending(&router.registry, &batch);
                 let secs = t0.elapsed().as_secs_f64();
                 router.shared.timeline.record(
                     crate::util::timeline::SpanKind::CpuTask,
@@ -377,11 +380,18 @@ mod tests {
         let (pe_tx, pe_rx) = channel();
         let placement: HashMap<ChareId, usize> =
             (0..nchares).map(|i| (ChareId::new(0, i), 0)).collect();
+        let mut registry = KernelRegistry::new();
+        registry
+            .register(crate::coordinator::registry::md_descriptor([
+                1.0, 0.04, 1.0,
+            ]))
+            .unwrap();
         let router = Router {
             pes: vec![pe_tx],
             coord: coord_tx,
             placement: Arc::new(placement),
             shared: Shared::new(),
+            registry: Arc::new(registry),
         };
         (router, coord_rx, vec![pe_rx])
     }
@@ -412,7 +422,7 @@ mod tests {
         // process: chare 0 replies to chare 1, but Stop is already queued,
         // so deliver the reply manually through another loop run
         let r2 = router.clone();
-        pe_loop(0, rx, chares, r2, ExecutorConfig::default());
+        pe_loop(0, rx, chares, r2);
         // chare 0 processed (-1), its reply enqueued (+1): net 1
         assert_eq!(router.shared.outstanding(), 1);
         let red = router.shared.reduction.lock().unwrap();
@@ -546,31 +556,30 @@ mod tests {
 
     #[test]
     fn cpu_batch_computes_and_reports() {
-        use crate::coordinator::work_request::{
-            WorkKind, WorkRequest, WrPayload,
-        };
+        use crate::coordinator::registry::KernelKindId;
+        use crate::coordinator::work_request::{Tile, WorkRequest};
         let (router, crx, mut prx) = harness(1);
         let rx = prx.pop().unwrap();
         let batch = vec![Pending {
             wr: WorkRequest {
                 id: 5,
                 chare: ChareId::new(0, 0),
-                kind: WorkKind::MdInteract,
+                kind: KernelKindId(0),
                 buffer: None,
                 data_items: 2,
                 tag: 0,
                 arrival: 0.0,
-                payload: WrPayload::MdPair {
-                    pa: vec![0.0, 0.0],
-                    pb: vec![0.1, 0.0],
-                },
+                payload: Tile::new(vec![
+                    vec![0.0, 0.0],
+                    vec![0.1, 0.0],
+                ]),
             },
             slot: None,
             staged_bytes: 0,
         }];
         router.pes[0].send(PeMsg::CpuBatch(batch)).unwrap();
         router.pes[0].send(PeMsg::Stop).unwrap();
-        pe_loop(0, rx, HashMap::new(), router.clone(), ExecutorConfig::default());
+        pe_loop(0, rx, HashMap::new(), router.clone());
         match crx.try_recv().unwrap() {
             CoordMsg::CpuDone { items, secs, results } => {
                 assert_eq!(items, 2);

@@ -1,63 +1,48 @@
 //! Work requests: the unit of GPU work a chare submits to the runtime.
 //!
-//! When a chare needs a kernel, it creates a `WorkRequest` and hands it to
-//! the runtime scheduler (paper section 2.2). The runtime combines several
-//! into one `CombinedLaunch` (section 3.1), decides the data-movement policy
-//! (section 3.2), or routes them to CPU workers (section 3.3).
+//! When a chare needs a kernel, it creates a `WorkRequest` carrying a
+//! [`Tile`] payload tagged with the registered [`KernelKindId`] and hands
+//! it to the runtime scheduler (paper section 2.2). The runtime combines
+//! several into one `CombinedLaunch` (section 3.1), decides the
+//! data-movement policy (section 3.2), or routes them to CPU workers
+//! (section 3.3). Payload shapes are validated against the registry at
+//! submission (`Ctx::submit`), so a malformed tile is rejected with a
+//! `ShapeError` naming the offending argument instead of corrupting a
+//! combined launch.
 
 use crate::runtime::memory::BufferId;
-use crate::runtime::shapes::{
-    INTERACTIONS, INTER_W, MD_W, PARTICLE_W, PARTS_PER_BUCKET,
-    PARTS_PER_PATCH,
-};
 
 use super::chare::ChareId;
+use super::registry::KernelKindId;
 
-/// Which kernel family a work request belongs to. Each family has its own
-/// workGroupList/combiner because occupancy-derived maxSize differs
-/// (section 4.3: force 104, Ewald 65).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum WorkKind {
-    /// Bucket gravity force (N-Body).
-    Force,
-    /// Ewald periodic correction (N-Body).
-    Ewald,
-    /// Patch-pair interaction (MD). Has both CPU and GPU kernels, so it is
-    /// eligible for hybrid scheduling.
-    MdInteract,
+/// Kernel input data carried by one work request: one buffer per
+/// registered tile argument (in registration order), each exactly one
+/// request slot (`rows * width` floats of the registered shape).
+#[derive(Debug, Clone, Default)]
+pub struct Tile {
+    /// Per-arg slot buffers, registration order.
+    pub bufs: Vec<Vec<f32>>,
+    /// Residency keys of the *real* (unpadded) entries of the family's
+    /// entry-cache argument, if it has one. The runtime keys
+    /// interaction-data residency on them (section 3.2: moments/particle
+    /// data resident on the device from prior kernels). Empty otherwise.
+    pub entry_ids: Vec<u32>,
 }
 
-/// Kernel input data carried by one work request.
-#[derive(Debug, Clone)]
-pub enum WrPayload {
-    /// Bucket particles (P x 4) + interaction list (I x 4, zero-padded).
-    /// `inter_ids` are the stable ids of the *real* (unpadded) entries;
-    /// the runtime keys interaction-data residency on them (section 3.2:
-    /// moments/particle data resident on the device from prior kernels).
-    Force { parts: Vec<f32>, inters: Vec<f32>, inter_ids: Vec<u32> },
-    /// Bucket particles (P x 4).
-    Ewald { parts: Vec<f32> },
-    /// Two patch particle sets (N x 2 each).
-    MdPair { pa: Vec<f32>, pb: Vec<f32> },
-}
+impl Tile {
+    /// Payload without entry-cache keys.
+    pub fn new(bufs: Vec<Vec<f32>>) -> Tile {
+        Tile { bufs, entry_ids: Vec::new() }
+    }
 
-impl WrPayload {
-    /// Validate buffer lengths against the canonical tile shapes.
-    pub fn check(&self) -> bool {
-        match self {
-            WrPayload::Force { parts, inters, inter_ids } => {
-                parts.len() == PARTS_PER_BUCKET * PARTICLE_W
-                    && inters.len() == INTERACTIONS * INTER_W
-                    && inter_ids.len() <= INTERACTIONS
-            }
-            WrPayload::Ewald { parts } => {
-                parts.len() == PARTS_PER_BUCKET * PARTICLE_W
-            }
-            WrPayload::MdPair { pa, pb } => {
-                pa.len() == PARTS_PER_PATCH * MD_W
-                    && pb.len() == PARTS_PER_PATCH * MD_W
-            }
-        }
+    /// Payload with residency keys for the family's entry-cache argument.
+    pub fn with_entries(bufs: Vec<Vec<f32>>, entry_ids: Vec<u32>) -> Tile {
+        Tile { bufs, entry_ids }
+    }
+
+    /// Total payload floats across every tile buffer.
+    pub fn floats(&self) -> usize {
+        self.bufs.iter().map(Vec::len).sum()
     }
 }
 
@@ -68,7 +53,8 @@ pub struct WorkRequest {
     pub id: u64,
     /// Chare to notify with the results.
     pub chare: ChareId,
-    pub kind: WorkKind,
+    /// Registered kernel family this request belongs to.
+    pub kind: KernelKindId,
     /// Chare data buffer this request reads; the chare table uses it for
     /// residency/reuse decisions (section 3.2). `None` for payloads with no
     /// reusable buffer.
@@ -81,30 +67,13 @@ pub struct WorkRequest {
     pub tag: u64,
     /// Timeline seconds when the request reached the runtime.
     pub arrival: f64,
-    pub payload: WrPayload,
+    pub payload: Tile,
 }
 
 impl WorkRequest {
     /// Payload bytes that would cross PCIe if nothing were resident.
     pub fn payload_bytes(&self) -> u64 {
-        let floats = match &self.payload {
-            WrPayload::Force { parts, inters, .. } => {
-                parts.len() + inters.len()
-            }
-            WrPayload::Ewald { parts } => parts.len(),
-            WrPayload::MdPair { pa, pb } => pa.len() + pb.len(),
-        };
-        (floats * 4) as u64
-    }
-
-    /// Bytes of the reusable buffer (the part residency can save).
-    pub fn reusable_bytes(&self) -> u64 {
-        let floats = match &self.payload {
-            WrPayload::Force { parts, .. } => parts.len(),
-            WrPayload::Ewald { parts } => parts.len(),
-            WrPayload::MdPair { .. } => 0,
-        };
-        (floats * 4) as u64
+        (self.payload.floats() * 4) as u64
     }
 }
 
@@ -114,53 +83,37 @@ pub struct WrResult {
     pub wr_id: u64,
     /// The submitting chare's correlation tag.
     pub tag: u64,
-    pub kind: WorkKind,
-    /// Output rows for this request's slot (P x 4 for gravity/Ewald,
-    /// N x 2 for MD).
+    /// Registered kernel family the result belongs to.
+    pub kind: KernelKindId,
+    /// Output rows for this request's slot
+    /// (`out_rows * out_width` floats of the registered shape).
     pub out: Vec<f32>,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, PARTICLE_W, PARTS_PER_BUCKET,
+    };
 
     fn force_wr() -> WorkRequest {
         WorkRequest {
             id: 1,
             chare: ChareId::new(0, 0),
-            kind: WorkKind::Force,
+            kind: KernelKindId(0),
             buffer: Some(42),
             data_items: 128,
             tag: 0,
             arrival: 0.0,
-            payload: WrPayload::Force {
-                parts: vec![0.0; PARTS_PER_BUCKET * PARTICLE_W],
-                inters: vec![0.0; INTERACTIONS * INTER_W],
-                inter_ids: vec![0; 8],
-            },
+            payload: Tile::with_entries(
+                vec![
+                    vec![0.0; PARTS_PER_BUCKET * PARTICLE_W],
+                    vec![0.0; INTERACTIONS * INTER_W],
+                ],
+                vec![0; 8],
+            ),
         }
-    }
-
-    #[test]
-    fn payload_check_accepts_canonical_shapes() {
-        assert!(force_wr().payload.check());
-        let e = WrPayload::Ewald { parts: vec![0.0; PARTS_PER_BUCKET * PARTICLE_W] };
-        assert!(e.check());
-        let m = WrPayload::MdPair {
-            pa: vec![0.0; PARTS_PER_PATCH * MD_W],
-            pb: vec![0.0; PARTS_PER_PATCH * MD_W],
-        };
-        assert!(m.check());
-    }
-
-    #[test]
-    fn payload_check_rejects_wrong_shapes() {
-        let bad = WrPayload::Force {
-            parts: vec![0.0; 3],
-            inters: vec![],
-            inter_ids: vec![],
-        };
-        assert!(!bad.check());
     }
 
     #[test]
@@ -169,6 +122,14 @@ mod tests {
         let parts_bytes = (PARTS_PER_BUCKET * PARTICLE_W * 4) as u64;
         let inter_bytes = (INTERACTIONS * INTER_W * 4) as u64;
         assert_eq!(wr.payload_bytes(), parts_bytes + inter_bytes);
-        assert_eq!(wr.reusable_bytes(), parts_bytes);
+    }
+
+    #[test]
+    fn tile_constructors() {
+        let t = Tile::new(vec![vec![1.0, 2.0], vec![3.0]]);
+        assert_eq!(t.floats(), 3);
+        assert!(t.entry_ids.is_empty());
+        let e = Tile::with_entries(vec![vec![0.0]], vec![7, 8]);
+        assert_eq!(e.entry_ids, vec![7, 8]);
     }
 }

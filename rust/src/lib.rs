@@ -16,9 +16,16 @@
 //!   zero-allocation arena and pipelines staging against execution
 //!   (`runtime::staging`, PERF.md).
 //!
-//! Applications (`apps`): a ChaNGa-style Barnes-Hut N-Body simulation and
-//! a 2D molecular dynamics mini-app -- the paper's two evaluation
-//! workloads. See DESIGN.md for the experiment index.
+//! The kernel surface is **open**: apps register kernel families at
+//! startup (`coordinator::GCharm::register_kernel` with a
+//! `KernelDescriptor`) and submit shape-checked `Tile` payloads tagged
+//! with the returned `KernelKindId`; every scheduling layer is
+//! table-driven off the registry. See PERF.md, "Adding a workload".
+//!
+//! Applications (`apps`): a ChaNGa-style Barnes-Hut N-Body simulation, a
+//! 2D molecular dynamics mini-app -- the paper's two evaluation
+//! workloads -- and an SpMV-style sparse neighbor-update app registered
+//! purely through the public API. See DESIGN.md for the experiment index.
 pub mod apps;
 pub mod bench;
 pub mod coordinator;

@@ -16,6 +16,9 @@
 //!   --split static|adaptive         (default adaptive)
 //!   --devices N --route affinity|rr (default 1 / affinity)
 //!   --mode gcharm|cpu1              (default gcharm)
+//! gcharm spmv [opts]                sparse neighbor-update run (the
+//!   --rows N --iters N --nnz N      registry-API demo workload)
+//!   --pes N --devices N --split static|adaptive
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
 //! ```
 
@@ -25,6 +28,7 @@ use anyhow::{bail, Result};
 
 use gcharm::apps::md::{self, MdConfig};
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
+use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench;
 use gcharm::coordinator::{
     CombinePolicy, Config, DataPolicy, RoutePolicy, SplitPolicy,
@@ -151,7 +155,7 @@ fn cmd_md(flags: HashMap<String, String>) -> Result<()> {
             Some("static") => SplitPolicy::StaticCount,
             Some(other) => bail!("unknown split {other}"),
         },
-        hybrid_md: true,
+        hybrid: true,
         devices: get(&flags, "devices", 1),
         route: route_policy(
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
@@ -172,6 +176,38 @@ fn cmd_md(flags: HashMap<String, String>) -> Result<()> {
         "kinetic energy: start {:.4} end {:.4}",
         r.energies.first().unwrap_or(&0.0),
         r.energies.last().unwrap_or(&0.0)
+    );
+    println!("{}", r.report);
+    Ok(())
+}
+
+fn cmd_spmv(flags: HashMap<String, String>) -> Result<()> {
+    let mut cfg = SpmvConfig::new(get(&flags, "rows", 2048));
+    cfg.iters = get(&flags, "iters", 5);
+    cfg.max_row_nnz = get(&flags, "nnz", 512);
+    cfg.runtime = Config {
+        pes: get(&flags, "pes", 4),
+        split: match flags.get("split").map(|s| s.as_str()) {
+            None | Some("adaptive") => SplitPolicy::AdaptiveItems,
+            Some("static") => SplitPolicy::StaticCount,
+            Some(other) => bail!("unknown split {other}"),
+        },
+        devices: get(&flags, "devices", 1),
+        route: route_policy(
+            flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
+        )?,
+        ..Config::default()
+    };
+    println!(
+        "spmv: rows={} iters={} max_nnz={} pes={} devices={}",
+        cfg.rows, cfg.iters, cfg.max_row_nnz, cfg.runtime.pes,
+        cfg.runtime.devices
+    );
+    let r = spmv::run(&cfg)?;
+    println!(
+        "residual^2: start {:.4e} end {:.4e}",
+        r.residuals.first().unwrap_or(&0.0),
+        r.residuals.last().unwrap_or(&0.0)
     );
     println!("{}", r.report);
     Ok(())
@@ -213,10 +249,11 @@ fn main() -> Result<()> {
         }
         "nbody" => cmd_nbody(flags),
         "md" => cmd_md(flags),
+        "spmv" => cmd_spmv(flags),
         "figures" => cmd_figures(flags),
         _ => {
             println!(
-                "usage: gcharm <info|nbody|md|figures> [--flags]\n\
+                "usage: gcharm <info|nbody|md|spmv|figures> [--flags]\n\
                  see rust/src/main.rs header for options"
             );
             Ok(())

@@ -6,28 +6,29 @@
 //! over a channel and receive `Completion`s back. A synchronous `Executor`
 //! is also exposed for examples, tests, and the figure benches.
 //!
+//! The payload surface is open: a launch carries a [`Payload::Tile`] (or
+//! [`Payload::TileGather`] on the reuse path) referencing the registered
+//! [`TileKernel`] that describes its shapes, constants, resources, and
+//! native implementation. No layer below this point matches on a kernel
+//! family; everything is table-driven off the kernel descriptor.
+//!
 //! Launch hot path (see `runtime::staging` and PERF.md):
 //!
 //! - padded argument buffers come from a reusable `StagingArena` instead of
-//!   per-chunk allocation + zero-fill; constant args are built once and
-//!   shared; variant selection is memoized per `(kernel, n, pool)`;
+//!   per-chunk allocation + zero-fill; constant args are owned by the
+//!   kernel descriptor and shared; variant selection is memoized per
+//!   `(kernel, n, pool)`;
 //! - split launches run a two-stage pipeline: chunk *k+1* is padded by a
 //!   stager thread while chunk *k* executes;
 //! - `GpuService` splits staging and execution onto two threads, so the
 //!   next queued `LaunchSpec` is staged while the engine is busy with the
 //!   current one.
-//!
-//! Responsibilities preserved from the original synchronous design:
-//!   - select the smallest AOT variant that fits a combined launch and
-//!     zero/inert-pad the payload to its static shape,
-//!   - split launches that exceed the largest compiled batch,
-//!   - measure wall-clock execution and compute the modeled-K20 cost
-//!     (transfer + kernel) for the figure benches.
 
 use std::path::Path;
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender,
 };
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -36,119 +37,86 @@ use anyhow::{Context, Result};
 use super::device_sim::{
     CoalescingClass, DeviceModel, KernelResources, ModeledCost,
 };
+use super::kernel::TileKernel;
 use super::manifest::Manifest;
 use super::pjrt::{Engine, HostArg};
-use super::shapes::{
-    INTERACTIONS, KTABLE, KTAB_W, MD_W, OUT_W, PARTS_PER_BUCKET,
-    PARTS_PER_PATCH,
-};
 use super::staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};
 
 /// Staged-chunk queue depth: double buffering, bounded so the stager can
 /// run at most this far ahead of the engine.
 const PIPELINE_DEPTH: usize = 2;
 
-/// Physics constants baked per run (not per launch).
-#[derive(Debug, Clone)]
-pub struct ExecutorConfig {
-    /// Plummer softening squared for gravity kernels.
-    pub eps2: f32,
-    /// Ewald k-table, KTABLE x 4 row-major [kx, ky, kz, coef].
-    pub ktab: Vec<f32>,
-    /// MD LJ parameters [cutoff^2, sigma^2, epsilon].
-    pub md_params: [f32; 3],
-}
-
-impl Default for ExecutorConfig {
-    fn default() -> Self {
-        ExecutorConfig {
-            eps2: 1e-2,
-            ktab: vec![0.0; KTABLE * KTAB_W],
-            md_params: [1.0, 0.04, 1.0],
-        }
-    }
-}
-
 /// Host payload of one combined kernel launch.
 #[derive(Debug, Clone)]
 pub enum Payload {
-    /// Contiguous bucket gravity: parts (n,P,4), inters (n,I,4).
-    Gravity { parts: Vec<f32>, inters: Vec<f32>, batch: usize },
-    /// Reuse-path gravity: pool (rows,4), idx (n,P), inters (n,I,4).
-    /// The pool is shared (Arc) with the chare table's host mirror so a
-    /// launch does not copy the whole device pool (EXPERIMENTS.md Perf).
-    GravityGather {
-        pool: std::sync::Arc<Vec<f32>>,
-        idx: Vec<i32>,
-        inters: Vec<f32>,
+    /// Contiguous combined launch: one batch-major buffer per registered
+    /// tile argument, in registration order.
+    Tile {
+        /// The registered kernel family this launch belongs to.
+        kernel: Arc<TileKernel>,
+        /// `bufs[i]` holds `batch` slots of `kernel.args[i]`.
+        bufs: Vec<Vec<f32>>,
         batch: usize,
     },
-    /// Ewald correction: parts (n,P,4).
-    Ewald { parts: Vec<f32>, batch: usize },
-    /// MD patch pairs: pa (n,N,2), pb (n,N,2).
-    MdForce { pa: Vec<f32>, pb: Vec<f32>, batch: usize },
+    /// Reuse-path launch through the family's gather variant: the
+    /// reusable tile stays resident in `pool` (shared with the chare
+    /// table's host mirror, so a launch does not copy the whole device
+    /// pool) and is addressed per slot by `idx`.
+    TileGather {
+        kernel: Arc<TileKernel>,
+        /// Device-pool mirror, `rows x width` of the reuse arg.
+        pool: Arc<Vec<f32>>,
+        /// Gather rows: `batch * kernel.args[reuse_arg].rows` indices.
+        idx: Vec<i32>,
+        /// The remaining tile args (registration order, reuse arg
+        /// omitted), batch-major.
+        bufs: Vec<Vec<f32>>,
+        batch: usize,
+    },
 }
 
 impl Payload {
     pub fn batch(&self) -> usize {
         match self {
-            Payload::Gravity { batch, .. }
-            | Payload::GravityGather { batch, .. }
-            | Payload::Ewald { batch, .. }
-            | Payload::MdForce { batch, .. } => *batch,
+            Payload::Tile { batch, .. } | Payload::TileGather { batch, .. } => {
+                *batch
+            }
         }
     }
 
-    pub fn kernel_name(&self) -> &'static str {
+    /// The registered kernel family.
+    pub fn kernel(&self) -> &Arc<TileKernel> {
         match self {
-            Payload::Gravity { .. } => "gravity",
-            Payload::GravityGather { .. } => "gravity_gather",
-            Payload::Ewald { .. } => "ewald",
-            Payload::MdForce { .. } => "md_force",
+            Payload::Tile { kernel, .. }
+            | Payload::TileGather { kernel, .. } => kernel,
+        }
+    }
+
+    /// Manifest family name this launch selects variants from (the gather
+    /// family on the reuse path).
+    pub fn kernel_name(&self) -> &str {
+        match self {
+            Payload::Tile { kernel, .. } => &kernel.name,
+            Payload::TileGather { kernel, .. } => kernel
+                .gather_name
+                .as_deref()
+                .expect("gather payload for a family without one"),
         }
     }
 
     /// Kernel resource descriptor for the occupancy/cost model.
     pub fn resources(&self) -> KernelResources {
-        match self {
-            Payload::Gravity { .. } | Payload::GravityGather { .. } => {
-                KernelResources::force_kernel()
-            }
-            Payload::Ewald { .. } => KernelResources::ewald_kernel(),
-            Payload::MdForce { .. } => KernelResources::md_kernel(),
-        }
+        self.kernel().resources
     }
 
-    /// Particle-interactions per combined slot, for the cost model.
+    /// Modeled work per combined slot, for the cost model.
     pub fn interactions_per_block(&self) -> u64 {
-        match self {
-            Payload::Gravity { .. } | Payload::GravityGather { .. } => {
-                (PARTS_PER_BUCKET * INTERACTIONS) as u64
-            }
-            Payload::Ewald { .. } => (PARTS_PER_BUCKET * KTABLE) as u64,
-            Payload::MdForce { .. } => {
-                (PARTS_PER_PATCH * PARTS_PER_PATCH) as u64
-            }
-        }
-    }
-
-    fn out_row_w(&self) -> usize {
-        match self {
-            Payload::MdForce { .. } => MD_W,
-            _ => OUT_W,
-        }
-    }
-
-    fn out_rows_per_slot(&self) -> usize {
-        match self {
-            Payload::MdForce { .. } => PARTS_PER_PATCH,
-            _ => PARTS_PER_BUCKET,
-        }
+        self.kernel().items_per_slot
     }
 
     /// Output floats per combined slot.
     pub fn out_slot_len(&self) -> usize {
-        self.out_rows_per_slot() * self.out_row_w()
+        self.kernel().out_slot_len()
     }
 }
 
@@ -184,26 +152,6 @@ pub struct Completion {
     pub modeled: ModeledCost,
 }
 
-/// Validate the artifact set and config against the canonical tile shapes
-/// (fail fast if the Python-side constants drifted).
-fn validate_setup(manifest: &Manifest, config: &ExecutorConfig) -> Result<()> {
-    let v = manifest
-        .select("gravity", 1, 0)
-        .context("no gravity variants in manifest")?;
-    anyhow::ensure!(
-        v.args[0].shape[1] == PARTS_PER_BUCKET
-            && v.args[1].shape[1] == INTERACTIONS,
-        "artifact shapes {:?} disagree with runtime::shapes",
-        v.args[0].shape
-    );
-    anyhow::ensure!(
-        config.ktab.len() == KTABLE * KTAB_W,
-        "ktab must be {} floats",
-        KTABLE * KTAB_W
-    );
-    Ok(())
-}
-
 /// Synchronous executor: stage through the arena, select variant, run,
 /// slice. Split launches pipeline staging against execution.
 pub struct Executor {
@@ -212,33 +160,30 @@ pub struct Executor {
     /// is mutably borrowed by an execute call on another pipeline stage.
     manifest: Manifest,
     model: DeviceModel,
-    config: ExecutorConfig,
     arena: StagingArena,
     launches: u64,
 }
 
 impl Executor {
-    pub fn new(artifacts: &Path, config: ExecutorConfig) -> Result<Executor> {
-        let (manifest, real) = Manifest::load_or_synthetic(artifacts)?;
-        validate_setup(&manifest, &config)?;
-        let engine = Engine::with_manifest(manifest.clone(), real)?;
-        let arena = StagingArena::new(&config);
+    /// Build a synchronous executor over `artifacts` serving the given
+    /// registered kernel families.
+    pub fn new(
+        artifacts: &Path,
+        kernels: Vec<Arc<TileKernel>>,
+    ) -> Result<Executor> {
+        let (manifest, real) = Manifest::for_kernels(artifacts, &kernels)?;
+        let engine = Engine::with_manifest(manifest.clone(), real, &kernels)?;
         Ok(Executor {
             engine,
             manifest,
             model: DeviceModel::kepler_k20(),
-            config,
-            arena,
+            arena: StagingArena::new(),
             launches: 0,
         })
     }
 
     pub fn model(&self) -> &DeviceModel {
         &self.model
-    }
-
-    pub fn config(&self) -> &ExecutorConfig {
-        &self.config
     }
 
     pub fn launches(&self) -> u64 {
@@ -445,10 +390,10 @@ impl GpuService {
     /// are delivered to `done` in submission order.
     pub fn spawn(
         artifacts: &Path,
-        config: ExecutorConfig,
+        kernels: Vec<Arc<TileKernel>>,
         done: Sender<Result<Completion>>,
     ) -> Result<GpuService> {
-        GpuService::spawn_on(artifacts, config, 0, done)
+        GpuService::spawn_on(artifacts, kernels, 0, done)
     }
 
     /// Spawn the service threads for simulated device `device`; every
@@ -457,12 +402,11 @@ impl GpuService {
     /// services shares nothing but the completion channel.
     pub fn spawn_on(
         artifacts: &Path,
-        config: ExecutorConfig,
+        kernels: Vec<Arc<TileKernel>>,
         device: usize,
         done: Sender<Result<Completion>>,
     ) -> Result<GpuService> {
-        let (manifest, real) = Manifest::load_or_synthetic(artifacts)?;
-        validate_setup(&manifest, &config)?;
+        let (manifest, real) = Manifest::for_kernels(artifacts, &kernels)?;
 
         let (tx, rx) = channel::<LaunchSpec>();
         let (chunk_tx, chunk_rx) = sync_channel::<ChunkMsg>(PIPELINE_DEPTH);
@@ -472,12 +416,12 @@ impl GpuService {
         let stager = std::thread::Builder::new()
             .name(format!("gpu-stager-{device}"))
             .spawn(move || {
-                stager_loop(stage_manifest, config, rx, chunk_tx, ret_rx)
+                stager_loop(stage_manifest, rx, chunk_tx, ret_rx)
             })?;
         let engine = std::thread::Builder::new()
             .name(format!("gpu-service-{device}"))
             .spawn(move || {
-                engine_loop(manifest, real, device, chunk_rx, ret_tx, done)
+                engine_loop(manifest, real, kernels, device, chunk_rx, ret_tx, done)
             })?;
         Ok(GpuService { tx, stager: Some(stager), engine: Some(engine) })
     }
@@ -509,12 +453,11 @@ impl Drop for GpuService {
 /// thread executes earlier ones; recycles executed buffers.
 fn stager_loop(
     manifest: Manifest,
-    config: ExecutorConfig,
     rx: Receiver<LaunchSpec>,
     chunk_tx: SyncSender<ChunkMsg>,
     ret_rx: Receiver<StagedChunk>,
 ) {
-    let mut arena = StagingArena::new(&config);
+    let mut arena = StagingArena::new();
     'specs: while let Ok(spec) = rx.recv() {
         let meta = LaunchMeta::of(&spec);
         let abort = |e: anyhow::Error| ChunkMsg::Abort { id: meta.id, error: e };
@@ -570,6 +513,7 @@ fn stager_loop(
 fn engine_loop(
     manifest: Manifest,
     artifacts_on_disk: bool,
+    kernels: Vec<Arc<TileKernel>>,
     device: usize,
     chunk_rx: Receiver<ChunkMsg>,
     ret_tx: Sender<StagedChunk>,
@@ -582,7 +526,8 @@ fn engine_loop(
         modeled_kernel: f64,
     }
 
-    let mut engine = Engine::with_manifest(manifest, artifacts_on_disk)?;
+    let mut engine =
+        Engine::with_manifest(manifest, artifacts_on_disk, &kernels)?;
     let model = DeviceModel::kepler_k20();
     let mut cur: Option<InFlight> = None;
     // Launch whose remaining chunks are dropped after a failed execute.
@@ -681,41 +626,69 @@ fn engine_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, MD_W, PARTICLE_W, PARTS_PER_BUCKET,
+        PARTS_PER_PATCH,
+    };
+
+    fn gravity() -> Arc<TileKernel> {
+        Arc::new(TileKernel::gravity(0.01))
+    }
 
     #[test]
     fn payload_accessors() {
-        let p = Payload::Gravity { parts: vec![], inters: vec![], batch: 7 };
+        let p = Payload::Tile {
+            kernel: gravity(),
+            bufs: vec![vec![], vec![]],
+            batch: 7,
+        };
         assert_eq!(p.batch(), 7);
         assert_eq!(p.kernel_name(), "gravity");
         assert_eq!(p.interactions_per_block(), (16 * 128) as u64);
-        let m = Payload::MdForce { pa: vec![], pb: vec![], batch: 3 };
+        assert_eq!(p.out_slot_len(), PARTS_PER_BUCKET * 4);
+        let g = Payload::TileGather {
+            kernel: gravity(),
+            pool: Arc::new(vec![]),
+            idx: vec![],
+            bufs: vec![vec![]],
+            batch: 3,
+        };
+        assert_eq!(g.kernel_name(), "gravity_gather");
+        let m = Payload::Tile {
+            kernel: Arc::new(TileKernel::md_force([1.0, 0.04, 1.0])),
+            bufs: vec![vec![], vec![]],
+            batch: 3,
+        };
         assert_eq!(m.kernel_name(), "md_force");
-        assert_eq!(m.out_row_w(), MD_W);
-        assert_eq!(m.out_rows_per_slot(), PARTS_PER_PATCH);
         assert_eq!(m.out_slot_len(), PARTS_PER_PATCH * MD_W);
     }
 
     #[test]
-    fn validate_setup_rejects_bad_ktab() {
+    fn validate_kernels_rejects_drifted_constant() {
         let m = Manifest::synthetic(Path::new("/tmp/none"));
-        let bad = ExecutorConfig { ktab: vec![0.0; 3], ..Default::default() };
-        assert!(validate_setup(&m, &bad).is_err());
-        assert!(validate_setup(&m, &ExecutorConfig::default()).is_ok());
+        // the synthetic ewald constant is KTABLE x KTAB_W = 256 floats
+        let bad = Arc::new(TileKernel::ewald(vec![0.0; 3]));
+        assert!(m.validate_kernels(&[bad]).is_err());
+        let good = Arc::new(TileKernel::ewald(vec![0.0; 256]));
+        assert!(m.validate_kernels(&[good, gravity()]).is_ok());
     }
 
     #[test]
     fn split_launch_reuses_arena_buffers() {
         let mut ex = Executor::new(
             Path::new("/tmp/gcharm-missing-artifacts"),
-            ExecutorConfig::default(),
+            vec![gravity()],
         )
         .unwrap();
         let batch = 300; // > max gravity batch (128): 128 + 128 + 44
         let spec = |id| LaunchSpec {
             id,
-            payload: Payload::Gravity {
-                parts: vec![0.0; batch * PARTS_PER_BUCKET * 4],
-                inters: vec![0.0; batch * INTERACTIONS * 4],
+            payload: Payload::Tile {
+                kernel: gravity(),
+                bufs: vec![
+                    vec![0.0; batch * PARTS_PER_BUCKET * PARTICLE_W],
+                    vec![0.0; batch * INTERACTIONS * INTER_W],
+                ],
                 batch,
             },
             transfer_bytes: 0,

@@ -1,0 +1,269 @@
+//! Runtime kernel-family descriptors: the open half of the kernel registry.
+//!
+//! A [`TileKernel`] describes everything the *runtime* needs to execute a
+//! kernel family the coordinator never heard of at compile time: the
+//! per-request tile shapes (staging + shape validation), the trailing
+//! constant argument (shared into every launch), the occupancy resources
+//! (combiner maxSize and the modeled cost), and a per-slot native function
+//! that both the sim backend and the hybrid CPU path interpret — one f32
+//! implementation, so CPU fallback, sim-GPU, and the pipelined service are
+//! bit-compatible by construction.
+//!
+//! Apps register kernels through `coordinator::registry` (which wraps a
+//! `TileKernel` with scheduling policy); the runtime layers (staging,
+//! manifest ladders, the engine, the cost model) are all table-driven off
+//! this type and contain no per-family `match`.
+
+use std::sync::Arc;
+
+use super::device_sim::{occupancy, GpuSpec, KernelResources};
+use super::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
+use super::shapes::{
+    INTERACTIONS, INTER_W, MD_PAD_POS, MD_W, OUT_W, PARTICLE_W,
+    PARTS_PER_BUCKET, PARTS_PER_PATCH,
+};
+
+/// Native per-slot kernel function: `args` holds one slot-sized slice per
+/// registered tile argument (in registration order), `constant` the
+/// kernel's constant argument; returns the slot's output rows
+/// (`out_rows * out_width` floats). The same function serves the sim GPU
+/// backend and the hybrid CPU fallback.
+pub type SlotFn = fn(args: &[&[f32]], constant: &[f32]) -> Vec<f32>;
+
+/// Shape of one per-request input tile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileArgSpec {
+    /// Argument name, used in shape-error messages.
+    pub name: &'static str,
+    /// Rows per request slot.
+    pub rows: usize,
+    /// Floats per row.
+    pub width: usize,
+    /// Pad value for unused slots/rows (e.g. `MD_PAD_POS` parks padding
+    /// particles outside every cutoff).
+    pub pad: f32,
+}
+
+impl TileArgSpec {
+    /// Floats in one request slot of this argument.
+    pub fn slot_len(&self) -> usize {
+        self.rows * self.width
+    }
+}
+
+/// Runtime descriptor of one kernel family.
+///
+/// Built once at registration (`coordinator::registry`) and shared
+/// (`Arc`) into payloads, the staging arena, the engine, and the manifest
+/// ladder. See the module docs for the role of each field.
+#[derive(Debug)]
+pub struct TileKernel {
+    /// Family name: the AOT manifest key and the per-kind report label.
+    pub name: Arc<str>,
+    /// Per-request input tiles, in launch-argument order.
+    pub args: Vec<TileArgSpec>,
+    /// Trailing constant launch argument (empty = none). Shared into every
+    /// launch instead of cloned per chunk.
+    pub constant: Arc<Vec<f32>>,
+    /// Output rows per request slot.
+    pub out_rows: usize,
+    /// Floats per output row.
+    pub out_width: usize,
+    /// Kernel resource usage, as the CUDA compiler would report it; the
+    /// occupancy calculator derives the combiner's maxSize from this
+    /// (paper section 3.1 / 4.3).
+    pub resources: KernelResources,
+    /// Modeled particle-interactions per combined slot (cost model).
+    pub items_per_slot: u64,
+    /// Which tile argument is the reusable chare buffer (section 3.2
+    /// residency), if any. Requests carrying a `buffer` id get this arg
+    /// staged into the device pool and launched through the gather
+    /// variant when fully resident.
+    pub reuse_arg: Option<usize>,
+    /// Manifest family name of the gather variant (required iff
+    /// `reuse_arg` is set).
+    pub gather_name: Option<Arc<str>>,
+    /// Which tile argument the payload's `entry_ids` describe: residency
+    /// keys of interaction entries (tree moments / cached particles)
+    /// accounted against the device's entry cache.
+    pub entry_arg: Option<usize>,
+    /// The native per-slot implementation (sim backend + CPU fallback).
+    pub slot_fn: SlotFn,
+}
+
+impl TileKernel {
+    /// Output floats per request slot.
+    pub fn out_slot_len(&self) -> usize {
+        self.out_rows * self.out_width
+    }
+
+    /// Occupancy-derived combine target on the modeled device (paper
+    /// section 4.3: force 104, Ewald 65).
+    pub fn max_combine(&self) -> usize {
+        occupancy(&GpuSpec::kepler_k20(), &self.resources).max_size as usize
+    }
+
+    /// Synthetic variant-ladder batch sizes: powers of two up to the
+    /// first one that covers `max_combine`.
+    pub fn ladder(&self) -> Vec<usize> {
+        let max = self.max_combine().max(1);
+        let mut out = Vec::new();
+        let mut b = 1usize;
+        while b < max {
+            out.push(b);
+            b *= 2;
+        }
+        out.push(b);
+        out
+    }
+
+    /// The bucket gravity force kernel (N-Body): `parts` (P x 4) +
+    /// interaction list (I x 4), eps2 constant, reusable particle buffer
+    /// with a gather variant and entry-cache accounting of the list.
+    pub fn gravity(eps2: f32) -> TileKernel {
+        TileKernel {
+            name: Arc::from("gravity"),
+            args: vec![
+                TileArgSpec {
+                    name: "parts",
+                    rows: PARTS_PER_BUCKET,
+                    width: PARTICLE_W,
+                    pad: 0.0,
+                },
+                TileArgSpec {
+                    name: "inters",
+                    rows: INTERACTIONS,
+                    width: INTER_W,
+                    pad: 0.0,
+                },
+            ],
+            constant: Arc::new(vec![eps2]),
+            out_rows: PARTS_PER_BUCKET,
+            out_width: OUT_W,
+            resources: KernelResources::force_kernel(),
+            items_per_slot: (PARTS_PER_BUCKET * INTERACTIONS) as u64,
+            reuse_arg: Some(0),
+            gather_name: Some(Arc::from("gravity_gather")),
+            entry_arg: Some(1),
+            slot_fn: gravity_slot,
+        }
+    }
+
+    /// The Ewald periodic-correction kernel (N-Body): `parts` (P x 4)
+    /// against the k-vector table constant.
+    pub fn ewald(ktab: Vec<f32>) -> TileKernel {
+        TileKernel {
+            name: Arc::from("ewald"),
+            args: vec![TileArgSpec {
+                name: "parts",
+                rows: PARTS_PER_BUCKET,
+                width: PARTICLE_W,
+                pad: 0.0,
+            }],
+            constant: Arc::new(ktab),
+            out_rows: PARTS_PER_BUCKET,
+            out_width: OUT_W,
+            resources: KernelResources::ewald_kernel(),
+            items_per_slot: (PARTS_PER_BUCKET * super::shapes::KTABLE) as u64,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: ewald_slot,
+        }
+    }
+
+    /// The MD patch-pair LJ kernel: two patch particle sets (N x 2),
+    /// `[cutoff^2, sigma^2, epsilon]` constant, padding parked at
+    /// `MD_PAD_POS`.
+    pub fn md_force(params: [f32; 3]) -> TileKernel {
+        TileKernel {
+            name: Arc::from("md_force"),
+            args: vec![
+                TileArgSpec {
+                    name: "pa",
+                    rows: PARTS_PER_PATCH,
+                    width: MD_W,
+                    pad: MD_PAD_POS,
+                },
+                TileArgSpec {
+                    name: "pb",
+                    rows: PARTS_PER_PATCH,
+                    width: MD_W,
+                    pad: MD_PAD_POS,
+                },
+            ],
+            constant: Arc::new(params.to_vec()),
+            out_rows: PARTS_PER_PATCH,
+            out_width: MD_W,
+            resources: KernelResources::md_kernel(),
+            items_per_slot: (PARTS_PER_PATCH * PARTS_PER_PATCH) as u64,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: md_slot,
+        }
+    }
+}
+
+fn gravity_slot(args: &[&[f32]], constant: &[f32]) -> Vec<f32> {
+    cpu_gravity(args[0], args[1], constant[0])
+}
+
+fn ewald_slot(args: &[&[f32]], constant: &[f32]) -> Vec<f32> {
+    cpu_ewald(args[0], constant)
+}
+
+fn md_slot(args: &[&[f32]], constant: &[f32]) -> Vec<f32> {
+    cpu_md_interact(args[0], args[1], [constant[0], constant[1], constant[2]])
+}
+
+/// The three built-in kernel families the paper's apps use, over their
+/// physics constants. Tests and the figure benches share this set.
+pub fn builtin_kernels(
+    eps2: f32,
+    ktab: Vec<f32>,
+    md_params: [f32; 3],
+) -> Vec<Arc<TileKernel>> {
+    vec![
+        Arc::new(TileKernel::gravity(eps2)),
+        Arc::new(TileKernel::ewald(ktab)),
+        Arc::new(TileKernel::md_force(md_params)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_max_combine_matches_paper() {
+        assert_eq!(TileKernel::gravity(0.01).max_combine(), 104);
+        assert_eq!(TileKernel::ewald(vec![0.0; 4]).max_combine(), 65);
+    }
+
+    #[test]
+    fn ladder_covers_max_combine() {
+        let g = TileKernel::gravity(0.01);
+        let l = g.ladder();
+        assert_eq!(l, vec![1, 2, 4, 8, 16, 32, 64, 128]);
+        assert!(*l.last().unwrap() >= g.max_combine());
+    }
+
+    #[test]
+    fn slot_lens() {
+        let g = TileKernel::gravity(0.01);
+        assert_eq!(g.args[0].slot_len(), PARTS_PER_BUCKET * PARTICLE_W);
+        assert_eq!(g.out_slot_len(), PARTS_PER_BUCKET * OUT_W);
+        let m = TileKernel::md_force([1.0, 0.04, 1.0]);
+        assert_eq!(m.out_slot_len(), PARTS_PER_PATCH * MD_W);
+    }
+
+    #[test]
+    fn builtin_slot_fns_match_native_kernels() {
+        let g = TileKernel::gravity(0.01);
+        let parts = vec![0.0f32; PARTS_PER_BUCKET * PARTICLE_W];
+        let inters = vec![0.5f32; INTERACTIONS * INTER_W];
+        let got = (g.slot_fn)(&[&parts, &inters], &g.constant);
+        assert_eq!(got, cpu_gravity(&parts, &inters, 0.01));
+    }
+}

@@ -8,10 +8,21 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
+
+use super::kernel::TileKernel;
+
+/// Gather-variant pool-row ladder shared by the built-in synthetic set and
+/// `ensure_family` for registered reuse kernels.
+const SYNTH_POOLS: [usize; 7] =
+    [1024, 2048, 4096, 8192, 16_384, 32_768, 65_536];
+
+/// Gather-variant batch ladder (mirrors `python/compile/aot.py`).
+const SYNTH_GATHER_BATCHES: [usize; 3] = [16, 64, 128];
 
 /// Element type of one AOT argument.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,6 +87,65 @@ impl Manifest {
         }
     }
 
+    /// One-stop manifest preparation for a set of registered kernel
+    /// families: load (or synthesize), extend with synthetic ladders for
+    /// families the artifact set does not serve, and validate every
+    /// family's tile shapes against the selected variants. The bool
+    /// reports whether real artifacts back the manifest.
+    pub fn for_kernels(
+        dir: &Path,
+        kernels: &[Arc<TileKernel>],
+    ) -> Result<(Manifest, bool)> {
+        let (mut manifest, real) = Self::load_or_synthetic(dir)?;
+        for k in kernels {
+            manifest.ensure_family(k);
+        }
+        manifest.validate_kernels(kernels)?;
+        Ok((manifest, real))
+    }
+
+    /// Validate registered families against this manifest's variants
+    /// (fail fast if AOT artifacts drifted from the registered shapes).
+    pub fn validate_kernels(&self, kernels: &[Arc<TileKernel>]) -> Result<()> {
+        for k in kernels {
+            let v = self.select(&k.name, 1, 0).with_context(|| {
+                format!("no variants for kernel {}", k.name)
+            })?;
+            let want = k.args.len() + usize::from(!k.constant.is_empty());
+            anyhow::ensure!(
+                v.args.len() == want,
+                "{}: variant {} has {} args, family registered {want}",
+                k.name,
+                v.name,
+                v.args.len()
+            );
+            for (i, a) in k.args.iter().enumerate() {
+                anyhow::ensure!(
+                    v.args[i].elements() == v.batch * a.slot_len(),
+                    "{} arg {} ({}): variant shape {:?} disagrees with the \
+                     registered {}x{} tile",
+                    k.name,
+                    i,
+                    a.name,
+                    v.args[i].shape,
+                    a.rows,
+                    a.width
+                );
+            }
+            if !k.constant.is_empty() {
+                anyhow::ensure!(
+                    v.args[want - 1].elements() == k.constant.len(),
+                    "{}: variant constant arg holds {} elements, registered \
+                     constant has {}",
+                    k.name,
+                    v.args[want - 1].elements(),
+                    k.constant.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Built-in variant ladder mirroring what `python/compile/aot.py`
     /// emits, for environments without the AOT artifacts. The referenced
     /// HLO files do not exist; only the sim backend may execute these.
@@ -85,9 +155,8 @@ impl Manifest {
             PARTS_PER_BUCKET, PARTS_PER_PATCH,
         };
         const BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
-        const GATHER_BATCHES: [usize; 3] = [16, 64, 128];
-        const POOLS: [usize; 7] =
-            [1024, 2048, 4096, 8192, 16_384, 32_768, 65_536];
+        const GATHER_BATCHES: [usize; 3] = SYNTH_GATHER_BATCHES;
+        const POOLS: [usize; 7] = SYNTH_POOLS;
 
         let f32s = |shape: Vec<usize>| ArgSpec { shape, dtype: DType::F32 };
         let i32s = |shape: Vec<usize>| ArgSpec { shape, dtype: DType::I32 };
@@ -240,6 +309,93 @@ impl Manifest {
         &self.variants
     }
 
+    /// Make sure a registered kernel family is servable: if no variants
+    /// exist for `kernel.name` (AOT artifacts or the built-in synthetic
+    /// set), synthesize a power-of-two batch ladder covering the family's
+    /// occupancy-derived combine target, plus a gather ladder when the
+    /// family declares a reuse argument. Synthetic variants reference no
+    /// HLO file and are served by the sim backend.
+    pub fn ensure_family(&mut self, kernel: &TileKernel) {
+        let mut added = false;
+        if !self.by_kernel.contains_key(&*kernel.name) {
+            for b in kernel.ladder() {
+                let mut args: Vec<ArgSpec> = kernel
+                    .args
+                    .iter()
+                    .map(|a| ArgSpec {
+                        shape: vec![b, a.rows, a.width],
+                        dtype: DType::F32,
+                    })
+                    .collect();
+                if !kernel.constant.is_empty() {
+                    args.push(ArgSpec {
+                        shape: vec![kernel.constant.len()],
+                        dtype: DType::F32,
+                    });
+                }
+                let name = format!("{}_B{b}", kernel.name);
+                self.variants.push(Variant {
+                    path: PathBuf::from(format!("{name}.hlo.txt")),
+                    name,
+                    args,
+                    kernel: kernel.name.to_string(),
+                    batch: b,
+                    pool: 0,
+                });
+            }
+            added = true;
+        }
+        if let (Some(gather), Some(ra)) =
+            (&kernel.gather_name, kernel.reuse_arg)
+        {
+            if !self.by_kernel.contains_key(&**gather) {
+                let spec = kernel.args[ra];
+                for b in SYNTH_GATHER_BATCHES {
+                    for s in SYNTH_POOLS {
+                        let mut args = vec![
+                            ArgSpec {
+                                shape: vec![s, spec.width],
+                                dtype: DType::F32,
+                            },
+                            ArgSpec {
+                                shape: vec![b, spec.rows],
+                                dtype: DType::I32,
+                            },
+                        ];
+                        for (i, a) in kernel.args.iter().enumerate() {
+                            if i == ra {
+                                continue;
+                            }
+                            args.push(ArgSpec {
+                                shape: vec![b, a.rows, a.width],
+                                dtype: DType::F32,
+                            });
+                        }
+                        if !kernel.constant.is_empty() {
+                            args.push(ArgSpec {
+                                shape: vec![kernel.constant.len()],
+                                dtype: DType::F32,
+                            });
+                        }
+                        let name = format!("{gather}_B{b}_S{s}");
+                        self.variants.push(Variant {
+                            path: PathBuf::from(format!("{name}.hlo.txt")),
+                            name,
+                            args,
+                            kernel: gather.to_string(),
+                            batch: b,
+                            pool: s,
+                        });
+                    }
+                }
+                added = true;
+            }
+        }
+        if added {
+            *self = Self::index(std::mem::take(&mut self.variants));
+        }
+    }
+
     /// Smallest variant of `kernel` with batch >= `n` (and pool >= `pool`
     /// for gather kernels). Falls back to the largest available batch if
     /// `n` exceeds every ladder rung (caller then splits the launch).
@@ -354,6 +510,50 @@ mod tests {
         let (m, real) = Manifest::load_or_synthetic(dir).unwrap();
         assert!(!real);
         assert!(!m.variants().is_empty());
+    }
+
+    #[test]
+    fn ensure_family_synthesizes_ladder_once() {
+        use crate::runtime::device_sim::KernelResources;
+        use crate::runtime::kernel::{TileArgSpec, TileKernel};
+        use std::sync::Arc;
+
+        fn noop(_: &[&[f32]], _: &[f32]) -> Vec<f32> {
+            vec![0.0]
+        }
+        let k = TileKernel {
+            name: Arc::from("custom_family"),
+            args: vec![TileArgSpec { name: "t", rows: 3, width: 2, pad: 0.0 }],
+            constant: Arc::new(vec![1.0, 2.0]),
+            out_rows: 1,
+            out_width: 1,
+            resources: KernelResources {
+                threads_per_block: 128,
+                regs_per_thread: 64,
+                smem_per_block: 4096,
+            },
+            items_per_slot: 6,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: noop,
+        };
+        let mut m = Manifest::synthetic(Path::new("/tmp/none"));
+        let before = m.variants().len();
+        m.ensure_family(&k);
+        let after = m.variants().len();
+        assert_eq!(after - before, k.ladder().len());
+        let v = m.select("custom_family", 3, 0).unwrap();
+        assert_eq!(v.batch, 4);
+        assert_eq!(v.args.len(), 2, "tile arg + constant");
+        assert_eq!(v.args[0].elements(), 4 * 3 * 2);
+        assert_eq!(v.args[1].elements(), 2);
+        // idempotent: a second call adds nothing
+        m.ensure_family(&k);
+        assert_eq!(m.variants().len(), after);
+        // built-in families are already servable: no additions
+        m.ensure_family(&TileKernel::gravity(0.01));
+        assert_eq!(m.variants().len(), after);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 pub mod device_sim;
 pub mod executor;
+pub mod kernel;
 pub mod manifest;
 pub mod memory;
 pub mod native;
@@ -20,9 +21,8 @@ pub use device_sim::{
     occupancy, CoalescingClass, DeviceModel, GpuSpec, KernelResources,
     ModeledCost, Occupancy,
 };
-pub use executor::{
-    Completion, Executor, ExecutorConfig, GpuService, LaunchSpec, Payload,
-};
+pub use executor::{Completion, Executor, GpuService, LaunchSpec, Payload};
+pub use kernel::{builtin_kernels, SlotFn, TileArgSpec, TileKernel};
 pub use manifest::Manifest;
 pub use memory::{BufferId, DeviceMemory, Residency};
 pub use pjrt::{Engine, HostArg};

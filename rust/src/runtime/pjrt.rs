@@ -3,30 +3,34 @@
 //! The engine executes combined-kernel variants against one of two
 //! backends:
 //!
-//! - **Sim** (default): a native interpreter of the four kernel families
-//!   (`runtime::native`), using the same f32 arithmetic and masking rules
-//!   as the Pallas kernels. It serves the synthetic manifest when the AOT
-//!   artifacts are absent, so the full stack runs hermetically.
+//! - **Sim** (default): a table-driven native interpreter over the
+//!   registered [`TileKernel`] families: each variant is executed slot by
+//!   slot through the family's `slot_fn` (gather variants first gather the
+//!   reusable tile out of the pool argument). The same f32 arithmetic
+//!   serves the hybrid CPU fallback, so hybrid execution is bit-compatible
+//!   with sim-GPU execution, and an app-registered family executes without
+//!   any engine change.
 //! - **Pjrt** (`--features pjrt`): loads AOT HLO-text artifacts and
 //!   executes them on the CPU PJRT client (the simulated "GPU device" --
 //!   DESIGN.md section 2). Pattern follows /opt/xla-example/load_hlo:
 //!   `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
 //!   `client.compile` -> `execute`. Variants compile lazily on first
-//!   launch and are cached (compilation is the expensive step; execution
-//!   is the hot path).
+//!   launch and are cached; synthetic variants (no HLO file on disk, e.g.
+//!   an app-registered family without AOT artifacts) fall back to the sim
+//!   interpreter per launch.
 //!
 //! Backend selection: PJRT is used when the feature is compiled in, real
 //! artifacts are on disk, and `GCHARM_ENGINE` is not set to `sim`;
 //! otherwise the sim backend serves every launch.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::kernel::TileKernel;
 use super::manifest::{DType, Manifest, Variant};
-use super::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
-use super::shapes::{MD_W, OUT_W, PARTICLE_W};
 
 /// One host-side argument for a launch; must match the variant's ArgSpec.
 #[derive(Debug, Clone, Copy)]
@@ -70,26 +74,31 @@ impl HostArg<'_> {
 }
 
 enum Backend {
-    /// Native interpreter of the four kernel families.
+    /// Table-driven native interpreter over the registered families.
     Sim,
     #[cfg(feature = "pjrt")]
     Pjrt(pjrt_backend::PjrtBackend),
 }
 
-/// Variant-executing engine over a manifest (sim or PJRT backend).
+/// Variant-executing engine over a manifest and a set of registered
+/// kernel families (sim or PJRT backend).
 pub struct Engine {
     manifest: Manifest,
+    /// Family name (and gather-family name) -> runtime kernel descriptor.
+    kernels: HashMap<String, Arc<TileKernel>>,
     backend: Backend,
     /// Variant names prepared so far (PJRT: compiled executables).
     compiled: HashSet<String>,
 }
 
 impl Engine {
-    /// Create an engine over the artifacts in `dir`; falls back to the
-    /// synthetic manifest + sim backend when no artifacts are present.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let (manifest, real) = Manifest::load_or_synthetic(dir)?;
-        Engine::with_manifest(manifest, real)
+    /// Create an engine over the artifacts in `dir` serving `kernels`
+    /// (ladders synthesized and shapes validated via
+    /// `Manifest::for_kernels`); falls back to the synthetic manifest +
+    /// sim backend when no artifacts are present.
+    pub fn load(dir: &Path, kernels: &[Arc<TileKernel>]) -> Result<Engine> {
+        let (manifest, real) = Manifest::for_kernels(dir, kernels)?;
+        Engine::with_manifest(manifest, real, kernels)
     }
 
     /// Build an engine from an already-loaded manifest. `artifacts_on_disk`
@@ -97,7 +106,15 @@ impl Engine {
     pub fn with_manifest(
         manifest: Manifest,
         artifacts_on_disk: bool,
+        kernels: &[Arc<TileKernel>],
     ) -> Result<Engine> {
+        let mut map = HashMap::new();
+        for k in kernels {
+            map.insert(k.name.to_string(), k.clone());
+            if let Some(g) = &k.gather_name {
+                map.insert(g.to_string(), k.clone());
+            }
+        }
         let force_sim = std::env::var("GCHARM_ENGINE")
             .map(|v| v == "sim")
             .unwrap_or(false);
@@ -107,6 +124,7 @@ impl Engine {
                 Ok(b) => {
                     return Ok(Engine {
                         manifest,
+                        kernels: map,
                         backend: Backend::Pjrt(b),
                         compiled: HashSet::new(),
                     })
@@ -122,6 +140,7 @@ impl Engine {
         let _ = (artifacts_on_disk, force_sim);
         Ok(Engine {
             manifest,
+            kernels: map,
             backend: Backend::Sim,
             compiled: HashSet::new(),
         })
@@ -144,25 +163,24 @@ impl Engine {
         if self.compiled.contains(name) {
             return Ok(());
         }
+        let variant = self
+            .manifest
+            .variants()
+            .iter()
+            .find(|v| v.name == name)
+            .with_context(|| format!("unknown variant {name}"))?;
         match &mut self.backend {
-            Backend::Sim => {
-                self.manifest
-                    .variants()
-                    .iter()
-                    .find(|v| v.name == name)
-                    .with_context(|| format!("unknown variant {name}"))?;
-            }
+            Backend::Sim => {}
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(b) => {
-                let variant = self
-                    .manifest
-                    .variants()
-                    .iter()
-                    .find(|v| v.name == name)
-                    .with_context(|| format!("unknown variant {name}"))?;
-                b.compile(variant)?;
+                // Synthetic variants (no HLO file) are served by the sim
+                // interpreter instead of compiled.
+                if variant.path.exists() {
+                    b.compile(variant)?;
+                }
             }
         }
+        let _ = variant;
         self.compiled.insert(name.to_string());
         Ok(())
     }
@@ -187,9 +205,15 @@ impl Engine {
             .with_context(|| format!("unknown variant {name}"))?;
         validate(variant, args)?;
         match &mut self.backend {
-            Backend::Sim => sim_execute(variant, args),
+            Backend::Sim => sim_execute(&self.kernels, variant, args),
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(b) => b.execute(variant, args),
+            Backend::Pjrt(b) => {
+                if variant.path.exists() {
+                    b.execute(variant, args)
+                } else {
+                    sim_execute(&self.kernels, variant, args)
+                }
+            }
         }
     }
 }
@@ -220,92 +244,108 @@ fn validate(variant: &Variant, args: &[HostArg]) -> Result<()> {
     Ok(())
 }
 
-/// Interpret one combined launch natively (the sim backend).
-fn sim_execute(variant: &Variant, args: &[HostArg]) -> Result<Vec<f32>> {
-    let b = variant.batch;
-    match variant.kernel.as_str() {
-        "gravity" => {
-            let parts = args[0].as_f32();
-            let inters = args[1].as_f32();
-            let eps2 = args[2].as_f32()[0];
-            let p_slot = parts.len() / b;
-            let i_slot = inters.len() / b;
-            let mut out = Vec::with_capacity(b * (p_slot / PARTICLE_W) * OUT_W);
-            for s in 0..b {
-                out.extend(cpu_gravity(
-                    &parts[s * p_slot..(s + 1) * p_slot],
-                    &inters[s * i_slot..(s + 1) * i_slot],
-                    eps2,
-                ));
-            }
-            Ok(out)
-        }
-        "gravity_gather" => {
-            let pool = args[0].as_f32();
-            let idx = args[1].as_i32();
-            let inters = args[2].as_f32();
-            let eps2 = args[3].as_f32()[0];
-            let rows = pool.len() / PARTICLE_W;
-            let p_slot = idx.len() / b; // particles per slot
-            let i_slot = inters.len() / b;
-            let mut parts = vec![0.0f32; p_slot * PARTICLE_W];
-            let mut out =
-                Vec::with_capacity(b * p_slot * OUT_W);
-            for s in 0..b {
-                for (j, &row) in idx[s * p_slot..(s + 1) * p_slot]
-                    .iter()
-                    .enumerate()
-                {
-                    let row = row as usize;
-                    anyhow::ensure!(
-                        row < rows,
-                        "{}: gather index {row} out of pool ({rows} rows)",
-                        variant.name
-                    );
-                    parts[j * PARTICLE_W..(j + 1) * PARTICLE_W]
-                        .copy_from_slice(
-                            &pool[row * PARTICLE_W..(row + 1) * PARTICLE_W],
-                        );
-                }
-                out.extend(cpu_gravity(
-                    &parts,
-                    &inters[s * i_slot..(s + 1) * i_slot],
-                    eps2,
-                ));
-            }
-            Ok(out)
-        }
-        "ewald" => {
-            let parts = args[0].as_f32();
-            let ktab = args[1].as_f32();
-            let p_slot = parts.len() / b;
-            let mut out = Vec::with_capacity(b * (p_slot / PARTICLE_W) * OUT_W);
-            for s in 0..b {
-                out.extend(cpu_ewald(
-                    &parts[s * p_slot..(s + 1) * p_slot],
-                    ktab,
-                ));
-            }
-            Ok(out)
-        }
-        "md_force" => {
-            let pa = args[0].as_f32();
-            let pb = args[1].as_f32();
-            let pr = args[2].as_f32();
-            let params = [pr[0], pr[1], pr[2]];
-            let slot = pa.len() / b;
-            let mut out = Vec::with_capacity(b * (slot / MD_W) * MD_W);
-            for s in 0..b {
-                out.extend(cpu_md_interact(
-                    &pa[s * slot..(s + 1) * slot],
-                    &pb[s * slot..(s + 1) * slot],
-                    params,
-                ));
-            }
-            Ok(out)
-        }
-        other => bail!("sim backend: unknown kernel family {other}"),
+/// Interpret one combined launch natively, dispatching through the
+/// registered kernel table (the sim backend).
+fn sim_execute(
+    kernels: &HashMap<String, Arc<TileKernel>>,
+    variant: &Variant,
+    args: &[HostArg],
+) -> Result<Vec<f32>> {
+    let Some(tk) = kernels.get(variant.kernel.as_str()) else {
+        bail!("sim backend: unregistered kernel family {}", variant.kernel);
+    };
+    let is_gather = tk
+        .gather_name
+        .as_deref()
+        .is_some_and(|g| g == variant.kernel.as_str());
+    if is_gather {
+        sim_gather(tk, variant, args)
+    } else {
+        sim_tile(tk, variant, args)
     }
+}
+
+/// Direct tile variant: one `slot_fn` call per combined slot.
+fn sim_tile(
+    tk: &TileKernel,
+    variant: &Variant,
+    args: &[HostArg],
+) -> Result<Vec<f32>> {
+    let b = variant.batch;
+    let has_const = !tk.constant.is_empty();
+    anyhow::ensure!(
+        args.len() == tk.args.len() + has_const as usize,
+        "{}: {} args for a {}-tile family",
+        variant.name,
+        args.len(),
+        tk.args.len()
+    );
+    let cbuf: &[f32] =
+        if has_const { args[tk.args.len()].as_f32() } else { &[] };
+    let mut out = Vec::with_capacity(b * tk.out_slot_len());
+    for s in 0..b {
+        let slices: Vec<&[f32]> = tk
+            .args
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let slot = spec.slot_len();
+                &args[i].as_f32()[s * slot..(s + 1) * slot]
+            })
+            .collect();
+        out.extend((tk.slot_fn)(&slices, cbuf));
+    }
+    Ok(out)
+}
+
+/// Gather variant: args are `[pool, idx, <non-reuse tiles...>, constant]`;
+/// the reusable tile is gathered out of the pool per slot, then `slot_fn`
+/// runs with the tiles reassembled in registration order.
+fn sim_gather(
+    tk: &TileKernel,
+    variant: &Variant,
+    args: &[HostArg],
+) -> Result<Vec<f32>> {
+    let b = variant.batch;
+    let ra = tk
+        .reuse_arg
+        .context("gather variant for a family without a reuse arg")?;
+    let spec = tk.args[ra];
+    let pool = args[0].as_f32();
+    let idx = args[1].as_i32();
+    let pool_rows = pool.len() / spec.width;
+    let has_const = !tk.constant.is_empty();
+    let cbuf: &[f32] =
+        if has_const { args[args.len() - 1].as_f32() } else { &[] };
+    let mut gathered = vec![0.0f32; spec.slot_len()];
+    let mut out = Vec::with_capacity(b * tk.out_slot_len());
+    for s in 0..b {
+        for (j, &row) in
+            idx[s * spec.rows..(s + 1) * spec.rows].iter().enumerate()
+        {
+            let row = row as usize;
+            anyhow::ensure!(
+                row < pool_rows,
+                "{}: gather index {row} out of pool ({pool_rows} rows)",
+                variant.name
+            );
+            gathered[j * spec.width..(j + 1) * spec.width]
+                .copy_from_slice(&pool[row * spec.width..(row + 1) * spec.width]);
+        }
+        let mut slices: Vec<&[f32]> = Vec::with_capacity(tk.args.len());
+        let mut passed = 2usize; // next non-reuse tile among `args`
+        for (i, a) in tk.args.iter().enumerate() {
+            if i == ra {
+                slices.push(&gathered);
+            } else {
+                let slot = a.slot_len();
+                slices.push(&args[passed].as_f32()[s * slot..(s + 1) * slot]);
+                passed += 1;
+            }
+        }
+        out.extend((tk.slot_fn)(&slices, cbuf));
+    }
+    Ok(out)
 }
 
 #[cfg(feature = "pjrt")]
@@ -414,6 +454,7 @@ impl std::fmt::Debug for Engine {
         f.debug_struct("Engine")
             .field("platform", &self.platform())
             .field("variants", &self.manifest.variants().len())
+            .field("families", &self.kernels.len())
             .field("compiled", &self.compiled.len())
             .finish()
     }
@@ -422,11 +463,18 @@ impl std::fmt::Debug for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::shapes::{INTERACTIONS, INTER_W, PARTS_PER_BUCKET};
+    use crate::runtime::kernel::builtin_kernels;
+    use crate::runtime::native::cpu_gravity;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, KTABLE, KTAB_W, OUT_W, PARTICLE_W,
+        PARTS_PER_BUCKET,
+    };
 
     fn sim_engine() -> Engine {
+        let kernels =
+            builtin_kernels(0.01, vec![0.0; KTABLE * KTAB_W], [1.0, 0.04, 1.0]);
         let m = Manifest::synthetic(Path::new("/tmp/none"));
-        Engine::with_manifest(m, false).unwrap()
+        Engine::with_manifest(m, false, &kernels).unwrap()
     }
 
     #[test]
@@ -482,6 +530,42 @@ mod tests {
             ],
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn sim_executes_registered_custom_family() {
+        use crate::runtime::device_sim::KernelResources;
+        use crate::runtime::kernel::{TileArgSpec, TileKernel};
+
+        fn double_sum(args: &[&[f32]], c: &[f32]) -> Vec<f32> {
+            vec![args[0].iter().sum::<f32>() * c[0]]
+        }
+        let k = Arc::new(TileKernel {
+            name: Arc::from("double_sum"),
+            args: vec![TileArgSpec { name: "t", rows: 2, width: 2, pad: 0.0 }],
+            constant: Arc::new(vec![2.0]),
+            out_rows: 1,
+            out_width: 1,
+            resources: KernelResources {
+                threads_per_block: 64,
+                regs_per_thread: 32,
+                smem_per_block: 1024,
+            },
+            items_per_slot: 4,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: double_sum,
+        });
+        let mut e =
+            Engine::load(Path::new("/tmp/gcharm-missing-artifacts"), &[k])
+                .unwrap();
+        // batch-2 variant: slots [1,1,1,1] and [0.5, 0.5, 0, 0]
+        let buf = [1.0f32, 1.0, 1.0, 1.0, 0.5, 0.5, 0.0, 0.0];
+        let out = e
+            .execute("double_sum_B2", &[HostArg::F32(&buf), HostArg::F32(&[2.0])])
+            .unwrap();
+        assert_eq!(out, vec![8.0, 2.0]);
     }
 
     #[test]

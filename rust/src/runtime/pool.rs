@@ -9,15 +9,19 @@
 //! the coordinator, which decides routing; the pool is purely the
 //! execution fabric.
 //!
-//! `devices = 1` is exactly the old single-service path: one service, the
-//! same threads, the same completion stream.
+//! Every service serves the same registered kernel families, so any
+//! device can execute any registered kind (the steal rebalancer relies on
+//! this). `devices = 1` is exactly the old single-service path: one
+//! service, the same threads, the same completion stream.
 
 use std::path::Path;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::executor::{Completion, ExecutorConfig, GpuService, LaunchSpec};
+use super::executor::{Completion, GpuService, LaunchSpec};
+use super::kernel::TileKernel;
 
 /// A pool of N simulated GPU devices, each a full `GpuService`.
 pub struct DevicePool {
@@ -26,19 +30,20 @@ pub struct DevicePool {
 
 impl DevicePool {
     /// Spawn `devices` (clamped to >= 1) services over the same artifact
-    /// set. Completions from every device arrive on `done`, tagged with
-    /// their device index; per-device ordering follows submission order,
-    /// cross-device ordering is whatever the engines produce.
+    /// set, each serving the registered `kernels`. Completions from every
+    /// device arrive on `done`, tagged with their device index; per-device
+    /// ordering follows submission order, cross-device ordering is
+    /// whatever the engines produce.
     pub fn spawn(
         artifacts: &Path,
-        config: ExecutorConfig,
+        kernels: Vec<Arc<TileKernel>>,
         devices: usize,
         done: Sender<Result<Completion>>,
     ) -> Result<DevicePool> {
         let devices = devices.max(1);
         let services = (0..devices)
             .map(|d| {
-                GpuService::spawn_on(artifacts, config.clone(), d, done.clone())
+                GpuService::spawn_on(artifacts, kernels.clone(), d, done.clone())
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(DevicePool { services })
@@ -72,12 +77,19 @@ mod tests {
     use std::sync::mpsc::channel;
     use std::time::Duration;
 
+    fn gravity() -> Vec<Arc<TileKernel>> {
+        vec![Arc::new(TileKernel::gravity(0.01))]
+    }
+
     fn gravity_spec(id: u64, batch: usize, fill: f32) -> LaunchSpec {
         LaunchSpec {
             id,
-            payload: Payload::Gravity {
-                parts: vec![fill; batch * PARTS_PER_BUCKET * PARTICLE_W],
-                inters: vec![fill; batch * INTERACTIONS * INTER_W],
+            payload: Payload::Tile {
+                kernel: Arc::new(TileKernel::gravity(0.01)),
+                bufs: vec![
+                    vec![fill; batch * PARTS_PER_BUCKET * PARTICLE_W],
+                    vec![fill; batch * INTERACTIONS * INTER_W],
+                ],
                 batch,
             },
             transfer_bytes: 0,
@@ -90,7 +102,7 @@ mod tests {
         let (tx, rx) = channel();
         let pool = DevicePool::spawn(
             Path::new("/tmp/gcharm-missing-artifacts"),
-            ExecutorConfig::default(),
+            gravity(),
             3,
             tx,
         )
@@ -116,7 +128,7 @@ mod tests {
         let (tx, rx) = channel();
         let pool = DevicePool::spawn(
             Path::new("/tmp/gcharm-missing-artifacts"),
-            ExecutorConfig::default(),
+            gravity(),
             2,
             tx,
         )
@@ -141,7 +153,7 @@ mod tests {
         let (tx, _rx) = channel();
         let pool = DevicePool::spawn(
             Path::new("/tmp/gcharm-missing-artifacts"),
-            ExecutorConfig::default(),
+            gravity(),
             2,
             tx,
         )
@@ -154,7 +166,7 @@ mod tests {
         let (tx, _rx) = channel();
         let pool = DevicePool::spawn(
             Path::new("/tmp/gcharm-missing-artifacts"),
-            ExecutorConfig::default(),
+            gravity(),
             0,
             tx,
         )

@@ -2,10 +2,11 @@
 //! the rust runtime.
 //!
 //! These constants mirror `python/compile/kernels/*.py`
-//! (PARTS_PER_BUCKET / INTERACTIONS / KTABLE / PARTS_PER_PATCH) and are
-//! validated against `artifacts/manifest.json` at engine startup
-//! (`Executor::new`), so a drifting Python constant fails fast instead of
-//! producing shape errors mid-run.
+//! (PARTS_PER_BUCKET / INTERACTIONS / KTABLE / PARTS_PER_PATCH). The
+//! built-in kernel descriptors (`runtime::kernel`) are shaped from them,
+//! and every registered family is validated against
+//! `artifacts/manifest.json` at engine startup, so a drifting Python
+//! constant fails fast instead of producing shape errors mid-run.
 
 /// Particles per bucket (P). Matches the paper's 16-row CUDA block.
 pub const PARTS_PER_BUCKET: usize = 16;

@@ -1,22 +1,26 @@
 //! Zero-allocation staging arena for padded launch arguments.
 //!
 //! The launch hot path used to re-allocate and zero-fill every padded
-//! argument buffer per chunk, clone the constant args (`eps2`, `ktab`,
-//! `md_params`) per launch, and redo variant selection (`manifest.select`
-//! plus a `String` clone of the variant name) for every chunk of a split
-//! launch. This module removes all three costs:
+//! argument buffer per chunk, clone the constant args per launch, and redo
+//! variant selection (`manifest.select` plus a `String` clone of the
+//! variant name) for every chunk of a split launch. This module removes
+//! all three costs:
 //!
 //! - **Buffer pool**: padded argument buffers are pooled per
 //!   `(variant, arg-slot)` and checked out per chunk. A checked-out buffer
 //!   is overwritten only on its live slots; the pad tail is already inert
 //!   from allocation time, so only the *dirty* tail a smaller batch leaves
 //!   behind is re-padded (`live` slot watermark per buffer).
-//! - **Constant args**: built once from `ExecutorConfig` and shared
-//!   (`Arc`) into every launch instead of cloned.
+//! - **Constant args**: owned by each registered [`TileKernel`] (built
+//!   once at registration) and shared (`Arc`) into every launch instead of
+//!   cloned.
 //! - **Variant memo**: `(kernel, n, pool)` -> selected variant name/batch,
 //!   so repeated chunk sizes of split launches skip `manifest.select` and
 //!   the name clone entirely.
 //!
+//! Staging is fully table-driven off the payload's `TileKernel`: tile
+//! shapes and pad values come from the registered arg specs, so an
+//! app-registered family stages through the same code as the built-ins.
 //! Both the synchronous `Executor` and the pipelined `GpuService` stage
 //! through this arena, which is what makes their outputs bitwise
 //! identical: the padded bytes handed to the engine are produced by the
@@ -27,13 +31,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::executor::{ExecutorConfig, Payload};
+use super::executor::Payload;
 use super::manifest::Manifest;
 use super::pjrt::HostArg;
-use super::shapes::{
-    INTERACTIONS, INTER_W, MD_PAD_POS, MD_W, PARTICLE_W, PARTS_PER_BUCKET,
-    PARTS_PER_PATCH,
-};
 
 /// Copy `n_slots` slots of width `slot_len` from `src[start_slot..]` to the
 /// head of `dst`.
@@ -175,28 +175,17 @@ pub struct ArenaStats {
     pub variant_hits: u64,
 }
 
-/// Reusable staging state: buffer pools, constant args, variant memo.
-#[derive(Debug)]
+/// Reusable staging state: buffer pools and the variant memo.
+#[derive(Debug, Default)]
 pub struct StagingArena {
     pools: HashMap<BufKey, Vec<ArenaBuf>>,
-    variants: HashMap<(&'static str, usize, usize), CachedVariant>,
-    /// Constant launch args, built once per run (not per launch).
-    eps2: Arc<Vec<f32>>,
-    ktab: Arc<Vec<f32>>,
-    md_params: Arc<Vec<f32>>,
+    variants: HashMap<(Arc<str>, usize, usize), CachedVariant>,
     stats: ArenaStats,
 }
 
 impl StagingArena {
-    pub fn new(config: &ExecutorConfig) -> StagingArena {
-        StagingArena {
-            pools: HashMap::new(),
-            variants: HashMap::new(),
-            eps2: Arc::new(vec![config.eps2]),
-            ktab: Arc::new(config.ktab.clone()),
-            md_params: Arc::new(config.md_params.to_vec()),
-            stats: ArenaStats::default(),
-        }
+    pub fn new() -> StagingArena {
+        StagingArena::default()
     }
 
     pub fn stats(&self) -> ArenaStats {
@@ -207,11 +196,11 @@ impl StagingArena {
     fn variant(
         &mut self,
         manifest: &Manifest,
-        kernel: &'static str,
+        kernel: &Arc<str>,
         n: usize,
         pool: usize,
     ) -> Result<CachedVariant> {
-        if let Some(v) = self.variants.get(&(kernel, n, pool)) {
+        if let Some(v) = self.variants.get(&(kernel.clone(), n, pool)) {
             self.stats.variant_hits += 1;
             return Ok(v.clone());
         }
@@ -225,7 +214,7 @@ impl StagingArena {
             pool: v.pool,
         };
         self.variants
-            .insert((kernel, n, pool), cached.clone());
+            .insert((kernel.clone(), n, pool), cached.clone());
         Ok(cached)
     }
 
@@ -272,7 +261,7 @@ impl StagingArena {
     }
 
     /// Stage payload slots `[start, start + n)` into padded buffers for
-    /// the selected variant.
+    /// the selected variant, table-driven off the payload's `TileKernel`.
     ///
     /// `pool_cache` is a per-launch memo of the padded gather pool: the
     /// chare-table mirror is pool-wide and identical across the chunks of
@@ -288,30 +277,34 @@ impl StagingArena {
         pool_cache: &mut Option<(usize, Arc<Vec<f32>>)>,
     ) -> Result<StagedChunk> {
         match payload {
-            Payload::Gravity { parts, inters, .. } => {
-                let v = self.variant(manifest, "gravity", n, 0)?;
-                let ps = PARTS_PER_BUCKET * PARTICLE_W;
-                let is = INTERACTIONS * INTER_W;
-                let mut p =
-                    self.checkout(&v.name, 0, v.batch, ps, n, 0.0f32);
-                copy_slots(p.as_f32_mut(), parts, start, n, ps);
-                let mut i =
-                    self.checkout(&v.name, 1, v.batch, is, n, 0.0f32);
-                copy_slots(i.as_f32_mut(), inters, start, n, is);
-                Ok(StagedChunk {
-                    name: v.name,
-                    n,
-                    args: vec![
-                        ArenaArg::Owned(p),
-                        ArenaArg::Owned(i),
-                        ArenaArg::Shared(self.eps2.clone()),
-                    ],
-                })
+            Payload::Tile { kernel, bufs, .. } => {
+                let v = self.variant(manifest, &kernel.name, n, 0)?;
+                let mut args = Vec::with_capacity(kernel.args.len() + 1);
+                for (i, (spec, src)) in
+                    kernel.args.iter().zip(bufs).enumerate()
+                {
+                    let slot = spec.slot_len();
+                    let mut b =
+                        self.checkout(&v.name, i, v.batch, slot, n, spec.pad);
+                    copy_slots(b.as_f32_mut(), src, start, n, slot);
+                    args.push(ArenaArg::Owned(b));
+                }
+                if !kernel.constant.is_empty() {
+                    args.push(ArenaArg::Shared(kernel.constant.clone()));
+                }
+                Ok(StagedChunk { name: v.name, n, args })
             }
-            Payload::GravityGather { pool, idx, inters, .. } => {
-                let rows = pool.len() / PARTICLE_W;
-                let v =
-                    self.variant(manifest, "gravity_gather", n, rows)?;
+            Payload::TileGather { kernel, pool, idx, bufs, .. } => {
+                let gather = kernel
+                    .gather_name
+                    .as_ref()
+                    .context("gather payload for a family without one")?;
+                let ra = kernel
+                    .reuse_arg
+                    .context("gather payload without a reuse arg")?;
+                let spec = kernel.args[ra];
+                let rows = pool.len() / spec.width;
+                let v = self.variant(manifest, gather, n, rows)?;
                 anyhow::ensure!(
                     v.pool >= rows,
                     "pool of {rows} rows exceeds largest gather variant ({})",
@@ -327,7 +320,7 @@ impl StagingArena {
                             ArenaArg::Shared(padded.clone())
                         }
                         _ => {
-                            let mut pl = vec![0.0f32; v.pool * PARTICLE_W];
+                            let mut pl = vec![0.0f32; v.pool * spec.width];
                             pl[..pool.len()].copy_from_slice(pool);
                             let padded = Arc::new(pl);
                             *pool_cache = Some((v.pool, padded.clone()));
@@ -335,63 +328,33 @@ impl StagingArena {
                         }
                     }
                 };
-                let mut ix = self.checkout(
-                    &v.name,
-                    1,
-                    v.batch,
-                    PARTS_PER_BUCKET,
-                    n,
-                    0i32,
-                );
-                copy_slots(ix.as_i32_mut(), idx, start, n, PARTS_PER_BUCKET);
-                let is = INTERACTIONS * INTER_W;
-                let mut it =
-                    self.checkout(&v.name, 2, v.batch, is, n, 0.0f32);
-                copy_slots(it.as_f32_mut(), inters, start, n, is);
-                Ok(StagedChunk {
-                    name: v.name,
-                    n,
-                    args: vec![
-                        pool_arg,
-                        ArenaArg::Owned(ix),
-                        ArenaArg::Owned(it),
-                        ArenaArg::Shared(self.eps2.clone()),
-                    ],
-                })
-            }
-            Payload::Ewald { parts, .. } => {
-                let v = self.variant(manifest, "ewald", n, 0)?;
-                let ps = PARTS_PER_BUCKET * PARTICLE_W;
-                let mut p =
-                    self.checkout(&v.name, 0, v.batch, ps, n, 0.0f32);
-                copy_slots(p.as_f32_mut(), parts, start, n, ps);
-                Ok(StagedChunk {
-                    name: v.name,
-                    n,
-                    args: vec![
-                        ArenaArg::Owned(p),
-                        ArenaArg::Shared(self.ktab.clone()),
-                    ],
-                })
-            }
-            Payload::MdForce { pa, pb, .. } => {
-                let v = self.variant(manifest, "md_force", n, 0)?;
-                let slot = PARTS_PER_PATCH * MD_W;
-                let mut a = self
-                    .checkout(&v.name, 0, v.batch, slot, n, MD_PAD_POS);
-                copy_slots(a.as_f32_mut(), pa, start, n, slot);
-                let mut b = self
-                    .checkout(&v.name, 1, v.batch, slot, n, MD_PAD_POS);
-                copy_slots(b.as_f32_mut(), pb, start, n, slot);
-                Ok(StagedChunk {
-                    name: v.name,
-                    n,
-                    args: vec![
-                        ArenaArg::Owned(a),
-                        ArenaArg::Owned(b),
-                        ArenaArg::Shared(self.md_params.clone()),
-                    ],
-                })
+                let mut args = Vec::with_capacity(kernel.args.len() + 2);
+                args.push(pool_arg);
+                let mut ix =
+                    self.checkout(&v.name, 1, v.batch, spec.rows, n, 0i32);
+                copy_slots(ix.as_i32_mut(), idx, start, n, spec.rows);
+                args.push(ArenaArg::Owned(ix));
+                // remaining tiles keep their registration order; `bufs`
+                // holds them in that order (reuse arg omitted)
+                let mut slot_arg = 2usize;
+                let mut src_it = bufs.iter();
+                for (i, a) in kernel.args.iter().enumerate() {
+                    if i == ra {
+                        continue;
+                    }
+                    let src =
+                        src_it.next().context("gather payload missing a tile")?;
+                    let slot = a.slot_len();
+                    let mut b = self
+                        .checkout(&v.name, slot_arg, v.batch, slot, n, a.pad);
+                    copy_slots(b.as_f32_mut(), src, start, n, slot);
+                    args.push(ArenaArg::Owned(b));
+                    slot_arg += 1;
+                }
+                if !kernel.constant.is_empty() {
+                    args.push(ArenaArg::Shared(kernel.constant.clone()));
+                }
+                Ok(StagedChunk { name: v.name, n, args })
             }
         }
     }
@@ -400,17 +363,24 @@ impl StagingArena {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::kernel::TileKernel;
+    use crate::runtime::shapes::{
+        INTERACTIONS, INTER_W, MD_PAD_POS, MD_W, PARTICLE_W, PARTS_PER_BUCKET,
+        PARTS_PER_PATCH,
+    };
     use std::path::Path;
 
     fn arena() -> (StagingArena, Manifest) {
-        let cfg = ExecutorConfig::default();
-        (StagingArena::new(&cfg), Manifest::synthetic(Path::new("/tmp/x")))
+        (StagingArena::new(), Manifest::synthetic(Path::new("/tmp/x")))
     }
 
     fn gravity_payload(batch: usize, fill: f32) -> Payload {
-        Payload::Gravity {
-            parts: vec![fill; batch * PARTS_PER_BUCKET * PARTICLE_W],
-            inters: vec![fill; batch * INTERACTIONS * INTER_W],
+        Payload::Tile {
+            kernel: Arc::new(TileKernel::gravity(0.01)),
+            bufs: vec![
+                vec![fill; batch * PARTS_PER_BUCKET * PARTICLE_W],
+                vec![fill; batch * INTERACTIONS * INTER_W],
+            ],
             batch,
         }
     }
@@ -491,12 +461,15 @@ mod tests {
     }
 
     #[test]
-    fn md_pad_uses_parked_position() {
+    fn pad_uses_registered_pad_value() {
         let (mut a, m) = arena();
         // batch 3 selects the B4 variant: slot 3 is a pad slot
-        let p = Payload::MdForce {
-            pa: vec![0.25; 3 * PARTS_PER_PATCH * MD_W],
-            pb: vec![0.75; 3 * PARTS_PER_PATCH * MD_W],
+        let p = Payload::Tile {
+            kernel: Arc::new(TileKernel::md_force([1.0, 0.04, 1.0])),
+            bufs: vec![
+                vec![0.25; 3 * PARTS_PER_PATCH * MD_W],
+                vec![0.75; 3 * PARTS_PER_PATCH * MD_W],
+            ],
             batch: 3,
         };
         let c = a.stage_chunk(&m, &p, 0, 3, &mut None).unwrap();
@@ -512,6 +485,11 @@ mod tests {
             }
             _ => panic!("f32 arg expected"),
         }
+        // the constant arg rides along shared
+        match c.args[2].as_host_arg() {
+            HostArg::F32(buf) => assert_eq!(buf, &[1.0, 0.04, 1.0]),
+            _ => panic!("f32 constant expected"),
+        }
     }
 
     #[test]
@@ -520,10 +498,11 @@ mod tests {
         let rows = 512; // smaller than every ladder pool: forces padding
         let pool = Arc::new(vec![1.5f32; rows * PARTICLE_W]);
         let batch = 4;
-        let p = Payload::GravityGather {
+        let p = Payload::TileGather {
+            kernel: Arc::new(TileKernel::gravity(0.01)),
             pool: pool.clone(),
             idx: vec![0; batch * PARTS_PER_BUCKET],
-            inters: vec![0.0; batch * INTERACTIONS * INTER_W],
+            bufs: vec![vec![0.0; batch * INTERACTIONS * INTER_W]],
             batch,
         };
         let mut cache = None;

@@ -3,6 +3,7 @@
 
 use gcharm::apps::md::{self, MdConfig};
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
+use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::coordinator::{
     CombinePolicy, Config, DataPolicy, RoutePolicy, SplitPolicy,
 };
@@ -200,7 +201,7 @@ fn tiny_md(split: SplitPolicy, hybrid: bool) -> MdConfig {
     cfg.runtime = Config {
         pes: 2,
         split,
-        hybrid_md: hybrid,
+        hybrid,
         ..Config::default()
     };
     cfg
@@ -228,6 +229,59 @@ fn md_gpu_only_mode() {
     let r = md::run(&tiny_md(SplitPolicy::AdaptiveItems, false)).unwrap();
     assert_eq!(r.report.cpu_requests, 0);
     assert!(r.report.gpu_requests > 0);
+}
+
+fn tiny_spmv() -> SpmvConfig {
+    let mut cfg = SpmvConfig::new(300);
+    cfg.iters = 4;
+    cfg.max_row_nnz = 300;
+    cfg.runtime = Config { pes: 2, ..Config::default() };
+    cfg
+}
+
+#[test]
+fn spmv_runs_through_the_registry_api_and_converges() {
+    // The third workload registers its own kernel family through the
+    // public API (no coordinator/runtime edits) and must behave like the
+    // plain-loop oracle.
+    let cfg = tiny_spmv();
+    let r = spmv::run(&cfg).unwrap();
+    let want = spmv::reference_residuals(&cfg);
+    assert_eq!(r.residuals.len(), want.len());
+    for (i, (got, want)) in r.residuals.iter().zip(&want).enumerate() {
+        let scale = want.abs().max(1e-9);
+        assert!(
+            (got - want).abs() / scale < 1e-2,
+            "sweep {i}: residual {got} vs reference {want}"
+        );
+    }
+    assert!(
+        r.residuals.last().unwrap() < &r.residuals[0],
+        "Jacobi must converge"
+    );
+    // the family shows up in the per-kind report under its own name
+    let k = r.report.kind("spmv_row").expect("spmv kind stats");
+    assert!(k.gpu_requests + k.cpu_requests > 0);
+    // hybrid eligibility: with the default config both sides did work
+    assert!(r.report.cpu_requests > 0, "spmv cpu fallback never used");
+    assert!(r.report.gpu_requests > 0, "spmv gpu side never used");
+}
+
+#[test]
+fn spmv_sharded_pool_matches_single_device() {
+    let single = tiny_spmv();
+    let mut sharded = tiny_spmv();
+    sharded.runtime.devices = 2;
+    let a = spmv::run(&single).unwrap();
+    let b = spmv::run(&sharded).unwrap();
+    for (i, (x, y)) in a.residuals.iter().zip(&b.residuals).enumerate() {
+        let scale = x.abs().max(1e-9);
+        assert!(
+            (x - y).abs() / scale < 1e-2,
+            "sweep {i}: sharded spmv residual drift: {x} vs {y}"
+        );
+    }
+    assert_eq!(b.report.device_stats.len(), 2);
 }
 
 #[test]

@@ -1,28 +1,40 @@
-//! Pipelined GpuService vs synchronous Executor: bitwise equivalence.
+//! Pipelined GpuService vs synchronous Executor vs the seed native path:
+//! bitwise equivalence.
 //!
 //! The pipelined service stages launches on a dedicated thread through the
 //! staging arena while the engine executes; the synchronous executor
 //! pipelines only within a split launch. Both must produce *bitwise
-//! identical* `Completion::out` for every payload kind -- including
-//! launches that split across `max_batch` -- because padding, chunking,
-//! and kernel arithmetic are shared code.
+//! identical* `Completion::out` for every registered payload kind --
+//! including launches that split across `max_batch` -- because padding,
+//! chunking, and kernel arithmetic are shared code.
+//!
+//! `registry_runtime_matches_seed_native_reference` additionally proves
+//! the registry migration harmless: for every payload kind the
+//! registry-driven runtime (devices 1 and 2) reproduces, bit for bit, the
+//! outputs of the pre-redesign seed path — per-slot native kernels over
+//! the same buffers, which is exactly what the seed sim backend computed.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
+use gcharm::runtime::kernel::TileKernel;
+use gcharm::runtime::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
 use gcharm::runtime::shapes::{
     INTERACTIONS, INTER_W, KTAB_W, KTABLE, MD_PAD_POS, MD_W, PARTICLE_W,
     PARTS_PER_BUCKET, PARTS_PER_PATCH,
 };
 use gcharm::runtime::{
     default_artifacts_dir, CoalescingClass, Completion, DevicePool, Executor,
-    ExecutorConfig, GpuService, LaunchSpec, Payload,
+    GpuService, LaunchSpec, Payload,
 };
 use gcharm::util::Rng;
 
-fn config() -> ExecutorConfig {
-    let mut config = ExecutorConfig { eps2: 1e-2, ..Default::default() };
+const EPS2: f32 = 1e-2;
+const MD_PARAMS: [f32; 3] = [1.0, 0.04, 1.0];
+
+fn ktab() -> Vec<f32> {
+    let mut ktab = vec![0.0f32; KTABLE * KTAB_W];
     // a few active k-vectors so Ewald outputs are nontrivial
     for (i, row) in [
         [1.0, 0.0, 0.0, 0.5],
@@ -32,10 +44,17 @@ fn config() -> ExecutorConfig {
     .iter()
     .enumerate()
     {
-        config.ktab[i * KTAB_W..(i + 1) * KTAB_W].copy_from_slice(row);
+        ktab[i * KTAB_W..(i + 1) * KTAB_W].copy_from_slice(row);
     }
-    assert_eq!(config.ktab.len(), KTABLE * KTAB_W);
-    config
+    ktab
+}
+
+fn kernels() -> Vec<Arc<TileKernel>> {
+    gcharm::runtime::builtin_kernels(EPS2, ktab(), MD_PARAMS)
+}
+
+fn gravity() -> Arc<TileKernel> {
+    Arc::new(TileKernel::gravity(EPS2))
 }
 
 fn gravity_payload(rng: &mut Rng, batch: usize) -> Payload {
@@ -44,7 +63,7 @@ fn gravity_payload(rng: &mut Rng, batch: usize) -> Payload {
     for v in parts.iter_mut().chain(inters.iter_mut()) {
         *v = rng.range(-1.0, 1.0) as f32;
     }
-    Payload::Gravity { parts, inters, batch }
+    Payload::Tile { kernel: gravity(), bufs: vec![parts, inters], batch }
 }
 
 fn gather_payload(rng: &mut Rng, batch: usize, rows: usize) -> Payload {
@@ -59,7 +78,13 @@ fn gather_payload(rng: &mut Rng, batch: usize, rows: usize) -> Payload {
     for v in inters.iter_mut() {
         *v = rng.range(-1.0, 1.0) as f32;
     }
-    Payload::GravityGather { pool: Arc::new(pool), idx, inters, batch }
+    Payload::TileGather {
+        kernel: gravity(),
+        pool: Arc::new(pool),
+        idx,
+        bufs: vec![inters],
+        batch,
+    }
 }
 
 fn ewald_payload(rng: &mut Rng, batch: usize) -> Payload {
@@ -67,7 +92,11 @@ fn ewald_payload(rng: &mut Rng, batch: usize) -> Payload {
     for v in parts.iter_mut() {
         *v = rng.range(-2.0, 2.0) as f32;
     }
-    Payload::Ewald { parts, batch }
+    Payload::Tile {
+        kernel: Arc::new(TileKernel::ewald(ktab())),
+        bufs: vec![parts],
+        batch,
+    }
 }
 
 fn md_payload(rng: &mut Rng, batch: usize) -> Payload {
@@ -83,7 +112,11 @@ fn md_payload(rng: &mut Rng, batch: usize) -> Payload {
             pb[o + 1] = rng.range(0.0, 2.0) as f32;
         }
     }
-    Payload::MdForce { pa, pb, batch }
+    Payload::Tile {
+        kernel: Arc::new(TileKernel::md_force(MD_PARAMS)),
+        bufs: vec![pa, pb],
+        batch,
+    }
 }
 
 fn payloads() -> Vec<(&'static str, Payload, CoalescingClass)> {
@@ -100,6 +133,68 @@ fn payloads() -> Vec<(&'static str, Payload, CoalescingClass)> {
         ("ewald split", ewald_payload(&mut rng, 200), CoalescingClass::Contiguous),
         ("md split", md_payload(&mut rng, 130), CoalescingClass::Contiguous),
     ]
+}
+
+/// The pre-redesign seed path: per-slot native kernels over the same
+/// buffers (what the seed's enum-matching sim backend computed).
+fn seed_reference(payload: &Payload) -> Vec<f32> {
+    let kt = ktab();
+    match payload {
+        Payload::Tile { kernel, bufs, batch } => {
+            let mut out = Vec::new();
+            for s in 0..*batch {
+                out.extend(match &*kernel.name {
+                    "gravity" => {
+                        let ps = PARTS_PER_BUCKET * PARTICLE_W;
+                        let is = INTERACTIONS * INTER_W;
+                        cpu_gravity(
+                            &bufs[0][s * ps..(s + 1) * ps],
+                            &bufs[1][s * is..(s + 1) * is],
+                            EPS2,
+                        )
+                    }
+                    "ewald" => {
+                        let ps = PARTS_PER_BUCKET * PARTICLE_W;
+                        cpu_ewald(&bufs[0][s * ps..(s + 1) * ps], &kt)
+                    }
+                    "md_force" => {
+                        let ms = PARTS_PER_PATCH * MD_W;
+                        cpu_md_interact(
+                            &bufs[0][s * ms..(s + 1) * ms],
+                            &bufs[1][s * ms..(s + 1) * ms],
+                            MD_PARAMS,
+                        )
+                    }
+                    other => panic!("unexpected family {other}"),
+                });
+            }
+            out
+        }
+        Payload::TileGather { pool, idx, bufs, batch, .. } => {
+            let mut out = Vec::new();
+            let mut parts = vec![0.0f32; PARTS_PER_BUCKET * PARTICLE_W];
+            for s in 0..*batch {
+                for (j, &row) in idx
+                    [s * PARTS_PER_BUCKET..(s + 1) * PARTS_PER_BUCKET]
+                    .iter()
+                    .enumerate()
+                {
+                    let row = row as usize;
+                    parts[j * PARTICLE_W..(j + 1) * PARTICLE_W]
+                        .copy_from_slice(
+                            &pool[row * PARTICLE_W..(row + 1) * PARTICLE_W],
+                        );
+                }
+                let is = INTERACTIONS * INTER_W;
+                out.extend(cpu_gravity(
+                    &parts,
+                    &bufs[0][s * is..(s + 1) * is],
+                    EPS2,
+                ));
+            }
+            out
+        }
+    }
 }
 
 #[test]
@@ -122,7 +217,7 @@ fn pipelined_service_matches_sync_executor_bitwise() {
 
     // Synchronous reference.
     let mut sync =
-        Executor::new(&default_artifacts_dir(), config()).expect("executor");
+        Executor::new(&default_artifacts_dir(), kernels()).expect("executor");
     let reference: Vec<Completion> = specs
         .iter()
         .map(|(label, s)| {
@@ -132,7 +227,7 @@ fn pipelined_service_matches_sync_executor_bitwise() {
 
     // Pipelined service.
     let (done_tx, done_rx) = channel();
-    let svc = GpuService::spawn(&default_artifacts_dir(), config(), done_tx)
+    let svc = GpuService::spawn(&default_artifacts_dir(), kernels(), done_tx)
         .expect("gpu service");
     for (_, s) in &specs {
         svc.submit(s.clone()).expect("submit");
@@ -202,9 +297,13 @@ fn pool_specs() -> Vec<(&'static str, LaunchSpec)> {
 /// device i % devices; completions sorted by id.
 fn run_pool(devices: usize, specs: &[(&str, LaunchSpec)]) -> Vec<Completion> {
     let (done_tx, done_rx) = channel();
-    let pool =
-        DevicePool::spawn(&default_artifacts_dir(), config(), devices, done_tx)
-            .expect("device pool");
+    let pool = DevicePool::spawn(
+        &default_artifacts_dir(),
+        kernels(),
+        devices,
+        done_tx,
+    )
+    .expect("device pool");
     for (i, (_, s)) in specs.iter().enumerate() {
         pool.submit(i % devices, s.clone()).expect("submit");
     }
@@ -221,12 +320,37 @@ fn run_pool(devices: usize, specs: &[(&str, LaunchSpec)]) -> Vec<Completion> {
 }
 
 #[test]
+fn registry_runtime_matches_seed_native_reference() {
+    // The registry-migrated path must be bitwise identical to the seed
+    // path (per-slot native kernels) for every payload kind, on 1 and 2
+    // devices.
+    let specs = pool_specs();
+    for devices in [1usize, 2] {
+        let got = run_pool(devices, &specs);
+        for ((label, s), c) in specs.iter().zip(&got) {
+            let want = seed_reference(&s.payload);
+            assert_eq!(
+                want.len(),
+                c.out.len(),
+                "{label} ({devices} devices): output length"
+            );
+            let bits_w: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            let bits_g: Vec<u32> = c.out.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                bits_w, bits_g,
+                "{label} ({devices} devices): drifted from the seed path"
+            );
+        }
+    }
+}
+
+#[test]
 fn device_pool_single_device_matches_sync_executor_bitwise() {
     // `devices = 1` must reproduce the pre-pool single-service path
     // bitwise: the sync Executor is the unchanged reference.
     let specs = pool_specs();
     let mut sync =
-        Executor::new(&default_artifacts_dir(), config()).expect("executor");
+        Executor::new(&default_artifacts_dir(), kernels()).expect("executor");
     let reference: Vec<Completion> = specs
         .iter()
         .map(|(label, s)| {
@@ -324,12 +448,12 @@ fn pipelined_service_interleaves_distinct_kernels() {
         .collect();
 
     let mut sync =
-        Executor::new(&default_artifacts_dir(), config()).expect("executor");
+        Executor::new(&default_artifacts_dir(), kernels()).expect("executor");
     let reference: Vec<Completion> =
         specs.iter().map(|s| sync.run(s.clone()).unwrap()).collect();
 
     let (done_tx, done_rx) = channel();
-    let svc = GpuService::spawn(&default_artifacts_dir(), config(), done_tx)
+    let svc = GpuService::spawn(&default_artifacts_dir(), kernels(), done_tx)
         .expect("gpu service");
     for s in &specs {
         svc.submit(s.clone()).unwrap();

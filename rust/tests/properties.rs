@@ -13,23 +13,25 @@
 //!     resource descriptors.
 
 use gcharm::coordinator::{
-    Batch, ChareId, CombinePolicy, Combiner, HybridScheduler, Pending,
-    SplitPolicy, WorkKind, WorkRequest, WrPayload,
+    Batch, ChareId, CombinePolicy, Combiner, HybridScheduler, KernelKindId,
+    Pending, SplitPolicy, Tile, WorkRequest,
 };
 use gcharm::runtime::memory::DeviceMemory;
 use gcharm::runtime::{occupancy, GpuSpec, KernelResources};
 use gcharm::util::Rng;
 
+const K0: KernelKindId = KernelKindId(0);
+
 fn wr(id: u64, items: usize) -> WorkRequest {
     WorkRequest {
         id,
         chare: ChareId::new(0, id as u32),
-        kind: WorkKind::Force,
+        kind: K0,
         buffer: Some(id),
         data_items: items,
         tag: id,
         arrival: 0.0,
-        payload: WrPayload::Ewald { parts: vec![] },
+        payload: Tile::default(),
     }
 }
 
@@ -154,15 +156,15 @@ fn prop_hybrid_split_conserves_and_bounds() {
         };
         let mut h = HybridScheduler::new(policy);
         if rng.below(4) != 0 {
-            h.record_cpu(1 + rng.below(100), rng.f64() + 1e-6);
-            h.record_gpu(1 + rng.below(100), rng.f64() + 1e-6);
+            h.record_cpu(K0, 1 + rng.below(100), rng.f64() + 1e-6);
+            h.record_gpu(K0, 1 + rng.below(100), rng.f64() + 1e-6);
         }
         let n = 1 + rng.below(100);
         let q: Vec<Pending> = (0..n)
             .map(|i| pending(i as u64, None, 1 + rng.below(200)))
             .collect();
         let total_items: usize = q.iter().map(|p| p.wr.data_items).sum();
-        let (cpu, gpu) = h.split(q);
+        let (cpu, gpu) = h.split(K0, q);
         assert_eq!(cpu.len() + gpu.len(), n, "seed {seed}: lost requests");
         // order preserved
         let ids: Vec<u64> = cpu.iter().chain(&gpu).map(|p| p.wr.id).collect();
@@ -170,7 +172,7 @@ fn prop_hybrid_split_conserves_and_bounds() {
         // adaptive: cpu items never exceed target by more than one request
         if policy == SplitPolicy::AdaptiveItems {
             let cpu_items: usize = cpu.iter().map(|p| p.wr.data_items).sum();
-            let target = total_items as f64 * h.cpu_share();
+            let target = total_items as f64 * h.cpu_share(K0);
             assert!(
                 cpu_items as f64 <= target + 1.0 + 200.0,
                 "seed {seed}: cpu overloaded {cpu_items} vs target {target}"

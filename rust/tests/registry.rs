@@ -1,0 +1,413 @@
+//! Registry round-trip properties: N app-registered synthetic kernel
+//! families driven through the combiner layer and the full runtime.
+//!
+//! Invariants covered:
+//!   - registering N descriptors yields table-driven combiners whose
+//!     flush sizes never exceed each family's occupancy-derived cap, and
+//!     mixed-kind bursts are neither dropped nor duplicated;
+//!   - shape checking rejects malformed tiles naming the offending arg;
+//!   - a full `GCharm` run over registered-only families accounts every
+//!     submitted request in the per-kind report and respects per-kind
+//!     launch caps.
+
+use std::sync::Arc;
+
+use gcharm::coordinator::{
+    Chare, ChareId, CombinePolicy, Combiner, Config, Ctx, GCharm,
+    KernelDescriptor, KernelKindId, KernelRegistry, Msg, Pending, Tile,
+    WorkDraft, WorkRequest, WrResult, METHOD_RESULT,
+};
+use gcharm::runtime::kernel::{TileArgSpec, TileKernel};
+use gcharm::runtime::KernelResources;
+use gcharm::util::Rng;
+
+/// Per-slot kernel: sum of the tile entries.
+fn sum_slot(args: &[&[f32]], _c: &[f32]) -> Vec<f32> {
+    vec![args[0].iter().sum()]
+}
+
+/// A synthetic family: `rows x 1` tile, 1x1 output, resources varied by
+/// `variant` so registered families get different occupancy caps.
+fn synth_descriptor(name: String, rows: usize, variant: usize) -> KernelDescriptor {
+    let resources = match variant % 3 {
+        0 => KernelResources {
+            threads_per_block: 128,
+            regs_per_thread: 64,
+            smem_per_block: 4096,
+        }, // cap 104
+        1 => KernelResources {
+            threads_per_block: 128,
+            regs_per_thread: 96,
+            smem_per_block: 2048,
+        }, // cap 65
+        _ => KernelResources {
+            threads_per_block: 64,
+            regs_per_thread: 48,
+            smem_per_block: 2048,
+        }, // cap 208
+    };
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel {
+            name: Arc::from(name.as_str()),
+            args: vec![TileArgSpec { name: "tile", rows, width: 1, pad: 0.0 }],
+            constant: Arc::new(Vec::new()),
+            out_rows: 1,
+            out_width: 1,
+            resources,
+            items_per_slot: rows as u64,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: sum_slot,
+        }),
+        combine: None,
+        sort_by_slot: false,
+        cpu_fallback: false,
+    }
+}
+
+fn wr(kind: KernelKindId, id: u64, rows: usize) -> Pending {
+    Pending {
+        wr: WorkRequest {
+            id,
+            chare: ChareId::new(0, id as u32),
+            kind,
+            buffer: None,
+            data_items: rows,
+            tag: id,
+            arrival: 0.0,
+            payload: Tile::new(vec![vec![1.0; rows]]),
+        },
+        slot: None,
+        staged_bytes: 0,
+    }
+}
+
+#[test]
+fn prop_registered_combiners_cap_and_conserve_mixed_bursts() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        let nkinds = 1 + rng.below(5);
+        let mut reg = KernelRegistry::new();
+        let mut rows = Vec::new();
+        for k in 0..nkinds {
+            let r = 1 + rng.below(16);
+            rows.push(r);
+            reg.register(synth_descriptor(format!("synth_{k}"), r, k))
+                .unwrap();
+        }
+        // Combiners exactly as the coordinator builds them: one per kind,
+        // occupancy-derived cap from the registered resources.
+        let mut combiners: Vec<Combiner> = reg
+            .descriptors()
+            .iter()
+            .map(|d| {
+                Combiner::new(
+                    d.combine.unwrap_or(CombinePolicy::Adaptive),
+                    d.kernel.max_combine(),
+                    d.sort_by_slot,
+                )
+            })
+            .collect();
+        let caps: Vec<usize> =
+            reg.descriptors().iter().map(|d| d.kernel.max_combine()).collect();
+
+        let n = 50 + rng.below(400);
+        let mut submitted = vec![0usize; nkinds];
+        let mut flushed: Vec<Vec<u64>> = vec![Vec::new(); nkinds];
+        let mut now = 0.0f64;
+        for i in 0..n {
+            let k = rng.below(nkinds);
+            now += rng.exponential(0.0005);
+            combiners[k].insert(wr(KernelKindId(k), i as u64, rows[k]), now);
+            submitted[k] += 1;
+            for (kk, c) in combiners.iter_mut().enumerate() {
+                while let Some(b) = c.poll(now) {
+                    assert!(
+                        b.items.len() <= caps[kk],
+                        "seed {seed}: kind {kk} flushed {} > cap {}",
+                        b.items.len(),
+                        caps[kk]
+                    );
+                    for p in b.items {
+                        assert_eq!(p.wr.kind, KernelKindId(kk));
+                        flushed[kk].push(p.wr.id);
+                    }
+                }
+            }
+        }
+        for (kk, c) in combiners.iter_mut().enumerate() {
+            while let Some(b) = c.force_flush() {
+                assert!(b.items.len() <= caps[kk]);
+                for p in b.items {
+                    flushed[kk].push(p.wr.id);
+                }
+            }
+            assert!(c.is_empty());
+        }
+        for k in 0..nkinds {
+            let mut ids = flushed[k].clone();
+            let total = ids.len();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), total, "seed {seed}: kind {k} duplicated");
+            assert_eq!(
+                total, submitted[k],
+                "seed {seed}: kind {k} dropped requests"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_shape_check_reports_expected_and_actual() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xFACE);
+        let rows = 1 + rng.below(32);
+        let mut reg = KernelRegistry::new();
+        let id = reg
+            .register(synth_descriptor("s".to_string(), rows, seed as usize))
+            .unwrap();
+        let good = Tile::new(vec![vec![0.0; rows]]);
+        assert!(reg.check(id, &good).is_ok());
+        let bad_len = rows + 1 + rng.below(8);
+        let bad = Tile::new(vec![vec![0.0; bad_len]]);
+        let e = reg.check(id, &bad).unwrap_err();
+        assert_eq!(e.arg, "tile", "seed {seed}");
+        assert_eq!(e.expected, rows);
+        assert_eq!(e.actual, bad_len);
+    }
+}
+
+/// A family with BOTH a reuse arg and a CPU fallback: requests pin table
+/// slots at submission, then the hybrid split sends a prefix to the CPU
+/// pool. Regression target: the CPU prefix must release its pins (the CPU
+/// completion path never touches the chare table).
+fn reuse_hybrid_descriptor(rows: usize) -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel {
+            name: Arc::from("reuse_hybrid"),
+            args: vec![TileArgSpec { name: "tile", rows, width: 1, pad: 0.0 }],
+            constant: Arc::new(Vec::new()),
+            out_rows: 1,
+            out_width: 1,
+            resources: KernelResources {
+                threads_per_block: 128,
+                regs_per_thread: 64,
+                smem_per_block: 4096,
+            },
+            items_per_slot: rows as u64,
+            reuse_arg: Some(0),
+            gather_name: Some(Arc::from("reuse_hybrid_gather")),
+            entry_arg: None,
+            slot_fn: sum_slot,
+        }),
+        combine: None,
+        sort_by_slot: true,
+        cpu_fallback: true,
+    }
+}
+
+/// Bursts requests with reuse buffer ids; repeated ids carry identical
+/// data (reuse-correct), so CPU- and GPU-side results agree.
+struct ReuseBurster {
+    id: ChareId,
+    kind: KernelKindId,
+    rows: usize,
+    count: usize,
+    nbuf: usize,
+    pending: usize,
+    sum: f64,
+}
+
+impl Chare for ReuseBurster {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_GO => {
+                self.pending = self.count;
+                self.sum = 0.0;
+                for i in 0..self.count {
+                    let buf = (i % self.nbuf) as u64;
+                    ctx.submit(WorkDraft {
+                        chare: self.id,
+                        kind: self.kind,
+                        buffer: Some(buf),
+                        data_items: self.rows,
+                        tag: buf,
+                        payload: Tile::new(vec![vec![
+                            buf as f32;
+                            self.rows
+                        ]]),
+                    })
+                    .expect("registered tile shape");
+                }
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                // every slot sums its tile: rows * buffer value
+                assert_eq!(r.out[0], (self.rows as u64 * r.tag) as f32);
+                self.sum += r.out[0] as f64;
+                self.pending -= 1;
+                if self.pending == 0 {
+                    ctx.contribute(self.sum);
+                }
+            }
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+#[test]
+fn reuse_hybrid_family_releases_cpu_split_pins() {
+    let rows = 4usize;
+    let count = 300usize;
+    let nbuf = 64usize;
+    let mut rt = GCharm::new(Config { pes: 2, ..Config::default() }).unwrap();
+    let kind = rt.register_kernel(reuse_hybrid_descriptor(rows)).unwrap();
+    let id = ChareId::new(6, 0);
+    rt.register(
+        id,
+        0,
+        Box::new(ReuseBurster {
+            id,
+            kind,
+            rows,
+            count,
+            nbuf,
+            pending: 0,
+            sum: 0.0,
+        }),
+    );
+    rt.start().unwrap();
+    let want: f64 = (0..count).map(|i| (rows * (i % nbuf)) as f64).sum();
+    for _round in 0..2 {
+        rt.send(id, Msg::new(METHOD_GO, ()));
+        let got = rt.await_reduction(1);
+        assert!((got - want).abs() < 1e-9, "sum {got} vs {want}");
+        rt.await_quiescence();
+        // The leak detector: invalidate_all debug_asserts on pinned
+        // slots, so any pin leaked by the hybrid CPU prefix panics the
+        // coordinator here (and the next round would stall on an
+        // exhausted pool even in release builds).
+        rt.invalidate_device_buffers();
+    }
+    let report = rt.shutdown();
+    let ks = report.kind("reuse_hybrid").expect("kind stats");
+    assert_eq!(ks.gpu_requests + ks.cpu_requests, 2 * count as u64);
+    assert!(ks.cpu_requests > 0, "hybrid split never used the CPU side");
+}
+
+/// A chare that bursts `count` requests of one registered kind and
+/// contributes once every result returned.
+struct Burster {
+    id: ChareId,
+    kind: KernelKindId,
+    rows: usize,
+    count: usize,
+    pending: usize,
+    sum: f64,
+}
+
+const METHOD_GO: u32 = 1;
+
+impl Chare for Burster {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_GO => {
+                self.pending = self.count;
+                for i in 0..self.count {
+                    ctx.submit(WorkDraft {
+                        chare: self.id,
+                        kind: self.kind,
+                        buffer: None,
+                        data_items: self.rows,
+                        tag: i as u64,
+                        payload: Tile::new(vec![vec![1.0; self.rows]]),
+                    })
+                    .expect("registered tile shape");
+                }
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                assert_eq!(r.kind, self.kind);
+                self.sum += r.out[0] as f64;
+                self.pending -= 1;
+                if self.pending == 0 {
+                    ctx.contribute(self.sum);
+                }
+            }
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+#[test]
+fn full_stack_registered_bursts_respect_caps_and_accounting() {
+    let mut rt = GCharm::new(Config { pes: 2, ..Config::default() }).unwrap();
+    let mut kinds = Vec::new();
+    let rows = [4usize, 8, 3];
+    let counts = [220usize, 150, 90];
+    for (k, &r) in rows.iter().enumerate() {
+        kinds.push(
+            rt.register_kernel(synth_descriptor(format!("burst_{k}"), r, k))
+                .unwrap(),
+        );
+    }
+    let caps: Vec<usize> = kinds
+        .iter()
+        .map(|&k| rt.kernel_registry().kernel(k).max_combine())
+        .collect();
+    for (k, &kind) in kinds.iter().enumerate() {
+        let id = ChareId::new(5, k as u32);
+        rt.register(
+            id,
+            k % 2,
+            Box::new(Burster {
+                id,
+                kind,
+                rows: rows[k],
+                count: counts[k],
+                pending: 0,
+                sum: 0.0,
+            }),
+        );
+    }
+    rt.start().unwrap();
+    for k in 0..kinds.len() {
+        rt.send(ChareId::new(5, k as u32), Msg::new(METHOD_GO, ()));
+    }
+    // each request sums a tile of ones: per-chare sum = count * rows
+    let total = rt.await_reduction(kinds.len() as u64);
+    rt.await_quiescence();
+    let report = rt.shutdown();
+
+    let want_total: f64 = rows
+        .iter()
+        .zip(&counts)
+        .map(|(&r, &c)| (r * c) as f64)
+        .sum();
+    assert!(
+        (total - want_total).abs() < 1e-9,
+        "summed outputs {total} vs {want_total}"
+    );
+
+    // per-kind accounting: every submitted request lands in its family's
+    // stats, and launch counts respect the occupancy caps
+    let submitted: u64 = counts.iter().map(|&c| c as u64).sum();
+    assert_eq!(report.gpu_requests, submitted);
+    assert_eq!(report.flushed_requests, submitted, "flush accounting");
+    for (k, &kind) in kinds.iter().enumerate() {
+        let ks = &report.kind_stats[kind.0];
+        assert_eq!(ks.name, format!("burst_{k}"));
+        assert_eq!(ks.gpu_requests, counts[k] as u64, "kind {k} requests");
+        assert_eq!(ks.cpu_requests, 0, "GPU-only family");
+        let min_launches = counts[k].div_ceil(caps[k]) as u64;
+        assert!(
+            ks.launches >= min_launches,
+            "kind {k}: {} launches for {} requests under cap {}",
+            ks.launches,
+            counts[k],
+            caps[k]
+        );
+    }
+}

@@ -1,26 +1,47 @@
 //! Integration: AOT artifacts -> PJRT engine -> numerics.
 //!
-//! Loads the real artifacts built by `make artifacts`, executes the
-//! compiled kernels from rust with hand-computable inputs, and checks the
-//! physics -- proving the python-AOT -> rust-load bridge end to end.
+//! Loads the real artifacts built by `make artifacts` (or the synthetic
+//! ladder), executes the registered kernel families from rust with
+//! hand-computable inputs, and checks the physics -- proving the
+//! python-AOT -> rust-load bridge end to end through the open registry
+//! surface.
 
-use gcharm::runtime::{
-    default_artifacts_dir, CoalescingClass, Executor, ExecutorConfig,
-    LaunchSpec, Payload,
-};
+use std::sync::Arc;
+
+use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::shapes::{
     INTERACTIONS, INTER_W, KTAB_W, KTABLE, MD_PAD_POS, MD_W, OUT_W,
     PARTICLE_W, PARTS_PER_BUCKET, PARTS_PER_PATCH,
 };
+use gcharm::runtime::{
+    default_artifacts_dir, CoalescingClass, Executor, LaunchSpec, Payload,
+};
 
 const EPS2: f32 = 1e-2;
+const MD_PARAMS: [f32; 3] = [1.0, 0.04, 1.0];
+
+fn ktab() -> Vec<f32> {
+    // one active k-vector: k = (1, 0, 0), coef = 0.5
+    let mut ktab = vec![0.0f32; KTABLE * KTAB_W];
+    ktab[0] = 1.0;
+    ktab[3] = 0.5;
+    ktab
+}
+
+fn gravity() -> Arc<TileKernel> {
+    Arc::new(TileKernel::gravity(EPS2))
+}
+
+fn ewald() -> Arc<TileKernel> {
+    Arc::new(TileKernel::ewald(ktab()))
+}
+
+fn md() -> Arc<TileKernel> {
+    Arc::new(TileKernel::md_force(MD_PARAMS))
+}
 
 fn executor() -> Executor {
-    let mut config = ExecutorConfig { eps2: EPS2, ..Default::default() };
-    // one active k-vector: k = (1, 0, 0), coef = 0.5
-    config.ktab[0] = 1.0;
-    config.ktab[3] = 0.5;
-    Executor::new(&default_artifacts_dir(), config)
+    Executor::new(&default_artifacts_dir(), vec![gravity(), ewald(), md()])
         .expect("run `make artifacts` before cargo test")
 }
 
@@ -35,7 +56,7 @@ fn gravity_payload(batch: usize) -> Payload {
         inters[o] = 1.0 + b as f32;
         inters[o + 3] = 2.0;
     }
-    Payload::Gravity { parts, inters, batch }
+    Payload::Tile { kernel: gravity(), bufs: vec![parts, inters], batch }
 }
 
 fn expected_ax(r: f32) -> f32 {
@@ -105,7 +126,7 @@ fn gather_kernel_matches_contiguous() {
     // layout's.
     let contiguous = gravity_payload(batch);
     let (parts, inters) = match &contiguous {
-        Payload::Gravity { parts, inters, .. } => (parts.clone(), inters.clone()),
+        Payload::Tile { bufs, .. } => (bufs[0].clone(), bufs[1].clone()),
         _ => unreachable!(),
     };
 
@@ -131,10 +152,11 @@ fn gather_kernel_matches_contiguous() {
     let b = ex
         .run(LaunchSpec {
             id: 4,
-            payload: Payload::GravityGather {
+            payload: Payload::TileGather {
+                kernel: gravity(),
                 pool: std::sync::Arc::new(pool),
                 idx,
-                inters,
+                bufs: vec![inters],
                 batch,
             },
             transfer_bytes: 0,
@@ -161,7 +183,11 @@ fn ewald_kernel_numerics() {
     let done = ex
         .run(LaunchSpec {
             id: 5,
-            payload: Payload::Ewald { parts, batch },
+            payload: Payload::Tile {
+                kernel: ewald(),
+                bufs: vec![parts],
+                batch,
+            },
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
         })
@@ -187,7 +213,11 @@ fn md_kernel_numerics() {
     let done = ex
         .run(LaunchSpec {
             id: 6,
-            payload: Payload::MdForce { pa, pb, batch: 1 },
+            payload: Payload::Tile {
+                kernel: md(),
+                bufs: vec![pa, pb],
+                batch: 1,
+            },
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
         })
@@ -235,7 +265,7 @@ fn gpu_service_roundtrip() {
     let (done_tx, done_rx) = channel();
     let svc = gcharm::runtime::GpuService::spawn(
         &default_artifacts_dir(),
-        ExecutorConfig { eps2: EPS2, ..Default::default() },
+        vec![gravity(), ewald(), md()],
         done_tx,
     )
     .unwrap();
