@@ -17,8 +17,8 @@ use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench::bench_ns;
 use gcharm::coordinator::{
     builtin_registry, chunk_by_items, ChareId, ChareTable, CombinePolicy,
-    Combiner, Config, DeviceRouter, HybridScheduler, KernelKindId, Pending,
-    RoutePolicy, SplitPolicy, Tile, WorkRequest,
+    Combiner, Config, DeviceRouter, HybridScheduler, JobId, KernelKindId,
+    Pending, RoutePolicy, SplitPolicy, Tile, WorkRequest,
 };
 use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::shapes::{
@@ -66,6 +66,7 @@ fn pending(id: u64, slot: Option<u32>) -> Pending {
     Pending {
         wr: WorkRequest {
             id,
+            job: JobId(0),
             chare: ChareId::new(0, 0),
             kind: KernelKindId(0),
             buffer: Some(id),
@@ -343,10 +344,10 @@ fn main() {
         let shares = vec![0.25; 4];
         let mut i = 0u32;
         bench_ns("device route + steal probe (4 devices)", 4096, 9, || {
-            let d = r.route(ChareId::new(1, i % 256));
-            r.note_enqueued(d, 1);
+            let d = r.route(JobId(0), ChareId::new(1, i % 256));
+            r.note_enqueued(d, JobId(0), 1);
             std::hint::black_box(r.steal_candidate(&shares));
-            r.note_completed(d, 1);
+            r.note_completed(d, JobId(0), 1);
             i += 1;
         });
     }

@@ -10,4 +10,7 @@ pub mod patch;
 pub mod sim;
 
 pub use patch::{MdParticle, Patch, PatchParams};
-pub use sim::{run, run_single_core_cpu, MdConfig, MdResult, MD_COLLECTION};
+pub use sim::{
+    job_spec, job_spec_named, run, run_single_core_cpu, MdConfig, MdResult,
+    MD_COLLECTION,
+};

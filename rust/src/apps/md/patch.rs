@@ -32,9 +32,13 @@ pub struct MdParticle {
     pub vel: [f64; 2],
 }
 
-/// Driver -> patch: begin one timestep.
+/// Driver -> patch: begin one timestep. Carries the resolved MD kernel
+/// kind: the job's driver learns it from `JobCtx::kinds` (ids are
+/// assigned by the shared registry at submission, after the chare set is
+/// built).
 pub struct StepMsg {
     pub dt: f64,
+    pub kind: KernelKindId,
 }
 
 /// Patch -> patch: padded particle chunks for force computation.
@@ -156,6 +160,7 @@ impl Patch {
         assert!(!self.started, "step already in flight");
         self.started = true;
         self.dt = m.dt;
+        self.md_kind = m.kind;
         self.forces = vec![[0.0; 2]; self.particles.len()];
         self.build_chunks();
 

@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use crate::coordinator::cpu_kernels::cpu_md_interact;
 use crate::coordinator::{
-    md_descriptor, ChareId, Config, GCharm, Msg, Report,
+    md_descriptor, ChareId, Config, JobSpec, Msg, Report, Runtime,
 };
 use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
 use crate::util::Rng;
@@ -140,46 +140,80 @@ fn bin_particles(
     bins
 }
 
-/// Run the MD simulation on the G-Charm runtime.
-pub fn run(cfg: &MdConfig) -> Result<MdResult> {
+/// Build the MD workload as a [`JobSpec`] for a (possibly shared)
+/// [`Runtime`]: the patch-chare set, the `md_force` family registration,
+/// and a driver pacing `cfg.steps` timesteps. The driver's series is the
+/// per-step kinetic energy.
+pub fn job_spec(cfg: &MdConfig) -> Result<JobSpec> {
+    job_spec_named(cfg, "md")
+}
+
+/// [`job_spec`] under an explicit job name (mixed-workload serving
+/// submits several instances).
+pub fn job_spec_named(cfg: &MdConfig, name: &str) -> Result<JobSpec> {
     anyhow::ensure!(
         cfg.box_l / cfg.grid as f64 >= cfg.rc,
         "patch side must be >= cutoff"
     );
     let bins = bin_particles(cfg.generate(), cfg.grid, cfg.box_l);
     let npatches = cfg.grid * cfg.grid;
-
-    let mut rt = GCharm::new(cfg.runtime.clone())?;
-    let md_kind = rt.register_kernel(md_descriptor(cfg.md_params()))?;
     let params = PatchParams { grid: cfg.grid, box_l: cfg.box_l };
+
+    let mut spec =
+        JobSpec::new(name).kernel(md_descriptor(cfg.md_params()));
     for (i, bin) in bins.into_iter().enumerate() {
         let id = ChareId::new(MD_COLLECTION, i as u32);
         let gx = i % cfg.grid;
         let gy = i / cfg.grid;
-        rt.register(
+        spec = spec.chare(
             id,
-            i % cfg.runtime.pes,
-            Box::new(Patch::new(id, gx, gy, params, md_kind, bin)),
+            i,
+            // the real kind id arrives with each StepMsg, resolved by
+            // the driver from the shared registry
+            Box::new(Patch::new(
+                id,
+                gx,
+                gy,
+                params,
+                crate::coordinator::KernelKindId(0),
+                bin,
+            )),
         );
     }
-    rt.start()?;
 
-    let t0 = Instant::now();
-    let mut energies = Vec::with_capacity(cfg.steps);
-    for _ in 0..cfg.steps {
-        for i in 0..npatches {
-            rt.send(
-                ChareId::new(MD_COLLECTION, i as u32),
-                Msg::new(METHOD_STEP, StepMsg { dt: cfg.dt }),
-            );
+    let steps = cfg.steps;
+    let dt = cfg.dt;
+    Ok(spec.driver(move |ctx| {
+        let md_kind = ctx.kinds()[0];
+        let mut energies = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            for i in 0..npatches {
+                ctx.send(
+                    ChareId::new(MD_COLLECTION, i as u32),
+                    Msg::new(
+                        METHOD_STEP,
+                        StepMsg { dt, kind: md_kind },
+                    ),
+                );
+            }
+            energies.push(ctx.await_reduction(npatches as u64)?);
+            ctx.await_quiescence();
         }
-        energies.push(rt.await_reduction(npatches as u64));
-        rt.await_quiescence();
-    }
+        Ok(energies)
+    }))
+}
+
+/// Run the MD simulation as a single job on a private runtime.
+pub fn run(cfg: &MdConfig) -> Result<MdResult> {
+    let npatches = cfg.grid * cfg.grid;
+    let rt = Runtime::new(cfg.runtime.clone())?;
+    let t0 = Instant::now();
+    let handle = rt.submit_job(job_spec(cfg)?)?;
+    let job = handle.wait()?;
     let wall = t0.elapsed().as_secs_f64();
     let mut report = rt.shutdown();
     report.total_wall = wall;
-    Ok(MdResult { report, wall, energies, patches: npatches })
+    Ok(MdResult { report, wall, energies: job.series, patches: npatches })
 }
 
 /// Single-core CPU baseline: same physics, plain loops, one thread.

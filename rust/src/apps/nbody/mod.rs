@@ -20,13 +20,15 @@ pub mod tree;
 pub mod treepiece;
 pub mod walk;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::{
-    ewald_descriptor, force_descriptor, ChareId, Config, GCharm, Msg, Report,
+    ewald_descriptor, force_descriptor, ChareId, Config, JobSpec, Msg,
+    Report, Runtime,
 };
 
 use dataset::DatasetSpec;
@@ -102,65 +104,103 @@ fn assign_buckets(nbuckets: usize, pieces: usize) -> Vec<Vec<usize>> {
     out
 }
 
-fn run_inner(cfg: &NbodyConfig, cpu_only: bool) -> Result<NbodyResult> {
+/// Build the N-Body workload as a [`JobSpec`] for a (possibly shared)
+/// [`Runtime`]: the TreePiece chare set, the gravity + Ewald family
+/// registrations, and a driver pacing `cfg.iters` iterations (tree
+/// build, walks, force/Ewald requests, integration, per-job buffer
+/// invalidation). The driver's series is the total energy per iteration.
+pub fn job_spec(cfg: &NbodyConfig) -> JobSpec {
+    job_spec_inner(cfg, "nbody", false).0
+}
+
+/// [`job_spec`] variants used by the drivers below: `cpu_only` keeps the
+/// chare structure but computes forces inline on the PEs; the returned
+/// counter reports the final tree's bucket count after the job ran.
+fn job_spec_inner(
+    cfg: &NbodyConfig,
+    name: &str,
+    cpu_only: bool,
+) -> (JobSpec, Arc<AtomicUsize>) {
     let particles = cfg.dataset.generate();
     let master = Arc::new(Mutex::new(particles));
     let ktab = Arc::new(cfg.ktable());
+    let npieces = (cfg.runtime.pes * cfg.pieces_per_pe).max(1);
 
-    let pes = cfg.runtime.pes;
-    let npieces = (pes * cfg.pieces_per_pe).max(1);
-    let mut rt = GCharm::new(cfg.runtime.clone())?;
-    // Register the app's kernel families: this is the whole GPU surface
-    // the app needs — the runtime learns the shapes, occupancy, and reuse
-    // wiring from the descriptors.
-    let force_kind = rt.register_kernel(force_descriptor(cfg.eps2))?;
-    let ewald_kind = rt.register_kernel(ewald_descriptor(ktab.to_vec()))?;
+    let mut spec = JobSpec::new(name)
+        // Register the app's kernel families: this is the whole GPU
+        // surface the app needs — the runtime learns the shapes,
+        // occupancy, and reuse wiring from the descriptors.
+        .kernel(force_descriptor(cfg.eps2))
+        .kernel(ewald_descriptor(ktab.to_vec()));
     for i in 0..npieces {
         let id = ChareId::new(NBODY_COLLECTION, i as u32);
-        rt.register(id, i % pes, Box::new(TreePiece::new(id)));
+        spec = spec.chare(id, i, Box::new(TreePiece::new(id)));
     }
-    rt.start()?;
 
-    let t0 = Instant::now();
-    let mut energies = Vec::with_capacity(cfg.iters);
-    let mut buckets = 0usize;
-    for _ in 0..cfg.iters {
-        let snapshot: Arc<Vec<Particle>> =
-            Arc::new(master.lock().unwrap().clone());
-        let tree = Tree::build(&snapshot);
-        buckets = tree.buckets.len();
-        let assignment = assign_buckets(buckets, npieces);
-        for (i, bucket_ids) in assignment.into_iter().enumerate() {
-            rt.send(
-                ChareId::new(NBODY_COLLECTION, i as u32),
-                Msg::new(
-                    METHOD_START,
-                    StartMsg {
-                        tree: tree.clone(),
-                        snapshot: snapshot.clone(),
-                        master: master.clone(),
-                        buckets: bucket_ids,
-                        force_kind,
-                        ewald_kind,
-                        theta: cfg.theta,
-                        dt: cfg.dt,
-                        do_ewald: cfg.do_ewald,
-                        cpu_only,
-                        eps2: cfg.eps2,
-                        ktab: ktab.clone(),
-                    },
-                ),
-            );
+    let buckets_out = Arc::new(AtomicUsize::new(0));
+    let buckets_probe = buckets_out.clone();
+    let iters = cfg.iters;
+    let theta = cfg.theta;
+    let dt = cfg.dt;
+    let do_ewald = cfg.do_ewald;
+    let eps2 = cfg.eps2;
+    let spec = spec.driver(move |ctx| {
+        let force_kind = ctx.kinds()[0];
+        let ewald_kind = ctx.kinds()[1];
+        let mut energies = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let snapshot: Arc<Vec<Particle>> =
+                Arc::new(master.lock().unwrap().clone());
+            let tree = Tree::build(&snapshot);
+            buckets_probe.store(tree.buckets.len(), Ordering::SeqCst);
+            let assignment = assign_buckets(tree.buckets.len(), npieces);
+            for (i, bucket_ids) in assignment.into_iter().enumerate() {
+                ctx.send(
+                    ChareId::new(NBODY_COLLECTION, i as u32),
+                    Msg::new(
+                        METHOD_START,
+                        StartMsg {
+                            tree: tree.clone(),
+                            snapshot: snapshot.clone(),
+                            master: master.clone(),
+                            buckets: bucket_ids,
+                            force_kind,
+                            ewald_kind,
+                            theta,
+                            dt,
+                            do_ewald,
+                            cpu_only,
+                            eps2,
+                            ktab: ktab.clone(),
+                        },
+                    ),
+                );
+            }
+            energies.push(ctx.await_reduction(npieces as u64)?);
+            ctx.await_quiescence();
+            // positions changed: this job's resident buffers are stale
+            ctx.invalidate_buffers();
         }
-        energies.push(rt.await_reduction(npieces as u64));
-        rt.await_quiescence();
-        // positions changed: device-resident buffers are stale
-        rt.invalidate_device_buffers();
-    }
+        Ok(energies)
+    });
+    (spec, buckets_out)
+}
+
+fn run_inner(cfg: &NbodyConfig, cpu_only: bool) -> Result<NbodyResult> {
+    let (spec, buckets) = job_spec_inner(cfg, "nbody", cpu_only);
+    let rt = Runtime::new(cfg.runtime.clone())?;
+    let t0 = Instant::now();
+    let handle = rt.submit_job(spec)?;
+    let job = handle.wait()?;
     let wall = t0.elapsed().as_secs_f64();
     let mut report = rt.shutdown();
     report.total_wall = wall;
-    Ok(NbodyResult { report, wall, energies, buckets })
+    Ok(NbodyResult {
+        report,
+        wall,
+        energies: job.series,
+        buckets: buckets.load(Ordering::SeqCst),
+    })
 }
 
 /// Run on the G-Charm runtime (GPU path with the configured strategies).

@@ -23,8 +23,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{
-    Chare, ChareId, Config, Ctx, GCharm, KernelDescriptor, KernelKindId,
-    Msg, Report, Tile, WorkDraft, WrResult, METHOD_RESULT,
+    Chare, ChareId, Config, Ctx, JobSpec, KernelDescriptor, KernelKindId,
+    Msg, Report, Runtime, Tile, WorkDraft, WrResult, METHOD_RESULT,
 };
 use crate::runtime::kernel::{TileArgSpec, TileKernel};
 use crate::runtime::KernelResources;
@@ -152,9 +152,12 @@ pub fn generate_matrix(rows: usize, max_nnz: usize, seed: u64) -> Vec<CsrRow> {
         .collect()
 }
 
-/// Driver -> row chare: run one sweep against the snapshot `x`.
+/// Driver -> row chare: run one sweep against the snapshot `x`. Carries
+/// the resolved `spmv_row` kind (assigned by the shared registry at
+/// submission).
 struct SweepMsg {
     x: Arc<Vec<f32>>,
+    kind: KernelKindId,
 }
 
 /// One matrix row as a chare: submits tile requests, folds partial dot
@@ -191,6 +194,7 @@ impl Chare for RowChare {
         match msg.method {
             METHOD_SWEEP => {
                 let m: SweepMsg = msg.take();
+                self.kind = m.kind;
                 self.pending = 0;
                 self.acc = 0.0;
                 self.x_snapshot = m.x[self.id.index as usize];
@@ -235,24 +239,27 @@ impl Chare for RowChare {
     }
 }
 
-/// Run weighted-Jacobi sweeps of `x <- x + omega D^-1 (b - A x)` with
-/// b = 1, x0 = 0 on the G-Charm runtime.
-pub fn run(cfg: &SpmvConfig) -> Result<SpmvResult> {
+/// Build the SpMV workload as a [`JobSpec`]: row chares over the
+/// synthetic matrix, the `spmv_row` family registration, and a driver
+/// pacing `cfg.iters` Jacobi sweeps. The driver's series is the squared
+/// residual per sweep. `master` is the shared iterate `x` (exposed so
+/// tests can compare final vectors bitwise across runtimes).
+pub fn job_spec_with_master(
+    cfg: &SpmvConfig,
+    name: &str,
+    master: Arc<Mutex<Vec<f32>>>,
+) -> JobSpec {
     let matrix = generate_matrix(cfg.rows, cfg.max_row_nnz, cfg.seed);
-    let master = Arc::new(Mutex::new(vec![0.0f32; cfg.rows]));
-
-    let mut rt = GCharm::new(cfg.runtime.clone())?;
-    let kind = rt.register_kernel(spmv_descriptor())?;
-    let pes = rt.config().pes;
-    for (i, row) in matrix.iter().enumerate() {
+    let mut spec = JobSpec::new(name).kernel(spmv_descriptor());
+    for (i, row) in matrix.into_iter().enumerate() {
         let id = ChareId::new(SPMV_COLLECTION, i as u32);
-        rt.register(
+        spec = spec.chare(
             id,
-            i % pes,
+            i,
             Box::new(RowChare {
                 id,
-                kind,
-                row: row.clone(),
+                kind: KernelKindId(0), // real id arrives with each sweep
+                row,
                 b: 1.0,
                 omega: cfg.omega,
                 master: master.clone(),
@@ -262,25 +269,55 @@ pub fn run(cfg: &SpmvConfig) -> Result<SpmvResult> {
             }),
         );
     }
-    rt.start()?;
-
-    let t0 = Instant::now();
-    let mut residuals = Vec::with_capacity(cfg.iters);
-    for _ in 0..cfg.iters {
-        let x: Arc<Vec<f32>> = Arc::new(master.lock().unwrap().clone());
-        for i in 0..cfg.rows {
-            rt.send(
-                ChareId::new(SPMV_COLLECTION, i as u32),
-                Msg::new(METHOD_SWEEP, SweepMsg { x: x.clone() }),
-            );
+    let rows = cfg.rows;
+    let iters = cfg.iters;
+    spec.driver(move |ctx| {
+        let kind = ctx.kinds()[0];
+        let mut residuals = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let x: Arc<Vec<f32>> =
+                Arc::new(master.lock().unwrap().clone());
+            for i in 0..rows {
+                ctx.send(
+                    ChareId::new(SPMV_COLLECTION, i as u32),
+                    Msg::new(
+                        METHOD_SWEEP,
+                        SweepMsg { x: x.clone(), kind },
+                    ),
+                );
+            }
+            residuals.push(ctx.await_reduction(rows as u64)?);
+            ctx.await_quiescence();
         }
-        residuals.push(rt.await_reduction(cfg.rows as u64));
-        rt.await_quiescence();
-    }
+        Ok(residuals)
+    })
+}
+
+/// [`job_spec_with_master`] with a private iterate.
+pub fn job_spec(cfg: &SpmvConfig) -> JobSpec {
+    job_spec_with_master(
+        cfg,
+        "spmv",
+        Arc::new(Mutex::new(vec![0.0f32; cfg.rows])),
+    )
+}
+
+/// Run weighted-Jacobi sweeps of `x <- x + omega D^-1 (b - A x)` with
+/// b = 1, x0 = 0, as a single job on a private runtime.
+pub fn run(cfg: &SpmvConfig) -> Result<SpmvResult> {
+    let rt = Runtime::new(cfg.runtime.clone())?;
+    let t0 = Instant::now();
+    let handle = rt.submit_job(job_spec(cfg))?;
+    let job = handle.wait()?;
     let wall = t0.elapsed().as_secs_f64();
     let mut report = rt.shutdown();
     report.total_wall = wall;
-    Ok(SpmvResult { report, wall, residuals, rows: cfg.rows })
+    Ok(SpmvResult {
+        report,
+        wall,
+        residuals: job.series,
+        rows: cfg.rows,
+    })
 }
 
 /// Reference sweep on plain loops (f64): the physics oracle for tests.

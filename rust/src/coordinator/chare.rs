@@ -9,12 +9,29 @@
 use std::any::Any;
 use std::sync::Arc;
 
-use super::registry::{KernelKindId, KernelRegistry, ShapeError};
+use super::registry::{KernelKindId, SharedRegistry, ShapeError};
 use super::work_request::{Tile, WrResult};
 use crate::runtime::memory::BufferId;
 
+/// Identity of one job on a persistent [`crate::coordinator::Runtime`].
+///
+/// Every routed message, work request, and residency key carries a job
+/// dimension: chare ids are namespaced per job (two jobs may both use
+/// collection 0 index 0), reductions and quiescence are per job, and the
+/// per-job halves of shared combined launches are split back out into
+/// [`crate::coordinator::JobReport`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
 /// Identity of a chare: (collection, index) -- like a Charm++ chare-array
-/// element.
+/// element. Scoped to its job: the runtime routes on `(JobId, ChareId)`,
+/// so concurrent jobs may reuse collection ids freely.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ChareId {
     pub collection: u32,
@@ -35,20 +52,40 @@ pub const METHOD_RESULT: u32 = u32::MAX;
 pub struct Msg {
     pub method: u32,
     pub payload: Box<dyn Any + Send>,
+    /// Type name of the payload, captured at construction so routing bugs
+    /// (e.g. a cross-job misdelivery) report what was actually sent.
+    payload_type: &'static str,
 }
 
 impl Msg {
     pub fn new<T: Any + Send>(method: u32, payload: T) -> Msg {
-        Msg { method, payload: Box::new(payload) }
+        Msg {
+            method,
+            payload: Box::new(payload),
+            payload_type: std::any::type_name::<T>(),
+        }
+    }
+
+    /// Type name of the payload this message carries.
+    pub fn payload_type(&self) -> &'static str {
+        self.payload_type
     }
 
     /// Downcast the payload, panicking with a useful message on mismatch
-    /// (a mismatch is always an app bug).
+    /// (a mismatch is always an app bug). The panic names the method id
+    /// and both the expected and the actual payload type, so a cross-job
+    /// or cross-collection routing bug is debuggable from the message
+    /// alone.
     pub fn take<T: Any>(self) -> T {
-        *self
-            .payload
-            .downcast::<T>()
-            .unwrap_or_else(|_| panic!("message payload type mismatch"))
+        let method = self.method;
+        let actual = self.payload_type;
+        *self.payload.downcast::<T>().unwrap_or_else(|_| {
+            panic!(
+                "Msg::take: payload type mismatch on method {method}: \
+                 expected {}, got {actual}",
+                std::any::type_name::<T>()
+            )
+        })
     }
 }
 
@@ -84,20 +121,29 @@ pub enum Effect {
     Contribute(f64),
 }
 
-/// Execution context handed to entry methods.
+/// Execution context handed to entry methods. Scoped to the delivering
+/// job: sends, work requests, and contributions all stay inside the job
+/// that owns the receiving chare.
 pub struct Ctx {
     pub pe: usize,
-    registry: Arc<KernelRegistry>,
+    /// The job that owns the receiving chare.
+    pub job: JobId,
+    registry: Arc<SharedRegistry>,
     pub(crate) effects: Vec<Effect>,
 }
 
 impl Ctx {
-    pub(crate) fn new(pe: usize, registry: Arc<KernelRegistry>) -> Ctx {
-        Ctx { pe, registry, effects: Vec::new() }
+    pub(crate) fn new(
+        pe: usize,
+        job: JobId,
+        registry: Arc<SharedRegistry>,
+    ) -> Ctx {
+        Ctx { pe, job, registry, effects: Vec::new() }
     }
 
-    /// The frozen kernel registry (shape lookups, name -> kind).
-    pub fn registry(&self) -> &KernelRegistry {
+    /// The shared, append-only kernel registry (shape lookups,
+    /// name -> kind).
+    pub fn registry(&self) -> &SharedRegistry {
         &self.registry
     }
 
@@ -151,7 +197,7 @@ mod tests {
             vec![0.0; KTABLE * KTAB_W],
             [1.0, 0.04, 1.0],
         );
-        Ctx::new(pe, Arc::new(reg))
+        Ctx::new(pe, JobId(0), Arc::new(SharedRegistry::from_registry(reg)))
     }
 
     #[test]
@@ -167,6 +213,26 @@ mod tests {
     fn msg_wrong_type_panics() {
         let m = Msg::new(0, 42u32);
         let _: String = m.take();
+    }
+
+    #[test]
+    fn msg_mismatch_panic_names_method_and_both_types() {
+        let m = Msg::new(7, 42u32);
+        assert_eq!(m.payload_type(), "u32");
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> String { m.take() },
+        ))
+        .expect_err("mismatched take must panic");
+        let text = err
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic payload is a string");
+        assert!(text.contains("method 7"), "missing method id: {text}");
+        assert!(
+            text.contains("expected alloc::string::String"),
+            "missing expected type: {text}"
+        );
+        assert!(text.contains("got u32"), "missing actual type: {text}");
     }
 
     #[test]

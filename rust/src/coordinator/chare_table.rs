@@ -119,6 +119,12 @@ impl ChareTable {
         self.mem.invalidate_all();
     }
 
+    /// Invalidate the resident buffers matching `pred` (one job's slice
+    /// of a multi-tenant pool; co-tenant residency is untouched).
+    pub fn invalidate_where(&mut self, pred: impl Fn(BufferId) -> bool) {
+        self.mem.invalidate_where(pred);
+    }
+
     pub fn hits(&self) -> u64 {
         self.mem.hits()
     }

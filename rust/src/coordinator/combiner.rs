@@ -10,8 +10,9 @@
 //! strategy from the earlier G-Charm paper) flushes whatever is available
 //! after every `period` arrivals.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
+use super::chare::JobId;
 use super::work_request::WorkRequest;
 
 /// Combining policy for one workGroupList.
@@ -73,6 +74,14 @@ pub struct Combiner {
     /// requests behind; drain them on subsequent polls instead of letting
     /// them sit until the next full period (or the idle-drain rescue).
     residual: bool,
+    /// Per-job combine weights for the weighted-fair take (multi-tenant
+    /// runtime). Jobs without an entry weigh 1.0. The coordinator feeds
+    /// these from the hybrid scheduler's measured per-(job, kind)
+    /// items-per-request rates, so a heavy job's oversized requests do
+    /// not crowd lighter jobs out of oversubscribed flushes.
+    job_weights: HashMap<u64, f64>,
+    /// Oversubscribed flushes whose take spanned more than one job.
+    cross_job_takes: u64,
     flushes: Vec<(FlushReason, usize)>,
     probes: u64,
 }
@@ -93,9 +102,29 @@ impl Combiner {
             max_interval: MIN_INTERVAL,
             arrivals_since_flush: 0,
             residual: false,
+            job_weights: HashMap::new(),
+            cross_job_takes: 0,
             flushes: Vec::new(),
             probes: 0,
         }
+    }
+
+    /// Set one job's combine weight (relative to the default 1.0). Zero
+    /// and negative weights are ignored: every job always keeps a share.
+    pub fn set_job_weight(&mut self, job: JobId, weight: f64) {
+        if weight > 0.0 && weight.is_finite() {
+            self.job_weights.insert(job.0, weight);
+        }
+    }
+
+    /// Forget a finished job's weight.
+    pub fn clear_job_weight(&mut self, job: JobId) {
+        self.job_weights.remove(&job.0);
+    }
+
+    /// Oversubscribed takes that interleaved requests of several jobs.
+    pub fn cross_job_takes(&self) -> u64 {
+        self.cross_job_takes
     }
 
     pub fn len(&self) -> usize {
@@ -213,7 +242,7 @@ impl Combiner {
     }
 
     fn take(&mut self, n: usize, reason: FlushReason) -> Batch {
-        let items: Vec<Pending> = self.queue.drain(..n).collect();
+        let items = self.select(n);
         // A steal is not this queue's own flush cycle: the victim's
         // arrival debt (static policy) keeps counting toward its next
         // period flush so the leftovers are not stalled a full period.
@@ -233,6 +262,103 @@ impl Combiner {
         self.flushes.push((reason, items.len()));
         Batch { items, reason }
     }
+
+    /// Drain `n` requests from the queue. A full drain, or a queue
+    /// holding only one job, takes the exact FIFO/slot-sorted prefix as
+    /// before. An *oversubscribed* multi-job flush (requests left behind)
+    /// instead gives each job a weighted-fair quota of the launch —
+    /// largest-remainder on the per-job weights, shortfalls refilled in
+    /// queue order — so one bursty job cannot starve its co-tenants out
+    /// of consecutive launches. Selection is stable: the relative queue
+    /// order (and therefore slot-sorted coalescing order) of the taken
+    /// requests is preserved.
+    fn select(&mut self, n: usize) -> Vec<Pending> {
+        if n >= self.queue.len() {
+            return self.queue.drain(..).collect();
+        }
+        // Distinct jobs present, first-seen order, with their counts.
+        let mut jobs: Vec<(u64, usize)> = Vec::new();
+        for p in &self.queue {
+            let j = p.wr.job.0;
+            match jobs.iter_mut().find(|(id, _)| *id == j) {
+                Some((_, c)) => *c += 1,
+                None => jobs.push((j, 1)),
+            }
+        }
+        if jobs.len() <= 1 {
+            return self.queue.drain(..n).collect();
+        }
+        self.cross_job_takes += 1;
+
+        // Weighted quotas summing exactly to n (largest remainder).
+        let weight = |j: u64| -> f64 {
+            self.job_weights.get(&j).copied().unwrap_or(1.0)
+        };
+        let shares: Vec<f64> = jobs.iter().map(|&(j, _)| weight(j)).collect();
+        let total_w: f64 = shares.iter().sum();
+        let ideal: Vec<f64> =
+            shares.iter().map(|w| n as f64 * w / total_w).collect();
+        let mut quota: Vec<usize> =
+            ideal.iter().map(|x| x.floor() as usize).collect();
+        let mut left = n - quota.iter().sum::<usize>();
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let ra = ideal[a] - quota[a] as f64;
+            let rb = ideal[b] - quota[b] as f64;
+            rb.partial_cmp(&ra).expect("finite remainders")
+        });
+        for &i in &order {
+            if left == 0 {
+                break;
+            }
+            quota[i] += 1;
+            left -= 1;
+        }
+
+        // Stable selection pass: honor quotas, then refill any shortfall
+        // (a job with fewer pending requests than its quota) in queue
+        // order.
+        let mut selected = vec![false; self.queue.len()];
+        let mut taken = 0usize;
+        for (i, p) in self.queue.iter().enumerate() {
+            if taken == n {
+                break;
+            }
+            let ji = jobs
+                .iter()
+                .position(|&(j, _)| j == p.wr.job.0)
+                .expect("job counted above");
+            if quota[ji] > 0 {
+                quota[ji] -= 1;
+                selected[i] = true;
+                taken += 1;
+            }
+        }
+        if taken < n {
+            for s in selected.iter_mut() {
+                if taken == n {
+                    break;
+                }
+                if !*s {
+                    *s = true;
+                    taken += 1;
+                }
+            }
+        }
+
+        let mut items = Vec::with_capacity(n);
+        let mut rest = VecDeque::with_capacity(self.queue.len() - n);
+        for (i, p) in std::mem::take(&mut self.queue).into_iter().enumerate()
+        {
+            if selected[i] {
+                items.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.queue = rest;
+        items
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +371,7 @@ mod tests {
     fn wr(id: u64, arrival: f64) -> WorkRequest {
         WorkRequest {
             id,
+            job: JobId(0),
             chare: ChareId::new(0, id as u32),
             kind: KernelKindId(0),
             buffer: Some(id),
@@ -479,6 +606,83 @@ mod tests {
         let b = c.force_flush().unwrap();
         let slots: Vec<u32> = b.items.iter().map(|p| p.slot.unwrap()).collect();
         assert_eq!(slots, vec![7, 2, 9]);
+    }
+
+    fn pending_job(id: u64, job: u64) -> Pending {
+        let mut p = pending(id, 0.0, None);
+        p.wr.job = JobId(job);
+        p
+    }
+
+    #[test]
+    fn oversubscribed_multi_job_take_is_fair() {
+        // job 0 floods 12 requests, then job 1 adds 4; an 8-slot flush
+        // under equal weights gives each job 4 slots instead of handing
+        // the whole launch to the flood.
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 8, false);
+        for i in 0..12 {
+            c.insert(pending_job(i, 0), 0.0);
+        }
+        for i in 12..16 {
+            c.insert(pending_job(i, 1), 0.0);
+        }
+        let b = c.poll(0.0).expect("full flush");
+        assert_eq!(b.items.len(), 8);
+        let job1 = b.items.iter().filter(|p| p.wr.job == JobId(1)).count();
+        assert_eq!(job1, 4, "job 1 gets its equal share");
+        assert_eq!(c.cross_job_takes(), 1);
+        // stable: job-0 requests keep FIFO order, job-1 likewise
+        let ids0: Vec<u64> = b
+            .items
+            .iter()
+            .filter(|p| p.wr.job == JobId(0))
+            .map(|p| p.wr.id)
+            .collect();
+        assert_eq!(ids0, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn fair_take_respects_learned_weights() {
+        // job 0 measured 3x heavier per request: its weight drops to 1/3,
+        // so an 8-slot flush gives it 2 slots and job 1 six.
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 8, false);
+        c.set_job_weight(JobId(0), 1.0 / 3.0);
+        for i in 0..10 {
+            c.insert(pending_job(i, 0), 0.0);
+        }
+        for i in 10..20 {
+            c.insert(pending_job(i, 1), 0.0);
+        }
+        let b = c.poll(0.0).expect("full flush");
+        let job0 = b.items.iter().filter(|p| p.wr.job == JobId(0)).count();
+        assert_eq!(job0, 2, "heavy job throttled to its weighted share");
+    }
+
+    #[test]
+    fn fair_take_refills_shortfall_from_queue_order() {
+        // job 1 has only 1 request; its unused quota refills FIFO.
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 8, false);
+        for i in 0..11 {
+            c.insert(pending_job(i, 0), 0.0);
+        }
+        c.insert(pending_job(11, 1), 0.0);
+        let b = c.poll(0.0).expect("full flush");
+        assert_eq!(b.items.len(), 8, "shortfall refilled to a full launch");
+        assert!(b.items.iter().any(|p| p.wr.job == JobId(1)));
+    }
+
+    #[test]
+    fn single_job_take_keeps_exact_fifo_prefix() {
+        // the multi-tenant path must not perturb single-job behavior
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        c.set_job_weight(JobId(0), 0.25);
+        for i in 0..6 {
+            c.insert(pending_job(i, 0), 0.0);
+        }
+        let b = c.poll(0.0).unwrap();
+        let ids: Vec<u64> = b.items.iter().map(|p| p.wr.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(c.cross_job_takes(), 0);
     }
 
     #[test]

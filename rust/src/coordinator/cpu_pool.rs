@@ -27,8 +27,9 @@ use anyhow::Result;
 
 use crate::util::timeline::SpanKind;
 
+use super::chare::JobId;
 use super::combiner::Pending;
-use super::registry::KernelRegistry;
+use super::registry::SharedRegistry;
 use super::scheduler::{CoordMsg, Shared};
 use super::work_request::WrResult;
 use super::ChareId;
@@ -41,20 +42,30 @@ enum PoolMsg {
 }
 
 /// Execute a slice of pending work requests with their families' native
-/// slot functions. Returns (total data items, per-request results).
+/// slot functions. Returns (total data items, per-request results tagged
+/// with their owning jobs — a hybrid batch may mix co-tenant jobs).
+///
+/// The registry read guard is held only long enough to clone the batch's
+/// kernel `Arc`s: the actual kernel math (potentially milliseconds) runs
+/// without the lock, so a concurrent `submit_job` registering new
+/// families is never serialized behind a CPU batch.
 pub(crate) fn execute_pending(
-    registry: &KernelRegistry,
+    registry: &SharedRegistry,
     batch: &[Pending],
-) -> (usize, Vec<(ChareId, WrResult)>) {
+) -> (usize, Vec<(JobId, ChareId, WrResult)>) {
+    let kernels: Vec<Arc<crate::runtime::TileKernel>> = {
+        let reg = registry.read();
+        batch.iter().map(|p| reg.kernel(p.wr.kind).clone()).collect()
+    };
     let mut items = 0usize;
     let mut results = Vec::with_capacity(batch.len());
-    for p in batch {
+    for (p, kernel) in batch.iter().zip(&kernels) {
         items += p.wr.data_items;
-        let kernel = registry.kernel(p.wr.kind);
         let slices: Vec<&[f32]> =
             p.wr.payload.bufs.iter().map(Vec::as_slice).collect();
         let out = (kernel.slot_fn)(&slices, &kernel.constant);
         results.push((
+            p.wr.job,
             p.wr.chare,
             WrResult {
                 wr_id: p.wr.id,
@@ -109,7 +120,7 @@ impl CpuPool {
         workers: usize,
         coord: Sender<CoordMsg>,
         shared: Arc<Shared>,
-        registry: Arc<KernelRegistry>,
+        registry: Arc<SharedRegistry>,
     ) -> Result<CpuPool> {
         let workers = workers.max(1);
         let mut txs = Vec::with_capacity(workers);
@@ -167,7 +178,7 @@ fn worker_loop(
     rx: Receiver<PoolMsg>,
     coord: Sender<CoordMsg>,
     shared: Arc<Shared>,
-    registry: Arc<KernelRegistry>,
+    registry: Arc<SharedRegistry>,
 ) {
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -205,14 +216,12 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::registry::{
-        md_descriptor, KernelKindId, KernelRegistry,
-    };
+    use crate::coordinator::registry::{md_descriptor, KernelKindId};
     use crate::coordinator::work_request::{Tile, WorkRequest};
     use crate::runtime::shapes::{MD_PAD_POS, MD_W, PARTS_PER_PATCH};
 
-    fn md_registry() -> Arc<KernelRegistry> {
-        let mut reg = KernelRegistry::new();
+    fn md_registry() -> Arc<SharedRegistry> {
+        let reg = SharedRegistry::new();
         reg.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
         Arc::new(reg)
     }
@@ -227,6 +236,7 @@ mod tests {
         Pending {
             wr: WorkRequest {
                 id,
+                job: JobId(0),
                 chare: ChareId::new(0, id as u32),
                 kind: KernelKindId(0),
                 buffer: None,
@@ -283,8 +293,9 @@ mod tests {
         let (items, results) = execute_pending(&reg, &[md_pending(5, 2)]);
         assert_eq!(items, 2);
         assert_eq!(results.len(), 1);
-        assert_eq!(results[0].1.wr_id, 5);
-        assert!(results[0].1.out[0] < 0.0, "repelled in -x");
+        assert_eq!(results[0].0, JobId(0), "result carries its job");
+        assert_eq!(results[0].2.wr_id, 5);
+        assert!(results[0].2.out[0] < 0.0, "repelled in -x");
     }
 
     #[test]
@@ -320,7 +331,7 @@ mod tests {
         assert_eq!(got_items, 32);
         assert_eq!(got_results.len(), 8);
         // every request computed the same single-pair repulsion
-        for (_, r) in &got_results {
+        for (_, _, r) in &got_results {
             assert!(r.out[0] < 0.0, "repelled in -x");
         }
     }

@@ -10,8 +10,11 @@
 //! the CPU's share. The static baseline splits by request *count* only,
 //! ignoring per-request workloads.
 
+use std::collections::HashMap;
+
 use crate::util::RunningAverage;
 
+use super::chare::JobId;
 use super::combiner::Pending;
 use super::registry::KernelKindId;
 
@@ -42,6 +45,12 @@ pub struct HybridScheduler {
     gpu_per_item: Vec<RunningAverage>,
     /// Per-GPU-device seconds-per-item averages (all kernel kinds).
     device_per_item: Vec<RunningAverage>,
+    /// Per-(job, kind) mean data items per request: the measured
+    /// "heaviness" of one job's requests within a family. Feeds the
+    /// combiners' weighted-fair share on a multi-tenant runtime, so a
+    /// job submitting oversized requests is throttled to an items-fair
+    /// slice of shared launches instead of a requests-fair one.
+    job_items_per_req: HashMap<(u64, usize), RunningAverage>,
     /// Bootstrap split until both devices have at least one sample.
     bootstrap_cpu_share: f64,
 }
@@ -64,7 +73,18 @@ impl HybridScheduler {
             cpu_per_item: vec![RunningAverage::new(); kinds.max(1)],
             gpu_per_item: vec![RunningAverage::new(); kinds.max(1)],
             device_per_item: vec![RunningAverage::new(); devices.max(1)],
+            job_items_per_req: HashMap::new(),
             bootstrap_cpu_share: 0.5,
+        }
+    }
+
+    /// Grow the per-kind models to at least `kinds` entries (the shared
+    /// registry is append-only: jobs may bring new families to a live
+    /// runtime).
+    pub fn ensure_kinds(&mut self, kinds: usize) {
+        while self.cpu_per_item.len() < kinds {
+            self.cpu_per_item.push(RunningAverage::new());
+            self.gpu_per_item.push(RunningAverage::new());
         }
     }
 
@@ -120,6 +140,60 @@ impl HybridScheduler {
     /// Measured seconds-per-item on one device, if observed.
     pub fn device_rate(&self, device: usize) -> Option<f64> {
         self.device_per_item.get(device).and_then(|a| a.mean())
+    }
+
+    /// Record one job's slice of a completed batch of one family:
+    /// `requests` work requests carrying `items` data items. Maintains
+    /// the per-(job, kind) items-per-request running average behind
+    /// [`HybridScheduler::job_weight`].
+    pub fn record_job(
+        &mut self,
+        job: JobId,
+        kind: KernelKindId,
+        requests: usize,
+        items: usize,
+    ) {
+        if requests > 0 {
+            self.job_items_per_req
+                .entry((job.0, kind.0))
+                .or_default()
+                .update(items as f64 / requests as f64);
+        }
+    }
+
+    /// Measured mean data items per request for one (job, kind), if
+    /// observed.
+    pub fn job_rate(&self, job: JobId, kind: KernelKindId) -> Option<f64> {
+        self.job_items_per_req
+            .get(&(job.0, kind.0))
+            .and_then(|a| a.mean())
+    }
+
+    /// Weighted-fair combine weight of one job within one family:
+    /// inverse measured heaviness, normalized by the family's mean across
+    /// jobs, so equal weights share launch *items* rather than request
+    /// slots and one heavy job cannot starve its co-tenants. 1.0 until
+    /// the job (or the family) has observations.
+    pub fn job_weight(&self, job: JobId, kind: KernelKindId) -> f64 {
+        let Some(mine) = self.job_rate(job, kind) else {
+            return 1.0;
+        };
+        let rates: Vec<f64> = self
+            .job_items_per_req
+            .iter()
+            .filter(|((_, k), _)| *k == kind.0)
+            .filter_map(|(_, a)| a.mean())
+            .collect();
+        if rates.is_empty() || mine <= 0.0 {
+            return 1.0;
+        }
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        (mean / mine).clamp(0.05, 20.0)
+    }
+
+    /// Drop a finished job's rate models.
+    pub fn forget_job(&mut self, job: JobId) {
+        self.job_items_per_req.retain(|&(j, _), _| j != job.0);
     }
 
     /// Per-device work shares from the measured rates: share_d is
@@ -220,6 +294,7 @@ mod tests {
         Pending {
             wr: WorkRequest {
                 id,
+                job: JobId(0),
                 chare: ChareId::new(0, id as u32),
                 kind: K0,
                 buffer: None,
@@ -356,6 +431,35 @@ mod tests {
         let h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
         let (cpu, gpu) = h.split(K0, Vec::new());
         assert!(cpu.is_empty() && gpu.is_empty());
+    }
+
+    #[test]
+    fn job_weights_throttle_heavy_jobs() {
+        let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
+        assert_eq!(h.job_weight(JobId(1), K0), 1.0, "unmeasured job");
+        // job 1's requests carry 3x the items of job 2's
+        h.record_job(JobId(1), K0, 10, 300);
+        h.record_job(JobId(2), K0, 10, 100);
+        let w1 = h.job_weight(JobId(1), K0);
+        let w2 = h.job_weight(JobId(2), K0);
+        assert!(w1 < w2, "heavy job weighs less: {w1} vs {w2}");
+        assert!((w1 * 3.0 - w2).abs() < 1e-9, "inverse-rate weighting");
+        h.forget_job(JobId(1));
+        assert_eq!(h.job_weight(JobId(1), K0), 1.0);
+    }
+
+    #[test]
+    fn ensure_kinds_grows_models() {
+        let mut h = HybridScheduler::with_kinds(SplitPolicy::AdaptiveItems, 1, 1);
+        assert_eq!(h.kinds(), 1);
+        h.ensure_kinds(3);
+        assert_eq!(h.kinds(), 3);
+        let k2 = KernelKindId(2);
+        h.record_cpu(k2, 10, 0.01);
+        h.record_gpu(k2, 10, 0.01);
+        assert!((h.cpu_share(k2) - 0.5).abs() < 1e-9);
+        h.ensure_kinds(2); // never shrinks
+        assert_eq!(h.kinds(), 3);
     }
 
     #[test]

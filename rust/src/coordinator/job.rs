@@ -1,0 +1,826 @@
+//! Jobs, not runs: the persistent multi-tenant runtime API.
+//!
+//! A [`Runtime`] owns the device pool, the append-only kernel registry,
+//! the hybrid scheduler, and the PE worker threads for its whole
+//! lifetime. Applications submit [`JobSpec`]s — a chare set, the kernel
+//! families the job needs, and a *driver* closure that paces the job
+//! (sends, per-job reductions, per-job quiescence) and decides when it is
+//! complete by returning — and get back a [`JobHandle`] with blocking
+//! `wait`, non-blocking `poll`, `cancel`, and a live `metrics_snapshot`.
+//!
+//! Concurrent jobs genuinely share the machinery: identical kernel
+//! registrations resolve to one shared kind id, so the combiners may
+//! merge tiles from *different* jobs into one launch (cross-job
+//! combining, `PoolReport::cross_job_launches`), with accounting split
+//! back out per job on completion and a weighted-fair share keeping a
+//! heavy job from starving its co-tenants. Per-job state — reductions,
+//! quiescence counters, residency keys, routing affinity, rate models —
+//! is namespaced by [`JobId`] and torn down when the job's report seals.
+//!
+//! The pre-redesign one-shot API survives as [`GCharm`]: one
+//! interactively driven job on a private runtime.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::executor::Completion;
+use crate::runtime::kernel::TileKernel;
+use crate::runtime::Manifest;
+
+use super::chare::{Chare, ChareId, JobId, Msg};
+use super::metrics::{JobMetricsSnapshot, JobReport, PoolReport};
+use super::registry::{
+    KernelDescriptor, KernelKindId, KernelRegistry, SharedRegistry,
+};
+use super::scheduler::{
+    pe_loop, CoordMsg, JobState, JobStatus, PeMsg, Router, Shared,
+};
+use super::{Config, Coord};
+
+/// The driver of one job: paces the job through its [`JobCtx`] and
+/// returns the job's reduction series (energies, residuals, ...) when the
+/// completion condition is met. Returning is what completes the job.
+pub type JobDriver =
+    Box<dyn FnOnce(&mut JobCtx) -> Result<Vec<f64>> + Send + 'static>;
+
+/// Everything one job brings to a [`Runtime`]: a name, the kernel
+/// families it needs (resolved against the shared append-only registry —
+/// identical registrations from concurrent jobs share one kind id), its
+/// chare set, and the driver closure that paces it to completion.
+pub struct JobSpec {
+    name: String,
+    kernels: Vec<KernelDescriptor>,
+    chares: Vec<(ChareId, usize, Box<dyn Chare>)>,
+    driver: Option<JobDriver>,
+}
+
+impl JobSpec {
+    pub fn new(name: impl Into<String>) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            kernels: Vec::new(),
+            chares: Vec::new(),
+            driver: None,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Add a kernel-family registration. Resolved ids arrive in the
+    /// driver as [`JobCtx::kinds`], in this call order.
+    pub fn kernel(mut self, desc: KernelDescriptor) -> JobSpec {
+        self.kernels.push(desc);
+        self
+    }
+
+    /// Place a chare on PE `pe % pes`.
+    pub fn chare(
+        mut self,
+        id: ChareId,
+        pe: usize,
+        chare: Box<dyn Chare>,
+    ) -> JobSpec {
+        self.chares.push((id, pe, chare));
+        self
+    }
+
+    /// Set the driver: the job's completion condition is the driver
+    /// returning (its `Vec<f64>` becomes `JobReport::series`).
+    pub fn driver<F>(mut self, f: F) -> JobSpec
+    where
+        F: FnOnce(&mut JobCtx) -> Result<Vec<f64>> + Send + 'static,
+    {
+        self.driver = Some(Box::new(f));
+        self
+    }
+}
+
+/// Shared innards of a [`Runtime`]; job drivers keep it alive through
+/// their [`JobCtx`] until their reports seal.
+struct RuntimeCore {
+    cfg: Config,
+    router: Router,
+    next_job: AtomicU64,
+    /// Ids of sealed jobs, reusable by later submissions. Residency
+    /// keys namespace jobs in 16 bits ([`super::job_key`]), so a
+    /// persistent runtime recycles ids instead of growing without
+    /// bound: the limit is 65536 *concurrent* jobs, not total. A sealed
+    /// job's id only re-enters this pool after its `JobEnded` teardown
+    /// was queued to the coordinator, so a successor reusing the id can
+    /// never race the predecessor's cleanup.
+    free_ids: Mutex<Vec<u64>>,
+    /// Jobs submitted (or begun) whose reports have not sealed yet.
+    active_jobs: AtomicI64,
+    /// Sealed job reports, completion order; drained into
+    /// `PoolReport::jobs` at shutdown.
+    finished: Mutex<Vec<JobReport>>,
+}
+
+/// A persistent, multi-tenant G-Charm runtime.
+///
+/// Owns the sharded GPU pool, the PE worker threads, the coordinator,
+/// and the shared kernel registry for its whole lifetime; serves any
+/// number of concurrent [`JobSpec`]s submitted through
+/// [`Runtime::submit_job`]. See the module docs for the tenancy model.
+pub struct Runtime {
+    core: Arc<RuntimeCore>,
+    pe_handles: Vec<JoinHandle<()>>,
+    coord_handle: JoinHandle<PoolReport>,
+    forwarder: JoinHandle<()>,
+}
+
+impl Runtime {
+    /// Spawn the runtime over a validated configuration (see
+    /// [`Config::validate`] for what is rejected): PE threads, the
+    /// coordinator, and the device pool all start here and live until
+    /// [`Runtime::shutdown`].
+    pub fn new(cfg: Config) -> Result<Runtime> {
+        cfg.validate()?;
+        let cfg = Config { pes: cfg.pes.max(1), ..cfg };
+        let shared = Shared::new();
+        let registry = Arc::new(SharedRegistry::new());
+        let (coord_tx, coord_rx) = channel::<CoordMsg>();
+        let mut pe_txs = Vec::new();
+        let mut pe_rxs = Vec::new();
+        for _ in 0..cfg.pes {
+            let (tx, rx) = channel::<PeMsg>();
+            pe_txs.push(tx);
+            pe_rxs.push(rx);
+        }
+        let router = Router {
+            pes: pe_txs,
+            coord: coord_tx.clone(),
+            placement: Arc::new(RwLock::new(HashMap::new())),
+            shared: shared.clone(),
+            registry,
+        };
+
+        // GPU completion forwarder: DevicePool -> coordinator queue.
+        let (done_tx, done_rx) = channel::<Result<Completion>>();
+        let fwd_coord = coord_tx.clone();
+        let forwarder = std::thread::Builder::new()
+            .name("gpu-forwarder".into())
+            .spawn(move || {
+                while let Ok(c) = done_rx.recv() {
+                    if fwd_coord.send(CoordMsg::GpuDone(c)).is_err() {
+                        break;
+                    }
+                }
+            })?;
+
+        let coord = Coord::new(cfg.clone(), router.clone(), done_tx)
+            .context("starting coordinator")?;
+        let coord_handle = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || coord.run(coord_rx))?;
+
+        let mut pe_handles = Vec::new();
+        for (pe, rx) in pe_rxs.into_iter().enumerate() {
+            let r = router.clone();
+            pe_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pe-{pe}"))
+                    .spawn(move || pe_loop(pe, rx, r))?,
+            );
+        }
+
+        Ok(Runtime {
+            core: Arc::new(RuntimeCore {
+                cfg,
+                router,
+                next_job: AtomicU64::new(0),
+                free_ids: Mutex::new(Vec::new()),
+                active_jobs: AtomicI64::new(0),
+                finished: Mutex::new(Vec::new()),
+            }),
+            pe_handles,
+            coord_handle,
+            forwarder,
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.core.cfg
+    }
+
+    /// Timeline seconds since the runtime spawned.
+    pub fn now(&self) -> f64 {
+        self.core.router.shared.timeline.now()
+    }
+
+    /// The runtime's shared state (timeline, live-job table).
+    pub fn shared(&self) -> Arc<Shared> {
+        self.core.router.shared.clone()
+    }
+
+    /// Submit a job: registers its kernels against the shared registry
+    /// (identical registrations resolve to existing kinds — the hook for
+    /// cross-job combining), places its chares on the live PE set, and
+    /// spawns its driver on a dedicated thread. Returns immediately with
+    /// the job's handle.
+    pub fn submit_job(&self, spec: JobSpec) -> Result<JobHandle> {
+        let JobSpec { name, kernels, chares, driver } = spec;
+        let driver = driver.ok_or_else(|| {
+            anyhow::anyhow!(
+                "job {name}: a JobSpec needs a driver (its completion \
+                 condition); see JobSpec::driver"
+            )
+        })?;
+        let ctx = self.begin_job_inner(name.clone(), kernels, chares)?;
+        let job = ctx.job();
+        let state = ctx.state.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("job-{}-{name}", job.0))
+            .spawn(move || {
+                let mut ctx = ctx;
+                match driver(&mut ctx) {
+                    Ok(series) => Ok(ctx.seal(series, JobStatus::Done)),
+                    Err(_) if ctx.cancelled() => {
+                        Ok(ctx.seal(Vec::new(), JobStatus::Cancelled))
+                    }
+                    Err(e) => {
+                        ctx.seal(Vec::new(), JobStatus::Failed);
+                        Err(e)
+                    }
+                }
+            })?;
+        Ok(JobHandle { job, name, state, handle: Some(handle) })
+    }
+
+    /// Begin an *interactively driven* job: same registration and
+    /// placement as [`Runtime::submit_job`], but the caller holds the
+    /// [`JobCtx`] and paces the job from its own thread (the [`GCharm`]
+    /// compatibility shim). Finish with [`Runtime::end_job`].
+    pub fn begin_job(
+        &self,
+        name: impl Into<String>,
+        kernels: Vec<KernelDescriptor>,
+        chares: Vec<(ChareId, usize, Box<dyn Chare>)>,
+    ) -> Result<JobCtx> {
+        self.begin_job_inner(name.into(), kernels, chares)
+    }
+
+    /// Seal an interactively driven job begun with
+    /// [`Runtime::begin_job`]: drains the job, seals its report with
+    /// `series`, and tears its state down.
+    pub fn end_job(&self, ctx: JobCtx, series: Vec<f64>) -> JobReport {
+        ctx.seal(series, JobStatus::Done)
+    }
+
+    fn begin_job_inner(
+        &self,
+        name: String,
+        kernels: Vec<KernelDescriptor>,
+        chares: Vec<(ChareId, usize, Box<dyn Chare>)>,
+    ) -> Result<JobCtx> {
+        let core = &self.core;
+        // Recycle a sealed job's id, or mint a fresh one. Ids must fit
+        // the 16-bit residency-key namespace (`super::job_key`); with
+        // recycling that caps *concurrent* jobs, which a real config can
+        // never approach, but fail loudly rather than alias tenants.
+        let job = {
+            let mut free = core.free_ids.lock().unwrap();
+            match free.pop() {
+                Some(id) => JobId(id),
+                None => JobId(core.next_job.fetch_add(1, Ordering::SeqCst)),
+            }
+        };
+        anyhow::ensure!(
+            job.0 < 1 << 16,
+            "job {name}: {} jobs already live on this runtime (the \
+             residency-key namespace holds 65536 concurrent jobs)",
+            job.0
+        );
+
+        // Resolve kernels against the shared append-only registry;
+        // genuinely new families are validated against the artifact set
+        // and taught to the live coordinator + device pool, ordered
+        // ahead of any submission of theirs. Validation runs *before*
+        // the registry mutates, so a rejected spec leaves the runtime
+        // exactly as it was.
+        let maybe_new: Vec<Arc<TileKernel>> = kernels
+            .iter()
+            .filter(|d| core.router.registry.find(&d.kernel.name).is_none())
+            .map(|d| d.kernel.clone())
+            .collect();
+        if !maybe_new.is_empty() {
+            Manifest::for_kernels(&core.cfg.artifacts, &maybe_new)
+                .with_context(|| {
+                    format!("job {name}: validating kernel artifacts")
+                })?;
+        }
+        let mut kinds = Vec::with_capacity(kernels.len());
+        let mut added: Vec<KernelDescriptor> = Vec::new();
+        let mut reg_err = None;
+        for desc in kernels {
+            // `newly` is decided atomically inside the registry's write
+            // lock: under concurrent submit_jobs of the same family,
+            // exactly one registrant teaches the coordinator about it.
+            match core.router.registry.register(desc.clone()) {
+                Ok((id, newly)) => {
+                    if newly {
+                        added.push(desc);
+                    }
+                    kinds.push(id);
+                }
+                Err(e) => {
+                    reg_err = Some(e);
+                    break;
+                }
+            }
+        }
+        // Families appended before a failure stay registered (the
+        // registry is append-only), so the coordinator must learn them
+        // either way to stay in sync with the registry.
+        if !added.is_empty() {
+            core.router
+                .coord
+                .send(CoordMsg::KindsAdded(added))
+                .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        }
+        if let Some(e) = reg_err {
+            return Err(e.context(format!("job {name}: registering kernels")));
+        }
+
+        // Place the chare set on the live PEs. Duplicates are rejected
+        // before anything touches shared state.
+        let pes = core.cfg.pes;
+        let mut per_pe: Vec<Vec<(ChareId, Box<dyn Chare>)>> =
+            (0..pes).map(|_| Vec::new()).collect();
+        let mut seen = HashSet::new();
+        for (id, pe, chare) in chares {
+            anyhow::ensure!(
+                seen.insert(id),
+                "job {name}: chare {id:?} registered twice"
+            );
+            per_pe[pe % pes].push((id, chare));
+        }
+        {
+            let mut placement =
+                core.router.placement.write().expect("placement poisoned");
+            for (pe, batch) in per_pe.iter().enumerate() {
+                for (id, _) in batch {
+                    placement.insert((job, *id), pe);
+                }
+            }
+        }
+        for (pe, batch) in per_pe.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            core.router.pes[pe]
+                .send(PeMsg::AddChares { job, chares: batch })
+                .map_err(|_| anyhow::anyhow!("pe {pe} is down"))?;
+        }
+
+        let state = core.router.shared.add_job(job);
+        core.active_jobs.fetch_add(1, Ordering::SeqCst);
+        Ok(JobCtx {
+            core: core.clone(),
+            job,
+            name,
+            state,
+            kinds,
+            started: Instant::now(),
+            sealed: false,
+        })
+    }
+
+    /// Live snapshot of the pool-wide report (counters up to now; the
+    /// per-job `jobs` list stays empty until shutdown).
+    pub fn pool_snapshot(&self) -> Result<PoolReport> {
+        let (tx, rx) = channel();
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::Snapshot(tx))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        rx.recv_timeout(Duration::from_secs(30))
+            .context("coordinator snapshot timed out")
+    }
+
+    /// Stop the runtime and return the pool-wide report with every
+    /// sealed [`JobReport`] attached. Blocks until running jobs finish
+    /// (use `JobHandle::cancel` first for an early stop).
+    pub fn shutdown(self) -> PoolReport {
+        while self.core.active_jobs.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        self.core.router.coord.send(CoordMsg::Stop).ok();
+        let mut report =
+            self.coord_handle.join().expect("coordinator panicked");
+        for tx in &self.core.router.pes {
+            tx.send(PeMsg::Stop).ok();
+        }
+        for h in self.pe_handles {
+            h.join().expect("pe panicked");
+        }
+        report.jobs =
+            std::mem::take(&mut *self.core.finished.lock().unwrap());
+        // The forwarder ends once the pool (owned by the coordinator)
+        // drops its completion senders.
+        self.forwarder.join().ok();
+        report
+    }
+}
+
+/// A submitted job's handle: blocking [`JobHandle::wait`], non-blocking
+/// [`JobHandle::poll`], [`JobHandle::cancel`], and a live
+/// [`JobHandle::metrics_snapshot`] that works while the job runs and
+/// after it finishes.
+pub struct JobHandle {
+    job: JobId,
+    name: String,
+    state: Arc<JobState>,
+    handle: Option<JoinHandle<Result<JobReport>>>,
+}
+
+impl JobHandle {
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Block until the job completes and return its sealed report.
+    /// A cancelled job returns `Ok` with an empty series; a failed
+    /// driver propagates its error.
+    pub fn wait(mut self) -> Result<JobReport> {
+        let handle = self.handle.take().expect("wait called once");
+        handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("job {} panicked", self.job))?
+    }
+
+    /// Non-blocking status probe.
+    pub fn poll(&self) -> JobStatus {
+        self.state.status()
+    }
+
+    /// Request cancellation: wakes a driver blocked in
+    /// `JobCtx::await_reduction`; in-flight work drains before the job
+    /// seals (no work is abandoned mid-launch).
+    pub fn cancel(&self) {
+        self.state.cancel();
+    }
+
+    /// Point-in-time copy of the job's live counters.
+    pub fn metrics_snapshot(&self) -> JobMetricsSnapshot {
+        self.state.metrics_snapshot()
+    }
+}
+
+/// The driver-side face of one job: job-scoped sends, reductions,
+/// quiescence, buffer invalidation, and the resolved kernel kinds.
+pub struct JobCtx {
+    core: Arc<RuntimeCore>,
+    job: JobId,
+    name: String,
+    state: Arc<JobState>,
+    kinds: Vec<KernelKindId>,
+    started: Instant,
+    /// Set by `seal`. A `JobCtx` dropped unsealed (a panicking driver,
+    /// or a failed driver-thread spawn) tears the job down as `Failed`
+    /// from `Drop`, so `Runtime::shutdown` never waits on a job that
+    /// can no longer finish.
+    sealed: bool,
+}
+
+impl JobCtx {
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Resolved kind ids of the spec's kernel registrations, in
+    /// registration order.
+    pub fn kinds(&self) -> &[KernelKindId] {
+        &self.kinds
+    }
+
+    /// Kind id of a registered family by name (any family on the shared
+    /// registry, not just this job's).
+    pub fn kind(&self, name: &str) -> Option<KernelKindId> {
+        self.core.router.registry.find(name)
+    }
+
+    /// Driver-side message send to one of this job's chares.
+    pub fn send(&self, to: ChareId, msg: Msg) {
+        self.core.router.send_msg(self.job, to, msg);
+    }
+
+    /// Timeline seconds since the runtime spawned.
+    pub fn now(&self) -> f64 {
+        self.core.router.shared.timeline.now()
+    }
+
+    /// Has `JobHandle::cancel` been requested?
+    pub fn cancelled(&self) -> bool {
+        self.state.cancelled()
+    }
+
+    /// Live counters of this job.
+    pub fn metrics_snapshot(&self) -> JobMetricsSnapshot {
+        self.state.metrics_snapshot()
+    }
+
+    /// Block until `n` contributions from this job's chares have
+    /// arrived; returns their sum and resets the reduction. Errors when
+    /// the job is cancelled while waiting.
+    pub fn await_reduction(&self, n: u64) -> Result<f64> {
+        let state = &self.state;
+        let mut guard = state.reduction.lock().unwrap();
+        loop {
+            anyhow::ensure!(
+                !state.cancelled(),
+                "job {} ({}) cancelled",
+                self.job,
+                self.name
+            );
+            if guard.count >= n {
+                break;
+            }
+            guard = state.reduction_cv.wait(guard).unwrap();
+        }
+        let sum = guard.sum;
+        guard.count = 0;
+        guard.sum = 0.0;
+        Ok(sum)
+    }
+
+    /// Block until this job is quiescent: none of *its* messages queued,
+    /// none of *its* work requests pending or in flight. Co-tenant
+    /// activity is irrelevant.
+    pub fn await_quiescence(&self) {
+        while self.state.outstanding() != 0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+
+    /// Invalidate this job's device-resident buffers. Call only at the
+    /// job's quiescence (iteration boundary): pinned slots back in-flight
+    /// launches. Co-tenant residency is untouched.
+    pub fn invalidate_buffers(&self) {
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::InvalidateJob(self.job))
+            .expect("coordinator is down");
+    }
+
+    /// Drain the job, seal its report, and tear its state down.
+    fn seal(mut self, series: Vec<f64>, status: JobStatus) -> JobReport {
+        let report = self.drain_and_teardown(series, status);
+        self.sealed = true;
+        report
+    }
+
+    /// The shared seal/abort path: wait for the job's in-flight work,
+    /// build the report from the live counters, and tear the job's
+    /// state out of the runtime. Used by `seal` and the unsealed-drop
+    /// guard.
+    fn drain_and_teardown(
+        &self,
+        series: Vec<f64>,
+        status: JobStatus,
+    ) -> JobReport {
+        self.await_quiescence();
+        let snap = self.state.metrics_snapshot();
+        let report = JobReport {
+            job: self.job,
+            name: self.name.clone(),
+            launches: snap.launches,
+            cross_job_launches: snap.cross_job_launches,
+            gpu_requests: snap.gpu_requests,
+            cpu_requests: snap.cpu_requests,
+            gpu_items: snap.gpu_items,
+            cpu_items: snap.cpu_items,
+            transfer_bytes: snap.transfer_bytes,
+            wall: self.started.elapsed().as_secs_f64(),
+            series,
+        };
+        // Teardown: chares off the PEs, placement entries, coordinator
+        // residency/rate models, the live-job entry.
+        for tx in &self.core.router.pes {
+            tx.send(PeMsg::RemoveJob(self.job)).ok();
+        }
+        self.core
+            .router
+            .placement
+            .write()
+            .expect("placement poisoned")
+            .retain(|(j, _), _| *j != self.job);
+        self.core.router.coord.send(CoordMsg::JobEnded(self.job)).ok();
+        self.core.router.shared.remove_job(self.job);
+        self.state.set_status(status);
+        self.core.finished.lock().unwrap().push(report.clone());
+        self.core.active_jobs.fetch_sub(1, Ordering::SeqCst);
+        // Only now — after JobEnded is queued — may a successor reuse
+        // the id (see RuntimeCore::free_ids).
+        self.core.free_ids.lock().unwrap().push(self.job.0);
+        report
+    }
+}
+
+impl Drop for JobCtx {
+    fn drop(&mut self) {
+        if self.sealed {
+            return;
+        }
+        // The driver panicked (or its thread never spawned): drain the
+        // job's in-flight work and seal it as Failed so the runtime's
+        // shutdown does not wait forever on a job that cannot finish.
+        self.drain_and_teardown(Vec::new(), JobStatus::Failed);
+    }
+}
+
+/// The pre-redesign one-shot API, preserved as a compatibility shim: a
+/// `GCharm` is one interactively driven job on a private [`Runtime`].
+/// `register_kernel`/`register` buffer the job's spec before `start`
+/// spawns the runtime and begins the job; `shutdown` seals the job and
+/// returns the pool report (whose aggregate fields match the old
+/// single-run `Report` exactly).
+pub struct GCharm {
+    cfg: Config,
+    kernels: KernelRegistry,
+    chares: Vec<(ChareId, usize, Box<dyn Chare>)>,
+    registered: HashSet<ChareId>,
+    running: Option<(Runtime, JobCtx)>,
+}
+
+impl GCharm {
+    /// Build a runtime over a validated configuration (see
+    /// [`Config::validate`] for what is rejected).
+    pub fn new(cfg: Config) -> Result<GCharm> {
+        cfg.validate()?;
+        let pes = cfg.pes.max(1);
+        Ok(GCharm {
+            cfg: Config { pes, ..cfg },
+            kernels: KernelRegistry::new(),
+            chares: Vec::new(),
+            registered: HashSet::new(),
+            running: None,
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Register a kernel family (must happen before `start`). Returns the
+    /// kind id work drafts are tagged with. The paper's built-in families
+    /// are available as [`super::force_descriptor`],
+    /// [`super::ewald_descriptor`], and [`super::md_descriptor`]; new
+    /// workloads register their own descriptors through this same call —
+    /// see PERF.md, "Adding a workload".
+    pub fn register_kernel(
+        &mut self,
+        desc: KernelDescriptor,
+    ) -> Result<KernelKindId> {
+        anyhow::ensure!(
+            self.running.is_none(),
+            "register kernels before start"
+        );
+        // Ids match the shared registry `start` will seed in the same
+        // order (the private runtime starts empty).
+        self.kernels.register(desc)
+    }
+
+    /// The registered kernel families so far.
+    pub fn kernel_registry(&self) -> &KernelRegistry {
+        &self.kernels
+    }
+
+    /// Register a chare on a PE (must happen before `start`).
+    pub fn register(&mut self, id: ChareId, pe: usize, chare: Box<dyn Chare>) {
+        assert!(self.running.is_none(), "register before start");
+        assert!(
+            self.registered.insert(id),
+            "chare {id:?} registered twice"
+        );
+        self.chares.push((id, pe % self.cfg.pes, chare));
+    }
+
+    /// Spawn the private runtime and begin the single job.
+    pub fn start(&mut self) -> Result<()> {
+        anyhow::ensure!(self.running.is_none(), "already started");
+        let rt = Runtime::new(self.cfg.clone())?;
+        let descs: Vec<KernelDescriptor> =
+            self.kernels.descriptors().to_vec();
+        let chares = std::mem::take(&mut self.chares);
+        let ctx = rt.begin_job("gcharm", descs, chares)?;
+        self.running = Some((rt, ctx));
+        Ok(())
+    }
+
+    fn running(&self) -> &(Runtime, JobCtx) {
+        self.running.as_ref().expect("runtime not started")
+    }
+
+    /// Driver-side message send.
+    pub fn send(&self, to: ChareId, msg: Msg) {
+        self.running().1.send(to, msg);
+    }
+
+    /// Timeline seconds since start.
+    pub fn now(&self) -> f64 {
+        self.running().0.now()
+    }
+
+    pub fn shared(&self) -> Arc<Shared> {
+        self.running().0.shared()
+    }
+
+    /// Block until the job is quiescent: no queued messages, no pending
+    /// or in-flight work requests.
+    pub fn await_quiescence(&self) {
+        self.running().1.await_quiescence();
+    }
+
+    /// Block until `n` contributions have arrived; returns their sum and
+    /// resets the reduction.
+    pub fn await_reduction(&self, n: u64) -> f64 {
+        self.running()
+            .1
+            .await_reduction(n)
+            .expect("gcharm job cancelled")
+    }
+
+    /// Invalidate all device-resident buffers. Call only at quiescence
+    /// (iteration boundary): pinned slots back in-flight launches.
+    pub fn invalidate_device_buffers(&self) {
+        self.running().1.invalidate_buffers();
+    }
+
+    /// Stop all threads and return the run report.
+    pub fn shutdown(mut self) -> PoolReport {
+        let (rt, ctx) = self.running.take().expect("runtime not started");
+        rt.end_job(ctx, Vec::new());
+        rt.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_builder_collects() {
+        let spec = JobSpec::new("t")
+            .kernel(super::super::registry::md_descriptor([1.0, 0.04, 1.0]))
+            .driver(|_ctx| Ok(vec![1.0]));
+        assert_eq!(spec.name(), "t");
+        assert_eq!(spec.kernels.len(), 1);
+        assert!(spec.driver.is_some());
+    }
+
+    #[test]
+    fn submit_without_driver_is_a_named_error() {
+        let rt = Runtime::new(Config {
+            pes: 1,
+            ..Config::default()
+        })
+        .unwrap();
+        let err = rt.submit_job(JobSpec::new("nodriver")).unwrap_err();
+        assert!(err.to_string().contains("nodriver"), "{err}");
+        assert!(err.to_string().contains("driver"), "{err}");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn config_validate_errors_name_fields() {
+        let bad = Config { devices: 0, ..Config::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("devices"), "{e}");
+        let bad = Config { steal_low: 9, steal_high: 3, ..Config::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("steal_low") && e.contains("steal_high"), "{e}");
+        let bad = Config { cpu_workers: 0, ..Config::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("cpu_workers"), "{e}");
+    }
+
+    #[test]
+    fn runtime_spawns_and_shuts_down_with_no_jobs() {
+        let rt = Runtime::new(Config { pes: 2, ..Config::default() })
+            .unwrap();
+        let snap = rt.pool_snapshot().unwrap();
+        assert_eq!(snap.launches, 0);
+        let report = rt.shutdown();
+        assert_eq!(report.launches, 0);
+        assert!(report.jobs.is_empty());
+    }
+}

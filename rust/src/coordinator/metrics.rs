@@ -5,7 +5,16 @@
 //! and the CPU/GPU split of hybrid executions (Fig 5). Both measured wall
 //! clock (CPU PJRT executor) and modeled-K20 times are kept side by side
 //! (DESIGN.md section 2).
+//!
+//! Multi-tenant split: the runtime-wide [`PoolReport`] aggregates across
+//! every job a persistent `Runtime` served (plus pool-level quantities
+//! like steals and cross-job combined launches), while each job gets its
+//! own [`JobReport`] whose request/item/byte counters sum back to the
+//! pool totals (shared launches are attributed per request, bytes per
+//! item charge). `Report` remains an alias of `PoolReport` for the
+//! single-job `GCharm` shim and existing callers.
 
+use super::chare::JobId;
 use super::combiner::FlushReason;
 
 /// Per-device breakdown of the sharded GPU pool.
@@ -79,9 +88,94 @@ impl DeviceStats {
     }
 }
 
-/// Aggregated statistics of one run.
+/// Point-in-time copy of one job's live counters
+/// (`JobHandle::metrics_snapshot`): what the job has consumed so far and
+/// how much of it is still in flight.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobMetricsSnapshot {
+    /// Combined launches this job's requests rode in so far.
+    pub launches: u64,
+    /// Of those, launches shared with at least one other job.
+    pub cross_job_launches: u64,
+    pub gpu_requests: u64,
+    pub cpu_requests: u64,
+    pub gpu_items: u64,
+    pub cpu_items: u64,
+    /// PCIe bytes attributed to this job's requests.
+    pub transfer_bytes: u64,
+    /// Requests submitted but not yet completed.
+    pub queued_requests: i64,
+    /// In-flight units (messages + work requests) of the job.
+    pub outstanding: i64,
+}
+
+/// Final per-job report, sealed when the job's driver returns and its
+/// last in-flight work drains.
 #[derive(Debug, Clone, Default)]
-pub struct Report {
+pub struct JobReport {
+    pub job: JobId,
+    /// The name the `JobSpec` was submitted under.
+    pub name: String,
+    /// Combined launches this job's requests rode in. A launch shared by
+    /// k jobs appears in each of their reports, so these do **not** sum
+    /// to `PoolReport::launches` when cross-job combining fired; the
+    /// request/item/byte counters below always do.
+    pub launches: u64,
+    /// Launches shared with at least one co-tenant job.
+    pub cross_job_launches: u64,
+    pub gpu_requests: u64,
+    pub cpu_requests: u64,
+    pub gpu_items: u64,
+    pub cpu_items: u64,
+    /// PCIe bytes attributed to this job's requests (exact per-item
+    /// attribution: summing over jobs reproduces the pool total).
+    pub transfer_bytes: u64,
+    /// Wall seconds from submission to the sealed report.
+    pub wall: f64,
+    /// The per-iteration reduction series the job's driver returned
+    /// (energies, residuals, ...). Empty if the driver failed or was
+    /// cancelled.
+    pub series: Vec<f64>,
+}
+
+impl JobReport {
+    /// Fraction of this job's launches that were cross-job combined.
+    pub fn cross_job_share(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.cross_job_launches as f64 / self.launches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for JobReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({}): {} launches ({} cross-job); reqs gpu {} / cpu {}; \
+             items gpu {} / cpu {}; {:.2} MiB transferred; {:.4}s wall",
+            self.name,
+            self.job,
+            self.launches,
+            self.cross_job_launches,
+            self.gpu_requests,
+            self.cpu_requests,
+            self.gpu_items,
+            self.cpu_items,
+            self.transfer_bytes as f64 / (1 << 20) as f64,
+            self.wall
+        )
+    }
+}
+
+/// Backwards-compatible name for the runtime-wide report: the single-run
+/// `GCharm` shim and the figure benches predate the multi-tenant split.
+pub type Report = PoolReport;
+
+/// Aggregated statistics of one runtime (all jobs it served).
+#[derive(Debug, Clone, Default)]
+pub struct PoolReport {
     /// Combined kernel launches submitted to the device.
     pub launches: u64,
     /// Work requests that went to the GPU.
@@ -128,9 +222,20 @@ pub struct Report {
     /// Per-kernel-family breakdown; one entry per registered kind, in
     /// registry order.
     pub kind_stats: Vec<KindStats>,
+    /// Combined launches whose requests came from more than one job
+    /// (cross-job combining: the acceptance signal that the runtime is
+    /// genuinely multiplexing tenants into shared launches).
+    pub cross_job_launches: u64,
+    /// Sealed per-job reports, in completion order. Filled by
+    /// `Runtime::shutdown`; live snapshots leave it empty.
+    pub jobs: Vec<JobReport>,
 }
 
-impl Report {
+impl PoolReport {
+    /// Per-job report by submitted name.
+    pub fn job(&self, name: &str) -> Option<&JobReport> {
+        self.jobs.iter().find(|j| j.name == name)
+    }
     /// Record one flush event.
     pub fn record_flush(&mut self, reason: FlushReason, size: usize) {
         match reason {
@@ -213,7 +318,7 @@ impl Report {
     }
 }
 
-impl std::fmt::Display for Report {
+impl std::fmt::Display for PoolReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "launches            {}", self.launches)?;
         writeln!(
@@ -295,6 +400,17 @@ impl std::fmt::Display for Report {
                     s.busy_modeled
                 )?;
             }
+        }
+        if self.cross_job_launches > 0 || !self.jobs.is_empty() {
+            writeln!(
+                f,
+                "cross-job combines  {} launches merged tiles from \
+                 several jobs",
+                self.cross_job_launches
+            )?;
+        }
+        for j in &self.jobs {
+            writeln!(f, "  job {j}")?;
         }
         write!(f, "total wall          {:.4}s", self.total_wall)
     }
@@ -382,6 +498,30 @@ mod tests {
         assert!(r.kind("nope").is_none());
         let s = format!("{r}");
         assert!(s.contains("spmv_row"));
+    }
+
+    #[test]
+    fn job_reports_render_and_lookup() {
+        let mut r = PoolReport {
+            cross_job_launches: 2,
+            ..PoolReport::default()
+        };
+        r.jobs.push(JobReport {
+            job: JobId(1),
+            name: "spmv-a".to_string(),
+            launches: 4,
+            cross_job_launches: 2,
+            gpu_requests: 100,
+            transfer_bytes: 1 << 20,
+            wall: 0.5,
+            ..JobReport::default()
+        });
+        assert!((r.job("spmv-a").unwrap().cross_job_share() - 0.5).abs()
+            < 1e-12);
+        assert!(r.job("nope").is_none());
+        let s = format!("{r}");
+        assert!(s.contains("cross-job combines"), "{s}");
+        assert!(s.contains("spmv-a (job1)"), "{s}");
     }
 
     #[test]

@@ -4,27 +4,35 @@
 //! paper strategies (adaptive combining section 3.1, data reuse + coalescing
 //! section 3.2, dynamic hybrid scheduling section 3.3), and the GPU service.
 //!
-//! The kernel surface is *open*: apps register kernel families at startup
-//! (`GCharm::register_kernel`) and submit shape-checked `Tile` payloads
-//! tagged with the returned `KernelKindId`. Every scheduling layer —
-//! per-device combiner tables, reuse staging, hybrid CPU/GPU rate models,
-//! the steal rebalancer, per-kind metrics — is table-driven off the
-//! registry; no coordinator code matches on a kernel family.
+//! The runtime is **persistent and multi-tenant**: a [`Runtime`] owns the
+//! device pool, the append-only kernel registry, and the PE worker threads
+//! for its whole lifetime, and concurrent jobs join it through
+//! [`Runtime::submit_job`] with a [`JobSpec`]. Requests of the same kernel
+//! family from *different* jobs may be combined into one launch
+//! (cross-job combining), with per-job accounting split back out on
+//! completion; a weighted-fair share keeps one heavy job from starving
+//! its co-tenants. The one-shot [`GCharm`] API survives as a thin shim:
+//! one job on a private runtime.
+//!
+//! The kernel surface is *open*: jobs register kernel families in their
+//! specs and submit shape-checked `Tile` payloads tagged with the
+//! returned `KernelKindId`. Every scheduling layer — per-device combiner
+//! tables, reuse staging, hybrid CPU/GPU rate models, the steal
+//! rebalancer, per-kind metrics — is table-driven off the registry; no
+//! coordinator code matches on a kernel family.
 //!
 //! Thread topology:
 //!
 //! ```text
-//!   driver (main)      PE threads (chares)        coordinator thread
+//!   job drivers        PE threads (chares)        coordinator thread
 //!      |  send/await      |  entry methods            |  combiners,
-//!      v                  v  -> effects               v  chare table,
+//!      v                  v  -> effects               v  chare tables,
 //!   [Router] ---Msg---> [PE queues]                [Coord queue]
 //!      |                   \--WorkDraft-------------> |
 //!      |                    <--CpuBatch-------------- |   hybrid split
 //!      |                                              |--LaunchSpec--> GPU
-//!      |                    <---METHOD_RESULT-------- | <--Completion--service
+//!      |                    <---METHOD_RESULT-------- | <--Completion--pool
 //! ```
-//!
-//! Python never appears: the GPU service executes AOT artifacts via PJRT.
 
 pub mod chare;
 pub mod chare_table;
@@ -33,6 +41,7 @@ pub mod combiner;
 pub mod cpu_kernels;
 pub mod cpu_pool;
 pub mod hybrid;
+pub mod job;
 pub mod metrics;
 pub mod registry;
 pub mod scheduler;
@@ -41,32 +50,33 @@ pub mod work_request;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use std::sync::mpsc::{Receiver, Sender};
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::runtime::device_sim::CoalescingClass;
 use crate::runtime::executor::{Completion, LaunchSpec, Payload};
 use crate::runtime::pool::DevicePool;
 
-pub use chare::{Chare, ChareId, Ctx, Msg, WorkDraft, METHOD_RESULT};
+pub use chare::{Chare, ChareId, Ctx, JobId, Msg, WorkDraft, METHOD_RESULT};
 pub use chare_table::ChareTable;
 pub use combiner::{Batch, CombinePolicy, Combiner, FlushReason, Pending};
 pub use cpu_pool::chunk_by_items;
 pub use hybrid::{HybridScheduler, SplitPolicy};
-pub use metrics::{DeviceStats, KindStats, Report};
+pub use job::{GCharm, JobCtx, JobDriver, JobHandle, JobSpec, Runtime};
+pub use metrics::{
+    DeviceStats, JobMetricsSnapshot, JobReport, KindStats, PoolReport, Report,
+};
 pub use registry::{
     builtin_registry, ewald_descriptor, force_descriptor, md_descriptor,
     KernelDescriptor, KernelKindId, KernelRegistry, ShapeError,
+    SharedRegistry,
 };
-pub use scheduler::{DeviceRouter, RoutePolicy, Shared};
+pub use scheduler::{DeviceRouter, JobState, JobStatus, RoutePolicy, Shared};
 pub use work_request::{Tile, WorkRequest, WrResult};
 
-use registry::KernelRegistry as Registry;
-use scheduler::{pe_loop, CoordMsg, PeMsg, Router};
+use scheduler::{CoordMsg, Router};
 
 /// Data-movement policy (paper section 3.2 / Fig 1 / Fig 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,8 +153,9 @@ impl Default for Config {
 
 impl Config {
     /// Reject configurations that would previously have panicked deep in
-    /// the pool. Called by `GCharm::new`, so CLI flags and programmatic
-    /// configs fail fast with a descriptive error.
+    /// the pool. Called by `Runtime::new` (and the `GCharm` shim), so CLI
+    /// flags and programmatic configs fail fast with an error naming the
+    /// offending field.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
             self.devices >= 1,
@@ -165,14 +176,35 @@ impl Config {
     }
 }
 
+/// Compose a job-namespaced residency key. The runtime is multi-tenant:
+/// two jobs may use the same app-level buffer or entry ids, so every key
+/// entering the shared chare tables and entry caches carries its job in
+/// the upper 16 bits (app ids must fit in 48).
+pub(crate) fn job_key(job: JobId, k: u64) -> u64 {
+    debug_assert!(k < 1 << 48, "buffer/entry id {k} exceeds 48 bits");
+    debug_assert!(job.0 < 1 << 16, "job id {} exceeds 16 bits", job.0);
+    (job.0 << 48) | (k & ((1u64 << 48) - 1))
+}
+
+/// The job half of a job-namespaced residency key.
+pub(crate) fn key_job(key: u64) -> u64 {
+    key >> 48
+}
+
 /// One work request recorded inside an in-flight launch.
 struct LaunchItem {
     wr_id: u64,
     tag: u64,
+    job: JobId,
     chare: ChareId,
     kind: KernelKindId,
     data_items: usize,
+    /// Job-namespaced buffer key to release on completion, if staged.
     buffer: Option<u64>,
+    /// PCIe bytes attributed to this request (payload + staging + its
+    /// slice of shared launch overheads). Per-item attribution is exact:
+    /// the items of a launch sum to its `transfer_bytes`.
+    bytes: u64,
 }
 
 struct LaunchInfo {
@@ -201,14 +233,15 @@ struct CpuBatchAcc {
 }
 
 /// Per-device coordinator-side state: residency tables and combiners,
-/// one entry per registered kind.
+/// one entry per registered kind. Rows are appended as the shared
+/// registry grows (jobs may bring new families to a live runtime).
 struct DeviceState {
     /// Reuse-buffer tables, indexed by kind; `None` for families without
     /// a reuse arg.
     tables: Vec<Option<ChareTable>>,
     /// Residency of interaction entries (tree moments / cached particles),
-    /// 16 bytes each. Accounting-level model of the GPU-resident arrays
-    /// the interaction lists reference.
+    /// 16 bytes each, keyed per job. Accounting-level model of the
+    /// GPU-resident arrays the interaction lists reference.
     node_table: crate::runtime::DeviceMemory,
     node_saved: u64,
     /// One workGroupList per registered kind, in registry order.
@@ -216,16 +249,18 @@ struct DeviceState {
 }
 
 /// The coordinator thread's state.
-struct Coord {
+pub(crate) struct Coord {
     cfg: Config,
-    registry: Arc<Registry>,
+    /// Local, append-only copy of the registered descriptors (grown by
+    /// `KindsAdded`; avoids registry locks on the hot path).
+    kinds: Vec<KernelDescriptor>,
     router: Router,
     /// Per-device residency + combiner shards (length = pool devices).
     devices: Vec<DeviceState>,
     /// Chare -> device affinity routing and steal accounting.
     dev_router: DeviceRouter,
     hybrid: HybridScheduler,
-    report: Report,
+    report: PoolReport,
     launches: HashMap<u64, LaunchInfo>,
     gpu: DevicePool,
     /// Hybrid CPU worker pool, spawned lazily on the first CPU split so
@@ -238,57 +273,29 @@ struct Coord {
 }
 
 impl Coord {
-    fn new(
+    pub(crate) fn new(
         cfg: Config,
         router: Router,
         done_tx: Sender<Result<Completion>>,
     ) -> Result<Coord> {
-        let registry = router.registry.clone();
         let ndev = cfg.devices.max(1);
-        let gpu = DevicePool::spawn(
-            &cfg.artifacts,
-            registry.kernels(),
-            ndev,
-            done_tx,
-        )?;
+        // The pool spawns before any job arrives; families are taught to
+        // the live services as jobs register them (`KindsAdded`).
+        let gpu = DevicePool::spawn(&cfg.artifacts, Vec::new(), ndev, done_tx)?;
         let devices = (0..ndev)
             .map(|_| DeviceState {
-                tables: registry
-                    .descriptors()
-                    .iter()
-                    .map(|d| {
-                        d.kernel.reuse_arg.map(|ra| {
-                            ChareTable::new(
-                                cfg.table_slots,
-                                d.kernel.args[ra].slot_len(),
-                            )
-                        })
-                    })
-                    .collect(),
+                tables: Vec::new(),
                 node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
                 node_saved: 0,
-                combiners: registry
-                    .descriptors()
-                    .iter()
-                    .map(|d| {
-                        Combiner::new(
-                            d.combine.unwrap_or(cfg.combine),
-                            d.kernel.max_combine(),
-                            d.sort_by_slot
-                                && cfg.data_policy == DataPolicy::ReuseSorted,
-                        )
-                    })
-                    .collect(),
+                combiners: Vec::new(),
             })
             .collect();
-        let mut report = Report {
+        let report = PoolReport {
             device_stats: vec![DeviceStats::default(); ndev],
-            ..Report::default()
+            ..PoolReport::default()
         };
-        for (i, d) in registry.descriptors().iter().enumerate() {
-            report.kind_mut(i).name = d.kernel.name.to_string();
-        }
         Ok(Coord {
+            kinds: Vec::new(),
             devices,
             dev_router: DeviceRouter::new(
                 cfg.route,
@@ -296,11 +303,7 @@ impl Coord {
                 cfg.steal_low,
                 cfg.steal_high,
             ),
-            hybrid: HybridScheduler::with_kinds(
-                cfg.split,
-                registry.len(),
-                ndev,
-            ),
+            hybrid: HybridScheduler::with_kinds(cfg.split, 1, ndev),
             report,
             launches: HashMap::new(),
             gpu,
@@ -310,7 +313,6 @@ impl Coord {
             next_wr: 0,
             next_launch: 0,
             cfg,
-            registry,
             router,
         })
     }
@@ -319,23 +321,55 @@ impl Coord {
         self.router.shared.timeline.now()
     }
 
+    /// The shared registry grew: append per-device combiner/table rows
+    /// for the new families, grow the hybrid models, label the per-kind
+    /// stats, and teach every pool device the new kernels. Ordered ahead
+    /// of any submission of the new kinds (same queue).
+    fn on_kinds_added(&mut self, added: Vec<KernelDescriptor>) {
+        let table_slots = self.cfg.table_slots;
+        let default_combine = self.cfg.combine;
+        let sorted = self.cfg.data_policy == DataPolicy::ReuseSorted;
+        let mut kernels = Vec::with_capacity(added.len());
+        for desc in added {
+            let k = self.kinds.len();
+            for st in &mut self.devices {
+                st.tables.push(desc.kernel.reuse_arg.map(|ra| {
+                    ChareTable::new(
+                        table_slots,
+                        desc.kernel.args[ra].slot_len(),
+                    )
+                }));
+                st.combiners.push(Combiner::new(
+                    desc.combine.unwrap_or(default_combine),
+                    desc.kernel.max_combine(),
+                    desc.sort_by_slot && sorted,
+                ));
+            }
+            self.report.kind_mut(k).name = desc.kernel.name.to_string();
+            kernels.push(desc.kernel.clone());
+            self.kinds.push(desc);
+        }
+        self.hybrid.ensure_kinds(self.kinds.len());
+        self.gpu.add_kernels(&kernels).expect("gpu pool is down");
+    }
+
     /// Handle one submitted work request: route it to a device by the
-    /// chare affinity map, stage its reuse buffer on that device if the
-    /// family declares one, then insert into the device's combiner for
-    /// that kind.
-    fn on_submit(&mut self, draft: WorkDraft) {
+    /// job-scoped chare affinity map, stage its reuse buffer on that
+    /// device if the family declares one (under a job-namespaced key),
+    /// then insert into the device's combiner for that kind.
+    fn on_submit(&mut self, job: JobId, draft: WorkDraft) {
         let now = self.now();
         let id = self.next_wr;
         self.next_wr += 1;
-        let device = self.dev_router.route(draft.chare);
+        let device = self.dev_router.route(job, draft.chare);
         let kind = draft.kind;
-        let registry = self.registry.clone();
-        let desc = registry.get(kind);
+        let reuse_arg = self.kinds[kind.0].kernel.reuse_arg;
         let wr = WorkRequest {
             id,
+            job,
             chare: draft.chare,
             kind,
-            buffer: draft.buffer,
+            buffer: draft.buffer.map(|b| job_key(job, b)),
             data_items: draft.data_items,
             tag: draft.tag,
             arrival: now,
@@ -347,8 +381,7 @@ impl Coord {
         let mut slot = None;
         let mut staged_bytes = 0;
         if self.cfg.data_policy != DataPolicy::NoReuse {
-            if let (Some(ra), Some(buf)) = (desc.kernel.reuse_arg, wr.buffer)
-            {
+            if let (Some(ra), Some(buf)) = (reuse_arg, wr.buffer) {
                 let table = self.devices[device].tables[kind.0]
                     .as_mut()
                     .expect("reuse family has a table");
@@ -368,7 +401,10 @@ impl Coord {
 
         let pending = Pending { wr, slot, staged_bytes };
         self.devices[device].combiners[kind.0].insert(pending, now);
-        self.dev_router.note_enqueued(device, 1);
+        self.dev_router.note_enqueued(device, job, 1);
+        if let Some(js) = self.router.shared.job(job) {
+            js.metrics.queued.fetch_add(1, Ordering::SeqCst);
+        }
         self.poll_combiners();
     }
 
@@ -487,10 +523,9 @@ impl Coord {
         from: usize,
         to: usize,
     ) -> Batch {
-        let registry = self.registry.clone();
-        let reuse_arg = registry.get(kind).kernel.reuse_arg;
+        let reuse_arg = self.kinds[kind.0].kernel.reuse_arg;
         for p in &mut batch.items {
-            self.dev_router.rehome(p.wr.chare, to);
+            self.dev_router.rehome(p.wr.job, p.wr.chare, to);
             if p.slot.is_none() {
                 continue;
             }
@@ -525,7 +560,7 @@ impl Coord {
         // scrambled that. Re-sort on the destination slots so the
         // coalescing model's SortedGather claim stays honest.
         if self.cfg.data_policy == DataPolicy::ReuseSorted
-            && registry.get(kind).sort_by_slot
+            && self.kinds[kind.0].sort_by_slot
         {
             batch
                 .items
@@ -537,15 +572,15 @@ impl Coord {
     /// Build and submit the combined launch for a flushed batch of one
     /// registered kind on one device: hybrid-split if the family has a
     /// CPU fallback, account transfers per the data policy (entry-cache
-    /// hits, staged reuse, contiguous payloads), and pick the gather or
+    /// hits, staged reuse, contiguous payloads) with exact per-item
+    /// attribution for the per-job reports, and pick the gather or
     /// contiguous payload form.
     fn dispatch(&mut self, batch: Batch, kind: KernelKindId, device: usize) {
         self.report.record_flush(batch.reason, batch.items.len());
         if batch.items.is_empty() {
             return;
         }
-        let registry = self.registry.clone();
-        let desc = registry.get(kind);
+        let desc = self.kinds[kind.0].clone();
         let kernel = &desc.kernel;
 
         let (cpu, gpu) = if desc.cpu_fallback && self.cfg.hybrid {
@@ -572,10 +607,19 @@ impl Coord {
                     }
                 }
             }
-            self.dev_router.note_completed(device, cpu.len());
             let total: usize = cpu.iter().map(|p| p.wr.data_items).sum();
             self.report.cpu_items += total as u64;
             self.report.kind_mut(kind.0).cpu_items += total as u64;
+            // Per-job device-depth and live-metric accounting for the
+            // prefix that leaves the GPU queue.
+            for p in &cpu {
+                self.dev_router.note_completed(device, p.wr.job, 1);
+                if let Some(js) = self.router.shared.job(p.wr.job) {
+                    js.metrics
+                        .cpu_items
+                        .fetch_add(p.wr.data_items as u64, Ordering::SeqCst);
+                }
+            }
             // Fan the CPU portion across the worker pool (asynchronous
             // executions on all CPU cores, section 3.3), chunked by
             // data_items so each worker gets a similar item load.
@@ -584,7 +628,7 @@ impl Coord {
                     self.cpu_workers,
                     self.router.coord.clone(),
                     self.router.shared.clone(),
-                    self.registry.clone(),
+                    self.router.registry.clone(),
                 )
                 .expect("spawning cpu pool");
                 self.cpu_pool = Some(pool);
@@ -608,25 +652,32 @@ impl Coord {
             return;
         }
 
-        let mut transfer = 0u64;
+        // Per-item PCIe byte attribution. Every charge below lands on
+        // exactly one item, so `transfer` (the launch total) equals the
+        // sum over items — which is what lets the per-job byte counters
+        // in JobReport sum exactly back to the pool totals.
+        let mut item_bytes = vec![0u64; n];
 
         // Entry-cache accounting: the family's entry arg is either fully
         // transferred (NoReuse) or charged per *real* entry against the
         // device-resident entry cache (section 3.2: moments/particle data
-        // resident from prior kernels — transfer only the misses).
+        // resident from prior kernels — transfer only the misses). Entry
+        // keys are namespaced per job.
         if let Some(ea) = kernel.entry_arg {
             let entry_bytes = (kernel.args[ea].width * 4) as u64;
-            for p in &gpu {
+            for (i, p) in gpu.iter().enumerate() {
                 if self.cfg.data_policy == DataPolicy::NoReuse {
-                    transfer += (p.wr.payload.bufs[ea].len() * 4) as u64;
+                    item_bytes[i] +=
+                        (p.wr.payload.bufs[ea].len() * 4) as u64;
                 } else {
                     let st = &mut self.devices[device];
                     for &eid in &p.wr.payload.entry_ids {
-                        match st.node_table.acquire(eid as u64) {
+                        let key = job_key(p.wr.job, eid as u64);
+                        match st.node_table.acquire(key) {
                             Some(r) if r.is_hit() => {
                                 st.node_saved += entry_bytes;
                             }
-                            _ => transfer += entry_bytes,
+                            _ => item_bytes[i] += entry_bytes,
                         }
                     }
                 }
@@ -641,24 +692,27 @@ impl Coord {
             let ra = kernel.reuse_arg.expect("gather requires a reuse arg");
             let rows = kernel.args[ra].rows;
             let mut idx = Vec::with_capacity(n * rows);
-            for p in &gpu {
+            for (i, p) in gpu.iter().enumerate() {
                 let base = p.slot.expect("all staged") as i32 * rows as i32;
                 idx.extend((0..rows as i32).map(|j| base + j));
-                transfer += p.staged_bytes;
+                item_bytes[i] += p.staged_bytes;
+                // this item's slice of the gather-index buffer
+                item_bytes[i] += (rows * 4) as u64;
             }
-            transfer += (idx.len() * 4) as u64; // the index buffer itself
             let mut bufs = Vec::with_capacity(kernel.args.len() - 1);
-            for (i, spec) in kernel.args.iter().enumerate() {
-                if i == ra {
+            for (argi, _spec) in kernel.args.iter().enumerate() {
+                if argi == ra {
                     continue; // resident: addressed through the gather
                 }
-                let mut v = Vec::with_capacity(n * spec.slot_len());
-                for p in &gpu {
-                    v.extend_from_slice(&p.wr.payload.bufs[i]);
+                let mut v =
+                    Vec::with_capacity(n * kernel.args[argi].slot_len());
+                for (i, p) in gpu.iter().enumerate() {
+                    v.extend_from_slice(&p.wr.payload.bufs[argi]);
                     // the entry arg's transfer was charged per real entry
                     // against the entry cache above
-                    if Some(i) != kernel.entry_arg {
-                        transfer += (p.wr.payload.bufs[i].len() * 4) as u64;
+                    if Some(argi) != kernel.entry_arg {
+                        item_bytes[i] +=
+                            (p.wr.payload.bufs[argi].len() * 4) as u64;
                     }
                 }
                 bufs.push(v);
@@ -685,12 +739,13 @@ impl Coord {
             )
         } else {
             let mut bufs = Vec::with_capacity(kernel.args.len());
-            for (i, spec) in kernel.args.iter().enumerate() {
+            for (argi, spec) in kernel.args.iter().enumerate() {
                 let mut v = Vec::with_capacity(n * spec.slot_len());
-                for p in &gpu {
-                    v.extend_from_slice(&p.wr.payload.bufs[i]);
-                    if Some(i) != kernel.entry_arg {
-                        transfer += (p.wr.payload.bufs[i].len() * 4) as u64;
+                for (i, p) in gpu.iter().enumerate() {
+                    v.extend_from_slice(&p.wr.payload.bufs[argi]);
+                    if Some(argi) != kernel.entry_arg {
+                        item_bytes[i] +=
+                            (p.wr.payload.bufs[argi].len() * 4) as u64;
                     }
                 }
                 bufs.push(v);
@@ -700,12 +755,17 @@ impl Coord {
                 CoalescingClass::Contiguous,
             )
         };
-        self.submit_launch(gpu, kind, payload, transfer, pattern, device);
+        let transfer: u64 = item_bytes.iter().sum();
+        self.submit_launch(
+            gpu, item_bytes, kind, payload, transfer, pattern, device,
+        );
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn submit_launch(
         &mut self,
         items: Vec<Pending>,
+        item_bytes: Vec<u64>,
         kind: KernelKindId,
         payload: Payload,
         transfer_bytes: u64,
@@ -717,19 +777,22 @@ impl Coord {
         let info = LaunchInfo {
             items: items
                 .iter()
-                .map(|p| LaunchItem {
+                .zip(&item_bytes)
+                .map(|(p, &bytes)| LaunchItem {
                     wr_id: p.wr.id,
                     tag: p.wr.tag,
+                    job: p.wr.job,
                     chare: p.wr.chare,
                     kind: p.wr.kind,
                     data_items: p.wr.data_items,
                     buffer: if p.slot.is_some() { p.wr.buffer } else { None },
+                    bytes,
                 })
                 .collect(),
             transfer_bytes,
             device,
             kind,
-            out_slot: self.registry.kernel(kind).out_slot_len(),
+            out_slot: self.kinds[kind.0].kernel.out_slot_len(),
         };
         self.launches.insert(id, info);
         self.gpu
@@ -737,7 +800,8 @@ impl Coord {
             .expect("gpu service is down");
     }
 
-    /// Scatter a completed launch's outputs back to the owning chares.
+    /// Scatter a completed launch's outputs back to the owning chares,
+    /// splitting the shared launch's accounting back out per job.
     fn on_gpu_done(&mut self, completion: Result<Completion>) {
         let c = completion.expect("GPU launch failed");
         let info = self
@@ -765,10 +829,27 @@ impl Coord {
 
         let slot_len = info.out_slot;
         let mut gpu_items = 0u64;
+        // Per-job split of the launch: (job, requests, items, bytes),
+        // first-seen order.
+        let mut per_job: Vec<(JobId, u64, u64, u64)> = Vec::new();
         for (i, item) in info.items.iter().enumerate() {
             gpu_items += item.data_items as u64;
+            match per_job.iter_mut().find(|(j, ..)| *j == item.job) {
+                Some((_, reqs, items, bytes)) => {
+                    *reqs += 1;
+                    *items += item.data_items as u64;
+                    *bytes += item.bytes;
+                }
+                None => per_job.push((
+                    item.job,
+                    1,
+                    item.data_items as u64,
+                    item.bytes,
+                )),
+            }
             let out = c.out[i * slot_len..(i + 1) * slot_len].to_vec();
             self.router.send_msg(
+                item.job,
                 item.chare,
                 Msg::new(
                     METHOD_RESULT,
@@ -791,6 +872,10 @@ impl Coord {
                 }
             }
         }
+        let cross_job = per_job.len() >= 2;
+        if cross_job {
+            self.report.cross_job_launches += 1;
+        }
         self.report.gpu_items += gpu_items;
         {
             let ks = self.report.kind_mut(kind.0);
@@ -806,18 +891,36 @@ impl Coord {
             dev.busy_wall += c.wall;
             dev.busy_modeled += c.modeled.kernel + c.modeled.transfer;
         }
-        self.dev_router.note_completed(device, info.items.len());
+        // Per-job accounting: live metrics, learned per-(job, kind)
+        // heaviness, the combiners' fair-share weights, depths, and the
+        // work-request holds.
+        for &(job, reqs, items, bytes) in &per_job {
+            self.dev_router.note_completed(device, job, reqs as usize);
+            if let Some(js) = self.router.shared.job(job) {
+                let m = &js.metrics;
+                m.launches.fetch_add(1, Ordering::SeqCst);
+                if cross_job {
+                    m.cross_job_launches.fetch_add(1, Ordering::SeqCst);
+                }
+                m.gpu_requests.fetch_add(reqs, Ordering::SeqCst);
+                m.gpu_items.fetch_add(items, Ordering::SeqCst);
+                m.transfer_bytes.fetch_add(bytes, Ordering::SeqCst);
+                m.queued.fetch_sub(reqs as i64, Ordering::SeqCst);
+            }
+            self.hybrid
+                .record_job(job, kind, reqs as usize, items as usize);
+            let w = self.hybrid.job_weight(job, kind);
+            for st in &mut self.devices {
+                st.combiners[kind.0].set_job_weight(job, w);
+            }
+            // Release the work-request holds (global + per job).
+            self.router.release(job, reqs as i64);
+        }
         // Per-device rate (all kinds): the steal rebalancer's weights.
         self.hybrid.record_device(device, gpu_items as usize, c.wall);
-        if self.registry.get(kind).cpu_fallback {
+        if self.kinds[kind.0].cpu_fallback {
             self.hybrid.record_gpu(kind, gpu_items as usize, c.wall);
         }
-
-        // Release the work-request holds.
-        self.router
-            .shared
-            .outstanding
-            .fetch_sub(info.items.len() as i64, Ordering::SeqCst);
     }
 
     /// Scatter one CPU-pool chunk's results immediately (a slow sibling
@@ -830,7 +933,7 @@ impl Coord {
         batch: u64,
         items: usize,
         secs: f64,
-        results: Vec<(ChareId, WrResult)>,
+        results: Vec<(JobId, ChareId, WrResult)>,
     ) {
         let acc = self
             .cpu_batches
@@ -845,15 +948,21 @@ impl Coord {
 
         self.report.cpu_requests += results.len() as u64;
         self.report.kind_mut(kind.0).cpu_requests += results.len() as u64;
-        let n = results.len() as i64;
-        for (chare, res) in results {
-            self.router.send_msg(chare, Msg::new(METHOD_RESULT, res));
+        for (job, chare, res) in results {
+            self.router
+                .send_msg(job, chare, Msg::new(METHOD_RESULT, res));
+            if let Some(js) = self.router.shared.job(job) {
+                js.metrics.cpu_requests.fetch_add(1, Ordering::SeqCst);
+                js.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            }
+            // Release this result's work-request hold.
+            self.router.release(job, 1);
         }
-        // Release this chunk's work-request holds, then the chunk hold.
+        // Release the chunk hold (global only).
         self.router
             .shared
             .outstanding
-            .fetch_sub(n + 1, Ordering::SeqCst);
+            .fetch_sub(1, Ordering::SeqCst);
 
         if batch_done {
             let acc = self.cpu_batches.remove(&batch).unwrap();
@@ -866,32 +975,92 @@ impl Coord {
         &mut self,
         items: usize,
         secs: f64,
-        results: Vec<(ChareId, WrResult)>,
+        results: Vec<(JobId, ChareId, WrResult)>,
     ) {
-        if let Some(kind) = results.first().map(|(_, r)| r.kind) {
+        if let Some(kind) = results.first().map(|(_, _, r)| r.kind) {
             self.hybrid.record_cpu(kind, items, secs);
             self.report.kind_mut(kind.0).cpu_requests +=
                 results.len() as u64;
         }
         self.report.cpu_task_wall += secs;
         self.report.cpu_requests += results.len() as u64;
-        let n = results.len() as i64;
-        for (chare, res) in results {
+        for (job, chare, res) in results {
             self.router
-                .send_msg(chare, Msg::new(METHOD_RESULT, res));
+                .send_msg(job, chare, Msg::new(METHOD_RESULT, res));
+            if let Some(js) = self.router.shared.job(job) {
+                js.metrics.cpu_requests.fetch_add(1, Ordering::SeqCst);
+                js.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            }
+            self.router.release(job, 1);
         }
-        // Release the work-request holds, then the CpuDone hold.
+        // Release the CpuDone hold (global only).
         self.router
             .shared
             .outstanding
-            .fetch_sub(n + 1, Ordering::SeqCst);
+            .fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Invalidate one job's device-resident buffers (its iteration
+    /// boundary). Co-tenant residency is untouched: keys are
+    /// job-namespaced.
+    fn on_invalidate_job(&mut self, job: JobId) {
+        for st in &mut self.devices {
+            for t in st.tables.iter_mut().flatten() {
+                t.invalidate_where(|k| key_job(k) == job.0);
+            }
+            st.node_table.invalidate_where(|k| key_job(k) == job.0);
+        }
+    }
+
+    /// A job's report was sealed: drop its residency, routing affinity,
+    /// rate models, and fair-share weights.
+    fn on_job_ended(&mut self, job: JobId) {
+        self.on_invalidate_job(job);
+        self.dev_router.forget_job(job);
+        self.hybrid.forget_job(job);
+        for st in &mut self.devices {
+            for c in &mut st.combiners {
+                c.clear_job_weight(job);
+            }
+        }
+    }
+
+    /// The pool-wide report with the residency and steal counters folded
+    /// in (end-of-run sealing and live `Snapshot` replies share this).
+    fn sealed_report(&self) -> PoolReport {
+        let mut report = self.report.clone();
+        report.steals = self.dev_router.steals();
+        report.migrated_requests = self.dev_router.migrated_requests();
+        report.table_hits = 0;
+        report.table_misses = 0;
+        report.saved_bytes = 0;
+        for d in 0..self.devices.len() {
+            let st = &self.devices[d];
+            let mut hits = st.node_table.hits();
+            let mut misses = st.node_table.misses();
+            let mut saved = st.node_saved;
+            for t in st.tables.iter().flatten() {
+                hits += t.hits();
+                misses += t.misses();
+                saved += t.saved_bytes();
+            }
+            report.table_hits += hits;
+            report.table_misses += misses;
+            report.saved_bytes += saved;
+            let dev = report.device_mut(d);
+            dev.hits = hits;
+            dev.misses = misses;
+        }
+        report
     }
 
     /// The coordinator event loop.
-    fn run(mut self, rx: Receiver<CoordMsg>) -> Report {
+    pub(crate) fn run(mut self, rx: Receiver<CoordMsg>) -> PoolReport {
         loop {
             match rx.recv_timeout(self.cfg.tick) {
-                Ok(CoordMsg::Submit(draft)) => self.on_submit(draft),
+                Ok(CoordMsg::Submit { job, draft }) => {
+                    self.on_submit(job, draft)
+                }
                 Ok(CoordMsg::GpuDone(c)) => {
                     self.on_gpu_done(c);
                     self.poll_combiners();
@@ -904,6 +1073,11 @@ impl Coord {
                     self.on_cpu_chunk(batch, items, secs, results);
                     self.poll_combiners();
                 }
+                Ok(CoordMsg::KindsAdded(descs)) => self.on_kinds_added(descs),
+                Ok(CoordMsg::JobEnded(job)) => self.on_job_ended(job),
+                Ok(CoordMsg::InvalidateJob(job)) => {
+                    self.on_invalidate_job(job)
+                }
                 Ok(CoordMsg::InvalidateAll) => {
                     for st in &mut self.devices {
                         for t in st.tables.iter_mut().flatten() {
@@ -911,6 +1085,9 @@ impl Coord {
                         }
                         st.node_table.invalidate_all();
                     }
+                }
+                Ok(CoordMsg::Snapshot(reply)) => {
+                    let _ = reply.send(self.sealed_report());
                 }
                 Ok(CoordMsg::Stop) => break,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
@@ -936,225 +1113,6 @@ impl Coord {
                 Err(_) => break,
             }
         }
-        self.report.steals = self.dev_router.steals();
-        self.report.migrated_requests = self.dev_router.migrated_requests();
-        self.report.table_hits = 0;
-        self.report.table_misses = 0;
-        self.report.saved_bytes = 0;
-        for d in 0..self.devices.len() {
-            let st = &self.devices[d];
-            let mut hits = st.node_table.hits();
-            let mut misses = st.node_table.misses();
-            let mut saved = st.node_saved;
-            for t in st.tables.iter().flatten() {
-                hits += t.hits();
-                misses += t.misses();
-                saved += t.saved_bytes();
-            }
-            self.report.table_hits += hits;
-            self.report.table_misses += misses;
-            self.report.saved_bytes += saved;
-            let dev = self.report.device_mut(d);
-            dev.hits = hits;
-            dev.misses = misses;
-        }
-        self.report
-    }
-}
-
-/// The user-facing runtime: build, register kernels and chares, start,
-/// drive, shutdown.
-pub struct GCharm {
-    cfg: Config,
-    kernels: Registry,
-    placement: HashMap<ChareId, usize>,
-    chares: Vec<HashMap<ChareId, Box<dyn Chare>>>,
-    running: Option<RunningState>,
-}
-
-struct RunningState {
-    router: Router,
-    pe_handles: Vec<JoinHandle<()>>,
-    coord_handle: JoinHandle<Report>,
-    forwarder: JoinHandle<()>,
-}
-
-impl GCharm {
-    /// Build a runtime over a validated configuration (see
-    /// [`Config::validate`] for what is rejected).
-    pub fn new(cfg: Config) -> Result<GCharm> {
-        cfg.validate()?;
-        let pes = cfg.pes.max(1);
-        Ok(GCharm {
-            cfg: Config { pes, ..cfg },
-            kernels: Registry::new(),
-            placement: HashMap::new(),
-            chares: (0..pes).map(|_| HashMap::new()).collect(),
-            running: None,
-        })
-    }
-
-    pub fn config(&self) -> &Config {
-        &self.cfg
-    }
-
-    /// Register a kernel family (must happen before `start`). Returns the
-    /// kind id work drafts are tagged with. The paper's built-in families
-    /// are available as [`force_descriptor`], [`ewald_descriptor`], and
-    /// [`md_descriptor`]; new workloads register their own descriptors
-    /// through this same call — see PERF.md, "Adding a workload".
-    pub fn register_kernel(
-        &mut self,
-        desc: KernelDescriptor,
-    ) -> Result<KernelKindId> {
-        anyhow::ensure!(
-            self.running.is_none(),
-            "register kernels before start"
-        );
-        self.kernels.register(desc)
-    }
-
-    /// The registered kernel families so far.
-    pub fn kernel_registry(&self) -> &KernelRegistry {
-        &self.kernels
-    }
-
-    /// Register a chare on a PE (must happen before `start`).
-    pub fn register(&mut self, id: ChareId, pe: usize, chare: Box<dyn Chare>) {
-        assert!(self.running.is_none(), "register before start");
-        let pe = pe % self.cfg.pes;
-        let prev = self.placement.insert(id, pe);
-        assert!(prev.is_none(), "chare {id:?} registered twice");
-        self.chares[pe].insert(id, chare);
-    }
-
-    /// Spawn PE threads, the coordinator, and the GPU service.
-    pub fn start(&mut self) -> Result<()> {
-        anyhow::ensure!(self.running.is_none(), "already started");
-        let shared = Shared::new();
-        let registry = Arc::new(self.kernels.clone());
-        let (coord_tx, coord_rx) = channel::<CoordMsg>();
-        let mut pe_txs = Vec::new();
-        let mut pe_rxs = Vec::new();
-        for _ in 0..self.cfg.pes {
-            let (tx, rx) = channel::<PeMsg>();
-            pe_txs.push(tx);
-            pe_rxs.push(rx);
-        }
-        let router = Router {
-            pes: pe_txs,
-            coord: coord_tx.clone(),
-            placement: Arc::new(std::mem::take(&mut self.placement)),
-            shared: shared.clone(),
-            registry,
-        };
-
-        // GPU completion forwarder: GpuService -> coordinator queue.
-        let (done_tx, done_rx) = channel::<Result<Completion>>();
-        let fwd_coord = coord_tx.clone();
-        let forwarder = std::thread::Builder::new()
-            .name("gpu-forwarder".into())
-            .spawn(move || {
-                while let Ok(c) = done_rx.recv() {
-                    if fwd_coord.send(CoordMsg::GpuDone(c)).is_err() {
-                        break;
-                    }
-                }
-            })?;
-
-        let coord = Coord::new(self.cfg.clone(), router.clone(), done_tx)
-            .context("starting coordinator")?;
-        let coord_handle = std::thread::Builder::new()
-            .name("coordinator".into())
-            .spawn(move || coord.run(coord_rx))?;
-
-        let mut pe_handles = Vec::new();
-        for (pe, rx) in pe_rxs.into_iter().enumerate() {
-            let chares = std::mem::take(&mut self.chares[pe]);
-            let r = router.clone();
-            pe_handles.push(
-                std::thread::Builder::new()
-                    .name(format!("pe-{pe}"))
-                    .spawn(move || pe_loop(pe, rx, chares, r))?,
-            );
-        }
-
-        self.running = Some(RunningState {
-            router,
-            pe_handles,
-            coord_handle,
-            forwarder,
-        });
-        Ok(())
-    }
-
-    fn running(&self) -> &RunningState {
-        self.running.as_ref().expect("runtime not started")
-    }
-
-    /// Driver-side message send.
-    pub fn send(&self, to: ChareId, msg: Msg) {
-        self.running().router.send_msg(to, msg);
-    }
-
-    /// Timeline seconds since start.
-    pub fn now(&self) -> f64 {
-        self.running().router.shared.timeline.now()
-    }
-
-    pub fn shared(&self) -> Arc<Shared> {
-        self.running().router.shared.clone()
-    }
-
-    /// Block until the system is quiescent: no queued messages, no pending
-    /// or in-flight work requests.
-    pub fn await_quiescence(&self) {
-        let shared = &self.running().router.shared;
-        loop {
-            if shared.outstanding.load(Ordering::SeqCst) == 0 {
-                return;
-            }
-            std::thread::sleep(Duration::from_micros(50));
-        }
-    }
-
-    /// Block until `n` contributions have arrived; returns their sum and
-    /// resets the reduction.
-    pub fn await_reduction(&self, n: u64) -> f64 {
-        let shared = &self.running().router.shared;
-        let mut guard = shared.reduction.lock().unwrap();
-        while guard.count < n {
-            guard = shared.reduction_cv.wait(guard).unwrap();
-        }
-        let sum = guard.sum;
-        guard.count = 0;
-        guard.sum = 0.0;
-        sum
-    }
-
-    /// Invalidate all device-resident buffers. Call only at quiescence
-    /// (iteration boundary): pinned slots back in-flight launches.
-    pub fn invalidate_device_buffers(&self) {
-        self.running()
-            .router
-            .coord
-            .send(CoordMsg::InvalidateAll)
-            .expect("coordinator is down");
-    }
-
-    /// Stop all threads and return the run report.
-    pub fn shutdown(mut self) -> Report {
-        let state = self.running.take().expect("runtime not started");
-        state.router.coord.send(CoordMsg::Stop).ok();
-        let report = state.coord_handle.join().expect("coordinator panicked");
-        for tx in &state.router.pes {
-            tx.send(PeMsg::Stop).ok();
-        }
-        for h in state.pe_handles {
-            h.join().expect("pe panicked");
-        }
-        drop(state.router); // closes the forwarder's target
-        state.forwarder.join().ok();
-        report
+        self.sealed_report()
     }
 }

@@ -16,7 +16,7 @@
 //! ([`force_descriptor`], [`ewald_descriptor`], [`md_descriptor`]); apps
 //! register them like any other family.
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock, RwLockReadGuard};
 
 use anyhow::{bail, Result};
 
@@ -246,6 +246,124 @@ impl KernelRegistry {
     }
 }
 
+/// Do two descriptors describe the *same* family? Cross-job combining
+/// merges tiles of identically named families into one launch, so a
+/// re-registration under an existing name is only accepted when every
+/// execution-relevant field matches: shapes, constants, outputs,
+/// resources, reuse/gather/entry wiring, and the scheduling policy
+/// half. The slot function is deliberately *not* compared: function
+/// pointers have no reliable identity in Rust (the same fn item can
+/// take distinct addresses across codegen units), and the family name
+/// plus the full data contract is the identity the runtime keys on.
+fn descriptors_compatible(a: &KernelDescriptor, b: &KernelDescriptor) -> bool {
+    let (ka, kb) = (&a.kernel, &b.kernel);
+    ka.name == kb.name
+        && ka.args == kb.args
+        && ka.constant == kb.constant
+        && ka.out_rows == kb.out_rows
+        && ka.out_width == kb.out_width
+        && ka.resources == kb.resources
+        && ka.items_per_slot == kb.items_per_slot
+        && ka.reuse_arg == kb.reuse_arg
+        && ka.gather_name == kb.gather_name
+        && ka.entry_arg == kb.entry_arg
+        && a.combine == b.combine
+        && a.sort_by_slot == b.sort_by_slot
+        && a.cpu_fallback == b.cpu_fallback
+}
+
+/// The append-only kernel registry a persistent
+/// [`crate::coordinator::Runtime`] shares across every job it serves.
+///
+/// Jobs bring their kernel registrations in their
+/// [`crate::coordinator::JobSpec`]; registering a descriptor identical to
+/// an already-registered family (same name, same shapes/constants/policy)
+/// resolves to the *existing* kind id — that shared id is what lets the
+/// combiners merge tiles from different jobs into one launch. Registering
+/// an incompatible descriptor under a taken name is an error (silently
+/// sharing a kind across diverging constants would corrupt both jobs'
+/// physics). Ids are never reused or removed while the runtime lives.
+#[derive(Debug, Default)]
+pub struct SharedRegistry {
+    inner: RwLock<KernelRegistry>,
+}
+
+impl SharedRegistry {
+    pub fn new() -> SharedRegistry {
+        SharedRegistry::default()
+    }
+
+    /// Seed a shared registry from an existing frozen registry (the
+    /// `GCharm` shim path: kernels registered before `start`).
+    pub fn from_registry(reg: KernelRegistry) -> SharedRegistry {
+        SharedRegistry { inner: RwLock::new(reg) }
+    }
+
+    /// Register a family, or resolve an identical re-registration to the
+    /// existing id (cross-job sharing). Incompatible re-registrations and
+    /// malformed descriptors are rejected with a descriptive error.
+    ///
+    /// The returned flag reports whether the family was *newly inserted*
+    /// by this call, decided atomically under the write lock — callers
+    /// that must teach downstream layers about new families (the
+    /// coordinator's `KindsAdded`) rely on exactly one registrant
+    /// observing `true` per family, even under concurrent `submit_job`s.
+    pub fn register(
+        &self,
+        desc: KernelDescriptor,
+    ) -> Result<(KernelKindId, bool)> {
+        let mut reg = self.inner.write().expect("registry poisoned");
+        if let Some(id) = reg.find(&desc.kernel.name) {
+            let existing = reg.get(id);
+            if descriptors_compatible(existing, &desc) {
+                return Ok((id, false));
+            }
+            bail!(
+                "kernel {}: already registered by another job with a \
+                 different descriptor (shapes, constants, or policy \
+                 differ); rename the family or align the registrations",
+                desc.kernel.name
+            );
+        }
+        reg.register(desc).map(|id| (id, true))
+    }
+
+    /// Read access to the underlying registry (shape checks, slot
+    /// functions). Hold the guard only briefly: registration blocks on it.
+    pub fn read(&self) -> RwLockReadGuard<'_, KernelRegistry> {
+        self.inner.read().expect("registry poisoned")
+    }
+
+    /// Clone of the current registration set.
+    pub fn snapshot(&self) -> KernelRegistry {
+        self.read().clone()
+    }
+
+    /// Number of registered families so far.
+    pub fn len(&self) -> usize {
+        self.read().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.read().is_empty()
+    }
+
+    /// The runtime kernel of one registered family (cloned `Arc`).
+    pub fn kernel(&self, id: KernelKindId) -> Arc<TileKernel> {
+        self.read().kernel(id).clone()
+    }
+
+    /// Look a family up by registered name.
+    pub fn find(&self, name: &str) -> Option<KernelKindId> {
+        self.read().find(name)
+    }
+
+    /// Validate a payload against one family's registered shapes.
+    pub fn check(&self, id: KernelKindId, tile: &Tile) -> Result<(), ShapeError> {
+        self.read().check(id, tile)
+    }
+}
+
 /// The N-Body bucket gravity family (paper section 4.1): slot-sorted
 /// combining, particle-buffer reuse with a gather variant, entry-cache
 /// accounting of the interaction list. GPU-only.
@@ -357,6 +475,42 @@ mod tests {
         assert_eq!(e.actual, 3);
         let msg = e.to_string();
         assert!(msg.contains("gravity") && msg.contains("parts"));
+    }
+
+    #[test]
+    fn shared_registry_dedupes_identical_and_rejects_divergent() {
+        let shared = SharedRegistry::new();
+        let (a, new_a) =
+            shared.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
+        assert!(new_a, "first registration inserts");
+        // a second job registering the identical family shares the id
+        let (b, new_b) =
+            shared.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
+        assert_eq!(a, b, "identical re-registration must share the kind");
+        assert!(!new_b, "dedupe must not report an insertion");
+        assert_eq!(shared.len(), 1);
+        // same name, different constants: combining would corrupt physics
+        let err = shared
+            .register(md_descriptor([2.0, 0.04, 1.0]))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("md_force"),
+            "error names the family: {err}"
+        );
+        // a different family still appends
+        let (c, new_c) = shared.register(force_descriptor(0.01)).unwrap();
+        assert_eq!(c, KernelKindId(1));
+        assert!(new_c);
+        assert_eq!(shared.find("gravity"), Some(c));
+    }
+
+    #[test]
+    fn shared_registry_policy_divergence_rejected() {
+        let shared = SharedRegistry::new();
+        shared.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
+        let mut d = md_descriptor([1.0, 0.04, 1.0]);
+        d.cpu_fallback = false; // same kernel, different scheduling policy
+        assert!(shared.register(d).is_err());
     }
 
     #[test]

@@ -7,51 +7,74 @@
 //! (`CpuBatch`): the native kernels from `cpu_kernels.rs`, timed per batch
 //! so the coordinator can maintain the per-data-item running averages.
 //!
-//! Quiescence: every in-flight unit (queued message, pending work request,
-//! CPU batch, coordinator message) holds +1 on `Shared::outstanding`;
-//! handoffs increment the successor before decrementing, so the counter
-//! only reaches 0 when the system is globally idle.
+//! The runtime is multi-tenant: chares, messages, and work requests all
+//! carry a [`JobId`], the placement map is keyed by `(JobId, ChareId)`,
+//! and jobs join and leave a live PE set through `AddChares`/`RemoveJob`
+//! messages. Quiescence and reductions are *per job* ([`JobState`]): every
+//! in-flight unit holds +1 on the global counter **and** on its job's
+//! counter; handoffs increment the successor before decrementing, so a
+//! job's counter reaches 0 exactly when that job is idle, regardless of
+//! what its co-tenants are doing.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::util::timeline::Timeline;
 
-use super::chare::{Chare, ChareId, Ctx, Effect, Msg, WorkDraft};
+use super::chare::{Chare, ChareId, Ctx, Effect, JobId, Msg, WorkDraft};
 use super::combiner::Pending;
-use super::registry::KernelRegistry;
+use super::metrics::{JobMetricsSnapshot, PoolReport};
+use super::registry::{KernelDescriptor, SharedRegistry};
 use super::work_request::WrResult;
 
 /// Messages a PE thread consumes.
 pub(crate) enum PeMsg {
     /// Deliver a message to a chare owned by this PE.
-    Deliver { to: ChareId, msg: Msg },
+    Deliver { job: JobId, to: ChareId, msg: Msg },
     /// Execute a batch of work requests on the CPU (hybrid path).
     CpuBatch(Vec<Pending>),
+    /// A new job placed these chares on this PE.
+    AddChares { job: JobId, chares: Vec<(ChareId, Box<dyn Chare>)> },
+    /// A job finished: drop its chares.
+    RemoveJob(JobId),
     Stop,
 }
 
 /// Messages the coordinator thread consumes.
 pub(crate) enum CoordMsg {
-    /// A chare submitted a work request.
-    Submit(WorkDraft),
+    /// A chare of `job` submitted a work request.
+    Submit { job: JobId, draft: WorkDraft },
     /// The GPU service finished a combined launch.
     GpuDone(anyhow::Result<crate::runtime::executor::Completion>),
     /// A PE finished a CPU batch: measured seconds, data items, results.
-    CpuDone { items: usize, secs: f64, results: Vec<(ChareId, WrResult)> },
+    CpuDone {
+        items: usize,
+        secs: f64,
+        results: Vec<(JobId, ChareId, WrResult)>,
+    },
     /// A CPU-pool worker finished one chunk of hybrid batch `batch`; the
     /// coordinator folds the chunks back into one hybrid observation.
     CpuChunk {
         batch: u64,
         items: usize,
         secs: f64,
-        results: Vec<(ChareId, WrResult)>,
+        results: Vec<(JobId, ChareId, WrResult)>,
     },
-    /// Invalidate all device-resident buffers (iteration boundary).
+    /// The shared registry grew: extend the per-device combiner/table
+    /// rows and teach the device pool the new families.
+    KindsAdded(Vec<KernelDescriptor>),
+    /// A job finished: drop its residency and rate models.
+    JobEnded(JobId),
+    /// Invalidate one job's device-resident buffers (its iteration
+    /// boundary; co-tenant residency is untouched).
+    InvalidateJob(JobId),
+    /// Invalidate all device-resident buffers (runtime-wide reset).
     InvalidateAll,
+    /// Reply with a live snapshot of the pool-wide report.
+    Snapshot(Sender<PoolReport>),
     Stop,
 }
 
@@ -69,18 +92,24 @@ pub enum RoutePolicy {
 }
 
 /// Routes work requests to pool devices and tracks per-device pending
-/// depth for the idle-steal rebalancer.
+/// depth for the idle-steal rebalancer. Multi-tenant: affinity is keyed
+/// by `(job, chare)`, and per-job pending depth is tracked alongside the
+/// per-device depths so the runtime can observe (and report) when one
+/// job's backlog dominates the pool.
 #[derive(Debug)]
 pub struct DeviceRouter {
     policy: RoutePolicy,
-    /// Chare -> device affinity. Seeded by rendezvous hash on first
-    /// sight; rewritten when a steal migrates the chare's pending work
-    /// (reuse-driven: future requests follow the chare's resident data).
-    affinity: HashMap<ChareId, usize>,
+    /// (job, chare) -> device affinity. Seeded by rendezvous hash on
+    /// first sight; rewritten when a steal migrates the chare's pending
+    /// work (reuse-driven: future requests follow the resident data).
+    affinity: HashMap<(JobId, ChareId), usize>,
     rr: usize,
     /// Per-device pending depth: requests queued in combiners plus
     /// requests in flight on the device.
     depth: Vec<usize>,
+    /// Per-job pending depth across all devices (the learned per-job
+    /// load the fairness layer and live metrics read).
+    job_depth: HashMap<u64, usize>,
     /// Steal when some device's depth is below `low` while another's is
     /// at or above `high`.
     low: usize,
@@ -101,6 +130,7 @@ impl DeviceRouter {
             affinity: HashMap::new(),
             rr: 0,
             depth: vec![0; devices.max(1)],
+            job_depth: HashMap::new(),
             low,
             high,
             steals: 0,
@@ -116,6 +146,11 @@ impl DeviceRouter {
         self.depth[device]
     }
 
+    /// Pending depth of one job across the whole pool.
+    pub fn job_depth(&self, job: JobId) -> usize {
+        self.job_depth.get(&job.0).copied().unwrap_or(0)
+    }
+
     pub fn steals(&self) -> u64 {
         self.steals
     }
@@ -125,7 +160,7 @@ impl DeviceRouter {
     }
 
     /// Route one request to a device per the policy.
-    pub fn route(&mut self, chare: ChareId) -> usize {
+    pub fn route(&mut self, job: JobId, chare: ChareId) -> usize {
         let n = self.depth.len();
         if n == 1 {
             return 0;
@@ -138,28 +173,39 @@ impl DeviceRouter {
             }
             RoutePolicy::AffinitySteal => *self
                 .affinity
-                .entry(chare)
-                .or_insert_with(|| rendezvous_device(chare, n)),
+                .entry((job, chare))
+                .or_insert_with(|| rendezvous_device(job, chare, n)),
         }
     }
 
     /// Re-home a chare after its pending batch migrated: subsequent
     /// requests follow the data to the new device.
-    pub fn rehome(&mut self, chare: ChareId, device: usize) {
+    pub fn rehome(&mut self, job: JobId, chare: ChareId, device: usize) {
         if self.policy == RoutePolicy::AffinitySteal {
-            self.affinity.insert(chare, device);
+            self.affinity.insert((job, chare), device);
         }
     }
 
-    pub fn note_enqueued(&mut self, device: usize, n: usize) {
+    /// Drop a finished job's affinity and depth records.
+    pub fn forget_job(&mut self, job: JobId) {
+        self.affinity.retain(|(j, _), _| *j != job);
+        self.job_depth.remove(&job.0);
+    }
+
+    pub fn note_enqueued(&mut self, device: usize, job: JobId, n: usize) {
         self.depth[device] += n;
+        *self.job_depth.entry(job.0).or_insert(0) += n;
     }
 
-    pub fn note_completed(&mut self, device: usize, n: usize) {
+    pub fn note_completed(&mut self, device: usize, job: JobId, n: usize) {
         self.depth[device] = self.depth[device].saturating_sub(n);
+        if let Some(d) = self.job_depth.get_mut(&job.0) {
+            *d = d.saturating_sub(n);
+        }
     }
 
-    /// Account a stolen batch of `n` requests moving `from` -> `to`.
+    /// Account a stolen batch of `n` requests moving `from` -> `to`
+    /// (device depths only; the requests stay pending for their jobs).
     pub fn note_stolen(&mut self, from: usize, to: usize, n: usize) {
         self.depth[from] = self.depth[from].saturating_sub(n);
         self.depth[to] += n;
@@ -202,10 +248,13 @@ impl DeviceRouter {
     }
 }
 
-/// Rendezvous (highest-random-weight) hash of a chare over `n` devices:
-/// stable per chare, uniform across chares, no coordination needed.
-fn rendezvous_device(chare: ChareId, n: usize) -> usize {
-    let key = ((chare.collection as u64) << 32) | chare.index as u64;
+/// Rendezvous (highest-random-weight) hash of a job-scoped chare over `n`
+/// devices: stable per chare, uniform across chares, no coordination
+/// needed. The job id participates so co-tenant jobs with identical chare
+/// ids still spread independently.
+fn rendezvous_device(job: JobId, chare: ChareId, n: usize) -> usize {
+    let key = splitmix64(job.0)
+        ^ (((chare.collection as u64) << 32) | chare.index as u64);
     (0..n)
         .max_by_key(|&d| splitmix64(key ^ (0x9e37_79b9_7f4a_7c15u64
             .wrapping_mul(d as u64 + 1))))
@@ -220,19 +269,135 @@ fn splitmix64(mut x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
-/// Reduction accumulator (Charm++-style `contribute`).
+/// Reduction accumulator (Charm++-style `contribute`), per job.
 #[derive(Debug, Default)]
 pub(crate) struct ReductionState {
     pub count: u64,
     pub sum: f64,
 }
 
-/// State shared by every thread in a run.
-pub struct Shared {
-    /// In-flight unit count; 0 <=> quiescent.
+/// Lifecycle status of a job on the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Submitted and executing (or draining).
+    Running,
+    /// Driver returned successfully; report available.
+    Done,
+    /// Driver returned an error.
+    Failed,
+    /// `JobHandle::cancel` was observed; the job drained and stopped.
+    Cancelled,
+}
+
+/// Live counters of one job, updated lock-free by the coordinator as
+/// launches and CPU batches complete. `JobHandle::metrics_snapshot` reads
+/// them while the job runs; the final values seed the job's
+/// [`crate::coordinator::JobReport`].
+#[derive(Debug, Default)]
+pub(crate) struct JobMetrics {
+    pub launches: AtomicU64,
+    pub cross_job_launches: AtomicU64,
+    pub gpu_requests: AtomicU64,
+    pub cpu_requests: AtomicU64,
+    pub gpu_items: AtomicU64,
+    pub cpu_items: AtomicU64,
+    pub transfer_bytes: AtomicU64,
+    /// Requests submitted but not yet completed (queue + in flight).
+    pub queued: AtomicI64,
+}
+
+/// Per-job shared state: quiescence counter, reduction, cancellation,
+/// and the live metrics. One `Arc` is held by the runtime's shared map
+/// (while the job lives), one by the job's `JobHandle` (for
+/// `metrics_snapshot`/`poll` after completion).
+#[derive(Debug)]
+pub struct JobState {
+    job: JobId,
     pub(crate) outstanding: AtomicI64,
     pub(crate) reduction: Mutex<ReductionState>,
     pub(crate) reduction_cv: Condvar,
+    pub(crate) cancelled: AtomicBool,
+    status: AtomicU8,
+    pub(crate) metrics: JobMetrics,
+}
+
+impl JobState {
+    pub(crate) fn new(job: JobId) -> Arc<JobState> {
+        Arc::new(JobState {
+            job,
+            outstanding: AtomicI64::new(0),
+            reduction: Mutex::new(ReductionState::default()),
+            reduction_cv: Condvar::new(),
+            cancelled: AtomicBool::new(false),
+            status: AtomicU8::new(0),
+            metrics: JobMetrics::default(),
+        })
+    }
+
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    /// In-flight units (messages + work requests) of this job.
+    pub fn outstanding(&self) -> i64 {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Request cancellation: wakes a driver blocked in `await_reduction`.
+    pub(crate) fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+        let _guard = self.reduction.lock().unwrap();
+        self.reduction_cv.notify_all();
+    }
+
+    pub fn status(&self) -> JobStatus {
+        match self.status.load(Ordering::SeqCst) {
+            0 => JobStatus::Running,
+            1 => JobStatus::Done,
+            2 => JobStatus::Failed,
+            _ => JobStatus::Cancelled,
+        }
+    }
+
+    pub(crate) fn set_status(&self, status: JobStatus) {
+        let v = match status {
+            JobStatus::Running => 0,
+            JobStatus::Done => 1,
+            JobStatus::Failed => 2,
+            JobStatus::Cancelled => 3,
+        };
+        self.status.store(v, Ordering::SeqCst);
+    }
+
+    /// Point-in-time copy of the live metrics.
+    pub fn metrics_snapshot(&self) -> JobMetricsSnapshot {
+        let m = &self.metrics;
+        JobMetricsSnapshot {
+            launches: m.launches.load(Ordering::SeqCst),
+            cross_job_launches: m.cross_job_launches.load(Ordering::SeqCst),
+            gpu_requests: m.gpu_requests.load(Ordering::SeqCst),
+            cpu_requests: m.cpu_requests.load(Ordering::SeqCst),
+            gpu_items: m.gpu_items.load(Ordering::SeqCst),
+            cpu_items: m.cpu_items.load(Ordering::SeqCst),
+            transfer_bytes: m.transfer_bytes.load(Ordering::SeqCst),
+            queued_requests: m.queued.load(Ordering::SeqCst).max(0),
+            outstanding: self.outstanding(),
+        }
+    }
+}
+
+/// State shared by every thread of a runtime: the global in-flight
+/// counter, the live-job table, and the timeline.
+pub struct Shared {
+    /// In-flight unit count across all jobs; 0 <=> globally quiescent.
+    pub(crate) outstanding: AtomicI64,
+    /// Live jobs by id. Entries are removed when a job's report is
+    /// sealed; its `JobHandle` keeps its own `Arc<JobState>`.
+    jobs: RwLock<HashMap<u64, Arc<JobState>>>,
     pub timeline: Timeline,
 }
 
@@ -240,8 +405,7 @@ impl Shared {
     pub(crate) fn new() -> Arc<Shared> {
         Arc::new(Shared {
             outstanding: AtomicI64::new(0),
-            reduction: Mutex::new(ReductionState::default()),
-            reduction_cv: Condvar::new(),
+            jobs: RwLock::new(HashMap::new()),
             timeline: Timeline::new(),
         })
     }
@@ -249,82 +413,158 @@ impl Shared {
     pub fn outstanding(&self) -> i64 {
         self.outstanding.load(Ordering::SeqCst)
     }
+
+    pub(crate) fn add_job(&self, job: JobId) -> Arc<JobState> {
+        let state = JobState::new(job);
+        self.jobs
+            .write()
+            .expect("job table poisoned")
+            .insert(job.0, state.clone());
+        state
+    }
+
+    pub(crate) fn job(&self, job: JobId) -> Option<Arc<JobState>> {
+        self.jobs
+            .read()
+            .expect("job table poisoned")
+            .get(&job.0)
+            .cloned()
+    }
+
+    pub(crate) fn remove_job(&self, job: JobId) {
+        self.jobs
+            .write()
+            .expect("job table poisoned")
+            .remove(&job.0);
+    }
+
+    /// Ids of the jobs currently live on the runtime.
+    pub fn live_jobs(&self) -> Vec<JobId> {
+        let mut out: Vec<JobId> = self
+            .jobs
+            .read()
+            .expect("job table poisoned")
+            .keys()
+            .map(|&j| JobId(j))
+            .collect();
+        out.sort();
+        out
+    }
 }
 
 /// Routes messages and work requests between PEs and the coordinator.
+/// Every route carries the owning job: placement is `(job, chare)`-keyed
+/// and both the global and the job's quiescence counters are maintained.
 #[derive(Clone)]
 pub(crate) struct Router {
     pub pes: Vec<Sender<PeMsg>>,
     pub coord: Sender<CoordMsg>,
-    pub placement: Arc<HashMap<ChareId, usize>>,
+    /// (job, chare) -> PE. Written at job submission/teardown, read on
+    /// every send.
+    pub placement: Arc<RwLock<HashMap<(JobId, ChareId), usize>>>,
     pub shared: Arc<Shared>,
-    /// The frozen kernel registry: entry-method contexts validate
-    /// submissions against it, and the PE CpuBatch path executes through
+    /// The append-only kernel registry: entry-method contexts validate
+    /// submissions against it, and the PE/pool CPU paths execute through
     /// its slot functions.
-    pub registry: Arc<KernelRegistry>,
+    pub registry: Arc<SharedRegistry>,
 }
 
 impl Router {
-    /// Asynchronously invoke an entry method (+1 outstanding until the PE
-    /// has processed it).
-    pub fn send_msg(&self, to: ChareId, msg: Msg) {
-        self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+    /// Asynchronously invoke an entry method (+1 outstanding, global and
+    /// job, until the PE has processed it).
+    pub fn send_msg(&self, job: JobId, to: ChareId, msg: Msg) {
+        self.hold(job, 1);
         let pe = *self
             .placement
-            .get(&to)
-            .unwrap_or_else(|| panic!("chare {to:?} is not registered"));
+            .read()
+            .expect("placement poisoned")
+            .get(&(job, to))
+            .unwrap_or_else(|| {
+                panic!("chare {to:?} of {job} is not registered")
+            });
         self.pes[pe]
-            .send(PeMsg::Deliver { to, msg })
+            .send(PeMsg::Deliver { job, to, msg })
             .expect("pe thread is down");
     }
 
     /// Submit a work request to the coordinator (+1 outstanding until its
     /// result message has been dispatched).
-    pub fn submit(&self, draft: WorkDraft) {
-        self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+    pub fn submit(&self, job: JobId, draft: WorkDraft) {
+        self.hold(job, 1);
         self.coord
-            .send(CoordMsg::Submit(draft))
+            .send(CoordMsg::Submit { job, draft })
             .expect("coordinator is down");
     }
 
-    /// Contribute to the run's reduction.
-    pub fn contribute(&self, value: f64) {
-        let mut r = self.shared.reduction.lock().unwrap();
-        r.count += 1;
-        r.sum += value;
-        self.shared.reduction_cv.notify_all();
+    /// Take `n` in-flight holds for `job` (global + per-job).
+    pub fn hold(&self, job: JobId, n: i64) {
+        self.shared.outstanding.fetch_add(n, Ordering::SeqCst);
+        if let Some(js) = self.shared.job(job) {
+            js.outstanding.fetch_add(n, Ordering::SeqCst);
+        }
     }
 
-    /// Dispatch the effects an entry method produced.
-    pub fn dispatch(&self, effects: Vec<Effect>) {
+    /// Release `n` in-flight holds for `job` (global + per-job).
+    pub fn release(&self, job: JobId, n: i64) {
+        self.shared.outstanding.fetch_sub(n, Ordering::SeqCst);
+        if let Some(js) = self.shared.job(job) {
+            js.outstanding.fetch_sub(n, Ordering::SeqCst);
+        }
+    }
+
+    /// Contribute to `job`'s reduction.
+    pub fn contribute(&self, job: JobId, value: f64) {
+        let Some(js) = self.shared.job(job) else {
+            return; // job already sealed: late contribution is dropped
+        };
+        let mut r = js.reduction.lock().unwrap();
+        r.count += 1;
+        r.sum += value;
+        js.reduction_cv.notify_all();
+    }
+
+    /// Dispatch the effects an entry method of `job` produced.
+    pub fn dispatch(&self, job: JobId, effects: Vec<Effect>) {
         for e in effects {
             match e {
-                Effect::Send(to, msg) => self.send_msg(to, msg),
-                Effect::Work(draft) => self.submit(draft),
-                Effect::Contribute(v) => self.contribute(v),
+                Effect::Send(to, msg) => self.send_msg(job, to, msg),
+                Effect::Work(draft) => self.submit(job, draft),
+                Effect::Contribute(v) => self.contribute(job, v),
             }
         }
     }
 }
 
-/// The PE worker loop. Owns this PE's chares for the lifetime of the run.
-pub(crate) fn pe_loop(
-    pe: usize,
-    rx: Receiver<PeMsg>,
-    mut chares: HashMap<ChareId, Box<dyn Chare>>,
-    router: Router,
-) {
+/// The PE worker loop. Chares arrive with their jobs (`AddChares`) and
+/// leave when the job ends (`RemoveJob`); the loop itself lives for the
+/// whole runtime.
+pub(crate) fn pe_loop(pe: usize, rx: Receiver<PeMsg>, router: Router) {
+    let mut chares: HashMap<(JobId, ChareId), Box<dyn Chare>> =
+        HashMap::new();
     while let Ok(m) = rx.recv() {
         match m {
-            PeMsg::Deliver { to, msg } => {
-                let mut chare = chares
-                    .remove(&to)
-                    .unwrap_or_else(|| panic!("chare {to:?} not on pe {pe}"));
-                let mut ctx = Ctx::new(pe, router.registry.clone());
+            PeMsg::AddChares { job, chares: added } => {
+                for (id, chare) in added {
+                    let prev = chares.insert((job, id), chare);
+                    assert!(
+                        prev.is_none(),
+                        "chare {id:?} of {job} already on pe {pe}"
+                    );
+                }
+            }
+            PeMsg::RemoveJob(job) => {
+                chares.retain(|(j, _), _| *j != job);
+            }
+            PeMsg::Deliver { job, to, msg } => {
+                let mut chare =
+                    chares.remove(&(job, to)).unwrap_or_else(|| {
+                        panic!("chare {to:?} of {job} not on pe {pe}")
+                    });
+                let mut ctx = Ctx::new(pe, job, router.registry.clone());
                 chare.receive(msg, &mut ctx);
-                chares.insert(to, chare);
-                router.dispatch(ctx.drain());
-                router.shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                chares.insert((job, to), chare);
+                router.dispatch(job, ctx.drain());
+                router.release(job, 1);
             }
             PeMsg::CpuBatch(batch) => {
                 let t0 = Instant::now();
@@ -339,14 +579,21 @@ pub(crate) fn pe_loop(
                     0.0,
                     items as u64,
                 );
-                // CpuDone holds +1 until the coordinator processes it; the
-                // work-request holds stay with the coordinator.
-                router.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+                // CpuDone holds +1 (global) until the coordinator
+                // processes it; the work-request holds stay with the
+                // coordinator.
+                router
+                    .shared
+                    .outstanding
+                    .fetch_add(1, Ordering::SeqCst);
                 router
                     .coord
                     .send(CoordMsg::CpuDone { items, secs, results })
                     .expect("coordinator is down");
-                router.shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+                router
+                    .shared
+                    .outstanding
+                    .fetch_sub(1, Ordering::SeqCst);
             }
             PeMsg::Stop => break,
         }
@@ -357,6 +604,8 @@ pub(crate) fn pe_loop(
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+
+    const JOB: JobId = JobId(0);
 
     struct Echo {
         got: Vec<u32>,
@@ -375,85 +624,148 @@ mod tests {
 
     fn harness(
         nchares: u32,
-    ) -> (Router, Receiver<CoordMsg>, Vec<Receiver<PeMsg>>) {
+    ) -> (Router, Receiver<CoordMsg>, Vec<Receiver<PeMsg>>, Arc<JobState>)
+    {
         let (coord_tx, coord_rx) = channel();
         let (pe_tx, pe_rx) = channel();
-        let placement: HashMap<ChareId, usize> =
-            (0..nchares).map(|i| (ChareId::new(0, i), 0)).collect();
-        let mut registry = KernelRegistry::new();
+        let placement: HashMap<(JobId, ChareId), usize> = (0..nchares)
+            .map(|i| ((JOB, ChareId::new(0, i)), 0))
+            .collect();
+        let registry = SharedRegistry::new();
         registry
             .register(crate::coordinator::registry::md_descriptor([
                 1.0, 0.04, 1.0,
             ]))
             .unwrap();
+        let shared = Shared::new();
+        let state = shared.add_job(JOB);
         let router = Router {
             pes: vec![pe_tx],
             coord: coord_tx,
-            placement: Arc::new(placement),
-            shared: Shared::new(),
+            placement: Arc::new(RwLock::new(placement)),
+            shared,
             registry: Arc::new(registry),
         };
-        (router, coord_rx, vec![pe_rx])
+        (router, coord_rx, vec![pe_rx], state)
     }
 
     #[test]
-    fn send_msg_increments_outstanding() {
-        let (router, _crx, _prx) = harness(1);
-        router.send_msg(ChareId::new(0, 0), Msg::new(1, ()));
+    fn send_msg_increments_outstanding_globally_and_per_job() {
+        let (router, _crx, _prx, state) = harness(1);
+        router.send_msg(JOB, ChareId::new(0, 0), Msg::new(1, ()));
         assert_eq!(router.shared.outstanding(), 1);
+        assert_eq!(state.outstanding(), 1);
     }
 
     #[test]
     fn pe_loop_processes_and_decrements() {
-        let (router, _crx, mut prx) = harness(2);
+        let (router, _crx, mut prx, state) = harness(2);
         let rx = prx.pop().unwrap();
-        let mut chares: HashMap<ChareId, Box<dyn Chare>> = HashMap::new();
-        chares.insert(
-            ChareId::new(0, 0),
-            Box::new(Echo { got: vec![], reply_to: Some(ChareId::new(0, 1)) }),
-        );
-        chares.insert(
-            ChareId::new(0, 1),
-            Box::new(Echo { got: vec![], reply_to: None }),
-        );
+        router.pes[0]
+            .send(PeMsg::AddChares {
+                job: JOB,
+                chares: vec![
+                    (
+                        ChareId::new(0, 0),
+                        Box::new(Echo {
+                            got: vec![],
+                            reply_to: Some(ChareId::new(0, 1)),
+                        }) as Box<dyn Chare>,
+                    ),
+                    (
+                        ChareId::new(0, 1),
+                        Box::new(Echo { got: vec![], reply_to: None }),
+                    ),
+                ],
+            })
+            .unwrap();
 
-        router.send_msg(ChareId::new(0, 0), Msg::new(7, ()));
+        router.send_msg(JOB, ChareId::new(0, 0), Msg::new(7, ()));
         router.pes[0].send(PeMsg::Stop).unwrap();
         // process: chare 0 replies to chare 1, but Stop is already queued,
         // so deliver the reply manually through another loop run
         let r2 = router.clone();
-        pe_loop(0, rx, chares, r2);
+        pe_loop(0, rx, r2);
         // chare 0 processed (-1), its reply enqueued (+1): net 1
         assert_eq!(router.shared.outstanding(), 1);
-        let red = router.shared.reduction.lock().unwrap();
+        assert_eq!(state.outstanding(), 1);
+        let red = state.reduction.lock().unwrap();
         assert_eq!(red.count, 1);
     }
 
     #[test]
-    fn contribute_accumulates() {
-        let (router, _crx, _prx) = harness(1);
-        router.contribute(2.0);
-        router.contribute(3.0);
-        let r = router.shared.reduction.lock().unwrap();
+    fn contribute_accumulates_per_job() {
+        let (router, _crx, _prx, state) = harness(1);
+        router.contribute(JOB, 2.0);
+        router.contribute(JOB, 3.0);
+        // a contribution to an unknown job is dropped, not a panic
+        router.contribute(JobId(99), 5.0);
+        let r = state.reduction.lock().unwrap();
         assert_eq!(r.count, 2);
         assert_eq!(r.sum, 5.0);
+    }
+
+    #[test]
+    fn remove_job_drops_chares() {
+        let (router, _crx, mut prx, _state) = harness(1);
+        let rx = prx.pop().unwrap();
+        router.pes[0]
+            .send(PeMsg::AddChares {
+                job: JOB,
+                chares: vec![(
+                    ChareId::new(0, 0),
+                    Box::new(Echo { got: vec![], reply_to: None })
+                        as Box<dyn Chare>,
+                )],
+            })
+            .unwrap();
+        router.pes[0].send(PeMsg::RemoveJob(JOB)).unwrap();
+        router.pes[0].send(PeMsg::Stop).unwrap();
+        // would panic on Deliver-after-Remove; plain drain must not
+        pe_loop(0, rx, router.clone());
+    }
+
+    #[test]
+    fn job_state_cancel_and_status() {
+        let state = JobState::new(JobId(3));
+        assert_eq!(state.status(), JobStatus::Running);
+        assert!(!state.cancelled());
+        state.cancel();
+        assert!(state.cancelled());
+        state.set_status(JobStatus::Cancelled);
+        assert_eq!(state.status(), JobStatus::Cancelled);
+        let snap = state.metrics_snapshot();
+        assert_eq!(snap.launches, 0);
+        assert_eq!(snap.outstanding, 0);
+    }
+
+    #[test]
+    fn shared_job_table_add_lookup_remove() {
+        let shared = Shared::new();
+        let a = shared.add_job(JobId(1));
+        shared.add_job(JobId(2));
+        assert_eq!(shared.live_jobs(), vec![JobId(1), JobId(2)]);
+        assert!(Arc::ptr_eq(&shared.job(JobId(1)).unwrap(), &a));
+        shared.remove_job(JobId(1));
+        assert!(shared.job(JobId(1)).is_none());
+        assert_eq!(shared.live_jobs(), vec![JobId(2)]);
     }
 
     #[test]
     fn router_single_device_always_zero() {
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 1, 1, 4);
         for i in 0..10 {
-            assert_eq!(r.route(ChareId::new(0, i)), 0);
+            assert_eq!(r.route(JOB, ChareId::new(0, i)), 0);
         }
         let mut rr = DeviceRouter::new(RoutePolicy::RoundRobin, 1, 1, 4);
-        assert_eq!(rr.route(ChareId::new(0, 0)), 0);
+        assert_eq!(rr.route(JOB, ChareId::new(0, 0)), 0);
     }
 
     #[test]
     fn round_robin_cycles_devices() {
         let mut r = DeviceRouter::new(RoutePolicy::RoundRobin, 3, 1, 4);
         let seq: Vec<usize> =
-            (0..6).map(|i| r.route(ChareId::new(0, i))).collect();
+            (0..6).map(|i| r.route(JOB, ChareId::new(0, i))).collect();
         assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -463,9 +775,9 @@ mod tests {
         let mut seen = std::collections::HashSet::new();
         for i in 0..64 {
             let c = ChareId::new(1, i);
-            let d = r.route(c);
+            let d = r.route(JOB, c);
             assert!(d < 4);
-            assert_eq!(r.route(c), d, "affinity must be stable");
+            assert_eq!(r.route(JOB, c), d, "affinity must be stable");
             seen.insert(d);
         }
         assert!(
@@ -475,13 +787,41 @@ mod tests {
     }
 
     #[test]
+    fn cotenant_jobs_spread_independently() {
+        // identical chare ids under different jobs must not all land on
+        // the same device
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 4, 1, 4);
+        let mut differs = false;
+        for i in 0..32 {
+            let c = ChareId::new(0, i);
+            if r.route(JobId(1), c) != r.route(JobId(2), c) {
+                differs = true;
+            }
+        }
+        assert!(differs, "job id must participate in placement");
+    }
+
+    #[test]
     fn rehome_redirects_future_requests() {
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 4, 1, 4);
         let c = ChareId::new(0, 9);
-        let d0 = r.route(c);
+        let d0 = r.route(JOB, c);
         let d1 = (d0 + 1) % 4;
-        r.rehome(c, d1);
-        assert_eq!(r.route(c), d1);
+        r.rehome(JOB, c, d1);
+        assert_eq!(r.route(JOB, c), d1);
+    }
+
+    #[test]
+    fn job_depths_track_enqueue_and_completion() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 2, 2, 6);
+        r.note_enqueued(0, JobId(1), 5);
+        r.note_enqueued(1, JobId(2), 2);
+        assert_eq!(r.job_depth(JobId(1)), 5);
+        assert_eq!(r.job_depth(JobId(2)), 2);
+        r.note_completed(0, JobId(1), 3);
+        assert_eq!(r.job_depth(JobId(1)), 2);
+        r.forget_job(JobId(1));
+        assert_eq!(r.job_depth(JobId(1)), 0);
     }
 
     #[test]
@@ -489,17 +829,17 @@ mod tests {
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 2, 2, 6);
         let shares = vec![0.5, 0.5];
         assert!(r.steal_candidate(&shares).is_none(), "both idle: no steal");
-        r.note_enqueued(0, 6);
+        r.note_enqueued(0, JOB, 6);
         assert_eq!(
             r.steal_candidate(&shares),
             Some((0, 1)),
             "0 loaded, 1 idle"
         );
         // destination fills past the low watermark: no steal
-        r.note_enqueued(1, 2);
+        r.note_enqueued(1, JOB, 2);
         assert!(r.steal_candidate(&shares).is_none());
         // completions drain the destination below the watermark again
-        r.note_completed(1, 1);
+        r.note_completed(1, JOB, 1);
         assert_eq!(r.steal_candidate(&shares), Some((0, 1)));
         // accounting moves depth with the stolen batch
         r.note_stolen(0, 1, 4);
@@ -513,7 +853,7 @@ mod tests {
     #[test]
     fn round_robin_never_steals() {
         let mut r = DeviceRouter::new(RoutePolicy::RoundRobin, 2, 2, 4);
-        r.note_enqueued(0, 100);
+        r.note_enqueued(0, JOB, 100);
         assert!(!r.watermarks_crossed());
         assert!(r.steal_candidate(&[0.5, 0.5]).is_none());
     }
@@ -522,9 +862,9 @@ mod tests {
     fn watermarks_crossed_tracks_candidate_existence() {
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 2, 2, 6);
         assert!(!r.watermarks_crossed(), "both idle");
-        r.note_enqueued(0, 6);
+        r.note_enqueued(0, JOB, 6);
         assert!(r.watermarks_crossed());
-        r.note_enqueued(1, 2);
+        r.note_enqueued(1, JOB, 2);
         assert!(!r.watermarks_crossed(), "no device below the low mark");
     }
 
@@ -534,9 +874,9 @@ mod tests {
         // device 1 is much faster (share 0.8), so equal raw depth weighs
         // lighter on it and it pulls the stolen batch first
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 3, 2, 8);
-        r.note_enqueued(0, 1);
-        r.note_enqueued(1, 1);
-        r.note_enqueued(2, 10);
+        r.note_enqueued(0, JOB, 1);
+        r.note_enqueued(1, JOB, 1);
+        r.note_enqueued(2, JOB, 10);
         let got = r.steal_candidate(&[0.1, 0.8, 0.1]);
         assert_eq!(got, Some((2, 1)));
     }
@@ -547,9 +887,9 @@ mod tests {
         // the lightest weighted depth but is not below the low mark, so
         // the truly idle device 0 is the destination
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 3, 4, 16);
-        r.note_enqueued(0, 2);
-        r.note_enqueued(1, 6);
-        r.note_enqueued(2, 30);
+        r.note_enqueued(0, JOB, 2);
+        r.note_enqueued(1, JOB, 6);
+        r.note_enqueued(2, JOB, 30);
         let got = r.steal_candidate(&[0.05, 0.9, 0.05]);
         assert_eq!(got, Some((2, 0)));
     }
@@ -558,11 +898,12 @@ mod tests {
     fn cpu_batch_computes_and_reports() {
         use crate::coordinator::registry::KernelKindId;
         use crate::coordinator::work_request::{Tile, WorkRequest};
-        let (router, crx, mut prx) = harness(1);
+        let (router, crx, mut prx, _state) = harness(1);
         let rx = prx.pop().unwrap();
         let batch = vec![Pending {
             wr: WorkRequest {
                 id: 5,
+                job: JOB,
                 chare: ChareId::new(0, 0),
                 kind: KernelKindId(0),
                 buffer: None,
@@ -579,14 +920,15 @@ mod tests {
         }];
         router.pes[0].send(PeMsg::CpuBatch(batch)).unwrap();
         router.pes[0].send(PeMsg::Stop).unwrap();
-        pe_loop(0, rx, HashMap::new(), router.clone());
+        pe_loop(0, rx, router.clone());
         match crx.try_recv().unwrap() {
             CoordMsg::CpuDone { items, secs, results } => {
                 assert_eq!(items, 2);
                 assert!(secs >= 0.0);
                 assert_eq!(results.len(), 1);
-                assert_eq!(results[0].1.wr_id, 5);
-                assert!(results[0].1.out[0] < 0.0); // repulsion in -x
+                assert_eq!(results[0].0, JOB, "result carries its job");
+                assert_eq!(results[0].2.wr_id, 5);
+                assert!(results[0].2.out[0] < 0.0); // repulsion in -x
             }
             _ => panic!("expected CpuDone"),
         }

@@ -12,7 +12,7 @@
 
 use crate::runtime::memory::BufferId;
 
-use super::chare::ChareId;
+use super::chare::{ChareId, JobId};
 use super::registry::KernelKindId;
 
 /// Kernel input data carried by one work request: one buffer per
@@ -51,13 +51,19 @@ impl Tile {
 pub struct WorkRequest {
     /// Unique id assigned by the runtime at submission.
     pub id: u64,
-    /// Chare to notify with the results.
+    /// The job that submitted the request. Requests of the same kernel
+    /// family from *different* jobs may share one combined launch
+    /// (cross-job combining); accounting is split back out per job when
+    /// the launch completes.
+    pub job: JobId,
+    /// Chare to notify with the results (scoped to `job`).
     pub chare: ChareId,
     /// Registered kernel family this request belongs to.
     pub kind: KernelKindId,
     /// Chare data buffer this request reads; the chare table uses it for
     /// residency/reuse decisions (section 3.2). `None` for payloads with no
-    /// reusable buffer.
+    /// reusable buffer. App-chosen ids must fit in 48 bits: the runtime
+    /// namespaces residency keys by job in the upper bits.
     pub buffer: Option<BufferId>,
     /// Workload model: number of input data items (section 3.3 models a
     /// request's cost by the amount of input data it accesses).
@@ -100,6 +106,7 @@ mod tests {
     fn force_wr() -> WorkRequest {
         WorkRequest {
             id: 1,
+            job: JobId(0),
             chare: ChareId::new(0, 0),
             kind: KernelKindId(0),
             buffer: Some(42),

@@ -2,7 +2,9 @@
 //!
 //! Reproduction of *Strategies for Efficient Executions of Irregular
 //! Message-Driven Parallel Applications on GPU Systems* (Rengasamy &
-//! Vadhiyar, 2020) as a three-layer rust + JAX + Pallas stack:
+//! Vadhiyar, 2020), grown into a **persistent, multi-tenant runtime**: a
+//! three-layer rust + JAX + Pallas stack that serves concurrent jobs on
+//! one long-lived device pool.
 //!
 //! - **Layer 3** (`coordinator`): the G-Charm runtime -- message-driven
 //!   chares over PE worker threads, adaptive kernel combining, data reuse
@@ -16,16 +18,49 @@
 //!   zero-allocation arena and pipelines staging against execution
 //!   (`runtime::staging`, PERF.md).
 //!
-//! The kernel surface is **open**: apps register kernel families at
-//! startup (`coordinator::GCharm::register_kernel` with a
-//! `KernelDescriptor`) and submit shape-checked `Tile` payloads tagged
-//! with the returned `KernelKindId`; every scheduling layer is
-//! table-driven off the registry. See PERF.md, "Adding a workload".
+//! ## Jobs, not runs
+//!
+//! The primary entry point is [`coordinator::Runtime`]: it owns the
+//! sharded device pool, the **append-only shared kernel registry**, the
+//! hybrid scheduler, and the PE worker threads for its whole lifetime.
+//! Applications call [`coordinator::Runtime::submit_job`] with a
+//! [`coordinator::JobSpec`] -- the chare set, the kernel-family
+//! registrations, and a *driver* closure whose return is the job's
+//! completion condition -- and receive a [`coordinator::JobHandle`] with
+//! blocking `wait() -> JobReport`, non-blocking `poll()`, `cancel()`, and
+//! a live `metrics_snapshot()`.
+//!
+//! Tenancy is real, not time-sliced: identical kernel registrations from
+//! different jobs resolve to one shared kind id, so the combiners may
+//! merge tiles from **different jobs into one launch** (cross-job
+//! combining -- the paper's adaptive combining extended across tenants),
+//! with per-job accounting split back out exactly on completion
+//! ([`coordinator::JobReport`] counters sum to the
+//! [`coordinator::PoolReport`] totals) and a weighted-fair share learned
+//! per `(job, kind)` keeping one heavy job from starving its co-tenants.
+//! Reductions, quiescence, residency keys, and routing affinity are all
+//! namespaced by [`coordinator::JobId`]. `gcharm serve` runs a mixed
+//! nbody + md + 2x spmv trace concurrently on one runtime.
+//!
+//! The pre-redesign one-shot API survives as [`coordinator::GCharm`]:
+//! one interactively driven job on a private runtime (`new -> register
+//! kernels/chares -> start -> drive -> shutdown`), so existing examples
+//! and baselines keep working unchanged.
+//!
+//! The kernel surface is **open**: jobs register kernel families
+//! (`KernelDescriptor` in their specs, or
+//! `GCharm::register_kernel`) and submit shape-checked `Tile` payloads
+//! tagged with the returned `KernelKindId`; every scheduling layer is
+//! table-driven off the registry, and a live runtime learns new families
+//! as jobs bring them. See PERF.md, "Adding a workload" and "Serving
+//! mixed workloads".
 //!
 //! Applications (`apps`): a ChaNGa-style Barnes-Hut N-Body simulation, a
 //! 2D molecular dynamics mini-app -- the paper's two evaluation
 //! workloads -- and an SpMV-style sparse neighbor-update app registered
-//! purely through the public API. See DESIGN.md for the experiment index.
+//! purely through the public API. Each exposes both a one-shot `run` and
+//! a `job_spec` builder for mixed-workload serving. See DESIGN.md for
+//! the experiment index.
 pub mod apps;
 pub mod bench;
 pub mod coordinator;

@@ -19,6 +19,10 @@
 //! gcharm spmv [opts]                sparse neighbor-update run (the
 //!   --rows N --iters N --nnz N      registry-API demo workload)
 //!   --pes N --devices N --split static|adaptive
+//! gcharm serve [opts]               one persistent runtime serving a
+//!   --pes N --devices N             mixed nbody+md+2x-spmv workload
+//!   --iters N --rows N --particles N  trace concurrently; asserts that
+//!                                   cross-job combining fired
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
 //! ```
 
@@ -26,12 +30,14 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use std::sync::{Arc, Mutex};
+
 use gcharm::apps::md::{self, MdConfig};
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench;
 use gcharm::coordinator::{
-    CombinePolicy, Config, DataPolicy, RoutePolicy, SplitPolicy,
+    CombinePolicy, Config, DataPolicy, RoutePolicy, Runtime, SplitPolicy,
 };
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -213,6 +219,103 @@ fn cmd_spmv(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// One persistent runtime serving a mixed workload trace: two SpMV jobs
+/// (same `spmv_row` family — the cross-job-combining pair), an MD job,
+/// and an N-Body job, all concurrent. Prints per-job reports and the
+/// pool report, and fails if no flush ever combined tiles from two
+/// different jobs. Whether two tenants' bursts overlap inside one
+/// combiner window is timing-dependent, so the trace retries on a fresh
+/// runtime a couple of times before declaring failure (CI gates on the
+/// exit code).
+fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
+    let iters: usize = get(&flags, "iters", 6);
+    let rows: usize = get(&flags, "rows", 512);
+    let particles: usize = get(&flags, "particles", 2048);
+    let attempts: usize = get(&flags, "attempts", 3);
+    let runtime_cfg = Config {
+        pes: get(&flags, "pes", 4),
+        devices: get(&flags, "devices", 1),
+        route: route_policy(
+            flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
+        )?,
+        ..Config::default()
+    };
+    println!(
+        "serve: pes={} devices={} iters={iters} rows={rows} \
+         particles={particles}",
+        runtime_cfg.pes, runtime_cfg.devices
+    );
+
+    for attempt in 1..=attempts.max(1) {
+        let report = serve_trace(&runtime_cfg, iters, rows, particles)?;
+        println!("{report}");
+        if report.cross_job_launches >= 1 {
+            println!(
+                "cross-job combining: {} shared launches",
+                report.cross_job_launches
+            );
+            return Ok(());
+        }
+        eprintln!(
+            "serve: attempt {attempt}/{attempts}: no launch combined \
+             tiles from two different jobs; retrying on a fresh runtime"
+        );
+    }
+    anyhow::bail!(
+        "serve: no launch combined tiles from two different jobs in \
+         {attempts} attempts (cross_job_launches = 0); the runtime \
+         failed to multiplex the spmv tenants"
+    );
+}
+
+/// Run the mixed trace once on one fresh runtime; the pool report.
+fn serve_trace(
+    runtime_cfg: &Config,
+    iters: usize,
+    rows: usize,
+    particles: usize,
+) -> Result<gcharm::coordinator::PoolReport> {
+    let rt = Runtime::new(runtime_cfg.clone())?;
+
+    // The two SpMV tenants go first so their sweeps race through the
+    // shared spmv_row combiners from t0.
+    let mut spmv_a = SpmvConfig::new(rows);
+    spmv_a.iters = iters;
+    let mut spmv_b = SpmvConfig::new(rows);
+    spmv_b.iters = iters;
+    spmv_b.seed = 1913; // a different matrix, the same kernel family
+    // Per-job configs carry only workload shape: the *shared* runtime
+    // above owns pes/devices/policies for every tenant.
+    let mut md_cfg = MdConfig::new(particles);
+    md_cfg.steps = iters.min(4);
+    let mut nbody_cfg = NbodyConfig::new(DatasetSpec::tiny());
+    nbody_cfg.iters = iters.min(2);
+    nbody_cfg.pieces_per_pe = 2;
+    nbody_cfg.runtime.pes = runtime_cfg.pes;
+
+    let handles = vec![
+        rt.submit_job(spmv::job_spec_with_master(
+            &spmv_a,
+            "spmv-a",
+            Arc::new(Mutex::new(vec![0.0f32; spmv_a.rows])),
+        ))?,
+        rt.submit_job(spmv::job_spec_with_master(
+            &spmv_b,
+            "spmv-b",
+            Arc::new(Mutex::new(vec![0.0f32; spmv_b.rows])),
+        ))?,
+        rt.submit_job(md::job_spec(&md_cfg)?)?,
+        rt.submit_job(nbody::job_spec(&nbody_cfg))?,
+    ];
+
+    for h in handles {
+        let name = h.name().to_string();
+        let report = h.wait()?;
+        println!("job {name:<8} done: {report}");
+    }
+    Ok(rt.shutdown())
+}
+
 fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
     let scale = if flags.contains_key("full") {
         bench::Scale::full()
@@ -250,10 +353,11 @@ fn main() -> Result<()> {
         "nbody" => cmd_nbody(flags),
         "md" => cmd_md(flags),
         "spmv" => cmd_spmv(flags),
+        "serve" => cmd_serve(flags),
         "figures" => cmd_figures(flags),
         _ => {
             println!(
-                "usage: gcharm <info|nbody|md|spmv|figures> [--flags]\n\
+                "usage: gcharm <info|nbody|md|spmv|serve|figures> [--flags]\n\
                  see rust/src/main.rs header for options"
             );
             Ok(())

@@ -375,12 +375,24 @@ impl LaunchMeta {
 enum ChunkMsg {
     Chunk { meta: LaunchMeta, staged: StagedChunk, last: bool },
     Abort { id: u64, error: anyhow::Error },
+    /// New registered families for the engine's dispatch table (the
+    /// stager has already extended its manifest).
+    AddKernels(Vec<Arc<TileKernel>>),
+}
+
+/// Submitter -> stager messages.
+enum ServiceMsg {
+    Launch(LaunchSpec),
+    /// The shared registry grew: make the new families servable before
+    /// any launch of theirs arrives (FIFO on this channel guarantees the
+    /// ordering).
+    AddKernels(Vec<Arc<TileKernel>>),
 }
 
 /// Handle to the pipelined GPU service: a stager thread padding launches
 /// through the arena, feeding an engine thread over a bounded queue.
 pub struct GpuService {
-    tx: Sender<LaunchSpec>,
+    tx: Sender<ServiceMsg>,
     stager: Option<JoinHandle<()>>,
     engine: Option<JoinHandle<Result<()>>>,
 }
@@ -408,7 +420,7 @@ impl GpuService {
     ) -> Result<GpuService> {
         let (manifest, real) = Manifest::for_kernels(artifacts, &kernels)?;
 
-        let (tx, rx) = channel::<LaunchSpec>();
+        let (tx, rx) = channel::<ServiceMsg>();
         let (chunk_tx, chunk_rx) = sync_channel::<ChunkMsg>(PIPELINE_DEPTH);
         let (ret_tx, ret_rx) = channel::<StagedChunk>();
 
@@ -429,7 +441,16 @@ impl GpuService {
     /// Submit a launch; completion arrives on the `done` channel.
     pub fn submit(&self, spec: LaunchSpec) -> Result<()> {
         self.tx
-            .send(spec)
+            .send(ServiceMsg::Launch(spec))
+            .map_err(|_| anyhow::anyhow!("gpu service is down"))
+    }
+
+    /// Teach the live service new kernel families (append-only registry
+    /// growth). Queued ahead of any launch of those families, so by the
+    /// time such a launch reaches the stager/engine both can serve it.
+    pub fn add_kernels(&self, kernels: Vec<Arc<TileKernel>>) -> Result<()> {
+        self.tx
+            .send(ServiceMsg::AddKernels(kernels))
             .map_err(|_| anyhow::anyhow!("gpu service is down"))
     }
 }
@@ -452,13 +473,25 @@ impl Drop for GpuService {
 /// Stager thread: pads queued launches chunk by chunk while the engine
 /// thread executes earlier ones; recycles executed buffers.
 fn stager_loop(
-    manifest: Manifest,
-    rx: Receiver<LaunchSpec>,
+    mut manifest: Manifest,
+    rx: Receiver<ServiceMsg>,
     chunk_tx: SyncSender<ChunkMsg>,
     ret_rx: Receiver<StagedChunk>,
 ) {
     let mut arena = StagingArena::new();
-    'specs: while let Ok(spec) = rx.recv() {
+    'specs: while let Ok(msg) = rx.recv() {
+        let spec = match msg {
+            ServiceMsg::Launch(spec) => spec,
+            ServiceMsg::AddKernels(kernels) => {
+                for k in &kernels {
+                    manifest.ensure_family(k);
+                }
+                if chunk_tx.send(ChunkMsg::AddKernels(kernels)).is_err() {
+                    break 'specs;
+                }
+                continue 'specs;
+            }
+        };
         let meta = LaunchMeta::of(&spec);
         let abort = |e: anyhow::Error| ChunkMsg::Abort { id: meta.id, error: e };
         if meta.batch == 0 {
@@ -603,6 +636,9 @@ fn engine_loop(
                         }
                     }
                 }
+            }
+            ChunkMsg::AddKernels(kernels) => {
+                engine.add_kernels(&kernels);
             }
             ChunkMsg::Abort { id, error } => {
                 if skip == Some(id) {

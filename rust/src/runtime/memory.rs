@@ -155,6 +155,18 @@ impl DeviceMemory {
         }
     }
 
+    /// Drop every resident buffer whose id satisfies `pred` — e.g. all
+    /// buffers of one job advancing its iteration on a multi-tenant pool,
+    /// leaving co-tenant residency intact. The per-buffer pinned-slot
+    /// contract of `invalidate` applies: call at the *job's* quiescence.
+    pub fn invalidate_where(&mut self, pred: impl Fn(BufferId) -> bool) {
+        let ids: Vec<BufferId> =
+            self.resident.keys().copied().filter(|&id| pred(id)).collect();
+        for id in ids {
+            self.invalidate(id);
+        }
+    }
+
     /// Drop everything (new iteration with fully rewritten data). Must be
     /// called at quiescence: see `invalidate` for the pinned-slot contract.
     pub fn invalidate_all(&mut self) {
@@ -193,6 +205,22 @@ impl DeviceMemory {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn invalidate_where_scopes_to_predicate() {
+        let mut m = DeviceMemory::new(8);
+        // two "jobs" in the upper bits of the key
+        let key = |job: u64, id: u64| (job << 48) | id;
+        for id in 0..3 {
+            m.acquire(key(1, id)).unwrap();
+            m.acquire(key(2, id)).unwrap();
+        }
+        m.invalidate_where(|k| k >> 48 == 1);
+        for id in 0..3 {
+            assert!(m.peek(key(1, id)).is_none(), "job 1 dropped");
+            assert!(m.peek(key(2, id)).is_some(), "job 2 untouched");
+        }
+    }
 
     #[test]
     fn first_acquire_is_miss_second_is_hit() {

@@ -150,6 +150,22 @@ impl Engine {
         &self.manifest
     }
 
+    /// Register additional kernel families on a live engine. The shared
+    /// registry of a persistent runtime is append-only: a later job may
+    /// bring families the engine never saw at construction. Synthesizes
+    /// manifest ladders for the new families (no-op for ones already
+    /// servable) and wires their slot functions into the sim dispatch
+    /// table.
+    pub fn add_kernels(&mut self, kernels: &[Arc<TileKernel>]) {
+        for k in kernels {
+            self.manifest.ensure_family(k);
+            self.kernels.insert(k.name.to_string(), k.clone());
+            if let Some(g) = &k.gather_name {
+                self.kernels.insert(g.to_string(), k.clone());
+            }
+        }
+    }
+
     pub fn platform(&self) -> String {
         match &self.backend {
             Backend::Sim => "sim-native".to_string(),

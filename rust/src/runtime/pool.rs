@@ -53,6 +53,17 @@ impl DevicePool {
         self.services.len()
     }
 
+    /// Teach every device new kernel families (append-only registry
+    /// growth: a job submitted to a live runtime may bring families the
+    /// pool was not spawned with). Ordered ahead of any launch of those
+    /// families on each service's queue.
+    pub fn add_kernels(&self, kernels: &[Arc<TileKernel>]) -> Result<()> {
+        for svc in &self.services {
+            svc.add_kernels(kernels.to_vec())?;
+        }
+        Ok(())
+    }
+
     /// Submit a launch to one device; its completion arrives on the pool's
     /// `done` channel tagged with `device`.
     pub fn submit(&self, device: usize, spec: LaunchSpec) -> Result<()> {
@@ -159,6 +170,31 @@ mod tests {
         )
         .unwrap();
         assert!(pool.submit(2, gravity_spec(0, 1, 0.0)).is_err());
+    }
+
+    #[test]
+    fn kernels_added_after_spawn_are_servable() {
+        // a persistent runtime spawns its pool before any job arrives;
+        // families registered later must execute on every device
+        let (tx, rx) = channel();
+        let pool = DevicePool::spawn(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            Vec::new(),
+            2,
+            tx,
+        )
+        .unwrap();
+        pool.add_kernels(&gravity()).unwrap();
+        for d in 0..2 {
+            pool.submit(d, gravity_spec(d as u64, 2, 0.5)).unwrap();
+        }
+        for _ in 0..2 {
+            let c = rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("completion")
+                .expect("late-registered family executes");
+            assert_eq!(c.batch, 2);
+        }
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Shared helpers for the multi-tenant runtime integration tests: a
+//! synthetic GPU-only kernel family and a bursting chare whose per-round
+//! reduction (`count * rows`, all-ones tiles) is exact in f64 regardless
+//! of combining, splitting, or arrival order — the property the
+//! equivalence and accounting tests lean on.
+#![allow(dead_code)]
+
+use std::sync::{Arc, Barrier};
+
+use gcharm::coordinator::{
+    Chare, ChareId, Ctx, JobSpec, KernelDescriptor, KernelKindId, Msg, Tile,
+    WorkDraft, WrResult, METHOD_RESULT,
+};
+use gcharm::runtime::kernel::{TileArgSpec, TileKernel};
+use gcharm::runtime::KernelResources;
+
+pub const METHOD_GO: u32 = 1;
+
+/// Per-slot kernel: sum of the tile entries.
+pub fn sum_slot(args: &[&[f32]], _c: &[f32]) -> Vec<f32> {
+    vec![args[0].iter().sum()]
+}
+
+/// A synthetic GPU-only family: `rows x 1` tile, 1x1 output, occupancy
+/// cap 104 on the modeled device.
+pub fn synth_descriptor(name: &str, rows: usize) -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel {
+            name: Arc::from(name),
+            args: vec![TileArgSpec { name: "tile", rows, width: 1, pad: 0.0 }],
+            constant: Arc::new(Vec::new()),
+            out_rows: 1,
+            out_width: 1,
+            resources: KernelResources {
+                threads_per_block: 128,
+                regs_per_thread: 64,
+                smem_per_block: 4096,
+            },
+            items_per_slot: rows as u64,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: sum_slot,
+        }),
+        combine: None,
+        sort_by_slot: false,
+        cpu_fallback: false,
+    }
+}
+
+/// A chare that bursts `count` all-ones requests of the kind carried by
+/// each GO message and contributes the summed outputs once every result
+/// returned.
+pub struct Burster {
+    pub id: ChareId,
+    pub rows: usize,
+    pub count: usize,
+    pub pending: usize,
+    pub sum: f64,
+}
+
+impl Chare for Burster {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_GO => {
+                let kind: KernelKindId = msg.take();
+                self.pending = self.count;
+                self.sum = 0.0;
+                for i in 0..self.count {
+                    ctx.submit(WorkDraft {
+                        chare: self.id,
+                        kind,
+                        buffer: None,
+                        data_items: self.rows,
+                        tag: i as u64,
+                        payload: Tile::new(vec![vec![1.0; self.rows]]),
+                    })
+                    .expect("registered tile shape");
+                }
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                self.sum += r.out[0] as f64;
+                self.pending -= 1;
+                if self.pending == 0 {
+                    ctx.contribute(self.sum);
+                }
+            }
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+/// One burst job: `rounds` rounds of `count` requests from a single
+/// chare, optionally gated on a barrier so co-tenant bursts overlap in
+/// the shared combiners. Series = the per-round sums
+/// (`count * rows` each).
+pub struct BurstJob {
+    pub name: &'static str,
+    pub desc: KernelDescriptor,
+    pub id: ChareId,
+    pub pe: usize,
+    pub rows: usize,
+    pub count: usize,
+    pub rounds: usize,
+    pub barrier: Option<Arc<Barrier>>,
+}
+
+impl BurstJob {
+    pub fn spec(self) -> JobSpec {
+        let BurstJob { name, desc, id, pe, rows, count, rounds, barrier } =
+            self;
+        JobSpec::new(name)
+            .kernel(desc)
+            .chare(
+                id,
+                pe,
+                Box::new(Burster { id, rows, count, pending: 0, sum: 0.0 }),
+            )
+            .driver(move |ctx| {
+                let kind = ctx.kinds()[0];
+                let mut series = Vec::with_capacity(rounds);
+                for _ in 0..rounds {
+                    if let Some(b) = &barrier {
+                        b.wait();
+                    }
+                    ctx.send(id, Msg::new(METHOD_GO, kind));
+                    series.push(ctx.await_reduction(1)?);
+                    ctx.await_quiescence();
+                }
+                Ok(series)
+            })
+    }
+}

@@ -1,0 +1,298 @@
+//! The persistent multi-tenant runtime: concurrent jobs, cross-job
+//! combining, per-job accounting, cancellation, and live metrics.
+//!
+//! Invariants covered:
+//!   - two concurrent jobs of *different* families: per-job
+//!     request/item/byte counters sum exactly to the `PoolReport`
+//!     totals (burst accounting), no cross-job launches;
+//!   - two concurrent jobs of the *same* family: the combiners merge
+//!     tiles from both jobs into shared launches
+//!     (`PoolReport::cross_job_launches >= 1`) and both jobs' physics
+//!     stay correct;
+//!   - identical kernel registrations resolve to one shared kind id,
+//!     incompatible ones are rejected at `submit_job`;
+//!   - `JobHandle::cancel` wakes a blocked driver, drains in-flight
+//!     work, and seals a `Cancelled` job without disturbing co-tenants;
+//!   - a panicking driver still seals (as `Failed`) instead of hanging
+//!     the runtime's shutdown;
+//!   - `metrics_snapshot` agrees with the sealed report after the job
+//!     completes.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+use common::{synth_descriptor, BurstJob, Burster, METHOD_GO};
+use gcharm::coordinator::{
+    ChareId, Config, JobSpec, JobStatus, Msg, Runtime,
+};
+
+/// Both tenants deliberately use the SAME chare id: ids are namespaced
+/// per job.
+const SHARED_ID: ChareId = ChareId { collection: 7, index: 0 };
+
+fn burst(
+    name: &'static str,
+    family: &str,
+    rows: usize,
+    count: usize,
+    rounds: usize,
+    barrier: Option<Arc<Barrier>>,
+) -> JobSpec {
+    BurstJob {
+        name,
+        desc: synth_descriptor(family, rows),
+        id: SHARED_ID,
+        pe: 0,
+        rows,
+        count,
+        rounds,
+        barrier,
+    }
+    .spec()
+}
+
+#[test]
+fn per_job_counters_sum_to_pool_totals() {
+    // two jobs of DIFFERENT families: never share a launch, so even the
+    // per-job launch counters sum to the pool total
+    let rt = Runtime::new(Config { pes: 2, ..Config::default() }).unwrap();
+    let a = rt
+        .submit_job(burst("burst-a", "synth_a", 4, 220, 2, None))
+        .unwrap();
+    let b = rt
+        .submit_job(burst("burst-b", "synth_b", 8, 150, 2, None))
+        .unwrap();
+    let ra = a.wait().unwrap();
+    let rb = b.wait().unwrap();
+    let pool = rt.shutdown();
+
+    // physics: each request sums a tile of ones
+    for s in &ra.series {
+        assert_eq!(*s, (220 * 4) as f64);
+    }
+    for s in &rb.series {
+        assert_eq!(*s, (150 * 8) as f64);
+    }
+
+    assert_eq!(pool.jobs.len(), 2);
+    let ja = pool.job("burst-a").unwrap();
+    let jb = pool.job("burst-b").unwrap();
+    assert_eq!(ja.gpu_requests, 2 * 220);
+    assert_eq!(jb.gpu_requests, 2 * 150);
+    assert_eq!(
+        ja.gpu_requests + jb.gpu_requests,
+        pool.gpu_requests,
+        "per-job requests must sum to the pool total"
+    );
+    assert_eq!(
+        ja.gpu_items + jb.gpu_items,
+        pool.gpu_items,
+        "per-job items must sum to the pool total"
+    );
+    assert_eq!(
+        ja.transfer_bytes + jb.transfer_bytes,
+        pool.transfer_bytes,
+        "per-item byte attribution must be exact"
+    );
+    assert_eq!(
+        ja.launches + jb.launches,
+        pool.launches,
+        "distinct families never share launches"
+    );
+    assert_eq!(pool.cross_job_launches, 0);
+    assert_eq!(ja.cross_job_launches + jb.cross_job_launches, 0);
+
+    // the sealed report agrees with the wait()-returned one
+    assert_eq!(ja.gpu_requests, ra.gpu_requests);
+    assert_eq!(ja.transfer_bytes, ra.transfer_bytes);
+}
+
+#[test]
+fn same_family_jobs_cross_combine() {
+    // two jobs of the SAME family, bursts synchronized by a barrier:
+    // the shared combiner must merge tiles from both jobs into at least
+    // one launch, and the weighted-fair take must not corrupt either
+    // job's sums
+    let rt = Runtime::new(Config { pes: 2, ..Config::default() }).unwrap();
+    let barrier = Arc::new(Barrier::new(2));
+    let rounds = 6;
+    let count = 400;
+    let a = rt
+        .submit_job(burst(
+            "tenant-a",
+            "synth_shared",
+            4,
+            count,
+            rounds,
+            Some(barrier.clone()),
+        ))
+        .unwrap();
+    let b = rt
+        .submit_job(burst(
+            "tenant-b",
+            "synth_shared",
+            4,
+            count,
+            rounds,
+            Some(barrier),
+        ))
+        .unwrap();
+    let ra = a.wait().unwrap();
+    let rb = b.wait().unwrap();
+    let pool = rt.shutdown();
+
+    // identical registration resolved to ONE kind: one kind-stats row
+    assert_eq!(
+        pool.kind_stats.iter().filter(|k| k.name == "synth_shared").count(),
+        1
+    );
+    // physics survived the shared launches
+    for s in ra.series.iter().chain(&rb.series) {
+        assert_eq!(*s, (count * 4) as f64);
+    }
+    assert!(
+        pool.cross_job_launches >= 1,
+        "synchronized same-family bursts must cross-combine at least \
+         once (got 0 over {} launches)",
+        pool.launches
+    );
+    assert_eq!(
+        pool.jobs.iter().map(|j| j.gpu_requests).sum::<u64>(),
+        pool.gpu_requests
+    );
+    assert_eq!(
+        pool.jobs.iter().map(|j| j.transfer_bytes).sum::<u64>(),
+        pool.transfer_bytes,
+        "byte attribution stays exact under cross-job combining"
+    );
+    // per-job cross-job counters saw the shared launches too
+    assert!(
+        pool.jobs.iter().any(|j| j.cross_job_launches >= 1),
+        "shared launches must appear in the participants' reports"
+    );
+}
+
+#[test]
+fn incompatible_re_registration_is_rejected_at_submit() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let a = rt
+        .submit_job(burst("ok", "synth_dup", 4, 10, 1, None))
+        .unwrap();
+    a.wait().unwrap();
+    // same name, different tile shape: sharing the kind would corrupt
+    // both jobs
+    let err = rt
+        .submit_job(burst("bad", "synth_dup", 8, 10, 1, None))
+        .unwrap_err();
+    assert!(err.to_string().contains("bad"), "{err}");
+    rt.shutdown();
+}
+
+#[test]
+fn cancel_wakes_driver_and_seals_cancelled() {
+    let rt = Runtime::new(Config { pes: 2, ..Config::default() }).unwrap();
+    let rounds_done = Arc::new(AtomicU64::new(0));
+    let probe = rounds_done.clone();
+    let id = ChareId::new(9, 0);
+    let stuck = rt
+        .submit_job(
+            JobSpec::new("stuck")
+                .kernel(synth_descriptor("synth_stuck", 4))
+                .chare(
+                    id,
+                    0,
+                    Box::new(Burster {
+                        id,
+                        rows: 4,
+                        count: 50,
+                        pending: 0,
+                        sum: 0.0,
+                    }),
+                )
+                .driver(move |ctx| {
+                    let kind = ctx.kinds()[0];
+                    let mut series = Vec::new();
+                    // far more rounds than the test will allow
+                    for _ in 0..1_000_000 {
+                        ctx.send(id, Msg::new(METHOD_GO, kind));
+                        series.push(ctx.await_reduction(1)?);
+                        ctx.await_quiescence();
+                        probe.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Ok(series)
+                }),
+        )
+        .unwrap();
+
+    // let it make some progress, then cancel
+    while rounds_done.load(Ordering::SeqCst) < 2 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(stuck.poll(), JobStatus::Running);
+    stuck.cancel();
+    let report = stuck.wait().expect("cancelled jobs still seal a report");
+    assert!(report.gpu_requests >= 2 * 50, "progress before the cancel");
+    assert!(
+        report.series.is_empty(),
+        "a cancelled driver's series is dropped"
+    );
+
+    // a co-tenant submitted after the cancel is unaffected
+    let after = rt
+        .submit_job(burst("after", "synth_after", 4, 30, 1, None))
+        .unwrap();
+    let ra = after.wait().unwrap();
+    assert_eq!(ra.series, vec![(30 * 4) as f64]);
+    let pool = rt.shutdown();
+    assert_eq!(pool.jobs.len(), 2);
+}
+
+#[test]
+fn panicking_driver_seals_failed_and_runtime_survives() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let doomed = rt
+        .submit_job(
+            JobSpec::new("doomed")
+                .kernel(synth_descriptor("synth_doom", 4))
+                .driver(|_ctx| panic!("driver bug")),
+        )
+        .unwrap();
+    assert!(doomed.wait().is_err(), "a panicked driver surfaces as Err");
+
+    // the runtime is still serving: a fresh job runs to completion and
+    // shutdown does not hang on the dead job's active count
+    let ok = rt
+        .submit_job(burst("survivor", "synth_srv", 4, 20, 1, None))
+        .unwrap();
+    assert_eq!(ok.wait().unwrap().series, vec![(20 * 4) as f64]);
+    let pool = rt.shutdown();
+    assert_eq!(pool.jobs.len(), 2, "the failed job still sealed a report");
+    assert!(pool.job("doomed").is_some());
+}
+
+#[test]
+fn metrics_snapshot_matches_sealed_report() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let h = rt
+        .submit_job(burst("metered", "synth_m", 4, 120, 3, None))
+        .unwrap();
+    // handle stays usable for metrics while and after the job runs
+    let job_id = h.job();
+    assert_eq!(h.name(), "metered");
+    // wait via polling to exercise the non-blocking probe
+    while h.poll() == JobStatus::Running {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(h.poll(), JobStatus::Done);
+    let snap = h.metrics_snapshot();
+    let report = h.wait().unwrap();
+    assert_eq!(report.job, job_id);
+    assert_eq!(snap.gpu_requests, report.gpu_requests);
+    assert_eq!(snap.transfer_bytes, report.transfer_bytes);
+    assert_eq!(snap.launches, report.launches);
+    assert_eq!(snap.queued_requests, 0, "sealed job has nothing queued");
+    assert_eq!(snap.outstanding, 0);
+    rt.shutdown();
+}

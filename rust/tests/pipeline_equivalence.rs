@@ -15,9 +15,13 @@
 //! the same buffers, which is exactly what the seed sim backend computed.
 
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+mod common;
+
+use gcharm::apps::spmv::{self, SpmvConfig};
+use gcharm::coordinator::{ChareId, Config, JobSpec, Runtime};
 use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
 use gcharm::runtime::shapes::{
@@ -473,5 +477,100 @@ fn pipelined_service_interleaves_distinct_kernels() {
             want.out.iter().map(|x| x.to_bits()).collect();
         let bits_b: Vec<u32> = got.out.iter().map(|x| x.to_bits()).collect();
         assert_eq!(bits_a, bits_b, "launch {} differs", want.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent jobs vs sequential single-job runtimes: bitwise equivalence.
+// ---------------------------------------------------------------------------
+
+fn eqsum_spec(rounds: usize, count: usize) -> JobSpec {
+    common::BurstJob {
+        name: "eqsum",
+        desc: common::synth_descriptor("eqsum", 4),
+        // deliberately collides with spmv's chare collection: ids are
+        // namespaced per job
+        id: ChareId::new(3, 0),
+        pe: 1,
+        rows: 4,
+        count,
+        rounds,
+        barrier: None,
+    }
+    .spec()
+}
+
+/// SpMV sized so every row fits one tile chunk: per-row accumulation is a
+/// single partial, so the final iterate is bitwise deterministic however
+/// the runtime combines, splits, or steals.
+fn eq_spmv_cfg() -> SpmvConfig {
+    let mut cfg = SpmvConfig::new(200);
+    cfg.max_row_nnz = 96; // < SPMV_TILE: one chunk per row
+    cfg.iters = 3;
+    cfg.seed = 11;
+    cfg
+}
+
+fn runtime_cfg(devices: usize) -> Config {
+    Config { pes: 2, devices, ..Config::default() }
+}
+
+/// Final spmv iterate (bit pattern) and eqsum series, run sequentially on
+/// fresh single-job runtimes.
+fn run_sequential(devices: usize) -> (Vec<u32>, Vec<f64>) {
+    let cfg = eq_spmv_cfg();
+    let master = Arc::new(Mutex::new(vec![0.0f32; cfg.rows]));
+    let rt = Runtime::new(runtime_cfg(devices)).unwrap();
+    rt.submit_job(spmv::job_spec_with_master(&cfg, "spmv", master.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    rt.shutdown();
+
+    let rt = Runtime::new(runtime_cfg(devices)).unwrap();
+    let series = rt
+        .submit_job(eqsum_spec(3, 300))
+        .unwrap()
+        .wait()
+        .unwrap()
+        .series;
+    rt.shutdown();
+
+    let bits = master.lock().unwrap().iter().map(|x| x.to_bits()).collect();
+    (bits, series)
+}
+
+/// The same two jobs, concurrent on ONE runtime.
+fn run_concurrent(devices: usize) -> (Vec<u32>, Vec<f64>, u64) {
+    let cfg = eq_spmv_cfg();
+    let master = Arc::new(Mutex::new(vec![0.0f32; cfg.rows]));
+    let rt = Runtime::new(runtime_cfg(devices)).unwrap();
+    let a = rt
+        .submit_job(spmv::job_spec_with_master(&cfg, "spmv", master.clone()))
+        .unwrap();
+    let b = rt.submit_job(eqsum_spec(3, 300)).unwrap();
+    a.wait().unwrap();
+    let series = b.wait().unwrap().series;
+    let pool = rt.shutdown();
+    assert_eq!(pool.jobs.len(), 2);
+    let bits = master.lock().unwrap().iter().map(|x| x.to_bits()).collect();
+    (bits, series, pool.cross_job_launches)
+}
+
+#[test]
+fn concurrent_jobs_match_sequential_runtimes_bitwise() {
+    for devices in [1usize, 2] {
+        let (seq_x, seq_series) = run_sequential(devices);
+        let (conc_x, conc_series, cross) = run_concurrent(devices);
+        assert_eq!(
+            seq_x, conc_x,
+            "{devices} device(s): spmv iterate drifted under co-tenancy"
+        );
+        assert_eq!(
+            seq_series, conc_series,
+            "{devices} device(s): eqsum series drifted under co-tenancy"
+        );
+        // different families never share launches
+        assert_eq!(cross, 0, "{devices} device(s)");
     }
 }

@@ -13,8 +13,8 @@
 //!     resource descriptors.
 
 use gcharm::coordinator::{
-    Batch, ChareId, CombinePolicy, Combiner, HybridScheduler, KernelKindId,
-    Pending, SplitPolicy, Tile, WorkRequest,
+    Batch, ChareId, CombinePolicy, Combiner, HybridScheduler, JobId,
+    KernelKindId, Pending, SplitPolicy, Tile, WorkRequest,
 };
 use gcharm::runtime::memory::DeviceMemory;
 use gcharm::runtime::{occupancy, GpuSpec, KernelResources};
@@ -25,6 +25,7 @@ const K0: KernelKindId = KernelKindId(0);
 fn wr(id: u64, items: usize) -> WorkRequest {
     WorkRequest {
         id,
+        job: JobId(0),
         chare: ChareId::new(0, id as u32),
         kind: K0,
         buffer: Some(id),

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use gcharm::coordinator::{
-    Chare, ChareId, CombinePolicy, Combiner, Config, Ctx, GCharm,
+    Chare, ChareId, CombinePolicy, Combiner, Config, Ctx, GCharm, JobId,
     KernelDescriptor, KernelKindId, KernelRegistry, Msg, Pending, Tile,
     WorkDraft, WorkRequest, WrResult, METHOD_RESULT,
 };
@@ -70,6 +70,7 @@ fn wr(kind: KernelKindId, id: u64, rows: usize) -> Pending {
     Pending {
         wr: WorkRequest {
             id,
+            job: JobId(0),
             chare: ChareId::new(0, id as u32),
             kind,
             buffer: None,
