@@ -7,10 +7,16 @@
 //! The binary installs a counting global allocator so the arena-vs-naive
 //! comparison reports heap allocations and allocated bytes per staged
 //! chunk next to ns/op (see PERF.md).
+//!
+//! Besides the console tables, every measured series is recorded and
+//! serialized to `BENCH_6.json` at exit (override the path with
+//! `GCHARM_BENCH_JSON`, set it to `-` to skip). The file only ever
+//! contains numbers this binary measured on this machine in this run —
+//! nothing is baked in.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::apps::spmv::{self, SpmvConfig};
@@ -49,6 +55,80 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Everything measured this run, for the BENCH_6.json dump: rows of
+/// `(series, metric, value, unit)`.
+static RECORDED: Mutex<Vec<(String, String, f64, &'static str)>> =
+    Mutex::new(Vec::new());
+
+/// Record one measured value under `series`/`metric`.
+fn record(series: &str, metric: &str, value: f64, unit: &'static str) {
+    RECORDED
+        .lock()
+        .unwrap()
+        .push((series.to_string(), metric.to_string(), value, unit));
+}
+
+/// `bench_ns` plus recording: every timed series lands in BENCH_6.json.
+fn bench<F: FnMut()>(name: &str, batch: usize, reps: usize, f: F) -> f64 {
+    let ns = bench_ns(name, batch, reps, f);
+    record(name, "ns_per_op", ns, "ns");
+    ns
+}
+
+/// Minimal JSON string escape (names are ASCII, but stay correct).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize every recorded measurement to BENCH_6.json (or
+/// `$GCHARM_BENCH_JSON`; `-` disables). Called once at the end of
+/// `main`, so the file holds exactly what this run printed. The output
+/// round-trips through `util::json::Json::parse`.
+fn emit_bench_json() {
+    let path = std::env::var("GCHARM_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_6.json".to_string());
+    if path == "-" {
+        return;
+    }
+    let rows = RECORDED.lock().unwrap();
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"hotpath\",\n  \"schema\": 1,\n");
+    out.push_str(
+        "  \"note\": \"measured on the machine that ran `cargo bench --bench \
+         hotpath`; medians of repeated batches, see rust/benches/hotpath.rs\",\n",
+    );
+    out.push_str("  \"series\": [\n");
+    for (i, (series, metric, value, unit)) in rows.iter().enumerate() {
+        // fixed-point decimal keeps the hand-rolled parser happy
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"metric\": \"{}\", \"value\": {:.3}, \
+             \"unit\": \"{}\"}}{}\n",
+            json_escape(series),
+            json_escape(metric),
+            value,
+            unit,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {} series to {path}", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 /// Run `f` `iters` times; report (allocations, bytes) per call.
 fn allocs_per_op<F: FnMut()>(iters: u64, mut f: F) -> (f64, f64) {
@@ -127,7 +207,7 @@ fn staging_comparison() {
         .unwrap();
     arena.recycle(c);
 
-    let arena_ns = bench_ns("arena stage_chunk (steady state)", 512, 9, || {
+    let arena_ns = bench("arena stage_chunk (steady state)", 512, 9, || {
         let c = arena
             .stage_chunk(&manifest, &payload, 0, n, &mut None)
             .unwrap();
@@ -142,7 +222,7 @@ fn staging_comparison() {
         arena.recycle(c);
     });
 
-    let naive_ns = bench_ns("per-launch alloc staging (old path)", 512, 9, || {
+    let naive_ns = bench("per-launch alloc staging (old path)", 512, 9, || {
         let staged = naive_stage(&manifest, 1e-2, &parts, &inters, n);
         std::hint::black_box(&staged);
     });
@@ -150,6 +230,10 @@ fn staging_comparison() {
         let staged = naive_stage(&manifest, 1e-2, &parts, &inters, n);
         std::hint::black_box(&staged);
     });
+    record("arena stage_chunk (steady state)", "allocs_per_op", arena_allocs, "allocs");
+    record("arena stage_chunk (steady state)", "alloc_bytes_per_op", arena_bytes, "bytes");
+    record("per-launch alloc staging (old path)", "allocs_per_op", naive_allocs, "allocs");
+    record("per-launch alloc staging (old path)", "alloc_bytes_per_op", naive_bytes, "bytes");
 
     println!(
         "  {:<24} {:>12} {:>14} {:>16} {:>16}",
@@ -211,7 +295,7 @@ fn registry_dispatch_comparison() {
     );
     let kinds = [KernelKindId(0), KernelKindId(1), KernelKindId(2)];
     let mut i = 0usize;
-    let table_ns = bench_ns("registry table dispatch", 65536, 9, || {
+    let table_ns = bench("registry table dispatch", 65536, 9, || {
         let kind = kinds[i % 3];
         i += 1;
         let d = registry.get(kind);
@@ -225,7 +309,7 @@ fn registry_dispatch_comparison() {
     });
     let old = [OldKind::Force, OldKind::Ewald, OldKind::Md];
     let mut j = 0usize;
-    let match_ns = bench_ns("closed enum match (old path)", 65536, 9, || {
+    let match_ns = bench("closed enum match (old path)", 65536, 9, || {
         let k = old[j % 3];
         j += 1;
         let (max, out_slot, hybrid, reuse): (usize, usize, bool, Option<usize>) =
@@ -286,6 +370,12 @@ fn device_pool_scaling() {
                 r.report.transfer_bytes as f64 / (1 << 20) as f64,
                 r.report.launches
             );
+            record(
+                &format!("nbody makespan ({name}, {devices} dev)"),
+                "modeled_makespan",
+                makespan,
+                "s",
+            );
             makespans.push((devices, name, makespan));
         }
     }
@@ -317,6 +407,12 @@ fn device_pool_scaling() {
         cfg.iters = 3;
         cfg.runtime = Config { pes: 4, devices, ..Config::default() };
         let r = spmv::run(&cfg).expect("spmv run");
+        record(
+            &format!("spmv makespan ({devices} dev)"),
+            "modeled_makespan",
+            r.report.device_makespan(),
+            "s",
+        );
         println!(
             "  {:<8} {:>12.5} {:>10} {:>12.3e} {:>7}/{}",
             devices,
@@ -343,7 +439,7 @@ fn main() {
         let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 4, 4, 16);
         let shares = vec![0.25; 4];
         let mut i = 0u32;
-        bench_ns("device route + steal probe (4 devices)", 4096, 9, || {
+        bench("device route + steal probe (4 devices)", 4096, 9, || {
             let d = r.route(JobId(0), ChareId::new(1, i % 256));
             r.note_enqueued(d, JobId(0), 1);
             std::hint::black_box(r.steal_candidate(&shares));
@@ -357,7 +453,7 @@ fn main() {
         let mut rng = Rng::new(1);
         let mut c = Combiner::new(CombinePolicy::Adaptive, 104, true);
         let mut i = 0u64;
-        bench_ns("combiner insert (slot-sorted, depth<=104)", 4096, 9, || {
+        bench("combiner insert (slot-sorted, depth<=104)", 4096, 9, || {
             c.insert(pending(i, Some(rng.below(16_384) as u32)), i as f64 * 1e-6);
             i += 1;
             if c.len() >= 104 {
@@ -368,7 +464,7 @@ fn main() {
     {
         let mut c = Combiner::new(CombinePolicy::Adaptive, 104, false);
         let mut i = 0u64;
-        bench_ns("combiner insert (fifo, depth<=104)", 4096, 9, || {
+        bench("combiner insert (fifo, depth<=104)", 4096, 9, || {
             c.insert(pending(i, None), i as f64 * 1e-6);
             i += 1;
             if c.len() >= 104 {
@@ -383,14 +479,14 @@ fn main() {
         let mut t = ChareTable::new(1024, slot);
         let buf = vec![1.0f32; slot];
         let mut i = 0u64;
-        bench_ns("chare-table stage (miss-heavy)", 2048, 9, || {
+        bench("chare-table stage (miss-heavy)", 2048, 9, || {
             let s = t.stage_pinned(i % 4096, &buf).unwrap();
             let _ = s;
             t.release(i % 4096);
             i += 1;
         });
         let mut j = 0u64;
-        bench_ns("chare-table stage (hit-heavy)", 2048, 9, || {
+        bench("chare-table stage (hit-heavy)", 2048, 9, || {
             let s = t.stage_pinned(j % 64, &buf).unwrap();
             let _ = s;
             t.release(j % 64);
@@ -404,7 +500,7 @@ fn main() {
         let mut h = HybridScheduler::new(SplitPolicy::AdaptiveItems);
         h.record_cpu(k0, 100, 0.010);
         h.record_gpu(k0, 100, 0.002);
-        bench_ns("hybrid split (512 requests)", 256, 9, || {
+        bench("hybrid split (512 requests)", 256, 9, || {
             let q: Vec<Pending> = (0..512).map(|i| pending(i, None)).collect();
             let (c, g) = h.split(k0, q);
             std::hint::black_box((c.len(), g.len()));
@@ -417,7 +513,7 @@ fn main() {
     // rather than test-data construction.
     {
         let mut q: Vec<Pending> = (0..512).map(|i| pending(i, None)).collect();
-        bench_ns("cpu-pool chunk+regroup (512 reqs, 4 workers)", 256, 9, || {
+        bench("cpu-pool chunk+regroup (512 reqs, 4 workers)", 256, 9, || {
             let chunks = chunk_by_items(std::mem::take(&mut q), 4);
             std::hint::black_box(chunks.len());
             q = chunks.into_iter().flatten().collect();
@@ -428,11 +524,13 @@ fn main() {
     {
         let dir = default_artifacts_dir();
         if let Ok(text) = std::fs::read_to_string(dir.join("manifest.json")) {
-            bench_ns("manifest.json parse", 256, 9, || {
+            bench("manifest.json parse", 256, 9, || {
                 std::hint::black_box(Json::parse(&text).unwrap());
             });
         }
     }
+
+    emit_bench_json();
 
     println!("done");
 }

@@ -1,0 +1,196 @@
+//! Cross-cutting accounting invariants over a sealed [`PoolReport`].
+//!
+//! Pure functions: the harness feeds them the report a chaos run sealed,
+//! and the unit tests feed them deliberately corrupted reports to prove
+//! the checker actually bites (a checker that cannot fail verifies
+//! nothing).
+//!
+//! The invariants restate the multi-tenant accounting contract
+//! (`coordinator::metrics`): per-job request/item/byte counters sum
+//! EXACTLY to the pool totals, per-kind counters partition the same
+//! totals, every flushed request is accounted on one side of the hybrid
+//! split, and launch counts obey the cross-job identity — a launch
+//! shared by `k` jobs adds `k` to the per-job launch sum but `1` to the
+//! pool, and does the same to the cross-job counters, so the two
+//! overcounts must be equal:
+//!
+//! ```text
+//! sum(job.launches) - pool.launches
+//!     == sum(job.cross_job_launches) - pool.cross_job_launches
+//! ```
+
+use crate::coordinator::PoolReport;
+
+/// Every broken accounting invariant of `pool`, as human-readable
+/// strings; empty means the report is consistent. Jobs must be sealed
+/// into `pool.jobs` (i.e. this is a post-`shutdown` report).
+pub fn accounting_violations(pool: &PoolReport) -> Vec<String> {
+    let mut v = Vec::new();
+    let mut check = |what: &str, jobs: u64, total: u64| {
+        if jobs != total {
+            v.push(format!(
+                "{what}: per-job sum {jobs} != pool total {total}"
+            ));
+        }
+    };
+
+    let sum = |f: fn(&crate::coordinator::JobReport) -> u64| -> u64 {
+        pool.jobs.iter().map(f).sum()
+    };
+    check("gpu_requests", sum(|j| j.gpu_requests), pool.gpu_requests);
+    check("cpu_requests", sum(|j| j.cpu_requests), pool.cpu_requests);
+    check("gpu_items", sum(|j| j.gpu_items), pool.gpu_items);
+    check("cpu_items", sum(|j| j.cpu_items), pool.cpu_items);
+    check("transfer_bytes", sum(|j| j.transfer_bytes), pool.transfer_bytes);
+
+    // Per-kind partition of the same totals.
+    let ksum = |f: fn(&crate::coordinator::KindStats) -> u64| -> u64 {
+        pool.kind_stats.iter().map(f).sum()
+    };
+    check("kind gpu_requests", ksum(|k| k.gpu_requests), pool.gpu_requests);
+    check("kind cpu_requests", ksum(|k| k.cpu_requests), pool.cpu_requests);
+    check("kind gpu_items", ksum(|k| k.gpu_items), pool.gpu_items);
+    check("kind cpu_items", ksum(|k| k.cpu_items), pool.cpu_items);
+
+    // Every request flushed from a combiner landed on exactly one side
+    // of the hybrid split.
+    check(
+        "flushed_requests",
+        pool.flushed_requests,
+        pool.gpu_requests + pool.cpu_requests,
+    );
+
+    // Cross-job launch identity (see module docs). i128: both sides are
+    // overcounts and individually fit, but stay honest about subtraction.
+    let job_launches: i128 =
+        pool.jobs.iter().map(|j| j.launches as i128).sum();
+    let job_cross: i128 =
+        pool.jobs.iter().map(|j| j.cross_job_launches as i128).sum();
+    let lhs = job_launches - pool.launches as i128;
+    let rhs = job_cross - pool.cross_job_launches as i128;
+    if lhs != rhs {
+        v.push(format!(
+            "cross-job identity: launch overcount {lhs} != cross-job \
+             overcount {rhs}"
+        ));
+    }
+    if lhs < 0 {
+        v.push(format!(
+            "launches: per-job sum {job_launches} below pool total {}",
+            pool.launches
+        ));
+    }
+    for j in &pool.jobs {
+        if j.cross_job_launches > j.launches {
+            v.push(format!(
+                "job {} ({}): {} cross-job launches exceed {} launches",
+                j.name, j.job, j.cross_job_launches, j.launches
+            ));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{JobId, JobReport, KindStats, PoolReport};
+
+    /// A small self-consistent two-tenant report: 4 launches total, one
+    /// of them shared by both jobs (so per-job launches sum to 5).
+    fn consistent() -> PoolReport {
+        let mut pool = PoolReport {
+            launches: 4,
+            cross_job_launches: 1,
+            gpu_requests: 16,
+            cpu_requests: 4,
+            gpu_items: 64,
+            cpu_items: 16,
+            transfer_bytes: 320,
+            flushed_requests: 20,
+            ..PoolReport::default()
+        };
+        pool.kind_stats.push(KindStats {
+            name: "chaos_fam".into(),
+            launches: 4,
+            gpu_requests: 16,
+            cpu_requests: 4,
+            gpu_items: 64,
+            cpu_items: 16,
+        });
+        pool.jobs.push(JobReport {
+            job: JobId(0),
+            name: "a".into(),
+            launches: 3,
+            cross_job_launches: 1,
+            gpu_requests: 10,
+            cpu_requests: 2,
+            gpu_items: 40,
+            cpu_items: 8,
+            transfer_bytes: 200,
+            ..JobReport::default()
+        });
+        pool.jobs.push(JobReport {
+            job: JobId(1),
+            name: "b".into(),
+            launches: 2,
+            cross_job_launches: 1,
+            gpu_requests: 6,
+            cpu_requests: 2,
+            gpu_items: 24,
+            cpu_items: 8,
+            transfer_bytes: 120,
+            ..JobReport::default()
+        });
+        pool
+    }
+
+    #[test]
+    fn consistent_report_is_clean() {
+        assert_eq!(accounting_violations(&consistent()), Vec::<String>::new());
+    }
+
+    #[test]
+    fn broken_request_sum_is_detected() {
+        let mut pool = consistent();
+        pool.gpu_requests += 1; // the deliberately broken sum
+        let v = accounting_violations(&pool);
+        assert!(
+            v.iter().any(|s| s.contains("gpu_requests")),
+            "checker missed the corrupted request sum: {v:?}"
+        );
+    }
+
+    #[test]
+    fn broken_byte_attribution_is_detected() {
+        let mut pool = consistent();
+        pool.jobs[1].transfer_bytes -= 1;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("transfer_bytes")), "{v:?}");
+    }
+
+    #[test]
+    fn broken_cross_job_identity_is_detected() {
+        let mut pool = consistent();
+        // claim the shared launch in the pool but strip one participant
+        pool.jobs[0].cross_job_launches = 0;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("cross-job identity")), "{v:?}");
+    }
+
+    #[test]
+    fn dropped_flush_accounting_is_detected() {
+        let mut pool = consistent();
+        pool.flushed_requests -= 3;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("flushed_requests")), "{v:?}");
+    }
+
+    #[test]
+    fn per_job_cross_job_bound_is_detected() {
+        let mut pool = consistent();
+        pool.jobs[0].cross_job_launches = pool.jobs[0].launches + 1;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("exceed")), "{v:?}");
+    }
+}

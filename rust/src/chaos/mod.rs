@@ -1,0 +1,560 @@
+//! Deterministic chaos harness for the multi-tenant [`Runtime`].
+//!
+//! `run_schedule(seed)` derives a full fault plan from the seed alone
+//! ([`schedule::Schedule::from_seed`]), executes it against a real
+//! runtime — scripted job cancels at chosen quiescence depths, panicking
+//! drivers, steal storms, flush-timing jitter, late kernel registration
+//! and rejected submissions racing live traffic — and checks the
+//! cross-cutting invariants at every step:
+//!
+//! - each healthy job's reduction series equals its exact integer
+//!   physics (distinct per-job tile fills: a launch that mixed another
+//!   tenant's tiles shifts the sum);
+//! - a cancelled job seals `Cancelled` with no blocked
+//!   `await_reduction` surviving; a panicking driver seals `Failed`
+//!   without taking the runtime down;
+//! - no sealed job's residency keys stay resident on any device
+//!   ([`Runtime::chaos_resident_jobs`]);
+//! - shutdown terminates, and the sealed pool report passes the
+//!   accounting sums in [`invariants::accounting_violations`].
+//!
+//! The event trace is a pure function of the seed (schedule lines plus
+//! deterministic outcomes), so `gcharm chaos --seed N` replays a failing
+//! corpus entry bit-identically. Compiled only under
+//! `#[cfg(any(test, feature = "chaos"))]`: the release hot path carries
+//! none of this.
+
+pub mod invariants;
+pub mod schedule;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{
+    Chare, ChareId, CombinePolicy, Config, Ctx, JobCtx, JobHandle, JobSpec,
+    JobStatus, KernelDescriptor, KernelKindId, Msg, Runtime, Tile, WorkDraft,
+    WrResult, METHOD_RESULT,
+};
+use crate::runtime::kernel::{TileArgSpec, TileKernel};
+use crate::runtime::KernelResources;
+
+pub use invariants::accounting_violations;
+pub use schedule::{
+    theme_name, Anchored, CancelKind, FamilySpec, Fault, Injection, JobPlan,
+    Schedule,
+};
+
+const METHOD_GO: u32 = 1;
+/// Chare collection id for harness chares. Deliberately identical across
+/// jobs: chare ids are namespaced per job, and the physics would catch a
+/// namespacing regression.
+const CHARE_COLL: u32 = 7;
+/// Driver-side bound on waiting for a scripted external event (a cancel
+/// that the harness fires, an anchor round). Generous: hitting it means
+/// the invariant under test failed, and the run reports that instead of
+/// hanging the suite.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Outcome of one chaos run: the replay-identical event trace and every
+/// invariant violation found (empty = the run held).
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub seed: u64,
+    pub trace: Vec<String>,
+    pub violations: Vec<String>,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+impl std::fmt::Display for ChaosReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for line in &self.trace {
+            writeln!(f, "{line}")?;
+        }
+        if self.violations.is_empty() {
+            write!(f, "seed {}: all invariants held", self.seed)
+        } else {
+            for v in &self.violations {
+                writeln!(f, "VIOLATION: {v}")?;
+            }
+            write!(f, "seed {}: {} violation(s)", self.seed, self.violations.len())
+        }
+    }
+}
+
+/// Per-slot kernel shared by every chaos family: sum of the tile.
+fn sum_slot(args: &[&[f32]], _c: &[f32]) -> Vec<f32> {
+    vec![args[0].iter().sum()]
+}
+
+/// Registered descriptor for one schedule family. Jobs sharing a family
+/// call this with the same spec and resolve to one kind (the cross-job
+/// combining hook).
+fn descriptor(fam: &FamilySpec) -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel {
+            name: Arc::from(fam.name.as_str()),
+            args: vec![TileArgSpec {
+                name: "tile",
+                rows: fam.rows,
+                width: 1,
+                pad: 0.0,
+            }],
+            constant: Arc::new(Vec::new()),
+            out_rows: 1,
+            out_width: 1,
+            resources: KernelResources {
+                threads_per_block: 128,
+                regs_per_thread: 64,
+                smem_per_block: 4096,
+            },
+            items_per_slot: fam.rows as u64,
+            reuse_arg: fam.reuse.then_some(0),
+            gather_name: fam
+                .reuse
+                .then(|| Arc::from(format!("{}_gather", fam.name))),
+            entry_arg: None,
+            slot_fn: sum_slot,
+        }),
+        combine: fam.static_period.map(CombinePolicy::StaticEvery),
+        sort_by_slot: fam.reuse,
+        cpu_fallback: fam.cpu_fallback,
+    }
+}
+
+/// Harness chare: bursts `count` requests per GO, sums the returned
+/// slot outputs, contributes at zero pending. Reuse families cycle
+/// `nbuf` buffer ids with id-determined tile values (repeated ids carry
+/// identical data — reuse-correct), so the reduction is exact either
+/// way.
+struct FillBurster {
+    id: ChareId,
+    rows: usize,
+    count: usize,
+    reuse: bool,
+    nbuf: usize,
+    fill: f32,
+    pending: usize,
+    sum: f64,
+}
+
+impl Chare for FillBurster {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_GO => {
+                let kind: KernelKindId = msg.take();
+                self.pending = self.count;
+                self.sum = 0.0;
+                for i in 0..self.count {
+                    let (buffer, v) = if self.reuse {
+                        let b = (i % self.nbuf) as u64;
+                        (Some(b), self.fill + b as f32)
+                    } else {
+                        (None, self.fill)
+                    };
+                    ctx.submit(WorkDraft {
+                        chare: self.id,
+                        kind,
+                        buffer,
+                        data_items: self.rows,
+                        tag: i as u64,
+                        payload: Tile::new(vec![vec![v; self.rows]]),
+                    })
+                    .expect("registered tile shape");
+                }
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                self.sum += r.out[0] as f64;
+                self.pending -= 1;
+                if self.pending == 0 {
+                    ctx.contribute(self.sum);
+                }
+            }
+            other => panic!("chaos chare: unknown method {other}"),
+        }
+    }
+}
+
+/// Spin until the harness's scripted cancel lands (bounded: a missed
+/// cancel is reported as a Failed seal, not a hung suite).
+fn wait_cancelled(ctx: &JobCtx) -> Result<()> {
+    let deadline = Instant::now() + EVENT_TIMEOUT;
+    while !ctx.cancelled() {
+        if Instant::now() > deadline {
+            bail!("chaos: scripted cancel never arrived");
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    Ok(())
+}
+
+/// Build the `JobSpec` for one planned job. `counter` is the per-job
+/// round anchor the harness watches: it is bumped after each fully
+/// drained round, so schedule anchors fire at deterministic points of
+/// the job's own timeline.
+fn job_spec(
+    plan: &JobPlan,
+    fam: &FamilySpec,
+    counter: Arc<AtomicU64>,
+) -> JobSpec {
+    let mut spec = JobSpec::new(plan.name.clone()).kernel(descriptor(fam));
+    for c in 0..plan.chares {
+        let id = ChareId::new(CHARE_COLL, c as u32);
+        spec = spec.chare(
+            id,
+            c,
+            Box::new(FillBurster {
+                id,
+                rows: fam.rows,
+                count: plan.count,
+                reuse: fam.reuse,
+                nbuf: plan.nbuf,
+                fill: plan.fill,
+                pending: 0,
+                sum: 0.0,
+            }),
+        );
+    }
+    let plan = plan.clone();
+    spec.driver(move |ctx| {
+        let kind = ctx.kinds()[0];
+        let chares = plan.chares as u64;
+        let go = |ctx: &JobCtx| {
+            for c in 0..plan.chares {
+                ctx.send(
+                    ChareId::new(CHARE_COLL, c as u32),
+                    Msg::new(METHOD_GO, kind),
+                );
+            }
+        };
+        let mut series = Vec::new();
+        for _ in 0..plan.effective_rounds() {
+            go(ctx);
+            series.push(ctx.await_reduction(chares)?);
+            ctx.await_quiescence();
+            counter.fetch_add(1, Ordering::SeqCst);
+        }
+        match plan.fault {
+            Fault::None => Ok(series),
+            Fault::Panic { .. } => {
+                panic!("chaos: scripted driver panic")
+            }
+            Fault::Cancel { kind: CancelKind::AtQuiescence, .. } => {
+                wait_cancelled(ctx)?;
+                Err(anyhow!("chaos: cancelled at quiescence"))
+            }
+            Fault::Cancel { kind: CancelKind::MidFlight, .. } => {
+                // a full un-awaited burst is in flight when the cancel
+                // lands; the teardown must drain it
+                go(ctx);
+                wait_cancelled(ctx)?;
+                Err(anyhow!("chaos: cancelled mid-flight"))
+            }
+            Fault::Cancel { kind: CancelKind::Blocked, .. } => {
+                // nothing was sent: only the cancel can release this
+                let got = ctx.await_reduction(1)?;
+                bail!("chaos: blocked await returned {got} without a cancel")
+            }
+        }
+    })
+}
+
+/// Build a standalone `JobSpec` for a plan without wiring a round
+/// anchor: for tests that drive the runtime directly (e.g. the
+/// id-recycling regression) rather than through [`run_schedule`].
+pub fn job_spec_for(plan: &JobPlan, fam: &FamilySpec) -> JobSpec {
+    job_spec(plan, fam, Arc::new(AtomicU64::new(0)))
+}
+
+/// One submitted job the harness is tracking.
+struct Running {
+    idx: usize,
+    plan: JobPlan,
+    fam: FamilySpec,
+    counter: Arc<AtomicU64>,
+    handle: Option<JobHandle>,
+}
+
+/// Execute the seed's schedule against a real runtime and check every
+/// invariant. `Err` means the harness itself could not run (coordinator
+/// channel down, etc.); invariant failures land in
+/// [`ChaosReport::violations`] instead.
+pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
+    let s = Schedule::from_seed(seed);
+    let mut trace = s.describe();
+    let mut violations: Vec<String> = Vec::new();
+
+    let rt = Runtime::new(Config {
+        pes: s.pes,
+        devices: s.devices,
+        ..Config::default()
+    })?;
+
+    // Submit every planned job up front; drivers pace themselves.
+    let mut jobs: Vec<Running> = Vec::new();
+    for (idx, plan) in s.jobs.iter().enumerate() {
+        let fam = s.families[plan.family].clone();
+        let counter = Arc::new(AtomicU64::new(0));
+        let handle = rt.submit_job(job_spec(plan, &fam, counter.clone()))?;
+        trace.push(format!("submit job{idx} as {}", handle.job()));
+        jobs.push(Running {
+            idx,
+            plan: plan.clone(),
+            fam,
+            counter,
+            handle: Some(handle),
+        });
+    }
+
+    let wait_round = |jobs: &[Running], j: usize, round: u64| -> Result<()> {
+        let deadline = Instant::now() + EVENT_TIMEOUT;
+        while jobs[j].counter.load(Ordering::SeqCst) < round {
+            if Instant::now() > deadline {
+                bail!("anchor job{j} round {round} never reached");
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        Ok(())
+    };
+
+    // Fire the scripted injections in schedule order. Every anchor is
+    // reachable by construction (round <= effective_rounds), so this
+    // loop cannot deadlock.
+    for a in &s.injections {
+        wait_round(&jobs, a.job, a.round)?;
+        match a.inj {
+            Injection::StealStorm => {
+                // low above any realistic depth + high of 1: every poll
+                // sees a steal candidate until the run drains
+                rt.chaos_set_watermarks(1 << 20, 1)?;
+                trace.push(format!(
+                    "inject steal-storm @ job{} round {}",
+                    a.job, a.round
+                ));
+            }
+            Injection::FlushJitter { shots } => {
+                for _ in 0..shots {
+                    rt.chaos_flush_jitter()?;
+                }
+                trace.push(format!(
+                    "inject flush-jitter x{shots} @ job{} round {}",
+                    a.job, a.round
+                ));
+            }
+            Injection::LateRegistration => {
+                let fam = FamilySpec {
+                    name: format!("late_{seed}"),
+                    rows: 3,
+                    reuse: false,
+                    static_period: None,
+                    cpu_fallback: false,
+                };
+                let plan = JobPlan {
+                    name: "late".to_string(),
+                    family: usize::MAX, // ad-hoc family, not in s.families
+                    count: 30,
+                    rounds: 1,
+                    chares: 1,
+                    nbuf: 4,
+                    fill: 2.0,
+                    fault: Fault::None,
+                };
+                let counter = Arc::new(AtomicU64::new(0));
+                let handle =
+                    rt.submit_job(job_spec(&plan, &fam, counter.clone()))?;
+                trace.push(format!(
+                    "inject late-registration ({}) @ job{} round {}",
+                    fam.name, a.job, a.round
+                ));
+                jobs.push(Running {
+                    idx: jobs.len(),
+                    plan,
+                    fam,
+                    counter,
+                    handle: Some(handle),
+                });
+            }
+            Injection::RejectedSubmit => {
+                // same family name, incompatible tile shape: must be
+                // rejected and must leave the runtime untouched
+                let mut bad = s.families[0].clone();
+                bad.rows += 1;
+                let spec = JobSpec::new("rejected")
+                    .kernel(descriptor(&bad))
+                    .driver(|_| Ok(Vec::new()));
+                match rt.submit_job(spec) {
+                    Err(_) => trace.push(format!(
+                        "inject rejected-submit @ job{} round {}: rejected",
+                        a.job, a.round
+                    )),
+                    Ok(h) => {
+                        violations.push(
+                            "incompatible re-registration was accepted"
+                                .to_string(),
+                        );
+                        let _ = h.wait();
+                    }
+                }
+            }
+        }
+    }
+
+    // Fire the scripted cancels (after injections: their anchors are
+    // independent of cancel timing, the cancel anchors equal each
+    // victim's effective rounds).
+    for j in 0..jobs.len() {
+        if let Fault::Cancel { round, kind } = jobs[j].plan.fault {
+            wait_round(&jobs, j, round)?;
+            jobs[j].handle.as_ref().expect("not yet waited").cancel();
+            trace.push(format!(
+                "cancel job{} ({kind:?}) @ round {round}",
+                jobs[j].idx
+            ));
+        }
+    }
+
+    // Wait every job out, in submission order, and check its terminal
+    // contract. After each seal, audit that its residency keys are gone
+    // (unless a later submission recycled the id, which keeps it live).
+    for j in 0..jobs.len() {
+        let handle = jobs[j].handle.take().expect("waited once");
+        while handle.poll() == JobStatus::Running {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let status = handle.poll();
+        let job_id = handle.job().0;
+        let name = handle.name().to_string();
+        let result = handle.wait();
+        let verdict = match jobs[j].plan.fault {
+            Fault::None => match &result {
+                Ok(r) => {
+                    let fam = &jobs[j].fam;
+                    let want = vec![
+                        jobs[j].plan.round_value(fam);
+                        jobs[j].plan.rounds as usize
+                    ];
+                    if status != JobStatus::Done {
+                        violations.push(format!(
+                            "job{j} {name}: healthy job sealed {status:?}"
+                        ));
+                        "status-mismatch"
+                    } else if r.series != want {
+                        violations.push(format!(
+                            "job{j} {name}: series {:?} != exact physics \
+                             {want:?} (tenant isolation broken?)",
+                            r.series
+                        ));
+                        "series-mismatch"
+                    } else {
+                        "series-exact"
+                    }
+                }
+                Err(e) => {
+                    violations
+                        .push(format!("job{j} {name}: healthy job failed: {e}"));
+                    "unexpected-error"
+                }
+            },
+            Fault::Cancel { .. } => match &result {
+                Ok(r) if status == JobStatus::Cancelled
+                    && r.series.is_empty() =>
+                {
+                    "cancelled-clean"
+                }
+                Ok(r) => {
+                    violations.push(format!(
+                        "job{j} {name}: cancel sealed {status:?} with {} \
+                         series entries",
+                        r.series.len()
+                    ));
+                    "cancel-mismatch"
+                }
+                Err(e) => {
+                    violations.push(format!(
+                        "job{j} {name}: cancelled job errored: {e}"
+                    ));
+                    "cancel-error"
+                }
+            },
+            Fault::Panic { .. } => {
+                if result.is_err() && status == JobStatus::Failed {
+                    "failed-sealed"
+                } else {
+                    violations.push(format!(
+                        "job{j} {name}: panic sealed {status:?}, wait err: {}",
+                        result.is_err()
+                    ));
+                    "panic-mismatch"
+                }
+            }
+        };
+        trace.push(format!("seal job{j} {name}: {status:?} {verdict}"));
+
+        let recycled = jobs
+            .iter()
+            .any(|o| o.handle.as_ref().map_or(false, |h| h.job().0 == job_id));
+        if !recycled {
+            let resident = rt.chaos_resident_jobs()?;
+            if resident.contains(&job_id) {
+                violations.push(format!(
+                    "job{j} {name}: residency keys survive its seal \
+                     (resident jobs: {resident:?})"
+                ));
+                trace.push(format!("audit after job{j}: stale"));
+            } else {
+                trace.push(format!("audit after job{j}: clean"));
+            }
+        }
+    }
+
+    // Final audit: with every tenant sealed, nothing may stay resident.
+    let resident = rt.chaos_resident_jobs()?;
+    if resident.is_empty() {
+        trace.push("final residency audit: clean".to_string());
+    } else {
+        violations.push(format!(
+            "sealed runtime still holds residency for jobs {resident:?}"
+        ));
+        trace.push("final residency audit: stale".to_string());
+    }
+
+    // Shutdown must terminate (watchdog: a hang is a violation, not a
+    // hung test suite), and the sealed pool report must pass the
+    // accounting invariants.
+    let submitted = jobs.len();
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(rt.shutdown());
+    });
+    match rx.recv_timeout(EVENT_TIMEOUT) {
+        Ok(pool) => {
+            if pool.jobs.len() != submitted {
+                violations.push(format!(
+                    "{} sealed job reports for {submitted} submissions",
+                    pool.jobs.len()
+                ));
+            }
+            let acc = accounting_violations(&pool);
+            trace.push(if acc.is_empty() {
+                "accounting: clean".to_string()
+            } else {
+                format!("accounting: {} violation(s)", acc.len())
+            });
+            violations.extend(acc);
+        }
+        Err(_) => {
+            violations.push("shutdown did not terminate".to_string());
+        }
+    }
+
+    Ok(ChaosReport { seed, trace, violations })
+}

@@ -1,0 +1,368 @@
+//! Seeded chaos schedules: a pure function from a `u64` seed to a full
+//! fault plan for one multi-tenant run.
+//!
+//! Everything the harness does — runtime shape, job mix, which driver is
+//! cancelled or panics and when, which injections fire and at which
+//! per-job round — is decided HERE, from the seed alone, before the
+//! runtime exists. The harness merely executes the plan, so any failure
+//! replays bit-identically from its seed (`gcharm chaos --seed N`).
+//!
+//! Two properties the generator maintains by construction:
+//!
+//! - **Corpus coverage**: `seed % 4` picks the emphasized fault theme
+//!   (cancel / driver panic / steal storm / live registration), so any
+//!   contiguous block of 8 seeds exercises every class twice.
+//! - **Reachable anchors**: every injection and cancel is anchored to a
+//!   `(job, round)` pair with `round <= effective_rounds(job)` — the
+//!   round counter is guaranteed to get there no matter what else the
+//!   schedule does, so a schedule can never deadlock its own harness.
+
+use crate::util::Rng;
+
+/// How a cancelled driver is arranged to be holding the runtime when the
+/// cancel lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelKind {
+    /// Driver idles at quiescence (all rounds drained) when cancelled.
+    AtQuiescence,
+    /// Driver has a full burst in flight, un-awaited, when cancelled.
+    MidFlight,
+    /// Driver is blocked inside `await_reduction` with nothing coming:
+    /// only the cancel can wake it. The invariant under test is that no
+    /// blocked `await_reduction` survives a cancel.
+    Blocked,
+}
+
+/// The fault a job's driver is scripted to suffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Runs all its rounds and seals `Done`.
+    None,
+    /// Cancelled by the harness once `round` rounds completed.
+    Cancel { round: u64, kind: CancelKind },
+    /// Driver panics after `round` rounds (seals `Failed` via the drop
+    /// guard; the runtime must survive).
+    Panic { round: u64 },
+}
+
+/// One kernel family shared by one or more jobs. Jobs sharing a family
+/// must register byte-identical descriptors, so the spec lives outside
+/// the per-job plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilySpec {
+    pub name: String,
+    /// Tile rows (width is always 1; the slot kernel sums the tile).
+    pub rows: usize,
+    /// Register a reuse arg + gather variant: requests carry buffer ids
+    /// and stage through the chare tables (exercises residency).
+    pub reuse: bool,
+    /// `Some(n)`: static combining every `n` requests (the residual-debt
+    /// path); `None`: the runtime's adaptive policy.
+    pub static_period: Option<usize>,
+    /// Give the family a CPU fallback so the hybrid split applies.
+    pub cpu_fallback: bool,
+}
+
+/// One tenant job of the schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobPlan {
+    pub name: String,
+    /// Index into [`Schedule::families`].
+    pub family: usize,
+    /// Requests per chare per round.
+    pub count: usize,
+    /// Rounds a fault-free driver runs.
+    pub rounds: u64,
+    /// Chares (each on `chare_index % pes`).
+    pub chares: usize,
+    /// Distinct reuse-buffer ids each chare cycles through (reuse
+    /// families only).
+    pub nbuf: usize,
+    /// Per-job tile fill value. Distinct fills make the physics
+    /// per-tenant: a launch that mixed another job's tiles into this
+    /// job's reduction shifts the exact integer sum and is caught.
+    pub fill: f32,
+    pub fault: Fault,
+}
+
+impl JobPlan {
+    /// Rounds the driver completes before its scripted fault (equals
+    /// `rounds` for a fault-free job). The per-job round counter always
+    /// reaches this value, which is what makes anchors reachable.
+    pub fn effective_rounds(&self) -> u64 {
+        match self.fault {
+            Fault::None => self.rounds,
+            Fault::Cancel { round, .. } | Fault::Panic { round } => round,
+        }
+    }
+
+    /// Exact value of one round's reduction for this job. All arithmetic
+    /// is small-integer-valued in f32/f64, so equality is exact; any
+    /// cross-tenant tile mixing breaks it.
+    pub fn round_value(&self, fam: &FamilySpec) -> f64 {
+        let per_chare: f64 = (0..self.count)
+            .map(|i| {
+                let v = if fam.reuse {
+                    self.fill + (i % self.nbuf) as f32
+                } else {
+                    self.fill
+                };
+                fam.rows as f64 * v as f64
+            })
+            .sum();
+        self.chares as f64 * per_chare
+    }
+}
+
+/// A scripted perturbation of the live runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injection {
+    /// Collapse the steal watermarks so every coordinator poll sees a
+    /// steal candidate (forced `steal_flush` + migration storm). Stays
+    /// on for the rest of the run; quiescence must still be reached.
+    StealStorm,
+    /// `shots` single-shot forced flushes of every combiner (flush-timing
+    /// jitter; capped leftovers must drain through the regular path).
+    FlushJitter { shots: usize },
+    /// Submit an extra job with a brand-new kernel family to the live
+    /// runtime (late registration racing active traffic).
+    LateRegistration,
+    /// Submit a job whose spec re-registers an existing family with an
+    /// incompatible shape: must be rejected, and must leave the runtime
+    /// (including the job-id pool) exactly as it was.
+    RejectedSubmit,
+}
+
+/// An injection anchored to a per-job round counter: it fires when job
+/// `job`'s driver has completed `round` rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Anchored {
+    pub job: usize,
+    pub round: u64,
+    pub inj: Injection,
+}
+
+/// Everything one chaos run does, derived purely from the seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub seed: u64,
+    pub devices: usize,
+    pub pes: usize,
+    pub families: Vec<FamilySpec>,
+    pub jobs: Vec<JobPlan>,
+    /// Fired in order; every anchor is reachable by construction.
+    pub injections: Vec<Anchored>,
+}
+
+/// Fault themes, cycled by `seed % THEMES`.
+pub const THEMES: usize = 4;
+
+/// Human name of a seed's theme (trace + docs).
+pub fn theme_name(seed: u64) -> &'static str {
+    match seed % THEMES as u64 {
+        0 => "cancel",
+        1 => "driver-panic",
+        2 => "steal-storm",
+        _ => "live-registration",
+    }
+}
+
+impl Schedule {
+    /// The pure generator. Same seed, same schedule, always.
+    pub fn from_seed(seed: u64) -> Schedule {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
+        let theme = (seed % THEMES as u64) as usize;
+        // The steal-storm theme needs a sharded pool to have anything to
+        // steal between.
+        let devices = if theme == 2 { 2 } else { 1 + rng.below(2) };
+        let pes = 1 + rng.below(3);
+        let njobs = 2 + rng.below(2);
+
+        // Family mix: either one family shared by every job (cross-job
+        // combining under fault) or one private family per job.
+        let shared = rng.below(2) == 0;
+        let nfam = if shared { 1 } else { njobs };
+        let families: Vec<FamilySpec> = (0..nfam)
+            .map(|f| FamilySpec {
+                name: format!("chaos_{seed}_{f}"),
+                rows: 2 + rng.below(7),
+                reuse: rng.below(2) == 0,
+                static_period: if rng.below(3) == 0 {
+                    Some(2 + rng.below(6))
+                } else {
+                    None
+                },
+                cpu_fallback: rng.below(2) == 0,
+            })
+            .collect();
+
+        let mut jobs: Vec<JobPlan> = (0..njobs)
+            .map(|j| JobPlan {
+                name: format!("job{j}"),
+                family: if shared { 0 } else { j },
+                count: 40 + rng.below(120),
+                rounds: 2 + rng.below(4) as u64,
+                chares: 1 + rng.below(3),
+                nbuf: 4 + rng.below(5),
+                fill: (1 + rng.below(4)) as f32,
+                fault: Fault::None,
+            })
+            .collect();
+
+        // Job 0 always stays healthy: a co-tenant whose exact physics
+        // must survive whatever happens to its neighbours.
+        for j in 1..njobs {
+            let rounds = jobs[j].rounds;
+            jobs[j].fault = match theme {
+                0 => Fault::Cancel {
+                    round: 1 + rng.below(rounds as usize - 1) as u64,
+                    kind: match rng.below(3) {
+                        0 => CancelKind::AtQuiescence,
+                        1 => CancelKind::MidFlight,
+                        _ => CancelKind::Blocked,
+                    },
+                },
+                1 => Fault::Panic {
+                    round: 1 + rng.below(rounds as usize - 1) as u64,
+                },
+                _ => Fault::None,
+            };
+        }
+
+        let mut injections = Vec::new();
+        let anchor = |rng: &mut Rng, jobs: &[JobPlan], inj: Injection| {
+            let job = rng.below(jobs.len());
+            let round =
+                1 + rng.below(jobs[job].effective_rounds() as usize) as u64;
+            Anchored { job, round, inj }
+        };
+        match theme {
+            2 => injections
+                .push(Anchored { job: 0, round: 1, inj: Injection::StealStorm }),
+            3 => {
+                injections.push(Anchored {
+                    job: 0,
+                    round: 1,
+                    inj: Injection::LateRegistration,
+                });
+                injections.push(anchor(
+                    &mut rng,
+                    &jobs,
+                    Injection::RejectedSubmit,
+                ));
+            }
+            _ => {
+                if devices == 2 && rng.below(2) == 0 {
+                    injections.push(anchor(&mut rng, &jobs, Injection::StealStorm));
+                }
+            }
+        }
+        // Flush-timing jitter rides along on every second schedule.
+        if rng.below(2) == 0 {
+            let shots = 1 + rng.below(3);
+            injections.push(anchor(
+                &mut rng,
+                &jobs,
+                Injection::FlushJitter { shots },
+            ));
+        }
+
+        Schedule { seed, devices, pes, families, jobs, injections }
+    }
+
+    /// The schedule's own trace header lines (pure; part of the replay-
+    /// identical event trace).
+    pub fn describe(&self) -> Vec<String> {
+        let mut out = vec![format!(
+            "schedule seed={} theme={} devices={} pes={} jobs={}",
+            self.seed,
+            theme_name(self.seed),
+            self.devices,
+            self.pes,
+            self.jobs.len()
+        )];
+        for (f, fam) in self.families.iter().enumerate() {
+            out.push(format!(
+                "family {f} {}: rows={} reuse={} static={:?} cpu_fallback={}",
+                fam.name, fam.rows, fam.reuse, fam.static_period,
+                fam.cpu_fallback
+            ));
+        }
+        for (j, job) in self.jobs.iter().enumerate() {
+            out.push(format!(
+                "plan job{j} fam={} count={} rounds={} chares={} fill={} \
+                 fault={:?}",
+                job.family, job.count, job.rounds, job.chares, job.fill,
+                job.fault
+            ));
+        }
+        for a in &self.injections {
+            out.push(format!(
+                "plan inject {:?} @ job{} round {}",
+                a.inj, a.job, a.round
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        for seed in 0..16u64 {
+            assert_eq!(Schedule::from_seed(seed), Schedule::from_seed(seed));
+        }
+    }
+
+    #[test]
+    fn contiguous_corpus_covers_every_theme_twice() {
+        let mut seen = [0usize; THEMES];
+        for seed in 0..8u64 {
+            seen[(seed % THEMES as u64) as usize] += 1;
+        }
+        assert_eq!(seen, [2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn anchors_are_always_reachable() {
+        for seed in 0..64u64 {
+            let s = Schedule::from_seed(seed);
+            for a in &s.injections {
+                assert!(a.job < s.jobs.len(), "seed {seed}");
+                assert!(
+                    a.round >= 1
+                        && a.round <= s.jobs[a.job].effective_rounds(),
+                    "seed {seed}: anchor {a:?} beyond effective rounds"
+                );
+                if a.inj == Injection::StealStorm {
+                    assert!(s.devices >= 2, "seed {seed}: storm needs a pool");
+                }
+            }
+            for j in &s.jobs {
+                match j.fault {
+                    Fault::None => {}
+                    Fault::Cancel { round, .. } | Fault::Panic { round } => {
+                        assert!(round >= 1 && round < j.rounds, "seed {seed}");
+                    }
+                }
+                assert!(j.family < s.families.len(), "seed {seed}");
+            }
+            assert_eq!(s.jobs[0].fault, Fault::None, "seed {seed}: job0 healthy");
+        }
+    }
+
+    #[test]
+    fn round_values_are_exact_integers() {
+        for seed in 0..32u64 {
+            let s = Schedule::from_seed(seed);
+            for j in &s.jobs {
+                let v = j.round_value(&s.families[j.family]);
+                assert_eq!(v, v.round(), "seed {seed}: non-integer physics");
+                assert!(v > 0.0);
+            }
+        }
+    }
+}

@@ -125,6 +125,12 @@ impl ChareTable {
         self.mem.invalidate_where(pred);
     }
 
+    /// Ids of every resident buffer (chaos-harness residency audit).
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn resident_keys(&self) -> Vec<BufferId> {
+        self.mem.resident_keys()
+    }
+
     pub fn hits(&self) -> u64 {
         self.mem.hits()
     }

@@ -249,13 +249,16 @@ impl Combiner {
         if reason != FlushReason::Stolen {
             self.arrivals_since_flush = 0;
         }
-        // A capped period flush leaves residuals that must not wait a
-        // whole further period. A steal neither creates nor clears that
-        // debt (the leftovers it skips still must drain promptly); any
-        // other flush clears it.
+        // A capped period or forced flush leaves residuals that must not
+        // wait a whole further period: `force_flush` callers that loop
+        // until `None` never see the flag, but a single forced flush
+        // (chaos flush jitter, future one-shot drains) must not strand
+        // its leftovers behind a fresh arrival count. A steal neither
+        // creates nor clears that debt (the leftovers it skips still
+        // must drain promptly); a full-occupancy or idle flush clears it.
         self.residual = !self.queue.is_empty()
             && match reason {
-                FlushReason::StaticPeriod => true,
+                FlushReason::StaticPeriod | FlushReason::Forced => true,
                 FlushReason::Stolen => self.residual,
                 _ => false,
             };
@@ -554,6 +557,33 @@ mod tests {
         let b = c.poll(0.0).expect("residual still drains after steal");
         assert_eq!(b.reason, FlushReason::StaticPeriod);
         assert_eq!(b.items.len(), 2);
+    }
+
+    #[test]
+    fn single_forced_flush_leaves_residual_debt() {
+        // Regression (found by the chaos harness's flush jitter): one
+        // forced flush on an oversized StaticEvery queue was clearing
+        // both the arrival count and the residual flag, stranding the
+        // capped-off leftovers for a full fresh period. A single Forced
+        // flush with leftovers must leave the residual debt set so the
+        // next poll drains them.
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(8), 3, false);
+        for i in 0..8 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.force_flush().expect("forced flush");
+        assert_eq!(b.reason, FlushReason::Forced);
+        assert_eq!(b.items.len(), 3);
+        assert_eq!(c.len(), 5, "cap left 5 behind");
+        // no new arrivals: the leftovers still drain on the next polls
+        let b2 = c.poll(0.0).expect("residual drains after forced flush");
+        assert_eq!(b2.reason, FlushReason::StaticPeriod);
+        assert_eq!(b2.items.len(), 3);
+        assert_eq!(c.poll(0.0).expect("rest drains").items.len(), 2);
+        assert!(c.is_empty());
+        // debt cleared: sub-period arrivals hold again
+        c.insert(pending(8, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none());
     }
 
     #[test]

@@ -299,7 +299,31 @@ impl Runtime {
              residency-key namespace holds 65536 concurrent jobs)",
             job.0
         );
+        // An over-range id is deliberately NOT restored above: it can
+        // never be used, and parking it in the free pool would hand it
+        // back to (and fail) every later submission. In-range ids, in
+        // contrast, must flow back on *every* rejection below — a
+        // rejected spec used to leak its id from the 65536-wide
+        // namespace permanently (found by the chaos harness's
+        // live-registration schedules).
+        let r = self.begin_job_with_id(job, name, kernels, chares);
+        if r.is_err() {
+            core.free_ids.lock().unwrap().push(job.0);
+        }
+        r
+    }
 
+    /// The fallible part of [`Runtime::begin_job_inner`], after the job
+    /// id is reserved; the caller owns returning the id to the pool on
+    /// error.
+    fn begin_job_with_id(
+        &self,
+        job: JobId,
+        name: String,
+        kernels: Vec<KernelDescriptor>,
+        chares: Vec<(ChareId, usize, Box<dyn Chare>)>,
+    ) -> Result<JobCtx> {
+        let core = &self.core;
         // Resolve kernels against the shared append-only registry;
         // genuinely new families are validated against the artifact set
         // and taught to the live coordinator + device pool, ordered
@@ -429,6 +453,54 @@ impl Runtime {
         // drops its completion senders.
         self.forwarder.join().ok();
         report
+    }
+}
+
+/// Chaos-harness injections on a live runtime. Compiled only under
+/// `#[cfg(any(test, feature = "chaos"))]` — the release hot path carries
+/// none of this. The methods queue [`super::scheduler::ChaosCmd`]s onto
+/// the coordinator's one FIFO queue, so every injection is ordered
+/// against the real traffic exactly like a hostile schedule would be.
+#[cfg(any(test, feature = "chaos"))]
+impl Runtime {
+    /// Overwrite the live router's steal watermarks. `low` far above any
+    /// realistic depth plus a tiny `high` turns every poll into a steal
+    /// candidate (a steal storm); restoring the configured values ends
+    /// the storm.
+    pub fn chaos_set_watermarks(&self, low: usize, high: usize) -> Result<()> {
+        use super::scheduler::ChaosCmd;
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::Chaos(ChaosCmd::SetWatermarks { low, high }))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+    }
+
+    /// Force one single-shot flush of every combiner (flush-timing
+    /// jitter). Deliberately not drained to empty: capped leftovers must
+    /// drain through the regular poll path.
+    pub fn chaos_flush_jitter(&self) -> Result<()> {
+        use super::scheduler::ChaosCmd;
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::Chaos(ChaosCmd::FlushJitter))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+    }
+
+    /// Job ids (key high halves) with any buffer still resident on any
+    /// device. Queued behind every teardown already sent, so auditing
+    /// after a job sealed cannot race its `JobEnded` cleanup.
+    pub fn chaos_resident_jobs(&self) -> Result<Vec<u64>> {
+        use super::scheduler::ChaosCmd;
+        let (tx, rx) = channel();
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::Chaos(ChaosCmd::AuditResidency(tx)))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        rx.recv_timeout(Duration::from_secs(30))
+            .context("coordinator residency audit timed out")
     }
 }
 

@@ -1025,6 +1025,52 @@ impl Coord {
         }
     }
 
+    /// Apply one chaos-harness injection (test/chaos builds only; see
+    /// [`scheduler::ChaosCmd`]). Kept beside the real handlers so the
+    /// injections perturb exactly the state a hostile schedule would.
+    #[cfg(any(test, feature = "chaos"))]
+    fn on_chaos(&mut self, cmd: scheduler::ChaosCmd) {
+        use scheduler::ChaosCmd;
+        match cmd {
+            ChaosCmd::SetWatermarks { low, high } => {
+                self.dev_router.set_watermarks(low, high);
+                // A storm must not wait for the next submission to bite.
+                self.poll_combiners();
+            }
+            ChaosCmd::FlushJitter => {
+                // One forced flush per combiner — deliberately NOT looped
+                // to empty: capped-off leftovers must drain through the
+                // regular poll path (the residual-debt contract of
+                // `Combiner::take`, which this injection found broken).
+                for d in 0..self.devices.len() {
+                    for k in 0..self.devices[d].combiners.len() {
+                        if let Some(b) =
+                            self.devices[d].combiners[k].force_flush()
+                        {
+                            self.dispatch(b, KernelKindId(k), d);
+                        }
+                    }
+                }
+            }
+            ChaosCmd::AuditResidency(reply) => {
+                let mut jobs: Vec<u64> = Vec::new();
+                for st in &self.devices {
+                    for t in st.tables.iter().flatten() {
+                        jobs.extend(
+                            t.resident_keys().into_iter().map(key_job),
+                        );
+                    }
+                    jobs.extend(
+                        st.node_table.resident_keys().into_iter().map(key_job),
+                    );
+                }
+                jobs.sort_unstable();
+                jobs.dedup();
+                let _ = reply.send(jobs);
+            }
+        }
+    }
+
     /// The pool-wide report with the residency and steal counters folded
     /// in (end-of-run sealing and live `Snapshot` replies share this).
     fn sealed_report(&self) -> PoolReport {
@@ -1089,6 +1135,8 @@ impl Coord {
                 Ok(CoordMsg::Snapshot(reply)) => {
                     let _ = reply.send(self.sealed_report());
                 }
+                #[cfg(any(test, feature = "chaos"))]
+                Ok(CoordMsg::Chaos(cmd)) => self.on_chaos(cmd),
                 Ok(CoordMsg::Stop) => break,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                     self.poll_combiners();

@@ -75,7 +75,34 @@ pub(crate) enum CoordMsg {
     InvalidateAll,
     /// Reply with a live snapshot of the pool-wide report.
     Snapshot(Sender<PoolReport>),
+    /// A chaos-harness injection (test/chaos builds only); the release
+    /// hot path never constructs or matches this variant.
+    #[cfg(any(test, feature = "chaos"))]
+    Chaos(ChaosCmd),
     Stop,
+}
+
+/// Fault injections the chaos harness (`crate::chaos`) feeds a live
+/// coordinator. Compiled only under `#[cfg(any(test, feature =
+/// "chaos"))]`; each command perturbs scheduler state the way a hostile
+/// schedule would, without any schedule-dependent sleeps.
+#[cfg(any(test, feature = "chaos"))]
+pub(crate) enum ChaosCmd {
+    /// Overwrite the live router's steal watermarks. A huge `low` plus a
+    /// tiny `high` makes every device pair a steal candidate (steal
+    /// storm: back-to-back `steal_flush` migrations); restoring the
+    /// configured values ends the storm.
+    SetWatermarks { low: usize, high: usize },
+    /// Force one (single-shot, NOT drained-to-empty) flush of every
+    /// combiner on every device — flush-timing jitter. Capped flushes
+    /// deliberately leave residuals behind to exercise the
+    /// residual-drain path.
+    FlushJitter,
+    /// Reply with the job halves (`key >> 48`) of every buffer resident
+    /// on any device, for the no-sealed-job-residency invariant. Queued
+    /// after a job's `JobEnded`, the reply cannot race its teardown
+    /// (one FIFO coordinator queue).
+    AuditResidency(Sender<Vec<u64>>),
 }
 
 /// Chare -> device routing policy for the sharded GPU pool.
@@ -222,6 +249,14 @@ impl DeviceRouter {
             && self.depth.len() >= 2
             && self.depth.iter().any(|&d| d < self.low)
             && self.depth.iter().any(|&d| d >= self.high)
+    }
+
+    /// Chaos-harness override of the steal watermarks on a live router
+    /// (see [`ChaosCmd::SetWatermarks`]). Test/chaos builds only.
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn set_watermarks(&mut self, low: usize, high: usize) {
+        self.low = low;
+        self.high = high;
     }
 
     /// Steal decision: among the devices below the low watermark pick the

@@ -63,6 +63,13 @@
 //! the experiment index.
 pub mod apps;
 pub mod bench;
+// Deterministic fault-injection harness (`cargo test --features chaos`,
+// `gcharm chaos --seed N`). Feature-gated with the coordinator's
+// injection hooks so the release hot path carries none of it; also
+// compiled under `cfg(test)` so the schedule/invariant unit tests run in
+// the plain tier-1 suite.
+#[cfg(any(test, feature = "chaos"))]
+pub mod chaos;
 pub mod coordinator;
 pub mod runtime;
 pub mod util;

@@ -24,6 +24,10 @@
 //!   --iters N --rows N --particles N  trace concurrently; asserts that
 //!                                   cross-job combining fired
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
+//! gcharm chaos [--seed N] [--seeds A..B]   deterministic fault-injection
+//!                                   run(s); needs `--features chaos`.
+//!                                   Prints the replay-identical event
+//!                                   trace; exits nonzero on violations.
 //! ```
 
 use std::collections::HashMap;
@@ -341,6 +345,46 @@ fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Replay chaos schedules by seed: `--seed N` for one, `--seeds A..B`
+/// for a range (default: the regression corpus 0..8). Exits nonzero if
+/// any seed violates an invariant, printing its full event trace.
+#[cfg(feature = "chaos")]
+fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
+    use gcharm::chaos::{run_schedule, theme_name};
+
+    let seeds: Vec<u64> = if let Some(s) = flags.get("seed") {
+        vec![s.parse()?]
+    } else {
+        let range = flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..8");
+        let (a, b) = range
+            .split_once("..")
+            .ok_or_else(|| anyhow::anyhow!("--seeds wants A..B, got {range}"))?;
+        (a.parse()?..b.parse()?).collect()
+    };
+    let mut failed = 0usize;
+    for seed in seeds {
+        println!("=== seed {seed} ({}) ===", theme_name(seed));
+        let r = run_schedule(seed)?;
+        println!("{r}");
+        if !r.ok() {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} seed(s) violated invariants");
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "chaos"))]
+fn cmd_chaos(_flags: HashMap<String, String>) -> Result<()> {
+    bail!(
+        "the chaos harness is feature-gated; rebuild with \
+         `cargo build --features chaos` (or run \
+         `cargo test --features chaos` for the seed corpus)"
+    )
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -355,9 +399,11 @@ fn main() -> Result<()> {
         "spmv" => cmd_spmv(flags),
         "serve" => cmd_serve(flags),
         "figures" => cmd_figures(flags),
+        "chaos" => cmd_chaos(flags),
         _ => {
             println!(
-                "usage: gcharm <info|nbody|md|spmv|serve|figures> [--flags]\n\
+                "usage: gcharm <info|nbody|md|spmv|serve|figures|chaos> \
+                 [--flags]\n\
                  see rust/src/main.rs header for options"
             );
             Ok(())

@@ -88,6 +88,13 @@ impl DeviceMemory {
         self.resident.get(&id).copied()
     }
 
+    /// Ids of every resident buffer, for the chaos harness's residency
+    /// audit (no sealed job's keys may stay resident). Test/chaos only.
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn resident_keys(&self) -> Vec<BufferId> {
+        self.resident.keys().copied().collect()
+    }
+
     /// Ensure `id` is resident; returns Hit(slot) or Miss(slot). On miss the
     /// least-recently-used *unpinned* slot is evicted if the pool is full;
     /// `None` if every slot is pinned (caller must flush pending launches

@@ -1,0 +1,152 @@
+//! Chaos-harness regression corpus (`cargo test --features chaos`).
+//!
+//! Each seed is a complete fault schedule ([`gcharm::chaos::Schedule`]):
+//! the contiguous corpus 0..=7 covers every fault theme — scripted
+//! cancels at three quiescence depths, panicking drivers, steal storms,
+//! flush-timing jitter, live registration and rejected submissions —
+//! twice each. A failing seed replays bit-identically with
+//! `gcharm chaos --seed N` (the whole schedule, including its event
+//! trace, is a pure function of the seed).
+//!
+//! Also pinned here: the two bugs the harness's first sweep flushed out
+//! (a combiner residual-debt stall after a forced flush — unit-pinned in
+//! `coordinator::combiner` — and a job-id leak on rejected submissions,
+//! pinned end-to-end below).
+
+use gcharm::chaos::{
+    accounting_violations, job_spec_for, run_schedule, theme_name,
+    FamilySpec, Fault, JobPlan, Schedule,
+};
+use gcharm::coordinator::{Config, JobReport, PoolReport, Runtime};
+
+/// The regression corpus: every theme twice (seed % 4 cycles them).
+const CORPUS: std::ops::Range<u64> = 0..8;
+
+#[test]
+fn seed_corpus_holds_all_invariants() {
+    for seed in CORPUS {
+        let r = run_schedule(seed).expect("harness ran");
+        assert!(
+            r.ok(),
+            "seed {seed} ({}) violated invariants:\n{r}",
+            theme_name(seed)
+        );
+    }
+}
+
+#[test]
+fn corpus_covers_every_fault_theme_twice() {
+    let mut counts = std::collections::HashMap::new();
+    for seed in CORPUS {
+        *counts.entry(theme_name(seed)).or_insert(0usize) += 1;
+    }
+    for theme in ["cancel", "driver-panic", "steal-storm", "live-registration"]
+    {
+        assert_eq!(counts.get(theme), Some(&2), "theme {theme} undercovered");
+    }
+}
+
+/// Replay determinism: the event trace is a pure function of the seed,
+/// so a failure anywhere reproduces exactly from its seed number.
+#[test]
+fn same_seed_replays_an_identical_trace() {
+    // one seed per theme; two full runs each (fresh runtime every time)
+    for seed in 0..4u64 {
+        let a = run_schedule(seed).expect("first run");
+        let b = run_schedule(seed).expect("replay");
+        assert!(a.ok(), "seed {seed}:\n{a}");
+        assert_eq!(
+            a.trace, b.trace,
+            "seed {seed} ({}) replayed a different trace",
+            theme_name(seed)
+        );
+        assert_eq!(Schedule::from_seed(seed), Schedule::from_seed(seed));
+    }
+}
+
+/// The invariant checker must itself be falsifiable: a report whose
+/// per-job sums do not reproduce the pool totals has to be flagged.
+/// (The checker's full unit matrix lives in `chaos::invariants`.)
+#[test]
+fn deliberately_broken_accounting_is_detected() {
+    let mut pool = PoolReport::default();
+    pool.jobs.push(JobReport { gpu_requests: 7, ..Default::default() });
+    // the job claims 7 requests the pool never saw: the checker must bite
+    let v = accounting_violations(&pool);
+    assert!(
+        v.iter().any(|s| s.contains("gpu_requests")),
+        "checker passed a corrupted report: {v:?}"
+    );
+}
+
+/// Harness-found bug, pinned end-to-end: a rejected `submit_job`
+/// (incompatible re-registration) used to leak the job id it had
+/// reserved from the 16-bit recycling pool. With the fix, the id a
+/// sealed job freed survives a rejected submission and is handed to the
+/// next accepted one.
+#[test]
+fn rejected_submission_returns_its_job_id_to_the_pool() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let spec = |name: &str, family: &str, rows: usize| {
+        let fam = FamilySpec {
+            name: family.to_string(),
+            rows,
+            reuse: false,
+            static_period: None,
+            cpu_fallback: false,
+        };
+        let plan = JobPlan {
+            name: name.to_string(),
+            family: 0,
+            count: 10,
+            rounds: 1,
+            chares: 1,
+            nbuf: 4,
+            fill: 1.0,
+            fault: Fault::None,
+        };
+        job_spec_for(&plan, &fam)
+    };
+
+    let h1 = rt.submit_job(spec("first", "recycle_fam", 4)).unwrap();
+    let id1 = h1.job();
+    h1.wait().unwrap(); // seals: id1 returns to the free pool
+
+    // incompatible shape for the same family: rejected at submit — and
+    // the id it popped must flow back
+    let err = rt.submit_job(spec("bad", "recycle_fam", 8)).unwrap_err();
+    assert!(err.to_string().contains("bad"), "{err}");
+
+    let h2 = rt.submit_job(spec("second", "recycle_fam2", 4)).unwrap();
+    assert_eq!(
+        h2.job(),
+        id1,
+        "rejected submission leaked job id {id1} from the recycling pool"
+    );
+    h2.wait().unwrap();
+    rt.shutdown();
+}
+
+/// Seed 0 is a cancel-theme schedule: its job 0 is the healthy co-tenant
+/// whose exact physics must survive while its neighbours are cancelled.
+/// Both verdicts must actually appear in the trace (a corpus that never
+/// verifies a cancel verifies nothing).
+#[test]
+fn cancelled_seed_leaves_healthy_tenant_exact() {
+    let s = Schedule::from_seed(0);
+    assert_eq!(theme_name(0), "cancel");
+    assert!(
+        s.jobs.iter().skip(1).any(|j| !matches!(j.fault, Fault::None)),
+        "cancel theme must actually cancel someone"
+    );
+    let r = run_schedule(0).expect("harness ran");
+    assert!(r.ok(), "{r}");
+    assert!(
+        r.trace.iter().any(|l| l.contains("series-exact")),
+        "healthy tenant's exact physics never checked:\n{r}"
+    );
+    assert!(
+        r.trace.iter().any(|l| l.contains("cancelled-clean")),
+        "no cancel was verified:\n{r}"
+    );
+}
