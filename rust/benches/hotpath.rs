@@ -18,13 +18,15 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use gcharm::apps::md::{self, MdConfig};
 use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench::bench_ns;
 use gcharm::coordinator::{
     builtin_registry, chunk_by_items, ChareId, ChareTable, CombinePolicy,
     Combiner, Config, DeviceRouter, HybridScheduler, JobId, KernelKindId,
-    Pending, RoutePolicy, SplitPolicy, Tile, WorkRequest,
+    Pending, Report, ResidencyPolicy, RoutePolicy, SplitPolicy, Tile,
+    WorkRequest,
 };
 use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::shapes::{
@@ -425,6 +427,97 @@ fn device_pool_scaling() {
     }
 }
 
+/// LRU vs reuse-graph residency (ISSUE 7): the same three apps under
+/// both `Config::residency` policies on a 2-device pool. N-Body stages
+/// its particle buffers through the chare tables, so lookahead eviction
+/// and ahead-of-flush prefetch move its hit rate and transfer/migration
+/// bytes; MD and SpMV register no reuse arg and must be policy-neutral
+/// (their rows pin that the knob costs nothing where it cannot help).
+fn residency_ablation() {
+    println!("\nresidency: LRU vs reuse-graph (lookahead eviction + prefetch)");
+    println!(
+        "  {:<8} {:<12} {:>9} {:>11} {:>11} {:>9} {:>10} {:>8}",
+        "app", "policy", "hit rate", "xfer MiB", "migr MiB", "pf hits",
+        "pf wasted", "steals"
+    );
+    let run_app = |app: &str, policy: ResidencyPolicy| -> Report {
+        let runtime = Config {
+            pes: 4,
+            devices: 2,
+            route: RoutePolicy::AffinitySteal,
+            residency: policy,
+            ..Config::default()
+        };
+        match app {
+            "nbody" => {
+                let mut cfg = NbodyConfig::new(DatasetSpec::tiny());
+                cfg.iters = 3;
+                cfg.pieces_per_pe = 4;
+                cfg.runtime = runtime;
+                nbody::run(&cfg).expect("nbody run").report
+            }
+            "md" => {
+                let mut cfg = MdConfig::new(2048);
+                cfg.steps = 4;
+                cfg.runtime = runtime;
+                md::run(&cfg).expect("md run").report
+            }
+            _ => {
+                let mut cfg = SpmvConfig::new(2048);
+                cfg.iters = 3;
+                cfg.runtime = runtime;
+                spmv::run(&cfg).expect("spmv run").report
+            }
+        }
+    };
+    const MIB: f64 = (1u64 << 20) as f64;
+    for app in ["nbody", "md", "spmv"] {
+        for (pname, policy) in [
+            ("lru", ResidencyPolicy::Lru),
+            ("reuse-graph", ResidencyPolicy::ReuseGraph),
+        ] {
+            let r = run_app(app, policy);
+            println!(
+                "  {:<8} {:<12} {:>8.0}% {:>11.2} {:>11.2} {:>9} {:>10} {:>8}",
+                app,
+                pname,
+                r.hit_rate() * 100.0,
+                r.transfer_bytes as f64 / MIB,
+                r.migrated_bytes as f64 / MIB,
+                r.prefetch_hits,
+                r.prefetch_wasted,
+                r.steals
+            );
+            let series = format!("{app} residency ({pname}, 2 dev)");
+            record(&series, "hit_rate", r.hit_rate(), "ratio");
+            record(
+                &series,
+                "transfer_bytes",
+                r.transfer_bytes as f64,
+                "bytes",
+            );
+            record(
+                &series,
+                "migrated_bytes",
+                r.migrated_bytes as f64,
+                "bytes",
+            );
+            record(&series, "prefetch_hits", r.prefetch_hits as f64, "count");
+            record(
+                &series,
+                "prefetch_wasted",
+                r.prefetch_wasted as f64,
+                "count",
+            );
+        }
+    }
+    println!(
+        "  -> reuse-graph vs lru: the N-Body rows carry the ablation \
+         (lookahead eviction + prefetch on real reuse traffic); MD and \
+         SpMV have no reuse arg, so their deltas must be noise"
+    );
+}
+
 fn main() {
     println!("hot-path micro-benchmarks (median ns/op)");
 
@@ -433,6 +526,8 @@ fn main() {
     registry_dispatch_comparison();
 
     device_pool_scaling();
+
+    residency_ablation();
 
     // device router: affinity route + steal decision per request
     {

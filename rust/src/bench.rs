@@ -15,7 +15,9 @@ use std::time::Instant;
 
 use crate::apps::md::{self, MdConfig};
 use crate::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
-use crate::coordinator::{CombinePolicy, Config, DataPolicy, SplitPolicy};
+use crate::coordinator::{
+    CombinePolicy, Config, DataPolicy, ResidencyPolicy, SplitPolicy,
+};
 
 /// Plain-text table printer.
 pub struct Table {
@@ -204,10 +206,21 @@ pub fn run_fig3(scale: &Scale) {
     );
     let base = DatasetSpec::lambs();
     let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
-    for (name, policy) in [
-        ("no-reuse", DataPolicy::NoReuse),
-        ("reuse", DataPolicy::Reuse),
-        ("reuse+sort", DataPolicy::ReuseSorted),
+    // The residency ablation rider (ISSUE 7): the reuse rows run once
+    // per eviction policy — plain LRU vs the reuse-graph lookahead with
+    // ahead-of-flush prefetch. No-reuse never touches the tables, so one
+    // row suffices there.
+    let mut residency_rows: Vec<(String, u64, f64, u64, u64)> = Vec::new();
+    for (name, policy, residency) in [
+        ("no-reuse", DataPolicy::NoReuse, ResidencyPolicy::Lru),
+        ("reuse (lru)", DataPolicy::Reuse, ResidencyPolicy::Lru),
+        ("reuse (graph)", DataPolicy::Reuse, ResidencyPolicy::ReuseGraph),
+        ("reuse+sort (lru)", DataPolicy::ReuseSorted, ResidencyPolicy::Lru),
+        (
+            "reuse+sort (graph)",
+            DataPolicy::ReuseSorted,
+            ResidencyPolicy::ReuseGraph,
+        ),
     ] {
         let mut cfg = nbody_cfg(
             scale.large_n,
@@ -217,17 +230,31 @@ pub fn run_fig3(scale: &Scale) {
             CombinePolicy::Adaptive,
             policy,
         );
+        cfg.runtime.residency = residency;
         // Fig 3 isolates the force kernel (the reuse strategy's target);
         // Ewald launches are always contiguous and would dilute the series.
         cfg.do_ewald = false;
         let r = nbody::run(&cfg).expect("nbody run");
         let rep = &r.report;
-        rows.push((
-            name.to_string(),
-            rep.kernel_wall,
-            rep.kernel_modeled,
-            rep.transfer_modeled,
-        ));
+        // the paper's three-way comparison keys off the graph rows (the
+        // runtime default); no-reuse is policy-free
+        if !name.ends_with("(lru)") {
+            rows.push((
+                name.to_string(),
+                rep.kernel_wall,
+                rep.kernel_modeled,
+                rep.transfer_modeled,
+            ));
+        }
+        if policy != DataPolicy::NoReuse {
+            residency_rows.push((
+                name.to_string(),
+                rep.transfer_bytes,
+                rep.hit_rate(),
+                rep.prefetch_hits,
+                rep.prefetch_wasted,
+            ));
+        }
         t.row(vec![
             name.to_string(),
             format!("{:.3}", rep.kernel_wall),
@@ -239,6 +266,18 @@ pub fn run_fig3(scale: &Scale) {
         ]);
     }
     t.print();
+    // lru -> graph deltas per data policy (pairs pushed in order)
+    for pair in residency_rows.chunks(2) {
+        if let [(name_l, x_l, h_l, _, _), (name_g, x_g, h_g, pf, pw)] = pair {
+            println!(
+                "  -> residency {name_l} -> {name_g}: transfer {:+.1}%, hit \
+                 rate {:.0}% -> {:.0}% (prefetch {pf} hits / {pw} wasted)",
+                (*x_g as f64 - *x_l as f64) / (*x_l as f64).max(1.0) * 100.0,
+                h_l * 100.0,
+                h_g * 100.0,
+            );
+        }
+    }
     let (k0, x0) = (rows[0].2, rows[0].3);
     let (k1, x1) = (rows[1].2, rows[1].3);
     let (k2, _) = (rows[2].2, rows[2].3);

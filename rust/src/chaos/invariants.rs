@@ -52,6 +52,49 @@ pub fn accounting_violations(pool: &PoolReport) -> Vec<String> {
     check("kind gpu_items", ksum(|k| k.gpu_items), pool.gpu_items);
     check("kind cpu_items", ksum(|k| k.cpu_items), pool.cpu_items);
 
+    // Prefetch staging happens only in the per-family chare tables (the
+    // node entry cache never prefetches), so the pool totals must equal
+    // the kind sums EXACTLY (ISSUE 7).
+    check("kind prefetch_hits", ksum(|k| k.prefetch_hits), pool.prefetch_hits);
+    check(
+        "kind prefetch_wasted",
+        ksum(|k| k.prefetch_wasted),
+        pool.prefetch_wasted,
+    );
+    // The same tables' hit/miss counters are a *subset* of the pool's
+    // (the node cache adds its own on top, attributed to no family).
+    if ksum(|k| k.table_hits) > pool.table_hits {
+        v.push(format!(
+            "kind table_hits sum {} exceeds pool total {}",
+            ksum(|k| k.table_hits),
+            pool.table_hits
+        ));
+    }
+    if ksum(|k| k.table_misses) > pool.table_misses {
+        v.push(format!(
+            "kind table_misses sum {} exceeds pool total {}",
+            ksum(|k| k.table_misses),
+            pool.table_misses
+        ));
+    }
+    // A prefetch hit is a residency hit that was staged ahead: per kind
+    // it can never outnumber the kind's hits.
+    for k in &pool.kind_stats {
+        if k.prefetch_hits > k.table_hits {
+            v.push(format!(
+                "kind {}: {} prefetch hits exceed {} table hits",
+                k.name, k.prefetch_hits, k.table_hits
+            ));
+        }
+    }
+    // Prefetch bytes are real transfers: a subset of the pool's total.
+    if pool.prefetch_bytes > pool.transfer_bytes {
+        v.push(format!(
+            "prefetch_bytes {} exceed transfer_bytes {}",
+            pool.prefetch_bytes, pool.transfer_bytes
+        ));
+    }
+
     // Every request flushed from a combiner landed on exactly one side
     // of the hybrid split.
     check(
@@ -108,6 +151,14 @@ mod tests {
             cpu_items: 16,
             transfer_bytes: 320,
             flushed_requests: 20,
+            // Residency: the family's tables saw 6 hits / 14 misses, the
+            // node entry cache one extra hit; 2 of the hits were staged
+            // ahead, one staged buffer died unused, 64 B staged total.
+            table_hits: 7,
+            table_misses: 14,
+            prefetch_hits: 2,
+            prefetch_wasted: 1,
+            prefetch_bytes: 64,
             ..PoolReport::default()
         };
         pool.kind_stats.push(KindStats {
@@ -117,6 +168,10 @@ mod tests {
             cpu_requests: 4,
             gpu_items: 64,
             cpu_items: 16,
+            table_hits: 6,
+            table_misses: 14,
+            prefetch_hits: 2,
+            prefetch_wasted: 1,
         });
         pool.jobs.push(JobReport {
             job: JobId(0),
@@ -184,6 +239,45 @@ mod tests {
         pool.flushed_requests -= 3;
         let v = accounting_violations(&pool);
         assert!(v.iter().any(|s| s.contains("flushed_requests")), "{v:?}");
+    }
+
+    #[test]
+    fn broken_prefetch_partition_is_detected() {
+        let mut pool = consistent();
+        pool.kind_stats[0].prefetch_hits += 1; // kinds no longer sum to pool
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("kind prefetch_hits")), "{v:?}");
+
+        let mut pool = consistent();
+        pool.prefetch_wasted += 2;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("kind prefetch_wasted")), "{v:?}");
+    }
+
+    #[test]
+    fn prefetch_hits_exceeding_table_hits_are_detected() {
+        let mut pool = consistent();
+        // a prefetch hit that never showed up as a residency hit
+        pool.kind_stats[0].prefetch_hits = pool.kind_stats[0].table_hits + 1;
+        pool.prefetch_hits = pool.kind_stats[0].prefetch_hits;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("prefetch hits exceed")), "{v:?}");
+    }
+
+    #[test]
+    fn kind_table_counters_exceeding_pool_are_detected() {
+        let mut pool = consistent();
+        pool.kind_stats[0].table_hits = pool.table_hits + 3;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("table_hits sum")), "{v:?}");
+    }
+
+    #[test]
+    fn prefetch_bytes_exceeding_transfers_are_detected() {
+        let mut pool = consistent();
+        pool.prefetch_bytes = pool.transfer_bytes + 1;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("prefetch_bytes")), "{v:?}");
     }
 
     #[test]

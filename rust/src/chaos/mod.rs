@@ -293,11 +293,18 @@ pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
     let mut trace = s.describe();
     let mut violations: Vec<String> = Vec::new();
 
-    let rt = Runtime::new(Config {
+    let mut cfg = Config {
         pes: s.pes,
         devices: s.devices,
         ..Config::default()
-    })?;
+    };
+    if let Some(slots) = s.table_slots {
+        // Cache-pressure theme: a starved table makes every residency
+        // decision (eviction priority, prefetch, namespacing) load-
+        // bearing for job 0's exact physics.
+        cfg.table_slots = slots;
+    }
+    let rt = Runtime::new(cfg)?;
 
     // Submit every planned job up front; drivers pace themselves.
     let mut jobs: Vec<Running> = Vec::new();

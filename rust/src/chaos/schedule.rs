@@ -9,9 +9,10 @@
 //!
 //! Two properties the generator maintains by construction:
 //!
-//! - **Corpus coverage**: `seed % 4` picks the emphasized fault theme
-//!   (cancel / driver panic / steal storm / live registration), so any
-//!   contiguous block of 8 seeds exercises every class twice.
+//! - **Corpus coverage**: `seed % 5` picks the emphasized fault theme
+//!   (cancel / driver panic / steal storm / live registration / cache
+//!   pressure), so any contiguous block of 10 seeds exercises every
+//!   class twice.
 //! - **Reachable anchors**: every injection and cancel is anchored to a
 //!   `(job, round)` pair with `round <= effective_rounds(job)` — the
 //!   round counter is guaranteed to get there no matter what else the
@@ -150,12 +151,15 @@ pub struct Schedule {
     pub pes: usize,
     pub families: Vec<FamilySpec>,
     pub jobs: Vec<JobPlan>,
+    /// `Some(n)`: shrink every device's chare table to `n` slots (the
+    /// cache-pressure theme); `None`: the runtime default.
+    pub table_slots: Option<usize>,
     /// Fired in order; every anchor is reachable by construction.
     pub injections: Vec<Anchored>,
 }
 
 /// Fault themes, cycled by `seed % THEMES`.
-pub const THEMES: usize = 4;
+pub const THEMES: usize = 5;
 
 /// Human name of a seed's theme (trace + docs).
 pub fn theme_name(seed: u64) -> &'static str {
@@ -163,7 +167,8 @@ pub fn theme_name(seed: u64) -> &'static str {
         0 => "cancel",
         1 => "driver-panic",
         2 => "steal-storm",
-        _ => "live-registration",
+        3 => "live-registration",
+        _ => "cache-pressure",
     }
 }
 
@@ -173,20 +178,31 @@ impl Schedule {
         let mut rng = Rng::new(seed ^ 0xC4A0_5EED);
         let theme = (seed % THEMES as u64) as usize;
         // The steal-storm theme needs a sharded pool to have anything to
-        // steal between.
-        let devices = if theme == 2 { 2 } else { 1 + rng.below(2) };
+        // steal between; cache pressure wants one device so the scan and
+        // the hot set fight over the same tiny table.
+        let devices = match theme {
+            2 => 2,
+            4 => 1,
+            _ => 1 + rng.below(2),
+        };
         let pes = 1 + rng.below(3);
         let njobs = 2 + rng.below(2);
+        // Cache-pressure theme: a chare table far smaller than the scan
+        // job's footprint, so residency decisions actually evict.
+        let table_slots = (theme == 4).then(|| 6 + rng.below(6));
 
         // Family mix: either one family shared by every job (cross-job
-        // combining under fault) or one private family per job.
-        let shared = rng.below(2) == 0;
+        // combining under fault) or one private family per job. Cache
+        // pressure forces a single shared reuse family: both tenants must
+        // contend for the SAME table for the namespacing claim to mean
+        // anything.
+        let shared = theme == 4 || rng.below(2) == 0;
         let nfam = if shared { 1 } else { njobs };
         let families: Vec<FamilySpec> = (0..nfam)
             .map(|f| FamilySpec {
                 name: format!("chaos_{seed}_{f}"),
                 rows: 2 + rng.below(7),
-                reuse: rng.below(2) == 0,
+                reuse: theme == 4 || rng.below(2) == 0,
                 static_period: if rng.below(3) == 0 {
                     Some(2 + rng.below(6))
                 } else {
@@ -208,6 +224,17 @@ impl Schedule {
                 fault: Fault::None,
             })
             .collect();
+
+        // Cache-pressure theme: job 0 keeps a hot set that fits the tiny
+        // table; every other tenant becomes an adversarial streaming scan
+        // (each buffer referenced once per round, footprint >> table) that
+        // under blind LRU would flush the hot set on every pass.
+        if theme == 4 {
+            jobs[0].nbuf = 3;
+            for j in 1..njobs {
+                jobs[j].nbuf = jobs[j].count;
+            }
+        }
 
         // Job 0 always stays healthy: a co-tenant whose exact physics
         // must survive whatever happens to its neighbours.
@@ -267,19 +294,22 @@ impl Schedule {
             ));
         }
 
-        Schedule { seed, devices, pes, families, jobs, injections }
+        Schedule { seed, devices, pes, families, jobs, table_slots, injections }
     }
 
     /// The schedule's own trace header lines (pure; part of the replay-
     /// identical event trace).
     pub fn describe(&self) -> Vec<String> {
         let mut out = vec![format!(
-            "schedule seed={} theme={} devices={} pes={} jobs={}",
+            "schedule seed={} theme={} devices={} pes={} jobs={} \
+             table_slots={}",
             self.seed,
             theme_name(self.seed),
             self.devices,
             self.pes,
-            self.jobs.len()
+            self.jobs.len(),
+            self.table_slots
+                .map_or("default".into(), |n| n.to_string())
         )];
         for (f, fam) in self.families.iter().enumerate() {
             out.push(format!(
@@ -320,10 +350,37 @@ mod tests {
     #[test]
     fn contiguous_corpus_covers_every_theme_twice() {
         let mut seen = [0usize; THEMES];
-        for seed in 0..8u64 {
+        for seed in 0..(2 * THEMES as u64) {
             seen[(seed % THEMES as u64) as usize] += 1;
         }
-        assert_eq!(seen, [2, 2, 2, 2]);
+        assert_eq!(seen, [2; THEMES]);
+    }
+
+    #[test]
+    fn cache_pressure_schedules_starve_the_table() {
+        let mut checked = 0;
+        for seed in 0..30u64 {
+            let s = Schedule::from_seed(seed);
+            if seed % THEMES as u64 != 4 {
+                assert_eq!(s.table_slots, None, "seed {seed}");
+                continue;
+            }
+            checked += 1;
+            let slots = s.table_slots.expect("cache pressure shrinks the table");
+            assert_eq!(s.devices, 1, "seed {seed}: one device, one table");
+            assert_eq!(s.families.len(), 1, "seed {seed}: shared family");
+            assert!(s.families[0].reuse, "seed {seed}: scan needs residency");
+            // Hot set fits; every scanning co-tenant overflows the table
+            // by itself and stays fault-free (the theme is pressure, not
+            // faults).
+            assert!(s.jobs[0].nbuf < slots, "seed {seed}");
+            for j in &s.jobs[1..] {
+                assert!(j.nbuf > slots, "seed {seed}: scan fits the table");
+                assert_eq!(j.nbuf, j.count, "seed {seed}: one ref per pass");
+                assert_eq!(j.fault, Fault::None, "seed {seed}");
+            }
+        }
+        assert!(checked >= 6, "corpus sweep missed the theme: {checked}");
     }
 
     #[test]

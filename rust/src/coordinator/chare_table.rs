@@ -15,10 +15,24 @@
 //! Slot size is per table: each registered kernel family with a reuse arg
 //! gets tables shaped to that arg's `rows * width` tile, so the table
 //! serves any registered family, not just bucket buffers.
+//!
+//! Under `ResidencyPolicy::ReuseGraph` (ISSUE 7) the table also keeps a
+//! bounded host-side *victim cache* of recently evicted buffers and can
+//! [`ChareTable::prefetch`] them back into free slots ahead of the flush
+//! that will demand them — while a combined batch executes on the device,
+//! so the restage overlaps compute. Prefetch never evicts: only genuinely
+//! free slots are used, so a prefetched buffer can never displace one a
+//! scorer rates hotter (anything resident outranks "not resident").
+
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::memory::{BufferId, DeviceMemory};
+use crate::runtime::memory::{BufferId, DeviceMemory, ResidencyPolicy};
+use crate::runtime::staging::write_slot;
+
+/// Evicted-buffer copies retained per table for prefetch restaging.
+const VICTIM_CACHE_SLOTS: usize = 64;
 
 /// Chare-buffer residency manager over the simulated device pool.
 #[derive(Debug)]
@@ -35,6 +49,12 @@ pub struct ChareTable {
     transferred: u64,
     /// Accounted PCIe bytes saved by reuse (hits).
     saved: u64,
+    /// Of `transferred`, the bytes moved by prefetch staging.
+    prefetch_bytes: u64,
+    /// Host-side copies of recently evicted buffers (ReuseGraph only):
+    /// the data source for prefetch restaging. Bounded FIFO.
+    victims: HashMap<BufferId, Vec<f32>>,
+    victim_order: VecDeque<BufferId>,
 }
 
 /// Result of staging one buffer.
@@ -48,14 +68,27 @@ pub struct Staged {
 
 impl ChareTable {
     /// `slots`: device pool capacity in buffer slots; `slot_floats`: the
-    /// float count of one buffer (one reuse-arg tile).
+    /// float count of one buffer (one reuse-arg tile). Seed-identical
+    /// LRU eviction; see [`ChareTable::with_policy`] for lookahead.
     pub fn new(slots: usize, slot_floats: usize) -> ChareTable {
+        ChareTable::with_policy(slots, slot_floats, ResidencyPolicy::Lru)
+    }
+
+    /// A table with an explicit residency policy (`Config::residency`).
+    pub fn with_policy(
+        slots: usize,
+        slot_floats: usize,
+        policy: ResidencyPolicy,
+    ) -> ChareTable {
         ChareTable {
-            mem: DeviceMemory::new(slots),
+            mem: DeviceMemory::with_policy(slots, policy),
             slot_floats,
             pool: std::sync::Arc::new(vec![0.0; slots * slot_floats]),
             transferred: 0,
             saved: 0,
+            prefetch_bytes: 0,
+            victims: HashMap::new(),
+            victim_order: VecDeque::new(),
         }
     }
 
@@ -81,11 +114,28 @@ impl ChareTable {
     /// slot until `release` -- pending combined launches must not lose
     /// their slots to eviction.
     pub fn stage_pinned(&mut self, id: BufferId, data: &[f32]) -> Result<Staged> {
+        self.stage_pinned_predicted(id, data, u64::MAX)
+    }
+
+    /// [`ChareTable::stage_pinned`] with the reuse scorer's prediction of
+    /// this buffer's next reference attached (ignored under `Lru`). Under
+    /// `ReuseGraph` the eviction victim's data is retained in the
+    /// host-side victim cache so a later [`ChareTable::prefetch`] can
+    /// restage it without the original payload.
+    pub fn stage_pinned_predicted(
+        &mut self,
+        id: BufferId,
+        data: &[f32],
+        predicted_next: u64,
+    ) -> Result<Staged> {
         let slot_floats = self.slot_floats;
         if data.len() != slot_floats {
             bail!("buffer {id}: expected {slot_floats} floats, got {}", data.len());
         }
-        let Some(res) = self.mem.acquire(id) else {
+        let reuse_graph = self.mem.policy() == ResidencyPolicy::ReuseGraph;
+        let Some((res, evicted)) =
+            self.mem.acquire_predicted(id, predicted_next)
+        else {
             bail!("device pool exhausted: all {} slots pinned", self.mem.capacity());
         };
         let slot = res.slot();
@@ -93,9 +143,18 @@ impl ChareTable {
             self.saved += (data.len() * 4) as u64;
             0
         } else {
-            let off = slot * slot_floats;
+            if let Some(old) = evicted.filter(|_| reuse_graph) {
+                // The victim's data still sits in the mirror slot we are
+                // about to overwrite: copy it out for later prefetch.
+                let off = slot * slot_floats;
+                self.cache_victim(
+                    old,
+                    self.pool[off..off + slot_floats].to_vec(),
+                );
+            }
             let pool = std::sync::Arc::make_mut(&mut self.pool);
-            pool[off..off + slot_floats].copy_from_slice(data);
+            write_slot(pool, slot, slot_floats, data);
+            self.victims.remove(&id);
             let b = (data.len() * 4) as u64;
             self.transferred += b;
             b
@@ -104,25 +163,79 @@ impl ChareTable {
         Ok(Staged { slot: slot as u32, bytes })
     }
 
+    /// Restage a previously evicted buffer into a *free* slot ahead of
+    /// demand, from the victim cache. Returns the bytes moved, or `None`
+    /// when prefetch cannot help: not a `ReuseGraph` table, `id` already
+    /// resident, no cached copy, or no free slot (prefetch never
+    /// evicts). The bytes are real transfers — the caller accounts them
+    /// exactly like demand staging (pool + owning job).
+    pub fn prefetch(
+        &mut self,
+        id: BufferId,
+        predicted_next: u64,
+    ) -> Option<u64> {
+        if self.mem.policy() != ResidencyPolicy::ReuseGraph
+            || !self.victims.contains_key(&id)
+        {
+            return None;
+        }
+        let slot = self.mem.prefetch(id, predicted_next)?;
+        let data = self.victims.remove(&id).expect("checked above");
+        let slot_floats = self.slot_floats;
+        let pool = std::sync::Arc::make_mut(&mut self.pool);
+        write_slot(pool, slot, slot_floats, &data);
+        let b = (slot_floats * 4) as u64;
+        self.transferred += b;
+        self.prefetch_bytes += b;
+        Some(b)
+    }
+
+    /// Could [`ChareTable::prefetch`] restage `id` right now?
+    pub fn prefetchable(&self, id: BufferId) -> bool {
+        self.mem.policy() == ResidencyPolicy::ReuseGraph
+            && self.mem.peek(id).is_none()
+            && self.victims.contains_key(&id)
+    }
+
+    fn cache_victim(&mut self, id: BufferId, data: Vec<f32>) {
+        if self.victims.insert(id, data).is_none() {
+            self.victim_order.push_back(id);
+        }
+        while self.victim_order.len() > VICTIM_CACHE_SLOTS {
+            let old = self.victim_order.pop_front().expect("non-empty");
+            self.victims.remove(&old);
+        }
+    }
+
     /// Release the pin taken by `stage_pinned`.
     pub fn release(&mut self, id: BufferId) {
         self.mem.unpin(id);
     }
 
-    /// Invalidate one buffer (its chare rewrote the data).
+    /// Invalidate one buffer (its chare rewrote the data). Also drops any
+    /// victim-cache copy: restaging pre-rewrite data would corrupt the
+    /// buffer on its next (pre-fetched) hit.
     pub fn invalidate(&mut self, id: BufferId) {
         self.mem.invalidate(id);
+        self.victims.remove(&id);
     }
 
     /// Invalidate everything (iteration boundary with full rewrites).
     pub fn invalidate_all(&mut self) {
         self.mem.invalidate_all();
+        self.victims.clear();
+        self.victim_order.clear();
     }
 
     /// Invalidate the resident buffers matching `pred` (one job's slice
-    /// of a multi-tenant pool; co-tenant residency is untouched).
+    /// of a multi-tenant pool; co-tenant residency is untouched). The
+    /// victim cache drops the job's entries too — a sealed or advancing
+    /// job must not be restageable from stale host copies.
     pub fn invalidate_where(&mut self, pred: impl Fn(BufferId) -> bool) {
-        self.mem.invalidate_where(pred);
+        self.mem.invalidate_where(&pred);
+        self.victims.retain(|&id, _| !pred(id));
+        let victims = &self.victims;
+        self.victim_order.retain(|id| victims.contains_key(id));
     }
 
     /// Ids of every resident buffer (chaos-harness residency audit).
@@ -145,6 +258,21 @@ impl ChareTable {
 
     pub fn saved_bytes(&self) -> u64 {
         self.saved
+    }
+
+    /// Prefetched buffers later demanded (counted once at first demand).
+    pub fn prefetch_hits(&self) -> u64 {
+        self.mem.prefetch_hits()
+    }
+
+    /// Prefetched buffers evicted or invalidated before any demand.
+    pub fn prefetch_wasted(&self) -> u64 {
+        self.mem.prefetch_wasted()
+    }
+
+    /// Of `transferred_bytes`, the bytes moved by prefetch staging.
+    pub fn prefetch_transferred_bytes(&self) -> u64 {
+        self.prefetch_bytes
     }
 
     /// Hit rate over all stagings so far (0 if none).
@@ -233,6 +361,75 @@ mod tests {
         let s = t.stage_pinned(5, &buf(2.0)).unwrap();
         assert!(s.bytes > 0, "invalidated buffer must re-transfer");
         t.release(5);
+    }
+
+    #[test]
+    fn victim_cache_feeds_prefetch_with_exact_data() {
+        let mut t = ChareTable::with_policy(2, 4, ResidencyPolicy::ReuseGraph);
+        t.stage_pinned_predicted(1, &[1.5; 4], 10).unwrap();
+        t.release(1);
+        t.stage_pinned_predicted(2, &[2.5; 4], 5).unwrap();
+        t.release(2);
+        // 1 has the farther next use: staging 3 evicts it into the cache
+        t.stage_pinned_predicted(3, &[3.5; 4], 6).unwrap();
+        t.release(3);
+        assert!(t.prefetchable(1));
+        // free a slot, then prefetch 1 back without its payload
+        t.invalidate(2);
+        let b = t.prefetch(1, 12).expect("cached victim, free slot");
+        assert_eq!(b, 16);
+        assert_eq!(t.prefetch_transferred_bytes(), 16);
+        // the demanded hit pays no bytes and counts the prefetch hit
+        let s = t.stage_pinned_predicted(1, &[1.5; 4], 20).unwrap();
+        assert_eq!(s.bytes, 0);
+        assert_eq!(t.prefetch_hits(), 1);
+        let off = s.slot as usize * 4;
+        assert!(t.pool()[off..off + 4].iter().all(|&x| x == 1.5));
+        t.release(1);
+    }
+
+    #[test]
+    fn prefetch_never_evicts() {
+        let mut t = ChareTable::with_policy(2, 4, ResidencyPolicy::ReuseGraph);
+        t.stage_pinned_predicted(1, &[1.0; 4], 100).unwrap();
+        t.release(1);
+        t.stage_pinned_predicted(2, &[2.0; 4], 5).unwrap();
+        t.release(2);
+        t.stage_pinned_predicted(3, &[3.0; 4], 6).unwrap(); // evicts 1
+        t.release(3);
+        // pool full: the cached victim must NOT displace anyone
+        assert!(t.prefetch(1, 1).is_none());
+        assert!(t.prefetchable(1), "cache copy survives a refused prefetch");
+    }
+
+    #[test]
+    fn invalidation_purges_victim_cache() {
+        let mut t = ChareTable::with_policy(1, 4, ResidencyPolicy::ReuseGraph);
+        t.stage_pinned_predicted(1, &[1.0; 4], 10).unwrap();
+        t.release(1);
+        t.stage_pinned_predicted(2, &[2.0; 4], 5).unwrap(); // evicts 1
+        t.release(2);
+        assert!(t.prefetchable(1));
+        // 1's chare rewrote its data: the cached copy is stale
+        t.invalidate_where(|id| id == 1);
+        t.invalidate(2);
+        assert!(!t.prefetchable(1), "stale victim copy must not restage");
+        assert!(t.prefetch(1, 3).is_none());
+    }
+
+    #[test]
+    fn lru_table_never_prefetches() {
+        let mut t = table(2);
+        t.stage_pinned(1, &buf(1.0)).unwrap();
+        t.release(1);
+        t.stage_pinned(2, &buf(2.0)).unwrap();
+        t.release(2);
+        t.stage_pinned(3, &buf(3.0)).unwrap(); // evicts under LRU
+        t.release(3);
+        assert!(!t.prefetchable(1), "Lru keeps no victim cache");
+        t.invalidate(2);
+        assert!(t.prefetch(1, 1).is_none());
+        assert_eq!(t.prefetch_transferred_bytes(), 0);
     }
 
     #[test]

@@ -154,6 +154,22 @@ impl Combiner {
         self.probes
     }
 
+    /// Device-resident requests in the batch a `steal_flush` would take
+    /// right now: queued requests within the `max_size` cap whose buffer
+    /// occupies a device slot. Stealing them forfeits that residency —
+    /// each must be restaged on the thief — so the reuse-aware steal
+    /// policy subtracts this count from a victim's depth
+    /// (`DeviceRouter::steal_candidate_with_cost`). An estimate under
+    /// the weighted-fair multi-job take (which may select a different
+    /// subset), exact for the common FIFO prefix.
+    pub fn resident_slots(&self) -> usize {
+        self.queue
+            .iter()
+            .take(self.max_size)
+            .filter(|p| p.slot.is_some())
+            .count()
+    }
+
     /// Flush history: (reason, batch size) per flush.
     pub fn flush_log(&self) -> &[(FlushReason, usize)] {
         &self.flushes
@@ -713,6 +729,21 @@ mod tests {
         let ids: Vec<u64> = b.items.iter().map(|p| p.wr.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
         assert_eq!(c.cross_job_takes(), 0);
+    }
+
+    #[test]
+    fn resident_slots_counts_staged_requests_within_cap() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 3, false);
+        c.insert(pending(0, 0.0, Some(1)), 0.0);
+        c.insert(pending(1, 0.0, None), 0.0);
+        c.insert(pending(2, 0.0, Some(2)), 0.0);
+        // beyond the max_size cap: not part of the stealable batch
+        c.insert(pending(3, 0.0, Some(3)), 0.0);
+        assert_eq!(c.resident_slots(), 2);
+        assert_eq!(
+            Combiner::new(CombinePolicy::Adaptive, 4, false).resident_slots(),
+            0
+        );
     }
 
     #[test]

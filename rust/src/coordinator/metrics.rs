@@ -54,6 +54,17 @@ pub struct KindStats {
     /// Data items of this family on each side of the hybrid split.
     pub gpu_items: u64,
     pub cpu_items: u64,
+    /// Residency hits / misses in this family's chare tables (summed
+    /// over devices). These partition the pool's *table* counters minus
+    /// the node entry cache, which belongs to no family.
+    pub table_hits: u64,
+    pub table_misses: u64,
+    /// Prefetch staging outcomes for this family's tables (ReuseGraph
+    /// residency): prefetched buffers later demanded vs. evicted or
+    /// invalidated unused. Sum over kinds equals the pool totals —
+    /// invariant-checked in `chaos::invariants`.
+    pub prefetch_hits: u64,
+    pub prefetch_wasted: u64,
 }
 
 impl KindStats {
@@ -64,6 +75,16 @@ impl KindStats {
             0.0
         } else {
             self.cpu_items as f64 / t as f64
+        }
+    }
+
+    /// Residency hit rate of this family's chare tables (0 if unused).
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.table_hits + self.table_misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.table_hits as f64 / t as f64
         }
     }
 }
@@ -195,6 +216,14 @@ pub struct PoolReport {
     pub table_misses: u64,
     /// Bytes saved by reuse.
     pub saved_bytes: u64,
+    /// Prefetch staging totals (ReuseGraph residency): buffers staged
+    /// ahead of demand and later hit, staged and never demanded, and the
+    /// PCIe bytes the stagings cost (a subset of `transfer_bytes`). Each
+    /// equals the sum of its `kind_stats` counterpart — the node entry
+    /// cache never prefetches.
+    pub prefetch_hits: u64,
+    pub prefetch_wasted: u64,
+    pub prefetch_bytes: u64,
     /// Flush counts by reason.
     pub flush_full: u64,
     pub flush_idle: u64,
@@ -355,6 +384,15 @@ impl std::fmt::Display for PoolReport {
             self.table_misses,
             self.hit_rate() * 100.0
         )?;
+        if self.prefetch_hits + self.prefetch_wasted > 0 {
+            writeln!(
+                f,
+                "prefetch            {} hits / {} wasted ({:.2} MiB staged ahead)",
+                self.prefetch_hits,
+                self.prefetch_wasted,
+                self.prefetch_bytes as f64 / (1 << 20) as f64
+            )?;
+        }
         writeln!(
             f,
             "hybrid              cpu {:.4}s task wall; items cpu {} / gpu {}",
@@ -364,14 +402,17 @@ impl std::fmt::Display for PoolReport {
             for k in &self.kind_stats {
                 writeln!(
                     f,
-                    "  kind {:<12} {} launches; reqs gpu {} / cpu {}; items gpu {} / cpu {} ({:.0}% cpu)",
+                    "  kind {:<12} {} launches; reqs gpu {} / cpu {}; items gpu {} / cpu {} ({:.0}% cpu); table {:.0}% hit; prefetch {} hit / {} wasted",
                     k.name,
                     k.launches,
                     k.gpu_requests,
                     k.cpu_requests,
                     k.gpu_items,
                     k.cpu_items,
-                    k.cpu_item_share() * 100.0
+                    k.cpu_item_share() * 100.0,
+                    k.hit_rate() * 100.0,
+                    k.prefetch_hits,
+                    k.prefetch_wasted
                 )?;
             }
         }
@@ -498,6 +539,36 @@ mod tests {
         assert!(r.kind("nope").is_none());
         let s = format!("{r}");
         assert!(s.contains("spmv_row"));
+    }
+
+    #[test]
+    fn kind_hit_rate_handles_zero_and_counts() {
+        let k = KindStats::default();
+        assert_eq!(k.hit_rate(), 0.0);
+        let k = KindStats {
+            table_hits: 9,
+            table_misses: 3,
+            ..KindStats::default()
+        };
+        assert!((k.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefetch_line_renders_only_when_counted() {
+        let quiet = Report::default();
+        assert!(!format!("{quiet}").contains("prefetch "));
+        let mut r = Report {
+            prefetch_hits: 5,
+            prefetch_wasted: 2,
+            prefetch_bytes: 3 << 20,
+            ..Report::default()
+        };
+        r.kind_mut(0).name = "nbody_tile".to_string();
+        r.kind_mut(0).prefetch_hits = 5;
+        r.kind_mut(0).prefetch_wasted = 2;
+        let s = format!("{r}");
+        assert!(s.contains("prefetch            5 hits / 2 wasted"), "{s}");
+        assert!(s.contains("prefetch 5 hit / 2 wasted"), "{s}");
     }
 
     #[test]

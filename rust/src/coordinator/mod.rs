@@ -44,6 +44,7 @@ pub mod hybrid;
 pub mod job;
 pub mod metrics;
 pub mod registry;
+pub mod residency;
 pub mod scheduler;
 pub mod work_request;
 
@@ -73,6 +74,8 @@ pub use registry::{
     KernelDescriptor, KernelKindId, KernelRegistry, ShapeError,
     SharedRegistry,
 };
+pub use crate::runtime::memory::ResidencyPolicy;
+pub use residency::ReuseScorer;
 pub use scheduler::{DeviceRouter, JobState, JobStatus, RoutePolicy, Shared};
 pub use work_request::{Tile, WorkRequest, WrResult};
 
@@ -117,6 +120,18 @@ pub struct Config {
     pub steal_high: usize,
     /// Per-device, per-reuse-family pool capacity in buffer slots.
     pub table_slots: usize,
+    /// Eviction + prefetch policy of the per-family device pools
+    /// (ISSUE 7). [`ResidencyPolicy::Lru`] is the seed behavior:
+    /// least-recently-used eviction, no lookahead, no prefetch.
+    /// [`ResidencyPolicy::ReuseGraph`] builds a per-`(job, kind)` reuse
+    /// graph from the pending request stream and (a) evicts the buffer
+    /// with the *farthest predicted next use* (never-revisited streaming
+    /// scans first — which also keeps one tenant's scan from flushing a
+    /// co-tenant's hot set, since keys are job-namespaced), (b)
+    /// prefetch-stages soon-to-be-used evicted buffers into free slots
+    /// while a combined batch executes, and (c) makes steal decisions
+    /// residency-aware, shrinking `migrated_bytes`.
+    pub residency: ResidencyPolicy,
     /// Per-device interaction-entry cache capacity (tree moments /
     /// particle entries, 16 B each). Models ChaNGa's GPU-resident moments
     /// and particle arrays.
@@ -143,6 +158,7 @@ impl Default for Config {
             steal_low: 4,
             steal_high: 16,
             table_slots: 1024,
+            residency: ResidencyPolicy::ReuseGraph,
             node_slots: 1 << 17,
             artifacts: crate::runtime::default_artifacts_dir(),
             idle_drain: 2e-3,
@@ -190,6 +206,12 @@ pub(crate) fn job_key(job: JobId, k: u64) -> u64 {
 pub(crate) fn key_job(key: u64) -> u64 {
     key >> 48
 }
+
+/// Prefetch stagings attempted per submitted launch (ReuseGraph).
+const PREFETCH_MAX: usize = 8;
+/// Forecast window for prefetch candidacy, in request-stream positions:
+/// only buffers predicted to be demanded this soon are worth a slot.
+const PREFETCH_HORIZON: u64 = 256;
 
 /// One work request recorded inside an in-flight launch.
 struct LaunchItem {
@@ -239,6 +261,11 @@ struct DeviceState {
     /// Reuse-buffer tables, indexed by kind; `None` for families without
     /// a reuse arg.
     tables: Vec<Option<ChareTable>>,
+    /// Reuse-graph scorers, parallel to `tables` (one per reuse family;
+    /// `None` for families without a reuse arg). Populated only under
+    /// `ResidencyPolicy::ReuseGraph`; each observes its own device's
+    /// request stream for that kind.
+    scorers: Vec<Option<ReuseScorer>>,
     /// Residency of interaction entries (tree moments / cached particles),
     /// 16 bytes each, keyed per job. Accounting-level model of the
     /// GPU-resident arrays the interaction lists reference.
@@ -285,6 +312,7 @@ impl Coord {
         let devices = (0..ndev)
             .map(|_| DeviceState {
                 tables: Vec::new(),
+                scorers: Vec::new(),
                 node_table: crate::runtime::DeviceMemory::new(cfg.node_slots),
                 node_saved: 0,
                 combiners: Vec::new(),
@@ -327,6 +355,7 @@ impl Coord {
     /// of any submission of the new kinds (same queue).
     fn on_kinds_added(&mut self, added: Vec<KernelDescriptor>) {
         let table_slots = self.cfg.table_slots;
+        let residency = self.cfg.residency;
         let default_combine = self.cfg.combine;
         let sorted = self.cfg.data_policy == DataPolicy::ReuseSorted;
         let mut kernels = Vec::with_capacity(added.len());
@@ -334,11 +363,17 @@ impl Coord {
             let k = self.kinds.len();
             for st in &mut self.devices {
                 st.tables.push(desc.kernel.reuse_arg.map(|ra| {
-                    ChareTable::new(
+                    ChareTable::with_policy(
                         table_slots,
                         desc.kernel.args[ra].slot_len(),
+                        residency,
                     )
                 }));
+                st.scorers.push(
+                    (residency == ResidencyPolicy::ReuseGraph)
+                        .then(|| desc.kernel.reuse_arg.map(|_| ReuseScorer::new()))
+                        .flatten(),
+                );
                 st.combiners.push(Combiner::new(
                     desc.combine.unwrap_or(default_combine),
                     desc.kernel.max_combine(),
@@ -382,10 +417,23 @@ impl Coord {
         let mut staged_bytes = 0;
         if self.cfg.data_policy != DataPolicy::NoReuse {
             if let (Some(ra), Some(buf)) = (reuse_arg, wr.buffer) {
+                // Under ReuseGraph the scorer observes every reference
+                // and forecasts this buffer's next use; the forecast
+                // rides into the table as the slot's eviction priority.
+                let predicted = match self.devices[device].scorers[kind.0]
+                    .as_mut()
+                {
+                    Some(s) => s.note(buf),
+                    None => u64::MAX,
+                };
                 let table = self.devices[device].tables[kind.0]
                     .as_mut()
                     .expect("reuse family has a table");
-                match table.stage_pinned(buf, &wr.payload.bufs[ra]) {
+                match table.stage_pinned_predicted(
+                    buf,
+                    &wr.payload.bufs[ra],
+                    predicted,
+                ) {
                     Ok(staged) => {
                         slot = Some(staged.slot);
                         staged_bytes = staged.bytes;
@@ -477,7 +525,23 @@ impl Coord {
         // watermarks are satisfied or the loaded device has nothing
         // pending (its depth is all in-flight work).
         for _ in 0..self.devices.len() {
-            let Some((from, to)) = self.dev_router.steal_candidate(&shares)
+            // Under ReuseGraph, a victim's stealable batch is discounted
+            // by the residency it would forfeit (each resident request
+            // restages on the thief), so cold batches migrate first and
+            // `migrated_bytes` shrinks. Recomputed per iteration: each
+            // steal drains a queue and re-ranks the rest.
+            let restage: Vec<usize> =
+                if self.cfg.residency == ResidencyPolicy::ReuseGraph {
+                    self.devices
+                        .iter()
+                        .map(|st| Self::stealable_resident(st))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+            let Some((from, to)) = self
+                .dev_router
+                .steal_candidate_with_cost(&shares, &restage)
             else {
                 break;
             };
@@ -496,20 +560,30 @@ impl Coord {
     /// Drain one batch from the loaded device's longest pending queue.
     fn steal_batch(&mut self, from: usize) -> Option<(Batch, KernelKindId)> {
         let st = &mut self.devices[from];
-        if st.combiners.is_empty() {
-            return None;
-        }
-        // First-registered kind wins ties (stable victim selection).
+        let k = Self::steal_kind(st)?;
+        st.combiners[k].steal_flush().map(|b| (b, KernelKindId(k)))
+    }
+
+    /// The kind `steal_batch` would drain from this device (its longest
+    /// pending queue; first-registered kind wins ties — stable victim
+    /// selection). `None` when nothing is pending.
+    fn steal_kind(st: &DeviceState) -> Option<usize> {
         let mut k = 0usize;
         for i in 1..st.combiners.len() {
             if st.combiners[i].len() > st.combiners[k].len() {
                 k = i;
             }
         }
-        if st.combiners[k].is_empty() {
-            return None;
-        }
-        st.combiners[k].steal_flush().map(|b| (b, KernelKindId(k)))
+        (!st.combiners.is_empty() && !st.combiners[k].is_empty())
+            .then_some(k)
+    }
+
+    /// Device-resident requests in the batch a steal from this device
+    /// would take: the restage cost `steal_candidate_with_cost` subtracts
+    /// from the victim's depth.
+    fn stealable_resident(st: &DeviceState) -> usize {
+        Self::steal_kind(st)
+            .map_or(0, |k| st.combiners[k].resident_slots())
     }
 
     /// Move a stolen batch's residency from `from` to `to`: release the
@@ -541,10 +615,20 @@ impl Coord {
             let src_bytes = p.staged_bytes;
             p.slot = None;
             p.staged_bytes = 0;
+            // A migration is not a fresh reference: carry the
+            // destination scorer's existing forecast (UNSCORED until the
+            // chare's re-homed stream builds one there).
+            let predicted = self.devices[to].scorers[kind.0]
+                .as_ref()
+                .map_or(u64::MAX, |s| s.predicted_next(buf));
             let dst = self.devices[to].tables[kind.0]
                 .as_mut()
                 .expect("reuse family has a table");
-            match dst.stage_pinned(buf, &p.wr.payload.bufs[ra]) {
+            match dst.stage_pinned_predicted(
+                buf,
+                &p.wr.payload.bufs[ra],
+                predicted,
+            ) {
                 Ok(staged) => {
                     p.slot = Some(staged.slot);
                     p.staged_bytes = src_bytes + staged.bytes;
@@ -798,6 +882,51 @@ impl Coord {
         self.gpu
             .submit(device, LaunchSpec { id, payload, transfer_bytes, pattern })
             .expect("gpu service is down");
+        self.prefetch_ahead(device, kind);
+    }
+
+    /// Ahead-of-flush prefetch staging (ISSUE 7): while this device is
+    /// executing at least one combined batch, restage the
+    /// highest-scoring soon-to-be-demanded evicted buffers of this kind
+    /// into *free* slots, so the transfer overlaps compute instead of
+    /// stalling the next flush. Free-slots-only (never evicts a resident
+    /// buffer, scored or not), bounded per launch, and charged exactly
+    /// like demand staging: pool `transfer_bytes` + `prefetch_bytes`,
+    /// plus the owning job's byte counter (keys are job-namespaced).
+    fn prefetch_ahead(&mut self, device: usize, kind: KernelKindId) {
+        if self.cfg.residency != ResidencyPolicy::ReuseGraph
+            || self.gpu.in_flight(device) == 0
+        {
+            return;
+        }
+        let Some(scorer) = self.devices[device].scorers[kind.0].as_ref()
+        else {
+            return;
+        };
+        let candidates =
+            scorer.hot_candidates(PREFETCH_MAX, PREFETCH_HORIZON);
+        if candidates.is_empty() {
+            return;
+        }
+        let Some(table) = self.devices[device].tables[kind.0].as_mut()
+        else {
+            return;
+        };
+        for (key, predicted) in candidates {
+            if !table.prefetchable(key) {
+                continue;
+            }
+            let Some(bytes) = table.prefetch(key, predicted) else {
+                break; // no free slot: later candidates cannot fit either
+            };
+            self.report.transfer_bytes += bytes;
+            self.report.prefetch_bytes += bytes;
+            if let Some(js) = self.router.shared.job(JobId(key_job(key))) {
+                js.metrics
+                    .transfer_bytes
+                    .fetch_add(bytes, Ordering::SeqCst);
+            }
+        }
     }
 
     /// Scatter a completed launch's outputs back to the owning chares,
@@ -811,6 +940,7 @@ impl Coord {
         let device = info.device;
         let kind = info.kind;
         debug_assert_eq!(c.device, device, "completion from wrong device");
+        self.gpu.note_completion(device);
 
         self.report.launches += 1;
         self.report.gpu_requests += info.items.len() as u64;
@@ -1008,6 +1138,11 @@ impl Coord {
             for t in st.tables.iter_mut().flatten() {
                 t.invalidate_where(|k| key_job(k) == job.0);
             }
+            for s in st.scorers.iter_mut().flatten() {
+                // Forecasts must not outlive the residency they score:
+                // the job's buffers were just rewritten or dropped.
+                s.forget_job(job.0);
+            }
             st.node_table.invalidate_where(|k| key_job(k) == job.0);
         }
     }
@@ -1080,15 +1215,36 @@ impl Coord {
         report.table_hits = 0;
         report.table_misses = 0;
         report.saved_bytes = 0;
+        report.prefetch_hits = 0;
+        report.prefetch_wasted = 0;
+        // Per-kind residency counters re-fold from the live tables each
+        // time (Snapshot replies and the sealed report share this path).
+        for ks in &mut report.kind_stats {
+            ks.table_hits = 0;
+            ks.table_misses = 0;
+            ks.prefetch_hits = 0;
+            ks.prefetch_wasted = 0;
+        }
         for d in 0..self.devices.len() {
             let st = &self.devices[d];
             let mut hits = st.node_table.hits();
             let mut misses = st.node_table.misses();
             let mut saved = st.node_saved;
-            for t in st.tables.iter().flatten() {
+            for (k, t) in st.tables.iter().enumerate() {
+                let Some(t) = t else { continue };
                 hits += t.hits();
                 misses += t.misses();
                 saved += t.saved_bytes();
+                // The node entry cache never prefetches, so the pool
+                // prefetch totals are exactly the kind sums (the
+                // consistency the chaos invariants check).
+                report.prefetch_hits += t.prefetch_hits();
+                report.prefetch_wasted += t.prefetch_wasted();
+                let ks = report.kind_mut(k);
+                ks.table_hits += t.hits();
+                ks.table_misses += t.misses();
+                ks.prefetch_hits += t.prefetch_hits();
+                ks.prefetch_wasted += t.prefetch_wasted();
             }
             report.table_hits += hits;
             report.table_misses += misses;
@@ -1128,6 +1284,9 @@ impl Coord {
                     for st in &mut self.devices {
                         for t in st.tables.iter_mut().flatten() {
                             t.invalidate_all();
+                        }
+                        for s in st.scorers.iter_mut().flatten() {
+                            *s = ReuseScorer::new();
                         }
                         st.node_table.invalidate_all();
                     }

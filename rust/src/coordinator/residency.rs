@@ -1,0 +1,238 @@
+//! Reuse-graph scorer: lookahead residency predictions from the request
+//! stream (ISSUE 7, paper section 3.2 + the graph-based GPU caching model
+//! of PAPERS.md, arXiv 1605.02043).
+//!
+//! The coordinator sees every work request before the device does, so it
+//! can observe each residency key's *reference gaps* — how many stream
+//! positions pass between successive uses of the same buffer. The scorer
+//! keeps, per key, an EWMA of those gaps and forecasts the next use as
+//! `last_seq + gap_ewma`. That forecast is the reuse graph's edge weight
+//! collapsed onto the node: nodes are residency keys, a forward edge's
+//! weight is the observed re-reference distance, and the per-key EWMA is
+//! the running aggregate the eviction policy actually needs (the full
+//! adjacency is never materialized — the stream is consumed online).
+//!
+//! Two properties carry the multi-tenant contract:
+//!
+//! * **Keys are job-namespaced** (`coordinator::job_key` packs the job id
+//!   into the high 16 bits), so one scorer instance per `(device, kind)`
+//!   scores co-tenant streams side by side without aliasing.
+//! * **Single-reference keys are unscored** ([`UNSCORED`]): a streaming
+//!   scan that never revisits a buffer gets no forecast, sorts as
+//!   farthest-next-use, and is evicted first — which is exactly how a
+//!   co-tenant's scan is kept from flushing another job's hot set.
+//!
+//! Determinism: the key map is a `BTreeMap`, so candidate enumeration
+//! order is a pure function of the inputs (the chaos harness replays
+//! schedules bit-identically and would catch hash-order leaks).
+
+use std::collections::BTreeMap;
+
+use crate::runtime::memory::BufferId;
+
+use super::key_job;
+
+/// Prediction for a key with no known forward reference: sorts farthest,
+/// evicts first.
+pub const UNSCORED: u64 = u64::MAX;
+
+/// EWMA weight of the newest observed gap.
+const GAP_ALPHA: f64 = 0.5;
+
+/// Tracked keys per scorer; beyond this the stalest key is dropped.
+const MAX_KEYS: usize = 8192;
+
+#[derive(Debug, Clone, Copy)]
+struct KeyStat {
+    /// Stream position of the most recent reference.
+    last_seq: u64,
+    /// EWMA of reference gaps (valid once `refs >= 2`).
+    gap_ewma: f64,
+    /// References seen.
+    refs: u32,
+}
+
+/// Online reuse scorer for one `(device, kernel kind)` request stream.
+#[derive(Debug, Default)]
+pub struct ReuseScorer {
+    seq: u64,
+    keys: BTreeMap<BufferId, KeyStat>,
+}
+
+impl ReuseScorer {
+    pub fn new() -> ReuseScorer {
+        ReuseScorer::default()
+    }
+
+    /// Stream positions consumed so far.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Record one reference of `key` and return the forecast of its
+    /// *next* reference (`UNSCORED` until the key has a gap history).
+    pub fn note(&mut self, key: BufferId) -> u64 {
+        self.seq += 1;
+        let seq = self.seq;
+        let stat = self.keys.entry(key).or_insert(KeyStat {
+            last_seq: seq,
+            gap_ewma: 0.0,
+            refs: 0,
+        });
+        if stat.refs > 0 {
+            let gap = (seq - stat.last_seq) as f64;
+            stat.gap_ewma = if stat.refs == 1 {
+                gap
+            } else {
+                GAP_ALPHA * gap + (1.0 - GAP_ALPHA) * stat.gap_ewma
+            };
+        }
+        stat.last_seq = seq;
+        stat.refs += 1;
+        let prediction = Self::forecast(stat);
+        if self.keys.len() > MAX_KEYS {
+            // Drop the stalest key (farthest-back last reference); the
+            // bound keeps a pathological key churn from growing the map
+            // without limit.
+            if let Some(stale) = self
+                .keys
+                .iter()
+                .min_by_key(|(_, s)| s.last_seq)
+                .map(|(&k, _)| k)
+            {
+                self.keys.remove(&stale);
+            }
+        }
+        prediction
+    }
+
+    /// Forecast of `key`'s next reference without recording one.
+    pub fn predicted_next(&self, key: BufferId) -> u64 {
+        self.keys.get(&key).map(Self::forecast).unwrap_or(UNSCORED)
+    }
+
+    fn forecast(stat: &KeyStat) -> u64 {
+        if stat.refs >= 2 {
+            stat.last_seq.saturating_add(stat.gap_ewma.round() as u64)
+        } else {
+            UNSCORED
+        }
+    }
+
+    /// The scored keys predicted to be referenced soonest: up to `max`
+    /// `(key, predicted_next)` pairs with forecasts inside `horizon`
+    /// stream positions of now, soonest first (key order breaks ties —
+    /// deterministic). This is the prefetch shortlist.
+    pub fn hot_candidates(
+        &self,
+        max: usize,
+        horizon: u64,
+    ) -> Vec<(BufferId, u64)> {
+        let limit = self.seq.saturating_add(horizon);
+        let mut hot: Vec<(BufferId, u64)> = self
+            .keys
+            .iter()
+            .filter_map(|(&k, s)| {
+                let p = Self::forecast(s);
+                (p != UNSCORED && p <= limit).then_some((k, p))
+            })
+            .collect();
+        hot.sort_by_key(|&(k, p)| (p, k));
+        hot.truncate(max);
+        hot
+    }
+
+    /// Drop every key belonging to `job` (job teardown / invalidation):
+    /// its forecasts must not outlive its residency.
+    pub fn forget_job(&mut self, job: u64) {
+        self.keys.retain(|&k, _| key_job(k) != job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job_key;
+    use crate::coordinator::JobId;
+
+    #[test]
+    fn periodic_stream_predicts_its_period() {
+        let mut s = ReuseScorer::new();
+        // key 7 every 4 positions: 1, 5, 9, ...
+        let mut last = 0;
+        for i in 1..=12u64 {
+            let key = if i % 4 == 1 { 7 } else { 100 + i };
+            last = s.note(key);
+            if key != 7 {
+                assert_eq!(last, UNSCORED, "single-ref keys stay unscored");
+            }
+        }
+        // after refs at 1, 5, 9 the gap EWMA is exactly 4
+        assert_eq!(s.predicted_next(7), 9 + 4);
+        let _ = last;
+    }
+
+    #[test]
+    fn first_reference_is_unscored() {
+        let mut s = ReuseScorer::new();
+        assert_eq!(s.note(1), UNSCORED);
+        assert_eq!(s.predicted_next(1), UNSCORED);
+        assert_ne!(s.note(1), UNSCORED, "second ref has a gap history");
+    }
+
+    #[test]
+    fn hot_candidates_sorted_soonest_first_within_horizon() {
+        let mut s = ReuseScorer::new();
+        // key 1 gap 2, key 2 gap 6 (interleaved filler keeps gaps honest)
+        for _ in 0..3 {
+            s.note(1);
+            s.note(2);
+        }
+        // seq = 6; 1 last at 5 gap 2 -> 7; 2 last at 6 gap 2 -> 8
+        let hot = s.hot_candidates(8, 100);
+        assert_eq!(hot.len(), 2);
+        assert!(hot[0].1 <= hot[1].1, "soonest first");
+        let tight = s.hot_candidates(8, 0);
+        assert!(tight.len() <= hot.len());
+        assert_eq!(s.hot_candidates(1, 100).len(), 1, "max caps the list");
+    }
+
+    #[test]
+    fn forget_job_purges_only_that_tenant() {
+        let mut s = ReuseScorer::new();
+        let (a, b) = (JobId(3), JobId(4));
+        for _ in 0..2 {
+            s.note(job_key(a, 1));
+            s.note(job_key(b, 1));
+        }
+        assert_ne!(s.predicted_next(job_key(a, 1)), UNSCORED);
+        s.forget_job(a.0);
+        assert_eq!(s.predicted_next(job_key(a, 1)), UNSCORED);
+        assert_ne!(
+            s.predicted_next(job_key(b, 1)),
+            UNSCORED,
+            "co-tenant forecasts survive"
+        );
+    }
+
+    #[test]
+    fn key_table_is_bounded() {
+        let mut s = ReuseScorer::new();
+        for k in 0..(MAX_KEYS as u64 + 500) {
+            s.note(k);
+        }
+        assert!(s.keys.len() <= MAX_KEYS);
+        // the stalest (smallest last_seq) keys are the ones dropped
+        assert_eq!(s.predicted_next(0), UNSCORED);
+        assert!(s.keys.contains_key(&(MAX_KEYS as u64 + 499)));
+    }
+
+    #[test]
+    fn scan_keys_never_enter_the_hot_list() {
+        let mut s = ReuseScorer::new();
+        for k in 0..100u64 {
+            s.note(k); // a pure scan: no key repeats
+        }
+        assert!(s.hot_candidates(100, u64::MAX - s.seq()).is_empty());
+    }
+}

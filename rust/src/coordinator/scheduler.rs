@@ -264,20 +264,47 @@ impl DeviceRouter {
     /// scheduler's measured per-device speed shares — a fast idle device
     /// pulls first; uniform when unmeasured), among those at or above
     /// the high watermark pick the most loaded, and return `(from, to)`.
+    /// Residency-blind: equivalent to `steal_candidate_with_cost` at
+    /// zero restage cost everywhere.
     pub fn steal_candidate(&self, shares: &[f64]) -> Option<(usize, usize)> {
+        self.steal_candidate_with_cost(shares, &[])
+    }
+
+    /// Reuse-aware steal decision: `restage[d]` is the number of
+    /// device-resident buffers the stealable batch on device `d` would
+    /// forfeit if migrated (`Combiner::resident_slots`, summed over the
+    /// device's combiners). The victim is the eligible device with the
+    /// greatest share-weighted depth *net of* that cost, so the
+    /// rebalancer prefers migrating cold batches and a hot, fully
+    /// resident backlog can lose the steal to a slightly shallower cold
+    /// one — shrinking `migrated_bytes`. Watermark eligibility is
+    /// unchanged: cost only reorders devices already at or above the
+    /// high mark. A missing entry means zero cost (the residency-blind
+    /// seed behavior).
+    pub fn steal_candidate_with_cost(
+        &self,
+        shares: &[f64],
+        restage: &[usize],
+    ) -> Option<(usize, usize)> {
         let n = self.depth.len();
         if self.policy != RoutePolicy::AffinitySteal || n < 2 {
             return None;
         }
-        let weighted = |d: usize| {
-            let s = shares.get(d).copied().unwrap_or(1.0 / n as f64);
-            self.depth[d] as f64 / s.max(1e-9)
+        let share = |d: usize| {
+            shares.get(d).copied().unwrap_or(1.0 / n as f64).max(1e-9)
         };
+        let weighted = |d: usize| self.depth[d] as f64 / share(d);
         let to = (0..n).filter(|&d| self.depth[d] < self.low).min_by(
             |&a, &b| weighted(a).partial_cmp(&weighted(b)).unwrap(),
         )?;
+        // Net value of stealing from d: its weighted depth minus the
+        // (equally weighted) requests whose residency the move forfeits.
+        let value = |d: usize| {
+            let cost = restage.get(d).copied().unwrap_or(0) as f64;
+            (self.depth[d] as f64 - cost) / share(d)
+        };
         let from = (0..n).filter(|&d| self.depth[d] >= self.high).max_by(
-            |&a, &b| weighted(a).partial_cmp(&weighted(b)).unwrap(),
+            |&a, &b| value(a).partial_cmp(&value(b)).unwrap(),
         )?;
         (from != to).then_some((from, to))
     }
@@ -927,6 +954,37 @@ mod tests {
         r.note_enqueued(2, JOB, 30);
         let got = r.steal_candidate(&[0.05, 0.9, 0.05]);
         assert_eq!(got, Some((2, 0)));
+    }
+
+    #[test]
+    fn restage_cost_redirects_steal_to_cold_victim() {
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 3, 2, 6);
+        r.note_enqueued(0, JOB, 1); // idle destination
+        r.note_enqueued(1, JOB, 8);
+        r.note_enqueued(2, JOB, 7);
+        let shares = vec![1.0 / 3.0; 3];
+        // residency-blind: the deepest device is the victim
+        assert_eq!(r.steal_candidate(&shares), Some((1, 0)));
+        // device 1's batch is fully resident, device 2's is cold: the
+        // cold batch wins the steal despite its shallower backlog
+        assert_eq!(
+            r.steal_candidate_with_cost(&shares, &[0, 8, 0]),
+            Some((2, 0))
+        );
+        // empty cost slice reproduces the blind decision
+        assert_eq!(r.steal_candidate_with_cost(&shares, &[]), Some((1, 0)));
+    }
+
+    #[test]
+    fn restage_cost_does_not_change_eligibility() {
+        // a huge cost on the only device above the high watermark cannot
+        // promote a below-mark device into the victim set
+        let mut r = DeviceRouter::new(RoutePolicy::AffinitySteal, 2, 2, 6);
+        r.note_enqueued(0, JOB, 6);
+        assert_eq!(
+            r.steal_candidate_with_cost(&[0.5, 0.5], &[100, 0]),
+            Some((0, 1))
+        );
     }
 
     #[test]

@@ -10,19 +10,23 @@
 //!   --combine adaptive|static[:P]   (default adaptive)
 //!   --data noreuse|reuse|sorted     (default sorted)
 //!   --devices N --route affinity|rr (default 1 / affinity)
+//!   --residency lru|reuse           (default reuse: lookahead eviction
+//!                                   + ahead-of-flush prefetch)
 //!   --mode gcharm|cpu|handtuned     (default gcharm)
 //! gcharm md [opts]                  2D molecular dynamics run
 //!   --particles N --steps N --grid G --pes N
 //!   --split static|adaptive         (default adaptive)
 //!   --devices N --route affinity|rr (default 1 / affinity)
+//!   --residency lru|reuse           (default reuse)
 //!   --mode gcharm|cpu1              (default gcharm)
 //! gcharm spmv [opts]                sparse neighbor-update run (the
 //!   --rows N --iters N --nnz N      registry-API demo workload)
 //!   --pes N --devices N --split static|adaptive
+//!   --residency lru|reuse           (default reuse)
 //! gcharm serve [opts]               one persistent runtime serving a
 //!   --pes N --devices N             mixed nbody+md+2x-spmv workload
 //!   --iters N --rows N --particles N  trace concurrently; asserts that
-//!                                   cross-job combining fired
+//!   --residency lru|reuse           cross-job combining fired
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
 //! gcharm chaos [--seed N] [--seeds A..B]   deterministic fault-injection
 //!                                   run(s); needs `--features chaos`.
@@ -41,7 +45,8 @@ use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench;
 use gcharm::coordinator::{
-    CombinePolicy, Config, DataPolicy, RoutePolicy, Runtime, SplitPolicy,
+    CombinePolicy, Config, DataPolicy, ResidencyPolicy, RoutePolicy, Runtime,
+    SplitPolicy,
 };
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -102,6 +107,20 @@ fn route_policy(s: &str) -> Result<RoutePolicy> {
     }
 }
 
+/// `--residency lru|reuse` flag (absent = the runtime default).
+fn residency_policy(
+    flags: &HashMap<String, String>,
+) -> Result<ResidencyPolicy> {
+    match flags.get("residency").map(|s| s.as_str()) {
+        None => Ok(ResidencyPolicy::default()),
+        Some("lru") => Ok(ResidencyPolicy::Lru),
+        Some("reuse" | "reuse-graph" | "graph") => {
+            Ok(ResidencyPolicy::ReuseGraph)
+        }
+        Some(other) => bail!("unknown residency policy {other}"),
+    }
+}
+
 fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
     let dataset = match flags.get("dataset").map(|s| s.as_str()) {
         None | Some("small") => DatasetSpec::small(),
@@ -127,6 +146,7 @@ fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
         route: route_policy(
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
+        residency: residency_policy(&flags)?,
         ..Config::default()
     };
 
@@ -170,6 +190,7 @@ fn cmd_md(flags: HashMap<String, String>) -> Result<()> {
         route: route_policy(
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
+        residency: residency_policy(&flags)?,
         ..Config::default()
     };
     let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");
@@ -206,6 +227,7 @@ fn cmd_spmv(flags: HashMap<String, String>) -> Result<()> {
         route: route_policy(
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
+        residency: residency_policy(&flags)?,
         ..Config::default()
     };
     println!(
@@ -242,6 +264,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
         route: route_policy(
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
+        residency: residency_policy(&flags)?,
         ..Config::default()
     };
     println!(
@@ -346,7 +369,7 @@ fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
 }
 
 /// Replay chaos schedules by seed: `--seed N` for one, `--seeds A..B`
-/// for a range (default: the regression corpus 0..8). Exits nonzero if
+/// for a range (default: the regression corpus 0..10). Exits nonzero if
 /// any seed violates an invariant, printing its full event trace.
 #[cfg(feature = "chaos")]
 fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
@@ -355,7 +378,8 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
     let seeds: Vec<u64> = if let Some(s) = flags.get("seed") {
         vec![s.parse()?]
     } else {
-        let range = flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..8");
+        let range =
+            flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..10");
         let (a, b) = range
             .split_once("..")
             .ok_or_else(|| anyhow::anyhow!("--seeds wants A..B, got {range}"))?;

@@ -10,11 +10,39 @@
 //! combined kernel's buffers end up scattered across slot indices, and the
 //! coalescing module (coordinator/coalescing.rs) measures how sorted-index
 //! access restores locality.
+//!
+//! Eviction is policy-driven ([`ResidencyPolicy`]): the seed behavior is
+//! plain LRU; the reuse-graph policy (ISSUE 7) lets the coordinator pass a
+//! *predicted next use* with each acquire and evicts the buffer whose next
+//! use is farthest away (Belady-style, LRU as the tiebreak), and adds
+//! free-slot-only [`DeviceMemory::prefetch`] so hot buffers can be staged
+//! ahead of the flush that needs them.
 
 use std::collections::HashMap;
 
 /// Identifies one chare data buffer in the application domain.
 pub type BufferId = u64;
+
+/// How a [`DeviceMemory`] picks its eviction victim (`Config::residency`).
+///
+/// * `Lru` — the seed behavior: evict the least-recently-used unpinned
+///   slot. Ignores reuse predictions entirely; selecting it reproduces
+///   pre-ISSUE-7 behavior bitwise (pinned in
+///   `tests/pipeline_equivalence.rs`).
+/// * `ReuseGraph` — lookahead eviction: the coordinator's reuse scorer
+///   (`coordinator::residency`) predicts each buffer's next reference
+///   from the pending request stream, and the victim is the unpinned
+///   slot with the *farthest* predicted next use (ties broken LRU).
+///   Buffers with no forward prediction — streaming scans that never
+///   re-reference — predict `u64::MAX` and are evicted first, which is
+///   what keeps one tenant's scan from flushing a co-tenant's hot
+///   working set. Also enables ahead-of-flush prefetch staging.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResidencyPolicy {
+    Lru,
+    #[default]
+    ReuseGraph,
+}
 
 /// Result of requesting residency for a buffer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,16 +65,25 @@ impl Residency {
     }
 }
 
-/// LRU slot allocator over a fixed-capacity device pool.
+/// Policy-driven slot allocator over a fixed-capacity device pool.
 #[derive(Debug)]
 pub struct DeviceMemory {
     capacity: usize,
+    policy: ResidencyPolicy,
     /// slot -> resident buffer (None = free).
     slots: Vec<Option<BufferId>>,
     /// buffer -> slot for residents.
     resident: HashMap<BufferId, usize>,
     /// slot -> last-touch tick, for LRU eviction.
     last_touch: Vec<u64>,
+    /// slot -> predicted next-use sequence (ReuseGraph only; `u64::MAX`
+    /// means "no forward reference known", which sorts first for
+    /// eviction).
+    predicted: Vec<u64>,
+    /// slot -> staged by `prefetch` and not yet demanded. Cleared (and
+    /// counted as a prefetch hit) by the first demand acquire; counted
+    /// as wasted if the slot is evicted or invalidated first.
+    prefetched: Vec<bool>,
     free: Vec<usize>,
     /// Pin counts per slot; pinned slots are never evicted (they back
     /// pending combined launches).
@@ -55,24 +92,44 @@ pub struct DeviceMemory {
     hits: u64,
     misses: u64,
     evictions: u64,
+    prefetch_hits: u64,
+    prefetch_wasted: u64,
 }
 
 impl DeviceMemory {
-    /// `capacity`: number of buffer slots the device pool holds.
+    /// `capacity`: number of buffer slots the device pool holds. Plain
+    /// LRU eviction; use [`DeviceMemory::with_policy`] for lookahead.
     pub fn new(capacity: usize) -> DeviceMemory {
+        DeviceMemory::with_policy(capacity, ResidencyPolicy::Lru)
+    }
+
+    /// A pool with an explicit eviction policy (`Config::residency`).
+    pub fn with_policy(
+        capacity: usize,
+        policy: ResidencyPolicy,
+    ) -> DeviceMemory {
         assert!(capacity > 0, "DeviceMemory capacity must be > 0");
         DeviceMemory {
             capacity,
+            policy,
             slots: vec![None; capacity],
             resident: HashMap::new(),
             last_touch: vec![0; capacity],
+            predicted: vec![u64::MAX; capacity],
+            prefetched: vec![false; capacity],
             free: (0..capacity).rev().collect(),
             pins: vec![0; capacity],
             tick: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
+            prefetch_hits: 0,
+            prefetch_wasted: 0,
         }
+    }
+
+    pub fn policy(&self) -> ResidencyPolicy {
+        self.policy
     }
 
     pub fn capacity(&self) -> usize {
@@ -95,32 +152,87 @@ impl DeviceMemory {
         self.resident.keys().copied().collect()
     }
 
-    /// Ensure `id` is resident; returns Hit(slot) or Miss(slot). On miss the
-    /// least-recently-used *unpinned* slot is evicted if the pool is full;
-    /// `None` if every slot is pinned (caller must flush pending launches
-    /// first).
+    /// Ensure `id` is resident; returns Hit(slot) or Miss(slot). On miss
+    /// a victim is evicted per the policy if the pool is full; `None` if
+    /// every slot is pinned (caller must flush pending launches first).
     pub fn acquire(&mut self, id: BufferId) -> Option<Residency> {
+        self.acquire_predicted(id, u64::MAX).map(|(r, _)| r)
+    }
+
+    /// [`DeviceMemory::acquire`] with a reuse prediction attached:
+    /// `predicted_next` is the scorer's forecast of this buffer's *next*
+    /// reference (a stream sequence number; `u64::MAX` = no forward
+    /// reference known). Under `ReuseGraph` it sets the slot's eviction
+    /// priority; under `Lru` it is ignored. Also surfaces the evicted
+    /// buffer id on a capacity miss so the caller can retain a host-side
+    /// victim copy for later prefetch.
+    pub fn acquire_predicted(
+        &mut self,
+        id: BufferId,
+        predicted_next: u64,
+    ) -> Option<(Residency, Option<BufferId>)> {
         self.tick += 1;
         if let Some(&slot) = self.resident.get(&id) {
             self.last_touch[slot] = self.tick;
+            self.predicted[slot] = predicted_next;
             self.hits += 1;
-            return Some(Residency::Hit(slot));
+            if self.prefetched[slot] {
+                self.prefetched[slot] = false;
+                self.prefetch_hits += 1;
+            }
+            return Some((Residency::Hit(slot), None));
         }
-        let slot = match self.free.pop() {
-            Some(s) => s,
+        let (slot, evicted) = match self.free.pop() {
+            Some(s) => (s, None),
             None => {
-                let victim = self.lru_slot()?;
+                let victim = match self.policy {
+                    ResidencyPolicy::Lru => self.lru_slot()?,
+                    ResidencyPolicy::ReuseGraph => self.farthest_slot()?,
+                };
+                debug_assert_eq!(
+                    self.pins[victim], 0,
+                    "evicting pinned slot {victim}"
+                );
                 let old = self.slots[victim].take().expect("occupied");
                 self.resident.remove(&old);
+                if self.prefetched[victim] {
+                    self.prefetched[victim] = false;
+                    self.prefetch_wasted += 1;
+                }
                 self.evictions += 1;
-                victim
+                (victim, Some(old))
             }
         };
         self.misses += 1;
         self.slots[slot] = Some(id);
         self.resident.insert(id, slot);
         self.last_touch[slot] = self.tick;
-        Some(Residency::Miss(slot))
+        self.predicted[slot] = predicted_next;
+        Some((Residency::Miss(slot), evicted))
+    }
+
+    /// Stage `id` into a *free* slot ahead of demand (ReuseGraph
+    /// prefetch). Never evicts and never touches the hit/miss counters:
+    /// returns the slot only when one is free and `id` is not already
+    /// resident, else `None`. The later demand `acquire` of a prefetched
+    /// buffer counts both a table hit and a prefetch hit; eviction or
+    /// invalidation before that demand counts the prefetch as wasted.
+    pub fn prefetch(
+        &mut self,
+        id: BufferId,
+        predicted_next: u64,
+    ) -> Option<usize> {
+        if self.resident.contains_key(&id) {
+            return None;
+        }
+        let slot = self.free.pop()?;
+        self.tick += 1;
+        self.slots[slot] = Some(id);
+        self.resident.insert(id, slot);
+        self.last_touch[slot] = self.tick;
+        self.predicted[slot] = predicted_next;
+        self.prefetched[slot] = true;
+        Some(slot)
     }
 
     /// Pin a resident buffer's slot (no-op if absent). Pins nest.
@@ -131,8 +243,19 @@ impl DeviceMemory {
     }
 
     /// Release one pin on a buffer's slot.
+    ///
+    /// Unpinning a slot that holds no pins is a caller bug (a double
+    /// release would let a later pin be cancelled by the earlier
+    /// launch's cleanup, un-protecting a slot a pending launch still
+    /// reads). Debug builds assert, mirroring the `invalidate`
+    /// contract; release builds saturate so the pool cannot underflow.
     pub fn unpin(&mut self, id: BufferId) {
         if let Some(&slot) = self.resident.get(&id) {
+            debug_assert!(
+                self.pins[slot] > 0,
+                "unpinning slot {slot} (buffer {id}) with zero pins: \
+                 double-unpin masks pin-accounting bugs"
+            );
             self.pins[slot] = self.pins[slot].saturating_sub(1);
         }
     }
@@ -158,6 +281,11 @@ impl DeviceMemory {
             );
             self.slots[slot] = None;
             self.pins[slot] = 0;
+            self.predicted[slot] = u64::MAX;
+            if self.prefetched[slot] {
+                self.prefetched[slot] = false;
+                self.prefetch_wasted += 1;
+            }
             self.free.push(slot);
         }
     }
@@ -187,6 +315,10 @@ impl DeviceMemory {
         self.resident.clear();
         self.slots.iter_mut().for_each(|s| *s = None);
         self.pins.iter_mut().for_each(|p| *p = 0);
+        self.predicted.iter_mut().for_each(|p| *p = u64::MAX);
+        self.prefetch_wasted +=
+            self.prefetched.iter().filter(|&&p| p).count() as u64;
+        self.prefetched.iter_mut().for_each(|p| *p = false);
         self.free = (0..self.capacity).rev().collect();
     }
 
@@ -202,10 +334,31 @@ impl DeviceMemory {
         self.evictions
     }
 
+    /// Prefetched slots later claimed by a demand acquire.
+    pub fn prefetch_hits(&self) -> u64 {
+        self.prefetch_hits
+    }
+
+    /// Prefetched slots evicted or invalidated before any demand.
+    pub fn prefetch_wasted(&self) -> u64 {
+        self.prefetch_wasted
+    }
+
     fn lru_slot(&self) -> Option<usize> {
         (0..self.capacity)
             .filter(|&s| self.slots[s].is_some() && self.pins[s] == 0)
             .min_by_key(|&s| self.last_touch[s])
+    }
+
+    /// ReuseGraph victim: the unpinned occupied slot whose predicted
+    /// next use is farthest away (`u64::MAX` — no known forward
+    /// reference — sorts farthest of all), ties broken LRU.
+    fn farthest_slot(&self) -> Option<usize> {
+        (0..self.capacity)
+            .filter(|&s| self.slots[s].is_some() && self.pins[s] == 0)
+            .max_by_key(|&s| {
+                (self.predicted[s], std::cmp::Reverse(self.last_touch[s]))
+            })
     }
 }
 
@@ -355,6 +508,103 @@ mod tests {
         m.invalidate(0);
         assert!(m.peek(0).is_none());
         assert_eq!(m.pinned_count(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double-unpin")]
+    fn double_unpin_asserts() {
+        let mut m = DeviceMemory::new(2);
+        m.acquire(0).unwrap();
+        m.pin(0);
+        m.unpin(0);
+        m.unpin(0);
+    }
+
+    #[test]
+    fn reuse_graph_evicts_farthest_predicted_use() {
+        let mut m = DeviceMemory::with_policy(3, ResidencyPolicy::ReuseGraph);
+        m.acquire_predicted(0, 10).unwrap();
+        m.acquire_predicted(1, 500).unwrap(); // farthest known next use
+        m.acquire_predicted(2, 20).unwrap();
+        let (r, evicted) = m.acquire_predicted(3, 15).unwrap();
+        assert!(!r.is_hit());
+        assert_eq!(evicted, Some(1), "victim is the farthest next use");
+        assert!(m.peek(0).is_some() && m.peek(2).is_some());
+    }
+
+    #[test]
+    fn unscored_buffers_evict_before_scored_ones() {
+        // A streaming scan (no forward reference -> u64::MAX) must lose
+        // to any buffer with a known next use, however distant.
+        let mut m = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+        m.acquire_predicted(7, 1_000_000).unwrap(); // hot co-tenant
+        m.acquire_predicted(8, u64::MAX).unwrap(); // scan
+        m.acquire_predicted(9, u64::MAX).unwrap(); // scan evicts scan
+        assert!(m.peek(7).is_some(), "scored buffer survived the scan");
+        assert!(m.peek(8).is_none());
+    }
+
+    #[test]
+    fn reuse_graph_ties_break_lru() {
+        let mut m = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+        m.acquire_predicted(0, 50).unwrap();
+        m.acquire_predicted(1, 50).unwrap();
+        m.acquire_predicted(1, 50).unwrap(); // touch 1; 0 is LRU
+        let (_, evicted) = m.acquire_predicted(2, 50).unwrap();
+        assert_eq!(evicted, Some(0));
+    }
+
+    #[test]
+    fn prefetch_uses_free_slots_only() {
+        let mut m = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+        assert!(m.prefetch(0, 5).is_some());
+        assert!(m.prefetch(0, 5).is_none(), "already resident");
+        assert!(m.prefetch(1, 6).is_some());
+        // pool full: prefetch must refuse rather than evict
+        assert!(m.prefetch(2, 1).is_none());
+        assert!(m.peek(0).is_some() && m.peek(1).is_some());
+        assert_eq!(m.misses(), 0, "prefetch is not a demand miss");
+    }
+
+    #[test]
+    fn demanded_prefetch_counts_hit_and_prefetch_hit() {
+        let mut m = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+        m.prefetch(0, 5).unwrap();
+        let (r, _) = m.acquire_predicted(0, 9).unwrap();
+        assert!(r.is_hit());
+        assert_eq!(m.hits(), 1);
+        assert_eq!(m.prefetch_hits(), 1);
+        // second demand is a plain hit, not another prefetch hit
+        m.acquire_predicted(0, 9).unwrap();
+        assert_eq!(m.prefetch_hits(), 1);
+        assert_eq!(m.prefetch_wasted(), 0);
+    }
+
+    #[test]
+    fn undemanded_prefetch_counts_wasted_on_eviction_and_invalidate() {
+        let mut m = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+        m.prefetch(0, u64::MAX).unwrap();
+        m.prefetch(1, u64::MAX).unwrap();
+        m.invalidate(0);
+        assert_eq!(m.prefetch_wasted(), 1);
+        m.acquire_predicted(2, 1).unwrap(); // fills the freed slot
+        m.acquire_predicted(3, 2).unwrap(); // evicts the unscored prefetch
+        assert_eq!(m.prefetch_wasted(), 2);
+        assert_eq!(m.prefetch_hits(), 0);
+    }
+
+    #[test]
+    fn lru_policy_ignores_predictions() {
+        // Same stream as lru_eviction_picks_least_recently_used but with
+        // adversarial predictions attached: Lru must not care.
+        let mut m = DeviceMemory::with_policy(2, ResidencyPolicy::Lru);
+        let s0 = m.acquire_predicted(0, u64::MAX).unwrap().0.slot();
+        m.acquire_predicted(1, 1).unwrap();
+        m.acquire_predicted(1, 1).unwrap(); // touch 1; 0 is LRU
+        let (r, evicted) = m.acquire_predicted(2, 3).unwrap();
+        assert_eq!(r.slot(), s0);
+        assert_eq!(evicted, Some(0));
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub use device_sim::{
 pub use executor::{Completion, Executor, GpuService, LaunchSpec, Payload};
 pub use kernel::{builtin_kernels, SlotFn, TileArgSpec, TileKernel};
 pub use manifest::Manifest;
-pub use memory::{BufferId, DeviceMemory, Residency};
+pub use memory::{BufferId, DeviceMemory, Residency, ResidencyPolicy};
 pub use pjrt::{Engine, HostArg};
 pub use pool::DevicePool;
 pub use staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};

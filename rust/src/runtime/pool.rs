@@ -15,6 +15,7 @@
 //! service, the same threads, the same completion stream.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
@@ -26,6 +27,12 @@ use super::kernel::TileKernel;
 /// A pool of N simulated GPU devices, each a full `GpuService`.
 pub struct DevicePool {
     services: Vec<GpuService>,
+    /// Launches submitted to each device whose completions have not been
+    /// acknowledged yet (`note_completion`). The reuse-graph prefetch
+    /// path gates on this: ahead-of-flush staging only runs *while a
+    /// combined batch is executing* on the device, so the prefetch
+    /// overlaps compute instead of delaying the next launch.
+    in_flight: Vec<AtomicUsize>,
 }
 
 impl DevicePool {
@@ -46,7 +53,8 @@ impl DevicePool {
                 GpuService::spawn_on(artifacts, kernels.clone(), d, done.clone())
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(DevicePool { services })
+        let in_flight = (0..devices).map(|_| AtomicUsize::new(0)).collect();
+        Ok(DevicePool { services, in_flight })
     }
 
     pub fn devices(&self) -> usize {
@@ -73,7 +81,26 @@ impl DevicePool {
                 self.services.len()
             )
         })?;
-        svc.submit(spec)
+        svc.submit(spec)?;
+        self.in_flight[device].fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Acknowledge one completion from `device` (the coordinator calls
+    /// this as it processes the pool's `done` channel).
+    pub fn note_completion(&self, device: usize) {
+        if let Some(g) = self.in_flight.get(device) {
+            let prev = g.fetch_sub(1, Ordering::SeqCst);
+            debug_assert!(prev > 0, "completion without a submission");
+        }
+    }
+
+    /// Launches submitted to `device` and not yet acknowledged complete.
+    pub fn in_flight(&self, device: usize) -> usize {
+        self.in_flight
+            .get(device)
+            .map(|g| g.load(Ordering::SeqCst))
+            .unwrap_or(0)
     }
 }
 
@@ -157,6 +184,32 @@ mod tests {
             .collect();
         outs.sort_by_key(|(d, _)| *d);
         assert_eq!(outs[0].1, outs[1].1, "devices run the same engine code");
+    }
+
+    #[test]
+    fn in_flight_tracks_submissions_and_acks() {
+        let (tx, rx) = channel();
+        let pool = DevicePool::spawn(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            gravity(),
+            2,
+            tx,
+        )
+        .unwrap();
+        assert_eq!(pool.in_flight(0), 0);
+        pool.submit(0, gravity_spec(0, 1, 0.5)).unwrap();
+        pool.submit(0, gravity_spec(1, 1, 0.5)).unwrap();
+        assert_eq!(pool.in_flight(0), 2);
+        assert_eq!(pool.in_flight(1), 0);
+        for _ in 0..2 {
+            let c = rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap()
+                .unwrap();
+            pool.note_completion(c.device);
+        }
+        assert_eq!(pool.in_flight(0), 0);
+        assert_eq!(pool.in_flight(9), 0, "out of range reads as idle");
     }
 
     #[test]

@@ -49,6 +49,19 @@ pub(crate) fn copy_slots<T: Copy>(
         .copy_from_slice(&src[src_off..src_off + n_slots * slot_len]);
 }
 
+/// Write one slot of width `slot_len` into `dst` at `slot`: the shared
+/// mirror-write primitive of demand staging and prefetch staging
+/// (`coordinator::chare_table`), and the read side of the victim cache.
+pub(crate) fn write_slot<T: Copy>(
+    dst: &mut [T],
+    slot: usize,
+    slot_len: usize,
+    src: &[T],
+) {
+    let off = slot * slot_len;
+    dst[off..off + slot_len].copy_from_slice(&src[..slot_len]);
+}
+
 /// Pool key: variant name + argument slot index.
 type BufKey = (Arc<str>, usize);
 
@@ -392,6 +405,13 @@ mod tests {
         copy_slots(&mut dst, &src, 1, 2, 3); // slots 1..3 of width 3
         assert_eq!(&dst[..6], &[3, 4, 5, 6, 7, 8]);
         assert_eq!(&dst[6..], &[0, 0]);
+    }
+
+    #[test]
+    fn write_slot_targets_one_slot() {
+        let mut dst = vec![0i32; 9];
+        write_slot(&mut dst, 1, 3, &[7, 8, 9]);
+        assert_eq!(dst, vec![0, 0, 0, 7, 8, 9, 0, 0, 0]);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Chaos-harness regression corpus (`cargo test --features chaos`).
 //!
 //! Each seed is a complete fault schedule ([`gcharm::chaos::Schedule`]):
-//! the contiguous corpus 0..=7 covers every fault theme — scripted
+//! the contiguous corpus 0..=9 covers every fault theme — scripted
 //! cancels at three quiescence depths, panicking drivers, steal storms,
-//! flush-timing jitter, live registration and rejected submissions —
-//! twice each. A failing seed replays bit-identically with
+//! flush-timing jitter, live registration and rejected submissions, and
+//! cache pressure (a starved chare table fought over by a hot tenant and
+//! an adversarial streaming scan) — twice each. A failing seed replays
+//! bit-identically with
 //! `gcharm chaos --seed N` (the whole schedule, including its event
 //! trace, is a pure function of the seed).
 //!
@@ -19,8 +21,8 @@ use gcharm::chaos::{
 };
 use gcharm::coordinator::{Config, JobReport, PoolReport, Runtime};
 
-/// The regression corpus: every theme twice (seed % 4 cycles them).
-const CORPUS: std::ops::Range<u64> = 0..8;
+/// The regression corpus: every theme twice (seed % 5 cycles them).
+const CORPUS: std::ops::Range<u64> = 0..10;
 
 #[test]
 fn seed_corpus_holds_all_invariants() {
@@ -40,8 +42,13 @@ fn corpus_covers_every_fault_theme_twice() {
     for seed in CORPUS {
         *counts.entry(theme_name(seed)).or_insert(0usize) += 1;
     }
-    for theme in ["cancel", "driver-panic", "steal-storm", "live-registration"]
-    {
+    for theme in [
+        "cancel",
+        "driver-panic",
+        "steal-storm",
+        "live-registration",
+        "cache-pressure",
+    ] {
         assert_eq!(counts.get(theme), Some(&2), "theme {theme} undercovered");
     }
 }
@@ -51,7 +58,7 @@ fn corpus_covers_every_fault_theme_twice() {
 #[test]
 fn same_seed_replays_an_identical_trace() {
     // one seed per theme; two full runs each (fresh runtime every time)
-    for seed in 0..4u64 {
+    for seed in 0..5u64 {
         let a = run_schedule(seed).expect("first run");
         let b = run_schedule(seed).expect("replay");
         assert!(a.ok(), "seed {seed}:\n{a}");
@@ -125,6 +132,45 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
     );
     h2.wait().unwrap();
     rt.shutdown();
+}
+
+/// Seeds 4 and 9 are the corpus's cache-pressure schedules: one device,
+/// one shared reuse family, a chare table of 6-11 slots, job 0 cycling a
+/// hot set that fits, and every co-tenant streaming a scan wider than the
+/// whole table once per round. The run must stay exact for every tenant
+/// (the scan's own physics included) and hold the prefetch accounting
+/// invariants under real eviction churn; pinned-slot eviction would trip
+/// the pool's debug assertions, which are live in this profile.
+#[test]
+fn cache_pressure_keeps_every_tenant_exact() {
+    for seed in [4u64, 9] {
+        assert_eq!(theme_name(seed), "cache-pressure");
+        let s = Schedule::from_seed(seed);
+        let slots = s.table_slots.expect("theme shrinks the table");
+        assert!(
+            s.jobs[1..].iter().all(|j| j.nbuf > slots),
+            "seed {seed}: scans must overflow the table"
+        );
+        let r = run_schedule(seed).expect("harness ran");
+        assert!(r.ok(), "seed {seed}:\n{r}");
+        assert!(
+            r.trace.iter().any(|l| l.contains("theme=cache-pressure")),
+            "seed {seed}: trace lost its theme header:\n{r}"
+        );
+        // every tenant is fault-free under this theme, so every series
+        // must verify exactly — the hot set survived the scans
+        let exact = r
+            .trace
+            .iter()
+            .filter(|l| l.contains("series-exact"))
+            .count();
+        assert_eq!(
+            exact,
+            s.jobs.len(),
+            "seed {seed}: {exact} exact series for {} tenants:\n{r}",
+            s.jobs.len()
+        );
+    }
 }
 
 /// Seed 0 is a cancel-theme schedule: its job 0 is the healthy co-tenant

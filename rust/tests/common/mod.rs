@@ -48,6 +48,18 @@ pub fn synth_descriptor(name: &str, rows: usize) -> KernelDescriptor {
     }
 }
 
+/// [`synth_descriptor`] with the residency path wired up: the tile is a
+/// reuse arg staged through the chare tables, with a gather variant and
+/// slot-sorted coalescing (the combination the apps use).
+pub fn reuse_descriptor(name: &str, rows: usize) -> KernelDescriptor {
+    let mut desc = synth_descriptor(name, rows);
+    let k = Arc::get_mut(&mut desc.kernel).expect("fresh kernel");
+    k.reuse_arg = Some(0);
+    k.gather_name = Some(Arc::from(format!("{name}_gather")));
+    desc.sort_by_slot = true;
+    desc
+}
+
 /// A chare that bursts `count` all-ones requests of the kind carried by
 /// each GO message and contributes the summed outputs once every result
 /// returned.
@@ -74,6 +86,56 @@ impl Chare for Burster {
                         data_items: self.rows,
                         tag: i as u64,
                         payload: Tile::new(vec![vec![1.0; self.rows]]),
+                    })
+                    .expect("registered tile shape");
+                }
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                self.sum += r.out[0] as f64;
+                self.pending -= 1;
+                if self.pending == 0 {
+                    ctx.contribute(self.sum);
+                }
+            }
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+/// Residency-path burster: cycles `nbuf` reuse-buffer ids, each carrying
+/// id-determined integer tile values (repeated ids carry identical data,
+/// so staging a stale resident copy would be caught by the exact
+/// reduction). Per-round sum: `sum_i rows * (1 + i % nbuf)` — exact in
+/// f64 in any arrival order.
+pub struct ReuseBurster {
+    pub id: ChareId,
+    pub rows: usize,
+    pub count: usize,
+    pub nbuf: usize,
+    pub pending: usize,
+    pub sum: f64,
+}
+
+impl Chare for ReuseBurster {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_GO => {
+                let kind: KernelKindId = msg.take();
+                self.pending = self.count;
+                self.sum = 0.0;
+                for i in 0..self.count {
+                    let b = (i % self.nbuf) as u64;
+                    ctx.submit(WorkDraft {
+                        chare: self.id,
+                        kind,
+                        buffer: Some(b),
+                        data_items: self.rows,
+                        tag: i as u64,
+                        payload: Tile::new(vec![vec![
+                            1.0 + b as f32;
+                            self.rows
+                        ]]),
                     })
                     .expect("registered tile shape");
                 }

@@ -21,7 +21,7 @@ use std::time::Duration;
 mod common;
 
 use gcharm::apps::spmv::{self, SpmvConfig};
-use gcharm::coordinator::{ChareId, Config, JobSpec, Runtime};
+use gcharm::coordinator::{ChareId, Config, JobSpec, ResidencyPolicy, Runtime};
 use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
 use gcharm::runtime::shapes::{
@@ -572,5 +572,51 @@ fn concurrent_jobs_match_sequential_runtimes_bitwise() {
         );
         // different families never share launches
         assert_eq!(cross, 0, "{devices} device(s)");
+    }
+}
+
+/// `Config { residency: Lru }` is the seed runtime: the knob must
+/// reproduce the pre-ISSUE-7 path exactly. The concurrent two-job run
+/// under explicit Lru matches the default-config run bitwise, and the
+/// prefetch machinery stays completely dark.
+#[test]
+fn lru_residency_reproduces_seed_runtime_bitwise() {
+    for devices in [1usize, 2] {
+        let cfg = eq_spmv_cfg();
+        let master = Arc::new(Mutex::new(vec![0.0f32; cfg.rows]));
+        let rt = Runtime::new(Config {
+            residency: ResidencyPolicy::Lru,
+            ..runtime_cfg(devices)
+        })
+        .unwrap();
+        let a = rt
+            .submit_job(spmv::job_spec_with_master(
+                &cfg,
+                "spmv",
+                master.clone(),
+            ))
+            .unwrap();
+        let b = rt.submit_job(eqsum_spec(3, 300)).unwrap();
+        a.wait().unwrap();
+        let lru_series = b.wait().unwrap().series;
+        let pool = rt.shutdown();
+        let lru_x: Vec<u32> =
+            master.lock().unwrap().iter().map(|x| x.to_bits()).collect();
+
+        let (def_x, def_series, _) = run_concurrent(devices);
+        assert_eq!(
+            lru_x, def_x,
+            "{devices} device(s): Lru drifted from the default runtime"
+        );
+        assert_eq!(lru_series, def_series, "{devices} device(s)");
+
+        // seed surface: no prefetch counters, no staged-ahead bytes
+        assert_eq!(pool.prefetch_hits, 0, "{devices} device(s)");
+        assert_eq!(pool.prefetch_wasted, 0, "{devices} device(s)");
+        assert_eq!(pool.prefetch_bytes, 0, "{devices} device(s)");
+        for k in &pool.kind_stats {
+            assert_eq!(k.prefetch_hits, 0, "{}", k.name);
+            assert_eq!(k.prefetch_wasted, 0, "{}", k.name);
+        }
     }
 }

@@ -1,0 +1,257 @@
+//! Reuse-graph residency properties (ISSUE 7), pinned at the public API:
+//! farthest-next-use eviction, per-job namespacing of the reuse scorer,
+//! prefetch that never evicts, and the policy toggle leaving the Lru
+//! path's physics and metrics surface exactly as the seed shipped them.
+//!
+//! The scorer/pool/table unit matrices live next to their modules; these
+//! tests exercise the composed behavior an application actually sees.
+
+mod common;
+
+use gcharm::coordinator::residency::UNSCORED;
+use gcharm::coordinator::{
+    ChareId, ChareTable, Config, JobSpec, KindStats, Msg, Report,
+    ResidencyPolicy, ReuseScorer, Runtime,
+};
+use gcharm::runtime::DeviceMemory;
+
+/// Job-namespaced residency key, as the coordinator derives it: the high
+/// 16 bits carry the tenant, so per-key scores can never collide across
+/// jobs.
+fn job_key(job: u64, buf: u64) -> u64 {
+    (job << 48) | buf
+}
+
+// ---------------------------------------------------------------------------
+// Eviction order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reuse_graph_evicts_farthest_next_use() {
+    let mut mem = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+    mem.acquire_predicted(1, 10).unwrap();
+    mem.acquire_predicted(2, 100).unwrap();
+    // pool full; buffer 2's next use is forecast farthest away
+    let (r, evicted) = mem.acquire_predicted(3, 50).unwrap();
+    assert!(!r.is_hit());
+    assert_eq!(evicted, Some(2), "must evict the farthest-next-use buffer");
+    assert!(mem.peek(1).is_some(), "near-future buffer survives");
+}
+
+#[test]
+fn unscored_buffers_evict_before_forecast_ones() {
+    // A single-reference streaming key carries no forecast (UNSCORED =
+    // u64::MAX) and must be the first casualty — this is exactly what
+    // shields a hot set from a co-tenant's scan.
+    let mut mem = DeviceMemory::with_policy(2, ResidencyPolicy::ReuseGraph);
+    mem.acquire_predicted(1, 40).unwrap(); // hot, forecast soon
+    mem.acquire_predicted(2, UNSCORED).unwrap(); // scan, never seen again
+    let (_, evicted) = mem.acquire_predicted(3, UNSCORED).unwrap();
+    assert_eq!(evicted, Some(2), "scan traffic must displace itself");
+    assert!(mem.peek(1).is_some());
+}
+
+#[test]
+fn lru_policy_ignores_predictions() {
+    // Under `ResidencyPolicy::Lru` the forecast argument is dead weight:
+    // eviction is least-recently-touched, exactly the seed behavior.
+    let mut mem = DeviceMemory::with_policy(2, ResidencyPolicy::Lru);
+    mem.acquire_predicted(1, 10).unwrap();
+    mem.acquire_predicted(2, u64::MAX).unwrap();
+    mem.acquire_predicted(1, 10).unwrap(); // touch 1: 2 is now LRU
+    let (_, evicted) = mem.acquire_predicted(3, 50).unwrap();
+    assert_eq!(evicted, Some(2), "Lru must evict by recency, not forecast");
+}
+
+// ---------------------------------------------------------------------------
+// Per-job namespacing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scorer_scores_are_namespaced_per_job() {
+    let mut s = ReuseScorer::new();
+    // job 1 references its buffer 5 on a steady cadence -> forecast
+    for _ in 0..4 {
+        s.note(job_key(1, 5));
+    }
+    // job 2's buffer 5 is a different key entirely: one cold reference
+    assert_eq!(s.note(job_key(2, 5)), UNSCORED);
+    assert_ne!(s.predicted_next(job_key(1, 5)), UNSCORED);
+
+    // tearing down job 2 leaves job 1's graph untouched
+    s.forget_job(2);
+    assert_ne!(s.predicted_next(job_key(1, 5)), UNSCORED);
+    assert_eq!(s.predicted_next(job_key(2, 5)), UNSCORED);
+}
+
+#[test]
+fn hot_set_survives_co_tenant_scan_in_one_table() {
+    // Two tenants share one 4-slot table. Job 1 keeps one hot buffer
+    // with a forecast; job 2 streams 32 single-use buffers through. The
+    // hot buffer must still be resident when the scan is done.
+    let mut table =
+        ChareTable::with_policy(4, 8, ResidencyPolicy::ReuseGraph);
+    let hot = job_key(1, 0);
+    let data = vec![1.0f32; 8];
+    table.stage_pinned_predicted(hot, &data, 8).unwrap();
+    table.release(hot);
+
+    for b in 0..32u64 {
+        let key = job_key(2, b);
+        table.stage_pinned_predicted(key, &data, UNSCORED).unwrap();
+        table.release(key);
+    }
+    assert!(
+        table.resident_keys().contains(&hot),
+        "co-tenant scan flushed the hot set: {:?}",
+        table.resident_keys()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Prefetch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefetch_only_fills_free_slots_and_never_evicts() {
+    let mut table =
+        ChareTable::with_policy(2, 4, ResidencyPolicy::ReuseGraph);
+    let data = vec![2.0f32; 4];
+    // Fill the pool, then push buffer 1 out so it lands in the victim
+    // cache (prefetch restages only data it still holds host-side).
+    table.stage_pinned_predicted(1, &data, 50).unwrap();
+    table.release(1);
+    table.stage_pinned_predicted(2, &data, 10).unwrap();
+    table.release(2);
+    table.stage_pinned_predicted(3, &data, 20).unwrap();
+    table.release(3);
+    assert!(table.prefetchable(1), "evicted buffer must be restageable");
+
+    // pool full: a scored-hotter resident must NOT be displaced
+    assert_eq!(table.prefetch(1, 5), None, "prefetch must never evict");
+    assert!(table.resident_keys().contains(&2));
+    assert!(table.resident_keys().contains(&3));
+
+    // free a slot: now the restage succeeds and costs real bytes
+    table.invalidate(3);
+    let bytes = table.prefetch(1, 5).expect("free slot available");
+    assert_eq!(bytes, 16, "4 floats restaged");
+    assert_eq!(table.prefetch_transferred_bytes(), 16);
+
+    // the demand arrives: a hit, attributed to the prefetcher
+    let staged = table.stage_pinned_predicted(1, &data, 60).unwrap();
+    assert_eq!(staged.bytes, 0, "prefetched buffer hits without a copy");
+    table.release(1);
+    assert_eq!(table.prefetch_hits(), 1);
+    assert_eq!(table.prefetch_wasted(), 0);
+}
+
+#[test]
+fn prefetched_buffer_evicted_before_demand_counts_wasted() {
+    let mut table =
+        ChareTable::with_policy(2, 4, ResidencyPolicy::ReuseGraph);
+    let data = vec![3.0f32; 4];
+    table.stage_pinned_predicted(1, &data, 100).unwrap();
+    table.release(1);
+    table.stage_pinned_predicted(2, &data, 10).unwrap();
+    table.release(2);
+    table.stage_pinned_predicted(3, &data, 20).unwrap();
+    table.release(3);
+    // 1 was evicted; restage it speculatively into a freed slot
+    table.invalidate(2);
+    table.prefetch(1, 90).expect("restaged");
+    // demand for a new buffer arrives first; 1 forecasts farthest (90)
+    // and is evicted unused
+    table.stage_pinned_predicted(4, &data, 30).unwrap();
+    table.release(4);
+    assert_eq!(table.prefetch_wasted(), 1);
+    assert_eq!(table.prefetch_hits(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// End to end: the policy knob on a real reuse workload
+// ---------------------------------------------------------------------------
+
+/// A reuse-heavy burst job driven through the public API: `count`
+/// requests per round cycling `nbuf` buffer ids through the chare
+/// tables, reduction exact in f64 (see `common::ReuseBurster`).
+fn reuse_spec(rounds: usize, count: usize, nbuf: usize) -> JobSpec {
+    let id = ChareId::new(9, 0);
+    let rows = 4;
+    JobSpec::new("reuse_burst")
+        .kernel(common::reuse_descriptor("resprop", rows))
+        .chare(
+            id,
+            0,
+            Box::new(common::ReuseBurster {
+                id,
+                rows,
+                count,
+                nbuf,
+                pending: 0,
+                sum: 0.0,
+            }),
+        )
+        .driver(move |ctx| {
+            let kind = ctx.kinds()[0];
+            let mut series = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                ctx.send(id, Msg::new(common::METHOD_GO, kind));
+                series.push(ctx.await_reduction(1)?);
+                ctx.await_quiescence();
+            }
+            Ok(series)
+        })
+}
+
+/// The policy knob moves bytes, never values: under a starved 4-slot
+/// table (nbuf = 8 forces real eviction churn) both policies must
+/// produce the exact analytic reduction every round. The Lru run must
+/// keep the seed's metrics surface — zero prefetch activity — and the
+/// reuse-graph run must obey the prefetch partition contract.
+#[test]
+fn policies_agree_exactly_on_a_reuse_workload() {
+    let run = |policy: ResidencyPolicy| -> (Vec<f64>, Report) {
+        let rt = Runtime::new(Config {
+            pes: 2,
+            table_slots: 4,
+            residency: policy,
+            ..Config::default()
+        })
+        .expect("runtime");
+        let series = rt
+            .submit_job(reuse_spec(3, 64, 8))
+            .expect("submit")
+            .wait()
+            .expect("job ran")
+            .series;
+        (series, rt.shutdown())
+    };
+    let (lru_series, lru) = run(ResidencyPolicy::Lru);
+    let (reuse_series, reuse) = run(ResidencyPolicy::ReuseGraph);
+
+    // Exact physics: 64 requests/round, each b in 0..8 appearing 8
+    // times, rows = 4: sum = 8 * 4 * (1 + ... + 8) = 1152.
+    assert_eq!(lru_series, vec![1152.0; 3], "Lru physics drifted");
+    assert_eq!(reuse_series, vec![1152.0; 3], "ReuseGraph physics drifted");
+
+    // Lru is the seed path: the new machinery must be fully disengaged.
+    assert_eq!(lru.prefetch_hits, 0);
+    assert_eq!(lru.prefetch_wasted, 0);
+    assert_eq!(lru.prefetch_bytes, 0);
+
+    // Whatever the reuse-graph run prefetched must obey the partition
+    // contract: pool totals == kind sums, hits bounded by table hits.
+    let ksum = |f: fn(&KindStats) -> u64| -> u64 {
+        reuse.kind_stats.iter().map(f).sum()
+    };
+    assert_eq!(reuse.prefetch_hits, ksum(|k| k.prefetch_hits));
+    assert_eq!(reuse.prefetch_wasted, ksum(|k| k.prefetch_wasted));
+    for k in &reuse.kind_stats {
+        assert!(
+            k.prefetch_hits <= k.table_hits,
+            "{}: prefetch hits exceed table hits",
+            k.name
+        );
+    }
+}
