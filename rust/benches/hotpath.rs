@@ -25,8 +25,8 @@ use gcharm::bench::bench_ns;
 use gcharm::coordinator::{
     builtin_registry, chunk_by_items, ChareId, ChareTable, CombinePolicy,
     Combiner, Config, DeviceRouter, HybridScheduler, JobId, KernelKindId,
-    Pending, Report, ResidencyPolicy, RoutePolicy, SplitPolicy, Tile,
-    WorkRequest,
+    LaunchModePolicy, Pending, Report, ResidencyPolicy, RoutePolicy,
+    SplitPolicy, Tile, WorkRequest,
 };
 use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::shapes::{
@@ -518,6 +518,105 @@ fn residency_ablation() {
     );
 }
 
+/// Per-batch vs persistent vs adaptive launch modes (ISSUE 8): nbody and
+/// spmv on a 2-device pool with `CombinePolicy::StaticEvery(8)`, which
+/// chops the work into many small dense flushes and makes the runs
+/// launch-bound — the regime the persistent resident loop is for (each
+/// dense batch pays the modeled queue-poll cost instead of the full
+/// per-launch overhead). Adaptive starts per-batch (pessimistic
+/// idle-share prior) and must converge onto the winning static mode, so
+/// its makespan may never exceed the worse static row.
+fn launch_mode_ablation() {
+    println!(
+        "\nlaunch mode: per-batch vs persistent vs adaptive \
+         (launch-bound: StaticEvery(8), 2 devices)"
+    );
+    println!(
+        "  {:<8} {:<12} {:>13} {:>9} {:>11} {:>10}",
+        "app", "mode", "makespan ms", "launches", "persistent", "per-batch"
+    );
+    let run_app = |app: &str, mode: LaunchModePolicy| -> Report {
+        let runtime = Config {
+            pes: 4,
+            devices: 2,
+            route: RoutePolicy::AffinitySteal,
+            combine: CombinePolicy::StaticEvery(8),
+            launch_mode: mode,
+            ..Config::default()
+        };
+        match app {
+            "nbody" => {
+                let mut cfg = NbodyConfig::new(DatasetSpec::tiny());
+                cfg.iters = 3;
+                cfg.pieces_per_pe = 4;
+                cfg.runtime = runtime;
+                nbody::run(&cfg).expect("nbody run").report
+            }
+            _ => {
+                let mut cfg = SpmvConfig::new(2048);
+                cfg.iters = 3;
+                cfg.runtime = runtime;
+                spmv::run(&cfg).expect("spmv run").report
+            }
+        }
+    };
+    for app in ["nbody", "spmv"] {
+        let mut makespans = Vec::new();
+        for (mname, mode) in [
+            ("per-batch", LaunchModePolicy::PerBatch),
+            ("persistent", LaunchModePolicy::Persistent),
+            ("adaptive", LaunchModePolicy::Adaptive),
+        ] {
+            let r = run_app(app, mode);
+            assert_eq!(
+                r.persistent_batches + r.per_batch_launches,
+                r.launches,
+                "{app}/{mname}: launch-mode partition broke"
+            );
+            println!(
+                "  {:<8} {:<12} {:>13.3} {:>9} {:>11} {:>10}",
+                app,
+                mname,
+                r.device_makespan() * 1e3,
+                r.launches,
+                r.persistent_batches,
+                r.per_batch_launches
+            );
+            let series = format!("{app} launch-mode ({mname}, 2 dev)");
+            record(&series, "modeled_makespan", r.device_makespan(), "s");
+            record(&series, "launches", r.launches as f64, "count");
+            record(
+                &series,
+                "persistent_batches",
+                r.persistent_batches as f64,
+                "count",
+            );
+            makespans.push(r.device_makespan());
+        }
+        let (pb, ps, ad) = (makespans[0], makespans[1], makespans[2]);
+        println!(
+            "  -> {app}: persistent saves {:+.1}% vs per-batch; adaptive \
+             within {:+.1}% of the better static mode",
+            (pb - ps) / pb * 100.0,
+            (ad - pb.min(ps)) / pb.min(ps) * 100.0
+        );
+        assert!(
+            ps < pb,
+            "{app}: persistent must win a launch-bound config \
+             (persistent {ps:.6}s vs per-batch {pb:.6}s)"
+        );
+        // adaptive pays a short per-batch warm-up before the idle-share
+        // EWMA crosses the enter threshold, so it sits between the static
+        // modes — but it may never lose to the worse of the two
+        assert!(
+            ad <= pb.max(ps) + 1e-12,
+            "{app}: adaptive lost to the worse static mode \
+             (adaptive {ad:.6}s vs worse {:.6}s)",
+            pb.max(ps)
+        );
+    }
+}
+
 fn main() {
     println!("hot-path micro-benchmarks (median ns/op)");
 
@@ -528,6 +627,8 @@ fn main() {
     device_pool_scaling();
 
     residency_ablation();
+
+    launch_mode_ablation();
 
     // device router: affinity route + steal decision per request
     {

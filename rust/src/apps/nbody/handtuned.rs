@@ -23,6 +23,7 @@ use anyhow::Result;
 use crate::coordinator::Report;
 use crate::runtime::device_sim::CoalescingClass;
 use crate::runtime::executor::{Executor, LaunchSpec, Payload};
+use crate::runtime::workqueue::LaunchMode;
 use crate::runtime::kernel::TileKernel;
 use crate::runtime::shapes::{
     INTERACTIONS, INTER_W, OUT_W, PARTICLE_W, PARTS_PER_BUCKET,
@@ -132,9 +133,11 @@ pub fn run_handtuned(cfg: &NbodyConfig) -> Result<NbodyResult> {
                 },
                 transfer_bytes: bytes,
                 pattern: CoalescingClass::Contiguous,
+                mode: LaunchMode::PerBatch,
             })?;
             launch_id += 1;
             report.launches += 1;
+            report.per_batch_launches += 1;
             report.gpu_requests += n as u64;
             report.kernel_wall += done.wall;
             report.kernel_modeled += done.modeled.kernel;
@@ -179,9 +182,11 @@ pub fn run_handtuned(cfg: &NbodyConfig) -> Result<NbodyResult> {
                     },
                     transfer_bytes: bytes,
                     pattern: CoalescingClass::Contiguous,
+                    mode: LaunchMode::PerBatch,
                 })?;
                 launch_id += 1;
                 report.launches += 1;
+                report.per_batch_launches += 1;
                 report.gpu_requests += n as u64;
                 report.kernel_wall += done.wall;
                 report.kernel_modeled += done.modeled.kernel;

@@ -80,6 +80,7 @@ pub fn spmv_descriptor() -> KernelDescriptor {
         combine: None,
         sort_by_slot: false,
         cpu_fallback: true,
+        launch_mode: None,
     }
 }
 

@@ -26,37 +26,61 @@ use crate::coordinator::PoolReport;
 /// into `pool.jobs` (i.e. this is a post-`shutdown` report).
 pub fn accounting_violations(pool: &PoolReport) -> Vec<String> {
     let mut v = Vec::new();
-    let mut check = |what: &str, jobs: u64, total: u64| {
+    // A plain fn (not a `v`-capturing closure): the body below also
+    // pushes to `v` directly between calls, which a captured `&mut v`
+    // would make a second overlapping mutable borrow.
+    fn check(v: &mut Vec<String>, what: &str, jobs: u64, total: u64) {
         if jobs != total {
             v.push(format!(
                 "{what}: per-job sum {jobs} != pool total {total}"
             ));
         }
-    };
+    }
 
     let sum = |f: fn(&crate::coordinator::JobReport) -> u64| -> u64 {
         pool.jobs.iter().map(f).sum()
     };
-    check("gpu_requests", sum(|j| j.gpu_requests), pool.gpu_requests);
-    check("cpu_requests", sum(|j| j.cpu_requests), pool.cpu_requests);
-    check("gpu_items", sum(|j| j.gpu_items), pool.gpu_items);
-    check("cpu_items", sum(|j| j.cpu_items), pool.cpu_items);
-    check("transfer_bytes", sum(|j| j.transfer_bytes), pool.transfer_bytes);
+    check(&mut v, "gpu_requests", sum(|j| j.gpu_requests), pool.gpu_requests);
+    check(&mut v, "cpu_requests", sum(|j| j.cpu_requests), pool.cpu_requests);
+    check(&mut v, "gpu_items", sum(|j| j.gpu_items), pool.gpu_items);
+    check(&mut v, "cpu_items", sum(|j| j.cpu_items), pool.cpu_items);
+    check(
+        &mut v,
+        "transfer_bytes",
+        sum(|j| j.transfer_bytes),
+        pool.transfer_bytes,
+    );
 
     // Per-kind partition of the same totals.
     let ksum = |f: fn(&crate::coordinator::KindStats) -> u64| -> u64 {
         pool.kind_stats.iter().map(f).sum()
     };
-    check("kind gpu_requests", ksum(|k| k.gpu_requests), pool.gpu_requests);
-    check("kind cpu_requests", ksum(|k| k.cpu_requests), pool.cpu_requests);
-    check("kind gpu_items", ksum(|k| k.gpu_items), pool.gpu_items);
-    check("kind cpu_items", ksum(|k| k.cpu_items), pool.cpu_items);
+    check(
+        &mut v,
+        "kind gpu_requests",
+        ksum(|k| k.gpu_requests),
+        pool.gpu_requests,
+    );
+    check(
+        &mut v,
+        "kind cpu_requests",
+        ksum(|k| k.cpu_requests),
+        pool.cpu_requests,
+    );
+    check(&mut v, "kind gpu_items", ksum(|k| k.gpu_items), pool.gpu_items);
+    check(&mut v, "kind cpu_items", ksum(|k| k.cpu_items), pool.cpu_items);
 
     // Prefetch staging happens only in the per-family chare tables (the
     // node entry cache never prefetches), so the pool totals must equal
     // the kind sums EXACTLY (ISSUE 7).
-    check("kind prefetch_hits", ksum(|k| k.prefetch_hits), pool.prefetch_hits);
     check(
+        &mut v,
+        "kind prefetch_hits",
+        ksum(|k| k.prefetch_hits),
+        pool.prefetch_hits,
+    );
+    check(
+        &mut v,
         "kind prefetch_wasted",
         ksum(|k| k.prefetch_wasted),
         pool.prefetch_wasted,
@@ -95,9 +119,28 @@ pub fn accounting_violations(pool: &PoolReport) -> Vec<String> {
         ));
     }
 
+    // Launch-mode partition (ISSUE 8): every combined launch was charged
+    // either as a persistent-ring batch or as a per-batch host launch —
+    // at the pool and within every family.
+    check(
+        &mut v,
+        "launch-mode partition",
+        pool.persistent_batches + pool.per_batch_launches,
+        pool.launches,
+    );
+    for k in &pool.kind_stats {
+        if k.persistent_batches + k.per_batch_launches != k.launches {
+            v.push(format!(
+                "kind {}: {} persistent + {} per-batch != {} launches",
+                k.name, k.persistent_batches, k.per_batch_launches, k.launches
+            ));
+        }
+    }
+
     // Every request flushed from a combiner landed on exactly one side
     // of the hybrid split.
     check(
+        &mut v,
         "flushed_requests",
         pool.flushed_requests,
         pool.gpu_requests + pool.cpu_requests,
@@ -159,6 +202,10 @@ mod tests {
             prefetch_hits: 2,
             prefetch_wasted: 1,
             prefetch_bytes: 64,
+            // One launch rode a persistent ring, the rest were host
+            // launches (the mode partition the checker enforces).
+            persistent_batches: 1,
+            per_batch_launches: 3,
             ..PoolReport::default()
         };
         pool.kind_stats.push(KindStats {
@@ -172,6 +219,8 @@ mod tests {
             table_misses: 14,
             prefetch_hits: 2,
             prefetch_wasted: 1,
+            persistent_batches: 1,
+            per_batch_launches: 3,
         });
         pool.jobs.push(JobReport {
             job: JobId(0),
@@ -278,6 +327,29 @@ mod tests {
         pool.prefetch_bytes = pool.transfer_bytes + 1;
         let v = accounting_violations(&pool);
         assert!(v.iter().any(|s| s.contains("prefetch_bytes")), "{v:?}");
+    }
+
+    #[test]
+    fn broken_launch_mode_partition_is_detected() {
+        // pool-level: a launch charged as neither persistent nor per-batch
+        let mut pool = consistent();
+        pool.per_batch_launches -= 1;
+        let v = accounting_violations(&pool);
+        assert!(
+            v.iter().any(|s| s.contains("launch-mode partition")),
+            "{v:?}"
+        );
+
+        // kind-level: the family double-counts a persistent batch
+        let mut pool = consistent();
+        pool.kind_stats[0].persistent_batches += 1;
+        pool.persistent_batches += 1; // keep the pool partition intact
+        pool.launches += 1;
+        let v = accounting_violations(&pool);
+        assert!(
+            v.iter().any(|s| s.contains("persistent + ")),
+            "{v:?}"
+        );
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! `run_schedule(seed)` derives a full fault plan from the seed alone
 //! ([`schedule::Schedule::from_seed`]), executes it against a real
 //! runtime — scripted job cancels at chosen quiescence depths, panicking
-//! drivers, steal storms, flush-timing jitter, late kernel registration
-//! and rejected submissions racing live traffic — and checks the
+//! drivers, steal storms, flush-timing jitter, late kernel registration,
+//! rejected submissions racing live traffic, and launch-mode flips that
+//! jitter the persistent work rings mid-job — and checks the
 //! cross-cutting invariants at every step:
 //!
 //! - each healthy job's reduction series equals its exact integer
@@ -36,8 +37,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{
     Chare, ChareId, CombinePolicy, Config, Ctx, JobCtx, JobHandle, JobSpec,
-    JobStatus, KernelDescriptor, KernelKindId, Msg, Runtime, Tile, WorkDraft,
-    WrResult, METHOD_RESULT,
+    JobStatus, KernelDescriptor, KernelKindId, LaunchMode, Msg, Runtime,
+    Tile, WorkDraft, WrResult, METHOD_RESULT,
 };
 use crate::runtime::kernel::{TileArgSpec, TileKernel};
 use crate::runtime::KernelResources;
@@ -127,6 +128,7 @@ fn descriptor(fam: &FamilySpec) -> KernelDescriptor {
         combine: fam.static_period.map(CombinePolicy::StaticEvery),
         sort_by_slot: fam.reuse,
         cpu_fallback: fam.cpu_fallback,
+        launch_mode: fam.persistent.then_some(LaunchMode::Persistent),
     }
 }
 
@@ -364,6 +366,7 @@ pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
                     reuse: false,
                     static_period: None,
                     cpu_fallback: false,
+                    persistent: false,
                 };
                 let plan = JobPlan {
                     name: "late".to_string(),
@@ -389,6 +392,14 @@ pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
                     counter,
                     handle: Some(handle),
                 });
+            }
+            Injection::LaunchModeFlip { queue_cap } => {
+                rt.chaos_launch_mode_flip(queue_cap)?;
+                trace.push(format!(
+                    "inject launch-mode-flip cap={queue_cap} @ job{} \
+                     round {}",
+                    a.job, a.round
+                ));
             }
             Injection::RejectedSubmit => {
                 // same family name, incompatible tile shape: must be

@@ -9,10 +9,10 @@
 //!
 //! Two properties the generator maintains by construction:
 //!
-//! - **Corpus coverage**: `seed % 5` picks the emphasized fault theme
+//! - **Corpus coverage**: `seed % 6` picks the emphasized fault theme
 //!   (cancel / driver panic / steal storm / live registration / cache
-//!   pressure), so any contiguous block of 10 seeds exercises every
-//!   class twice.
+//!   pressure / launch-flip), so any contiguous block of 12 seeds
+//!   exercises every class twice.
 //! - **Reachable anchors**: every injection and cancel is anchored to a
 //!   `(job, round)` pair with `round <= effective_rounds(job)` — the
 //!   round counter is guaranteed to get there no matter what else the
@@ -62,6 +62,10 @@ pub struct FamilySpec {
     pub static_period: Option<usize>,
     /// Give the family a CPU fallback so the hybrid split applies.
     pub cpu_fallback: bool,
+    /// Pin the family's descriptor to persistent-kernel launches (the
+    /// launch-flip theme starts from a persistent baseline so ring
+    /// jitter and forced mode flips have a resident loop to perturb).
+    pub persistent: bool,
 }
 
 /// One tenant job of the schedule.
@@ -132,6 +136,12 @@ pub enum Injection {
     /// incompatible shape: must be rejected, and must leave the runtime
     /// (including the job-id pool) exactly as it was.
     RejectedSubmit,
+    /// Jitter every persistent work ring to `queue_cap` slots and flip
+    /// the forced launch mode (Persistent on the first flip, PerBatch on
+    /// the next, alternating): backpressure fallback, quiesce of
+    /// still-nonempty rings, and mode-partition accounting under mid-job
+    /// flips.
+    LaunchModeFlip { queue_cap: usize },
 }
 
 /// An injection anchored to a per-job round counter: it fires when job
@@ -159,7 +169,7 @@ pub struct Schedule {
 }
 
 /// Fault themes, cycled by `seed % THEMES`.
-pub const THEMES: usize = 5;
+pub const THEMES: usize = 6;
 
 /// Human name of a seed's theme (trace + docs).
 pub fn theme_name(seed: u64) -> &'static str {
@@ -168,7 +178,8 @@ pub fn theme_name(seed: u64) -> &'static str {
         1 => "driver-panic",
         2 => "steal-storm",
         3 => "live-registration",
-        _ => "cache-pressure",
+        4 => "cache-pressure",
+        _ => "launch-flip",
     }
 }
 
@@ -209,6 +220,7 @@ impl Schedule {
                     None
                 },
                 cpu_fallback: rng.below(2) == 0,
+                persistent: theme == 5,
             })
             .collect();
 
@@ -278,6 +290,19 @@ impl Schedule {
                     Injection::RejectedSubmit,
                 ));
             }
+            5 => {
+                // Two flips so the forced mode alternates Persistent ->
+                // PerBatch while rings may still hold descriptors; a tiny
+                // ring makes backpressure fallback actually fire.
+                for _ in 0..2 {
+                    let queue_cap = 1 + rng.below(4);
+                    injections.push(anchor(
+                        &mut rng,
+                        &jobs,
+                        Injection::LaunchModeFlip { queue_cap },
+                    ));
+                }
+            }
             _ => {
                 if devices == 2 && rng.below(2) == 0 {
                     injections.push(anchor(&mut rng, &jobs, Injection::StealStorm));
@@ -313,9 +338,10 @@ impl Schedule {
         )];
         for (f, fam) in self.families.iter().enumerate() {
             out.push(format!(
-                "family {f} {}: rows={} reuse={} static={:?} cpu_fallback={}",
+                "family {f} {}: rows={} reuse={} static={:?} cpu_fallback={} \
+                 persistent={}",
                 fam.name, fam.rows, fam.reuse, fam.static_period,
-                fam.cpu_fallback
+                fam.cpu_fallback, fam.persistent
             ));
         }
         for (j, job) in self.jobs.iter().enumerate() {
@@ -380,7 +406,47 @@ mod tests {
                 assert_eq!(j.fault, Fault::None, "seed {seed}");
             }
         }
-        assert!(checked >= 6, "corpus sweep missed the theme: {checked}");
+        // seeds = 4 mod THEMES within 0..30: {4, 10, 16, 22, 28}
+        assert!(checked >= 5, "corpus sweep missed the theme: {checked}");
+    }
+
+    #[test]
+    fn launch_flip_schedules_pin_persistent_and_flip_twice() {
+        let mut checked = 0;
+        for seed in 0..30u64 {
+            let s = Schedule::from_seed(seed);
+            let flips: Vec<_> = s
+                .injections
+                .iter()
+                .filter(|a| {
+                    matches!(a.inj, Injection::LaunchModeFlip { .. })
+                })
+                .collect();
+            if seed % THEMES as u64 != 5 {
+                assert!(flips.is_empty(), "seed {seed}: flip off-theme");
+                assert!(
+                    s.families.iter().all(|f| !f.persistent),
+                    "seed {seed}"
+                );
+                continue;
+            }
+            checked += 1;
+            assert!(
+                s.families.iter().all(|f| f.persistent),
+                "seed {seed}: launch-flip starts from a persistent pin"
+            );
+            assert_eq!(flips.len(), 2, "seed {seed}: two flips alternate");
+            for a in &flips {
+                let Injection::LaunchModeFlip { queue_cap } = a.inj else {
+                    unreachable!()
+                };
+                assert!(
+                    (1..=4).contains(&queue_cap),
+                    "seed {seed}: tiny ring caps only"
+                );
+            }
+        }
+        assert!(checked >= 4, "corpus sweep missed the theme: {checked}");
     }
 
     #[test]

@@ -488,6 +488,18 @@ impl Runtime {
             .map_err(|_| anyhow::anyhow!("coordinator is down"))
     }
 
+    /// Jitter every persistent work ring to `queue_cap` slots and flip
+    /// the forced launch mode (alternating Persistent / PerBatch across
+    /// injections) — the launch-flip chaos theme's entry point.
+    pub fn chaos_launch_mode_flip(&self, queue_cap: usize) -> Result<()> {
+        use super::scheduler::ChaosCmd;
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::Chaos(ChaosCmd::LaunchModeFlip { queue_cap }))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+    }
+
     /// Job ids (key high halves) with any buffer still resident on any
     /// device. Queued behind every teardown already sent, so auditing
     /// after a job sealed cannot race its `JobEnded` cleanup.

@@ -65,6 +65,12 @@ pub struct KindStats {
     /// invariant-checked in `chaos::invariants`.
     pub prefetch_hits: u64,
     pub prefetch_wasted: u64,
+    /// Launch-mode split of this family's launches: batches drained by a
+    /// resident persistent loop vs. plain host launches. Partition
+    /// `persistent_batches + per_batch_launches == launches` —
+    /// invariant-checked in `chaos::invariants`.
+    pub persistent_batches: u64,
+    pub per_batch_launches: u64,
 }
 
 impl KindStats {
@@ -224,6 +230,12 @@ pub struct PoolReport {
     pub prefetch_hits: u64,
     pub prefetch_wasted: u64,
     pub prefetch_bytes: u64,
+    /// Launch-mode split (ISSUE 8): combined batches drained by a
+    /// device-resident persistent loop vs. plain per-batch host launches,
+    /// by *effective* mode (backend demotions count as per-batch). The
+    /// two always partition `launches`.
+    pub persistent_batches: u64,
+    pub per_batch_launches: u64,
     /// Flush counts by reason.
     pub flush_full: u64,
     pub flush_idle: u64,
@@ -384,6 +396,13 @@ impl std::fmt::Display for PoolReport {
             self.table_misses,
             self.hit_rate() * 100.0
         )?;
+        if self.persistent_batches > 0 {
+            writeln!(
+                f,
+                "persistent          {} batches via resident loops / {} per-batch launches",
+                self.persistent_batches, self.per_batch_launches
+            )?;
+        }
         if self.prefetch_hits + self.prefetch_wasted > 0 {
             writeln!(
                 f,
@@ -569,6 +588,25 @@ mod tests {
         let s = format!("{r}");
         assert!(s.contains("prefetch            5 hits / 2 wasted"), "{s}");
         assert!(s.contains("prefetch 5 hit / 2 wasted"), "{s}");
+    }
+
+    #[test]
+    fn persistent_line_renders_only_when_counted() {
+        let quiet = Report { per_batch_launches: 7, ..Report::default() };
+        assert!(!format!("{quiet}").contains("persistent"));
+        let r = Report {
+            launches: 10,
+            persistent_batches: 8,
+            per_batch_launches: 2,
+            ..Report::default()
+        };
+        let s = format!("{r}");
+        assert!(
+            s.contains(
+                "persistent          8 batches via resident loops / 2 per-batch launches"
+            ),
+            "{s}"
+        );
     }
 
     #[test]

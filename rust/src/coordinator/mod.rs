@@ -52,13 +52,15 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::runtime::device_sim::CoalescingClass;
+use crate::runtime::device_sim::{CoalescingClass, GpuSpec};
 use crate::runtime::executor::{Completion, LaunchSpec, Payload};
-use crate::runtime::pool::DevicePool;
+use crate::runtime::pool::{DevicePool, InFlightGuard};
+use crate::runtime::workqueue::{WorkQueue, DEFAULT_QUEUE_DEPTH};
 
 pub use chare::{Chare, ChareId, Ctx, JobId, Msg, WorkDraft, METHOD_RESULT};
 pub use chare_table::ChareTable;
@@ -75,6 +77,7 @@ pub use registry::{
     SharedRegistry,
 };
 pub use crate::runtime::memory::ResidencyPolicy;
+pub use crate::runtime::workqueue::LaunchMode;
 pub use residency::ReuseScorer;
 pub use scheduler::{DeviceRouter, JobState, JobStatus, RoutePolicy, Shared};
 pub use work_request::{Tile, WorkRequest, WrResult};
@@ -90,6 +93,22 @@ pub enum DataPolicy {
     Reuse,
     /// Reuse + slot-sorted insertion for local coalescing (Fig 1d).
     ReuseSorted,
+}
+
+/// Pool-wide launch-mode policy (ISSUE 8) for families whose descriptor
+/// does not pin a [`LaunchMode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaunchModePolicy {
+    /// Every combined batch pays a host kernel launch (the seed path).
+    PerBatch,
+    /// Every family runs a resident megakernel loop fed by a work queue.
+    Persistent,
+    /// Watch each family's flush-reason stream and switch it between
+    /// modes at the modeled break-even idle-flush share (the paper's
+    /// adaptive-over-static thesis applied to launch strategy). Static
+    /// modes above are the ablation baselines.
+    #[default]
+    Adaptive,
 }
 
 /// Full runtime configuration.
@@ -142,6 +161,13 @@ pub struct Config {
     pub idle_drain: f64,
     /// Coordinator tick (recv timeout driving combiner polls).
     pub tick: Duration,
+    /// How combined batches reach the device (ISSUE 8) for families
+    /// without a [`KernelDescriptor::launch_mode`] pin. The default
+    /// `Adaptive` learner starts every family per-batch (the seed
+    /// behavior) and promotes it to a persistent loop only once its
+    /// flush stream proves dense enough to win; outputs are
+    /// bit-identical in every mode — only the modeled cost moves.
+    pub launch_mode: LaunchModePolicy,
 }
 
 impl Default for Config {
@@ -163,6 +189,7 @@ impl Default for Config {
             artifacts: crate::runtime::default_artifacts_dir(),
             idle_drain: 2e-3,
             tick: Duration::from_micros(200),
+            launch_mode: LaunchModePolicy::Adaptive,
         }
     }
 }
@@ -213,6 +240,35 @@ const PREFETCH_MAX: usize = 8;
 /// only buffers predicted to be demanded this soon are worth a slot.
 const PREFETCH_HORIZON: u64 = 256;
 
+/// EWMA step for the adaptive launch-mode learner's idle-flush share.
+const MODE_EWMA_ALPHA: f64 = 0.25;
+/// Enter persistent mode when a family's idle-flush share falls below
+/// this. The modeled break-even share is
+/// `(launch_overhead - queue_poll_cost) / poll_idle_cost` (~0.38 on the
+/// K20 spec: below it the per-batch savings outrun the idle-poll burn);
+/// entering under 0.30 and leaving above 0.50 brackets it with
+/// hysteresis so a family cannot flap on one flush.
+const MODE_ENTER_PERSISTENT: f64 = 0.30;
+/// Leave persistent mode when the idle-flush share climbs above this.
+const MODE_EXIT_PERSISTENT: f64 = 0.50;
+
+/// Adaptive launch-mode learner state for one kernel family: an EWMA of
+/// how often the family's flushes were *time-sparse* (`IdleTimeout` /
+/// `Forced` — the resident loop would have idled before them), and the
+/// mode the family currently runs in.
+struct LaunchModeState {
+    /// EWMA of sparse flushes (1.0 = every flush idles first). Starts
+    /// pessimistic: a family is per-batch until proven dense.
+    idle_share: f64,
+    mode: LaunchMode,
+}
+
+impl Default for LaunchModeState {
+    fn default() -> LaunchModeState {
+        LaunchModeState { idle_share: 1.0, mode: LaunchMode::PerBatch }
+    }
+}
+
 /// One work request recorded inside an in-flight launch.
 struct LaunchItem {
     wr_id: u64,
@@ -238,6 +294,17 @@ struct LaunchInfo {
     kind: KernelKindId,
     /// Output floats per request slot (from the family's registration).
     out_slot: usize,
+    /// Mode the coordinator resolved for the launch. `Persistent` means
+    /// the batch's descriptor was queued on the family's work ring (the
+    /// engine may still demote it if the backend cannot keep a resident
+    /// loop — `Completion::mode` is the effective answer).
+    mode: LaunchMode,
+    /// Modeled device time the resident loop burned spin-polling before
+    /// this batch arrived (time-sparse flushes only; 0 per-batch).
+    idle_penalty: f64,
+    /// Holds the device's in-flight gauge up until the launch completes
+    /// (dropped with this struct on the completion path).
+    _in_flight: InFlightGuard,
 }
 
 /// Accumulator folding a hybrid batch's CPU-pool chunk *timings* back
@@ -297,6 +364,18 @@ pub(crate) struct Coord {
     cpu_batches: HashMap<u64, CpuBatchAcc>,
     next_wr: u64,
     next_launch: u64,
+    /// Persistent-kernel descriptor rings, keyed by `(device, kind)`,
+    /// created lazily on a family's first persistent launch on a device.
+    queues: HashMap<(usize, usize), Arc<WorkQueue>>,
+    /// Chaos override for ring capacity (applied to existing rings and
+    /// used for rings created afterwards). `None` = `DEFAULT_QUEUE_DEPTH`.
+    queue_cap_override: Option<usize>,
+    /// Chaos-forced launch mode: when set, every resolution uses it,
+    /// overriding descriptor pins and the configured policy. Written only
+    /// by the chaos injection path; `None` in production runs.
+    chaos_forced_mode: Option<LaunchMode>,
+    /// Adaptive launch-mode learner, one row per registered kind.
+    mode_states: Vec<LaunchModeState>,
 }
 
 impl Coord {
@@ -340,6 +419,10 @@ impl Coord {
             cpu_batches: HashMap::new(),
             next_wr: 0,
             next_launch: 0,
+            queues: HashMap::new(),
+            queue_cap_override: None,
+            chaos_forced_mode: None,
+            mode_states: Vec::new(),
             cfg,
             router,
         })
@@ -382,6 +465,7 @@ impl Coord {
             }
             self.report.kind_mut(k).name = desc.kernel.name.to_string();
             kernels.push(desc.kernel.clone());
+            self.mode_states.push(LaunchModeState::default());
             self.kinds.push(desc);
         }
         self.hybrid.ensure_kinds(self.kinds.len());
@@ -661,6 +745,8 @@ impl Coord {
     /// contiguous payload form.
     fn dispatch(&mut self, batch: Batch, kind: KernelKindId, device: usize) {
         self.report.record_flush(batch.reason, batch.items.len());
+        let reason = batch.reason;
+        self.note_flush(kind, reason);
         if batch.items.is_empty() {
             return;
         }
@@ -841,8 +927,53 @@ impl Coord {
         };
         let transfer: u64 = item_bytes.iter().sum();
         self.submit_launch(
-            gpu, item_bytes, kind, payload, transfer, pattern, device,
+            gpu, item_bytes, kind, payload, transfer, pattern, device, reason,
         );
+    }
+
+    /// Feed the adaptive launch-mode learner one flush observation:
+    /// `IdleTimeout`/`Forced` flushes are the deterministic shadow of a
+    /// sparse arrival stream (the resident loop would have spin-polled
+    /// before them), everything else arrived dense. The EWMA'd sparse
+    /// share drives a hysteresis switch around the modeled break-even.
+    fn note_flush(&mut self, kind: KernelKindId, reason: FlushReason) {
+        let st = &mut self.mode_states[kind.0];
+        let sparse = matches!(
+            reason,
+            FlushReason::IdleTimeout | FlushReason::Forced
+        );
+        let sample = if sparse { 1.0 } else { 0.0 };
+        st.idle_share += MODE_EWMA_ALPHA * (sample - st.idle_share);
+        match st.mode {
+            LaunchMode::PerBatch
+                if st.idle_share < MODE_ENTER_PERSISTENT =>
+            {
+                st.mode = LaunchMode::Persistent;
+            }
+            LaunchMode::Persistent
+                if st.idle_share > MODE_EXIT_PERSISTENT =>
+            {
+                st.mode = LaunchMode::PerBatch;
+            }
+            _ => {}
+        }
+    }
+
+    /// Resolve the launch mode for one batch of `kind`, with priority:
+    /// chaos-forced mode > descriptor pin > configured policy (where
+    /// `Adaptive` reads the per-kind learner).
+    fn requested_mode(&self, kind: KernelKindId) -> LaunchMode {
+        if let Some(m) = self.chaos_forced_mode {
+            return m;
+        }
+        if let Some(m) = self.kinds[kind.0].launch_mode {
+            return m;
+        }
+        match self.cfg.launch_mode {
+            LaunchModePolicy::PerBatch => LaunchMode::PerBatch,
+            LaunchModePolicy::Persistent => LaunchMode::Persistent,
+            LaunchModePolicy::Adaptive => self.mode_states[kind.0].mode,
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -855,9 +986,43 @@ impl Coord {
         transfer_bytes: u64,
         pattern: CoalescingClass,
         device: usize,
+        reason: FlushReason,
     ) {
         let id = self.next_launch;
         self.next_launch += 1;
+        // Persistent launches enqueue a descriptor on the family's ring;
+        // a full ring is backpressure, not an error — the batch falls
+        // back to a plain host launch and the ring counts the rejection.
+        let mut mode = self.requested_mode(kind);
+        let mut idle_penalty = 0.0;
+        if mode == LaunchMode::Persistent {
+            let cap =
+                self.queue_cap_override.unwrap_or(DEFAULT_QUEUE_DEPTH);
+            let queue = self
+                .queues
+                .entry((device, kind.0))
+                .or_insert_with(|| Arc::new(WorkQueue::new(cap)));
+            match queue.push(id) {
+                Ok(_) => {
+                    // A time-sparse flush means the resident loop idled
+                    // before this batch: charge the modeled spin-poll burn.
+                    if matches!(
+                        reason,
+                        FlushReason::IdleTimeout | FlushReason::Forced
+                    ) {
+                        idle_penalty = GpuSpec::kepler_k20().poll_idle_cost;
+                    }
+                }
+                Err(()) => mode = LaunchMode::PerBatch,
+            }
+        }
+        let guard = self
+            .gpu
+            .submit(
+                device,
+                LaunchSpec { id, payload, transfer_bytes, pattern, mode },
+            )
+            .expect("gpu service is down");
         let info = LaunchInfo {
             items: items
                 .iter()
@@ -877,11 +1042,11 @@ impl Coord {
             device,
             kind,
             out_slot: self.kinds[kind.0].kernel.out_slot_len(),
+            mode,
+            idle_penalty,
+            _in_flight: guard,
         };
         self.launches.insert(id, info);
-        self.gpu
-            .submit(device, LaunchSpec { id, payload, transfer_bytes, pattern })
-            .expect("gpu service is down");
         self.prefetch_ahead(device, kind);
     }
 
@@ -940,12 +1105,34 @@ impl Coord {
         let device = info.device;
         let kind = info.kind;
         debug_assert_eq!(c.device, device, "completion from wrong device");
-        self.gpu.note_completion(device);
+        // `info._in_flight` drops at the end of this fn, releasing the
+        // device's in-flight gauge.
+
+        // Count by the *effective* mode: the engine may have demoted a
+        // queued persistent batch (backend without a resident loop), and
+        // the partition `persistent + per_batch == launches` is over what
+        // was actually charged.
+        let idle_penalty = if c.mode == LaunchMode::Persistent {
+            self.report.persistent_batches += 1;
+            self.report.kind_mut(kind.0).persistent_batches += 1;
+            info.idle_penalty
+        } else {
+            self.report.per_batch_launches += 1;
+            self.report.kind_mut(kind.0).per_batch_launches += 1;
+            0.0
+        };
+        if info.mode == LaunchMode::Persistent {
+            // Retire the ring descriptor even when the engine demoted the
+            // batch — the queue tracked the submission either way.
+            if let Some(q) = self.queues.get(&(device, kind.0)) {
+                q.complete(c.id);
+            }
+        }
 
         self.report.launches += 1;
         self.report.gpu_requests += info.items.len() as u64;
         self.report.kernel_wall += c.wall;
-        self.report.kernel_modeled += c.modeled.kernel;
+        self.report.kernel_modeled += c.modeled.kernel + idle_penalty;
         self.report.transfer_modeled += c.modeled.transfer;
         self.report.transfer_bytes += info.transfer_bytes;
         self.router.shared.timeline.record(
@@ -1019,7 +1206,8 @@ impl Coord {
             dev.requests += info.items.len() as u64;
             dev.items += gpu_items;
             dev.busy_wall += c.wall;
-            dev.busy_modeled += c.modeled.kernel + c.modeled.transfer;
+            dev.busy_modeled +=
+                c.modeled.kernel + c.modeled.transfer + idle_penalty;
         }
         // Per-job accounting: live metrics, learned per-(job, kind)
         // heaviness, the combiners' fair-share weights, depths, and the
@@ -1187,6 +1375,22 @@ impl Coord {
                     }
                 }
             }
+            ChaosCmd::LaunchModeFlip { queue_cap } => {
+                // Shrink (or grow) every persistent ring mid-flight and
+                // flip the forced mode: first injection forces Persistent,
+                // the next forces PerBatch (quiescing rings that still
+                // hold descriptors), and so on. Exercises backpressure
+                // fallback and the drain-under-mode-change path.
+                self.queue_cap_override = Some(queue_cap);
+                for q in self.queues.values() {
+                    q.set_capacity(queue_cap);
+                }
+                self.chaos_forced_mode = Some(match self.chaos_forced_mode {
+                    Some(m) => m.flipped(),
+                    None => LaunchMode::Persistent,
+                });
+                self.poll_combiners();
+            }
             ChaosCmd::AuditResidency(reply) => {
                 let mut jobs: Vec<u64> = Vec::new();
                 for st in &self.devices {
@@ -1319,6 +1523,16 @@ impl Coord {
                 Ok(_) => {}
                 Err(_) => break,
             }
+        }
+        // Quiesce and close every persistent ring: all launches are
+        // retired above, so the rings must already be empty — `quiesce`
+        // is the proof (the chaos watchdog leans on this terminating).
+        for q in self.queues.values() {
+            q.close();
+            debug_assert!(
+                q.quiesce(Duration::from_secs(5)),
+                "persistent ring drained at shutdown"
+            );
         }
         self.sealed_report()
     }

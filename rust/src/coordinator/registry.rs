@@ -21,6 +21,7 @@ use std::sync::{Arc, RwLock, RwLockReadGuard};
 use anyhow::{bail, Result};
 
 use crate::runtime::kernel::TileKernel;
+use crate::runtime::workqueue::LaunchMode;
 
 use super::combiner::CombinePolicy;
 use super::work_request::Tile;
@@ -76,6 +77,11 @@ pub struct KernelDescriptor {
     /// The family's `slot_fn` also serves as a CPU kernel, making it
     /// eligible for dynamic hybrid CPU/GPU scheduling (section 3.3).
     pub cpu_fallback: bool,
+    /// Per-family launch-mode pin (ISSUE 8): `Some(Persistent)` keeps a
+    /// resident megakernel loop fed by a work queue, `Some(PerBatch)`
+    /// forces a host launch per batch, `None` defers to
+    /// `Config::launch_mode` (including the adaptive break-even learner).
+    pub launch_mode: Option<LaunchMode>,
 }
 
 impl KernelDescriptor {
@@ -87,6 +93,7 @@ impl KernelDescriptor {
             combine: None,
             sort_by_slot: false,
             cpu_fallback: false,
+            launch_mode: None,
         }
     }
 
@@ -270,6 +277,7 @@ fn descriptors_compatible(a: &KernelDescriptor, b: &KernelDescriptor) -> bool {
         && a.combine == b.combine
         && a.sort_by_slot == b.sort_by_slot
         && a.cpu_fallback == b.cpu_fallback
+        && a.launch_mode == b.launch_mode
 }
 
 /// The append-only kernel registry a persistent
@@ -373,6 +381,7 @@ pub fn force_descriptor(eps2: f32) -> KernelDescriptor {
         combine: None,
         sort_by_slot: true,
         cpu_fallback: false,
+        launch_mode: None,
     }
 }
 
@@ -384,6 +393,7 @@ pub fn ewald_descriptor(ktab: Vec<f32>) -> KernelDescriptor {
         combine: None,
         sort_by_slot: false,
         cpu_fallback: false,
+        launch_mode: None,
     }
 }
 
@@ -395,6 +405,7 @@ pub fn md_descriptor(params: [f32; 3]) -> KernelDescriptor {
         combine: None,
         sort_by_slot: false,
         cpu_fallback: true,
+        launch_mode: None,
     }
 }
 
@@ -510,6 +521,17 @@ mod tests {
         shared.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
         let mut d = md_descriptor([1.0, 0.04, 1.0]);
         d.cpu_fallback = false; // same kernel, different scheduling policy
+        assert!(shared.register(d).is_err());
+    }
+
+    #[test]
+    fn shared_registry_launch_mode_divergence_rejected() {
+        // combining a per-batch and a persistent registration of the
+        // same family into one launch would charge the wrong cost model
+        let shared = SharedRegistry::new();
+        shared.register(md_descriptor([1.0, 0.04, 1.0])).unwrap();
+        let mut d = md_descriptor([1.0, 0.04, 1.0]);
+        d.launch_mode = Some(LaunchMode::Persistent);
         assert!(shared.register(d).is_err());
     }
 

@@ -103,6 +103,12 @@ pub(crate) enum ChaosCmd {
     /// after a job's `JobEnded`, the reply cannot race its teardown
     /// (one FIFO coordinator queue).
     AuditResidency(Sender<Vec<u64>>),
+    /// Jitter every persistent work ring down (or up) to `queue_cap`
+    /// slots and flip the forced launch mode (first injection forces
+    /// `Persistent`, the next `PerBatch`, alternating) — exercises
+    /// backpressure fallback, quiesce-while-nonempty, and the
+    /// mode-partition accounting under mid-job mode changes.
+    LaunchModeFlip { queue_cap: usize },
 }
 
 /// Chare -> device routing policy for the sharded GPU pool.

@@ -12,24 +12,30 @@
 //!   --devices N --route affinity|rr (default 1 / affinity)
 //!   --residency lru|reuse           (default reuse: lookahead eviction
 //!                                   + ahead-of-flush prefetch)
+//!   --launch-mode per-batch|persistent|adaptive  (default adaptive:
+//!                                   per-family break-even learner)
 //!   --mode gcharm|cpu|handtuned     (default gcharm)
 //! gcharm md [opts]                  2D molecular dynamics run
 //!   --particles N --steps N --grid G --pes N
 //!   --split static|adaptive         (default adaptive)
 //!   --devices N --route affinity|rr (default 1 / affinity)
 //!   --residency lru|reuse           (default reuse)
+//!   --launch-mode per-batch|persistent|adaptive  (default adaptive)
 //!   --mode gcharm|cpu1              (default gcharm)
 //! gcharm spmv [opts]                sparse neighbor-update run (the
 //!   --rows N --iters N --nnz N      registry-API demo workload)
 //!   --pes N --devices N --split static|adaptive
 //!   --residency lru|reuse           (default reuse)
+//!   --launch-mode per-batch|persistent|adaptive  (default adaptive)
 //! gcharm serve [opts]               one persistent runtime serving a
 //!   --pes N --devices N             mixed nbody+md+2x-spmv workload
 //!   --iters N --rows N --particles N  trace concurrently; asserts that
 //!   --residency lru|reuse           cross-job combining fired
+//!   --launch-mode per-batch|persistent|adaptive  (default adaptive)
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
 //! gcharm chaos [--seed N] [--seeds A..B]   deterministic fault-injection
-//!                                   run(s); needs `--features chaos`.
+//!                                   run(s) (default corpus 0..12);
+//!                                   needs `--features chaos`.
 //!                                   Prints the replay-identical event
 //!                                   trace; exits nonzero on violations.
 //! ```
@@ -45,8 +51,8 @@ use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench;
 use gcharm::coordinator::{
-    CombinePolicy, Config, DataPolicy, ResidencyPolicy, RoutePolicy, Runtime,
-    SplitPolicy,
+    CombinePolicy, Config, DataPolicy, LaunchModePolicy, ResidencyPolicy,
+    RoutePolicy, Runtime, SplitPolicy,
 };
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -121,6 +127,20 @@ fn residency_policy(
     }
 }
 
+/// `--launch-mode per-batch|persistent|adaptive` flag (absent = the
+/// runtime default, the adaptive break-even learner).
+fn launch_mode_policy(
+    flags: &HashMap<String, String>,
+) -> Result<LaunchModePolicy> {
+    match flags.get("launch-mode").map(|s| s.as_str()) {
+        None => Ok(LaunchModePolicy::default()),
+        Some("per-batch" | "perbatch") => Ok(LaunchModePolicy::PerBatch),
+        Some("persistent") => Ok(LaunchModePolicy::Persistent),
+        Some("adaptive") => Ok(LaunchModePolicy::Adaptive),
+        Some(other) => bail!("unknown launch mode {other}"),
+    }
+}
+
 fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
     let dataset = match flags.get("dataset").map(|s| s.as_str()) {
         None | Some("small") => DatasetSpec::small(),
@@ -147,6 +167,7 @@ fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
         residency: residency_policy(&flags)?,
+        launch_mode: launch_mode_policy(&flags)?,
         ..Config::default()
     };
 
@@ -191,6 +212,7 @@ fn cmd_md(flags: HashMap<String, String>) -> Result<()> {
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
         residency: residency_policy(&flags)?,
+        launch_mode: launch_mode_policy(&flags)?,
         ..Config::default()
     };
     let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");
@@ -228,6 +250,7 @@ fn cmd_spmv(flags: HashMap<String, String>) -> Result<()> {
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
         residency: residency_policy(&flags)?,
+        launch_mode: launch_mode_policy(&flags)?,
         ..Config::default()
     };
     println!(
@@ -265,6 +288,7 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
             flags.get("route").map(|s| s.as_str()).unwrap_or("affinity"),
         )?,
         residency: residency_policy(&flags)?,
+        launch_mode: launch_mode_policy(&flags)?,
         ..Config::default()
     };
     println!(
@@ -369,7 +393,7 @@ fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
 }
 
 /// Replay chaos schedules by seed: `--seed N` for one, `--seeds A..B`
-/// for a range (default: the regression corpus 0..10). Exits nonzero if
+/// for a range (default: the regression corpus 0..12). Exits nonzero if
 /// any seed violates an invariant, printing its full event trace.
 #[cfg(feature = "chaos")]
 fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
@@ -379,7 +403,7 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
         vec![s.parse()?]
     } else {
         let range =
-            flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..10");
+            flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..12");
         let (a, b) = range
             .split_once("..")
             .ok_or_else(|| anyhow::anyhow!("--seeds wants A..B, got {range}"))?;

@@ -32,6 +32,16 @@ pub struct GpuSpec {
     pub pcie_latency: f64,
     /// Kernel launch overhead, seconds.
     pub launch_overhead: f64,
+    /// Persistent mode (ISSUE 8): cost for the resident loop to dequeue
+    /// one batch descriptor and check the doorbell, seconds. Replaces
+    /// `launch_overhead` per batch once the loop is resident.
+    pub queue_poll_cost: f64,
+    /// Persistent mode: modeled device time burned spin-polling an empty
+    /// ring before the loop parks on the doorbell — charged once per
+    /// *time-sparse* batch (one that arrived after the loop went idle).
+    /// Deliberately larger than `launch_overhead - queue_poll_cost`, so
+    /// sparse traffic honestly loses in persistent mode.
+    pub poll_idle_cost: f64,
     /// Per-SM throughput for the interaction inner loop,
     /// particle-interactions per second at full occupancy.
     pub interactions_per_sm_per_sec: f64,
@@ -53,6 +63,8 @@ impl GpuSpec {
             pcie_bytes_per_sec: 6.0e9,
             pcie_latency: 10.0e-6,
             launch_overhead: 5.0e-6,
+            queue_poll_cost: 0.4e-6,
+            poll_idle_cost: 12.0e-6,
             // ~3.5 TFLOPs peak / ~26 flops per interaction / 13 SMs,
             // derated to a realistic 40% of peak for this kernel class.
             interactions_per_sm_per_sec: 4.1e9,
@@ -250,6 +262,47 @@ impl DeviceModel {
         }
         t
     }
+
+    /// Modeled kernel time for a batch drained by a resident persistent
+    /// loop (ISSUE 8): same wave model as [`kernel_time`], but the batch
+    /// pays `queue_poll_cost` (dequeue + doorbell check) instead of
+    /// `launch_overhead`. The one-time [`residency_cost`] and any
+    /// [`poll_idle_cost`] for sparse arrivals are charged by the caller.
+    ///
+    /// [`kernel_time`]: DeviceModel::kernel_time
+    /// [`residency_cost`]: DeviceModel::residency_cost
+    /// [`poll_idle_cost`]: DeviceModel::poll_idle_cost
+    pub fn kernel_time_persistent(
+        &self,
+        k: &KernelResources,
+        blocks: u64,
+        interactions_per_block: u64,
+        pattern: CoalescingClass,
+    ) -> f64 {
+        let occ = occupancy(&self.spec, k);
+        let wave_size = occ.max_size.max(1) as u64;
+        let waves = blocks.div_ceil(wave_size).max(1);
+        let per_wave = interactions_per_block as f64
+            / (self.spec.interactions_per_sm_per_sec
+                * occ.occupancy.max(1e-3));
+        let mut t = self.spec.queue_poll_cost + waves as f64 * per_wave;
+        t *= pattern.kernel_time_factor();
+        if pattern.extra_index_reads() {
+            t *= 1.08; // index-buffer reads from global memory
+        }
+        t
+    }
+
+    /// One-time cost to make a family's megakernel loop resident on the
+    /// device: a single host launch.
+    pub fn residency_cost(&self) -> f64 {
+        self.spec.launch_overhead
+    }
+
+    /// Idle-poll burn charged per time-sparse persistent batch.
+    pub fn poll_idle_cost(&self) -> f64 {
+        self.spec.poll_idle_cost
+    }
 }
 
 #[cfg(test)]
@@ -348,5 +401,41 @@ mod tests {
         let overhead = m.spec.launch_overhead;
         let ratio = (two - overhead) / (one - overhead);
         assert!((ratio - 2.0).abs() < 1e-6, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn persistent_batch_saves_exactly_the_overhead_delta() {
+        // Contiguous pattern: factor 1.0, no index reads, so the two
+        // variants differ by precisely launch_overhead - queue_poll_cost.
+        let m = DeviceModel::kepler_k20();
+        let k = KernelResources::force_kernel();
+        let per_batch = m.kernel_time(&k, 8, 2048, CoalescingClass::Contiguous);
+        let persistent =
+            m.kernel_time_persistent(&k, 8, 2048, CoalescingClass::Contiguous);
+        let delta = m.spec.launch_overhead - m.spec.queue_poll_cost;
+        assert!(delta > 0.0);
+        assert!(
+            (per_batch - persistent - delta).abs() < 1e-12,
+            "per_batch={per_batch} persistent={persistent}"
+        );
+    }
+
+    #[test]
+    fn persistent_break_even_needs_dense_traffic() {
+        // Residency is a fixed cost and every sparse batch pays the idle
+        // burn: 1 batch loses, a dense run of 16 wins.
+        let m = DeviceModel::kepler_k20();
+        let k = KernelResources::force_kernel();
+        let pb = m.kernel_time(&k, 8, 2048, CoalescingClass::Contiguous);
+        let ps = m.kernel_time_persistent(&k, 8, 2048, CoalescingClass::Contiguous);
+
+        let sparse_persistent = m.residency_cost() + ps + m.poll_idle_cost();
+        assert!(sparse_persistent > pb, "one sparse batch must lose");
+
+        let n = 16.0;
+        let dense_persistent = m.residency_cost() + n * ps;
+        assert!(dense_persistent < n * pb, "dense traffic must win");
+        // and the idle burn alone outweighs the per-batch saving
+        assert!(m.poll_idle_cost() > m.spec.launch_overhead - m.spec.queue_poll_cost);
     }
 }

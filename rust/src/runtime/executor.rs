@@ -24,6 +24,7 @@
 //!   next queued `LaunchSpec` is staged while the engine is busy with the
 //!   current one.
 
+use std::collections::HashSet;
 use std::path::Path;
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender,
@@ -41,6 +42,7 @@ use super::kernel::TileKernel;
 use super::manifest::Manifest;
 use super::pjrt::{Engine, HostArg};
 use super::staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};
+use super::workqueue::LaunchMode;
 
 /// Staged-chunk queue depth: double buffering, bounded so the stager can
 /// run at most this far ahead of the engine.
@@ -131,6 +133,12 @@ pub struct LaunchSpec {
     pub transfer_bytes: u64,
     /// Access-pattern class for the coalescing cost model.
     pub pattern: CoalescingClass,
+    /// Requested launch mode (ISSUE 8). `Persistent` batches are drained
+    /// by the family's resident loop in the modeled cost (one-time
+    /// residency launch, then queue-poll instead of launch overhead); a
+    /// backend that cannot keep a resident kernel falls back to
+    /// `PerBatch` and the `Completion` reports the effective mode.
+    pub mode: LaunchMode,
 }
 
 /// Result of a combined launch.
@@ -150,6 +158,9 @@ pub struct Completion {
     pub wall: f64,
     /// Modeled-K20 cost (DESIGN.md section 2).
     pub modeled: ModeledCost,
+    /// *Effective* launch mode: the requested `LaunchSpec::mode`, demoted
+    /// to `PerBatch` when the backend cannot keep a resident kernel.
+    pub mode: LaunchMode,
 }
 
 /// Synchronous executor: stage through the arena, select variant, run,
@@ -162,6 +173,9 @@ pub struct Executor {
     model: DeviceModel,
     arena: StagingArena,
     launches: u64,
+    /// Families whose persistent loop is already resident (modeled): the
+    /// one-time residency launch is charged on first persistent use.
+    resident: HashSet<Arc<str>>,
 }
 
 impl Executor {
@@ -179,6 +193,7 @@ impl Executor {
             model: DeviceModel::kepler_k20(),
             arena: StagingArena::new(),
             launches: 0,
+            resident: HashSet::new(),
         })
     }
 
@@ -209,18 +224,39 @@ impl Executor {
             .max_batch(kernel)
             .with_context(|| format!("no variants for kernel {kernel}"))?;
         let out_slot = spec.payload.out_slot_len();
-
-        let (out, wall, modeled_kernel) = if batch <= max_batch {
-            self.run_single(&spec, batch, out_slot)?
+        let mode = if spec.mode == LaunchMode::Persistent
+            && self.engine.persistent_capable()
+        {
+            LaunchMode::Persistent
         } else {
-            self.run_pipelined(&spec, batch, max_batch, out_slot)?
+            LaunchMode::PerBatch
         };
+
+        let (out, wall, mut modeled_kernel) = if batch <= max_batch {
+            self.run_single(&spec, batch, out_slot, mode)?
+        } else {
+            self.run_pipelined(&spec, batch, max_batch, out_slot, mode)?
+        };
+        if mode == LaunchMode::Persistent
+            && self.resident.insert(spec.payload.kernel().name.clone())
+        {
+            // first persistent batch of this family: the loop launches
+            modeled_kernel += self.model.residency_cost();
+        }
 
         let modeled = ModeledCost {
             transfer: self.model.transfer_time(spec.transfer_bytes),
             kernel: modeled_kernel,
         };
-        Ok(Completion { id: spec.id, device: 0, out, batch, wall, modeled })
+        Ok(Completion {
+            id: spec.id,
+            device: 0,
+            out,
+            batch,
+            wall,
+            modeled,
+            mode,
+        })
     }
 
     /// Unsplit launch: stage and execute inline (no pipeline threads).
@@ -229,6 +265,7 @@ impl Executor {
         spec: &LaunchSpec,
         batch: usize,
         out_slot: usize,
+        mode: LaunchMode,
     ) -> Result<(Vec<f32>, f64, f64)> {
         let staged = self.arena.stage_chunk(
             &self.manifest,
@@ -248,12 +285,20 @@ impl Executor {
 
         // Keep the engine's own buffer; just drop the padded tail.
         out.truncate(batch * out_slot);
-        let modeled_kernel = self.model.kernel_time(
-            &spec.payload.resources(),
-            batch as u64,
-            spec.payload.interactions_per_block(),
-            spec.pattern,
-        );
+        let modeled_kernel = match mode {
+            LaunchMode::PerBatch => self.model.kernel_time(
+                &spec.payload.resources(),
+                batch as u64,
+                spec.payload.interactions_per_block(),
+                spec.pattern,
+            ),
+            LaunchMode::Persistent => self.model.kernel_time_persistent(
+                &spec.payload.resources(),
+                batch as u64,
+                spec.payload.interactions_per_block(),
+                spec.pattern,
+            ),
+        };
         Ok((out, wall, modeled_kernel))
     }
 
@@ -271,6 +316,7 @@ impl Executor {
         batch: usize,
         max_batch: usize,
         out_slot: usize,
+        mode: LaunchMode,
     ) -> Result<(Vec<f32>, f64, f64)> {
         let Executor { engine, manifest, model, arena, launches, .. } = self;
         let manifest: &Manifest = manifest;
@@ -333,8 +379,14 @@ impl Executor {
                 drop(args);
                 *launches += 1;
                 out.extend_from_slice(&full[..n * out_slot]);
-                modeled_kernel +=
-                    model.kernel_time(&resources, n as u64, ipb, pattern);
+                modeled_kernel += match mode {
+                    LaunchMode::PerBatch => {
+                        model.kernel_time(&resources, n as u64, ipb, pattern)
+                    }
+                    LaunchMode::Persistent => model.kernel_time_persistent(
+                        &resources, n as u64, ipb, pattern,
+                    ),
+                };
                 let _ = ret_tx.send(staged);
                 start += n;
             }
@@ -346,7 +398,7 @@ impl Executor {
 }
 
 /// Per-launch constants a staged chunk carries to the engine thread.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 struct LaunchMeta {
     id: u64,
     batch: usize,
@@ -355,6 +407,11 @@ struct LaunchMeta {
     resources: KernelResources,
     interactions_per_block: u64,
     out_slot: usize,
+    /// Registered family name (residency is per family, not per variant).
+    family: Arc<str>,
+    /// Requested launch mode; the engine thread demotes it if the
+    /// backend cannot keep a resident kernel.
+    mode: LaunchMode,
 }
 
 impl LaunchMeta {
@@ -367,6 +424,8 @@ impl LaunchMeta {
             resources: spec.payload.resources(),
             interactions_per_block: spec.payload.interactions_per_block(),
             out_slot: spec.payload.out_slot_len(),
+            family: spec.payload.kernel().name.clone(),
+            mode: spec.mode,
         }
     }
 }
@@ -524,7 +583,8 @@ fn stager_loop(
             ) {
                 Ok(staged) => {
                     let last = start + n >= meta.batch;
-                    let msg = ChunkMsg::Chunk { meta, staged, last };
+                    let msg =
+                        ChunkMsg::Chunk { meta: meta.clone(), staged, last };
                     if chunk_tx.send(msg).is_err() {
                         break 'specs;
                     }
@@ -557,11 +617,15 @@ fn engine_loop(
         out: Vec<f32>,
         wall: f64,
         modeled_kernel: f64,
+        /// Effective mode (requested, demoted if the backend can't).
+        mode: LaunchMode,
     }
 
     let mut engine =
         Engine::with_manifest(manifest, artifacts_on_disk, &kernels)?;
     let model = DeviceModel::kepler_k20();
+    // Families whose persistent loop is already resident on this device.
+    let mut resident: HashSet<Arc<str>> = HashSet::new();
     let mut cur: Option<InFlight> = None;
     // Launch whose remaining chunks are dropped after a failed execute.
     let mut skip: Option<u64> = None;
@@ -580,11 +644,27 @@ fn engine_loop(
                 // abandoned by the stager) is over.
                 skip = None;
                 if cur.is_none() {
+                    let mode = if meta.mode == LaunchMode::Persistent
+                        && engine.persistent_capable()
+                    {
+                        LaunchMode::Persistent
+                    } else {
+                        LaunchMode::PerBatch
+                    };
+                    let mut modeled_kernel = 0.0;
+                    if mode == LaunchMode::Persistent
+                        && resident.insert(meta.family.clone())
+                    {
+                        // first persistent batch of this family here:
+                        // charge the one-time residency launch
+                        modeled_kernel += model.residency_cost();
+                    }
                     cur = Some(InFlight {
-                        meta,
                         out: Vec::with_capacity(meta.batch * meta.out_slot),
+                        meta: meta.clone(),
                         wall: 0.0,
-                        modeled_kernel: 0.0,
+                        modeled_kernel,
+                        mode,
                     });
                 }
                 let args: Vec<HostArg> =
@@ -601,12 +681,21 @@ fn engine_loop(
                         debug_assert_eq!(st.meta.id, meta.id);
                         st.wall += dt;
                         st.out.extend_from_slice(&full[..n * meta.out_slot]);
-                        st.modeled_kernel += model.kernel_time(
-                            &meta.resources,
-                            n as u64,
-                            meta.interactions_per_block,
-                            meta.pattern,
-                        );
+                        st.modeled_kernel += match st.mode {
+                            LaunchMode::PerBatch => model.kernel_time(
+                                &meta.resources,
+                                n as u64,
+                                meta.interactions_per_block,
+                                meta.pattern,
+                            ),
+                            LaunchMode::Persistent => model
+                                .kernel_time_persistent(
+                                    &meta.resources,
+                                    n as u64,
+                                    meta.interactions_per_block,
+                                    meta.pattern,
+                                ),
+                        };
                         if last {
                             let st = cur.take().expect("in-flight launch");
                             let completion = Completion {
@@ -620,6 +709,7 @@ fn engine_loop(
                                         .transfer_time(st.meta.transfer_bytes),
                                     kernel: st.modeled_kernel,
                                 },
+                                mode: st.mode,
                             };
                             if done.send(Ok(completion)).is_err() {
                                 break; // coordinator went away
@@ -729,6 +819,7 @@ mod tests {
             },
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         };
         let c = ex.run(spec(1)).unwrap();
         assert_eq!(c.batch, batch);
@@ -756,5 +847,49 @@ mod tests {
         // only (gravity, 128) and (gravity, 44) ever hit the manifest
         assert_eq!(steady.variant_lookups, 2);
         assert!(steady.variant_hits >= 16);
+    }
+
+    #[test]
+    fn persistent_mode_same_bits_cheaper_model() {
+        let mut ex = Executor::new(
+            Path::new("/tmp/gcharm-missing-artifacts"),
+            vec![gravity()],
+        )
+        .unwrap();
+        let batch = 8;
+        let spec = |id, mode| LaunchSpec {
+            id,
+            payload: Payload::Tile {
+                kernel: gravity(),
+                bufs: vec![
+                    vec![0.5; batch * PARTS_PER_BUCKET * PARTICLE_W],
+                    vec![0.5; batch * INTERACTIONS * INTER_W],
+                ],
+                batch,
+            },
+            transfer_bytes: 1024,
+            pattern: CoalescingClass::Contiguous,
+            mode,
+        };
+        let pb = ex.run(spec(1, LaunchMode::PerBatch)).unwrap();
+        assert_eq!(pb.mode, LaunchMode::PerBatch);
+        // first persistent launch pays residency on top of the cheaper
+        // per-batch poll; the outputs are bit-identical either way
+        let p1 = ex.run(spec(2, LaunchMode::Persistent)).unwrap();
+        assert_eq!(p1.mode, LaunchMode::Persistent);
+        assert_eq!(p1.out, pb.out, "mode must never change bits");
+        let p2 = ex.run(spec(3, LaunchMode::Persistent)).unwrap();
+        let m = ex.model();
+        let saved = m.spec.launch_overhead - m.spec.queue_poll_cost;
+        assert!(
+            (pb.modeled.kernel - p2.modeled.kernel - saved).abs() < 1e-12,
+            "steady persistent batch saves the overhead delta"
+        );
+        assert!(
+            (p1.modeled.kernel - p2.modeled.kernel - m.residency_cost())
+                .abs()
+                < 1e-12,
+            "residency charged exactly once"
+        );
     }
 }

@@ -16,6 +16,7 @@ pub mod pjrt;
 pub mod pool;
 pub mod shapes;
 pub mod staging;
+pub mod workqueue;
 
 pub use device_sim::{
     occupancy, CoalescingClass, DeviceModel, GpuSpec, KernelResources,
@@ -26,8 +27,9 @@ pub use kernel::{builtin_kernels, SlotFn, TileArgSpec, TileKernel};
 pub use manifest::Manifest;
 pub use memory::{BufferId, DeviceMemory, Residency, ResidencyPolicy};
 pub use pjrt::{Engine, HostArg};
-pub use pool::DevicePool;
+pub use pool::{DevicePool, InFlightGuard};
 pub use staging::{ArenaArg, ArenaStats, StagedChunk, StagingArena};
+pub use workqueue::{LaunchMode, QueueStats, WorkQueue, DEFAULT_QUEUE_DEPTH};
 
 use std::path::PathBuf;
 

@@ -174,6 +174,19 @@ impl Engine {
         }
     }
 
+    /// Whether this backend can keep a resident megakernel loop alive
+    /// (ISSUE 8). The sim backend models one; PJRT executables launch per
+    /// invocation with no device-resident scheduler, so persistent
+    /// launches on that backend gracefully fall back to per-batch (the
+    /// `Completion` reports the effective mode).
+    pub fn persistent_capable(&self) -> bool {
+        match &self.backend {
+            Backend::Sim => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => false,
+        }
+    }
+
     /// Prepare (PJRT: compile and cache) the named variant.
     pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
         if self.compiled.contains(name) {

@@ -28,11 +28,27 @@ use super::kernel::TileKernel;
 pub struct DevicePool {
     services: Vec<GpuService>,
     /// Launches submitted to each device whose completions have not been
-    /// acknowledged yet (`note_completion`). The reuse-graph prefetch
-    /// path gates on this: ahead-of-flush staging only runs *while a
-    /// combined batch is executing* on the device, so the prefetch
-    /// overlaps compute instead of delaying the next launch.
-    in_flight: Vec<AtomicUsize>,
+    /// acknowledged yet (the [`InFlightGuard`] returned by `submit` is
+    /// still alive). The reuse-graph prefetch path gates on this:
+    /// ahead-of-flush staging only runs *while a combined batch is
+    /// executing* on the device, so the prefetch overlaps compute instead
+    /// of delaying the next launch.
+    in_flight: Vec<Arc<AtomicUsize>>,
+}
+
+/// RAII acknowledgement of one submitted launch: the device's in-flight
+/// gauge is decremented when the guard drops, so error, cancel, and
+/// early-return paths can never leak a count and permanently wedge the
+/// `in_flight == 0` prefetch gate (ISSUE 8 satellite; previously a manual
+/// `note_completion` call the completion path had to remember).
+#[derive(Debug)]
+pub struct InFlightGuard(Arc<AtomicUsize>);
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        let prev = self.0.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "completion without a submission");
+    }
 }
 
 impl DevicePool {
@@ -53,7 +69,8 @@ impl DevicePool {
                 GpuService::spawn_on(artifacts, kernels.clone(), d, done.clone())
             })
             .collect::<Result<Vec<_>>>()?;
-        let in_flight = (0..devices).map(|_| AtomicUsize::new(0)).collect();
+        let in_flight =
+            (0..devices).map(|_| Arc::new(AtomicUsize::new(0))).collect();
         Ok(DevicePool { services, in_flight })
     }
 
@@ -73,8 +90,15 @@ impl DevicePool {
     }
 
     /// Submit a launch to one device; its completion arrives on the pool's
-    /// `done` channel tagged with `device`.
-    pub fn submit(&self, device: usize, spec: LaunchSpec) -> Result<()> {
+    /// `done` channel tagged with `device`. The returned guard keeps the
+    /// device's in-flight gauge raised until dropped — hold it with the
+    /// launch's bookkeeping and the gauge self-corrects on every exit
+    /// path.
+    pub fn submit(
+        &self,
+        device: usize,
+        spec: LaunchSpec,
+    ) -> Result<InFlightGuard> {
         let svc = self.services.get(device).ok_or_else(|| {
             anyhow::anyhow!(
                 "device {device} out of range (pool has {})",
@@ -82,17 +106,9 @@ impl DevicePool {
             )
         })?;
         svc.submit(spec)?;
-        self.in_flight[device].fetch_add(1, Ordering::SeqCst);
-        Ok(())
-    }
-
-    /// Acknowledge one completion from `device` (the coordinator calls
-    /// this as it processes the pool's `done` channel).
-    pub fn note_completion(&self, device: usize) {
-        if let Some(g) = self.in_flight.get(device) {
-            let prev = g.fetch_sub(1, Ordering::SeqCst);
-            debug_assert!(prev > 0, "completion without a submission");
-        }
+        let gauge = self.in_flight[device].clone();
+        gauge.fetch_add(1, Ordering::SeqCst);
+        Ok(InFlightGuard(gauge))
     }
 
     /// Launches submitted to `device` and not yet acknowledged complete.
@@ -109,6 +125,7 @@ mod tests {
     use super::*;
     use crate::runtime::device_sim::CoalescingClass;
     use crate::runtime::executor::Payload;
+    use crate::runtime::workqueue::LaunchMode;
     use crate::runtime::shapes::{
         INTERACTIONS, INTER_W, PARTICLE_W, PARTS_PER_BUCKET,
     };
@@ -132,6 +149,7 @@ mod tests {
             },
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         }
     }
 
@@ -197,17 +215,18 @@ mod tests {
         )
         .unwrap();
         assert_eq!(pool.in_flight(0), 0);
-        pool.submit(0, gravity_spec(0, 1, 0.5)).unwrap();
-        pool.submit(0, gravity_spec(1, 1, 0.5)).unwrap();
+        let g0 = pool.submit(0, gravity_spec(0, 1, 0.5)).unwrap();
+        let g1 = pool.submit(0, gravity_spec(1, 1, 0.5)).unwrap();
         assert_eq!(pool.in_flight(0), 2);
         assert_eq!(pool.in_flight(1), 0);
         for _ in 0..2 {
-            let c = rx
-                .recv_timeout(Duration::from_secs(60))
-                .unwrap()
-                .unwrap();
-            pool.note_completion(c.device);
+            rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
         }
+        // the gauge drops with the guards, not with any manual ack call —
+        // an error path that just unwinds cannot leak a count
+        drop(g0);
+        assert_eq!(pool.in_flight(0), 1);
+        drop(g1);
         assert_eq!(pool.in_flight(0), 0);
         assert_eq!(pool.in_flight(9), 0, "out of range reads as idle");
     }

@@ -1,11 +1,12 @@
 //! Chaos-harness regression corpus (`cargo test --features chaos`).
 //!
 //! Each seed is a complete fault schedule ([`gcharm::chaos::Schedule`]):
-//! the contiguous corpus 0..=9 covers every fault theme — scripted
+//! the contiguous corpus 0..=11 covers every fault theme — scripted
 //! cancels at three quiescence depths, panicking drivers, steal storms,
-//! flush-timing jitter, live registration and rejected submissions, and
+//! flush-timing jitter, live registration and rejected submissions,
 //! cache pressure (a starved chare table fought over by a hot tenant and
-//! an adversarial streaming scan) — twice each. A failing seed replays
+//! an adversarial streaming scan), and launch-mode flips that jitter the
+//! persistent work rings mid-job — twice each. A failing seed replays
 //! bit-identically with
 //! `gcharm chaos --seed N` (the whole schedule, including its event
 //! trace, is a pure function of the seed).
@@ -21,8 +22,8 @@ use gcharm::chaos::{
 };
 use gcharm::coordinator::{Config, JobReport, PoolReport, Runtime};
 
-/// The regression corpus: every theme twice (seed % 5 cycles them).
-const CORPUS: std::ops::Range<u64> = 0..10;
+/// The regression corpus: every theme twice (seed % 6 cycles them).
+const CORPUS: std::ops::Range<u64> = 0..12;
 
 #[test]
 fn seed_corpus_holds_all_invariants() {
@@ -48,6 +49,7 @@ fn corpus_covers_every_fault_theme_twice() {
         "steal-storm",
         "live-registration",
         "cache-pressure",
+        "launch-flip",
     ] {
         assert_eq!(counts.get(theme), Some(&2), "theme {theme} undercovered");
     }
@@ -58,7 +60,7 @@ fn corpus_covers_every_fault_theme_twice() {
 #[test]
 fn same_seed_replays_an_identical_trace() {
     // one seed per theme; two full runs each (fresh runtime every time)
-    for seed in 0..5u64 {
+    for seed in 0..6u64 {
         let a = run_schedule(seed).expect("first run");
         let b = run_schedule(seed).expect("replay");
         assert!(a.ok(), "seed {seed}:\n{a}");
@@ -101,6 +103,7 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
             reuse: false,
             static_period: None,
             cpu_fallback: false,
+            persistent: false,
         };
         let plan = JobPlan {
             name: name.to_string(),
@@ -134,7 +137,48 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
     rt.shutdown();
 }
 
-/// Seeds 4 and 9 are the corpus's cache-pressure schedules: one device,
+/// Seeds 5 and 11 are the corpus's launch-flip schedules: every family
+/// pinned persistent, two mid-job injections that shrink the work rings
+/// to 1-4 slots and alternate the forced mode Persistent -> PerBatch.
+/// Each run must stay exact for every tenant, fire both flips, and seal
+/// a report whose `persistent_batches + per_batch_launches == launches`
+/// partition holds (checked by `accounting_violations` inside the
+/// harness) — with shutdown terminating under the watchdog even when a
+/// ring still holds descriptors at the flip.
+#[test]
+fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
+    for seed in [5u64, 11] {
+        assert_eq!(theme_name(seed), "launch-flip");
+        let s = Schedule::from_seed(seed);
+        assert!(
+            s.families.iter().all(|f| f.persistent),
+            "seed {seed}: theme pins families persistent"
+        );
+        let r = run_schedule(seed).expect("harness ran");
+        assert!(r.ok(), "seed {seed}:\n{r}");
+        let flips = r
+            .trace
+            .iter()
+            .filter(|l| l.contains("inject launch-mode-flip"))
+            .count();
+        assert_eq!(flips, 2, "seed {seed}: both flips must fire:\n{r}");
+        // every tenant is fault-free under this theme, so every series
+        // must verify exactly across the mode changes
+        let exact = r
+            .trace
+            .iter()
+            .filter(|l| l.contains("series-exact"))
+            .count();
+        assert_eq!(
+            exact,
+            s.jobs.len(),
+            "seed {seed}: {exact} exact series for {} tenants:\n{r}",
+            s.jobs.len()
+        );
+    }
+}
+
+/// Seeds 4 and 10 are the corpus's cache-pressure schedules: one device,
 /// one shared reuse family, a chare table of 6-11 slots, job 0 cycling a
 /// hot set that fits, and every co-tenant streaming a scan wider than the
 /// whole table once per round. The run must stay exact for every tenant
@@ -143,7 +187,7 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
 /// the pool's debug assertions, which are live in this profile.
 #[test]
 fn cache_pressure_keeps_every_tenant_exact() {
-    for seed in [4u64, 9] {
+    for seed in [4u64, 10] {
         assert_eq!(theme_name(seed), "cache-pressure");
         let s = Schedule::from_seed(seed);
         let slots = s.table_slots.expect("theme shrinks the table");

@@ -45,6 +45,7 @@ pub fn synth_descriptor(name: &str, rows: usize) -> KernelDescriptor {
         combine: None,
         sort_by_slot: false,
         cpu_fallback: false,
+        launch_mode: None,
     }
 }
 

@@ -21,7 +21,9 @@ use std::time::Duration;
 mod common;
 
 use gcharm::apps::spmv::{self, SpmvConfig};
-use gcharm::coordinator::{ChareId, Config, JobSpec, ResidencyPolicy, Runtime};
+use gcharm::coordinator::{
+    ChareId, Config, JobSpec, LaunchModePolicy, ResidencyPolicy, Runtime,
+};
 use gcharm::runtime::kernel::TileKernel;
 use gcharm::runtime::native::{cpu_ewald, cpu_gravity, cpu_md_interact};
 use gcharm::runtime::shapes::{
@@ -30,7 +32,7 @@ use gcharm::runtime::shapes::{
 };
 use gcharm::runtime::{
     default_artifacts_dir, CoalescingClass, Completion, DevicePool, Executor,
-    GpuService, LaunchSpec, Payload,
+    GpuService, LaunchMode, LaunchSpec, Payload,
 };
 use gcharm::util::Rng;
 
@@ -214,6 +216,7 @@ fn pipelined_service_matches_sync_executor_bitwise() {
                     payload,
                     transfer_bytes: 4096,
                     pattern,
+                    mode: LaunchMode::PerBatch,
                 },
             )
         })
@@ -291,6 +294,7 @@ fn pool_specs() -> Vec<(&'static str, LaunchSpec)> {
                     payload,
                     transfer_bytes: 4096,
                     pattern,
+                    mode: LaunchMode::PerBatch,
                 },
             )
         })
@@ -447,6 +451,7 @@ fn pipelined_service_interleaves_distinct_kernels() {
                 payload,
                 transfer_bytes: 0,
                 pattern: CoalescingClass::Contiguous,
+                mode: LaunchMode::PerBatch,
             }
         })
         .collect();
@@ -618,5 +623,66 @@ fn lru_residency_reproduces_seed_runtime_bitwise() {
             assert_eq!(k.prefetch_hits, 0, "{}", k.name);
             assert_eq!(k.prefetch_wasted, 0, "{}", k.name);
         }
+    }
+}
+
+/// The concurrent two-job run under each static launch-mode policy.
+fn run_concurrent_with_mode(
+    devices: usize,
+    mode: LaunchModePolicy,
+) -> (Vec<u32>, Vec<f64>, gcharm::coordinator::PoolReport) {
+    let cfg = eq_spmv_cfg();
+    let master = Arc::new(Mutex::new(vec![0.0f32; cfg.rows]));
+    let rt = Runtime::new(Config {
+        launch_mode: mode,
+        ..runtime_cfg(devices)
+    })
+    .unwrap();
+    let a = rt
+        .submit_job(spmv::job_spec_with_master(&cfg, "spmv", master.clone()))
+        .unwrap();
+    let b = rt.submit_job(eqsum_spec(3, 300)).unwrap();
+    a.wait().unwrap();
+    let series = b.wait().unwrap().series;
+    let pool = rt.shutdown();
+    let bits = master.lock().unwrap().iter().map(|x| x.to_bits()).collect();
+    (bits, series, pool)
+}
+
+/// Persistent-kernel mode (ISSUE 8) changes only modeled time: the same
+/// f32 arithmetic runs either way, so the spmv iterate and the eqsum
+/// series must be bitwise identical to the per-batch runtime on 1 and 2
+/// devices — while the mode counters prove both paths actually ran their
+/// advertised mode, and the partition covers every launch.
+#[test]
+fn persistent_mode_matches_per_batch_bitwise() {
+    for devices in [1usize, 2] {
+        let (pb_x, pb_series, pb_pool) =
+            run_concurrent_with_mode(devices, LaunchModePolicy::PerBatch);
+        let (ps_x, ps_series, ps_pool) =
+            run_concurrent_with_mode(devices, LaunchModePolicy::Persistent);
+        assert_eq!(
+            pb_x, ps_x,
+            "{devices} device(s): spmv iterate drifted under persistent mode"
+        );
+        assert_eq!(
+            pb_series, ps_series,
+            "{devices} device(s): eqsum series drifted under persistent mode"
+        );
+        // the static modes really ran what they advertise
+        assert_eq!(
+            pb_pool.persistent_batches, 0,
+            "{devices} device(s): per-batch run used a resident loop"
+        );
+        assert_eq!(pb_pool.per_batch_launches, pb_pool.launches);
+        assert!(
+            ps_pool.persistent_batches > 0,
+            "{devices} device(s): persistent run never used its rings"
+        );
+        assert_eq!(
+            ps_pool.persistent_batches + ps_pool.per_batch_launches,
+            ps_pool.launches,
+            "{devices} device(s): launch-mode partition broken"
+        );
     }
 }

@@ -63,6 +63,7 @@ fn synth_descriptor(name: String, rows: usize, variant: usize) -> KernelDescript
         combine: None,
         sort_by_slot: false,
         cpu_fallback: false,
+        launch_mode: None,
     }
 }
 
@@ -206,6 +207,7 @@ fn reuse_hybrid_descriptor(rows: usize) -> KernelDescriptor {
         combine: None,
         sort_by_slot: true,
         cpu_fallback: true,
+        launch_mode: None,
     }
 }
 

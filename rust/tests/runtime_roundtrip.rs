@@ -14,7 +14,8 @@ use gcharm::runtime::shapes::{
     PARTICLE_W, PARTS_PER_BUCKET, PARTS_PER_PATCH,
 };
 use gcharm::runtime::{
-    default_artifacts_dir, CoalescingClass, Executor, LaunchSpec, Payload,
+    default_artifacts_dir, CoalescingClass, Executor, LaunchMode, LaunchSpec,
+    Payload,
 };
 
 const EPS2: f32 = 1e-2;
@@ -73,6 +74,7 @@ fn gravity_kernel_numerics() {
             payload: gravity_payload(3),
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     assert_eq!(done.batch, 3);
@@ -105,6 +107,7 @@ fn gravity_batch_exceeding_ladder_splits() {
             payload: gravity_payload(150),
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     assert_eq!(done.batch, 150);
@@ -147,6 +150,7 @@ fn gather_kernel_matches_contiguous() {
             payload: contiguous,
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     let b = ex
@@ -161,6 +165,7 @@ fn gather_kernel_matches_contiguous() {
             },
             transfer_bytes: 0,
             pattern: CoalescingClass::RandomGather,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     assert_eq!(a.out.len(), b.out.len());
@@ -190,6 +195,7 @@ fn ewald_kernel_numerics() {
             },
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     let fx = done.out[0];
@@ -220,6 +226,7 @@ fn md_kernel_numerics() {
             },
             transfer_bytes: 0,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     let s6 = (0.04f32 / 0.16).powi(3);
@@ -244,6 +251,7 @@ fn modeled_costs_populate() {
             payload: gravity_payload(104),
             transfer_bytes: 104 * 1024,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     assert!(done.modeled.transfer > 0.0);
@@ -275,6 +283,7 @@ fn gpu_service_roundtrip() {
             payload: gravity_payload(2),
             transfer_bytes: 1024,
             pattern: CoalescingClass::Contiguous,
+            mode: LaunchMode::PerBatch,
         })
         .unwrap();
     }
