@@ -174,6 +174,83 @@ pub fn accounting_violations(pool: &PoolReport) -> Vec<String> {
             ));
         }
     }
+
+    // Cross-node attribution (ISSUE 9): every request drained off this
+    // node for remote execution was charged to exactly one job.
+    check(
+        &mut v,
+        "remote_requests",
+        sum(|j| j.remote_requests),
+        pool.remote_requests_out,
+    );
+    v
+}
+
+/// Cross-node conservation over every node's sealed [`PoolReport`].
+///
+/// The steal protocol's books must balance cluster-wide: each shipped
+/// batch resolves as exactly one of {results accepted at home, requeued
+/// at home}, and results for an already-requeued shipment are counted
+/// `stale` at the home — so:
+///
+/// ```text
+/// sum(steals_out) + sum(stale_batches) == sum(steals_in) + sum(requeues)
+/// sum(requests_out) + sum(stale_results)
+///     == sum(requests_in) + sum(requeued_requests)
+/// ```
+///
+/// (a thief counts `steals_in` only at result-ship time, so a batch it
+/// declined, dropped, or executed for a dead home never inflates the
+/// left side). `dropped_bytes` is what the fabric deliberately dropped
+/// (chaos link faults); with `exact` (loopback, graceful exits — the
+/// goodbye-is-last-frame protocol) byte conservation is an equality:
+///
+/// ```text
+/// sum(wire_bytes_out) == sum(wire_bytes_in) + dropped_bytes
+/// ```
+///
+/// Under hard faults (a killed TCP peer) frames die in flight with the
+/// socket, so only `out >= in + dropped` can be demanded.
+pub fn cluster_violations(
+    nodes: &[PoolReport],
+    dropped_bytes: u64,
+    exact: bool,
+) -> Vec<String> {
+    let mut v = Vec::new();
+    let sum = |f: fn(&PoolReport) -> u64| -> u64 { nodes.iter().map(f).sum() };
+
+    let shipped = sum(|p| p.remote_steals_out) + sum(|p| p.remote_stale_batches);
+    let resolved = sum(|p| p.remote_steals_in) + sum(|p| p.remote_requeues);
+    if shipped != resolved {
+        v.push(format!(
+            "steal conservation: steals_out + stale_batches {shipped} != \
+             steals_in + requeues {resolved}"
+        ));
+    }
+    let req_shipped =
+        sum(|p| p.remote_requests_out) + sum(|p| p.remote_stale_results);
+    let req_resolved =
+        sum(|p| p.remote_requests_in) + sum(|p| p.remote_requeued_requests);
+    if req_shipped != req_resolved {
+        v.push(format!(
+            "request conservation: requests_out + stale_results \
+             {req_shipped} != requests_in + requeued_requests {req_resolved}"
+        ));
+    }
+    let out = sum(|p| p.wire_bytes_out);
+    let inn = sum(|p| p.wire_bytes_in);
+    if exact && out != inn + dropped_bytes {
+        v.push(format!(
+            "byte conservation: {out} sent != {inn} received + \
+             {dropped_bytes} dropped"
+        ));
+    }
+    if out < inn + dropped_bytes {
+        v.push(format!(
+            "byte conservation: {inn} received + {dropped_bytes} dropped \
+             exceed {out} sent"
+        ));
+    }
     v
 }
 
@@ -358,5 +435,98 @@ mod tests {
         pool.jobs[0].cross_job_launches = pool.jobs[0].launches + 1;
         let v = accounting_violations(&pool);
         assert!(v.iter().any(|s| s.contains("exceed")), "{v:?}");
+    }
+
+    #[test]
+    fn unattributed_remote_drain_is_detected() {
+        let mut pool = consistent();
+        // a request left the node but no job was charged for it
+        pool.remote_requests_out += 1;
+        let v = accounting_violations(&pool);
+        assert!(v.iter().any(|s| s.contains("remote_requests")), "{v:?}");
+    }
+
+    /// A balanced two-node exchange: node 0 shipped 2 batches (5
+    /// requests); node 1 executed one (3 requests) and declined one,
+    /// which node 0 requeued (2 requests). 100 wire bytes each way.
+    fn cluster() -> Vec<PoolReport> {
+        let home = PoolReport {
+            remote_steals_out: 2,
+            remote_requests_out: 5,
+            remote_requeues: 1,
+            remote_requeued_requests: 2,
+            wire_bytes_out: 100,
+            wire_bytes_in: 80,
+            ..PoolReport::default()
+        };
+        let thief = PoolReport {
+            remote_steals_in: 1,
+            remote_requests_in: 3,
+            wire_bytes_out: 80,
+            wire_bytes_in: 100,
+            ..PoolReport::default()
+        };
+        vec![home, thief]
+    }
+
+    #[test]
+    fn balanced_cluster_is_clean() {
+        assert_eq!(
+            cluster_violations(&cluster(), 0, true),
+            Vec::<String>::new()
+        );
+    }
+
+    #[test]
+    fn stale_results_keep_the_books_balanced() {
+        // the requeued shipment's results straggle home after all:
+        // work ran twice, but stale counters absorb the double-count
+        let mut nodes = cluster();
+        nodes[1].remote_steals_in += 1;
+        nodes[1].remote_requests_in += 2;
+        nodes[0].remote_stale_batches += 1;
+        nodes[0].remote_stale_results += 2;
+        assert_eq!(
+            cluster_violations(&nodes, 0, true),
+            Vec::<String>::new()
+        );
+    }
+
+    #[test]
+    fn lost_shipment_is_detected() {
+        let mut nodes = cluster();
+        // a shipment left home and was neither executed nor requeued
+        nodes[0].remote_steals_out += 1;
+        nodes[0].remote_requests_out += 4;
+        let v = cluster_violations(&nodes, 0, true);
+        assert!(v.iter().any(|s| s.contains("steal conservation")), "{v:?}");
+        assert!(v.iter().any(|s| s.contains("request conservation")), "{v:?}");
+    }
+
+    #[test]
+    fn lost_bytes_are_detected_exactly_and_loosely() {
+        let mut nodes = cluster();
+        nodes[1].wire_bytes_in -= 7; // 7 bytes vanished silently
+        let v = cluster_violations(&nodes, 0, true);
+        assert!(v.iter().any(|s| s.contains("byte conservation")), "{v:?}");
+        // under hard faults (exact = false) silent loss is tolerated...
+        assert!(cluster_violations(&nodes, 0, false).is_empty());
+        // ...but bytes appearing from nowhere never are
+        nodes[1].wire_bytes_in += 20;
+        let v = cluster_violations(&nodes, 0, false);
+        assert!(v.iter().any(|s| s.contains("byte conservation")), "{v:?}");
+    }
+
+    #[test]
+    fn deliberately_dropped_bytes_balance_the_ledger() {
+        let mut nodes = cluster();
+        // the chaos fabric dropped a 12-byte heartbeat on the floor:
+        // charged out, never received, accounted as dropped
+        nodes[0].wire_bytes_out += 12;
+        assert!(!cluster_violations(&nodes, 0, true).is_empty());
+        assert_eq!(
+            cluster_violations(&nodes, 12, true),
+            Vec::<String>::new()
+        );
     }
 }

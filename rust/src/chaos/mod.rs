@@ -4,9 +4,11 @@
 //! ([`schedule::Schedule::from_seed`]), executes it against a real
 //! runtime — scripted job cancels at chosen quiescence depths, panicking
 //! drivers, steal storms, flush-timing jitter, late kernel registration,
-//! rejected submissions racing live traffic, and launch-mode flips that
-//! jitter the persistent work rings mid-job — and checks the
-//! cross-cutting invariants at every step:
+//! rejected submissions racing live traffic, launch-mode flips that
+//! jitter the persistent work rings mid-job, and node faults that run
+//! the job SPMD on a two-node loopback fabric with delayed / reordered
+//! / dropped frames and a graceful mid-run peer departure — and checks
+//! the cross-cutting invariants at every step:
 //!
 //! - each healthy job's reduction series equals its exact integer
 //!   physics (distinct per-job tile fills: a launch that mixed another
@@ -17,7 +19,11 @@
 //! - no sealed job's residency keys stay resident on any device
 //!   ([`Runtime::chaos_resident_jobs`]);
 //! - shutdown terminates, and the sealed pool report passes the
-//!   accounting sums in [`invariants::accounting_violations`].
+//!   accounting sums in [`invariants::accounting_violations`];
+//! - a node-fault run's root reduction series equals the exact degraded
+//!   cluster physics, and the per-node reports balance the cross-node
+//!   steal/request/byte conservation ledger
+//!   ([`invariants::cluster_violations`], exact mode).
 //!
 //! The event trace is a pure function of the seed (schedule lines plus
 //! deterministic outcomes), so `gcharm chaos --seed N` replays a failing
@@ -37,16 +43,20 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{
     Chare, ChareId, CombinePolicy, Config, Ctx, JobCtx, JobHandle, JobSpec,
-    JobStatus, KernelDescriptor, KernelKindId, LaunchMode, Msg, Runtime,
-    Tile, WorkDraft, WrResult, METHOD_RESULT,
+    JobStatus, KernelDescriptor, KernelKindId, LaunchMode, Msg, PoolReport,
+    Runtime, Tile, WorkDraft, WrResult, METHOD_RESULT,
+};
+use crate::net::loopback::LinkFault;
+use crate::net::{
+    Cluster, ClusterHandle, LoopbackFabric, NetConfig, NodeId, Transport,
 };
 use crate::runtime::kernel::{TileArgSpec, TileKernel};
 use crate::runtime::KernelResources;
 
-pub use invariants::accounting_violations;
+pub use invariants::{accounting_violations, cluster_violations};
 pub use schedule::{
-    theme_name, Anchored, CancelKind, FamilySpec, Fault, Injection, JobPlan,
-    Schedule,
+    theme_name, Anchored, CancelKind, ClusterPlan, FamilySpec, Fault,
+    Injection, JobPlan, Schedule,
 };
 
 const METHOD_GO: u32 = 1;
@@ -293,6 +303,11 @@ struct Running {
 pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
     let s = Schedule::from_seed(seed);
     let mut trace = s.describe();
+    if let Some(c) = s.cluster {
+        // Node-fault theme: the schedule's single job runs SPMD on a
+        // faulted loopback fabric instead of one in-process runtime.
+        return run_cluster(seed, &s, c, trace);
+    }
     let mut violations: Vec<String> = Vec::new();
 
     let mut cfg = Config {
@@ -573,6 +588,192 @@ pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
             violations.push("shutdown did not terminate".to_string());
         }
     }
+
+    Ok(ChaosReport { seed, trace, violations })
+}
+
+/// Build one node's `JobSpec` for the node-fault theme: the same
+/// [`FillBurster`] physics as the single-runtime themes, but the driver
+/// folds each round's local reduction through the cluster tree. Only
+/// the root's `reduce` returns totals, so only the root owns a series.
+fn cluster_job_spec(
+    plan: &JobPlan,
+    fam: &FamilySpec,
+    my_rounds: u64,
+    handle: ClusterHandle,
+) -> JobSpec {
+    let mut spec = JobSpec::new(plan.name.clone()).kernel(descriptor(fam));
+    for c in 0..plan.chares {
+        let id = ChareId::new(CHARE_COLL, c as u32);
+        spec = spec.chare(
+            id,
+            c,
+            Box::new(FillBurster {
+                id,
+                rows: fam.rows,
+                count: plan.count,
+                reuse: fam.reuse,
+                nbuf: plan.nbuf,
+                fill: plan.fill,
+                pending: 0,
+                sum: 0.0,
+            }),
+        );
+    }
+    let plan = plan.clone();
+    spec.driver(move |ctx| {
+        let kind = ctx.kinds()[0];
+        let chares = plan.chares as u64;
+        let mut series = Vec::new();
+        for r in 0..my_rounds {
+            for c in 0..plan.chares {
+                ctx.send(
+                    ChareId::new(CHARE_COLL, c as u32),
+                    Msg::new(METHOD_GO, kind),
+                );
+            }
+            let local = ctx.await_reduction(chares)?;
+            ctx.await_quiescence();
+            if let Some((_, total)) = handle.reduce(r as u32, 1, local) {
+                series.push(total);
+            }
+        }
+        Ok(series)
+    })
+}
+
+/// Execute a node-fault schedule: the single planned job runs SPMD on a
+/// loopback fabric whose every directed link carries the plan's
+/// [`LinkFault`] (frames delayed behind later sends, adjacent pairs
+/// swapped, every n-th heartbeat dropped), with node 1 optionally
+/// leaving gracefully after `peer_down_round` rounds.
+///
+/// The root's series stays a pure function of the seed despite the
+/// faults and any steal traffic: per-round contributions are exact
+/// small-integer sums (order-independent, so steal timing cannot shift
+/// them), and links are FIFO with a goodbye that flushes held frames,
+/// so every contribution of a departing peer lands before the goodbye
+/// that degrades the tree. Steal and heartbeat *counters* are
+/// timing-dependent, so the trace never includes them; they are checked
+/// against the conservation ledger instead
+/// ([`invariants::cluster_violations`], exact mode — the fabric counts
+/// every deliberately dropped byte and departures are graceful).
+fn run_cluster(
+    seed: u64,
+    s: &Schedule,
+    c: ClusterPlan,
+    mut trace: Vec<String>,
+) -> Result<ChaosReport> {
+    let mut violations: Vec<String> = Vec::new();
+    let plan = s.jobs[0].clone();
+    let fam = s.families[plan.family].clone();
+    let cfg = Config { pes: s.pes, devices: s.devices, ..Config::default() };
+
+    let fault = LinkFault {
+        delay: c.delay,
+        reorder: c.reorder,
+        drop_nth_heartbeat: c.drop_nth_heartbeat,
+    };
+    let (eps, dropped) = LoopbackFabric::with_faults(c.nodes, fault);
+    let transports: Vec<Arc<dyn Transport>> = eps
+        .into_iter()
+        .map(|t| Arc::new(t) as Arc<dyn Transport>)
+        .collect();
+
+    let rounds = plan.rounds;
+    let down = c.peer_down_round;
+    trace.push(format!(
+        "cluster: run {} SPMD on {} nodes, node1 leaves after {} rounds",
+        plan.name,
+        c.nodes,
+        down.unwrap_or(rounds)
+    ));
+
+    // Watchdog, same contract as shutdown: a hung collective is a
+    // violation, not a hung suite.
+    let make_plan = plan.clone();
+    let make_fam = fam.clone();
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(Cluster::over(
+            transports,
+            cfg,
+            NetConfig::default(),
+            move |node, handle| {
+                let my_rounds = if node == NodeId(0) {
+                    make_plan.rounds
+                } else {
+                    down.unwrap_or(make_plan.rounds)
+                };
+                cluster_job_spec(&make_plan, &make_fam, my_rounds, handle)
+            },
+        ));
+    });
+    let reports = match rx.recv_timeout(EVENT_TIMEOUT) {
+        Ok(Ok(r)) => r,
+        Ok(Err(e)) => {
+            violations.push(format!("cluster run failed: {e}"));
+            trace.push("cluster: failed".to_string());
+            return Ok(ChaosReport { seed, trace, violations });
+        }
+        Err(_) => {
+            violations.push("cluster run did not terminate".to_string());
+            trace.push("cluster: hung".to_string());
+            return Ok(ChaosReport { seed, trace, violations });
+        }
+    };
+
+    // Exact physics: every node's total while node 1 is alive, the
+    // root's own contribution afterwards.
+    let per_round = plan.round_value(&fam);
+    let pdr = down.unwrap_or(rounds);
+    let want: Vec<f64> = (0..rounds)
+        .map(|r| if r < pdr { c.nodes as f64 * per_round } else { per_round })
+        .collect();
+    if reports[0].series == want {
+        trace.push("cluster: root series exact".to_string());
+    } else {
+        violations.push(format!(
+            "root series {:?} != exact cluster physics {want:?} \
+             (degraded-tree determinism broken?)",
+            reports[0].series
+        ));
+        trace.push("cluster: root series mismatch".to_string());
+    }
+    for rep in &reports[1..] {
+        if !rep.series.is_empty() {
+            violations.push(format!(
+                "{} produced {} series entries; only the root owns the \
+                 cluster series",
+                rep.node,
+                rep.series.len()
+            ));
+        }
+    }
+    if reports[0].peer_summaries.len() != c.nodes - 1 {
+        violations.push(format!(
+            "root collected {} peer summaries for {} peers",
+            reports[0].peer_summaries.len(),
+            c.nodes - 1
+        ));
+    }
+
+    // Per-node books first, then the cross-node conservation ledger.
+    for rep in &reports {
+        for v in accounting_violations(&rep.pool) {
+            violations.push(format!("{}: {v}", rep.node));
+        }
+    }
+    let pools: Vec<PoolReport> =
+        reports.iter().map(|r| r.pool.clone()).collect();
+    let acc =
+        cluster_violations(&pools, dropped.load(Ordering::SeqCst), true);
+    trace.push(if acc.is_empty() {
+        "cluster accounting: clean".to_string()
+    } else {
+        format!("cluster accounting: {} violation(s)", acc.len())
+    });
+    violations.extend(acc);
 
     Ok(ChaosReport { seed, trace, violations })
 }

@@ -9,10 +9,10 @@
 //!
 //! Two properties the generator maintains by construction:
 //!
-//! - **Corpus coverage**: `seed % 6` picks the emphasized fault theme
+//! - **Corpus coverage**: `seed % 7` picks the emphasized fault theme
 //!   (cancel / driver panic / steal storm / live registration / cache
-//!   pressure / launch-flip), so any contiguous block of 12 seeds
-//!   exercises every class twice.
+//!   pressure / launch-flip / node-fault), so any contiguous block of
+//!   14 seeds exercises every class twice.
 //! - **Reachable anchors**: every injection and cancel is anchored to a
 //!   `(job, round)` pair with `round <= effective_rounds(job)` — the
 //!   round counter is guaranteed to get there no matter what else the
@@ -153,6 +153,29 @@ pub struct Anchored {
     pub inj: Injection,
 }
 
+/// The node-fault theme's cluster plan: the schedule's single job runs
+/// SPMD on a 2-node loopback cluster whose links misbehave (mirroring
+/// [`crate::net::loopback::LinkFault`]), and the peer may leave early.
+/// The chaos is in the links, not the tenancy — the local job plan
+/// stays fault-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterPlan {
+    /// Cluster size (loopback fabric endpoints).
+    pub nodes: usize,
+    /// Hold every frame behind this many later sends per link.
+    pub delay: usize,
+    /// Swap adjacent frames per link.
+    pub reorder: bool,
+    /// Drop every n-th heartbeat (0 = off); dropped bytes are returned
+    /// by the fabric and balanced in the byte-conservation clause.
+    pub drop_nth_heartbeat: usize,
+    /// `Some(r)`: node 1's driver stops contributing after `r` of the
+    /// job's rounds and leaves gracefully — later rounds total
+    /// root-only, deterministically (contributions are FIFO before the
+    /// goodbye).
+    pub peer_down_round: Option<u64>,
+}
+
 /// Everything one chaos run does, derived purely from the seed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
@@ -166,10 +189,13 @@ pub struct Schedule {
     pub table_slots: Option<usize>,
     /// Fired in order; every anchor is reachable by construction.
     pub injections: Vec<Anchored>,
+    /// `Some`: the node-fault theme's distributed run; `None` keeps the
+    /// run single-process.
+    pub cluster: Option<ClusterPlan>,
 }
 
 /// Fault themes, cycled by `seed % THEMES`.
-pub const THEMES: usize = 6;
+pub const THEMES: usize = 7;
 
 /// Human name of a seed's theme (trace + docs).
 pub fn theme_name(seed: u64) -> &'static str {
@@ -179,7 +205,8 @@ pub fn theme_name(seed: u64) -> &'static str {
         2 => "steal-storm",
         3 => "live-registration",
         4 => "cache-pressure",
-        _ => "launch-flip",
+        5 => "launch-flip",
+        _ => "node-fault",
     }
 }
 
@@ -190,14 +217,19 @@ impl Schedule {
         let theme = (seed % THEMES as u64) as usize;
         // The steal-storm theme needs a sharded pool to have anything to
         // steal between; cache pressure wants one device so the scan and
-        // the hot set fight over the same tiny table.
+        // the hot set fight over the same tiny table; node-fault keeps
+        // each node at one device — the rebalancing under test is
+        // cross-node, not cross-device.
         let devices = match theme {
             2 => 2,
-            4 => 1,
+            4 | 6 => 1,
             _ => 1 + rng.below(2),
         };
         let pes = 1 + rng.below(3);
-        let njobs = 2 + rng.below(2);
+        // Node-fault runs ONE SPMD job across the cluster: the fault
+        // surface is the links and the departing peer, so co-tenant
+        // faults would only blur attribution.
+        let njobs = if theme == 6 { 1 } else { 2 + rng.below(2) };
         // Cache-pressure theme: a chare table far smaller than the scan
         // job's footprint, so residency decisions actually evict.
         let table_slots = (theme == 4).then(|| 6 + rng.below(6));
@@ -309,8 +341,10 @@ impl Schedule {
                 }
             }
         }
-        // Flush-timing jitter rides along on every second schedule.
-        if rng.below(2) == 0 {
+        // Flush-timing jitter rides along on every second schedule —
+        // except node-fault, whose per-node runtimes take no injections
+        // (the links are the fault surface).
+        if theme != 6 && rng.below(2) == 0 {
             let shots = 1 + rng.below(3);
             injections.push(anchor(
                 &mut rng,
@@ -319,7 +353,28 @@ impl Schedule {
             ));
         }
 
-        Schedule { seed, devices, pes, families, jobs, table_slots, injections }
+        let cluster = (theme == 6).then(|| {
+            let rounds = jobs[0].rounds;
+            ClusterPlan {
+                nodes: 2,
+                delay: [0, 1, 2][rng.below(3)],
+                reorder: rng.below(2) == 0,
+                drop_nth_heartbeat: [0, 3][rng.below(2)],
+                peer_down_round: (rng.below(2) == 0)
+                    .then(|| 1 + rng.below(rounds as usize - 1) as u64),
+            }
+        });
+
+        Schedule {
+            seed,
+            devices,
+            pes,
+            families,
+            jobs,
+            table_slots,
+            injections,
+            cluster,
+        }
     }
 
     /// The schedule's own trace header lines (pure; part of the replay-
@@ -356,6 +411,14 @@ impl Schedule {
             out.push(format!(
                 "plan inject {:?} @ job{} round {}",
                 a.inj, a.job, a.round
+            ));
+        }
+        if let Some(c) = &self.cluster {
+            out.push(format!(
+                "plan cluster nodes={} delay={} reorder={} \
+                 drop_nth_heartbeat={} peer_down_round={:?}",
+                c.nodes, c.delay, c.reorder, c.drop_nth_heartbeat,
+                c.peer_down_round
             ));
         }
         out
@@ -406,8 +469,39 @@ mod tests {
                 assert_eq!(j.fault, Fault::None, "seed {seed}");
             }
         }
-        // seeds = 4 mod THEMES within 0..30: {4, 10, 16, 22, 28}
-        assert!(checked >= 5, "corpus sweep missed the theme: {checked}");
+        // seeds = 4 mod THEMES within 0..30: {4, 11, 18, 25}
+        assert!(checked >= 4, "corpus sweep missed the theme: {checked}");
+    }
+
+    #[test]
+    fn node_fault_schedules_run_one_clean_job_on_two_nodes() {
+        let mut checked = 0;
+        for seed in 0..30u64 {
+            let s = Schedule::from_seed(seed);
+            if seed % THEMES as u64 != 6 {
+                assert_eq!(s.cluster, None, "seed {seed}: cluster off-theme");
+                continue;
+            }
+            checked += 1;
+            let c = s.cluster.expect("node-fault plans a cluster");
+            assert_eq!(c.nodes, 2, "seed {seed}");
+            assert_eq!(s.devices, 1, "seed {seed}: one device per node");
+            assert_eq!(s.jobs.len(), 1, "seed {seed}: one SPMD job");
+            assert_eq!(s.jobs[0].fault, Fault::None, "seed {seed}");
+            assert!(
+                s.injections.is_empty(),
+                "seed {seed}: links are the only fault surface"
+            );
+            if let Some(r) = c.peer_down_round {
+                assert!(
+                    r >= 1 && r < s.jobs[0].rounds,
+                    "seed {seed}: peer-down anchor {r} must leave the root \
+                     rounds to finish alone"
+                );
+            }
+        }
+        // seeds = 6 mod THEMES within 0..30: {6, 13, 20, 27}
+        assert!(checked >= 4, "corpus sweep missed the theme: {checked}");
     }
 
     #[test]

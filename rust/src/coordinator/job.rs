@@ -39,8 +39,10 @@ use super::registry::{
     KernelDescriptor, KernelKindId, KernelRegistry, SharedRegistry,
 };
 use super::scheduler::{
-    pe_loop, CoordMsg, JobState, JobStatus, PeMsg, Router, Shared,
+    pe_loop, CoordMsg, JobState, JobStatus, NetAccountDelta, NetShipment,
+    PeMsg, Router, Shared,
 };
+use super::work_request::{WorkRequest, WrResult};
 use super::{Config, Coord};
 
 /// The driver of one job: paces the job through its [`JobCtx`] and
@@ -100,6 +102,15 @@ impl JobSpec {
     {
         self.driver = Some(Box::new(f));
         self
+    }
+
+    /// The kernel-family registrations added so far, in call order. The
+    /// cluster session fingerprints these (family names) into its
+    /// `Hello` frame: the SPMD contract is that every node registers
+    /// the same families in the same order, so kind ids agree across
+    /// the mesh without a name service.
+    pub fn kernel_descs(&self) -> &[KernelDescriptor] {
+        &self.kernels
     }
 }
 
@@ -418,6 +429,15 @@ impl Runtime {
         })
     }
 
+    /// The cluster session's side door into this runtime: job-scoped
+    /// message posting plus the coordinator's cross-node drain /
+    /// finish / requeue / accounting hooks. Every method funnels into
+    /// the same FIFO queues as local traffic, so remote work is
+    /// ordered exactly like a co-tenant's.
+    pub(crate) fn net_endpoint(&self) -> NetEndpoint {
+        NetEndpoint { router: self.core.router.clone() }
+    }
+
     /// Live snapshot of the pool-wide report (counters up to now; the
     /// per-job `jobs` list stays empty until shutdown).
     pub fn pool_snapshot(&self) -> Result<PoolReport> {
@@ -513,6 +533,65 @@ impl Runtime {
             .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
         rx.recv_timeout(Duration::from_secs(30))
             .context("coordinator residency audit timed out")
+    }
+}
+
+/// The cluster session's handle into a [`Runtime`]
+/// ([`Runtime::net_endpoint`]). Wraps the router so the net layer can
+/// deliver remote chare messages and drive the coordinator's
+/// cross-node hooks without owning (or outliving) the runtime — every
+/// method degrades to a no-op/`None` once the runtime is down.
+pub(crate) struct NetEndpoint {
+    router: Router,
+}
+
+impl NetEndpoint {
+    /// Deliver a remote chare message. Returns `false` when the target
+    /// `(job, chare)` is not placed (the job already sealed, or never
+    /// existed here) — a cross-node race, not an error.
+    pub(crate) fn post(&self, job: JobId, to: ChareId, msg: Msg) -> bool {
+        self.router.try_send_msg(job, to, msg)
+    }
+
+    /// Ask the coordinator for one outbound shipment on behalf of a
+    /// thief reporting `peer_depth`. `None`: nothing worth shipping.
+    pub(crate) fn drain(
+        &self,
+        peer_depth: usize,
+        est_item_secs: f64,
+    ) -> Option<NetShipment> {
+        let (tx, rx) = channel();
+        self.router
+            .coord
+            .send(CoordMsg::NetDrain { peer_depth, est_item_secs, reply: tx })
+            .ok()?;
+        rx.recv_timeout(Duration::from_secs(30)).ok().flatten()
+    }
+
+    /// Scatter a returned shipment's results to their owning chares and
+    /// release the holds that kept quiescence up while it was remote.
+    pub(crate) fn finish(&self, results: Vec<(JobId, ChareId, WrResult)>) {
+        self.router.coord.send(CoordMsg::NetFinish { results }).ok();
+    }
+
+    /// Requeue a shipment that could not complete remotely.
+    pub(crate) fn requeue(&self, kind: KernelKindId, reqs: Vec<WorkRequest>) {
+        self.router.coord.send(CoordMsg::NetRequeue { kind, reqs }).ok();
+    }
+
+    /// This node's total pending depth (the number heartbeats
+    /// advertise). `0` once the coordinator is gone.
+    pub(crate) fn depth(&self) -> u64 {
+        let (tx, rx) = channel();
+        if self.router.coord.send(CoordMsg::NetDepth(tx)).is_err() {
+            return 0;
+        }
+        rx.recv_timeout(Duration::from_secs(30)).unwrap_or(0)
+    }
+
+    /// Fold a cluster-session accounting delta into the pool report.
+    pub(crate) fn account(&self, delta: NetAccountDelta) {
+        self.router.coord.send(CoordMsg::NetAccount(delta)).ok();
     }
 }
 

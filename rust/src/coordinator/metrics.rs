@@ -130,6 +130,9 @@ pub struct JobMetricsSnapshot {
     pub cpu_items: u64,
     /// PCIe bytes attributed to this job's requests.
     pub transfer_bytes: u64,
+    /// Requests drained off this node for remote execution (cross-node
+    /// steal), including any a peer-down requeue later bounced back.
+    pub remote_requests: u64,
     /// Requests submitted but not yet completed.
     pub queued_requests: i64,
     /// In-flight units (messages + work requests) of the job.
@@ -157,6 +160,10 @@ pub struct JobReport {
     /// PCIe bytes attributed to this job's requests (exact per-item
     /// attribution: summing over jobs reproduces the pool total).
     pub transfer_bytes: u64,
+    /// Requests of this job drained off the node for remote execution
+    /// (cross-node steal). Sums over jobs to the pool's
+    /// `remote_requests_out` — invariant-checked in `chaos::invariants`.
+    pub remote_requests: u64,
     /// Wall seconds from submission to the sealed report.
     pub wall: f64,
     /// The per-iteration reduction series the job's driver returned
@@ -267,6 +274,34 @@ pub struct PoolReport {
     /// (cross-job combining: the acceptance signal that the runtime is
     /// genuinely multiplexing tenants into shared launches).
     pub cross_job_launches: u64,
+    /// Cross-node steal, home side: shipments drained off this node for
+    /// remote execution and the requests they carried.
+    pub remote_steals_out: u64,
+    pub remote_requests_out: u64,
+    /// Cross-node steal, thief side: shipments this node executed for
+    /// peers (counted when the results ship home, so a thief that dies
+    /// mid-shipment never counts one).
+    pub remote_steals_in: u64,
+    pub remote_requests_in: u64,
+    /// Shipments (and their requests) bounced back to this node's
+    /// combiners because the thief vanished or declined — the
+    /// peer-down draining path. `steals_out` splits exactly into
+    /// `steals_in + requeues + stale` across the cluster; the chaos
+    /// checker audits the conservation.
+    pub remote_requeues: u64,
+    pub remote_requeued_requests: u64,
+    /// Results that arrived for a shipment already requeued (the peer
+    /// was presumed dead, then spoke): dropped here, counted so the
+    /// cluster-wide conservation still balances.
+    pub remote_stale_batches: u64,
+    pub remote_stale_results: u64,
+    /// Frame-body bytes this node put on / took off the wire (loopback
+    /// charges the encoded length of its zero-copy handoffs).
+    pub wire_bytes_out: u64,
+    pub wire_bytes_in: u64,
+    /// Modeled serialize+transfer seconds of outbound shipments — the
+    /// explicit cost a remote steal pays in the report.
+    pub remote_wire_secs: f64,
     /// Sealed per-job reports, in completion order. Filled by
     /// `Runtime::shutdown`; live snapshots leave it empty.
     pub jobs: Vec<JobReport>,
@@ -461,6 +496,29 @@ impl std::fmt::Display for PoolReport {
                 )?;
             }
         }
+        if self.remote_steals_out + self.remote_steals_in > 0 {
+            writeln!(
+                f,
+                "remote steal        out {} shipments ({} reqs, modeled wire {:.4}s) / in {} ({} reqs); requeued {} ({} reqs); stale {} ({} reqs)",
+                self.remote_steals_out,
+                self.remote_requests_out,
+                self.remote_wire_secs,
+                self.remote_steals_in,
+                self.remote_requests_in,
+                self.remote_requeues,
+                self.remote_requeued_requests,
+                self.remote_stale_batches,
+                self.remote_stale_results
+            )?;
+        }
+        if self.wire_bytes_out + self.wire_bytes_in > 0 {
+            writeln!(
+                f,
+                "wire                {:.2} MiB out / {:.2} MiB in",
+                self.wire_bytes_out as f64 / (1 << 20) as f64,
+                self.wire_bytes_in as f64 / (1 << 20) as f64
+            )?;
+        }
         if self.cross_job_launches > 0 || !self.jobs.is_empty() {
             writeln!(
                 f,
@@ -607,6 +665,30 @@ mod tests {
             ),
             "{s}"
         );
+    }
+
+    #[test]
+    fn remote_and_wire_lines_render_only_when_counted() {
+        let quiet = Report::default();
+        let s = format!("{quiet}");
+        assert!(!s.contains("remote steal"), "{s}");
+        assert!(!s.contains("wire "), "{s}");
+        let r = Report {
+            remote_steals_out: 2,
+            remote_requests_out: 16,
+            remote_steals_in: 1,
+            remote_requests_in: 8,
+            remote_requeues: 1,
+            remote_requeued_requests: 8,
+            wire_bytes_out: 3 << 20,
+            wire_bytes_in: 1 << 20,
+            remote_wire_secs: 0.001,
+            ..Report::default()
+        };
+        let s = format!("{r}");
+        assert!(s.contains("remote steal        out 2 shipments (16 reqs"), "{s}");
+        assert!(s.contains("requeued 1 (8 reqs)"), "{s}");
+        assert!(s.contains("wire                3.00 MiB out / 1.00 MiB in"), "{s}");
     }
 
     #[test]

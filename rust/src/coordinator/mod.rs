@@ -79,10 +79,12 @@ pub use registry::{
 pub use crate::runtime::memory::ResidencyPolicy;
 pub use crate::runtime::workqueue::LaunchMode;
 pub use residency::ReuseScorer;
-pub use scheduler::{DeviceRouter, JobState, JobStatus, RoutePolicy, Shared};
+pub use scheduler::{
+    rendezvous_node, DeviceRouter, JobState, JobStatus, RoutePolicy, Shared,
+};
 pub use work_request::{Tile, WorkRequest, WrResult};
 
-use scheduler::{CoordMsg, Router};
+use scheduler::{CoordMsg, NetAccountDelta, NetShipment, Router};
 
 /// Data-movement policy (paper section 3.2 / Fig 1 / Fig 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -1348,6 +1350,161 @@ impl Coord {
         }
     }
 
+    /// Exact wire size of the [`Frame::StealBatch`](crate::net::Frame)
+    /// a shipment of these requests would encode to, mirroring the
+    /// codec's arithmetic (pinned there by a property test). Drives the
+    /// serialize+transfer cost gate and the modeled `remote_wire_secs`
+    /// in the report without the coordinator ever serializing anything.
+    fn ship_bytes(items: &[Pending]) -> u64 {
+        let mut bytes = 17u64; // tag, shipment id, kind, count
+        for p in items {
+            bytes += 41; // wr_id, chare, tag, data_items, option tag, counts
+            if p.wr.buffer.is_some() {
+                bytes += 8;
+            }
+            bytes += 4 * p.wr.payload.entry_ids.len() as u64;
+            for b in &p.wr.payload.bufs {
+                bytes += 4 + 4 * b.len() as u64;
+            }
+        }
+        bytes
+    }
+
+    /// A peer under its low watermark asked for work (cross-node batch
+    /// steal). Give away the deepest pending combiner batch when (a)
+    /// this node's own backlog is at or past the high watermark while
+    /// the thief reports at most the low one — the same hysteresis pair
+    /// the intra-node rebalancer uses, (b) our pipeline is actually
+    /// executing (`in_flight_total > 0`; an idle pipeline means the
+    /// backlog is about to dispatch locally and shipping it would only
+    /// add wire time), and (c) the modeled serialize+transfer cost is
+    /// beaten by the work's modeled execution time at `est_item_secs`
+    /// per item. A decline reinserts the drained batch untouched, so a
+    /// refused steal is invisible to every counter.
+    ///
+    /// On success the shipment's requests leave this node's queue
+    /// accounting (`note_completed`) and release their staged slots —
+    /// but their work-request *holds stay up*: quiescence must not
+    /// drop while results are on the wire. The holds release in
+    /// [`Coord::on_net_finish`] (results home) or survive a requeue
+    /// ([`Coord::on_net_requeue`]) unchanged.
+    fn on_net_drain(
+        &mut self,
+        peer_depth: usize,
+        est_item_secs: f64,
+        reply: Sender<Option<NetShipment>>,
+    ) {
+        let total: usize =
+            (0..self.devices.len()).map(|d| self.dev_router.depth(d)).sum();
+        if total < self.cfg.steal_high
+            || peer_depth > self.cfg.steal_low
+            || self.gpu.in_flight_total() == 0
+        {
+            let _ = reply.send(None);
+            return;
+        }
+        // Victim: the deepest pending combiner across all devices.
+        let mut best: Option<(usize, usize, usize)> = None;
+        for (d, st) in self.devices.iter().enumerate() {
+            if let Some(k) = Self::steal_kind(st) {
+                let len = st.combiners[k].len();
+                if best.is_none_or(|(_, _, b)| len > b) {
+                    best = Some((d, k, len));
+                }
+            }
+        }
+        let Some((device, k, _)) = best else {
+            let _ = reply.send(None);
+            return;
+        };
+        let Some(batch) = self.devices[device].combiners[k].steal_flush()
+        else {
+            let _ = reply.send(None);
+            return;
+        };
+        let items: usize = batch.items.iter().map(|p| p.wr.data_items).sum();
+        let bytes = Self::ship_bytes(&batch.items);
+        let wire = crate::net::wire_secs(bytes);
+        if wire >= items as f64 * est_item_secs {
+            // Not worth the wire. Reinsert at the queue tail: the set of
+            // pending requests is unchanged, only intra-kind order moved,
+            // which perturbs batching but never results.
+            let now = self.now();
+            for p in batch.items {
+                self.devices[device].combiners[k].insert(p, now);
+            }
+            let _ = reply.send(None);
+            return;
+        }
+        let reuse_arg = self.kinds[k].kernel.reuse_arg;
+        let mut reqs = Vec::with_capacity(batch.items.len());
+        for p in batch.items {
+            if p.slot.is_some() {
+                if let (Some(_), Some(buf)) = (reuse_arg, p.wr.buffer) {
+                    self.devices[device].tables[k]
+                        .as_mut()
+                        .expect("reuse family has a table")
+                        .release(buf);
+                }
+            }
+            self.dev_router.note_completed(device, p.wr.job, 1);
+            if let Some(js) = self.router.shared.job(p.wr.job) {
+                js.metrics.remote_requests.fetch_add(1, Ordering::SeqCst);
+            }
+            reqs.push(p.wr);
+        }
+        self.report.remote_steals_out += 1;
+        self.report.remote_requests_out += reqs.len() as u64;
+        self.report.remote_wire_secs += wire;
+        let _ = reply.send(Some(NetShipment { kind: KernelKindId(k), reqs }));
+    }
+
+    /// Results of a remotely executed shipment returned home: scatter
+    /// them to the owning chares exactly like a local completion and
+    /// release the holds that kept quiescence up while the work was on
+    /// the wire. The remote node's pool counted the execution itself
+    /// (launches, items, transfer bytes, under its mule job); home
+    /// counts only what it can see — the per-job `remote_requests`
+    /// already recorded at drain time.
+    fn on_net_finish(&mut self, results: Vec<(JobId, ChareId, WrResult)>) {
+        for (job, chare, res) in results {
+            self.router.send_msg(job, chare, Msg::new(METHOD_RESULT, res));
+            if let Some(js) = self.router.shared.job(job) {
+                js.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            }
+            self.router.release(job, 1);
+        }
+    }
+
+    /// A shipment could not complete remotely — the thief vanished, is
+    /// draining, or the ship timed out — so its requests come back to
+    /// the local pending queues. Their holds never dropped, so
+    /// quiescence was safe the whole time; staging restarts cold
+    /// (`slot: None`) because the drain released the source pins.
+    fn on_net_requeue(&mut self, kind: KernelKindId, reqs: Vec<WorkRequest>) {
+        let now = self.now();
+        self.report.remote_requeues += 1;
+        self.report.remote_requeued_requests += reqs.len() as u64;
+        for wr in reqs {
+            let device = self.dev_router.route(wr.job, wr.chare);
+            self.dev_router.note_enqueued(device, wr.job, 1);
+            let pending = Pending { wr, slot: None, staged_bytes: 0 };
+            self.devices[device].combiners[kind.0].insert(pending, now);
+        }
+        self.poll_combiners();
+    }
+
+    /// Fold one cluster-session accounting delta (thief-side steal
+    /// counters, wire bytes) into the pool report.
+    fn on_net_account(&mut self, d: NetAccountDelta) {
+        self.report.remote_steals_in += d.remote_steals_in;
+        self.report.remote_requests_in += d.remote_requests_in;
+        self.report.remote_stale_batches += d.remote_stale_batches;
+        self.report.remote_stale_results += d.remote_stale_results;
+        self.report.wire_bytes_out += d.wire_bytes_out;
+        self.report.wire_bytes_in += d.wire_bytes_in;
+    }
+
     /// Apply one chaos-harness injection (test/chaos builds only; see
     /// [`scheduler::ChaosCmd`]). Kept beside the real handlers so the
     /// injections perturb exactly the state a hostile schedule would.
@@ -1498,6 +1655,23 @@ impl Coord {
                 Ok(CoordMsg::Snapshot(reply)) => {
                     let _ = reply.send(self.sealed_report());
                 }
+                Ok(CoordMsg::NetDrain { peer_depth, est_item_secs, reply }) => {
+                    self.on_net_drain(peer_depth, est_item_secs, reply)
+                }
+                Ok(CoordMsg::NetFinish { results }) => {
+                    self.on_net_finish(results);
+                    self.poll_combiners();
+                }
+                Ok(CoordMsg::NetRequeue { kind, reqs }) => {
+                    self.on_net_requeue(kind, reqs)
+                }
+                Ok(CoordMsg::NetDepth(reply)) => {
+                    let d: u64 = (0..self.devices.len())
+                        .map(|d| self.dev_router.depth(d) as u64)
+                        .sum();
+                    let _ = reply.send(d);
+                }
+                Ok(CoordMsg::NetAccount(d)) => self.on_net_account(d),
                 #[cfg(any(test, feature = "chaos"))]
                 Ok(CoordMsg::Chaos(cmd)) => self.on_chaos(cmd),
                 Ok(CoordMsg::Stop) => break,
@@ -1520,6 +1694,15 @@ impl Coord {
                 Ok(CoordMsg::CpuChunk { batch, items, secs, results }) => {
                     self.on_cpu_chunk(batch, items, secs, results)
                 }
+                // Late result deliveries must still release their holds;
+                // a late depth probe must not wedge a cluster pump.
+                Ok(CoordMsg::NetFinish { results }) => {
+                    self.on_net_finish(results)
+                }
+                Ok(CoordMsg::NetDepth(reply)) => {
+                    let _ = reply.send(0);
+                }
+                Ok(CoordMsg::NetAccount(d)) => self.on_net_account(d),
                 Ok(_) => {}
                 Err(_) => break,
             }

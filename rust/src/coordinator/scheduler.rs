@@ -27,8 +27,8 @@ use crate::util::timeline::Timeline;
 use super::chare::{Chare, ChareId, Ctx, Effect, JobId, Msg, WorkDraft};
 use super::combiner::Pending;
 use super::metrics::{JobMetricsSnapshot, PoolReport};
-use super::registry::{KernelDescriptor, SharedRegistry};
-use super::work_request::WrResult;
+use super::registry::{KernelDescriptor, KernelKindId, SharedRegistry};
+use super::work_request::{WorkRequest, WrResult};
 
 /// Messages a PE thread consumes.
 pub(crate) enum PeMsg {
@@ -75,6 +75,34 @@ pub(crate) enum CoordMsg {
     InvalidateAll,
     /// Reply with a live snapshot of the pool-wide report.
     Snapshot(Sender<PoolReport>),
+    /// Cross-node steal, home side: drain one stealable batch for a
+    /// remote peer, or reply `None` when the local backlog is below the
+    /// high watermark or the wire cost model says the move loses. The
+    /// drained requests *keep* their home-side quiescence holds — the
+    /// home job stays non-quiescent until `NetFinish` settles the
+    /// shipment (or `NetRequeue` bounces it).
+    NetDrain {
+        /// The thief's advertised pending depth (its last heartbeat).
+        peer_depth: usize,
+        /// Learned seconds-per-request of remote round trips, for the
+        /// cost model (generous on first contact).
+        est_item_secs: f64,
+        reply: Sender<Option<NetShipment>>,
+    },
+    /// Results of a remotely executed shipment returned home: scatter
+    /// each output to its owning chare and release the retained holds.
+    NetFinish { results: Vec<(JobId, ChareId, WrResult)> },
+    /// A peer vanished (or declined) while holding a shipment: re-inject
+    /// the requests into the combiners, unstaged — dispatch restages
+    /// them through the contiguous fallback, charging the full bytes a
+    /// failed steal honestly costs.
+    NetRequeue { kind: KernelKindId, reqs: Vec<WorkRequest> },
+    /// Reply with this node's total pending depth (combiner queues plus
+    /// in-flight), advertised to peers via heartbeats.
+    NetDepth(Sender<u64>),
+    /// Fold cluster-layer counters (thief-side executions, wire bytes,
+    /// stale results) into the pool report.
+    NetAccount(NetAccountDelta),
     /// A chaos-harness injection (test/chaos builds only); the release
     /// hot path never constructs or matches this variant.
     #[cfg(any(test, feature = "chaos"))]
@@ -109,6 +137,37 @@ pub(crate) enum ChaosCmd {
     /// backpressure fallback, quiesce-while-nonempty, and the
     /// mode-partition accounting under mid-job mode changes.
     LaunchModeFlip { queue_cap: usize },
+}
+
+/// A batch drained from the combiners for remote execution
+/// ([`CoordMsg::NetDrain`]). All requests share one kernel family (they
+/// came from one combiner) but may span jobs — cross-job combining
+/// survives the node boundary. Each request still holds +1 on its
+/// job's quiescence counter; the cluster session settles the shipment
+/// with `NetFinish` (results home) or `NetRequeue` (peer down).
+#[derive(Debug)]
+pub(crate) struct NetShipment {
+    pub kind: KernelKindId,
+    pub reqs: Vec<WorkRequest>,
+}
+
+/// Thief-side and wire-level counter deltas folded into the pool
+/// report by [`CoordMsg::NetAccount`]. The home-side counters
+/// (`remote_steals_out` etc.) are incremented directly by the drain /
+/// requeue handlers; these are the halves only the cluster session
+/// observes.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct NetAccountDelta {
+    /// Shipments this node executed for peers (counted when the
+    /// results ship back, so a dying thief never counts one).
+    pub remote_steals_in: u64,
+    pub remote_requests_in: u64,
+    /// Results that arrived for a shipment the home had already
+    /// requeued (peer presumed dead, then spoke): dropped, counted.
+    pub remote_stale_batches: u64,
+    pub remote_stale_results: u64,
+    pub wire_bytes_out: u64,
+    pub wire_bytes_in: u64,
 }
 
 /// Chare -> device routing policy for the sharded GPU pool.
@@ -329,6 +388,25 @@ fn rendezvous_device(job: JobId, chare: ChareId, n: usize) -> usize {
         .unwrap_or(0)
 }
 
+/// Rendezvous-hashed *home node* for a job-scoped chare over a cluster
+/// of `nodes` — the same highest-random-weight construction as
+/// [`rendezvous_device`], one level up. Placement is effectively
+/// `(NodeId, JobId, ChareId)`: this picks the node coordinate (every
+/// node computes the same answer with no coordination, which is what
+/// lets SPMD job setup shard chares without a directory service), and
+/// the home node's `DeviceRouter` picks the device coordinate. Domain-
+/// separated from the device hash so a chare's node and device draws
+/// are independent.
+pub fn rendezvous_node(job: JobId, chare: ChareId, nodes: usize) -> usize {
+    const NODE_SALT: u64 = 0x6e6f_6465_5f68_6f6d; // "node_hom"
+    let key = splitmix64(job.0 ^ NODE_SALT)
+        ^ (((chare.collection as u64) << 32) | chare.index as u64);
+    (0..nodes)
+        .max_by_key(|&d| splitmix64(key ^ (0x9e37_79b9_7f4a_7c15u64
+            .wrapping_mul(d as u64 + 1))))
+        .unwrap_or(0)
+}
+
 /// SplitMix64 finalizer: cheap, well-mixed 64-bit hash.
 fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
@@ -370,6 +448,10 @@ pub(crate) struct JobMetrics {
     pub gpu_items: AtomicU64,
     pub cpu_items: AtomicU64,
     pub transfer_bytes: AtomicU64,
+    /// Requests drained off this node for remote execution (cross-node
+    /// steal; includes shipments later bounced back by a peer-down
+    /// requeue — the drain happened either way).
+    pub remote_requests: AtomicU64,
     /// Requests submitted but not yet completed (queue + in flight).
     pub queued: AtomicI64,
 }
@@ -452,6 +534,7 @@ impl JobState {
             gpu_items: m.gpu_items.load(Ordering::SeqCst),
             cpu_items: m.cpu_items.load(Ordering::SeqCst),
             transfer_bytes: m.transfer_bytes.load(Ordering::SeqCst),
+            remote_requests: m.remote_requests.load(Ordering::SeqCst),
             queued_requests: m.queued.load(Ordering::SeqCst).max(0),
             outstanding: self.outstanding(),
         }
@@ -553,6 +636,28 @@ impl Router {
         self.pes[pe]
             .send(PeMsg::Deliver { job, to, msg })
             .expect("pe thread is down");
+    }
+
+    /// Best-effort delivery for cross-node senders: like `send_msg`,
+    /// but a chare that is no longer placed (its job sealed between
+    /// the frame leaving the wire and arriving here) drops the message
+    /// and reports `false` instead of panicking — a remote peer cannot
+    /// check placement first the way a local caller can.
+    pub fn try_send_msg(&self, job: JobId, to: ChareId, msg: Msg) -> bool {
+        let pe = match self
+            .placement
+            .read()
+            .expect("placement poisoned")
+            .get(&(job, to))
+        {
+            Some(&pe) => pe,
+            None => return false,
+        };
+        self.hold(job, 1);
+        self.pes[pe]
+            .send(PeMsg::Deliver { job, to, msg })
+            .expect("pe thread is down");
+        true
     }
 
     /// Submit a work request to the coordinator (+1 outstanding until its
@@ -852,6 +957,26 @@ mod tests {
             seen.len() >= 3,
             "rendezvous hash must spread 64 chares over the devices, got {seen:?}"
         );
+    }
+
+    #[test]
+    fn rendezvous_node_is_stable_spreads_and_differs_from_device_hash() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            let c = ChareId::new(0, i);
+            let n = rendezvous_node(JOB, c, 4);
+            assert!(n < 4);
+            assert_eq!(rendezvous_node(JOB, c, 4), n, "home must be stable");
+            seen.insert(n);
+        }
+        assert!(seen.len() >= 3, "64 chares must spread over 4 nodes: {seen:?}");
+        assert_eq!(rendezvous_node(JOB, ChareId::new(0, 0), 1), 0);
+        // domain separation: the node draw is not just the device draw
+        let differs = (0..64).any(|i| {
+            let c = ChareId::new(0, i);
+            rendezvous_node(JOB, c, 4) != rendezvous_device(JOB, c, 4)
+        });
+        assert!(differs, "node and device hashes must be independent");
     }
 
     #[test]

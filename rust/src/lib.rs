@@ -71,5 +71,11 @@ pub mod bench;
 #[cfg(any(test, feature = "chaos"))]
 pub mod chaos;
 pub mod coordinator;
+// Multi-node transport (ISSUE 9): `Transport` trait with deterministic
+// in-process `Loopback` and length-prefixed `Tcp` meshes, the cluster
+// session driving cross-node reductions, remote chare messages, and
+// watermark-gated batch steals. `Cluster::loopback(1, ...)` reproduces
+// the single-process `Runtime` bitwise.
+pub mod net;
 pub mod runtime;
 pub mod util;

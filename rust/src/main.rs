@@ -33,12 +33,25 @@
 //!   --residency lru|reuse           cross-job combining fired
 //!   --launch-mode per-batch|persistent|adaptive  (default adaptive)
 //! gcharm figures [--fig 2|3|4|5|ablation|all] [--full]
+//! gcharm node [opts]                one TCP cluster node (SPMD: run the
+//!   --id N --peers a:p0,b:p1,...    same command on every node; peers[i]
+//!   --listen ADDR                   is node i's address, --listen
+//!   --app nbody|spmv                overrides the local bind address)
+//!   --pes N --devices N --iters N   runs the app cluster-wide with
+//!                                   cross-node steal and prints per-node
+//!                                   accounting; the root audits the
+//!                                   cluster conservation ledger
 //! gcharm chaos [--seed N] [--seeds A..B]   deterministic fault-injection
-//!                                   run(s) (default corpus 0..12);
+//!                                   run(s) (default corpus 0..14);
 //!                                   needs `--features chaos`.
 //!                                   Prints the replay-identical event
 //!                                   trace; exits nonzero on violations.
 //! ```
+//!
+//! `nbody`, `spmv`, and `serve` also accept `--nodes N`: run N loopback
+//! cluster nodes in-process (full wire protocol, zero-copy frames)
+//! instead of one runtime — `serve --nodes N` runs the shared-family
+//! spmv tenant SPMD with cross-node steal balancing the nodes.
 
 use std::collections::HashMap;
 
@@ -51,8 +64,11 @@ use gcharm::apps::nbody::{self, dataset::DatasetSpec, NbodyConfig};
 use gcharm::apps::spmv::{self, SpmvConfig};
 use gcharm::bench;
 use gcharm::coordinator::{
-    CombinePolicy, Config, DataPolicy, LaunchModePolicy, ResidencyPolicy,
-    RoutePolicy, Runtime, SplitPolicy,
+    CombinePolicy, Config, DataPolicy, JobSpec, LaunchModePolicy,
+    ResidencyPolicy, RoutePolicy, Runtime, SplitPolicy,
+};
+use gcharm::net::{
+    Cluster, ClusterNode, NetConfig, NodeReport, Tcp, Transport,
 };
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -172,6 +188,21 @@ fn cmd_nbody(flags: HashMap<String, String>) -> Result<()> {
     };
 
     let mode = flags.get("mode").map(|s| s.as_str()).unwrap_or("gcharm");
+    let nodes: usize = get(&flags, "nodes", 1);
+    if nodes > 1 {
+        if mode != "gcharm" {
+            bail!("--nodes runs the gcharm mode only");
+        }
+        println!(
+            "nbody: dataset={} n={} iters={} nodes={nodes} (loopback \
+             cluster)",
+            cfg.dataset.name, cfg.dataset.n, cfg.iters
+        );
+        let rt_cfg = cfg.runtime.clone();
+        return run_loopback_cluster(nodes, rt_cfg, move |_, _h| {
+            nbody::job_spec(&cfg)
+        });
+    }
     println!(
         "nbody: dataset={} n={} iters={} pes={} devices={} mode={mode}",
         cfg.dataset.name, cfg.dataset.n, cfg.iters, pes, cfg.runtime.devices
@@ -253,6 +284,17 @@ fn cmd_spmv(flags: HashMap<String, String>) -> Result<()> {
         launch_mode: launch_mode_policy(&flags)?,
         ..Config::default()
     };
+    let nodes: usize = get(&flags, "nodes", 1);
+    if nodes > 1 {
+        println!(
+            "spmv: rows={} iters={} nodes={nodes} (loopback cluster)",
+            cfg.rows, cfg.iters
+        );
+        let rt_cfg = cfg.runtime.clone();
+        return run_loopback_cluster(nodes, rt_cfg, move |_, _h| {
+            spmv::job_spec(&cfg)
+        });
+    }
     println!(
         "spmv: rows={} iters={} max_nnz={} pes={} devices={}",
         cfg.rows, cfg.iters, cfg.max_row_nnz, cfg.runtime.pes,
@@ -291,6 +333,20 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<()> {
         launch_mode: launch_mode_policy(&flags)?,
         ..Config::default()
     };
+    let nodes: usize = get(&flags, "nodes", 1);
+    if nodes > 1 {
+        // distributed serve: the shared-family spmv tenant runs SPMD,
+        // with cross-node steal balancing the loopback nodes
+        println!(
+            "serve: nodes={nodes} (loopback cluster, spmv tenant SPMD) \
+             rows={rows} iters={iters}"
+        );
+        let mut cfg = SpmvConfig::new(rows);
+        cfg.iters = iters;
+        return run_loopback_cluster(nodes, runtime_cfg, move |_, _h| {
+            spmv::job_spec(&cfg)
+        });
+    }
     println!(
         "serve: pes={} devices={} iters={iters} rows={rows} \
          particles={particles}",
@@ -367,6 +423,209 @@ fn serve_trace(
     Ok(rt.shutdown())
 }
 
+/// Print one cluster node's report and check its local books: every
+/// job's remote-request count must sum to the node's pool total.
+fn print_node_report(rep: &NodeReport) -> Result<()> {
+    println!("--- {} ---", rep.node);
+    if let (Some(first), Some(last)) =
+        (rep.series.first(), rep.series.last())
+    {
+        println!(
+            "series: start {:.6e} end {:.6e} ({} entries)",
+            first,
+            last,
+            rep.series.len()
+        );
+    }
+    println!(
+        "remote: steals {} out / {} in, requests {} out / {} in, \
+         requeues {}, wire {} B out / {} B in",
+        rep.pool.remote_steals_out,
+        rep.pool.remote_steals_in,
+        rep.pool.remote_requests_out,
+        rep.pool.remote_requests_in,
+        rep.pool.remote_requeues,
+        rep.pool.wire_bytes_out,
+        rep.pool.wire_bytes_in,
+    );
+    println!("{}", rep.pool);
+    let per_job: u64 =
+        rep.pool.jobs.iter().map(|j| j.remote_requests).sum();
+    anyhow::ensure!(
+        per_job == rep.pool.remote_requests_out,
+        "{}: per-job remote requests ({per_job}) != pool total ({})",
+        rep.node,
+        rep.pool.remote_requests_out
+    );
+    Ok(())
+}
+
+/// Cross-node conservation over a full set of loopback reports: every
+/// shipped batch/request resolves exactly once, and (graceful run,
+/// nothing deliberately dropped) wire bytes balance exactly.
+fn audit_loopback_cluster(reports: &[NodeReport]) -> Result<()> {
+    let sum = |f: fn(&gcharm::coordinator::PoolReport) -> u64| -> u64 {
+        reports.iter().map(|r| f(&r.pool)).sum()
+    };
+    let shipped =
+        sum(|p| p.remote_steals_out) + sum(|p| p.remote_stale_batches);
+    let resolved =
+        sum(|p| p.remote_steals_in) + sum(|p| p.remote_requeues);
+    anyhow::ensure!(
+        shipped == resolved,
+        "cluster steal ledger unbalanced: {shipped} shipped vs \
+         {resolved} resolved"
+    );
+    let rq_shipped =
+        sum(|p| p.remote_requests_out) + sum(|p| p.remote_stale_results);
+    let rq_resolved = sum(|p| p.remote_requests_in)
+        + sum(|p| p.remote_requeued_requests);
+    anyhow::ensure!(
+        rq_shipped == rq_resolved,
+        "cluster request ledger unbalanced: {rq_shipped} vs {rq_resolved}"
+    );
+    let (out, inn) = (sum(|p| p.wire_bytes_out), sum(|p| p.wire_bytes_in));
+    anyhow::ensure!(
+        out == inn,
+        "cluster byte ledger unbalanced: {out} out vs {inn} in"
+    );
+    println!(
+        "cluster conservation: balanced ({shipped} batches, {out} wire \
+         bytes)"
+    );
+    Ok(())
+}
+
+/// `--nodes N` mode shared by nbody/spmv/serve: run `make`'s SPMD spec
+/// on an in-process loopback cluster and audit the conservation ledger.
+fn run_loopback_cluster<F>(nodes: usize, cfg: Config, make: F) -> Result<()>
+where
+    F: Fn(gcharm::net::NodeId, gcharm::net::ClusterHandle) -> JobSpec
+        + Send
+        + Sync
+        + 'static,
+{
+    let reports = Cluster::loopback(nodes, cfg, NetConfig::default(), make)?;
+    for rep in &reports {
+        print_node_report(rep)?;
+    }
+    audit_loopback_cluster(&reports)
+}
+
+/// One TCP cluster node: join the `--peers` mesh as `--id`, run the app
+/// SPMD with cross-node steal, print this node's accounting, and (on
+/// the root) audit the cluster ledger from the peers' Summary frames.
+fn cmd_node(flags: HashMap<String, String>) -> Result<()> {
+    let id: u32 = get(&flags, "id", 0);
+    let peers: Vec<String> = flags
+        .get("peers")
+        .map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    if peers.len() < 2 {
+        bail!(
+            "gcharm node wants --id N and --peers a:p0,b:p1,... \
+             (>= 2 addresses; peers[i] is node i's listen address)"
+        );
+    }
+    let app = flags.get("app").map(|s| s.as_str()).unwrap_or("nbody");
+    if !matches!(app, "nbody" | "spmv") {
+        bail!("unknown app {app} (nbody|spmv)");
+    }
+    let transport: Arc<dyn Transport> =
+        if let Some(listen) = flags.get("listen") {
+            let listener = std::net::TcpListener::bind(listen.as_str())?;
+            Arc::new(Tcp::with_listener(id, listener, &peers)?)
+        } else {
+            Arc::new(Tcp::connect(id, &peers)?)
+        };
+    let cfg = Config {
+        pes: get(&flags, "pes", 4),
+        devices: get(&flags, "devices", 1),
+        ..Config::default()
+    };
+    let iters: usize = get(&flags, "iters", 2);
+    let rows: usize = get(&flags, "rows", 512);
+    let pes = cfg.pes;
+    println!(
+        "node {id}/{}: app={app} pes={} devices={}",
+        peers.len(),
+        cfg.pes,
+        cfg.devices
+    );
+    let app = app.to_string();
+    let report =
+        ClusterNode::run(cfg, NetConfig::default(), transport, move |_h| {
+            if app == "spmv" {
+                let mut c = SpmvConfig::new(rows);
+                c.iters = iters;
+                spmv::job_spec(&c)
+            } else {
+                let mut c = NbodyConfig::new(DatasetSpec::tiny());
+                c.iters = iters;
+                c.pieces_per_pe = 2;
+                c.runtime.pes = pes;
+                nbody::job_spec(&c)
+            }
+        })?;
+    print_node_report(&report)?;
+
+    if report.node.0 == 0 {
+        anyhow::ensure!(
+            report.peer_summaries.len() == peers.len() - 1,
+            "root collected {} peer summaries for {} peers",
+            report.peer_summaries.len(),
+            peers.len() - 1
+        );
+        // Fold the peers' Summary counters into our own pool counters.
+        // Summaries carry no stale counts — a graceful run has none
+        // (staleness needs a ship timeout), so the ledger still closes.
+        let p = &report.pool;
+        let mut shipped = p.remote_steals_out + p.remote_stale_batches;
+        let mut resolved = p.remote_steals_in + p.remote_requeues;
+        let mut rq_shipped =
+            p.remote_requests_out + p.remote_stale_results;
+        let mut rq_resolved =
+            p.remote_requests_in + p.remote_requeued_requests;
+        let (mut out, mut inn) = (p.wire_bytes_out, p.wire_bytes_in);
+        for (_, c) in &report.peer_summaries {
+            // [steals_out, requests_out, steals_in, requests_in,
+            //  requeues, requeued_requests, bytes_out, bytes_in]
+            shipped += c[0];
+            rq_shipped += c[1];
+            resolved += c[2];
+            rq_resolved += c[3];
+            resolved += c[4];
+            rq_resolved += c[5];
+            out += c[6];
+            inn += c[7];
+        }
+        anyhow::ensure!(
+            shipped == resolved,
+            "cluster steal ledger unbalanced: {shipped} shipped vs \
+             {resolved} resolved"
+        );
+        anyhow::ensure!(
+            rq_shipped == rq_resolved,
+            "cluster request ledger unbalanced: {rq_shipped} vs \
+             {rq_resolved}"
+        );
+        anyhow::ensure!(
+            out == inn,
+            "cluster byte ledger unbalanced: {out} out vs {inn} in"
+        );
+        println!(
+            "cluster conservation: balanced ({shipped} batches, {out} \
+             wire bytes)"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
     let scale = if flags.contains_key("full") {
         bench::Scale::full()
@@ -393,7 +652,7 @@ fn cmd_figures(flags: HashMap<String, String>) -> Result<()> {
 }
 
 /// Replay chaos schedules by seed: `--seed N` for one, `--seeds A..B`
-/// for a range (default: the regression corpus 0..12). Exits nonzero if
+/// for a range (default: the regression corpus 0..14). Exits nonzero if
 /// any seed violates an invariant, printing its full event trace.
 #[cfg(feature = "chaos")]
 fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
@@ -403,7 +662,7 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<()> {
         vec![s.parse()?]
     } else {
         let range =
-            flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..12");
+            flags.get("seeds").map(|s| s.as_str()).unwrap_or("0..14");
         let (a, b) = range
             .split_once("..")
             .ok_or_else(|| anyhow::anyhow!("--seeds wants A..B, got {range}"))?;
@@ -447,10 +706,12 @@ fn main() -> Result<()> {
         "spmv" => cmd_spmv(flags),
         "serve" => cmd_serve(flags),
         "figures" => cmd_figures(flags),
+        "node" => cmd_node(flags),
         "chaos" => cmd_chaos(flags),
         _ => {
             println!(
-                "usage: gcharm <info|nbody|md|spmv|serve|figures|chaos> \
+                "usage: gcharm \
+                 <info|nbody|md|spmv|serve|figures|node|chaos> \
                  [--flags]\n\
                  see rust/src/main.rs header for options"
             );

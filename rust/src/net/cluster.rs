@@ -1,0 +1,1201 @@
+//! The node session: one local [`Runtime`] joined to a cluster.
+//!
+//! [`ClusterNode::run`] glues a [`Transport`] to a runtime instance and
+//! runs one application job SPMD-style across the mesh:
+//!
+//! * **Registration handshake** — every node announces its kernel-family
+//!   fingerprint in a `Hello`; a mismatch is a hard error, because kind
+//!   ids are registration-order indices and must agree across the wire.
+//! * **Cross-node reductions** — [`ClusterHandle::reduce`] folds each
+//!   node's per-job reduction result up a binary tree (parent
+//!   `(i-1)/2`); the root totals the round and broadcasts a `Release`.
+//!   A departed child shrinks the expected-contribution count, so a
+//!   graceful early exit never wedges the tree.
+//! * **Remote chare messages** — [`ClusterHandle::send_remote`] carries
+//!   a serialized payload to a chare on another node, delivered through
+//!   the public `Router` path like any local message.
+//! * **Cross-node batch steal** — the pump advertises queue depth in
+//!   heartbeats; a node under the runtime's learned `steal_low`
+//!   watermark asks the deepest peer at/above `steal_high` for work.
+//!   The home coordinator drains a combiner batch only when the modeled
+//!   serialize+transfer cost ([`super::wire_secs`]) beats the queue
+//!   time it saves, ships it, and keeps the originals so a vanished
+//!   thief's shipment *requeues at home* instead of hanging quiescence.
+//!
+//! Remote execution rides the public chare API: every node runs a
+//! hidden **mule job** whose single chare resubmits shipped requests
+//! through `Ctx::submit` and forwards results back to the pump, so the
+//! thief side needs no private scheduler hooks at all.
+//!
+//! Shutdown is collective and ordered: a node's pump sends `Summary`
+//! (its steal/byte counters, to the root) and then `Goodbye` as its
+//! **last frames ever**, and only exits after collecting `Goodbye` from
+//! every peer — which makes the per-node transport byte counters exact
+//! at accounting time and gives conservation invariants something to
+//! check (`chaos::invariants::cluster_violations`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::job::NetEndpoint;
+use crate::coordinator::scheduler::NetAccountDelta;
+use crate::coordinator::{
+    Chare, ChareId, Config, Ctx, JobId, JobSpec, KernelKindId, Msg,
+    PoolReport, Runtime, Tile, WorkDraft, WorkRequest, WrResult,
+    METHOD_RESULT,
+};
+
+use super::loopback::LoopbackFabric;
+use super::wire::{Frame, WirePayload, WireRequest};
+use super::{NodeId, Transport};
+
+/// Job token of the application job in `Chare`/`Contribute` frames.
+/// Token 0 is the mule job; only these two jobs exist on the wire, so
+/// a u64 token (not a name service) suffices.
+const TOKEN_APP: u64 = 1;
+
+/// Entry method of the mule chare: "execute this shipment of drafts".
+pub(crate) const MULE_EXEC: u32 = 1;
+
+/// The mule job's single chare. `u32::MAX` keeps it out of any app's
+/// collection-id space.
+const MULE_CHARE: ChareId = ChareId { collection: u32::MAX, index: 0 };
+
+/// Knobs of the cluster session (transport cadence and the steal
+/// protocol's timers; the steal *watermarks* come from the runtime
+/// [`Config`] so local and remote rebalancing share one learned model).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Heartbeat/liveness + depth-advertisement period.
+    pub heartbeat: Duration,
+    /// Enable cross-node batch steal (reductions and chare messages
+    /// flow regardless).
+    pub steal: bool,
+    /// Modeled per-item execution seconds used by the home's
+    /// ship-or-keep decision until enough completions teach the real
+    /// rate (5 us ~ the K20 model's small-batch gravity rate).
+    pub est_item_secs: f64,
+    /// Home-side deadline on a shipped batch: results not back in time
+    /// requeue locally (covers a thief that died without a `Goodbye`).
+    pub ship_timeout: Duration,
+    /// Thief-side cap on one outstanding `StealRequest` before it may
+    /// target a peer again.
+    pub steal_expiry: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            heartbeat: Duration::from_millis(2),
+            steal: true,
+            est_item_secs: 5e-6,
+            ship_timeout: Duration::from_secs(10),
+            steal_expiry: Duration::from_millis(300),
+        }
+    }
+}
+
+/// What one node's [`ClusterNode::run`] returns: the local pool report
+/// (with the `remote_*` cross-node counters), the app job's reduction
+/// series (totals on the root, empty elsewhere), and — on the root —
+/// every peer's final `Summary` counters for conservation audits.
+#[derive(Debug)]
+pub struct NodeReport {
+    pub node: NodeId,
+    /// The app driver's series. Cross-node totals appear only where
+    /// [`ClusterHandle::reduce`] returned `Some` — the root.
+    pub series: Vec<f64>,
+    pub pool: PoolReport,
+    /// Root only: `(node, [steals_out, requests_out, steals_in,
+    /// requests_in, requeues, requeued_requests, bytes_out, bytes_in])`
+    /// from each peer's `Summary` frame.
+    pub peer_summaries: Vec<(u32, [u64; 8])>,
+}
+
+/// One reduction round's fold state on one node.
+#[derive(Debug, Default)]
+struct RoundAcc {
+    count: u64,
+    sum: f64,
+    /// Contributions folded in so far (local + direct children).
+    got: usize,
+    /// The local driver has contributed. Required before advancing:
+    /// a child's early contribution plus a shrunken `expected` (other
+    /// child departed) must never total a round without us.
+    local: bool,
+    sent_up: bool,
+    released: bool,
+    total: Option<(u64, f64)>,
+}
+
+struct HandleInner {
+    node: NodeId,
+    nodes: usize,
+    transport: Option<Arc<dyn Transport>>,
+    /// Open rounds. Lock order: `rounds` before `alive`, everywhere.
+    rounds: Mutex<HashMap<u32, RoundAcc>>,
+    cv: Condvar,
+    alive: Mutex<Vec<bool>>,
+    /// Set by the pump the instant it decides to say goodbye: from
+    /// here on [`ClusterHandle::dispatch`] drops every send, upholding
+    /// the goodbye-is-last-frame contract even for late reduction
+    /// traffic.
+    closed: AtomicBool,
+}
+
+/// A job driver's window into the cluster: node identity, the blocking
+/// cross-node reduction, and remote chare sends. Cheap to clone; the
+/// same handle is shared with the pump thread, which feeds it inbound
+/// `Contribute`/`Release`/`Goodbye` frames.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    inner: Arc<HandleInner>,
+}
+
+impl ClusterHandle {
+    pub(crate) fn new(
+        node: NodeId,
+        nodes: usize,
+        transport: Option<Arc<dyn Transport>>,
+    ) -> ClusterHandle {
+        ClusterHandle {
+            inner: Arc::new(HandleInner {
+                node,
+                nodes,
+                transport,
+                rounds: Mutex::new(HashMap::new()),
+                cv: Condvar::new(),
+                alive: Mutex::new(vec![true; nodes.max(1)]),
+                closed: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// A single-node handle: [`reduce`](ClusterHandle::reduce) returns
+    /// its argument immediately, so a spec builder written for the
+    /// cluster runs unchanged — and bitwise-identically — on a plain
+    /// in-process [`Runtime`].
+    pub fn solo() -> ClusterHandle {
+        ClusterHandle::new(NodeId(0), 1, None)
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.inner.node
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inner.nodes
+    }
+
+    /// Node 0: the reduction root and summary collector.
+    pub fn is_root(&self) -> bool {
+        self.inner.node.0 == 0
+    }
+
+    /// Contribute this node's `(count, sum)` for `round` and block
+    /// until the cluster-wide fold resolves. The root returns the
+    /// cluster total; every other node returns `None` (the root owns
+    /// the series, exactly like a Charm++ reduction client). A node
+    /// whose parent or root has departed stops waiting and returns
+    /// `None` — a graceful peer exit degrades the series, never hangs
+    /// it.
+    pub fn reduce(&self, round: u32, count: u64, sum: f64) -> Option<(u64, f64)> {
+        if self.inner.nodes <= 1 {
+            return Some((count, sum));
+        }
+        let me = self.inner.node.0 as usize;
+        let mut sends = Vec::new();
+        {
+            let mut rounds =
+                self.inner.rounds.lock().expect("rounds poisoned");
+            let acc = rounds.entry(round).or_default();
+            acc.count += count;
+            acc.sum += sum;
+            acc.got += 1;
+            acc.local = true;
+            self.advance_locked(&mut rounds, &mut sends);
+        }
+        self.inner.cv.notify_all();
+        self.dispatch(sends);
+
+        let parent = if me == 0 { 0 } else { (me - 1) / 2 };
+        let mut rounds = self.inner.rounds.lock().expect("rounds poisoned");
+        loop {
+            let done = if me == 0 {
+                rounds.get(&round).and_then(|a| a.total).is_some()
+            } else {
+                let released =
+                    rounds.get(&round).map(|a| a.released).unwrap_or(true);
+                let escape = {
+                    let alive =
+                        self.inner.alive.lock().expect("alive poisoned");
+                    !alive[parent] || !alive[0]
+                };
+                released || escape
+            };
+            if done {
+                let acc = rounds.remove(&round);
+                return if me == 0 { acc.and_then(|a| a.total) } else { None };
+            }
+            let (g, _) = self
+                .inner
+                .cv
+                .wait_timeout(rounds, Duration::from_millis(50))
+                .expect("rounds poisoned");
+            rounds = g;
+        }
+    }
+
+    /// Send a chare message to `chare` of the app job on node `to`.
+    /// Self-sends are a no-op (use `Ctx::send` locally). Delivery is
+    /// at-most-once: a departed peer silently drops it.
+    pub fn send_remote(
+        &self,
+        to: NodeId,
+        chare: ChareId,
+        method: u32,
+        payload: WirePayload,
+    ) {
+        if to == self.inner.node {
+            return;
+        }
+        self.dispatch(vec![(
+            to,
+            Frame::Chare {
+                token: TOKEN_APP,
+                chare: (chare.collection, chare.index),
+                method,
+                payload,
+            },
+        )]);
+    }
+
+    /// Pump: a child's subtree contribution arrived.
+    fn on_contribute(&self, round: u32, count: u64, sum: f64) {
+        let mut sends = Vec::new();
+        {
+            let mut rounds =
+                self.inner.rounds.lock().expect("rounds poisoned");
+            let acc = rounds.entry(round).or_default();
+            acc.count += count;
+            acc.sum += sum;
+            acc.got += 1;
+            self.advance_locked(&mut rounds, &mut sends);
+        }
+        self.inner.cv.notify_all();
+        self.dispatch(sends);
+    }
+
+    /// Pump: the root released `round`.
+    fn on_release(&self, round: u32) {
+        {
+            let mut rounds =
+                self.inner.rounds.lock().expect("rounds poisoned");
+            rounds.entry(round).or_default().released = true;
+        }
+        self.inner.cv.notify_all();
+    }
+
+    /// Pump: `peer` departed. Shrinks every open round's expected
+    /// contribution count and re-advances — a round waiting only on
+    /// the departed subtree resolves right here.
+    fn on_goodbye(&self, peer: NodeId) {
+        let p = peer.0 as usize;
+        let mut sends = Vec::new();
+        {
+            let mut rounds =
+                self.inner.rounds.lock().expect("rounds poisoned");
+            {
+                let mut alive =
+                    self.inner.alive.lock().expect("alive poisoned");
+                if p >= alive.len() || !alive[p] {
+                    return;
+                }
+                alive[p] = false;
+            }
+            self.advance_locked(&mut rounds, &mut sends);
+        }
+        self.inner.cv.notify_all();
+        self.dispatch(sends);
+    }
+
+    /// Advance every open round that has its local contribution plus
+    /// one per *alive* direct child: the root totals and broadcasts
+    /// `Release`, everyone else sends the subtree fold to its parent.
+    /// Caller holds `rounds`; `alive` is taken inside (lock order).
+    fn advance_locked(
+        &self,
+        rounds: &mut HashMap<u32, RoundAcc>,
+        sends: &mut Vec<(NodeId, Frame)>,
+    ) {
+        let me = self.inner.node.0 as usize;
+        let n = self.inner.nodes;
+        let alive = self.inner.alive.lock().expect("alive poisoned");
+        let expected = 1 + [2 * me + 1, 2 * me + 2]
+            .iter()
+            .filter(|&&c| c < n && alive[c])
+            .count();
+        for (&round, acc) in rounds.iter_mut() {
+            if !acc.local
+                || acc.got < expected
+                || acc.sent_up
+                || acc.total.is_some()
+            {
+                continue;
+            }
+            if me == 0 {
+                acc.total = Some((acc.count, acc.sum));
+                acc.released = true;
+                for peer in 1..n {
+                    if alive[peer] {
+                        sends.push((
+                            NodeId(peer as u32),
+                            Frame::Release { token: TOKEN_APP, round },
+                        ));
+                    }
+                }
+            } else {
+                acc.sent_up = true;
+                sends.push((
+                    NodeId(((me - 1) / 2) as u32),
+                    Frame::Contribute {
+                        token: TOKEN_APP,
+                        round,
+                        count: acc.count,
+                        sum: acc.sum,
+                    },
+                ));
+            }
+        }
+    }
+
+    /// Send outside every lock; a dead peer's error is liveness's
+    /// problem, not the reduction's. After [`close`](Self::close),
+    /// sends are dropped: our goodbye was the last frame.
+    fn dispatch(&self, sends: Vec<(NodeId, Frame)>) {
+        if self.inner.closed.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(t) = &self.inner.transport {
+            for (to, frame) in sends {
+                let _ = t.send(to, frame);
+            }
+        }
+    }
+
+    /// Stop all outbound traffic from this handle (pump, pre-goodbye).
+    fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The mule job's chare: remote execution through the public API. A
+/// `MULE_EXEC` message carries the shipment's drafts; each result comes
+/// back as a normal `METHOD_RESULT` scatter and is forwarded to the
+/// pump over a channel.
+struct MuleChare {
+    done: Sender<WrResult>,
+}
+
+impl Chare for MuleChare {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            MULE_EXEC => {
+                let drafts: Vec<WorkDraft> = msg.take();
+                for d in drafts {
+                    ctx.submit(d).expect("shipment validated at its home node");
+                }
+            }
+            METHOD_RESULT => {
+                let res: WrResult = msg.take();
+                // pump gone (post-join drain): drop, the home's
+                // ship_timeout already covers the shipment
+                let _ = self.done.send(res);
+            }
+            m => panic!("mule chare got unknown method {m}"),
+        }
+    }
+}
+
+/// Exchange `Hello`s with every peer and verify the SPMD contract
+/// (identical kernel-family fingerprints, so kind ids agree on the
+/// wire). Non-`Hello` frames racing ahead of a slow peer's `Hello` are
+/// buffered and returned as the pump's backlog.
+fn hello_barrier(
+    t: &dyn Transport,
+    families: &[String],
+) -> Result<Vec<(NodeId, Frame)>> {
+    let n = t.nodes();
+    if n <= 1 {
+        return Ok(Vec::new());
+    }
+    let me = t.node();
+    for peer in 0..n as u32 {
+        if peer != me.0 {
+            t.send(
+                NodeId(peer),
+                Frame::Hello { node: me.0, families: families.to_vec() },
+            )
+            .with_context(|| format!("hello to node{peer}"))?;
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut seen = vec![false; n];
+    seen[me.0 as usize] = true;
+    let mut backlog = Vec::new();
+    while seen.iter().any(|s| !s) {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            bail!("{me}: hello barrier timed out; missing peers");
+        }
+        let Some((from, frame)) = t.recv_timeout(left.min(Duration::from_millis(50)))
+        else {
+            continue;
+        };
+        match frame {
+            Frame::Hello { node, families: theirs } => {
+                if theirs != families {
+                    bail!(
+                        "SPMD kernel-registration mismatch: {me} has \
+                         {families:?}, node{node} announced {theirs:?}"
+                    );
+                }
+                seen[node as usize] = true;
+            }
+            other => backlog.push((from, other)),
+        }
+    }
+    Ok(backlog)
+}
+
+/// The pump's own steal/summary counters, folded into the local
+/// `PoolReport` through [`NetEndpoint::account`] and shipped to the
+/// root in the final `Summary` frame.
+#[derive(Debug, Default)]
+struct PumpStats {
+    steals_out: u64,
+    requests_out: u64,
+    steals_in: u64,
+    requests_in: u64,
+    requeues: u64,
+    requeued_requests: u64,
+    peer_summaries: Vec<(u32, [u64; 8])>,
+}
+
+/// A shipment we sent to a thief: the original requests are retained
+/// so results rebuild full `WrResult`s — and so a vanished thief's
+/// batch can requeue at home instead of hanging quiescence.
+struct OutShipment {
+    kind: KernelKindId,
+    reqs: Vec<WorkRequest>,
+    to: NodeId,
+    sent: Instant,
+}
+
+/// A shipment we are executing for a remote home.
+struct InShipment {
+    home: NodeId,
+    outs: Vec<Option<Vec<f32>>>,
+    left: usize,
+}
+
+/// The per-node session thread: drains the transport inbox, ticks
+/// heartbeats and the steal protocol, and runs the collective
+/// shutdown. Exactly one per [`ClusterNode::run`].
+struct Pump {
+    node: NodeId,
+    nodes: usize,
+    transport: Arc<dyn Transport>,
+    endpoint: NetEndpoint,
+    handle: ClusterHandle,
+    net: NetConfig,
+    steal_low: usize,
+    steal_high: usize,
+    app_job: JobId,
+    mule_job: JobId,
+    done_rx: Receiver<WrResult>,
+    draining: Arc<AtomicBool>,
+    leave: Arc<AtomicBool>,
+    alive: Vec<bool>,
+    peer_depth: Vec<u64>,
+    last_hb: Option<Instant>,
+    outbound: HashMap<u64, OutShipment>,
+    inbound: HashMap<u64, InShipment>,
+    next_shipment: u64,
+    /// Deadline of the single outstanding `StealRequest`, if any.
+    steal_wait: Option<Instant>,
+    /// Our summary+goodbye went out: send NOTHING more (late inbound
+    /// frames are dropped or answered by silence — the senders' own
+    /// timeouts cover them).
+    said_goodbye: bool,
+    stats: PumpStats,
+}
+
+impl Pump {
+    fn run(mut self, backlog: Vec<(NodeId, Frame)>) -> PumpStats {
+        for (from, frame) in backlog {
+            self.on_frame(from, frame);
+        }
+        loop {
+            while let Ok(res) = self.done_rx.try_recv() {
+                self.on_mule_result(res);
+            }
+            if let Some((from, frame)) =
+                self.transport.recv_timeout(Duration::from_millis(1))
+            {
+                self.on_frame(from, frame);
+            }
+            self.tick();
+            if !self.said_goodbye
+                && self.leave.load(Ordering::SeqCst)
+                && self.outbound.is_empty()
+                && self.inbound.is_empty()
+            {
+                // summary + goodbye are this node's LAST frames: byte
+                // counters are final when read here, and peers can
+                // trust that nothing follows our goodbye
+                self.handle.close();
+                if self.node.0 != 0 {
+                    let counters = [
+                        self.stats.steals_out,
+                        self.stats.requests_out,
+                        self.stats.steals_in,
+                        self.stats.requests_in,
+                        self.stats.requeues,
+                        self.stats.requeued_requests,
+                        self.transport.bytes_out(),
+                        // bytes_in misses frames still queued from
+                        // peers that outlive us; the root audits with
+                        // its own post-join totals, this is advisory
+                        self.transport.bytes_in(),
+                    ];
+                    let _ = self.transport.send(
+                        NodeId(0),
+                        Frame::Summary { node: self.node.0, counters },
+                    );
+                }
+                for peer in 0..self.nodes as u32 {
+                    if peer != self.node.0 && self.alive[peer as usize] {
+                        let _ = self.transport.send(
+                            NodeId(peer),
+                            Frame::Goodbye { node: self.node.0 },
+                        );
+                    }
+                }
+                self.said_goodbye = true;
+            }
+            if self.said_goodbye {
+                let all_gone = (0..self.nodes)
+                    .all(|p| p == self.node.0 as usize || !self.alive[p]);
+                if all_gone {
+                    break;
+                }
+            }
+        }
+        self.stats
+    }
+
+    fn on_frame(&mut self, from: NodeId, frame: Frame) {
+        match frame {
+            // late hello (already consumed at the barrier)
+            Frame::Hello { .. } => {}
+            Frame::Heartbeat { node, depth } => {
+                if let Some(d) = self.peer_depth.get_mut(node as usize) {
+                    *d = depth;
+                }
+            }
+            Frame::Chare { token, chare, method, payload } => {
+                let job = if token == 0 { self.mule_job } else { self.app_job };
+                let to = ChareId::new(chare.0, chare.1);
+                // placement gone = app already finished here; drop
+                let _ = self.endpoint.post(job, to, Msg::new(method, payload));
+            }
+            Frame::Contribute { round, count, sum, .. } => {
+                self.handle.on_contribute(round, count, sum);
+            }
+            Frame::Release { round, .. } => self.handle.on_release(round),
+            Frame::StealRequest { node } => self.on_steal_request(node),
+            Frame::StealBatch { shipment, kind, reqs } => {
+                self.on_steal_batch(from, shipment, kind, reqs);
+            }
+            Frame::StealResults { shipment, outs } => {
+                self.on_steal_results(shipment, outs);
+            }
+            Frame::StealDecline { shipment } => self.on_steal_decline(shipment),
+            Frame::Summary { node, counters } => {
+                if self.node.0 == 0 {
+                    self.stats.peer_summaries.push((node, counters));
+                }
+            }
+            Frame::Goodbye { node } => self.on_peer_down(NodeId(node)),
+        }
+    }
+
+    /// A thief asked for work: consult the coordinator's drain gate
+    /// (watermarks + busy + wire-cost model) and ship a batch, keeping
+    /// the originals in `outbound` until results or timeout.
+    fn on_steal_request(&mut self, thief: u32) {
+        let t = thief as usize;
+        if self.draining.load(Ordering::SeqCst)
+            || t >= self.alive.len()
+            || !self.alive[t]
+        {
+            return;
+        }
+        let Some(shipment) = self
+            .endpoint
+            .drain(self.peer_depth[t] as usize, self.net.est_item_secs)
+        else {
+            return; // gate said keep it local; thief's expiry re-arms it
+        };
+        debug_assert!(
+            shipment.reqs.len() < 1 << 16,
+            "result tags pack the request index into 16 bits"
+        );
+        let id = ((self.node.0 as u64) << 32) | self.next_shipment;
+        self.next_shipment += 1;
+        let wire: Vec<WireRequest> = shipment
+            .reqs
+            .iter()
+            .map(|wr| WireRequest {
+                wr_id: wr.id,
+                chare: (wr.chare.collection, wr.chare.index),
+                // strip the home's job namespace (upper 16 bits); the
+                // thief re-namespaces under its mule job
+                buffer: wr.buffer.map(|b| b & ((1u64 << 48) - 1)),
+                data_items: wr.data_items as u64,
+                tag: wr.tag,
+                bufs: wr.payload.bufs.clone(),
+                entry_ids: wr.payload.entry_ids.clone(),
+            })
+            .collect();
+        self.stats.steals_out += 1;
+        self.stats.requests_out += wire.len() as u64;
+        let _ = self.transport.send(
+            NodeId(thief),
+            Frame::StealBatch {
+                shipment: id,
+                kind: shipment.kind.0 as u32,
+                reqs: wire,
+            },
+        );
+        self.outbound.insert(
+            id,
+            OutShipment {
+                kind: shipment.kind,
+                reqs: shipment.reqs,
+                to: NodeId(thief),
+                sent: Instant::now(),
+            },
+        );
+    }
+
+    /// A home shipped us a batch: resubmit it through the mule chare.
+    fn on_steal_batch(
+        &mut self,
+        from: NodeId,
+        shipment: u64,
+        kind: u32,
+        reqs: Vec<WireRequest>,
+    ) {
+        self.steal_wait = None;
+        if self.said_goodbye {
+            return; // silence; the home's ship_timeout requeues it
+        }
+        if self.draining.load(Ordering::SeqCst) || reqs.is_empty() {
+            let _ = self
+                .transport
+                .send(from, Frame::StealDecline { shipment });
+            return;
+        }
+        let n = reqs.len();
+        let drafts: Vec<WorkDraft> = reqs
+            .into_iter()
+            .enumerate()
+            .map(|(i, rq)| WorkDraft {
+                chare: MULE_CHARE,
+                kind: KernelKindId(kind as usize),
+                buffer: rq.buffer,
+                data_items: rq.data_items as usize,
+                // the result tag routes back to (shipment, index)
+                tag: (shipment << 16) | i as u64,
+                payload: Tile::with_entries(rq.bufs, rq.entry_ids),
+            })
+            .collect();
+        if !self
+            .endpoint
+            .post(self.mule_job, MULE_CHARE, Msg::new(MULE_EXEC, drafts))
+        {
+            let _ = self
+                .transport
+                .send(from, Frame::StealDecline { shipment });
+            return;
+        }
+        self.inbound.insert(
+            shipment,
+            InShipment { home: from, outs: vec![None; n], left: n },
+        );
+    }
+
+    /// One remotely executed request finished on this node.
+    fn on_mule_result(&mut self, res: WrResult) {
+        let shipment = res.tag >> 16;
+        let idx = (res.tag & 0xffff) as usize;
+        let Some(ins) = self.inbound.get_mut(&shipment) else {
+            return; // duplicate or post-requeue straggler
+        };
+        if idx >= ins.outs.len() {
+            return;
+        }
+        if ins.outs[idx].is_none() {
+            ins.left -= 1;
+        }
+        ins.outs[idx] = Some(res.out);
+        if ins.left > 0 {
+            return;
+        }
+        let ins = self.inbound.remove(&shipment).expect("present");
+        let home = ins.home;
+        if !self.alive[home.0 as usize] {
+            // dead home: results have nowhere to go. Do NOT count them
+            // as steals_in — conservation counts a steal only when the
+            // results ship, so the home's requeue keeps the books exact.
+            return;
+        }
+        let outs: Vec<Vec<f32>> =
+            ins.outs.into_iter().map(|o| o.expect("left hit 0")).collect();
+        self.stats.steals_in += 1;
+        self.stats.requests_in += outs.len() as u64;
+        self.endpoint.account(NetAccountDelta {
+            remote_steals_in: 1,
+            remote_requests_in: outs.len() as u64,
+            ..Default::default()
+        });
+        let _ = self
+            .transport
+            .send(home, Frame::StealResults { shipment, outs });
+    }
+
+    /// Results came home: rebuild full `WrResult`s from the retained
+    /// originals and hand them to the coordinator, which scatters them
+    /// to the owning chares and drops the quiescence holds.
+    fn on_steal_results(&mut self, shipment: u64, outs: Vec<Vec<f32>>) {
+        let Some(out_ship) = self.outbound.remove(&shipment) else {
+            // we already requeued (timeout or thief-down): the work ran
+            // twice, results are stale. Count them so conservation
+            // still balances: steals_in = steals_out - stale_batches...
+            self.endpoint.account(NetAccountDelta {
+                remote_stale_batches: 1,
+                remote_stale_results: outs.len() as u64,
+                ..Default::default()
+            });
+            return;
+        };
+        if outs.len() != out_ship.reqs.len() {
+            // malformed (truncated frame?): requeue rather than zip
+            // short and leak quiescence holds
+            self.requeue_shipment(out_ship);
+            return;
+        }
+        let kind = out_ship.kind;
+        let results: Vec<(JobId, ChareId, WrResult)> = out_ship
+            .reqs
+            .into_iter()
+            .zip(outs)
+            .map(|(wr, out)| {
+                (
+                    wr.job,
+                    wr.chare,
+                    WrResult { wr_id: wr.id, tag: wr.tag, kind, out },
+                )
+            })
+            .collect();
+        self.endpoint.finish(results);
+    }
+
+    fn on_steal_decline(&mut self, shipment: u64) {
+        if let Some(out_ship) = self.outbound.remove(&shipment) {
+            self.requeue_shipment(out_ship);
+        }
+    }
+
+    fn requeue_shipment(&mut self, out_ship: OutShipment) {
+        self.stats.requeues += 1;
+        self.stats.requeued_requests += out_ship.reqs.len() as u64;
+        self.endpoint.requeue(out_ship.kind, out_ship.reqs);
+    }
+
+    /// A peer departed (graceful `Goodbye`, or synthesized by the
+    /// transport when a stream died): requeue everything we had shipped
+    /// to it, unwedge the reduction tree, and stop heartbeating it.
+    fn on_peer_down(&mut self, peer: NodeId) {
+        let p = peer.0 as usize;
+        if p >= self.alive.len() || p == self.node.0 as usize || !self.alive[p]
+        {
+            return;
+        }
+        self.alive[p] = false;
+        self.handle.on_goodbye(peer);
+        let requeue: Vec<u64> = self
+            .outbound
+            .iter()
+            .filter(|(_, s)| s.to == peer)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in requeue {
+            let out_ship = self.outbound.remove(&id).expect("present");
+            self.requeue_shipment(out_ship);
+        }
+        // inbound shipments FROM the dead home keep executing (the mule
+        // can't cancel); their results drop uncounted in on_mule_result
+    }
+
+    /// Heartbeat-period work: expire overdue shipments, advertise our
+    /// depth, and maybe ask the deepest peer for work.
+    fn tick(&mut self) {
+        if self.said_goodbye {
+            return; // nothing follows our goodbye, not even heartbeats
+        }
+        let now = Instant::now();
+        if self
+            .last_hb
+            .is_some_and(|t| now.duration_since(t) < self.net.heartbeat)
+        {
+            return;
+        }
+        self.last_hb = Some(now);
+        let overdue: Vec<u64> = self
+            .outbound
+            .iter()
+            .filter(|(_, s)| now.duration_since(s.sent) > self.net.ship_timeout)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in overdue {
+            let out_ship = self.outbound.remove(&id).expect("present");
+            self.requeue_shipment(out_ship);
+        }
+        let depth = self.endpoint.depth();
+        for peer in 0..self.nodes as u32 {
+            if peer != self.node.0 && self.alive[peer as usize] {
+                let _ = self.transport.send(
+                    NodeId(peer),
+                    Frame::Heartbeat { node: self.node.0, depth },
+                );
+            }
+        }
+        if !self.net.steal || self.draining.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(deadline) = self.steal_wait {
+            if now < deadline {
+                return; // one outstanding request at a time
+            }
+            self.steal_wait = None;
+        }
+        if depth as usize >= self.steal_low {
+            return;
+        }
+        let target = (0..self.nodes)
+            .filter(|&p| p != self.node.0 as usize && self.alive[p])
+            .max_by_key(|&p| self.peer_depth[p])
+            .filter(|&p| self.peer_depth[p] as usize >= self.steal_high);
+        if let Some(p) = target {
+            let _ = self.transport.send(
+                NodeId(p as u32),
+                Frame::StealRequest { node: self.node.0 },
+            );
+            self.steal_wait = Some(now + self.net.steal_expiry);
+        }
+    }
+}
+
+/// One node's session: `Runtime` + transport + pump, run to completion.
+pub struct ClusterNode;
+
+impl ClusterNode {
+    /// Run the application job built by `build` as this node's share of
+    /// the SPMD cluster: handshake, submit, pump until the app job and
+    /// every peer have finished, and fold the cross-node counters into
+    /// the local [`PoolReport`].
+    ///
+    /// `build` receives the node's [`ClusterHandle`]; the spec it
+    /// returns must register the same kernel families (same names, same
+    /// order) on every node.
+    pub fn run<F>(
+        cfg: Config,
+        net: NetConfig,
+        transport: Arc<dyn Transport>,
+        build: F,
+    ) -> Result<NodeReport>
+    where
+        F: FnOnce(ClusterHandle) -> JobSpec,
+    {
+        let node = transport.node();
+        let nodes = transport.nodes();
+        let steal_low = cfg.steal_low;
+        let steal_high = cfg.steal_high;
+        let rt = Runtime::new(cfg)?;
+        let endpoint = rt.net_endpoint();
+        let handle = ClusterHandle::new(node, nodes, Some(transport.clone()));
+        let spec = build(handle.clone());
+        let families: Vec<String> = spec
+            .kernel_descs()
+            .iter()
+            .map(|d| d.kernel.name.to_string())
+            .collect();
+        let backlog = hello_barrier(transport.as_ref(), &families)?;
+
+        let (done_tx, done_rx) = channel();
+        let (stop_tx, stop_rx) = channel::<()>();
+        let mule = rt
+            .submit_job(
+                JobSpec::new("net-mule")
+                    .chare(MULE_CHARE, 0, Box::new(MuleChare { done: done_tx }))
+                    .driver(move |_| {
+                        // alive until the session releases it; remote
+                        // work arrives as messages, not driver calls
+                        let _ = stop_rx.recv();
+                        Ok(Vec::new())
+                    }),
+            )
+            .context("submit mule job")?;
+        let app = rt.submit_job(spec).context("submit app job")?;
+
+        let draining = Arc::new(AtomicBool::new(false));
+        let leave = Arc::new(AtomicBool::new(false));
+        let pump = Pump {
+            node,
+            nodes,
+            transport: transport.clone(),
+            endpoint: rt.net_endpoint(),
+            handle,
+            net,
+            steal_low,
+            steal_high,
+            app_job: app.job(),
+            mule_job: mule.job(),
+            done_rx,
+            draining: draining.clone(),
+            leave: leave.clone(),
+            alive: vec![true; nodes],
+            peer_depth: vec![0; nodes],
+            last_hb: None,
+            outbound: HashMap::new(),
+            inbound: HashMap::new(),
+            next_shipment: 0,
+            steal_wait: None,
+            // a solo node has no one to say goodbye to
+            said_goodbye: nodes <= 1,
+            stats: PumpStats::default(),
+        };
+        let pump_thread = thread::Builder::new()
+            .name(format!("net-pump-{node}"))
+            .spawn(move || pump.run(backlog))
+            .context("spawn pump")?;
+
+        let app_result = app.wait();
+        // draining: decline new inbound steals but finish the ones in
+        // hand; leave: summary+goodbye once both shipment maps empty.
+        // The pump still pumps until every peer said goodbye, so an
+        // early-finishing node keeps delivering frames for the slow.
+        draining.store(true, Ordering::SeqCst);
+        leave.store(true, Ordering::SeqCst);
+        let stats = pump_thread.join().expect("pump thread panicked");
+        drop(stop_tx);
+        let _ = mule.wait();
+        // transport counters are final: we said goodbye last-frame and
+        // every peer's goodbye has been collected
+        endpoint.account(NetAccountDelta {
+            wire_bytes_out: transport.bytes_out(),
+            wire_bytes_in: transport.bytes_in(),
+            ..Default::default()
+        });
+        match app_result {
+            Ok(report) => {
+                let pool = rt.shutdown();
+                Ok(NodeReport {
+                    node,
+                    series: report.series,
+                    pool,
+                    peer_summaries: stats.peer_summaries,
+                })
+            }
+            Err(e) => {
+                rt.shutdown();
+                Err(e).with_context(|| format!("{node}: app job failed"))
+            }
+        }
+    }
+}
+
+/// Convenience launcher for in-process clusters (tests, `--nodes N`).
+pub struct Cluster;
+
+impl Cluster {
+    /// Run `nodes` [`ClusterNode`]s over a [`LoopbackFabric`], one
+    /// thread each, and return their reports in node order. `make` is
+    /// called once per node (SPMD: it must register identical kernel
+    /// families everywhere).
+    pub fn loopback<F>(
+        nodes: usize,
+        cfg: Config,
+        net: NetConfig,
+        make: F,
+    ) -> Result<Vec<NodeReport>>
+    where
+        F: Fn(NodeId, ClusterHandle) -> JobSpec + Send + Sync + 'static,
+    {
+        let transports: Vec<Arc<dyn Transport>> = LoopbackFabric::new(nodes)
+            .into_iter()
+            .map(|t| Arc::new(t) as Arc<dyn Transport>)
+            .collect();
+        Cluster::over(transports, cfg, net, make)
+    }
+
+    /// Same, over caller-supplied transports (the chaos harness passes
+    /// a fault-injecting fabric here).
+    pub fn over<F>(
+        transports: Vec<Arc<dyn Transport>>,
+        cfg: Config,
+        net: NetConfig,
+        make: F,
+    ) -> Result<Vec<NodeReport>>
+    where
+        F: Fn(NodeId, ClusterHandle) -> JobSpec + Send + Sync + 'static,
+    {
+        let make = Arc::new(make);
+        let handles: Vec<_> = transports
+            .into_iter()
+            .map(|t| {
+                let cfg = cfg.clone();
+                let net = net.clone();
+                let make = make.clone();
+                let node = t.node();
+                thread::Builder::new()
+                    .name(format!("cluster-{node}"))
+                    .spawn(move || {
+                        ClusterNode::run(cfg, net, t, move |h| make(node, h))
+                    })
+                    .expect("spawn cluster node")
+            })
+            .collect();
+        let mut reports = Vec::new();
+        for h in handles {
+            reports.push(h.join().expect("cluster node thread panicked")?);
+        }
+        reports.sort_by_key(|r| r.node.0);
+        Ok(reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_handle_short_circuits() {
+        let h = ClusterHandle::solo();
+        assert!(h.is_root());
+        assert_eq!(h.nodes(), 1);
+        assert_eq!(h.reduce(0, 3, 1.5), Some((3, 1.5)));
+        // rounds never accumulate state on the solo path
+        assert_eq!(h.reduce(0, 4, 2.5), Some((4, 2.5)));
+    }
+
+    fn tiny_cfg() -> Config {
+        Config { pes: 1, ..Config::default() }
+    }
+
+    /// Driver-only spec: `node` contributes `(node+1) * (round+1)` for
+    /// four rounds; the root's series is the cluster totals.
+    fn reduce_spec(rounds: u32, node: NodeId, h: ClusterHandle) -> JobSpec {
+        JobSpec::new(format!("reduce-{node}")).driver(move |_| {
+            let mut series = Vec::new();
+            for r in 0..rounds {
+                let mine = ((node.0 + 1) * (r + 1)) as f64;
+                if let Some((count, sum)) = h.reduce(r, 1, mine) {
+                    assert_eq!(count as usize, h.nodes(), "everyone counted");
+                    series.push(sum);
+                }
+            }
+            Ok(series)
+        })
+    }
+
+    #[test]
+    fn two_node_reduction_tree_is_exact_and_byte_balanced() {
+        let reports = Cluster::loopback(
+            2,
+            tiny_cfg(),
+            NetConfig::default(),
+            |node, h| reduce_spec(4, node, h),
+        )
+        .expect("cluster runs");
+        // node n contributes (n+1)*(r+1): totals 3(r+1)
+        assert_eq!(reports[0].series, vec![3.0, 6.0, 9.0, 12.0]);
+        assert!(reports[1].series.is_empty(), "non-root owns no series");
+        // goodbye-is-last-frame makes loopback byte accounting exact
+        let out: u64 = reports.iter().map(|r| r.pool.wire_bytes_out).sum();
+        let inn: u64 = reports.iter().map(|r| r.pool.wire_bytes_in).sum();
+        assert_eq!(out, inn, "every sent byte was received");
+        assert_eq!(
+            reports[0].peer_summaries.len(),
+            1,
+            "root collected node1's summary"
+        );
+    }
+
+    #[test]
+    fn four_node_tree_totals_match_flat_sum() {
+        let reports = Cluster::loopback(
+            4,
+            tiny_cfg(),
+            NetConfig::default(),
+            |node, h| reduce_spec(3, node, h),
+        )
+        .expect("cluster runs");
+        // sum over nodes of (n+1)(r+1) = 10(r+1), exact in f64
+        assert_eq!(reports[0].series, vec![10.0, 20.0, 30.0]);
+        for r in &reports[1..] {
+            assert!(r.series.is_empty());
+        }
+    }
+
+    #[test]
+    fn early_peer_exit_degrades_the_series_without_hanging() {
+        // node 1 leaves after 2 of 4 rounds. FIFO per link means its
+        // contributions for rounds 0-1 always precede its goodbye, so
+        // the root's series is deterministic: full totals for 0-1,
+        // root-only for 2-3.
+        let reports = Cluster::loopback(
+            2,
+            tiny_cfg(),
+            NetConfig::default(),
+            |node, h| {
+                let my_rounds = if node.0 == 1 { 2 } else { 4 };
+                JobSpec::new(format!("early-{node}")).driver(move |_| {
+                    let mut series = Vec::new();
+                    for r in 0..my_rounds {
+                        let mine = ((node.0 + 1) * (r + 1)) as f64;
+                        if let Some((_, sum)) = h.reduce(r, 1, mine) {
+                            series.push(sum);
+                        }
+                    }
+                    Ok(series)
+                })
+            },
+        )
+        .expect("cluster survives the early exit");
+        assert_eq!(
+            reports[0].series,
+            vec![3.0, 6.0, 3.0, 4.0],
+            "rounds 0-1 are cluster totals, 2-3 root-only"
+        );
+    }
+}

@@ -1,0 +1,309 @@
+//! In-process fabric: deterministic, zero-copy, channel-backed.
+//!
+//! Frames are *moved* between endpoints — never serialized — so a
+//! 1-node cluster (and the `--nodes N` CLI mode) adds no copies to the
+//! single-process hot path. `bytes_on_wire` accounting still holds:
+//! every handoff charges [`Frame::encoded_len`], which the wire tests
+//! pin to the real encoding, and delivery is a synchronous handoff so
+//! the sender's `bytes_out` and the receiver's `bytes_in` stay equal
+//! by construction (the conservation clause the chaos checker audits).
+//!
+//! Under `--features chaos` (and in unit tests) each directed link can
+//! carry a [`LinkFault`]: frames delayed behind later sends, adjacent
+//! pairs reordered, every n-th heartbeat dropped (dropped bytes are
+//! counted so conservation stays checkable). A `Goodbye` flushes the
+//! link's held frames first — a graceful departure drains the link —
+//! which keeps reduction and steal traffic causally ordered with the
+//! departure itself.
+
+#[cfg(any(test, feature = "chaos"))]
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::wire::Frame;
+use super::{NodeId, Transport};
+
+/// Deterministic fault on every directed link of a fabric. `delay`
+/// holds each frame back until `delay` later sends push it out;
+/// `reorder` swaps adjacent frame pairs; `drop_nth_heartbeat` drops
+/// every n-th heartbeat (only heartbeats — they are the only frames
+/// whose loss the protocol tolerates by design). Zero/false everywhere
+/// means a transparent link.
+#[cfg(any(test, feature = "chaos"))]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkFault {
+    pub delay: usize,
+    pub reorder: bool,
+    pub drop_nth_heartbeat: usize,
+}
+
+#[cfg(any(test, feature = "chaos"))]
+#[derive(Default)]
+struct LinkState {
+    held: VecDeque<Frame>,
+    heartbeats_seen: usize,
+}
+
+/// Constructor namespace for loopback endpoint sets.
+pub struct LoopbackFabric;
+
+impl LoopbackFabric {
+    /// `n` connected endpoints, one per node, transparent links.
+    pub fn new(n: usize) -> Vec<Loopback> {
+        Self::build(n, None)
+    }
+
+    /// Endpoints whose every directed link carries `fault`. The
+    /// returned counter accumulates the encoded bytes of dropped
+    /// frames so `bytes_out == bytes_in + dropped` stays auditable.
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn with_faults(n: usize, fault: LinkFault) -> (Vec<Loopback>, Arc<AtomicU64>) {
+        let dropped = Arc::new(AtomicU64::new(0));
+        let eps = Self::build(n, Some((fault, dropped.clone())));
+        (eps, dropped)
+    }
+
+    #[cfg(not(any(test, feature = "chaos")))]
+    fn build(n: usize, _unused: Option<()>) -> Vec<Loopback> {
+        Self::wire_up(n)
+    }
+
+    #[cfg(any(test, feature = "chaos"))]
+    fn build(n: usize, faults: Option<(LinkFault, Arc<AtomicU64>)>) -> Vec<Loopback> {
+        let mut eps = Self::wire_up(n);
+        if let Some((fault, dropped)) = faults {
+            for ep in &mut eps {
+                ep.fault = fault;
+                ep.dropped = dropped.clone();
+                ep.links = (0..n).map(|_| Mutex::new(LinkState::default())).collect();
+            }
+        }
+        eps
+    }
+
+    fn wire_up(n: usize) -> Vec<Loopback> {
+        let chans: Vec<(Sender<(NodeId, Frame)>, Receiver<(NodeId, Frame)>)> =
+            (0..n).map(|_| channel()).collect();
+        let inns: Vec<Arc<AtomicU64>> = (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let txs: Vec<Sender<(NodeId, Frame)>> = chans.iter().map(|(tx, _)| tx.clone()).collect();
+        chans
+            .into_iter()
+            .enumerate()
+            .map(|(i, (_tx, rx))| Loopback {
+                node: NodeId(i as u32),
+                n,
+                peers: (0..n)
+                    .map(|j| {
+                        (j != i).then(|| Peer { tx: txs[j].clone(), inn: inns[j].clone() })
+                    })
+                    .collect(),
+                rx: Mutex::new(rx),
+                inn: inns[i].clone(),
+                out: AtomicU64::new(0),
+                #[cfg(any(test, feature = "chaos"))]
+                fault: Default::default(),
+                #[cfg(any(test, feature = "chaos"))]
+                dropped: Arc::new(AtomicU64::new(0)),
+                #[cfg(any(test, feature = "chaos"))]
+                links: Vec::new(),
+            })
+            .collect()
+    }
+}
+
+struct Peer {
+    tx: Sender<(NodeId, Frame)>,
+    /// The *receiving* endpoint's `bytes_in` counter, charged at the
+    /// handoff (delivery is synchronous, so out/in never diverge).
+    inn: Arc<AtomicU64>,
+}
+
+/// One node's endpoint of an in-process fabric.
+pub struct Loopback {
+    node: NodeId,
+    n: usize,
+    peers: Vec<Option<Peer>>,
+    rx: Mutex<Receiver<(NodeId, Frame)>>,
+    inn: Arc<AtomicU64>,
+    out: AtomicU64,
+    #[cfg(any(test, feature = "chaos"))]
+    fault: LinkFault,
+    #[cfg(any(test, feature = "chaos"))]
+    dropped: Arc<AtomicU64>,
+    /// Per-destination held-frame queues; empty when the fabric was
+    /// built without faults.
+    #[cfg(any(test, feature = "chaos"))]
+    links: Vec<Mutex<LinkState>>,
+}
+
+impl Loopback {
+    fn deliver(&self, to: usize, frame: Frame) {
+        if let Some(peer) = &self.peers[to] {
+            let len = frame.encoded_len() as u64;
+            // a departed peer has dropped its receiver; frames to the
+            // dead vanish uncounted, exactly like an unread socket
+            if peer.tx.send((self.node, frame)).is_ok() {
+                self.out.fetch_add(len, Ordering::Relaxed);
+                peer.inn.fetch_add(len, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Transport for Loopback {
+    fn node(&self) -> NodeId {
+        self.node
+    }
+
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    #[cfg(not(any(test, feature = "chaos")))]
+    fn send(&self, to: NodeId, frame: Frame) -> Result<()> {
+        self.deliver(to.0 as usize, frame);
+        Ok(())
+    }
+
+    #[cfg(any(test, feature = "chaos"))]
+    fn send(&self, to: NodeId, frame: Frame) -> Result<()> {
+        let to = to.0 as usize;
+        if self.links.is_empty() {
+            self.deliver(to, frame);
+            return Ok(());
+        }
+        // faulted link: drop / hold / reorder before real delivery
+        let mut ready: Vec<Frame> = Vec::new();
+        {
+            let mut link = self.links[to].lock().unwrap();
+            if matches!(frame, Frame::Heartbeat { .. }) && self.fault.drop_nth_heartbeat > 0 {
+                link.heartbeats_seen += 1;
+                if link.heartbeats_seen % self.fault.drop_nth_heartbeat == 0 {
+                    // the sender did put it on the wire: count it out,
+                    // and into `dropped`, so out == in + dropped holds
+                    let len = frame.encoded_len() as u64;
+                    self.out.fetch_add(len, Ordering::Relaxed);
+                    self.dropped.fetch_add(len, Ordering::Relaxed);
+                    return Ok(());
+                }
+            }
+            if matches!(frame, Frame::Goodbye { .. }) {
+                // graceful departure drains the link before the goodbye
+                ready.extend(link.held.drain(..));
+                ready.push(frame);
+            } else if self.fault.reorder {
+                // swap adjacent pairs: deliver the newer frame first
+                match link.held.pop_front() {
+                    Some(older) => {
+                        ready.push(frame);
+                        ready.push(older);
+                    }
+                    None => link.held.push_back(frame),
+                }
+            } else if self.fault.delay > 0 {
+                link.held.push_back(frame);
+                while link.held.len() > self.fault.delay {
+                    ready.push(link.held.pop_front().unwrap());
+                }
+            } else {
+                ready.push(frame);
+            }
+        }
+        for f in ready {
+            self.deliver(to, f);
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<(NodeId, Frame)> {
+        self.rx.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    fn bytes_out(&self) -> u64 {
+        self.out.load(Ordering::Relaxed)
+    }
+
+    fn bytes_in(&self) -> u64 {
+        self.inn.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hb(node: u32) -> Frame {
+        Frame::Heartbeat { node, depth: 0 }
+    }
+
+    #[test]
+    fn frames_flow_between_endpoints_and_bytes_balance() {
+        let eps = LoopbackFabric::new(2);
+        let f = Frame::Contribute { token: 1, round: 0, count: 2, sum: 8.0 };
+        let len = f.encoded_len() as u64;
+        eps[0].send(NodeId(1), f.clone()).unwrap();
+        let (from, got) = eps[1].recv_timeout(Duration::from_secs(1)).expect("delivered");
+        assert_eq!(from, NodeId(0));
+        assert_eq!(got, f);
+        assert_eq!(eps[0].bytes_out(), len);
+        assert_eq!(eps[1].bytes_in(), len);
+        assert_eq!(eps[0].bytes_in(), 0);
+        assert!(eps[1].recv_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn reorder_swaps_adjacent_frames_and_goodbye_flushes() {
+        let (eps, _) =
+            LoopbackFabric::with_faults(2, LinkFault { reorder: true, ..Default::default() });
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 0 }).unwrap();
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 1 }).unwrap();
+        // the pair arrives swapped
+        let a = eps[1].recv_timeout(Duration::from_secs(1)).unwrap().1;
+        let b = eps[1].recv_timeout(Duration::from_secs(1)).unwrap().1;
+        assert_eq!(a, Frame::Release { token: 1, round: 1 });
+        assert_eq!(b, Frame::Release { token: 1, round: 0 });
+        // an odd frame held back is drained by the goodbye, in order
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 2 }).unwrap();
+        eps[0].send(NodeId(1), Frame::Goodbye { node: 0 }).unwrap();
+        let c = eps[1].recv_timeout(Duration::from_secs(1)).unwrap().1;
+        let d = eps[1].recv_timeout(Duration::from_secs(1)).unwrap().1;
+        assert_eq!(c, Frame::Release { token: 1, round: 2 });
+        assert_eq!(d, Frame::Goodbye { node: 0 });
+    }
+
+    #[test]
+    fn delay_holds_frames_behind_later_sends() {
+        let (eps, _) =
+            LoopbackFabric::with_faults(2, LinkFault { delay: 2, ..Default::default() });
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 0 }).unwrap();
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 1 }).unwrap();
+        assert!(eps[1].recv_timeout(Duration::from_millis(1)).is_none(), "held");
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 2 }).unwrap();
+        let got = eps[1].recv_timeout(Duration::from_secs(1)).unwrap().1;
+        assert_eq!(got, Frame::Release { token: 1, round: 0 }, "FIFO despite the delay");
+    }
+
+    #[test]
+    fn dropped_heartbeats_are_counted_and_only_heartbeats_drop() {
+        let (eps, dropped) = LoopbackFabric::with_faults(
+            2,
+            LinkFault { drop_nth_heartbeat: 2, ..Default::default() },
+        );
+        eps[0].send(NodeId(1), hb(0)).unwrap();
+        eps[0].send(NodeId(1), hb(0)).unwrap(); // second one drops
+        eps[0].send(NodeId(1), Frame::Release { token: 1, round: 0 }).unwrap();
+        assert_eq!(dropped.load(Ordering::Relaxed), hb(0).encoded_len() as u64);
+        let mut got = Vec::new();
+        while let Some((_, f)) = eps[1].recv_timeout(Duration::from_millis(5)) {
+            got.push(f);
+        }
+        assert_eq!(got, vec![hb(0), Frame::Release { token: 1, round: 0 }]);
+        // conservation: out == in + dropped
+        assert_eq!(eps[0].bytes_out(), eps[1].bytes_in() + dropped.load(Ordering::Relaxed));
+    }
+}

@@ -1,0 +1,100 @@
+//! Multi-node transport: active messages between runtime instances.
+//!
+//! The G-Charm model is inherently distributed — chares live wherever
+//! capacity exists and messages find them (paper section 2; the
+//! overdecomposition-on-distributed-memory line of work carries the
+//! same combining/reuse strategies across nodes). This module extends
+//! the single-process [`Runtime`](crate::coordinator::Runtime) to a
+//! set of peer nodes connected by a [`Transport`]:
+//!
+//! * [`wire`] — the length-prefixed frame format: serialized chare
+//!   messages, kernel-registration announcements (`Hello`), reduction
+//!   contributions, and batch-steal shipments, all hand-rolled
+//!   little-endian (the crate's only dependency is `anyhow`).
+//! * [`loopback`] — in-process fabric backed by channels. Frames are
+//!   moved, never serialized (zero-copy); `bytes_on_wire` accounting
+//!   uses [`wire::Frame::encoded_len`], which a property test pins to
+//!   the real encoding. Deterministic, and the substrate for the chaos
+//!   harness's node-fault theme.
+//! * [`tcp`] — real sockets: `u32`-length-prefixed frames over
+//!   localhost/LAN, bounded connect retries with exponential backoff +
+//!   jitter, a reader thread per peer, and a synthesized `Goodbye`
+//!   when a peer's stream dies so liveness never hangs on a vanished
+//!   node.
+//! * [`cluster`] — the node session gluing a transport to a local
+//!   `Runtime`: SPMD registration handshake, cross-node reduction
+//!   trees folding into the per-job reduction counters, and cross-node
+//!   batch steal reusing the device pool's learned-rate watermarks.
+//!
+//! Placement becomes `(NodeId, JobId, ChareId)`:
+//! [`rendezvous_node`](crate::coordinator::rendezvous_node) gives every
+//! chare a home node by the same highest-random-weight hash the device
+//! router uses, and a remote steal pays an explicit
+//! serialize+transfer+restage cost ([`wire_secs`]) so it only wins
+//! when the model says it does.
+
+pub mod cluster;
+pub mod loopback;
+pub mod tcp;
+pub mod wire;
+
+pub use cluster::{Cluster, ClusterHandle, ClusterNode, NetConfig, NodeReport};
+pub use loopback::{Loopback, LoopbackFabric};
+pub use tcp::Tcp;
+pub use wire::{Frame, WirePayload, WireRequest};
+
+use std::time::Duration;
+
+/// A node in the cluster. Dense ids `0..nodes`; node 0 is the root of
+/// the reduction tree and the coordinator of collective shutdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node{}", self.0)
+    }
+}
+
+/// Modeled one-way latency of a frame, seconds (localhost-class).
+/// The steal cost model charges this per shipment on top of the
+/// bandwidth term; see [`wire_secs`].
+pub const WIRE_LATENCY: f64 = 30e-6;
+
+/// Modeled wire bandwidth, bytes/second (loopback-class; a LAN would
+/// be ~10x slower, which only makes remote steal *more* conservative).
+pub const WIRE_BANDWIDTH: f64 = 4e9;
+
+/// Modeled seconds to move `bytes` to a peer: the explicit
+/// serialize+transfer half of the remote-steal cost (the restage half
+/// is charged by the thief's own staging pipeline when the mule job
+/// resubmits). A shipment is only sent when this is smaller than the
+/// queue-wait it saves.
+pub fn wire_secs(bytes: u64) -> f64 {
+    WIRE_LATENCY + bytes as f64 / WIRE_BANDWIDTH
+}
+
+/// Point-to-point frame carrier between `nodes` peers.
+///
+/// Implementations must be usable from several threads at once (the
+/// session pump receives while drivers and heartbeat timers send).
+/// `recv_timeout` is single-consumer by convention: exactly one pump
+/// thread per node drains the inbox.
+pub trait Transport: Send + Sync {
+    /// This endpoint's node id.
+    fn node(&self) -> NodeId;
+    /// Cluster size (dense ids `0..nodes`).
+    fn nodes(&self) -> usize;
+    /// Queue `frame` to `to`. Delivery is FIFO per (sender, receiver)
+    /// pair. Sending to a departed peer is not an error — frames to
+    /// the dead are dropped silently (liveness is the session's job).
+    fn send(&self, to: NodeId, frame: Frame) -> anyhow::Result<()>;
+    /// Next inbound frame and its sender, or `None` on timeout.
+    fn recv_timeout(&self, timeout: Duration) -> Option<(NodeId, Frame)>;
+    /// Total bytes put on the wire by this endpoint (frame bodies, by
+    /// [`Frame::encoded_len`]; the 4-byte TCP length prefix is
+    /// excluded so loopback and TCP agree).
+    fn bytes_out(&self) -> u64;
+    /// Total frame-body bytes taken off the wire by this endpoint.
+    fn bytes_in(&self) -> u64;
+}

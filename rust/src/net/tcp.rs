@@ -1,0 +1,296 @@
+//! TCP transport: length-prefixed frames over localhost/LAN.
+//!
+//! Full mesh with one connection per unordered pair: the higher node
+//! id dials, the lower accepts, and the dialer's first four bytes are
+//! its node id (little-endian) so the acceptor can place the stream.
+//! Dialing uses bounded retries with exponential backoff plus a
+//! deterministic per-node jitter — peers of a cluster rarely start in
+//! lockstep, and a thundering-herd reconnect is exactly what the
+//! backoff avoids.
+//!
+//! Each established stream gets a reader thread: `u32` little-endian
+//! body length, body, [`Frame::decode`]. Any read or decode error is
+//! treated as a dead peer and surfaces as a synthesized
+//! [`Frame::Goodbye`] on the inbox, so the session's peer-down
+//! draining runs whether the departure was graceful or not. Writes to
+//! a dead stream are dropped silently — liveness is the session's job,
+//! carried by heartbeats, not the transport's.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::Frame;
+use super::{NodeId, Transport};
+
+/// Dial retry bound: ~40 attempts, backoff capped at 1 s, worst case
+/// well under a minute — mirroring the chaos shutdown contract that
+/// nothing waits unbounded.
+const DIAL_ATTEMPTS: u32 = 40;
+const DIAL_BACKOFF_BASE_MS: u64 = 20;
+const DIAL_BACKOFF_CAP_MS: u64 = 1000;
+/// Accept-side bound for the full mesh to form.
+const ACCEPT_DEADLINE: Duration = Duration::from_secs(45);
+/// Largest frame body we will read; far above any real shipment.
+const MAX_FRAME: u32 = 64 << 20;
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// One node's endpoint of a TCP mesh.
+pub struct Tcp {
+    node: NodeId,
+    n: usize,
+    peers: Vec<Option<Mutex<TcpStream>>>,
+    rx: Mutex<Receiver<(NodeId, Frame)>>,
+    out: AtomicU64,
+    inn: Arc<AtomicU64>,
+}
+
+impl Tcp {
+    /// Join a mesh of `peers.len()` nodes. `peers[i]` is node i's
+    /// listen address; this node binds `peers[node]` and then dials
+    /// every lower id while accepting every higher one.
+    pub fn connect(node: u32, peers: &[String]) -> Result<Tcp> {
+        let me = peers
+            .get(node as usize)
+            .with_context(|| format!("node {node} has no address among {} peers", peers.len()))?;
+        let listener = TcpListener::bind(me.as_str())
+            .with_context(|| format!("node {node}: bind {me}"))?;
+        Self::with_listener(node, listener, peers)
+    }
+
+    /// Same as [`connect`](Tcp::connect) with a pre-bound listener —
+    /// tests bind port 0 first to learn their addresses.
+    pub fn with_listener(node: u32, listener: TcpListener, peers: &[String]) -> Result<Tcp> {
+        let n = peers.len();
+        if (node as usize) >= n {
+            bail!("node id {node} outside cluster of {n}");
+        }
+        let mut streams: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+
+        // dial every lower id with bounded backoff + jitter
+        for (j, addr) in peers.iter().enumerate().take(node as usize) {
+            let mut stream = None;
+            for attempt in 0..DIAL_ATTEMPTS {
+                match TcpStream::connect(addr.as_str()) {
+                    Ok(s) => {
+                        stream = Some(s);
+                        break;
+                    }
+                    Err(_) if attempt + 1 < DIAL_ATTEMPTS => {
+                        let backoff = DIAL_BACKOFF_CAP_MS
+                            .min(DIAL_BACKOFF_BASE_MS << attempt.min(6));
+                        let jitter =
+                            splitmix64(((node as u64) << 32) ^ attempt as u64) % 30;
+                        std::thread::sleep(Duration::from_millis(backoff + jitter));
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!("node {node}: dialing node {j} at {addr} (final attempt)")
+                        });
+                    }
+                }
+            }
+            let mut s = stream.unwrap();
+            s.write_all(&node.to_le_bytes())
+                .with_context(|| format!("node {node}: id preamble to node {j}"))?;
+            let _ = s.set_nodelay(true);
+            streams[j] = Some(s);
+        }
+
+        // accept every higher id, bounded by a deadline
+        let expected = n - 1 - node as usize;
+        if expected > 0 {
+            listener.set_nonblocking(true)?;
+            let deadline = Instant::now() + ACCEPT_DEADLINE;
+            let mut got = 0;
+            while got < expected {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        s.set_nonblocking(false)?;
+                        let mut id = [0u8; 4];
+                        s.read_exact(&mut id)
+                            .with_context(|| format!("node {node}: peer id preamble"))?;
+                        let peer = u32::from_le_bytes(id) as usize;
+                        if peer <= node as usize || peer >= n {
+                            bail!("node {node}: unexpected peer id {peer}");
+                        }
+                        if streams[peer].is_some() {
+                            bail!("node {node}: duplicate connection from node {peer}");
+                        }
+                        let _ = s.set_nodelay(true);
+                        streams[peer] = Some(s);
+                        got += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() > deadline {
+                            bail!(
+                                "node {node}: only {got}/{expected} peers connected \
+                                 within {ACCEPT_DEADLINE:?}"
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("accept"),
+                }
+            }
+        }
+
+        // one reader thread per peer, feeding a shared inbox
+        let (tx, rx) = channel();
+        let inn = Arc::new(AtomicU64::new(0));
+        let mut peers_out: Vec<Option<Mutex<TcpStream>>> = (0..n).map(|_| None).collect();
+        for (j, s) in streams.into_iter().enumerate() {
+            let Some(s) = s else { continue };
+            let reader = s.try_clone().context("clone stream for reader")?;
+            let tx: Sender<(NodeId, Frame)> = tx.clone();
+            let inn = inn.clone();
+            std::thread::Builder::new()
+                .name(format!("net-rx-{node}-from-{j}"))
+                .spawn(move || read_loop(NodeId(j as u32), reader, tx, inn))
+                .context("spawn reader")?;
+            peers_out[j] = Some(Mutex::new(s));
+        }
+
+        Ok(Tcp {
+            node: NodeId(node),
+            n,
+            peers: peers_out,
+            rx: Mutex::new(rx),
+            out: AtomicU64::new(0),
+            inn,
+        })
+    }
+}
+
+fn read_loop(
+    peer: NodeId,
+    mut stream: TcpStream,
+    tx: Sender<(NodeId, Frame)>,
+    inn: Arc<AtomicU64>,
+) {
+    loop {
+        let mut lenb = [0u8; 4];
+        if stream.read_exact(&mut lenb).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(lenb);
+        if len > MAX_FRAME {
+            break;
+        }
+        let mut body = vec![0u8; len as usize];
+        if stream.read_exact(&mut body).is_err() {
+            break;
+        }
+        match Frame::decode(&body) {
+            Ok(frame) => {
+                inn.fetch_add(len as u64, Ordering::Relaxed);
+                if tx.send((peer, frame)).is_err() {
+                    return; // endpoint dropped: nobody to tell
+                }
+            }
+            Err(_) => break, // garbage on the wire: treat as dead
+        }
+    }
+    // surface the departure exactly like a graceful one
+    let _ = tx.send((peer, Frame::Goodbye { node: peer.0 }));
+}
+
+impl Transport for Tcp {
+    fn node(&self) -> NodeId {
+        self.node
+    }
+
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, to: NodeId, frame: Frame) -> Result<()> {
+        let Some(Some(stream)) = self.peers.get(to.0 as usize) else {
+            return Ok(()); // self or out-of-mesh: nothing to do
+        };
+        let body = frame.encode();
+        let mut s = stream.lock().unwrap();
+        let mut msg = Vec::with_capacity(4 + body.len());
+        msg.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        msg.extend_from_slice(&body);
+        // a dead stream drops the frame; the reader thread reports the
+        // departure, and heartbeat liveness handles the rest
+        if s.write_all(&msg).is_ok() {
+            self.out.fetch_add(body.len() as u64, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<(NodeId, Frame)> {
+        self.rx.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    fn bytes_out(&self) -> u64 {
+        self.out.load(Ordering::Relaxed)
+    }
+
+    fn bytes_in(&self) -> u64 {
+        self.inn.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Tcp {
+    fn drop(&mut self) {
+        for p in self.peers.iter().flatten() {
+            let _ = p.lock().unwrap().shutdown(Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh2() -> (Tcp, Tcp) {
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs =
+            vec![l0.local_addr().unwrap().to_string(), l1.local_addr().unwrap().to_string()];
+        let a1 = addrs.clone();
+        let h = std::thread::spawn(move || Tcp::with_listener(1, l1, &a1).unwrap());
+        let t0 = Tcp::with_listener(0, l0, &addrs).unwrap();
+        (t0, h.join().unwrap())
+    }
+
+    #[test]
+    fn frames_round_trip_over_real_sockets_both_ways() {
+        let (t0, t1) = mesh2();
+        let f = Frame::Contribute { token: 1, round: 3, count: 4, sum: 64.0 };
+        t1.send(NodeId(0), f.clone()).unwrap();
+        let (from, got) = t0.recv_timeout(Duration::from_secs(5)).expect("delivered");
+        assert_eq!(from, NodeId(1));
+        assert_eq!(got, f);
+        let g = Frame::StealRequest { node: 0 };
+        t0.send(NodeId(1), g.clone()).unwrap();
+        assert_eq!(t1.recv_timeout(Duration::from_secs(5)), Some((NodeId(0), g.clone())));
+        assert_eq!(t1.bytes_out(), f.encoded_len() as u64);
+        assert_eq!(t0.bytes_in(), f.encoded_len() as u64);
+        assert_eq!(t0.bytes_out(), g.encoded_len() as u64);
+        assert_eq!(t1.bytes_in(), g.encoded_len() as u64);
+    }
+
+    #[test]
+    fn vanished_peer_surfaces_as_goodbye() {
+        let (t0, t1) = mesh2();
+        drop(t1); // shuts the streams down
+        let (from, frame) = t0.recv_timeout(Duration::from_secs(5)).expect("synthetic goodbye");
+        assert_eq!(from, NodeId(1));
+        assert_eq!(frame, Frame::Goodbye { node: 1 });
+    }
+}

@@ -1,0 +1,560 @@
+//! Frame format: everything that crosses a node boundary.
+//!
+//! Hand-rolled little-endian codec (the crate deliberately has no
+//! serde). A frame on a byte transport is `u32` body length followed
+//! by the body; the body is a one-byte tag and fixed-layout fields.
+//! Variable-length sequences carry a `u32` count. [`Frame::encoded_len`]
+//! computes the body length arithmetically without serializing — the
+//! loopback transport uses it to account `bytes_on_wire` while moving
+//! frames zero-copy — and a property test pins it to the real encoding.
+//!
+//! Frames fall into four groups, mirroring the tentpole's contract:
+//!
+//! * registration announcements: [`Frame::Hello`] (SPMD family
+//!   fingerprint; a mismatch is a hard setup error),
+//! * serialized chare messages: [`Frame::Chare`] carrying a
+//!   [`WirePayload`] delivered to the target chare as its message
+//!   payload,
+//! * reduction traffic: [`Frame::Contribute`] / [`Frame::Release`]
+//!   for the cross-node reduction tree,
+//! * steal traffic: [`Frame::StealRequest`] / [`Frame::StealBatch`] /
+//!   [`Frame::StealResults`] / [`Frame::StealDecline`], plus
+//!   [`Frame::Heartbeat`] (liveness + advertised queue depth),
+//!   [`Frame::Summary`] (final cross-node accounting counters) and
+//!   [`Frame::Goodbye`] (graceful departure).
+
+use anyhow::{bail, Result};
+
+/// Payload of a cross-node chare message. The receiving chare gets a
+/// `Msg` whose payload downcasts to this enum — concrete `Box<dyn Any>`
+/// payloads cannot cross a node boundary, so remote senders pick one
+/// of these shapes and the receiver matches on it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WirePayload {
+    /// Pure signal, no data (e.g. a round GO).
+    Empty,
+    U32(u32),
+    U64(u64),
+    F64(f64),
+    F32s(Vec<f32>),
+    /// Opaque application bytes.
+    Bytes(Vec<u8>),
+}
+
+impl WirePayload {
+    fn encoded_len(&self) -> usize {
+        1 + match self {
+            WirePayload::Empty => 0,
+            WirePayload::U32(_) => 4,
+            WirePayload::U64(_) | WirePayload::F64(_) => 8,
+            WirePayload::F32s(v) => 4 + 4 * v.len(),
+            WirePayload::Bytes(b) => 4 + b.len(),
+        }
+    }
+
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            WirePayload::Empty => w.u8(0),
+            WirePayload::U32(x) => {
+                w.u8(1);
+                w.u32(*x);
+            }
+            WirePayload::U64(x) => {
+                w.u8(2);
+                w.u64(*x);
+            }
+            WirePayload::F64(x) => {
+                w.u8(3);
+                w.f64(*x);
+            }
+            WirePayload::F32s(v) => {
+                w.u8(4);
+                w.f32s(v);
+            }
+            WirePayload::Bytes(b) => {
+                w.u8(5);
+                w.u32(b.len() as u32);
+                w.buf.extend_from_slice(b);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<WirePayload> {
+        Ok(match r.u8()? {
+            0 => WirePayload::Empty,
+            1 => WirePayload::U32(r.u32()?),
+            2 => WirePayload::U64(r.u64()?),
+            3 => WirePayload::F64(r.f64()?),
+            4 => WirePayload::F32s(r.f32s()?),
+            5 => {
+                let n = r.u32()? as usize;
+                WirePayload::Bytes(r.bytes(n)?.to_vec())
+            }
+            t => bail!("wire: unknown payload tag {t}"),
+        })
+    }
+}
+
+/// One stolen work request in a [`Frame::StealBatch`]. Carries exactly
+/// what the thief's mule job needs to resubmit through the public
+/// chare API, plus the home-side `wr_id` so results scatter back to
+/// the right chare. `buffer` is the *app-level* residency key — the
+/// home strips its job namespace before shipping and the thief's
+/// runtime re-namespaces under the mule job, so residency stays
+/// isolated per node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub wr_id: u64,
+    pub chare: (u32, u32),
+    pub buffer: Option<u64>,
+    pub data_items: u64,
+    pub tag: u64,
+    /// Tile slot buffers, registration order.
+    pub bufs: Vec<Vec<f32>>,
+    /// Residency keys of the entry-cache argument, if the family has
+    /// one (empty otherwise).
+    pub entry_ids: Vec<u32>,
+}
+
+impl WireRequest {
+    fn encoded_len(&self) -> usize {
+        8 + 8                                      // wr_id, tag
+            + 8                                    // chare
+            + 1 + if self.buffer.is_some() { 8 } else { 0 }
+            + 8                                    // data_items
+            + 4 + self.bufs.iter().map(|b| 4 + 4 * b.len()).sum::<usize>()
+            + 4 + 4 * self.entry_ids.len()
+    }
+
+    fn encode(&self, w: &mut ByteWriter) {
+        w.u64(self.wr_id);
+        w.u32(self.chare.0);
+        w.u32(self.chare.1);
+        match self.buffer {
+            Some(b) => {
+                w.u8(1);
+                w.u64(b);
+            }
+            None => w.u8(0),
+        }
+        w.u64(self.data_items);
+        w.u64(self.tag);
+        w.u32(self.bufs.len() as u32);
+        for b in &self.bufs {
+            w.f32s(b);
+        }
+        w.u32s(&self.entry_ids);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<WireRequest> {
+        let wr_id = r.u64()?;
+        let chare = (r.u32()?, r.u32()?);
+        let buffer = match r.u8()? {
+            0 => None,
+            1 => Some(r.u64()?),
+            t => bail!("wire: bad option tag {t}"),
+        };
+        let data_items = r.u64()?;
+        let tag = r.u64()?;
+        let nb = r.u32()? as usize;
+        let mut bufs = Vec::with_capacity(nb.min(1 << 16));
+        for _ in 0..nb {
+            bufs.push(r.f32s()?);
+        }
+        let entry_ids = r.u32s()?;
+        Ok(WireRequest { wr_id, chare, buffer, data_items, tag, bufs, entry_ids })
+    }
+}
+
+/// Everything a node can say to a peer. See the module docs for the
+/// grouping; `token` fields name a cluster-wide job slot (the SPMD
+/// contract maps each token to a local `JobId` on every node).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// SPMD handshake: the sender's node id and its kernel-family
+    /// fingerprint (family names in registration order). Every node
+    /// must announce an identical list before any work flows — kind
+    /// ids are registration-order indices, so equal lists make them
+    /// portable across the wire.
+    Hello { node: u32, families: Vec<String> },
+    /// Periodic liveness + advertised total queue depth (pending and
+    /// in-flight requests across the node's devices). Thieves target
+    /// the deepest advertised peer.
+    Heartbeat { node: u32, depth: u64 },
+    /// A serialized chare message: deliver `payload` to `chare` of the
+    /// job bound to `token` on the receiving node.
+    Chare { token: u64, chare: (u32, u32), method: u32, payload: WirePayload },
+    /// Subtree reduction contribution for `round`, sent child → parent
+    /// along the binary tree.
+    Contribute { token: u64, round: u32, count: u64, sum: f64 },
+    /// Root's release of `round`, forwarded parent → children.
+    Release { token: u64, round: u32 },
+    /// "I'm under my low watermark — got work?" Sender is the thief.
+    StealRequest { node: u32 },
+    /// A drained batch shipped home → thief for remote execution.
+    StealBatch { shipment: u64, kind: u32, reqs: Vec<WireRequest> },
+    /// Outputs of a remotely executed shipment, thief → home, in
+    /// request order.
+    StealResults { shipment: u64, outs: Vec<Vec<f32>> },
+    /// Thief can no longer execute the shipment (it is draining);
+    /// the home requeues the batch locally.
+    StealDecline { shipment: u64 },
+    /// Final cross-node accounting counters, sent before `Goodbye` so
+    /// the root can audit conservation:
+    /// `[steals_out, requests_out, steals_in, requests_in, requeues,
+    ///   requeued_requests, bytes_out, bytes_in]`.
+    Summary { node: u32, counters: [u64; 8] },
+    /// Graceful departure. A transport synthesizes one when a peer's
+    /// stream dies, so departure is observable either way.
+    Goodbye { node: u32 },
+}
+
+impl Frame {
+    /// Exact length of [`encode`](Frame::encode)'s output, computed
+    /// without serializing. The loopback transport charges this to
+    /// `bytes_on_wire` while handing the frame over zero-copy.
+    pub fn encoded_len(&self) -> usize {
+        1 + match self {
+            Frame::Hello { families, .. } => {
+                4 + 4 + families.iter().map(|f| 4 + f.len()).sum::<usize>()
+            }
+            Frame::Heartbeat { .. } => 4 + 8,
+            Frame::Chare { payload, .. } => 8 + 8 + 4 + payload.encoded_len(),
+            Frame::Contribute { .. } => 8 + 4 + 8 + 8,
+            Frame::Release { .. } => 8 + 4,
+            Frame::StealRequest { .. } => 4,
+            Frame::StealBatch { reqs, .. } => {
+                8 + 4 + 4 + reqs.iter().map(WireRequest::encoded_len).sum::<usize>()
+            }
+            Frame::StealResults { outs, .. } => {
+                8 + 4 + outs.iter().map(|o| 4 + 4 * o.len()).sum::<usize>()
+            }
+            Frame::StealDecline { .. } => 8,
+            Frame::Summary { .. } => 4 + 8 * 8,
+            Frame::Goodbye { .. } => 4,
+        }
+    }
+
+    /// Serialize the frame body (no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter { buf: Vec::with_capacity(self.encoded_len()) };
+        match self {
+            Frame::Hello { node, families } => {
+                w.u8(1);
+                w.u32(*node);
+                w.u32(families.len() as u32);
+                for f in families {
+                    w.str(f);
+                }
+            }
+            Frame::Heartbeat { node, depth } => {
+                w.u8(2);
+                w.u32(*node);
+                w.u64(*depth);
+            }
+            Frame::Chare { token, chare, method, payload } => {
+                w.u8(3);
+                w.u64(*token);
+                w.u32(chare.0);
+                w.u32(chare.1);
+                w.u32(*method);
+                payload.encode(&mut w);
+            }
+            Frame::Contribute { token, round, count, sum } => {
+                w.u8(4);
+                w.u64(*token);
+                w.u32(*round);
+                w.u64(*count);
+                w.f64(*sum);
+            }
+            Frame::Release { token, round } => {
+                w.u8(5);
+                w.u64(*token);
+                w.u32(*round);
+            }
+            Frame::StealRequest { node } => {
+                w.u8(6);
+                w.u32(*node);
+            }
+            Frame::StealBatch { shipment, kind, reqs } => {
+                w.u8(7);
+                w.u64(*shipment);
+                w.u32(*kind);
+                w.u32(reqs.len() as u32);
+                for rq in reqs {
+                    rq.encode(&mut w);
+                }
+            }
+            Frame::StealResults { shipment, outs } => {
+                w.u8(8);
+                w.u64(*shipment);
+                w.u32(outs.len() as u32);
+                for o in outs {
+                    w.f32s(o);
+                }
+            }
+            Frame::StealDecline { shipment } => {
+                w.u8(9);
+                w.u64(*shipment);
+            }
+            Frame::Summary { node, counters } => {
+                w.u8(10);
+                w.u32(*node);
+                for c in counters {
+                    w.u64(*c);
+                }
+            }
+            Frame::Goodbye { node } => {
+                w.u8(11);
+                w.u32(*node);
+            }
+        }
+        debug_assert_eq!(w.buf.len(), self.encoded_len());
+        w.buf
+    }
+
+    /// Decode one frame body. Truncated or malformed input is an
+    /// error, never a panic — a TCP reader treats it as a dead peer.
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut r = ByteReader { buf: body, pos: 0 };
+        let frame = match r.u8()? {
+            1 => {
+                let node = r.u32()?;
+                let n = r.u32()? as usize;
+                let mut families = Vec::with_capacity(n.min(1 << 12));
+                for _ in 0..n {
+                    families.push(r.str()?);
+                }
+                Frame::Hello { node, families }
+            }
+            2 => Frame::Heartbeat { node: r.u32()?, depth: r.u64()? },
+            3 => Frame::Chare {
+                token: r.u64()?,
+                chare: (r.u32()?, r.u32()?),
+                method: r.u32()?,
+                payload: WirePayload::decode(&mut r)?,
+            },
+            4 => Frame::Contribute {
+                token: r.u64()?,
+                round: r.u32()?,
+                count: r.u64()?,
+                sum: r.f64()?,
+            },
+            5 => Frame::Release { token: r.u64()?, round: r.u32()? },
+            6 => Frame::StealRequest { node: r.u32()? },
+            7 => {
+                let shipment = r.u64()?;
+                let kind = r.u32()?;
+                let n = r.u32()? as usize;
+                let mut reqs = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    reqs.push(WireRequest::decode(&mut r)?);
+                }
+                Frame::StealBatch { shipment, kind, reqs }
+            }
+            8 => {
+                let shipment = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut outs = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    outs.push(r.f32s()?);
+                }
+                Frame::StealResults { shipment, outs }
+            }
+            9 => Frame::StealDecline { shipment: r.u64()? },
+            10 => {
+                let node = r.u32()?;
+                let mut counters = [0u64; 8];
+                for c in &mut counters {
+                    *c = r.u64()?;
+                }
+                Frame::Summary { node, counters }
+            }
+            11 => Frame::Goodbye { node: r.u32()? },
+            t => bail!("wire: unknown frame tag {t}"),
+        };
+        if r.pos != body.len() {
+            bail!("wire: {} trailing bytes after frame", body.len() - r.pos);
+        }
+        Ok(frame)
+    }
+}
+
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("wire: truncated frame (want {n} at {}, have {})", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.bytes(n)?.to_vec())?)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            wr_id: 42,
+            chare: (1, 7),
+            buffer: Some(9),
+            data_items: 16,
+            tag: (3 << 16) | 5,
+            bufs: vec![vec![1.0, 2.0, 3.0], vec![], vec![0.5; 8]],
+            entry_ids: vec![9, 10],
+        }
+    }
+
+    /// Every frame variant (and every payload kind) round-trips, and
+    /// the arithmetic `encoded_len` matches the real encoding — the
+    /// loopback transport's zero-copy byte accounting depends on it.
+    #[test]
+    fn every_frame_round_trips_and_encoded_len_is_exact() {
+        let frames = vec![
+            Frame::Hello {
+                node: 3,
+                families: vec!["nbody_forces".into(), "spmv_rows".into(), String::new()],
+            },
+            Frame::Heartbeat { node: 1, depth: 77 },
+            Frame::Chare {
+                token: 1,
+                chare: (0, 4),
+                method: 19,
+                payload: WirePayload::Empty,
+            },
+            Frame::Chare {
+                token: 1,
+                chare: (2, 0),
+                method: 20,
+                payload: WirePayload::U32(123),
+            },
+            Frame::Chare {
+                token: 2,
+                chare: (0, 0),
+                method: 21,
+                payload: WirePayload::U64(u64::MAX - 1),
+            },
+            Frame::Chare {
+                token: 2,
+                chare: (0, 1),
+                method: 22,
+                payload: WirePayload::F64(-2.5),
+            },
+            Frame::Chare {
+                token: 0,
+                chare: (1, 1),
+                method: 23,
+                payload: WirePayload::F32s(vec![1.0, -1.0, 0.25]),
+            },
+            Frame::Chare {
+                token: 0,
+                chare: (1, 2),
+                method: 24,
+                payload: WirePayload::Bytes(vec![0, 255, 7]),
+            },
+            Frame::Contribute { token: 1, round: 4, count: 12, sum: 4096.0 },
+            Frame::Release { token: 1, round: 4 },
+            Frame::StealRequest { node: 2 },
+            Frame::StealBatch {
+                shipment: 11,
+                kind: 1,
+                reqs: vec![sample_request(), WireRequest {
+                    buffer: None,
+                    bufs: vec![],
+                    entry_ids: vec![],
+                    ..sample_request()
+                }],
+            },
+            Frame::StealResults { shipment: 11, outs: vec![vec![1.5; 4], vec![]] },
+            Frame::StealDecline { shipment: 12 },
+            Frame::Summary { node: 1, counters: [1, 2, 3, 4, 5, 6, 7, 8] },
+            Frame::Goodbye { node: 0 },
+        ];
+        for f in frames {
+            let body = f.encode();
+            assert_eq!(body.len(), f.encoded_len(), "encoded_len drifted for {f:?}");
+            let back = Frame::decode(&body).expect("decode");
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_are_errors_not_panics() {
+        let body = Frame::Contribute { token: 1, round: 0, count: 3, sum: 9.0 }.encode();
+        for cut in 0..body.len() {
+            assert!(Frame::decode(&body[..cut]).is_err(), "accepted truncation at {cut}");
+        }
+        let mut long = body.clone();
+        long.push(0);
+        assert!(Frame::decode(&long).is_err(), "accepted trailing byte");
+        assert!(Frame::decode(&[99]).is_err(), "accepted unknown tag");
+    }
+}

@@ -118,6 +118,14 @@ impl DevicePool {
             .map(|g| g.load(Ordering::SeqCst))
             .unwrap_or(0)
     }
+
+    /// Launches in flight across the whole pool. The cross-node drain
+    /// handler uses this as a busy gate: a node only gives work away
+    /// while its own devices are actually executing (an empty pipeline
+    /// means the backlog is about to dispatch locally).
+    pub fn in_flight_total(&self) -> usize {
+        self.in_flight.iter().map(|g| g.load(Ordering::SeqCst)).sum()
+    }
 }
 
 #[cfg(test)]

@@ -1,13 +1,15 @@
 //! Chaos-harness regression corpus (`cargo test --features chaos`).
 //!
 //! Each seed is a complete fault schedule ([`gcharm::chaos::Schedule`]):
-//! the contiguous corpus 0..=11 covers every fault theme — scripted
+//! the contiguous corpus 0..=13 covers every fault theme — scripted
 //! cancels at three quiescence depths, panicking drivers, steal storms,
 //! flush-timing jitter, live registration and rejected submissions,
 //! cache pressure (a starved chare table fought over by a hot tenant and
-//! an adversarial streaming scan), and launch-mode flips that jitter the
-//! persistent work rings mid-job — twice each. A failing seed replays
-//! bit-identically with
+//! an adversarial streaming scan), launch-mode flips that jitter the
+//! persistent work rings mid-job, and node faults (the job run SPMD on
+//! a two-node loopback fabric with delayed / reordered / dropped frames
+//! and a graceful mid-run peer departure) — twice each. A failing seed
+//! replays bit-identically with
 //! `gcharm chaos --seed N` (the whole schedule, including its event
 //! trace, is a pure function of the seed).
 //!
@@ -22,8 +24,8 @@ use gcharm::chaos::{
 };
 use gcharm::coordinator::{Config, JobReport, PoolReport, Runtime};
 
-/// The regression corpus: every theme twice (seed % 6 cycles them).
-const CORPUS: std::ops::Range<u64> = 0..12;
+/// The regression corpus: every theme twice (seed % 7 cycles them).
+const CORPUS: std::ops::Range<u64> = 0..14;
 
 #[test]
 fn seed_corpus_holds_all_invariants() {
@@ -50,6 +52,7 @@ fn corpus_covers_every_fault_theme_twice() {
         "live-registration",
         "cache-pressure",
         "launch-flip",
+        "node-fault",
     ] {
         assert_eq!(counts.get(theme), Some(&2), "theme {theme} undercovered");
     }
@@ -60,7 +63,7 @@ fn corpus_covers_every_fault_theme_twice() {
 #[test]
 fn same_seed_replays_an_identical_trace() {
     // one seed per theme; two full runs each (fresh runtime every time)
-    for seed in 0..6u64 {
+    for seed in 0..7u64 {
         let a = run_schedule(seed).expect("first run");
         let b = run_schedule(seed).expect("replay");
         assert!(a.ok(), "seed {seed}:\n{a}");
@@ -137,7 +140,7 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
     rt.shutdown();
 }
 
-/// Seeds 5 and 11 are the corpus's launch-flip schedules: every family
+/// Seeds 5 and 12 are the corpus's launch-flip schedules: every family
 /// pinned persistent, two mid-job injections that shrink the work rings
 /// to 1-4 slots and alternate the forced mode Persistent -> PerBatch.
 /// Each run must stay exact for every tenant, fire both flips, and seal
@@ -147,7 +150,7 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
 /// ring still holds descriptors at the flip.
 #[test]
 fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
-    for seed in [5u64, 11] {
+    for seed in [5u64, 12] {
         assert_eq!(theme_name(seed), "launch-flip");
         let s = Schedule::from_seed(seed);
         assert!(
@@ -178,7 +181,7 @@ fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
     }
 }
 
-/// Seeds 4 and 10 are the corpus's cache-pressure schedules: one device,
+/// Seeds 4 and 11 are the corpus's cache-pressure schedules: one device,
 /// one shared reuse family, a chare table of 6-11 slots, job 0 cycling a
 /// hot set that fits, and every co-tenant streaming a scan wider than the
 /// whole table once per round. The run must stay exact for every tenant
@@ -187,7 +190,7 @@ fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
 /// the pool's debug assertions, which are live in this profile.
 #[test]
 fn cache_pressure_keeps_every_tenant_exact() {
-    for seed in [4u64, 10] {
+    for seed in [4u64, 11] {
         assert_eq!(theme_name(seed), "cache-pressure");
         let s = Schedule::from_seed(seed);
         let slots = s.table_slots.expect("theme shrinks the table");
@@ -213,6 +216,33 @@ fn cache_pressure_keeps_every_tenant_exact() {
             s.jobs.len(),
             "seed {seed}: {exact} exact series for {} tenants:\n{r}",
             s.jobs.len()
+        );
+    }
+}
+
+/// Seeds 6 and 13 are the corpus's node-fault schedules: the single
+/// clean job runs SPMD on a two-node loopback fabric whose links delay,
+/// reorder, and drop (heartbeats only) frames, with node 1 optionally
+/// leaving gracefully mid-run. The root's cross-node reduction series
+/// must equal the exact degraded-cluster physics, and the per-node
+/// reports must balance the cross-node steal/request/byte conservation
+/// ledger in exact mode (`cluster_violations` inside the harness).
+#[test]
+fn node_fault_keeps_the_degraded_series_exact_and_books_balanced() {
+    for seed in [6u64, 13] {
+        assert_eq!(theme_name(seed), "node-fault");
+        let s = Schedule::from_seed(seed);
+        let c = s.cluster.expect("theme runs on a cluster");
+        assert_eq!(c.nodes, 2);
+        let r = run_schedule(seed).expect("harness ran");
+        assert!(r.ok(), "seed {seed}:\n{r}");
+        assert!(
+            r.trace.iter().any(|l| l.contains("cluster: root series exact")),
+            "seed {seed}: degraded series never verified:\n{r}"
+        );
+        assert!(
+            r.trace.iter().any(|l| l.contains("cluster accounting: clean")),
+            "seed {seed}: conservation ledger never checked:\n{r}"
         );
     }
 }

@@ -1,0 +1,345 @@
+//! Multi-node runtime (ISSUE 9): the loopback cluster reproduces the
+//! in-process `Runtime`, multi-node runs are deterministic, every
+//! `WirePayload` shape crosses the wire intact, and a real TCP mesh
+//! round-trips on 127.0.0.1.
+//!
+//! Invariants covered:
+//!   - `Cluster::loopback` with nodes=1 is bitwise-identical to the
+//!     plain in-process `Runtime` on the same spec: same reduction
+//!     series (compared by bits), same request/item/byte accounting,
+//!     and zero wire traffic;
+//!   - 2- and 4-node loopback runs are deterministic across repeated
+//!     runs: the root's cross-node reduction series equals the exact
+//!     integer physics (`nodes * count * rows` per round) both times,
+//!     only the root owns a series, and the cross-node steal /
+//!     request / byte ledgers balance over the cluster;
+//!   - every [`WirePayload`] variant delivered via
+//!     `ClusterHandle::send_remote` arrives intact (an echo chare
+//!     folds a payload-determined checksum into an exact reduction);
+//!   - two [`Tcp`] endpoints over real 127.0.0.1 sockets complete a
+//!     cluster job with the same exact series and balanced books.
+
+mod common;
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+
+use common::{synth_descriptor, Burster, METHOD_GO};
+use gcharm::coordinator::{
+    Chare, ChareId, Config, Ctx, JobSpec, Msg, PoolReport, Runtime,
+};
+use gcharm::net::{
+    Cluster, ClusterHandle, ClusterNode, NetConfig, NodeId, NodeReport, Tcp,
+    Transport, WirePayload,
+};
+
+const BURST_ID: ChareId = ChareId { collection: 7, index: 0 };
+
+fn cfg(pes: usize) -> Config {
+    Config { pes, ..Config::default() }
+}
+
+/// SPMD cluster job: every node runs one [`Burster`] chare for `rounds`
+/// rounds and folds each round's local reduction through the cluster
+/// tree. Only the root's driver collects the (cluster-total) series.
+fn cluster_burst_spec(
+    family: &str,
+    rows: usize,
+    count: usize,
+    rounds: usize,
+    h: ClusterHandle,
+) -> JobSpec {
+    let id = BURST_ID;
+    JobSpec::new("dist-burst")
+        .kernel(synth_descriptor(family, rows))
+        .chare(
+            id,
+            0,
+            Box::new(Burster { id, rows, count, pending: 0, sum: 0.0 }),
+        )
+        .driver(move |ctx| {
+            let kind = ctx.kinds()[0];
+            let mut series = Vec::with_capacity(rounds);
+            for r in 0..rounds {
+                ctx.send(id, Msg::new(METHOD_GO, kind));
+                let local = ctx.await_reduction(1)?;
+                ctx.await_quiescence();
+                if let Some((n, total)) = h.reduce(r as u32, 1, local) {
+                    assert_eq!(
+                        n,
+                        h.nodes() as u64,
+                        "every node contributes every round"
+                    );
+                    series.push(total);
+                }
+            }
+            Ok(series)
+        })
+}
+
+/// The cross-node conservation ledger, hand-rolled so the tier-1 suite
+/// checks it without the chaos feature (the chaos checker's
+/// `cluster_violations` audits the same sums under fault injection).
+fn assert_cluster_books_balance(reports: &[NodeReport]) {
+    let sum = |f: fn(&PoolReport) -> u64| -> u64 {
+        reports.iter().map(|r| f(&r.pool)).sum()
+    };
+    assert_eq!(
+        sum(|p| p.remote_steals_out) + sum(|p| p.remote_stale_batches),
+        sum(|p| p.remote_steals_in) + sum(|p| p.remote_requeues),
+        "every shipped batch must resolve exactly once"
+    );
+    assert_eq!(
+        sum(|p| p.remote_requests_out) + sum(|p| p.remote_stale_results),
+        sum(|p| p.remote_requests_in) + sum(|p| p.remote_requeued_requests),
+        "every shipped request must resolve exactly once"
+    );
+    // graceful shutdown, nothing deliberately dropped: exact balance
+    assert_eq!(
+        sum(|p| p.wire_bytes_out),
+        sum(|p| p.wire_bytes_in),
+        "graceful runs put exactly as many bytes on the wire as came off"
+    );
+    for r in reports {
+        let per_job: u64 =
+            r.pool.jobs.iter().map(|j| j.remote_requests).sum();
+        assert_eq!(
+            per_job, r.pool.remote_requests_out,
+            "{}: per-job remote requests must sum to the node total",
+            r.node
+        );
+    }
+}
+
+#[test]
+fn single_node_loopback_is_bitwise_identical_to_in_process() {
+    let rows = 4;
+    let count = 60;
+    let rounds = 3;
+
+    // plain in-process runtime
+    let rt = Runtime::new(cfg(2)).unwrap();
+    let spec = cluster_burst_spec(
+        "dist_solo",
+        rows,
+        count,
+        rounds,
+        ClusterHandle::solo(),
+    );
+    let plain = rt.submit_job(spec).unwrap().wait().unwrap();
+    let plain_pool = rt.shutdown();
+
+    // the same spec on a 1-node loopback cluster
+    let reports = Cluster::loopback(
+        1,
+        cfg(2),
+        NetConfig::default(),
+        move |_, h| cluster_burst_spec("dist_solo", rows, count, rounds, h),
+    )
+    .unwrap();
+    assert_eq!(reports.len(), 1);
+    let rep = &reports[0];
+
+    // series bitwise-identical (exact integers, but compare the bits)
+    assert_eq!(plain.series.len(), rep.series.len());
+    for (a, b) in plain.series.iter().zip(&rep.series) {
+        assert_eq!(a.to_bits(), b.to_bits(), "series must match bitwise");
+    }
+    assert_eq!(plain.series, vec![(count * rows) as f64; rounds]);
+
+    // identical work accounting (launch counts are timing-dependent
+    // via the idle flusher; requests/items/bytes are not)
+    let clustered = rep.pool.job("dist-burst").unwrap();
+    assert_eq!(plain.gpu_requests, clustered.gpu_requests);
+    assert_eq!(plain.cpu_requests, clustered.cpu_requests);
+    assert_eq!(plain.gpu_items, clustered.gpu_items);
+    assert_eq!(plain.cpu_items, clustered.cpu_items);
+    assert_eq!(plain.transfer_bytes, clustered.transfer_bytes);
+    assert_eq!(plain_pool.gpu_requests, rep.pool.gpu_requests);
+    assert_eq!(plain_pool.gpu_items, rep.pool.gpu_items);
+    assert_eq!(plain_pool.transfer_bytes, rep.pool.transfer_bytes);
+
+    // a solo node never touches the wire
+    assert_eq!(rep.pool.wire_bytes_out, 0);
+    assert_eq!(rep.pool.wire_bytes_in, 0);
+    assert_eq!(rep.pool.remote_steals_out, 0);
+    assert_eq!(rep.pool.remote_steals_in, 0);
+    assert!(rep.peer_summaries.is_empty());
+}
+
+fn run_loopback(nodes: usize, count: usize, rounds: usize) -> Vec<NodeReport> {
+    Cluster::loopback(nodes, cfg(1), NetConfig::default(), move |_, h| {
+        cluster_burst_spec("dist_multi", 4, count, rounds, h)
+    })
+    .unwrap()
+}
+
+#[test]
+fn multi_node_loopback_is_deterministic_with_exact_series() {
+    for &(nodes, count) in &[(2usize, 40usize), (4, 25)] {
+        let rounds = 3;
+        let first = run_loopback(nodes, count, rounds);
+        let second = run_loopback(nodes, count, rounds);
+
+        let want = vec![(nodes * count * 4) as f64; rounds];
+        for run in [&first, &second] {
+            assert_eq!(run.len(), nodes);
+            assert_eq!(
+                run[0].series, want,
+                "{nodes}-node root series must be the exact cluster physics"
+            );
+            for rep in &run[1..] {
+                assert!(
+                    rep.series.is_empty(),
+                    "only the root owns the cluster series"
+                );
+            }
+            assert_eq!(run[0].peer_summaries.len(), nodes - 1);
+            assert_cluster_books_balance(run);
+        }
+        // run-to-run determinism, bitwise
+        for (a, b) in first[0].series.iter().zip(&second[0].series) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+const ECHO_ID: ChareId = ChareId { collection: 9, index: 0 };
+const ECHO_KINDS: u32 = 6;
+
+/// Receives one message per [`WirePayload`] shape, verifies the exact
+/// content, and contributes a payload-determined checksum once all
+/// shapes arrived. Methods 10..16 index the shapes.
+struct EchoChare {
+    got: u32,
+    sum: f64,
+}
+
+impl Chare for EchoChare {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        let method = msg.method;
+        let p: WirePayload = msg.take();
+        let add = match (method, &p) {
+            (10, WirePayload::Empty) => 1.0,
+            (11, WirePayload::U32(x)) => {
+                assert_eq!(*x, 7);
+                7.0
+            }
+            (12, WirePayload::U64(x)) => {
+                assert_eq!(*x, 40_000);
+                40_000.0
+            }
+            (13, WirePayload::F64(x)) => {
+                assert_eq!(*x, 2.5);
+                2.5
+            }
+            (14, WirePayload::F32s(v)) => {
+                assert_eq!(v, &[1.0, 2.0, 3.0]);
+                6.0
+            }
+            (15, WirePayload::Bytes(b)) => {
+                assert_eq!(b, &[1, 2, 3, 4]);
+                10.0
+            }
+            other => panic!("echo chare: unexpected message {other:?}"),
+        };
+        self.sum += add;
+        self.got += 1;
+        if self.got == ECHO_KINDS {
+            ctx.contribute(self.sum);
+        }
+    }
+}
+
+#[test]
+fn every_payload_kind_crosses_the_wire_intact() {
+    // node 0 sends one message per payload shape to node 1's echo
+    // chare; node 1 folds the checksum into the cluster reduction, so
+    // the root's single series entry proves every shape arrived intact.
+    let reports = Cluster::loopback(2, cfg(1), NetConfig::default(), |node, h| {
+        let spec = JobSpec::new("echo")
+            .kernel(synth_descriptor("dist_echo", 4))
+            .chare(ECHO_ID, 0, Box::new(EchoChare { got: 0, sum: 0.0 }));
+        if node == NodeId(0) {
+            spec.driver(move |_| {
+                let payloads = [
+                    (10, WirePayload::Empty),
+                    (11, WirePayload::U32(7)),
+                    (12, WirePayload::U64(40_000)),
+                    (13, WirePayload::F64(2.5)),
+                    (14, WirePayload::F32s(vec![1.0, 2.0, 3.0])),
+                    (15, WirePayload::Bytes(vec![1, 2, 3, 4])),
+                ];
+                for (method, p) in payloads {
+                    h.send_remote(NodeId(1), ECHO_ID, method, p);
+                }
+                let (n, total) =
+                    h.reduce(0, 0, 0.0).expect("root owns the total");
+                assert_eq!(n, 1, "only node 1's chare contributes");
+                Ok(vec![total])
+            })
+        } else {
+            spec.driver(move |ctx| {
+                let local = ctx.await_reduction(1)?;
+                ctx.await_quiescence();
+                assert!(h.reduce(0, 1, local).is_none());
+                Ok(Vec::new())
+            })
+        }
+    })
+    .unwrap();
+
+    // 1 + 7 + 40000 + 2.5 + 6 + 10
+    assert_eq!(reports[0].series, vec![40_026.5]);
+    assert!(reports[1].series.is_empty());
+    assert_cluster_books_balance(&reports);
+}
+
+#[test]
+fn tcp_mesh_round_trips_on_localhost() {
+    // bind both listeners on port 0 first so the mesh knows its
+    // addresses, then run a real two-endpoint cluster over sockets
+    let listeners: Vec<TcpListener> = (0..2)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+
+    let count = 30;
+    let rounds = 2;
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, listener)| {
+            let addrs = addrs.clone();
+            thread::spawn(move || {
+                let t = Tcp::with_listener(i as u32, listener, &addrs)
+                    .expect("mesh up");
+                ClusterNode::run(
+                    cfg(1),
+                    NetConfig::default(),
+                    Arc::new(t) as Arc<dyn Transport>,
+                    |h| cluster_burst_spec("dist_tcp", 4, count, rounds, h),
+                )
+                .expect("node run")
+            })
+        })
+        .collect();
+    let mut reports: Vec<NodeReport> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    reports.sort_by_key(|r| r.node.0);
+
+    assert_eq!(
+        reports[0].series,
+        vec![(2 * count * 4) as f64; rounds],
+        "TCP root series must be the exact cluster physics"
+    );
+    assert!(reports[1].series.is_empty());
+    assert_eq!(reports[0].peer_summaries.len(), 1);
+    assert_cluster_books_balance(&reports);
+    // real sockets carried real traffic
+    assert!(reports.iter().all(|r| r.pool.wire_bytes_out > 0));
+}
