@@ -1,0 +1,376 @@
+//! Serving-tier load benchmark (ISSUE 10): open-loop Poisson bursts
+//! with heavy-tailed job sizes driven through a `serve::ServeFront`,
+//! reporting per-class p50/p99 completion latency under the four
+//! ablations {deadline-flush on/off} x {shed on/off}.
+//!
+//! The arrival trace is a pure function of its seed — a seeded
+//! `util::Rng` draws inter-arrival gaps, burst widths, classes, and
+//! sizes; no wall clock touches the generator — so all four ablations
+//! replay the identical offered load and their tails are directly
+//! comparable. Wall-clock `Instant` is used only to pace the open-loop
+//! offers and to measure each admitted job's completion latency.
+//!
+//! `GCHARM_SMOKE=1` shrinks the trace for CI; results are serialized to
+//! `BENCH_SERVE.json` (override with `GCHARM_BENCH_JSON`, `-` skips).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use gcharm::coordinator::{
+    Chare, ChareId, Config, Ctx, JobSpec, KernelDescriptor, KernelKindId,
+    Msg, Runtime, Tile, WorkDraft, WrResult, METHOD_RESULT,
+};
+use gcharm::runtime::kernel::{TileArgSpec, TileKernel};
+use gcharm::runtime::KernelResources;
+use gcharm::serve::{
+    Admission, AdmissionPolicy, QosClass, ServeConfig, ServeFront,
+};
+use gcharm::util::Rng;
+
+const METHOD_GO: u32 = 1;
+const ROWS: usize = 4;
+
+/// Per-slot kernel: sum of the tile entries.
+fn sum_slot(args: &[&[f32]], _c: &[f32]) -> Vec<f32> {
+    vec![args[0].iter().sum()]
+}
+
+/// The shared synthetic family every offered job submits against (one
+/// family, so cross-job combining is live and the classes actually
+/// contend in the combiners).
+fn descriptor() -> KernelDescriptor {
+    KernelDescriptor {
+        kernel: Arc::new(TileKernel {
+            name: Arc::from("serve_load"),
+            args: vec![TileArgSpec {
+                name: "tile",
+                rows: ROWS,
+                width: 1,
+                pad: 0.0,
+            }],
+            constant: Arc::new(Vec::new()),
+            out_rows: 1,
+            out_width: 1,
+            resources: KernelResources {
+                threads_per_block: 128,
+                regs_per_thread: 64,
+                smem_per_block: 4096,
+            },
+            items_per_slot: ROWS as u64,
+            reuse_arg: None,
+            gather_name: None,
+            entry_arg: None,
+            slot_fn: sum_slot,
+        }),
+        combine: None,
+        sort_by_slot: false,
+        cpu_fallback: false,
+        launch_mode: None,
+    }
+}
+
+/// A chare bursting `count` all-ones requests per GO and contributing
+/// the summed outputs (exact: `count * ROWS` per round).
+struct Burster {
+    id: ChareId,
+    count: usize,
+    pending: usize,
+    sum: f64,
+}
+
+impl Chare for Burster {
+    fn receive(&mut self, msg: Msg, ctx: &mut Ctx) {
+        match msg.method {
+            METHOD_GO => {
+                let kind: KernelKindId = msg.take();
+                self.pending = self.count;
+                self.sum = 0.0;
+                for i in 0..self.count {
+                    ctx.submit(WorkDraft {
+                        chare: self.id,
+                        kind,
+                        buffer: None,
+                        data_items: ROWS,
+                        tag: i as u64,
+                        payload: Tile::new(vec![vec![1.0; ROWS]]),
+                    })
+                    .expect("registered tile shape");
+                }
+            }
+            METHOD_RESULT => {
+                let r: WrResult = msg.take();
+                self.sum += r.out[0] as f64;
+                self.pending -= 1;
+                if self.pending == 0 {
+                    ctx.contribute(self.sum);
+                }
+            }
+            other => panic!("unknown method {other}"),
+        }
+    }
+}
+
+fn job_spec(name: String, count: usize) -> JobSpec {
+    let id = ChareId::new(9, 0);
+    JobSpec::new(name)
+        .kernel(descriptor())
+        .chare(id, 0, Box::new(Burster { id, count, pending: 0, sum: 0.0 }))
+        .driver(move |ctx| {
+            let kind = ctx.kinds()[0];
+            ctx.send(id, Msg::new(METHOD_GO, kind));
+            let v = ctx.await_reduction(1)?;
+            ctx.await_quiescence();
+            Ok(vec![v])
+        })
+}
+
+/// One scheduled offer of the seeded trace.
+struct Arrival {
+    /// Offset from the run start, seconds.
+    at: f64,
+    class: QosClass,
+    /// Requests the job bursts (heavy-tailed).
+    count: usize,
+}
+
+/// The open-loop trace: a Poisson arrival process (exponential gaps)
+/// with occasional bursts (several offers at one instant) and Pareto
+/// job sizes. Pure function of `seed` — the four ablations replay it
+/// bit-identically.
+fn trace(seed: u64, offers: usize, mean_gap: f64) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(offers);
+    let mut t = 0.0;
+    while out.len() < offers {
+        t += rng.exponential(mean_gap);
+        // one in five gaps opens a burst of 2-5 coincident offers
+        let width = if rng.below(5) == 0 { 2 + rng.below(4) } else { 1 };
+        for _ in 0..width.min(offers - out.len()) {
+            let class = match rng.below(10) {
+                0..=2 => QosClass::LatencySensitive,
+                3..=7 => QosClass::Throughput,
+                _ => QosClass::BestEffort,
+            };
+            // Pareto (alpha 1.3) via inverse transform, clamped: most
+            // jobs small, a heavy tail of large ones
+            let u = 1.0 - rng.f64();
+            let count =
+                (8.0 * u.powf(-1.0 / 1.3)).clamp(8.0, 400.0) as usize;
+            out.push(Arrival { at: t, class, count });
+        }
+    }
+    out
+}
+
+/// Latency percentile (seconds) of a sorted sample set.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i]
+}
+
+/// Per-class results of one ablation run.
+struct RunResult {
+    /// Sorted completion latencies (seconds), indexed by class.
+    latencies: [Vec<f64>; 3],
+    rejected: u64,
+    shed: u64,
+}
+
+/// Replay `arrivals` open-loop against a fresh runtime + front end.
+fn run(arrivals: &[Arrival], deadline: bool, shed: bool) -> RunResult {
+    let rt = Runtime::new(Config { pes: 2, ..Config::default() }).unwrap();
+    let front = Arc::new(
+        ServeFront::new(ServeConfig {
+            policy: if shed {
+                AdmissionPolicy::Shed
+            } else {
+                AdmissionPolicy::Reject
+            },
+            class_depth: [4, 4, 4],
+            pool_depth: 6,
+            deadline: deadline.then_some(0.005),
+        })
+        .unwrap(),
+    );
+    let done: Arc<Mutex<Vec<(usize, f64)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let start = Instant::now();
+    let mut rejected = 0u64;
+    let mut shed_n = 0u64;
+    std::thread::scope(|s| {
+        for (n, a) in arrivals.iter().enumerate() {
+            // open loop: offer at the scheduled instant no matter how
+            // the pool is doing
+            let due = Duration::from_secs_f64(a.at);
+            if let Some(wait) = due.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let offered_at = Instant::now();
+            match front
+                .offer(&rt, a.class, job_spec(format!("j{n}"), a.count))
+                .unwrap()
+            {
+                Admission::Admitted(h) => {
+                    let done = done.clone();
+                    let class = a.class.index();
+                    s.spawn(move || {
+                        // preempted jobs seal Cancelled with an empty
+                        // series: only real completions count
+                        if let Ok(r) = h.wait() {
+                            if !r.series.is_empty() {
+                                done.lock().unwrap().push((
+                                    class,
+                                    offered_at.elapsed().as_secs_f64(),
+                                ));
+                            }
+                        }
+                    });
+                }
+                Admission::Rejected => rejected += 1,
+                Admission::Shed => shed_n += 1,
+            }
+        }
+    });
+    front.drain();
+    let stats = front.stats();
+    assert!(stats.ledger_closes(), "admission ledger must close:\n{stats}");
+    rt.shutdown();
+    let mut latencies: [Vec<f64>; 3] = Default::default();
+    for (class, secs) in done.lock().unwrap().iter() {
+        latencies[*class].push(*secs);
+    }
+    for l in &mut latencies {
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    RunResult { latencies, rejected, shed: shed_n }
+}
+
+/// Everything measured this run, for the JSON dump.
+static RECORDED: Mutex<Vec<(String, String, f64, &'static str)>> =
+    Mutex::new(Vec::new());
+
+fn record(series: &str, metric: &str, value: f64, unit: &'static str) {
+    RECORDED
+        .lock()
+        .unwrap()
+        .push((series.to_string(), metric.to_string(), value, unit));
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize every recorded measurement (same shape as the hotpath
+/// bench's dump; only numbers this run measured on this machine).
+fn emit_bench_json() {
+    let path = std::env::var("GCHARM_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_SERVE.json".to_string());
+    if path == "-" {
+        return;
+    }
+    let rows = RECORDED.lock().unwrap();
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"serve_load\",\n  \"schema\": 1,\n");
+    out.push_str(
+        "  \"note\": \"measured on the machine that ran `cargo bench \
+         --bench serve_load`; seeded open-loop trace, see \
+         rust/benches/serve_load.rs\",\n",
+    );
+    out.push_str("  \"series\": [\n");
+    for (i, (series, metric, value, unit)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"metric\": \"{}\", \"value\": {:.6}, \
+             \"unit\": \"{}\"}}{}\n",
+            json_escape(series),
+            json_escape(metric),
+            value,
+            unit,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("wrote {} series to {path}", rows.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("GCHARM_SMOKE").is_ok();
+    let (offers, mean_gap) = if smoke { (24, 0.004) } else { (160, 0.002) };
+    let seed = 42u64;
+    let arrivals = trace(seed, offers, mean_gap);
+    println!(
+        "serve_load: {} offers over {:.3}s of trace (seed {seed}{})",
+        arrivals.len(),
+        arrivals.last().map_or(0.0, |a| a.at),
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let mut latency_p99 = [[0.0f64; 2]; 2]; // [deadline][shed]
+    for (deadline, shed) in
+        [(false, false), (false, true), (true, false), (true, true)]
+    {
+        let tag = format!(
+            "deadline={} shed={}",
+            if deadline { "on" } else { "off" },
+            if shed { "on" } else { "off" }
+        );
+        let r = run(&arrivals, deadline, shed);
+        println!("-- {tag}: rejected {} shed {}", r.rejected, r.shed);
+        for c in QosClass::ALL {
+            let l = &r.latencies[c.index()];
+            let p50 = percentile(l, 0.50);
+            let p99 = percentile(l, 0.99);
+            println!(
+                "   {:<12} n={:<4} p50 {:>8.3}ms  p99 {:>8.3}ms",
+                c.name(),
+                l.len(),
+                p50 * 1e3,
+                p99 * 1e3
+            );
+            let series = format!("{tag} {}", c.name());
+            record(&series, "completions", l.len() as f64, "jobs");
+            record(&series, "latency_p50", p50 * 1e3, "ms");
+            record(&series, "latency_p99", p99 * 1e3, "ms");
+        }
+        record(&tag, "rejected", r.rejected as f64, "jobs");
+        record(&tag, "shed", r.shed as f64, "jobs");
+        latency_p99[usize::from(deadline)][usize::from(shed)] =
+            percentile(&r.latencies[QosClass::LatencySensitive.index()], 0.99);
+    }
+
+    // The ISSUE 10 acceptance comparison: the full stack (deadline
+    // flush + shed) must not worsen the latency class's p99 against
+    // both knobs off, on the identical offered trace. Reported, not
+    // asserted — single-run tails are noisy; BENCH_SERVE.json carries
+    // the numbers for the repeated-run comparison.
+    let on = latency_p99[1][1];
+    let off = latency_p99[0][0];
+    println!(
+        "latency p99: full stack {:.3}ms vs both-off {:.3}ms -> {}",
+        on * 1e3,
+        off * 1e3,
+        if on <= off * 1.05 { "ok" } else { "WORSE (rerun: noisy tail?)" }
+    );
+    record("ablation", "latency_p99_full_stack", on * 1e3, "ms");
+    record("ablation", "latency_p99_both_off", off * 1e3, "ms");
+
+    emit_bench_json();
+    println!("done");
+}

@@ -183,6 +183,21 @@ pub fn accounting_violations(pool: &PoolReport) -> Vec<String> {
         sum(|j| j.remote_requests),
         pool.remote_requests_out,
     );
+
+    // Serve admission ledger (ISSUE 10): every offer the serving front
+    // end recorded at the pool got exactly one verdict.
+    if pool.serve_admitted + pool.serve_rejected + pool.serve_shed
+        != pool.serve_offered
+    {
+        v.push(format!(
+            "serve admission ledger: offered {} != admitted {} + \
+             rejected {} + shed {}",
+            pool.serve_offered,
+            pool.serve_admitted,
+            pool.serve_rejected,
+            pool.serve_shed
+        ));
+    }
     v
 }
 
@@ -283,6 +298,10 @@ mod tests {
             // launches (the mode partition the checker enforces).
             persistent_batches: 1,
             per_batch_launches: 3,
+            // Serve admission ledger: 3 offers -> 2 admitted + 1 shed.
+            serve_offered: 3,
+            serve_admitted: 2,
+            serve_shed: 1,
             ..PoolReport::default()
         };
         pool.kind_stats.push(KindStats {
@@ -435,6 +454,25 @@ mod tests {
         pool.jobs[0].cross_job_launches = pool.jobs[0].launches + 1;
         let v = accounting_violations(&pool);
         assert!(v.iter().any(|s| s.contains("exceed")), "{v:?}");
+    }
+
+    #[test]
+    fn broken_serve_ledger_is_detected() {
+        let mut pool = consistent();
+        pool.serve_shed += 1; // a verdict with no matching offer
+        let v = accounting_violations(&pool);
+        assert!(
+            v.iter().any(|s| s.contains("serve admission ledger")),
+            "{v:?}"
+        );
+
+        let mut pool = consistent();
+        pool.serve_offered += 1; // an offer that never got a verdict
+        let v = accounting_violations(&pool);
+        assert!(
+            v.iter().any(|s| s.contains("serve admission ledger")),
+            "{v:?}"
+        );
     }
 
     #[test]

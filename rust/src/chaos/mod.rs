@@ -7,8 +7,10 @@
 //! rejected submissions racing live traffic, launch-mode flips that
 //! jitter the persistent work rings mid-job, and node faults that run
 //! the job SPMD on a two-node loopback fabric with delayed / reordered
-//! / dropped frames and a graceful mid-run peer departure — and checks
-//! the cross-cutting invariants at every step:
+//! / dropped frames and a graceful mid-run peer departure, and
+//! saturating best-effort bursts thrown at a `serve::ServeFront` with a
+//! deliberately tiny pool (the overload theme, `seed % 8 == 7`) — and
+//! checks the cross-cutting invariants at every step:
 //!
 //! - each healthy job's reduction series equals its exact integer
 //!   physics (distinct per-job tile fills: a launch that mixed another
@@ -23,7 +25,11 @@
 //! - a node-fault run's root reduction series equals the exact degraded
 //!   cluster physics, and the per-node reports balance the cross-node
 //!   steal/request/byte conservation ledger
-//!   ([`invariants::cluster_violations`], exact mode).
+//!   ([`invariants::cluster_violations`], exact mode);
+//! - an overload run's admission ledger closes exactly
+//!   (`offered == admitted + rejected + shed`, both the front end's own
+//!   counters and the pool-level copy), and the latency co-tenant's
+//!   reduction series stays exact under the burst.
 //!
 //! The event trace is a pure function of the seed (schedule lines plus
 //! deterministic outcomes), so `gcharm chaos --seed N` replays a failing
@@ -56,7 +62,7 @@ use crate::runtime::KernelResources;
 pub use invariants::{accounting_violations, cluster_violations};
 pub use schedule::{
     theme_name, Anchored, CancelKind, ClusterPlan, FamilySpec, Fault,
-    Injection, JobPlan, Schedule,
+    Injection, JobPlan, OverloadPlan, Schedule,
 };
 
 const METHOD_GO: u32 = 1;
@@ -307,6 +313,11 @@ pub fn run_schedule(seed: u64) -> Result<ChaosReport> {
         // Node-fault theme: the schedule's single job runs SPMD on a
         // faulted loopback fabric instead of one in-process runtime.
         return run_cluster(seed, &s, c, trace);
+    }
+    if let Some(o) = s.overload {
+        // Overload theme: the jobs go through the serving front end's
+        // admission door instead of straight into the runtime.
+        return run_overload(seed, &s, o, trace);
     }
     let mut violations: Vec<String> = Vec::new();
 
@@ -774,6 +785,228 @@ fn run_cluster(
         format!("cluster accounting: {} violation(s)", acc.len())
     });
     violations.extend(acc);
+
+    Ok(ChaosReport { seed, trace, violations })
+}
+
+/// Execute an overload schedule: a `serve::ServeFront` with the plan's
+/// deliberately tiny depths (policy `Shed`) guards a 1-device runtime
+/// while the schedule's single healthy tenant runs latency-class; then
+/// a saturating burst of best-effort offers slams the door.
+///
+/// Which individual burst offers land in the free best-effort slot and
+/// which shed is timing-dependent (it races earlier burst jobs'
+/// seals), so the trace records only the deterministic facts: the
+/// latency tenant always admits into an empty pool, nothing may ever
+/// preempt it (the burst is strictly lower class), its series stays
+/// exact physics, every admitted burst job seals `Done` with exact
+/// physics of its own, and the admission ledger closes exactly — the
+/// front end's counters, the pool-level copy fed through
+/// `Runtime::serve_account`, and the two agreeing with each other.
+fn run_overload(
+    seed: u64,
+    s: &Schedule,
+    o: OverloadPlan,
+    mut trace: Vec<String>,
+) -> Result<ChaosReport> {
+    use crate::serve::{
+        Admission, AdmissionPolicy, QosClass, ServeConfig, ServeFront,
+    };
+
+    let mut violations: Vec<String> = Vec::new();
+    let cfg = Config { pes: s.pes, devices: s.devices, ..Config::default() };
+    let rt = Runtime::new(cfg)?;
+    let front = ServeFront::new(ServeConfig {
+        policy: AdmissionPolicy::Shed,
+        class_depth: [1, 1, o.best_effort_depth],
+        pool_depth: o.pool_depth,
+        deadline: Some(0.01),
+    })?;
+
+    // The healthy latency tenant goes first: an empty pool always has
+    // room for it.
+    let plan = s.jobs[0].clone();
+    let fam = s.families[plan.family].clone();
+    let latency = match front.offer(
+        &rt,
+        QosClass::LatencySensitive,
+        job_spec(&plan, &fam, Arc::new(AtomicU64::new(0))),
+    )? {
+        Admission::Admitted(h) => h,
+        _ => {
+            violations
+                .push("latency tenant refused by an empty pool".to_string());
+            trace.push("overload: latency tenant refused".to_string());
+            let _ = rt.shutdown();
+            return Ok(ChaosReport { seed, trace, violations });
+        }
+    };
+    trace.push("overload: latency tenant admitted".to_string());
+
+    // The saturating burst: best-effort copies of the same family (so
+    // admitted burst jobs cross-job-combine with the latency tenant)
+    // offered back-to-back while the latency tenant holds a pool slot.
+    // With best_effort_depth 1 at most one runs at a time; a best-effort
+    // offer never finds a strictly-lower victim, so the overflow sheds.
+    trace.push(format!(
+        "overload: burst of {} best-effort offers at pool_depth {}",
+        o.burst, o.pool_depth
+    ));
+    let mut burst_handles = Vec::new();
+    let mut shed_n = 0usize;
+    for b in 0..o.burst {
+        let mut bp = plan.clone();
+        bp.name = format!("burst{b}");
+        bp.rounds = o.burst_rounds;
+        match front.offer(
+            &rt,
+            QosClass::BestEffort,
+            job_spec(&bp, &fam, Arc::new(AtomicU64::new(0))),
+        )? {
+            Admission::Admitted(h) => burst_handles.push((b, bp, h)),
+            Admission::Shed => shed_n += 1,
+            Admission::Rejected => {
+                violations.push(format!(
+                    "burst{b}: Reject verdict under the Shed policy"
+                ));
+            }
+        }
+    }
+
+    // Every admitted burst job seals Done with its own exact physics —
+    // nothing ever preempts best-effort here (no higher-class offer
+    // follows the burst).
+    let admitted_n = burst_handles.len();
+    for (b, bp, h) in burst_handles {
+        let status = h.wait();
+        let want =
+            vec![bp.round_value(&fam); bp.rounds as usize];
+        match status {
+            Ok(r) if r.series == want => {}
+            Ok(r) => violations.push(format!(
+                "burst{b}: series {:?} != exact physics {want:?}",
+                r.series
+            )),
+            Err(e) => violations
+                .push(format!("burst{b}: admitted job failed: {e}")),
+        }
+    }
+
+    // The latency co-tenant's reduction series must be its exact
+    // integer physics despite the burst.
+    let want =
+        vec![plan.round_value(&fam); plan.rounds as usize];
+    let status = latency.poll();
+    match latency.wait() {
+        Ok(r) if r.series == want => {
+            trace.push("overload: latency series exact".to_string());
+        }
+        Ok(r) => {
+            violations.push(format!(
+                "latency tenant ({status:?}): series {:?} != exact \
+                 physics {want:?} (burst broke tenant isolation?)",
+                r.series
+            ));
+            trace.push("overload: latency series mismatch".to_string());
+        }
+        Err(e) => {
+            violations
+                .push(format!("latency tenant failed under burst: {e}"));
+            trace.push("overload: latency tenant failed".to_string());
+        }
+    }
+    front.drain();
+
+    // The front end's own ledger: closes exactly, with every offer
+    // accounted and none rejected under Shed.
+    let fs = front.stats();
+    if !fs.ledger_closes() {
+        violations.push(format!(
+            "front ledger open: offered {} != admitted {} + rejected {} \
+             + shed {}",
+            fs.offered_total(),
+            fs.admitted_total(),
+            fs.rejected_total(),
+            fs.shed_total()
+        ));
+    }
+    if fs.offered_total() != (o.burst + 1) as u64 {
+        violations.push(format!(
+            "front saw {} offers for {} made",
+            fs.offered_total(),
+            o.burst + 1
+        ));
+    }
+    trace.push(if fs.ledger_closes() {
+        "overload: front ledger closes".to_string()
+    } else {
+        "overload: front ledger open".to_string()
+    });
+
+    // Residency audit + watchdogged shutdown, then the pool-level copy
+    // of the ledger: it must both close (accounting_violations) and
+    // agree with the front end decision-for-decision.
+    let resident = rt.chaos_resident_jobs()?;
+    if !resident.is_empty() {
+        violations.push(format!(
+            "sealed runtime still holds residency for jobs {resident:?}"
+        ));
+    }
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(rt.shutdown());
+    });
+    match rx.recv_timeout(EVENT_TIMEOUT) {
+        Ok(pool) => {
+            if pool.jobs.len() != 1 + admitted_n {
+                violations.push(format!(
+                    "{} sealed job reports for {} admissions",
+                    pool.jobs.len(),
+                    1 + admitted_n
+                ));
+            }
+            if (
+                pool.serve_offered,
+                pool.serve_admitted,
+                pool.serve_rejected,
+                pool.serve_shed,
+            ) != (
+                fs.offered_total(),
+                fs.admitted_total(),
+                fs.rejected_total(),
+                fs.shed_total(),
+            ) {
+                violations.push(format!(
+                    "pool serve ledger {}/{}/{}/{} != front ledger \
+                     {}/{}/{}/{} (offered/admitted/rejected/shed)",
+                    pool.serve_offered,
+                    pool.serve_admitted,
+                    pool.serve_rejected,
+                    pool.serve_shed,
+                    fs.offered_total(),
+                    fs.admitted_total(),
+                    fs.rejected_total(),
+                    fs.shed_total()
+                ));
+            }
+            if fs.shed_total() != shed_n as u64 {
+                violations.push(format!(
+                    "front counted {} sheds, the harness saw {shed_n}",
+                    fs.shed_total()
+                ));
+            }
+            let acc = accounting_violations(&pool);
+            trace.push(if acc.is_empty() {
+                "accounting: clean".to_string()
+            } else {
+                format!("accounting: {} violation(s)", acc.len())
+            });
+            violations.extend(acc);
+        }
+        Err(_) => {
+            violations.push("shutdown did not terminate".to_string());
+        }
+    }
 
     Ok(ChaosReport { seed, trace, violations })
 }

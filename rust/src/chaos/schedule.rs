@@ -9,10 +9,10 @@
 //!
 //! Two properties the generator maintains by construction:
 //!
-//! - **Corpus coverage**: `seed % 7` picks the emphasized fault theme
+//! - **Corpus coverage**: `seed % 8` picks the emphasized fault theme
 //!   (cancel / driver panic / steal storm / live registration / cache
-//!   pressure / launch-flip / node-fault), so any contiguous block of
-//!   14 seeds exercises every class twice.
+//!   pressure / launch-flip / node-fault / overload), so any contiguous
+//!   block of 16 seeds exercises every class twice.
 //! - **Reachable anchors**: every injection and cancel is anchored to a
 //!   `(job, round)` pair with `round <= effective_rounds(job)` — the
 //!   round counter is guaranteed to get there no matter what else the
@@ -176,6 +176,27 @@ pub struct ClusterPlan {
     pub peer_down_round: Option<u64>,
 }
 
+/// The overload theme's serving plan: the harness stands a
+/// `serve::ServeFront` (policy `Shed`, a deliberately tiny pool) in
+/// front of the runtime and slams it with a saturating burst of
+/// best-effort offers while the schedule's single healthy
+/// latency-class tenant runs. The invariants under test are the
+/// admission ledger (`offered == admitted + rejected + shed`, front-end
+/// and pool-level copies both) and the latency co-tenant's exact
+/// reduction physics under the burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverloadPlan {
+    /// Best-effort jobs offered in one saturating burst.
+    pub burst: usize,
+    /// Active-job cap for the best-effort class (1 keeps the door
+    /// tight: at most one burst job runs at a time, the rest shed).
+    pub best_effort_depth: usize,
+    /// Pool-wide active cap (2: the latency tenant plus one burst job).
+    pub pool_depth: usize,
+    /// Rounds each admitted burst job runs.
+    pub burst_rounds: u64,
+}
+
 /// Everything one chaos run does, derived purely from the seed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
@@ -192,10 +213,12 @@ pub struct Schedule {
     /// `Some`: the node-fault theme's distributed run; `None` keeps the
     /// run single-process.
     pub cluster: Option<ClusterPlan>,
+    /// `Some`: the overload theme's admission-control plan.
+    pub overload: Option<OverloadPlan>,
 }
 
 /// Fault themes, cycled by `seed % THEMES`.
-pub const THEMES: usize = 7;
+pub const THEMES: usize = 8;
 
 /// Human name of a seed's theme (trace + docs).
 pub fn theme_name(seed: u64) -> &'static str {
@@ -206,7 +229,8 @@ pub fn theme_name(seed: u64) -> &'static str {
         3 => "live-registration",
         4 => "cache-pressure",
         5 => "launch-flip",
-        _ => "node-fault",
+        6 => "node-fault",
+        _ => "overload",
     }
 }
 
@@ -219,17 +243,21 @@ impl Schedule {
         // steal between; cache pressure wants one device so the scan and
         // the hot set fight over the same tiny table; node-fault keeps
         // each node at one device — the rebalancing under test is
-        // cross-node, not cross-device.
+        // cross-node, not cross-device; overload pins one device so the
+        // burst genuinely saturates the pool.
         let devices = match theme {
             2 => 2,
-            4 | 6 => 1,
+            4 | 6 | 7 => 1,
             _ => 1 + rng.below(2),
         };
         let pes = 1 + rng.below(3);
         // Node-fault runs ONE SPMD job across the cluster: the fault
         // surface is the links and the departing peer, so co-tenant
-        // faults would only blur attribution.
-        let njobs = if theme == 6 { 1 } else { 2 + rng.below(2) };
+        // faults would only blur attribution. Overload likewise plans
+        // one healthy latency tenant — the burst jobs come from the
+        // OverloadPlan, through the admission door, not from here.
+        let njobs =
+            if matches!(theme, 6 | 7) { 1 } else { 2 + rng.below(2) };
         // Cache-pressure theme: a chare table far smaller than the scan
         // job's footprint, so residency decisions actually evict.
         let table_slots = (theme == 4).then(|| 6 + rng.below(6));
@@ -343,8 +371,9 @@ impl Schedule {
         }
         // Flush-timing jitter rides along on every second schedule —
         // except node-fault, whose per-node runtimes take no injections
-        // (the links are the fault surface).
-        if theme != 6 && rng.below(2) == 0 {
+        // (the links are the fault surface), and overload, whose only
+        // fault surface is the admission door.
+        if !matches!(theme, 6 | 7) && rng.below(2) == 0 {
             let shots = 1 + rng.below(3);
             injections.push(anchor(
                 &mut rng,
@@ -365,6 +394,13 @@ impl Schedule {
             }
         });
 
+        let overload = (theme == 7).then(|| OverloadPlan {
+            burst: 5 + rng.below(8),
+            best_effort_depth: 1,
+            pool_depth: 2,
+            burst_rounds: 1 + rng.below(2) as u64,
+        });
+
         Schedule {
             seed,
             devices,
@@ -374,6 +410,7 @@ impl Schedule {
             table_slots,
             injections,
             cluster,
+            overload,
         }
     }
 
@@ -419,6 +456,13 @@ impl Schedule {
                  drop_nth_heartbeat={} peer_down_round={:?}",
                 c.nodes, c.delay, c.reorder, c.drop_nth_heartbeat,
                 c.peer_down_round
+            ));
+        }
+        if let Some(o) = &self.overload {
+            out.push(format!(
+                "plan overload burst={} best_effort_depth={} \
+                 pool_depth={} burst_rounds={}",
+                o.burst, o.best_effort_depth, o.pool_depth, o.burst_rounds
             ));
         }
         out
@@ -469,14 +513,14 @@ mod tests {
                 assert_eq!(j.fault, Fault::None, "seed {seed}");
             }
         }
-        // seeds = 4 mod THEMES within 0..30: {4, 11, 18, 25}
+        // seeds = 4 mod THEMES within 0..30: {4, 12, 20, 28}
         assert!(checked >= 4, "corpus sweep missed the theme: {checked}");
     }
 
     #[test]
     fn node_fault_schedules_run_one_clean_job_on_two_nodes() {
         let mut checked = 0;
-        for seed in 0..30u64 {
+        for seed in 0..32u64 {
             let s = Schedule::from_seed(seed);
             if seed % THEMES as u64 != 6 {
                 assert_eq!(s.cluster, None, "seed {seed}: cluster off-theme");
@@ -500,7 +544,37 @@ mod tests {
                 );
             }
         }
-        // seeds = 6 mod THEMES within 0..30: {6, 13, 20, 27}
+        // seeds = 6 mod THEMES within 0..32: {6, 14, 22, 30}
+        assert!(checked >= 4, "corpus sweep missed the theme: {checked}");
+    }
+
+    #[test]
+    fn overload_schedules_plan_a_tight_door() {
+        let mut checked = 0;
+        for seed in 0..32u64 {
+            let s = Schedule::from_seed(seed);
+            if seed % THEMES as u64 != 7 {
+                assert_eq!(s.overload, None, "seed {seed}: overload off-theme");
+                continue;
+            }
+            checked += 1;
+            let o = s.overload.expect("overload plans a burst");
+            assert_eq!(s.devices, 1, "seed {seed}: saturate one device");
+            assert_eq!(s.jobs.len(), 1, "seed {seed}: one latency tenant");
+            assert_eq!(s.jobs[0].fault, Fault::None, "seed {seed}");
+            assert!(
+                s.injections.is_empty(),
+                "seed {seed}: the admission door is the only fault surface"
+            );
+            // The burst must oversubscribe the door so sheds actually
+            // happen, and the pool must still have room for the latency
+            // tenant plus at least one burst job.
+            assert!(o.burst > o.pool_depth, "seed {seed}");
+            assert_eq!(o.best_effort_depth, 1, "seed {seed}");
+            assert_eq!(o.pool_depth, 2, "seed {seed}");
+            assert!(o.burst_rounds >= 1, "seed {seed}");
+        }
+        // seeds = 7 mod THEMES within 0..32: {7, 15, 23, 31}
         assert!(checked >= 4, "corpus sweep missed the theme: {checked}");
     }
 

@@ -38,6 +38,9 @@ pub enum FlushReason {
     Forced,
     /// Drained for migration to an idle device (steal rebalancing).
     Stolen,
+    /// A latency-class job's deadline budget approached (serving front
+    /// end, ISSUE 10): flush early, even below maxSize.
+    Deadline,
 }
 
 /// A pending work request plus the device slot its buffer was staged into
@@ -255,6 +258,36 @@ impl Combiner {
         }
         let n = self.queue.len().min(self.max_size);
         Some(self.take(n, FlushReason::Stolen))
+    }
+
+    /// Drain one batch (capped at max_size) because a latency-class
+    /// job's deadline budget is running out. Fires below `maxSize` — the
+    /// whole point is to trade occupancy for tail latency — and, like a
+    /// full/idle flush, counts as this queue's own flush cycle (arrival
+    /// debt resets; `take`'s residual match leaves no residual debt for
+    /// `Deadline` since callers loop until `None`). Call until `None`.
+    pub fn deadline_flush(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_size);
+        Some(self.take(n, FlushReason::Deadline))
+    }
+
+    /// Earliest arrival time among this queue's pending requests of one
+    /// job, if any. The coordinator's deadline-flush trigger compares it
+    /// against the job's deadline budget.
+    pub fn oldest_arrival_of(&self, job: JobId) -> Option<f64> {
+        self.queue
+            .iter()
+            .filter(|p| p.wr.job == job)
+            .map(|p| p.wr.arrival)
+            .fold(None, |m, a| {
+                Some(match m {
+                    Some(m) if m <= a => m,
+                    _ => a,
+                })
+            })
     }
 
     fn take(&mut self, n: usize, reason: FlushReason) -> Batch {
@@ -744,6 +777,61 @@ mod tests {
             Combiner::new(CombinePolicy::Adaptive, 4, false).resident_slots(),
             0
         );
+    }
+
+    #[test]
+    fn deadline_flush_fires_below_max_size() {
+        // the whole point: a deadline drain must not wait for maxSize
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 104, false);
+        c.insert(pending(0, 0.0, None), 0.0);
+        c.insert(pending(1, 0.0001, None), 0.0001);
+        let b = c.deadline_flush().expect("deadline flush");
+        assert_eq!(b.reason, FlushReason::Deadline);
+        assert_eq!(b.items.len(), 2);
+        assert!(c.is_empty());
+        assert!(c.deadline_flush().is_none(), "empty queue never flushes");
+    }
+
+    #[test]
+    fn deadline_flush_caps_at_max_size() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 4, false);
+        for i in 0..6 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        let b = c.deadline_flush().unwrap();
+        assert_eq!(b.items.len(), 4);
+        let b2 = c.deadline_flush().expect("loop until None drains all");
+        assert_eq!(b2.items.len(), 2);
+        assert!(c.deadline_flush().is_none());
+    }
+
+    #[test]
+    fn deadline_flush_leaves_no_residual_debt() {
+        // unlike a capped Forced flush, deadline callers loop until None,
+        // so a lone capped deadline drain must not arm the static
+        // residual fast-path for requests that arrive later
+        let mut c = Combiner::new(CombinePolicy::StaticEvery(8), 3, false);
+        for i in 0..4 {
+            c.insert(pending(i, 0.0, None), 0.0);
+        }
+        assert_eq!(c.deadline_flush().unwrap().items.len(), 3);
+        assert_eq!(c.deadline_flush().unwrap().items.len(), 1);
+        c.insert(pending(4, 0.0, None), 0.0);
+        assert!(c.poll(0.0).is_none(), "1 of 8 arrivals: period holds");
+    }
+
+    #[test]
+    fn oldest_arrival_scans_per_job() {
+        let mut c = Combiner::new(CombinePolicy::Adaptive, 100, false);
+        assert!(c.oldest_arrival_of(JobId(0)).is_none());
+        let mut a = pending(0, 0.5, None);
+        a.wr.job = JobId(1);
+        c.insert(a, 0.5);
+        c.insert(pending(1, 0.7, None), 0.7);
+        c.insert(pending(2, 0.6, None), 0.6);
+        assert!((c.oldest_arrival_of(JobId(0)).unwrap() - 0.6).abs() < 1e-12);
+        assert!((c.oldest_arrival_of(JobId(1)).unwrap() - 0.5).abs() < 1e-12);
+        assert!(c.oldest_arrival_of(JobId(9)).is_none());
     }
 
     #[test]

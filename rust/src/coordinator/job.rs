@@ -22,7 +22,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -451,6 +451,49 @@ impl Runtime {
             .context("coordinator snapshot timed out")
     }
 
+    /// Detached live-snapshot handle: a clonable, thread-safe way for
+    /// the serve metrics endpoint (or any observer thread) to take
+    /// [`Runtime::pool_snapshot`]s without borrowing the runtime.
+    pub fn snapshot_handle(&self) -> PoolSnapshotHandle {
+        PoolSnapshotHandle { coord: self.core.router.coord.clone() }
+    }
+
+    /// Classify a job for the serving front end (ISSUE 10): its QoS
+    /// class, and — for latency-sensitive jobs — a deadline budget in
+    /// timeline seconds that arms the coordinator's deadline-aware
+    /// flush trigger. Queued FIFO behind the job's own submission, so
+    /// the class is in force before any of its work flushes.
+    pub fn set_job_qos(
+        &self,
+        job: JobId,
+        class: crate::serve::QosClass,
+        deadline: Option<f64>,
+    ) -> Result<()> {
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::SetJobQos { job, class, deadline })
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+    }
+
+    /// Fold serve-front-end admission-ledger deltas (offered, admitted,
+    /// rejected, shed) into the pool report. The ledger must close
+    /// exactly: `offered == admitted + rejected + shed` over all calls,
+    /// audited by `chaos::invariants`.
+    pub fn serve_account(
+        &self,
+        offered: u64,
+        admitted: u64,
+        rejected: u64,
+        shed: u64,
+    ) -> Result<()> {
+        self.core
+            .router
+            .coord
+            .send(CoordMsg::ServeAccount { offered, admitted, rejected, shed })
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))
+    }
+
     /// Stop the runtime and return the pool-wide report with every
     /// sealed [`JobReport`] attached. Blocks until running jobs finish
     /// (use `JobHandle::cancel` first for an early stop).
@@ -595,6 +638,28 @@ impl NetEndpoint {
     }
 }
 
+/// A clonable handle that takes live [`PoolReport`] snapshots of a
+/// running [`Runtime`] without borrowing it
+/// ([`Runtime::snapshot_handle`]). Snapshots keep working until the
+/// runtime shuts down, after which they error.
+#[derive(Clone)]
+pub struct PoolSnapshotHandle {
+    coord: Sender<CoordMsg>,
+}
+
+impl PoolSnapshotHandle {
+    /// Live snapshot of the pool-wide report (same contract as
+    /// [`Runtime::pool_snapshot`]).
+    pub fn pool_snapshot(&self) -> Result<PoolReport> {
+        let (tx, rx) = channel();
+        self.coord
+            .send(CoordMsg::Snapshot(tx))
+            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
+        rx.recv_timeout(Duration::from_secs(30))
+            .context("coordinator snapshot timed out")
+    }
+}
+
 /// A submitted job's handle: blocking [`JobHandle::wait`], non-blocking
 /// [`JobHandle::poll`], [`JobHandle::cancel`], and a live
 /// [`JobHandle::metrics_snapshot`] that works while the job runs and
@@ -640,6 +705,12 @@ impl JobHandle {
     /// Point-in-time copy of the job's live counters.
     pub fn metrics_snapshot(&self) -> JobMetricsSnapshot {
         self.state.metrics_snapshot()
+    }
+
+    /// The job's shared state, for observers (the serve front end)
+    /// that outlive or never hold the handle itself.
+    pub(crate) fn state_arc(&self) -> Arc<JobState> {
+        self.state.clone()
     }
 }
 

@@ -249,6 +249,20 @@ pub struct PoolReport {
     pub flush_static: u64,
     pub flush_forced: u64,
     pub flush_stolen: u64,
+    /// Deadline-budget flushes (serve front end, ISSUE 10): a
+    /// latency-class job's oldest queued request aged past its deadline
+    /// budget, so the combiner drained early, below maxSize.
+    pub flush_deadline: u64,
+    /// Serve-front-end admission ledger (ISSUE 10), summed over QoS
+    /// classes. The front end reports every admission decision through
+    /// `Runtime::serve_account`, and the invariant
+    /// `serve_offered == serve_admitted + serve_rejected + serve_shed`
+    /// must close exactly — audited by `chaos::invariants`. All zero
+    /// when no serve front end ran.
+    pub serve_offered: u64,
+    pub serve_admitted: u64,
+    pub serve_rejected: u64,
+    pub serve_shed: u64,
     /// Sum of flushed batch sizes (for the average).
     pub flushed_requests: u64,
     /// CPU-side task wall seconds (hybrid path).
@@ -320,6 +334,7 @@ impl PoolReport {
             FlushReason::StaticPeriod => self.flush_static += 1,
             FlushReason::Forced => self.flush_forced += 1,
             FlushReason::Stolen => self.flush_stolen += 1,
+            FlushReason::Deadline => self.flush_deadline += 1,
         }
         self.flushed_requests += size as u64;
     }
@@ -331,6 +346,7 @@ impl PoolReport {
             + self.flush_static
             + self.flush_forced
             + self.flush_stolen
+            + self.flush_deadline
     }
 
     /// Mutable per-device entry, growing the vec on demand.
@@ -404,14 +420,25 @@ impl std::fmt::Display for PoolReport {
         )?;
         writeln!(
             f,
-            "flushes             full {} / idle {} / static {} / forced {} / stolen {} (avg batch {:.1})",
+            "flushes             full {} / idle {} / static {} / forced {} / stolen {} / deadline {} (avg batch {:.1})",
             self.flush_full,
             self.flush_idle,
             self.flush_static,
             self.flush_forced,
             self.flush_stolen,
+            self.flush_deadline,
             self.avg_batch()
         )?;
+        if self.serve_offered > 0 {
+            writeln!(
+                f,
+                "serve admission     offered {} = admitted {} + rejected {} + shed {}",
+                self.serve_offered,
+                self.serve_admitted,
+                self.serve_rejected,
+                self.serve_shed
+            )?;
+        }
         writeln!(
             f,
             "kernel time         wall {:.4}s   modeled-K20 {:.4}s",
@@ -577,6 +604,35 @@ mod tests {
         assert_eq!(r.flush_stolen, 1);
         assert_eq!(r.flushes(), 1);
         assert!((r.avg_batch() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_flushes_counted_and_rendered() {
+        let mut r = Report::default();
+        r.record_flush(FlushReason::Deadline, 3);
+        assert_eq!(r.flush_deadline, 1);
+        assert_eq!(r.flushes(), 1);
+        assert!((r.avg_batch() - 3.0).abs() < 1e-12);
+        let s = format!("{r}");
+        assert!(s.contains("deadline 1"), "{s}");
+    }
+
+    #[test]
+    fn serve_ledger_renders_only_when_offered() {
+        let quiet = Report::default();
+        assert!(!format!("{quiet}").contains("serve admission"));
+        let r = Report {
+            serve_offered: 10,
+            serve_admitted: 6,
+            serve_rejected: 1,
+            serve_shed: 3,
+            ..Report::default()
+        };
+        let s = format!("{r}");
+        assert!(
+            s.contains("serve admission     offered 10 = admitted 6 + rejected 1 + shed 3"),
+            "{s}"
+        );
     }
 
     #[test]

@@ -67,7 +67,9 @@ pub use chare_table::ChareTable;
 pub use combiner::{Batch, CombinePolicy, Combiner, FlushReason, Pending};
 pub use cpu_pool::chunk_by_items;
 pub use hybrid::{HybridScheduler, SplitPolicy};
-pub use job::{GCharm, JobCtx, JobDriver, JobHandle, JobSpec, Runtime};
+pub use job::{
+    GCharm, JobCtx, JobDriver, JobHandle, JobSpec, PoolSnapshotHandle, Runtime,
+};
 pub use metrics::{
     DeviceStats, JobMetricsSnapshot, JobReport, KindStats, PoolReport, Report,
 };
@@ -378,7 +380,19 @@ pub(crate) struct Coord {
     chaos_forced_mode: Option<LaunchMode>,
     /// Adaptive launch-mode learner, one row per registered kind.
     mode_states: Vec<LaunchModeState>,
+    /// QoS class per job (serve front end, ISSUE 10). Jobs submitted
+    /// outside a serve front end have no entry and behave exactly as
+    /// before (multiplier 1.0, steal-eligible, no deadline).
+    job_qos: HashMap<u64, crate::serve::QosClass>,
+    /// Deadline budget (timeline seconds) per latency-sensitive job:
+    /// arms the deadline flush trigger in `poll_combiners`.
+    job_deadline: HashMap<u64, f64>,
 }
+
+/// Fraction of a latency job's deadline budget its oldest queued
+/// request may age in a combiner before the queue drains early (below
+/// maxSize): half the budget is left for the launch itself.
+const DEADLINE_FLUSH_FRACTION: f64 = 0.5;
 
 impl Coord {
     pub(crate) fn new(
@@ -425,6 +439,8 @@ impl Coord {
             queue_cap_override: None,
             chaos_forced_mode: None,
             mode_states: Vec::new(),
+            job_qos: HashMap::new(),
+            job_deadline: HashMap::new(),
             cfg,
             router,
         })
@@ -542,8 +558,9 @@ impl Coord {
         self.poll_combiners();
     }
 
-    /// Poll every device's combiners; dispatch flushed batches, then run
-    /// the idle-steal rebalancer.
+    /// Poll every device's combiners; dispatch flushed batches, run the
+    /// deadline flush trigger for latency-class jobs, then the
+    /// idle-steal rebalancer.
     fn poll_combiners(&mut self) {
         let now = self.now();
         for d in 0..self.devices.len() {
@@ -554,8 +571,78 @@ impl Coord {
                 }
             }
         }
+        self.deadline_flush(now);
         self.idle_drain(now);
         self.try_steal();
+    }
+
+    /// Deadline-aware flushing (serve front end, ISSUE 10): when a
+    /// latency-class job's oldest queued request has aged past
+    /// [`DEADLINE_FLUSH_FRACTION`] of that job's deadline budget, drain
+    /// the combiner holding it even below `maxSize` — trading launch
+    /// occupancy for tail latency. The flush reason is
+    /// [`FlushReason::Deadline`]: it counts as a *dense* observation for
+    /// the adaptive launch-mode learner (the arrival stream is hot, the
+    /// drain is policy) and charges no persistent-loop idle penalty.
+    fn deadline_flush(&mut self, now: f64) {
+        if self.job_deadline.is_empty() {
+            return;
+        }
+        for d in 0..self.devices.len() {
+            for k in 0..self.devices[d].combiners.len() {
+                let due = self.job_deadline.iter().any(|(&j, &dl)| {
+                    self.devices[d].combiners[k]
+                        .oldest_arrival_of(JobId(j))
+                        .is_some_and(|a| {
+                            now - a >= dl * DEADLINE_FLUSH_FRACTION
+                        })
+                });
+                if due {
+                    while let Some(b) =
+                        self.devices[d].combiners[k].deadline_flush()
+                    {
+                        self.dispatch(b, KernelKindId(k), d);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The combine-weight multiplier of a job's QoS class (1.0 for jobs
+    /// with no class, i.e. everything outside a serve front end).
+    fn qos_mult(&self, job: JobId) -> f64 {
+        self.job_qos
+            .get(&job.0)
+            .map_or(1.0, |c| c.weight_multiplier())
+    }
+
+    /// The serve front end classified a job: remember its class and
+    /// deadline budget, and push the class multiplier into every
+    /// combiner's fair-share weight immediately — a latency job must
+    /// get its enlarged quota before its first completion refreshes the
+    /// learned per-(job, kind) weight.
+    fn on_set_job_qos(
+        &mut self,
+        job: JobId,
+        class: crate::serve::QosClass,
+        deadline: Option<f64>,
+    ) {
+        self.job_qos.insert(job.0, class);
+        match deadline {
+            Some(d) if d > 0.0 => {
+                self.job_deadline.insert(job.0, d);
+            }
+            _ => {
+                self.job_deadline.remove(&job.0);
+            }
+        }
+        for k in 0..self.kinds.len() {
+            let w = self.hybrid.job_weight(job, KernelKindId(k))
+                * self.qos_mult(job);
+            for st in &mut self.devices {
+                st.combiners[k].set_job_weight(job, w);
+            }
+        }
     }
 
     /// Safety drain (see Config::idle_drain).
@@ -1229,7 +1316,10 @@ impl Coord {
             }
             self.hybrid
                 .record_job(job, kind, reqs as usize, items as usize);
-            let w = self.hybrid.job_weight(job, kind);
+            // Learned per-(job, kind) heaviness composed with the QoS
+            // class multiplier: a latency-class tenant holds an enlarged
+            // share of oversubscribed flushes, best-effort a reduced one.
+            let w = self.hybrid.job_weight(job, kind) * self.qos_mult(job);
             for st in &mut self.devices {
                 st.combiners[kind.0].set_job_weight(job, w);
             }
@@ -1343,6 +1433,8 @@ impl Coord {
         self.on_invalidate_job(job);
         self.dev_router.forget_job(job);
         self.hybrid.forget_job(job);
+        self.job_qos.remove(&job.0);
+        self.job_deadline.remove(&job.0);
         for st in &mut self.devices {
             for c in &mut st.combiners {
                 c.clear_job_weight(job);
@@ -1422,6 +1514,21 @@ impl Coord {
             let _ = reply.send(None);
             return;
         };
+        // QoS steal eligibility (ISSUE 10): latency-class work never
+        // ships over the wire — a remote round trip adds wire latency
+        // exactly where the deadline budget is tightest. Intra-node
+        // steals (cheap migration between local devices) stay allowed.
+        if batch.items.iter().any(|p| {
+            self.job_qos.get(&p.wr.job.0)
+                == Some(&crate::serve::QosClass::LatencySensitive)
+        }) {
+            let now = self.now();
+            for p in batch.items {
+                self.devices[device].combiners[k].insert(p, now);
+            }
+            let _ = reply.send(None);
+            return;
+        }
         let items: usize = batch.items.iter().map(|p| p.wr.data_items).sum();
         let bytes = Self::ship_bytes(&batch.items);
         let wire = crate::net::wire_secs(bytes);
@@ -1672,6 +1779,20 @@ impl Coord {
                     let _ = reply.send(d);
                 }
                 Ok(CoordMsg::NetAccount(d)) => self.on_net_account(d),
+                Ok(CoordMsg::SetJobQos { job, class, deadline }) => {
+                    self.on_set_job_qos(job, class, deadline)
+                }
+                Ok(CoordMsg::ServeAccount {
+                    offered,
+                    admitted,
+                    rejected,
+                    shed,
+                }) => {
+                    self.report.serve_offered += offered;
+                    self.report.serve_admitted += admitted;
+                    self.report.serve_rejected += rejected;
+                    self.report.serve_shed += shed;
+                }
                 #[cfg(any(test, feature = "chaos"))]
                 Ok(CoordMsg::Chaos(cmd)) => self.on_chaos(cmd),
                 Ok(CoordMsg::Stop) => break,
@@ -1703,6 +1824,19 @@ impl Coord {
                     let _ = reply.send(0);
                 }
                 Ok(CoordMsg::NetAccount(d)) => self.on_net_account(d),
+                // Late admission-ledger deltas must not be lost: the
+                // ledger equality is an exact invariant.
+                Ok(CoordMsg::ServeAccount {
+                    offered,
+                    admitted,
+                    rejected,
+                    shed,
+                }) => {
+                    self.report.serve_offered += offered;
+                    self.report.serve_admitted += admitted;
+                    self.report.serve_rejected += rejected;
+                    self.report.serve_shed += shed;
+                }
                 Ok(_) => {}
                 Err(_) => break,
             }

@@ -103,6 +103,25 @@ pub(crate) enum CoordMsg {
     /// Fold cluster-layer counters (thief-side executions, wire bytes,
     /// stale results) into the pool report.
     NetAccount(NetAccountDelta),
+    /// The serve front end classified a job (ISSUE 10): QoS class plus,
+    /// for latency-sensitive jobs, a deadline budget in timeline
+    /// seconds. The coordinator folds the class into the weighted-fair
+    /// combine quotas, gates cross-node steal eligibility on it, and
+    /// arms the deadline flush trigger.
+    SetJobQos {
+        job: JobId,
+        class: crate::serve::QosClass,
+        deadline: Option<f64>,
+    },
+    /// Admission-ledger deltas from the serve front end (offered /
+    /// admitted / rejected / shed), folded into the pool report so the
+    /// ledger closes exactly in `PoolReport`.
+    ServeAccount {
+        offered: u64,
+        admitted: u64,
+        rejected: u64,
+        shed: u64,
+    },
     /// A chaos-harness injection (test/chaos builds only); the release
     /// hot path never constructs or matches this variant.
     #[cfg(any(test, feature = "chaos"))]

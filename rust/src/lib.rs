@@ -78,4 +78,11 @@ pub mod coordinator;
 // the single-process `Runtime` bitwise.
 pub mod net;
 pub mod runtime;
+// Serving front end (ISSUE 10): bounded admission with
+// Block/Reject/Shed backpressure, per-tenant QoS classes layered onto
+// the weighted-fair combine quotas, deadline-aware combiner flushing
+// for latency-class jobs, class-ordered load shedding with an exactly
+// closing admission ledger, and a scrapeable plaintext metrics
+// endpoint over the net-layer framing.
+pub mod serve;
 pub mod util;

@@ -40,7 +40,7 @@ pub mod wire;
 
 pub use cluster::{Cluster, ClusterHandle, ClusterNode, NetConfig, NodeReport};
 pub use loopback::{Loopback, LoopbackFabric};
-pub use tcp::Tcp;
+pub use tcp::{read_text_frame, write_text_frame, Tcp};
 pub use wire::{Frame, WirePayload, WireRequest};
 
 use std::time::Duration;

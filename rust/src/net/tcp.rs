@@ -39,6 +39,35 @@ const ACCEPT_DEADLINE: Duration = Duration::from_secs(45);
 /// Largest frame body we will read; far above any real shipment.
 const MAX_FRAME: u32 = 64 << 20;
 
+/// Write one length-prefixed text frame (`u32` little-endian body
+/// length, then the UTF-8 body) — the same framing the mesh uses,
+/// reused by the serve metrics endpoint so scrapers share one wire
+/// format with the cluster.
+pub fn write_text_frame(w: &mut impl Write, body: &str) -> std::io::Result<()> {
+    let bytes = body.as_bytes();
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one length-prefixed text frame written by [`write_text_frame`].
+/// Refuses bodies above [`MAX_FRAME`] or invalid UTF-8.
+pub fn read_text_frame(r: &mut impl Read) -> std::io::Result<String> {
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb)?;
+    let len = u32::from_le_bytes(lenb);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("text frame of {len} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    String::from_utf8(body)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
 fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
     x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
@@ -283,6 +312,18 @@ mod tests {
         assert_eq!(t0.bytes_in(), f.encoded_len() as u64);
         assert_eq!(t0.bytes_out(), g.encoded_len() as u64);
         assert_eq!(t1.bytes_in(), g.encoded_len() as u64);
+    }
+
+    #[test]
+    fn text_frames_round_trip() {
+        let mut buf = Vec::new();
+        write_text_frame(&mut buf, "gcharm_up 1\n").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_text_frame(&mut r).unwrap(), "gcharm_up 1\n");
+        // oversized length prefix is refused, not allocated
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        assert!(read_text_frame(&mut &bad[..]).is_err());
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Scrapeable plaintext metrics endpoint for the serving front end.
+//!
+//! One background thread accepts TCP connections and answers each with
+//! a single length-prefixed text frame (the net layer's
+//! [`write_text_frame`] framing — scrapers share one wire format with
+//! the cluster transport) containing prometheus-style `name{labels}
+//! value` lines: the serve admission ledger per class, the live
+//! pool-wide counters from a [`PoolSnapshotHandle`], and per-live-job
+//! gauges from the runtime's shared job table. Rendering happens per
+//! scrape, so every connection sees current values.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{PoolSnapshotHandle, Shared};
+use crate::net::{read_text_frame, write_text_frame};
+
+use super::{QosClass, ServeStats};
+
+/// The endpoint: bound at [`MetricsEndpoint::spawn`], scrapeable until
+/// dropped (drop stops the accept thread and joins it).
+pub struct MetricsEndpoint {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Accept-loop poll interval while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+impl MetricsEndpoint {
+    /// Bind `addr` (port 0 picks a free port — read the result from
+    /// [`MetricsEndpoint::addr`]) and start answering scrapes with the
+    /// live serve + pool + per-job counters.
+    pub fn spawn(
+        addr: &str,
+        shared: Arc<Shared>,
+        pool: PoolSnapshotHandle,
+        stats: Arc<Mutex<ServeStats>>,
+    ) -> Result<MetricsEndpoint> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("metrics endpoint: bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("serve-metrics".into())
+            .spawn(move || {
+                while !flag.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((mut conn, _)) => {
+                            let body = render(&shared, &pool, &stats);
+                            let _ = conn.set_nodelay(true);
+                            let _ = write_text_frame(&mut conn, &body);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawn metrics endpoint")?;
+        Ok(MetricsEndpoint { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// One scrape over a fresh connection: connect, read the single
+    /// text frame, return its body. Used by tests and the CLI's
+    /// self-scrape.
+    pub fn scrape(addr: &SocketAddr) -> Result<String> {
+        let mut conn = TcpStream::connect(addr)
+            .with_context(|| format!("metrics scrape: connect {addr}"))?;
+        conn.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(read_text_frame(&mut conn)?)
+    }
+}
+
+impl Drop for MetricsEndpoint {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Render one scrape body. Infallible: a pool snapshot that errors
+/// (runtime shut down mid-scrape) just omits the pool section.
+fn render(
+    shared: &Shared,
+    pool: &PoolSnapshotHandle,
+    stats: &Mutex<ServeStats>,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let s = stats.lock().unwrap().clone();
+    for c in QosClass::ALL {
+        let i = c.index();
+        let n = c.name();
+        let _ = writeln!(out, "gcharm_serve_offered{{class=\"{n}\"}} {}", s.offered[i]);
+        let _ = writeln!(out, "gcharm_serve_admitted{{class=\"{n}\"}} {}", s.admitted[i]);
+        let _ = writeln!(out, "gcharm_serve_rejected{{class=\"{n}\"}} {}", s.rejected[i]);
+        let _ = writeln!(out, "gcharm_serve_shed{{class=\"{n}\"}} {}", s.shed[i]);
+        let _ = writeln!(out, "gcharm_serve_preempted{{class=\"{n}\"}} {}", s.preempted[i]);
+        let _ = writeln!(out, "gcharm_serve_completed{{class=\"{n}\"}} {}", s.completed[i]);
+    }
+    if let Ok(r) = pool.pool_snapshot() {
+        let _ = writeln!(out, "gcharm_pool_launches {}", r.launches);
+        let _ = writeln!(out, "gcharm_pool_cross_job_launches {}", r.cross_job_launches);
+        let _ = writeln!(out, "gcharm_pool_gpu_requests {}", r.gpu_requests);
+        let _ = writeln!(out, "gcharm_pool_cpu_requests {}", r.cpu_requests);
+        let _ = writeln!(out, "gcharm_pool_flushes {}", r.flushes());
+        let _ = writeln!(out, "gcharm_pool_flush_deadline {}", r.flush_deadline);
+        let _ = writeln!(out, "gcharm_pool_serve_offered {}", r.serve_offered);
+        let _ = writeln!(out, "gcharm_pool_serve_admitted {}", r.serve_admitted);
+        let _ = writeln!(out, "gcharm_pool_serve_rejected {}", r.serve_rejected);
+        let _ = writeln!(out, "gcharm_pool_serve_shed {}", r.serve_shed);
+        let _ = writeln!(out, "gcharm_pool_transfer_bytes {}", r.transfer_bytes);
+        let _ = writeln!(out, "gcharm_pool_steals {}", r.steals);
+    }
+    for job in shared.live_jobs() {
+        if let Some(js) = shared.job(job) {
+            let m = js.metrics_snapshot();
+            let j = job.0;
+            let _ = writeln!(out, "gcharm_job_launches{{job=\"{j}\"}} {}", m.launches);
+            let _ = writeln!(out, "gcharm_job_queued{{job=\"{j}\"}} {}", m.queued_requests);
+            let _ = writeln!(out, "gcharm_job_outstanding{{job=\"{j}\"}} {}", m.outstanding);
+        }
+    }
+    out
+}

@@ -1,0 +1,548 @@
+//! Serving front end (ISSUE 10): admission control, QoS classes,
+//! deadline-aware flushing, and load shedding above the multi-tenant
+//! [`Runtime`].
+//!
+//! The paper's adaptive strategies minimize device idling for
+//! *closed-loop* benchmark drivers; a serving tier faces open-loop,
+//! bursty, heavy-tailed arrivals, where the figure of merit shifts from
+//! makespan to tail latency under load (ROADMAP item 3; Atos makes the
+//! same queue-driven-admission argument at kernel granularity). This
+//! module is that layer:
+//!
+//! * [`ServeFront`] — a bounded admission gate over
+//!   [`Runtime::submit_job`]: per-class depth limits plus a pool-wide
+//!   cap, with explicit backpressure per [`AdmissionPolicy`] (`Block`
+//!   waits, `Reject` refuses, `Shed` preempts the lowest class first
+//!   and refuses only when nothing lower exists).
+//! * [`QosClass`] — per-tenant classes layered onto the coordinator's
+//!   weighted-fair combine quotas: a latency-sensitive job gets an
+//!   enlarged share of oversubscribed flushes, a deadline budget that
+//!   arms the combiners' `FlushReason::Deadline` trigger, and immunity
+//!   from cross-node steal; best-effort gets a reduced share and sheds
+//!   first.
+//! * [`ServeStats`] — the per-class admission ledger. The pool-level
+//!   copy in `PoolReport` must close exactly
+//!   (`offered == admitted + rejected + shed`), audited by
+//!   `chaos::invariants` with falsifiability tests.
+//! * [`MetricsEndpoint`] — a scrapeable plaintext endpoint serving the
+//!   live pool snapshot, per-job counters, and the serve ledger over
+//!   the net layer's length-prefixed framing.
+
+mod endpoint;
+
+pub use endpoint::MetricsEndpoint;
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{
+    JobHandle, JobSpec, JobState, JobStatus, Runtime,
+};
+
+/// Per-tenant quality-of-service class. Classes map onto the
+/// coordinator's existing weighted-fair machinery (see
+/// [`QosClass::weight_multiplier`]) rather than a separate scheduler:
+/// one mechanism, three operating points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Interactive traffic: enlarged combine quota, a deadline budget
+    /// that flushes combiners early (`FlushReason::Deadline`), never
+    /// shipped over the wire by cross-node steal, shed last.
+    LatencySensitive,
+    /// Batch traffic: the neutral baseline (multiplier 1.0, no
+    /// deadline, steal-eligible).
+    Throughput,
+    /// Scavenger traffic: reduced combine quota, shed first when the
+    /// pool saturates.
+    BestEffort,
+}
+
+impl QosClass {
+    /// Every class, in [`QosClass::index`] order (the per-class array
+    /// layout of [`ServeStats`] and `ServeConfig::class_depth`).
+    pub const ALL: [QosClass; 3] =
+        [QosClass::LatencySensitive, QosClass::Throughput, QosClass::BestEffort];
+
+    /// Dense index into per-class arrays.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::LatencySensitive => 0,
+            QosClass::Throughput => 1,
+            QosClass::BestEffort => 2,
+        }
+    }
+
+    /// Shed order: lower ranks shed first. A saturated pool preempts
+    /// strictly-lower-rank tenants only, so best-effort never evicts
+    /// best-effort and nothing ever evicts latency traffic.
+    pub fn shed_rank(self) -> u8 {
+        match self {
+            QosClass::BestEffort => 0,
+            QosClass::Throughput => 1,
+            QosClass::LatencySensitive => 2,
+        }
+    }
+
+    /// Multiplier composed onto the learned per-(job, kind) fair-share
+    /// weight in the combiners: latency-class jobs hold 4x their
+    /// learned share of oversubscribed flushes, best-effort a quarter.
+    pub fn weight_multiplier(self) -> f64 {
+        match self {
+            QosClass::LatencySensitive => 4.0,
+            QosClass::Throughput => 1.0,
+            QosClass::BestEffort => 0.25,
+        }
+    }
+
+    /// Stable name (CLI flags, metrics labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::LatencySensitive => "latency",
+            QosClass::Throughput => "throughput",
+            QosClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Parse a [`QosClass::name`] (CLI `--qos`).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "latency" | "latency-sensitive" => {
+                Some(QosClass::LatencySensitive)
+            }
+            "throughput" => Some(QosClass::Throughput),
+            "best-effort" | "besteffort" => Some(QosClass::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+/// What a full queue does to the next offered job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Wait (bounded only by the caller) until depth frees up:
+    /// backpressure propagates to the producer.
+    Block,
+    /// Refuse immediately: the producer sees the rejection and decides.
+    Reject,
+    /// Preempt the oldest strictly-lower-class active job to make room;
+    /// refuse the offer itself only when nothing lower is running.
+    Shed,
+}
+
+impl AdmissionPolicy {
+    /// Stable name (CLI flags, metrics labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::Shed => "shed",
+        }
+    }
+
+    /// Parse an [`AdmissionPolicy::name`] (CLI `--admission`).
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "block" => Some(AdmissionPolicy::Block),
+            "reject" => Some(AdmissionPolicy::Reject),
+            "shed" => Some(AdmissionPolicy::Shed),
+            _ => None,
+        }
+    }
+}
+
+/// Front-end limits and policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// What happens when the offered job's class (or the pool) is full.
+    pub policy: AdmissionPolicy,
+    /// Active-job limit per class, indexed by [`QosClass::index`].
+    pub class_depth: [usize; 3],
+    /// Active-job limit across all classes.
+    pub pool_depth: usize,
+    /// Deadline budget (timeline seconds) handed to latency-sensitive
+    /// admissions; arms the coordinator's deadline-aware flush.
+    pub deadline: Option<f64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            policy: AdmissionPolicy::Block,
+            class_depth: [4, 4, 4],
+            pool_depth: 8,
+            deadline: Some(0.05),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Reject configurations that can never admit anything.
+    pub fn validate(&self) -> Result<()> {
+        if self.pool_depth == 0 {
+            bail!("serve: pool_depth must be at least 1");
+        }
+        for c in QosClass::ALL {
+            if self.class_depth[c.index()] == 0 {
+                bail!("serve: class_depth[{}] must be at least 1", c.name());
+            }
+        }
+        if let Some(d) = self.deadline {
+            if !d.is_finite() || d <= 0.0 {
+                bail!("serve: deadline must be positive and finite");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-class admission counters of one [`ServeFront`]. Arrays are
+/// indexed by [`QosClass::index`]. The front-end-local ledger
+/// `offered == admitted + rejected + shed` closes whenever no `offer`
+/// is mid-flight; the pool-level copy in `PoolReport` (fed one decision
+/// at a time through `Runtime::serve_account`) closes always.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Jobs offered to the front end.
+    pub offered: [u64; 3],
+    /// Offers admitted to the runtime.
+    pub admitted: [u64; 3],
+    /// Offers refused (policy `Reject`, or a failed registration).
+    pub rejected: [u64; 3],
+    /// Offers shed at the door (policy `Shed`, nothing lower running).
+    pub shed: [u64; 3],
+    /// *Admitted* jobs later preempted to make room for a higher class.
+    /// Not part of the offer ledger — a preempted job was admitted and
+    /// seals as `Cancelled`.
+    pub preempted: [u64; 3],
+    /// Admitted jobs observed sealed by `reap`.
+    pub completed: [u64; 3],
+}
+
+impl ServeStats {
+    /// Offers across all classes.
+    pub fn offered_total(&self) -> u64 {
+        self.offered.iter().sum()
+    }
+
+    /// Admissions across all classes.
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.iter().sum()
+    }
+
+    /// Rejections across all classes.
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.iter().sum()
+    }
+
+    /// Door-sheds across all classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    /// The admission ledger: every offer got exactly one verdict.
+    pub fn ledger_closes(&self) -> bool {
+        self.offered_total()
+            == self.admitted_total() + self.rejected_total() + self.shed_total()
+    }
+}
+
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for c in QosClass::ALL {
+            let i = c.index();
+            writeln!(
+                f,
+                "{:<12} offered {} / admitted {} / rejected {} / shed {} / preempted {} / completed {}",
+                c.name(),
+                self.offered[i],
+                self.admitted[i],
+                self.rejected[i],
+                self.shed[i],
+                self.preempted[i],
+                self.completed[i]
+            )?;
+        }
+        write!(
+            f,
+            "total        offered {} = admitted {} + rejected {} + shed {}",
+            self.offered_total(),
+            self.admitted_total(),
+            self.rejected_total(),
+            self.shed_total()
+        )
+    }
+}
+
+/// The verdict of one [`ServeFront::offer`].
+pub enum Admission {
+    /// Submitted to the runtime; the handle is the caller's to wait on.
+    Admitted(JobHandle),
+    /// Refused under [`AdmissionPolicy::Reject`].
+    Rejected,
+    /// Shed at the door under [`AdmissionPolicy::Shed`] (the offered
+    /// class had no strictly-lower active job to preempt).
+    Shed,
+}
+
+/// One admitted job the front end is tracking.
+struct Active {
+    class: QosClass,
+    state: Arc<JobState>,
+}
+
+/// The admission gate. Thread-safe: producers may `offer` from several
+/// threads against one shared front end.
+pub struct ServeFront {
+    cfg: ServeConfig,
+    stats: Arc<Mutex<ServeStats>>,
+    active: Mutex<Vec<Active>>,
+}
+
+/// Poll interval of a blocked `offer` and of `drain`.
+const BLOCK_POLL: Duration = Duration::from_micros(100);
+
+impl ServeFront {
+    /// Build a front end over a validated configuration.
+    pub fn new(cfg: ServeConfig) -> Result<ServeFront> {
+        cfg.validate()?;
+        Ok(ServeFront {
+            cfg,
+            stats: Arc::new(Mutex::new(ServeStats::default())),
+            active: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Point-in-time copy of the front end's counters.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// The shared counters, for a [`MetricsEndpoint`].
+    pub fn stats_arc(&self) -> Arc<Mutex<ServeStats>> {
+        self.stats.clone()
+    }
+
+    /// Jobs currently admitted and not yet observed sealed.
+    pub fn active_len(&self) -> usize {
+        self.reap();
+        self.active.lock().unwrap().len()
+    }
+
+    /// Offer one job at `class`. Exactly one of the [`Admission`]
+    /// verdicts comes back (or an error, counted as a rejection):
+    /// admission depth is `min(class_depth[class], pool_depth)` over
+    /// the jobs still running. `Block` waits for room; `Reject` refuses
+    /// a full queue; `Shed` preempts the oldest strictly-lower-class
+    /// active job when the pool (not the class) is what's full, and
+    /// sheds the offer itself otherwise.
+    pub fn offer(
+        &self,
+        rt: &Runtime,
+        class: QosClass,
+        spec: JobSpec,
+    ) -> Result<Admission> {
+        self.stats.lock().unwrap().offered[class.index()] += 1;
+        loop {
+            self.reap();
+            let mut active = self.active.lock().unwrap();
+            let class_n =
+                active.iter().filter(|a| a.class == class).count();
+            let has_room = class_n < self.cfg.class_depth[class.index()]
+                && active.len() < self.cfg.pool_depth;
+            if has_room {
+                drop(active);
+                return self.admit(rt, class, spec);
+            }
+            match self.cfg.policy {
+                AdmissionPolicy::Block => {
+                    drop(active);
+                    std::thread::sleep(BLOCK_POLL);
+                }
+                AdmissionPolicy::Reject => {
+                    drop(active);
+                    self.stats.lock().unwrap().rejected[class.index()] += 1;
+                    rt.serve_account(1, 0, 1, 0)?;
+                    return Ok(Admission::Rejected);
+                }
+                AdmissionPolicy::Shed => {
+                    // Preemption only helps when the offered class has
+                    // its own headroom; a class at its depth limit is
+                    // being throttled, not crowded out.
+                    let victim = (class_n
+                        < self.cfg.class_depth[class.index()])
+                    .then(|| Self::victim_index(&active, class))
+                    .flatten();
+                    if let Some(i) = victim {
+                        let v = active.remove(i);
+                        v.state.cancel();
+                        drop(active);
+                        self.stats.lock().unwrap().preempted
+                            [v.class.index()] += 1;
+                        return self.admit(rt, class, spec);
+                    }
+                    drop(active);
+                    self.stats.lock().unwrap().shed[class.index()] += 1;
+                    rt.serve_account(1, 0, 0, 1)?;
+                    return Ok(Admission::Shed);
+                }
+            }
+        }
+    }
+
+    /// The oldest active job of the lowest shed rank strictly below the
+    /// incoming class, if any.
+    fn victim_index(active: &[Active], incoming: QosClass) -> Option<usize> {
+        let mut best: Option<(usize, u8)> = None;
+        for (i, a) in active.iter().enumerate() {
+            let r = a.class.shed_rank();
+            if r < incoming.shed_rank()
+                && best.is_none_or(|(_, br)| r < br)
+            {
+                best = Some((i, r));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn admit(
+        &self,
+        rt: &Runtime,
+        class: QosClass,
+        spec: JobSpec,
+    ) -> Result<Admission> {
+        let handle = match rt.submit_job(spec) {
+            Ok(h) => h,
+            Err(e) => {
+                // A failed registration is a rejection: the ledger must
+                // still close around the error path.
+                self.stats.lock().unwrap().rejected[class.index()] += 1;
+                rt.serve_account(1, 0, 1, 0)?;
+                return Err(e);
+            }
+        };
+        let deadline = match class {
+            QosClass::LatencySensitive => self.cfg.deadline,
+            _ => None,
+        };
+        rt.set_job_qos(handle.job(), class, deadline)?;
+        rt.serve_account(1, 1, 0, 0)?;
+        self.stats.lock().unwrap().admitted[class.index()] += 1;
+        self.active
+            .lock()
+            .unwrap()
+            .push(Active { class, state: handle.state_arc() });
+        Ok(Admission::Admitted(handle))
+    }
+
+    /// Drop sealed jobs from the active set, counting them completed.
+    pub fn reap(&self) {
+        let mut active = self.active.lock().unwrap();
+        let mut stats = self.stats.lock().unwrap();
+        active.retain(|a| {
+            if a.state.status() == JobStatus::Running {
+                true
+            } else {
+                stats.completed[a.class.index()] += 1;
+                false
+            }
+        });
+    }
+
+    /// Wait until every admitted job has sealed (poll + reap). The
+    /// runtime's own `shutdown` waits on preempted jobs' drains.
+    pub fn drain(&self) {
+        loop {
+            self.reap();
+            if self.active.lock().unwrap().is_empty() {
+                return;
+            }
+            std::thread::sleep(BLOCK_POLL);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_parse_round_trips_names() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(
+            QosClass::parse("latency-sensitive"),
+            Some(QosClass::LatencySensitive)
+        );
+        assert!(QosClass::parse("platinum").is_none());
+        for p in
+            [AdmissionPolicy::Block, AdmissionPolicy::Reject, AdmissionPolicy::Shed]
+        {
+            assert_eq!(AdmissionPolicy::parse(p.name()), Some(p));
+        }
+        assert!(AdmissionPolicy::parse("panic").is_none());
+    }
+
+    #[test]
+    fn class_indices_are_dense_and_ranked() {
+        let mut seen = [false; 3];
+        for c in QosClass::ALL {
+            seen[c.index()] = true;
+        }
+        assert_eq!(seen, [true; 3]);
+        assert!(
+            QosClass::BestEffort.shed_rank()
+                < QosClass::Throughput.shed_rank()
+        );
+        assert!(
+            QosClass::Throughput.shed_rank()
+                < QosClass::LatencySensitive.shed_rank()
+        );
+        assert!(
+            QosClass::LatencySensitive.weight_multiplier()
+                > QosClass::Throughput.weight_multiplier()
+        );
+        assert!(
+            QosClass::BestEffort.weight_multiplier()
+                < QosClass::Throughput.weight_multiplier()
+        );
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_limits() {
+        assert!(ServeConfig::default().validate().is_ok());
+        let zero_pool = ServeConfig { pool_depth: 0, ..Default::default() };
+        assert!(zero_pool.validate().is_err());
+        let zero_class =
+            ServeConfig { class_depth: [1, 0, 1], ..Default::default() };
+        assert!(zero_class.validate().is_err());
+        let bad_deadline =
+            ServeConfig { deadline: Some(0.0), ..Default::default() };
+        assert!(bad_deadline.validate().is_err());
+        let nan_deadline =
+            ServeConfig { deadline: Some(f64::NAN), ..Default::default() };
+        assert!(nan_deadline.validate().is_err());
+    }
+
+    #[test]
+    fn stats_ledger_closes_by_construction() {
+        let mut s = ServeStats::default();
+        assert!(s.ledger_closes());
+        s.offered[0] = 5;
+        s.admitted[0] = 3;
+        s.rejected[1] = 1;
+        s.shed[2] = 1;
+        assert!(s.ledger_closes());
+        s.shed[2] = 2;
+        assert!(!s.ledger_closes());
+        let text = format!("{s}");
+        assert!(text.contains("latency"), "{text}");
+        assert!(text.contains("offered 5 = admitted 3"), "{text}");
+    }
+}

@@ -1,14 +1,16 @@
 //! Chaos-harness regression corpus (`cargo test --features chaos`).
 //!
 //! Each seed is a complete fault schedule ([`gcharm::chaos::Schedule`]):
-//! the contiguous corpus 0..=13 covers every fault theme — scripted
+//! the contiguous corpus 0..=15 covers every fault theme — scripted
 //! cancels at three quiescence depths, panicking drivers, steal storms,
 //! flush-timing jitter, live registration and rejected submissions,
 //! cache pressure (a starved chare table fought over by a hot tenant and
 //! an adversarial streaming scan), launch-mode flips that jitter the
-//! persistent work rings mid-job, and node faults (the job run SPMD on
+//! persistent work rings mid-job, node faults (the job run SPMD on
 //! a two-node loopback fabric with delayed / reordered / dropped frames
-//! and a graceful mid-run peer departure) — twice each. A failing seed
+//! and a graceful mid-run peer departure), and overload (saturating
+//! best-effort bursts against a tiny `serve::ServeFront` pool with Shed
+//! admission, the ledger closing exactly) — twice each. A failing seed
 //! replays bit-identically with
 //! `gcharm chaos --seed N` (the whole schedule, including its event
 //! trace, is a pure function of the seed).
@@ -24,8 +26,8 @@ use gcharm::chaos::{
 };
 use gcharm::coordinator::{Config, JobReport, PoolReport, Runtime};
 
-/// The regression corpus: every theme twice (seed % 7 cycles them).
-const CORPUS: std::ops::Range<u64> = 0..14;
+/// The regression corpus: every theme twice (seed % 8 cycles them).
+const CORPUS: std::ops::Range<u64> = 0..16;
 
 #[test]
 fn seed_corpus_holds_all_invariants() {
@@ -53,6 +55,7 @@ fn corpus_covers_every_fault_theme_twice() {
         "cache-pressure",
         "launch-flip",
         "node-fault",
+        "overload",
     ] {
         assert_eq!(counts.get(theme), Some(&2), "theme {theme} undercovered");
     }
@@ -63,7 +66,7 @@ fn corpus_covers_every_fault_theme_twice() {
 #[test]
 fn same_seed_replays_an_identical_trace() {
     // one seed per theme; two full runs each (fresh runtime every time)
-    for seed in 0..7u64 {
+    for seed in 0..8u64 {
         let a = run_schedule(seed).expect("first run");
         let b = run_schedule(seed).expect("replay");
         assert!(a.ok(), "seed {seed}:\n{a}");
@@ -140,7 +143,7 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
     rt.shutdown();
 }
 
-/// Seeds 5 and 12 are the corpus's launch-flip schedules: every family
+/// Seeds 5 and 13 are the corpus's launch-flip schedules: every family
 /// pinned persistent, two mid-job injections that shrink the work rings
 /// to 1-4 slots and alternate the forced mode Persistent -> PerBatch.
 /// Each run must stay exact for every tenant, fire both flips, and seal
@@ -150,7 +153,7 @@ fn rejected_submission_returns_its_job_id_to_the_pool() {
 /// ring still holds descriptors at the flip.
 #[test]
 fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
-    for seed in [5u64, 12] {
+    for seed in [5u64, 13] {
         assert_eq!(theme_name(seed), "launch-flip");
         let s = Schedule::from_seed(seed);
         assert!(
@@ -181,7 +184,7 @@ fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
     }
 }
 
-/// Seeds 4 and 11 are the corpus's cache-pressure schedules: one device,
+/// Seeds 4 and 12 are the corpus's cache-pressure schedules: one device,
 /// one shared reuse family, a chare table of 6-11 slots, job 0 cycling a
 /// hot set that fits, and every co-tenant streaming a scan wider than the
 /// whole table once per round. The run must stay exact for every tenant
@@ -190,7 +193,7 @@ fn launch_flip_keeps_tenants_exact_and_partitions_launches() {
 /// the pool's debug assertions, which are live in this profile.
 #[test]
 fn cache_pressure_keeps_every_tenant_exact() {
-    for seed in [4u64, 11] {
+    for seed in [4u64, 12] {
         assert_eq!(theme_name(seed), "cache-pressure");
         let s = Schedule::from_seed(seed);
         let slots = s.table_slots.expect("theme shrinks the table");
@@ -220,7 +223,7 @@ fn cache_pressure_keeps_every_tenant_exact() {
     }
 }
 
-/// Seeds 6 and 13 are the corpus's node-fault schedules: the single
+/// Seeds 6 and 14 are the corpus's node-fault schedules: the single
 /// clean job runs SPMD on a two-node loopback fabric whose links delay,
 /// reorder, and drop (heartbeats only) frames, with node 1 optionally
 /// leaving gracefully mid-run. The root's cross-node reduction series
@@ -229,7 +232,7 @@ fn cache_pressure_keeps_every_tenant_exact() {
 /// ledger in exact mode (`cluster_violations` inside the harness).
 #[test]
 fn node_fault_keeps_the_degraded_series_exact_and_books_balanced() {
-    for seed in [6u64, 13] {
+    for seed in [6u64, 14] {
         assert_eq!(theme_name(seed), "node-fault");
         let s = Schedule::from_seed(seed);
         let c = s.cluster.expect("theme runs on a cluster");
@@ -243,6 +246,43 @@ fn node_fault_keeps_the_degraded_series_exact_and_books_balanced() {
         assert!(
             r.trace.iter().any(|l| l.contains("cluster accounting: clean")),
             "seed {seed}: conservation ledger never checked:\n{r}"
+        );
+    }
+}
+
+/// Seeds 7 and 15 are the corpus's overload schedules: one device, one
+/// healthy latency-class tenant admitted through a `serve::ServeFront`
+/// (Shed policy, pool depth 2, best-effort depth 1), then a saturating
+/// burst of best-effort offers. The admission ledger must close exactly
+/// — the front end's own counters, the pool-level copy (audited by
+/// `accounting_violations` inside the harness), and the two agreeing —
+/// and the latency co-tenant's reduction series must stay exact physics
+/// under the burst. The admitted/shed split within the burst races job
+/// seals and is deliberately NOT asserted; only the closure is.
+#[test]
+fn overload_closes_the_ledger_and_keeps_latency_exact() {
+    for seed in [7u64, 15] {
+        assert_eq!(theme_name(seed), "overload");
+        let s = Schedule::from_seed(seed);
+        let o = s.overload.expect("theme plans a burst");
+        assert!(o.burst > o.pool_depth, "seed {seed}: burst must saturate");
+        let r = run_schedule(seed).expect("harness ran");
+        assert!(r.ok(), "seed {seed}:\n{r}");
+        assert!(
+            r.trace.iter().any(|l| l.contains("latency tenant admitted")),
+            "seed {seed}: latency tenant never admitted:\n{r}"
+        );
+        assert!(
+            r.trace.iter().any(|l| l.contains("latency series exact")),
+            "seed {seed}: latency physics never verified:\n{r}"
+        );
+        assert!(
+            r.trace.iter().any(|l| l.contains("front ledger closes")),
+            "seed {seed}: admission ledger never verified:\n{r}"
+        );
+        assert!(
+            r.trace.iter().any(|l| l.contains("accounting: clean")),
+            "seed {seed}: pool-level ledger never checked:\n{r}"
         );
     }
 }

@@ -1,0 +1,382 @@
+//! Serving front end (ISSUE 10) integration tests: admission
+//! backpressure under every [`AdmissionPolicy`], QoS shed precedence,
+//! deadline-aware combiner flushing, exact admission-ledger accounting
+//! at the pool, and the metrics endpoint's socket round-trip.
+//!
+//! Gated jobs (a driver parked on an `AtomicBool`) pin the pool full
+//! deterministically, so the admission verdicts here are exact rather
+//! than timing-dependent; kernel-bearing jobs come from the `common`
+//! burst helpers so deadline flushes have real combiner traffic to act
+//! on.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gcharm::coordinator::{
+    ChareId, CombinePolicy, Config, JobSpec, JobStatus, Runtime,
+};
+use gcharm::serve::{
+    Admission, AdmissionPolicy, MetricsEndpoint, QosClass, ServeConfig,
+    ServeFront,
+};
+
+use common::{synth_descriptor, BurstJob};
+
+/// A kernel-free job whose driver parks until `release` flips (or a
+/// cancel lands, sealing it `Cancelled`): holds a pool slot for as long
+/// as the test wants the door full.
+fn gated_spec(name: &str, release: Arc<AtomicBool>) -> JobSpec {
+    JobSpec::new(name).driver(move |ctx| {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !release.load(Ordering::SeqCst) {
+            if ctx.cancelled() {
+                return Err(anyhow::anyhow!("preempted"));
+            }
+            if Instant::now() > deadline {
+                return Err(anyhow::anyhow!("gate never released"));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        Ok(Vec::new())
+    })
+}
+
+/// A tight front: one pool slot, one slot per class.
+fn tight(policy: AdmissionPolicy) -> ServeFront {
+    ServeFront::new(ServeConfig {
+        policy,
+        class_depth: [1, 1, 1],
+        pool_depth: 1,
+        deadline: Some(0.05),
+    })
+    .unwrap()
+}
+
+/// Spin until a handle seals (bounded; the suite must not hang on a
+/// broken seal).
+fn await_seal(h: &gcharm::coordinator::JobHandle) -> JobStatus {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while h.poll() == JobStatus::Running {
+        assert!(Instant::now() < deadline, "job never sealed");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    h.poll()
+}
+
+#[test]
+fn block_policy_backpressures_until_a_slot_frees() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let front = tight(AdmissionPolicy::Block);
+    let gate_a = Arc::new(AtomicBool::new(false));
+    let a = match front
+        .offer(&rt, QosClass::Throughput, gated_spec("a", gate_a.clone()))
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+
+    // The second offer must block: full pool, Block policy. Run it on a
+    // scoped thread and prove it is still parked after a real delay.
+    let released = AtomicBool::new(false);
+    let gate_b = Arc::new(AtomicBool::new(true)); // b runs through
+    std::thread::scope(|s| {
+        let offer = s.spawn(|| {
+            let v = front
+                .offer(&rt, QosClass::Throughput, gated_spec("b", gate_b))
+                .unwrap();
+            assert!(
+                released.load(Ordering::SeqCst),
+                "offer returned while the pool was still full"
+            );
+            v
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let stats = front.stats();
+        assert_eq!(stats.offered_total(), 2, "both offers recorded");
+        assert_eq!(stats.admitted_total(), 1, "second offer still parked");
+        // free the slot: a seals, the blocked offer admits
+        released.store(true, Ordering::SeqCst);
+        gate_a.store(true, Ordering::SeqCst);
+        match offer.join().unwrap() {
+            Admission::Admitted(h) => {
+                assert_eq!(await_seal(&h), JobStatus::Done);
+                h.wait().unwrap();
+            }
+            _ => panic!("Block never rejects or sheds"),
+        }
+    });
+    assert_eq!(await_seal(&a), JobStatus::Done);
+    a.wait().unwrap();
+    front.drain();
+    let stats = front.stats();
+    assert!(stats.ledger_closes(), "{stats}");
+    assert_eq!(stats.admitted_total(), 2);
+    rt.shutdown();
+}
+
+#[test]
+fn reject_policy_refuses_a_full_pool() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let front = tight(AdmissionPolicy::Reject);
+    let gate = Arc::new(AtomicBool::new(false));
+    let a = match front
+        .offer(&rt, QosClass::Throughput, gated_spec("a", gate.clone()))
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+    let gate_b = Arc::new(AtomicBool::new(true));
+    match front
+        .offer(&rt, QosClass::Throughput, gated_spec("b", gate_b))
+        .unwrap()
+    {
+        Admission::Rejected => {}
+        _ => panic!("full pool under Reject must refuse"),
+    }
+    gate.store(true, Ordering::SeqCst);
+    a.wait().unwrap();
+    front.drain();
+    let stats = front.stats();
+    assert!(stats.ledger_closes(), "{stats}");
+    assert_eq!(stats.rejected, [0, 1, 0]);
+
+    // The pool-level copy of the ledger matches decision-for-decision.
+    let pool = rt.shutdown();
+    assert_eq!(pool.serve_offered, 2);
+    assert_eq!(pool.serve_admitted, 1);
+    assert_eq!(pool.serve_rejected, 1);
+    assert_eq!(pool.serve_shed, 0);
+}
+
+#[test]
+fn shed_preempts_strictly_lower_classes_only() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let front = ServeFront::new(ServeConfig {
+        policy: AdmissionPolicy::Shed,
+        class_depth: [1, 1, 1],
+        pool_depth: 2,
+        deadline: Some(0.05),
+    })
+    .unwrap();
+
+    // Fill the pool: a latency tenant and a best-effort tenant.
+    let gate_l = Arc::new(AtomicBool::new(false));
+    let l = match front
+        .offer(
+            &rt,
+            QosClass::LatencySensitive,
+            gated_spec("lat", gate_l.clone()),
+        )
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+    let gate_b = Arc::new(AtomicBool::new(false));
+    let b = match front
+        .offer(&rt, QosClass::BestEffort, gated_spec("be", gate_b))
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("pool with room must admit"),
+    };
+
+    // QoS precedence: an incoming throughput offer preempts the
+    // best-effort tenant — never the latency one.
+    let gate_t = Arc::new(AtomicBool::new(true));
+    let t = match front
+        .offer(&rt, QosClass::Throughput, gated_spec("tp", gate_t))
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("Shed with a lower-class victim must admit"),
+    };
+    assert_eq!(await_seal(&b), JobStatus::Cancelled);
+    b.wait().unwrap();
+    assert_eq!(l.poll(), JobStatus::Running, "latency tenant untouched");
+
+    assert_eq!(await_seal(&t), JobStatus::Done);
+    t.wait().unwrap();
+    gate_l.store(true, Ordering::SeqCst);
+    assert_eq!(await_seal(&l), JobStatus::Done);
+    l.wait().unwrap();
+    front.drain();
+
+    let stats = front.stats();
+    assert!(stats.ledger_closes(), "{stats}");
+    // Preemption is not an offer verdict: all three offers admitted.
+    assert_eq!(stats.admitted_total(), 3);
+    assert_eq!(stats.shed_total(), 0);
+    assert_eq!(stats.preempted[QosClass::BestEffort.index()], 1);
+    let pool = rt.shutdown();
+    assert_eq!(pool.serve_offered, 3);
+    assert_eq!(pool.serve_admitted, 3);
+}
+
+#[test]
+fn shed_refuses_when_nothing_lower_runs() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let front = tight(AdmissionPolicy::Shed);
+    let gate = Arc::new(AtomicBool::new(false));
+    let a = match front
+        .offer(&rt, QosClass::BestEffort, gated_spec("a", gate.clone()))
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+    // Same class: best-effort never evicts best-effort — the offer
+    // itself sheds.
+    let gate_b = Arc::new(AtomicBool::new(true));
+    match front
+        .offer(&rt, QosClass::BestEffort, gated_spec("b", gate_b))
+        .unwrap()
+    {
+        Admission::Shed => {}
+        _ => panic!("no strictly-lower victim: the offer must shed"),
+    }
+    gate.store(true, Ordering::SeqCst);
+    a.wait().unwrap();
+    front.drain();
+    let stats = front.stats();
+    assert!(stats.ledger_closes(), "{stats}");
+    assert_eq!(stats.shed, [0, 0, 1]);
+    let pool = rt.shutdown();
+    assert_eq!(pool.serve_offered, 2);
+    assert_eq!(pool.serve_shed, 1);
+}
+
+/// Deadline-aware flushing: with static combining pinned far above the
+/// burst size and the idle drain out of reach, `FlushReason::Deadline`
+/// is the ONLY path that can move a latency-class job's requests — so
+/// the job completing with its exact series proves the deadline fired
+/// below `maxSize`, and the pool counter records it.
+#[test]
+fn deadline_flush_fires_below_max_size_for_latency_class() {
+    let rt = Runtime::new(Config {
+        pes: 1,
+        combine: CombinePolicy::StaticEvery(100_000),
+        idle_drain: 10.0,
+        ..Config::default()
+    })
+    .unwrap();
+    let front = ServeFront::new(ServeConfig {
+        policy: AdmissionPolicy::Block,
+        class_depth: [2, 2, 2],
+        pool_depth: 4,
+        deadline: Some(0.02),
+    })
+    .unwrap();
+    let id = ChareId::new(3, 0);
+    let job = BurstJob {
+        name: "lat",
+        desc: synth_descriptor("serve_deadline", 4),
+        id,
+        pe: 0,
+        rows: 4,
+        count: 12, // far below the family's combine cap
+        rounds: 3,
+        barrier: None,
+    };
+    let h = match front
+        .offer(&rt, QosClass::LatencySensitive, job.spec())
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+    let report = h.wait().unwrap();
+    assert_eq!(report.series, vec![(12 * 4) as f64; 3]);
+    front.drain();
+    let pool = rt.shutdown();
+    assert!(
+        pool.flush_deadline >= 1,
+        "deadline flushes never fired: {pool}"
+    );
+}
+
+/// A throughput-class tenant gets no deadline budget: the counter must
+/// stay zero however its combiners flush.
+#[test]
+fn throughput_class_never_triggers_deadline_flushes() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let front = ServeFront::new(ServeConfig::default()).unwrap();
+    let id = ChareId::new(3, 0);
+    let job = BurstJob {
+        name: "tp",
+        desc: synth_descriptor("serve_no_deadline", 4),
+        id,
+        pe: 0,
+        rows: 4,
+        count: 20,
+        rounds: 3,
+        barrier: None,
+    };
+    let h = match front.offer(&rt, QosClass::Throughput, job.spec()).unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+    let report = h.wait().unwrap();
+    assert_eq!(report.series, vec![(20 * 4) as f64; 3]);
+    front.drain();
+    let pool = rt.shutdown();
+    assert_eq!(
+        pool.flush_deadline, 0,
+        "throughput class armed a deadline: {pool}"
+    );
+}
+
+#[test]
+fn metrics_endpoint_round_trips_the_ledger_over_a_socket() {
+    let rt = Runtime::new(Config { pes: 1, ..Config::default() }).unwrap();
+    let front = ServeFront::new(ServeConfig::default()).unwrap();
+    let ep = MetricsEndpoint::spawn(
+        "127.0.0.1:0",
+        rt.shared(),
+        rt.snapshot_handle(),
+        front.stats_arc(),
+    )
+    .unwrap();
+
+    let gate = Arc::new(AtomicBool::new(false));
+    let h = match front
+        .offer(
+            &rt,
+            QosClass::LatencySensitive,
+            gated_spec("scraped", gate.clone()),
+        )
+        .unwrap()
+    {
+        Admission::Admitted(h) => h,
+        _ => panic!("empty pool must admit"),
+    };
+
+    // Live scrape: the admitted-but-running job shows in the serve
+    // ledger section.
+    let body = MetricsEndpoint::scrape(&ep.addr()).unwrap();
+    assert!(
+        body.contains("gcharm_serve_admitted{class=\"latency\"} 1"),
+        "{body}"
+    );
+    assert!(body.contains("gcharm_pool_serve_offered 1"), "{body}");
+    assert!(body.contains("gcharm_pool_serve_admitted 1"), "{body}");
+
+    gate.store(true, Ordering::SeqCst);
+    h.wait().unwrap();
+    front.drain();
+
+    // A second scrape over a fresh connection sees the completion.
+    let body = MetricsEndpoint::scrape(&ep.addr()).unwrap();
+    assert!(
+        body.contains("gcharm_serve_completed{class=\"latency\"} 1"),
+        "{body}"
+    );
+    drop(ep);
+    rt.shutdown();
+}
